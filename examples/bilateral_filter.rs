@@ -1,0 +1,98 @@
+//! The paper's origin story (§3): high-dimensional Gaussian filtering.
+//! Runs an edge-preserving bilateral filter on a synthetic image using
+//! the very same permutohedral lattice machinery as GP inference —
+//! position+intensity 3-D filtering exactly as Eq. (6) — and verifies
+//! that edges survive while noise is smoothed.
+//!
+//!     cargo run --release --example bilateral_filter
+
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::lattice::PermutohedralLattice;
+use simplex_gp::util::Pcg64;
+
+const W: usize = 96;
+const H: usize = 64;
+
+fn main() {
+    // Synthetic image: two flat regions with a hard vertical edge plus
+    // heavy pixel noise.
+    let mut rng = Pcg64::new(1);
+    let clean: Vec<f64> = (0..W * H)
+        .map(|i| if i % W < W / 2 { 0.2 } else { 0.8 })
+        .collect();
+    let noisy: Vec<f64> = clean.iter().map(|&v| v + 0.15 * rng.normal()).collect();
+
+    // Bilateral feature space: (x/σs, y/σs, I/σr) — Eq. (6) with the
+    // joint spatial+range Gaussian realized by one RBF lattice filter.
+    let sigma_s = 6.0;
+    let sigma_r = 0.25;
+    let d = 3;
+    let mut feats = Vec::with_capacity(W * H * d);
+    for y in 0..H {
+        for x in 0..W {
+            feats.push(x as f64 / sigma_s);
+            feats.push(y as f64 / sigma_s);
+            feats.push(noisy[y * W + x] / sigma_r);
+        }
+    }
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+    let lat = PermutohedralLattice::build(&feats, d, &kernel, 1);
+
+    // Homogeneous-coordinates trick: filter [v, 1] and normalize, the
+    // standard way bilateral filters renormalize their kernel mass.
+    let mut stacked = vec![0.0; W * H * 2];
+    for i in 0..W * H {
+        stacked[2 * i] = noisy[i];
+        stacked[2 * i + 1] = 1.0;
+    }
+    let filtered = lat.filter(&stacked, 2);
+    let out: Vec<f64> = (0..W * H)
+        .map(|i| filtered[2 * i] / filtered[2 * i + 1].max(1e-9))
+        .collect();
+
+    // Quality metrics.
+    let mse = |a: &[f64]| -> f64 {
+        a.iter()
+            .zip(&clean)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+            / a.len() as f64
+    };
+    let edge_height = |img: &[f64]| -> f64 {
+        // Mean intensity difference across the edge at mid-columns.
+        let l: f64 = (0..H).map(|y| img[y * W + W / 2 - 3]).sum::<f64>() / H as f64;
+        let r: f64 = (0..H).map(|y| img[y * W + W / 2 + 2]).sum::<f64>() / H as f64;
+        r - l
+    };
+    println!("permutohedral bilateral filter on a {W}x{H} image");
+    println!("lattice: m = {} points (d = 3: x, y, intensity)", lat.m);
+    println!("\n            MSE vs clean   edge height");
+    println!("noisy        {:.5}        {:+.3}", mse(&noisy), edge_height(&noisy));
+    println!("filtered     {:.5}        {:+.3}", mse(&out), edge_height(&out));
+    println!("clean        0.00000        {:+.3}", edge_height(&clean));
+
+    assert!(mse(&out) < 0.4 * mse(&noisy), "filter should denoise");
+    assert!(
+        edge_height(&out) > 0.8 * edge_height(&clean),
+        "filter should preserve the edge"
+    );
+    println!("\nOK: noise reduced >2.5x while the edge survives — the bilateral\nfilter and the GP kernel MVM are the same lattice computation (paper §3.1).");
+
+    // ASCII visualization of a scanline.
+    println!("\nscanline y = {} (n: noisy, f: filtered):", H / 2);
+    let y = H / 2;
+    for (label, img) in [("n", &noisy), ("f", &out)] {
+        let line: String = (0..W)
+            .step_by(2)
+            .map(|x| {
+                let v = img[y * W + x];
+                match () {
+                    _ if v < 0.35 => '.',
+                    _ if v < 0.65 => '+',
+                    _ => '#',
+                }
+            })
+            .collect();
+        println!("  {label}: {line}");
+    }
+}

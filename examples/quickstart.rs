@@ -1,0 +1,54 @@
+//! Quickstart: fit a Simplex-GP on a small synthetic regression problem,
+//! predict with uncertainty, and inspect the lattice.
+//!
+//!     cargo run --release --example quickstart
+
+use simplex_gp::gp::{GpConfig, SimplexGp};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // A noisy 3-D target: y = sin(x0) + 0.5 cos(2 x1) (x2 is irrelevant).
+    let d = 3;
+    let n = 2000;
+    let mut rng = Pcg64::new(0);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            (x[i * d]).sin() + 0.5 * (2.0 * x[i * d + 1]).cos() + 0.1 * rng.normal()
+        })
+        .collect();
+
+    // Fit with fixed hyperparameters (see `examples/uci_regression.rs`
+    // for full marginal-likelihood training).
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.6);
+    let gp = SimplexGp::fit(&x, &y, d, kernel, 0.05, GpConfig::default())?;
+
+    println!(
+        "fitted Simplex-GP: n = {}, lattice points m = {} (sparsity m/L = {:.3})",
+        gp.n_train(),
+        gp.lattice_points(),
+        gp.lattice_points() as f64 / (n as f64 * (d as f64 + 1.0)),
+    );
+
+    // Predict on a fresh grid with uncertainty.
+    let x_test: Vec<f64> = (0..10 * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let (mean, var) = gp.predict(&x_test);
+    println!("\n  x0      x1      x2      mean    ±2σ     truth");
+    for i in 0..10 {
+        let truth = (x_test[i * d]).sin() + 0.5 * (2.0 * x_test[i * d + 1]).cos();
+        println!(
+            "  {:+.2}   {:+.2}   {:+.2}   {:+.3}  {:.3}   {:+.3}",
+            x_test[i * d],
+            x_test[i * d + 1],
+            x_test[i * d + 2],
+            mean[i],
+            2.0 * var[i].sqrt(),
+            truth
+        );
+    }
+
+    // The marginal log-likelihood of the fit (SLQ estimate).
+    println!("\nmarginal log-likelihood ≈ {:.1}", gp.mll());
+    Ok(())
+}

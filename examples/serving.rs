@@ -1,0 +1,89 @@
+//! Serving demo: train a Simplex-GP, stand up the Layer-3 coordinator
+//! (threaded TCP server with dynamic batching), fire concurrent client
+//! load at it, and report latency/throughput — the systems story of the
+//! three-layer architecture: after `make artifacts`, everything on the
+//! request path is Rust.
+//!
+//!     cargo run --release --example serving
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use simplex_gp::coordinator::{Client, ServeConfig, Server};
+use simplex_gp::datasets::{generate, split_standardize};
+use simplex_gp::gp::{GpConfig, SimplexGp};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::util::stats::percentile;
+use simplex_gp::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // Model: protein analog, modest size so the demo is quick.
+    let ds = generate("protein", 8000, 0);
+    let sp = split_standardize(&ds, 1);
+    let d = 9;
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 1.0);
+    let model = SimplexGp::fit(&sp.train.x, &sp.train.y, d, kernel, 0.05, GpConfig::default())?;
+    println!(
+        "model ready: n = {}, m = {} lattice points",
+        model.n_train(),
+        model.lattice_points()
+    );
+
+    let mut cfg = ServeConfig::default();
+    cfg.addr = "127.0.0.1:0".to_string();
+    cfg.max_batch = 512;
+    cfg.max_wait = std::time::Duration::from_millis(2);
+    let server = Server::start(model, cfg)?;
+    let addr = server.local_addr;
+    println!("coordinator listening on {addr} (dynamic batching: 512 rows / 2 ms)");
+
+    // Concurrent clients.
+    let clients = 8;
+    let requests_per_client = 50;
+    let rows_per_request = 16;
+    let completed = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    let latencies: Vec<Vec<f64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let completed = &completed;
+                s.spawn(move || {
+                    let mut rng = Pcg64::new(100 + c as u64);
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let mut lats = Vec::new();
+                    for _ in 0..requests_per_client {
+                        let x: Vec<f64> = (0..rows_per_request * d)
+                            .map(|_| rng.normal())
+                            .collect();
+                        let t = Instant::now();
+                        let mean = client.predict(&x, d).expect("predict");
+                        lats.push(t.elapsed().as_secs_f64());
+                        assert_eq!(mean.len(), rows_per_request);
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let all: Vec<f64> = latencies.into_iter().flatten().collect();
+    let total_reqs = clients * requests_per_client;
+    let total_rows = total_reqs * rows_per_request;
+
+    println!("\n=== load test ===");
+    println!("clients              : {clients}");
+    println!("requests             : {total_reqs} ({rows_per_request} rows each)");
+    println!("wall time            : {wall:.2} s");
+    println!("throughput           : {:.0} predictions/s", total_rows as f64 / wall);
+    println!("latency p50 / p95 / p99: {:.1} / {:.1} / {:.1} ms",
+        percentile(&all, 50.0) * 1e3,
+        percentile(&all, 95.0) * 1e3,
+        percentile(&all, 99.0) * 1e3);
+    println!("server served        : {} requests", server.served());
+    assert_eq!(completed.load(Ordering::Relaxed), total_reqs);
+    server.shutdown();
+    println!("\nOK: coordinator batched concurrent clients through one lattice pass per batch.");
+    Ok(())
+}

@@ -1,0 +1,211 @@
+"""AOT compile path: lower the Layer-2 graphs to HLO *text* artifacts +
+goldens for the Rust runtime.
+
+Run once via `make artifacts` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published `xla` 0.1.6 rust crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Each artifact is an executable with *frozen bucket shapes*; the Rust
+runtime pads (null lattice slot 0 / zero-weight rows) and truncates.
+`manifest.json` records every artifact's shapes, and `goldens/` holds
+deterministic input/output pairs (from the pure-jnp reference) that the
+Rust side replays for cross-layer parity tests.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.lattice_blur import BLOCK_ROWS
+
+jax.config.update("jax_enable_x64", False)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Bucket definitions. Sizes picked for the examples/serving demo; anything
+# that doesn't fit a bucket falls back to the Rust-native MVM path.
+# ---------------------------------------------------------------------------
+
+SIMPLEX_BUCKETS = [
+    # (d, n, m1, r)  — m1 includes the null row and must be a multiple of
+    # the Pallas BLOCK_ROWS.
+    (3, 2048, 4 * BLOCK_ROWS, 1),
+    (9, 2048, 8 * BLOCK_ROWS, 1),
+]
+
+EXACT_BUCKETS = [
+    # (d, n) — n must be a multiple of the exact kernel's TILE (256).
+    (3, 1024),
+]
+
+
+def simplex_fn(d, n, m1, r):
+    dp1 = d + 1
+    fn = functools.partial(model.simplex_mvm, m1=m1, r=r)
+    specs = (
+        jax.ShapeDtypeStruct((n, dp1), jnp.int32),      # offsets
+        jax.ShapeDtypeStruct((n, dp1), jnp.float32),    # weights
+        jax.ShapeDtypeStruct((dp1, m1, 2 * r), jnp.int32),  # neighbors
+        jax.ShapeDtypeStruct((2 * r + 1,), jnp.float32),    # taps
+        jax.ShapeDtypeStruct((n, 1), jnp.float32),      # v
+    )
+    return fn, specs
+
+
+def exact_fn(d, n):
+    fn = model.exact_mvm
+    specs = (
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        jax.ShapeDtypeStruct((n, 1), jnp.float32),
+    )
+    return fn, specs
+
+
+# ---------------------------------------------------------------------------
+# Golden generation: deterministic synthetic-but-valid-shaped inputs.
+# ---------------------------------------------------------------------------
+
+def golden_simplex_inputs(d, n, m1, r, seed=0):
+    rng = np.random.default_rng(seed)
+    dp1 = d + 1
+    # Valid-shaped random structure: ids in [1, m_used), some null rows.
+    m_used = m1 // 2
+    offsets = rng.integers(1, m_used, size=(n, dp1), dtype=np.int32)
+    weights = rng.random((n, dp1), dtype=np.float32)
+    weights /= weights.sum(axis=1, keepdims=True)
+    neighbors = rng.integers(0, m_used, size=(dp1, m1, 2 * r), dtype=np.int32)
+    # Rows >= m_used are padding: point them at the null slot.
+    neighbors[:, m_used:, :] = 0
+    taps = np.array([0.53, 1.0, 0.53][: 2 * r + 1], dtype=np.float32)
+    if taps.shape[0] != 2 * r + 1:
+        i = np.arange(-r, r + 1, dtype=np.float32)
+        taps = np.exp(-0.5 * (1.2 * i) ** 2).astype(np.float32)
+    v = rng.standard_normal((n, 1), dtype=np.float32)
+    return offsets, weights, neighbors, taps, v
+
+
+def golden_exact_inputs(d, n, seed=0):
+    rng = np.random.default_rng(seed + 100)
+    x = rng.standard_normal((n, d), dtype=np.float32)
+    v = rng.standard_normal((n, 1), dtype=np.float32)
+    return x, v
+
+
+def write_bin(path, arr):
+    arr = np.ascontiguousarray(arr)
+    arr.tofile(path)
+    return {
+        "dtype": str(arr.dtype),
+        "shape": list(arr.shape),
+        "path": os.path.basename(path),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    goldens_dir = os.path.join(out, "goldens")
+    os.makedirs(goldens_dir, exist_ok=True)
+
+    manifest = {"artifacts": []}
+
+    for (d, n, m1, r) in SIMPLEX_BUCKETS:
+        name = f"simplex_mvm_d{d}_n{n}_m{m1}_r{r}"
+        fn, specs = simplex_fn(d, n, m1, r)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        hlo_path = os.path.join(out, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+
+        ins = golden_simplex_inputs(d, n, m1, r)
+        expected = np.asarray(
+            ref.simplex_mvm_ref(*[jnp.asarray(a) for a in ins], m1=m1)
+        )
+        entries = []
+        for iname, arr in zip(
+            ["offsets", "weights", "neighbors", "taps", "v"], ins
+        ):
+            entries.append(
+                dict(
+                    write_bin(os.path.join(goldens_dir, f"{name}.{iname}.bin"), arr),
+                    name=iname,
+                )
+            )
+        out_entry = write_bin(
+            os.path.join(goldens_dir, f"{name}.golden_out.bin"), expected
+        )
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": "simplex_mvm",
+                "hlo": os.path.basename(hlo_path),
+                "params": {"d": d, "n": n, "m1": m1, "r": r, "nc": 1},
+                "inputs": entries,
+                "golden_out": out_entry,
+            }
+        )
+        print(f"[aot] {name}: {len(text)} chars of HLO")
+
+    for (d, n) in EXACT_BUCKETS:
+        name = f"exact_mvm_d{d}_n{n}"
+        fn, specs = exact_fn(d, n)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        hlo_path = os.path.join(out, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+
+        x, v = golden_exact_inputs(d, n)
+        expected = np.asarray(ref.rbf_mvm_ref(jnp.asarray(x), jnp.asarray(v)))
+        entries = [
+            dict(write_bin(os.path.join(goldens_dir, f"{name}.x.bin"), x), name="x"),
+            dict(write_bin(os.path.join(goldens_dir, f"{name}.v.bin"), v), name="v"),
+        ]
+        out_entry = write_bin(
+            os.path.join(goldens_dir, f"{name}.golden_out.bin"), expected
+        )
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": "exact_mvm",
+                "hlo": os.path.basename(hlo_path),
+                "params": {"d": d, "n": n, "lengthscale": 1.0, "nc": 1},
+                "inputs": entries,
+                "golden_out": out_entry,
+            }
+        )
+        print(f"[aot] {name}: {len(text)} chars of HLO")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

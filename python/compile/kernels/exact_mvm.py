@@ -1,0 +1,66 @@
+"""Layer-1 Pallas kernel: tiled exact bilateral/RBF MVM.
+
+The exact O(n²d) MVM (the paper's KeOps baseline, Fig. 6) computed tile
+by tile with the ‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x, y⟩ expansion so that the
+inner product hits the MXU as a (TILE × d)·(d × TILE) matmul; exp and
+the mask are VPU element-wise ops on the tile. The j-loop is a
+`fori_loop` over column tiles with a running accumulator, so only two
+tiles and the accumulator live in VMEM at a time.
+
+interpret=True for CPU-PJRT execution (see lattice_blur.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _exact_mvm_kernel(x_ref, v_ref, out_ref, *, n: int, inv2l2: float):
+    """One row-tile of u = K v for the RBF kernel."""
+    xi = x_ref[...]  # whole x (n, d) — column tiles are sliced below
+    v = v_ref[...]   # (n, nc)
+    i = pl.program_id(0)
+    row0 = i * TILE
+    x_tile = jax.lax.dynamic_slice_in_dim(xi, row0, TILE, axis=0)
+    sq_i = jnp.sum(x_tile * x_tile, axis=1)  # (TILE,)
+
+    def body(jt, acc):
+        col0 = jt * TILE
+        x_cols = jax.lax.dynamic_slice_in_dim(xi, col0, TILE, axis=0)
+        v_cols = jax.lax.dynamic_slice_in_dim(v, col0, TILE, axis=0)
+        sq_j = jnp.sum(x_cols * x_cols, axis=1)
+        # MXU: (TILE, d) @ (d, TILE).
+        cross = x_tile @ x_cols.T
+        d2 = sq_i[:, None] + sq_j[None, :] - 2.0 * cross
+        k = jnp.exp(-inv2l2 * jnp.maximum(d2, 0.0))
+        return acc + k @ v_cols
+
+    acc0 = jnp.zeros((TILE, v.shape[1]), dtype=v.dtype)
+    out_ref[...] = jax.lax.fori_loop(0, n // TILE, body, acc0)
+
+
+def exact_rbf_mvm_pallas(x, v, lengthscale=1.0):
+    """u = K_XX v with the RBF kernel at `lengthscale`; n must be a
+    multiple of TILE (the AOT path pads with far-away ghost points whose
+    v entries are zero)."""
+    n, d = x.shape
+    assert n % TILE == 0, f"n={n} not a multiple of {TILE}"
+    if v.ndim == 1:
+        v = v[:, None]
+    inv2l2 = 0.5 / (lengthscale * lengthscale)
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        functools.partial(_exact_mvm_kernel, n=n, inv2l2=inv2l2),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+            pl.BlockSpec(v.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE, v.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, v.shape[1]), v.dtype),
+        interpret=True,
+    )(x, v)

@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernel: directional blur over the permutohedral lattice.
+
+The blur along one lattice direction is a (2r+1)-tap stencil over
+precomputed dense neighbor indices:
+
+    out[p] = taps[r] * z[p] + sum_t taps[r-t]*z[nbr[p, r-t]]
+                            + taps[r+t]*z[nbr[p, r+t-1]]
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the lattice rows are tiled
+into VMEM-sized blocks via BlockSpec; the neighbor-index block rides
+along. The gathered source `z` stays un-blocked (memory_space=ANY →
+HBM-resident on a real TPU, with the gather lowered to per-block DMA;
+under interpret=True it is a plain numpy gather). This is the Pallas
+re-expression of what the paper's CUDA kernel did with threadblocks +
+a GPU hash table — the hash table is resolved to dense indices at
+build time in Rust, so the device kernel is pure dense arithmetic.
+
+Pallas is ALWAYS invoked with interpret=True here: the CPU PJRT plugin
+cannot execute Mosaic custom-calls; real-TPU behaviour is estimated
+analytically (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lattice rows per block: 1024 rows x nc channels x 4 B plus the index
+# block keeps a comfortable margin under a ~16 MiB VMEM ceiling for the
+# channel counts we emit (nc <= 32).
+BLOCK_ROWS = 1024
+
+
+def _blur_dir_kernel(z_ref, nbr_ref, taps_ref, out_ref, *, r: int):
+    """One block of rows for one lattice direction."""
+    z_blk = z_ref[...]          # full (m1, nc) source — gathered below
+    nbr = nbr_ref[...]          # (block, 2r) neighbor ids
+    taps = taps_ref[...]        # (2r+1,)
+    i = pl.program_id(0)
+    row0 = i * BLOCK_ROWS
+    rows = row0 + jax.lax.iota(jnp.int32, nbr.shape[0])
+    acc = taps[r] * z_blk[rows]
+    for t in range(1, r + 1):
+        acc = acc + taps[r - t] * z_blk[nbr[:, r - t]]
+        acc = acc + taps[r + t] * z_blk[nbr[:, r + t - 1]]
+    # Null row 0 (global) must remain zero.
+    is_null = (rows == 0)[:, None]
+    out_ref[...] = jnp.where(is_null, 0.0, acc)
+
+
+def blur_dir_pallas(z, nbr_dir, taps, *, r: int):
+    """Blur `z` (m1, nc) along one direction with neighbor table
+    `nbr_dir` (m1, 2r) and `taps` (2r+1). m1 must be a multiple of
+    BLOCK_ROWS (the AOT path pads; row 0 is the null slot)."""
+    m1, nc = z.shape
+    assert m1 % BLOCK_ROWS == 0, f"m1={m1} not a multiple of {BLOCK_ROWS}"
+    grid = (m1 // BLOCK_ROWS,)
+    return pl.pallas_call(
+        functools.partial(_blur_dir_kernel, r=r),
+        grid=grid,
+        in_specs=[
+            # Whole source array visible to every block (gather source).
+            pl.BlockSpec(z.shape, lambda i: (0, 0)),
+            # Neighbor rows for this block.
+            pl.BlockSpec((BLOCK_ROWS, nbr_dir.shape[1]), lambda i: (i, 0)),
+            # Taps broadcast to every block.
+            pl.BlockSpec((taps.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, nc), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m1, nc), z.dtype),
+        interpret=True,
+    )(z, nbr_dir, taps)
+
+
+def blur_pallas(z, neighbors, taps, *, r: int):
+    """Full blur: apply all d+1 lattice directions sequentially."""
+    dp1 = neighbors.shape[0]
+    for j in range(dp1):
+        z = blur_dir_pallas(z, neighbors[j], taps, r=r)
+    return z

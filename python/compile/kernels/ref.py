@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness ground truth for the build-time compile path:
+the Pallas kernels in ``lattice_blur.py`` / ``exact_mvm.py`` must match
+these to float tolerance (pytest enforces it), and the Rust runtime's
+parity tests compare the PJRT-executed artifacts against goldens
+generated from these functions.
+
+Array conventions (mirroring ``rust/src/lattice``):
+  offsets   : (n, d+1) int32    lattice-point ids per input vertex; 0 = null
+  weights   : (n, d+1) float    barycentric weights (0 on null)
+  neighbors : (d+1, m1, 2r) int32  blur adjacency over the m1 = m+1 rows
+              (row 0 = reserved null slot); slot layout [-r..-1, +1..+r]
+  taps      : (2r+1,) float     stencil taps (center = k(0) = 1)
+  v         : (n, nc) float     values to filter
+"""
+
+import jax.numpy as jnp
+
+
+def splat_ref(offsets, weights, v, m1):
+    """z = W^T v onto the m1 lattice rows (row 0 stays zero)."""
+    n, dp1 = offsets.shape
+    nc = v.shape[1]
+    z = jnp.zeros((m1, nc), dtype=v.dtype)
+    contrib = weights[:, :, None] * v[:, None, :]  # (n, d+1, nc)
+    z = z.at[offsets.reshape(-1)].add(contrib.reshape(n * dp1, nc))
+    # Null slot must stay zero (it may have absorbed padded contributions).
+    return z.at[0].set(0.0)
+
+
+def blur_dir_ref(z, nbr_dir, taps):
+    """One directional blur: out = taps[r]*z + sum_t taps[r±t]*z[nbr]."""
+    m1, nc = z.shape
+    two_r = nbr_dir.shape[1]
+    r = two_r // 2
+    out = taps[r] * z
+    for t in range(1, r + 1):
+        minus = nbr_dir[:, r - t]
+        plus = nbr_dir[:, r + t - 1]
+        # Index 0 is the null row whose value is zero, so missing
+        # neighbors contribute nothing without masking.
+        out = out + taps[r - t] * z[minus] + taps[r + t] * z[plus]
+    return out.at[0].set(0.0)
+
+
+def blur_ref(z, neighbors, taps):
+    """Full blur: apply every lattice direction sequentially."""
+    dp1 = neighbors.shape[0]
+    for j in range(dp1):
+        z = blur_dir_ref(z, neighbors[j], taps)
+    return z
+
+
+def slice_ref(offsets, weights, z):
+    """u = W z back at the inputs."""
+    gathered = z[offsets]  # (n, d+1, nc)
+    return jnp.sum(weights[:, :, None] * gathered, axis=1)
+
+
+def simplex_mvm_ref(offsets, weights, neighbors, taps, v, m1):
+    """Full SKI MVM: Slice(Blur(Splat(v))) — the Eq. (8) decomposition."""
+    z = splat_ref(offsets, weights, v, m1)
+    z = blur_ref(z, neighbors, taps)
+    return slice_ref(offsets, weights, z)
+
+
+def rbf_mvm_ref(x, v, lengthscale=1.0):
+    """Exact bilateral/RBF MVM: u_i = sum_j exp(-|x_i-x_j|^2 / (2 l^2)) v_j."""
+    xs = x / lengthscale
+    sq = jnp.sum(xs * xs, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * xs @ xs.T
+    k = jnp.exp(-0.5 * jnp.maximum(d2, 0.0))
+    return k @ v

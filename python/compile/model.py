@@ -1,0 +1,40 @@
+"""Layer-2 JAX compute graphs: the SKI MVM (splat → blur → slice) and the
+exact-MVM baseline, composed from the Layer-1 Pallas kernels. These are
+the functions `aot.py` lowers to HLO text for the Rust runtime.
+
+Splat and slice are expressed as XLA scatter-add / gather (they fuse
+well and have no stencil structure worth a custom kernel); the blur —
+the O(d²(n+m)) hot loop — and the exact baseline are Pallas kernels.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.exact_mvm import exact_rbf_mvm_pallas
+from compile.kernels.lattice_blur import blur_pallas
+
+
+def splat(offsets, weights, v, m1):
+    """z = Wᵀ v (scatter-add; row 0 = null slot pinned to zero)."""
+    n, dp1 = offsets.shape
+    nc = v.shape[1]
+    z = jnp.zeros((m1, nc), dtype=v.dtype)
+    contrib = weights[:, :, None] * v[:, None, :]
+    z = z.at[offsets.reshape(-1)].add(contrib.reshape(n * dp1, nc))
+    return z.at[0].set(0.0)
+
+
+def slice_(offsets, weights, z):
+    """u = W z (gather + weighted sum over the d+1 vertices)."""
+    return jnp.sum(weights[:, :, None] * z[offsets], axis=1)
+
+
+def simplex_mvm(offsets, weights, neighbors, taps, v, *, m1: int, r: int):
+    """Full lattice MVM  u = W·B·Wᵀ·v  (Eq. 8). `v` is (n, nc)."""
+    z = splat(offsets, weights, v, m1)
+    z = blur_pallas(z, neighbors, taps, r=r)
+    return slice_(offsets, weights, z)
+
+
+def exact_mvm(x, v, lengthscale=1.0):
+    """Exact RBF MVM baseline (Pallas tiled kernel)."""
+    return exact_rbf_mvm_pallas(x, v, lengthscale)

@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.exact_mvm import TILE, exact_rbf_mvm_pallas
+from compile.kernels.lattice_blur import BLOCK_ROWS, blur_dir_pallas, blur_pallas
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def random_lattice(rng, d, m1, r, nc):
+    dp1 = d + 1
+    m_used = max(2, m1 // 2)
+    neighbors = rng.integers(0, m_used, size=(dp1, m1, 2 * r), dtype=np.int32)
+    neighbors[:, m_used:, :] = 0
+    z = rng.standard_normal((m1, nc)).astype(np.float32)
+    z[0] = 0.0
+    i = np.arange(-r, r + 1, dtype=np.float32)
+    taps = np.exp(-0.5 * (1.1 * i) ** 2).astype(np.float32)
+    return jnp.asarray(z), jnp.asarray(neighbors), jnp.asarray(taps)
+
+
+@pytest.mark.parametrize("d", [2, 5])
+@pytest.mark.parametrize("r", [1, 2])
+@pytest.mark.parametrize("nc", [1, 3])
+def test_blur_dir_matches_ref(d, r, nc):
+    rng = np.random.default_rng(1)
+    m1 = BLOCK_ROWS  # single block
+    z, neighbors, taps = random_lattice(rng, d, m1, r, nc)
+    got = blur_dir_pallas(z, neighbors[0], taps, r=r)
+    want = ref.blur_dir_ref(z, neighbors[0], taps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("blocks", [1, 2, 4])
+def test_blur_multi_block(blocks):
+    rng = np.random.default_rng(2)
+    d, r, nc = 3, 1, 2
+    m1 = blocks * BLOCK_ROWS
+    z, neighbors, taps = random_lattice(rng, d, m1, r, nc)
+    got = blur_pallas(z, neighbors, taps, r=r)
+    want = ref.blur_ref(z, neighbors, taps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_blur_null_row_stays_zero():
+    rng = np.random.default_rng(3)
+    z, neighbors, taps = random_lattice(rng, 2, BLOCK_ROWS, 1, 1)
+    got = blur_pallas(z, neighbors, taps, r=1)
+    assert np.all(np.asarray(got)[0] == 0.0)
+
+
+def test_exact_mvm_matches_ref():
+    rng = np.random.default_rng(4)
+    n, d = 2 * TILE, 4
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    v = rng.standard_normal((n, 1)).astype(np.float32)
+    got = exact_rbf_mvm_pallas(jnp.asarray(x), jnp.asarray(v))
+    want = ref.rbf_mvm_ref(jnp.asarray(x), jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_exact_mvm_lengthscale():
+    rng = np.random.default_rng(5)
+    n, d = TILE, 3
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    v = rng.standard_normal((n, 1)).astype(np.float32)
+    got = exact_rbf_mvm_pallas(jnp.asarray(x), jnp.asarray(v), lengthscale=2.0)
+    want = ref.rbf_mvm_ref(jnp.asarray(x), jnp.asarray(v), lengthscale=2.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_exact_mvm_symmetry():
+    """<u, Kv> == <v, Ku> — the kernel realizes a symmetric operator."""
+    rng = np.random.default_rng(6)
+    n, d = TILE, 2
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((n, 1)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((n, 1)).astype(np.float32))
+    ku = exact_rbf_mvm_pallas(x, u)
+    kv = exact_rbf_mvm_pallas(x, v)
+    a = float(jnp.vdot(u, kv))
+    b = float(jnp.vdot(v, ku))
+    assert abs(a - b) < 1e-2 * (1.0 + abs(a))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        d=st.integers(min_value=1, max_value=8),
+        r=st.integers(min_value=1, max_value=3),
+        nc=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_blur_dir_hypothesis(d, r, nc, seed):
+        """Property sweep: Pallas == ref over shapes/orders/channels."""
+        rng = np.random.default_rng(seed)
+        z, neighbors, taps = random_lattice(rng, d, BLOCK_ROWS, r, nc)
+        got = blur_dir_pallas(z, neighbors[0], taps, r=r)
+        want = ref.blur_dir_ref(z, neighbors[0], taps)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        d=st.integers(min_value=1, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_exact_mvm_hypothesis(d, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((TILE, d)).astype(np.float32)
+        v = rng.standard_normal((TILE, 1)).astype(np.float32)
+        got = exact_rbf_mvm_pallas(jnp.asarray(x), jnp.asarray(v))
+        want = ref.rbf_mvm_ref(jnp.asarray(x), jnp.asarray(v))
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3
+        )

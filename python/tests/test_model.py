@@ -1,0 +1,108 @@
+"""Layer-2 graph tests: the full simplex MVM (splat→blur→slice) vs the
+pure-jnp reference, plus algebraic invariants of the SKI decomposition."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.lattice_blur import BLOCK_ROWS
+
+
+def make_problem(seed, d=3, n=128, m1=BLOCK_ROWS, r=1, nc=1):
+    rng = np.random.default_rng(seed)
+    dp1 = d + 1
+    m_used = m1 // 2
+    offsets = rng.integers(1, m_used, size=(n, dp1), dtype=np.int32)
+    weights = rng.random((n, dp1), dtype=np.float32)
+    weights /= weights.sum(axis=1, keepdims=True)
+    neighbors = rng.integers(0, m_used, size=(dp1, m1, 2 * r), dtype=np.int32)
+    neighbors[:, m_used:, :] = 0
+    i = np.arange(-r, r + 1, dtype=np.float32)
+    taps = np.exp(-0.5 * (1.2 * i) ** 2).astype(np.float32)
+    v = rng.standard_normal((n, nc)).astype(np.float32)
+    return tuple(jnp.asarray(a) for a in (offsets, weights, neighbors, taps, v))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_simplex_mvm_matches_ref(seed):
+    offsets, weights, neighbors, taps, v = make_problem(seed)
+    got = model.simplex_mvm(
+        offsets, weights, neighbors, taps, v, m1=BLOCK_ROWS, r=1
+    )
+    want = ref.simplex_mvm_ref(offsets, weights, neighbors, taps, v, BLOCK_ROWS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_simplex_mvm_multichannel():
+    offsets, weights, neighbors, taps, v = make_problem(3, nc=4)
+    got = model.simplex_mvm(
+        offsets, weights, neighbors, taps, v, m1=BLOCK_ROWS, r=1
+    )
+    # Channel c equals the single-channel run on column c.
+    for c in range(4):
+        single = model.simplex_mvm(
+            offsets, weights, neighbors, taps, v[:, c : c + 1], m1=BLOCK_ROWS, r=1
+        )
+        np.testing.assert_allclose(
+            np.asarray(got[:, c]), np.asarray(single[:, 0]), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_splat_slice_adjoint():
+    """<W^T v, z> == <v, W z>."""
+    offsets, weights, _, _, v = make_problem(4)
+    rng = np.random.default_rng(5)
+    z = jnp.asarray(rng.standard_normal((BLOCK_ROWS, 1)).astype(np.float32))
+    z = z.at[0].set(0.0)
+    wv = model.splat(offsets, weights, v, BLOCK_ROWS)
+    wz = model.slice_(offsets, weights, z)
+    a = float(jnp.vdot(wv, z))
+    b = float(jnp.vdot(v, wz))
+    assert abs(a - b) < 1e-3 * (1.0 + abs(a))
+
+
+def test_splat_mass_conservation():
+    offsets, weights, _, _, _ = make_problem(6)
+    n = offsets.shape[0]
+    ones = jnp.ones((n, 1), dtype=jnp.float32)
+    z = model.splat(offsets, weights, ones, BLOCK_ROWS)
+    assert abs(float(jnp.sum(z)) - n) < 1e-2
+
+
+def test_mvm_linearity():
+    offsets, weights, neighbors, taps, v = make_problem(7)
+    rng = np.random.default_rng(8)
+    w = jnp.asarray(rng.standard_normal(v.shape).astype(np.float32))
+    f = lambda u: model.simplex_mvm(
+        offsets, weights, neighbors, taps, u, m1=BLOCK_ROWS, r=1
+    )
+    lhs = f(2.0 * v - 3.0 * w)
+    rhs = 2.0 * f(v) - 3.0 * f(w)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3, atol=1e-3)
+
+
+def test_padding_rows_are_inert():
+    """Zero-weight rows (offsets=0, weights=0) must not change outputs
+    for the real rows — the property the PJRT bucket padding relies on."""
+    offsets, weights, neighbors, taps, v = make_problem(9, n=64)
+    full = model.simplex_mvm(
+        offsets, weights, neighbors, taps, v, m1=BLOCK_ROWS, r=1
+    )
+    pad = 32
+    offsets_p = jnp.concatenate(
+        [offsets, jnp.zeros((pad, offsets.shape[1]), dtype=jnp.int32)]
+    )
+    weights_p = jnp.concatenate(
+        [weights, jnp.zeros((pad, weights.shape[1]), dtype=jnp.float32)]
+    )
+    v_p = jnp.concatenate([v, jnp.zeros((pad, v.shape[1]), dtype=jnp.float32)])
+    padded = model.simplex_mvm(
+        offsets_p, weights_p, neighbors, taps, v_p, m1=BLOCK_ROWS, r=1
+    )
+    np.testing.assert_allclose(
+        np.asarray(padded[:64]), np.asarray(full), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(np.asarray(padded[64:]), 0.0, atol=1e-6)

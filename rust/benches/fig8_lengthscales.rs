@@ -1,0 +1,184 @@
+//! Fig. 8 — learned ARD lengthscales: Simplex-GP vs Exact GP on each
+//! benchmark. The paper's claim is qualitative agreement of the
+//! *relevance ordering* (and often the values); we train both with the
+//! same protocol and report the per-dimension lengthscales plus the
+//! Spearman rank correlation between the two orderings.
+
+use simplex_gp::baselines::ExactGp;
+use simplex_gp::datasets::{generate, split_standardize, PAPER_DATASETS};
+use simplex_gp::gp::{train, TrainConfig};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::mvm::{ExactMvm, MvmOperator, Shifted};
+use simplex_gp::solvers::{cg_multi, CgOptions};
+use simplex_gp::util::bench::Table;
+use simplex_gp::util::Pcg64;
+
+/// Train exact-GP hyperparameters with the same Adam/BBMM protocol as
+/// the Simplex trainer, but with exact MVMs (subsampled for cost).
+fn train_exact_ard(
+    x: &[f64],
+    y: &[f64],
+    d: usize,
+    epochs: usize,
+    seed: u64,
+) -> (Vec<f64>, f64, f64) {
+    let n = y.len();
+    let mut rng = Pcg64::new(seed);
+    let mut params = vec![0.0f64; d + 2];
+    params[d + 1] = (0.1f64).ln();
+    let mut m = vec![0.0; d + 2];
+    let mut v = vec![0.0; d + 2];
+    for t in 1..=epochs {
+        let ls: Vec<f64> = params[..d].iter().map(|p| p.exp().clamp(1e-3, 1e3)).collect();
+        let s2 = params[d].exp().clamp(1e-4, 1e4);
+        let noise = 1e-4 + params[d + 1].exp().clamp(0.0, 1e3);
+        let mut kernel = ArdKernel::new(KernelFamily::Matern32, d);
+        kernel.lengthscales = ls.clone();
+        kernel.outputscale = s2;
+        let op = ExactMvm::new(&kernel, x, d);
+        let shifted = Shifted::new(&op, noise);
+        let p = 4usize;
+        let probes: Vec<Vec<f64>> = (0..p).map(|_| rng.rademacher_vec(n)).collect();
+        let nc = p + 1;
+        let mut rhs = vec![0.0; n * nc];
+        for i in 0..n {
+            rhs[i * nc] = y[i];
+            for (k, z) in probes.iter().enumerate() {
+                rhs[i * nc + 1 + k] = z[i];
+            }
+        }
+        let (sol, _) = cg_multi(
+            &shifted,
+            &rhs,
+            nc,
+            CgOptions {
+                tol: 0.1,
+                max_iters: 200,
+                min_iters: 10,
+            },
+        );
+        let alpha: Vec<f64> = (0..n).map(|i| sol[i * nc]).collect();
+        // Gradients by the exact bilinear forms (O(n² d) per epoch —
+        // this is why it's subsampled).
+        let mut g = vec![0.0; d + 2];
+        // noise grad
+        let mut tr = 0.0;
+        for (k, z) in probes.iter().enumerate() {
+            let sz: Vec<f64> = (0..n).map(|i| sol[i * nc + 1 + k]).collect();
+            tr += simplex_gp::util::stats::dot(z, &sz);
+        }
+        g[d + 1] = (0.5 * simplex_gp::util::stats::dot(&alpha, &alpha) - 0.5 * tr / p as f64)
+            * (noise - 1e-4);
+        // outputscale + lengthscale grads via explicit pair sums.
+        let pairs: Vec<(Vec<f64>, Vec<f64>, f64)> = {
+            let mut v = vec![(alpha.clone(), alpha.clone(), 0.5)];
+            for (k, z) in probes.iter().enumerate() {
+                let sz: Vec<f64> = (0..n).map(|i| sol[i * nc + 1 + k]).collect();
+                v.push((sz, z.clone(), -0.5 / p as f64));
+            }
+            v
+        };
+        for (gv, vv, w) in &pairs {
+            for i in 0..n {
+                let xi = &x[i * d..(i + 1) * d];
+                for j in 0..n {
+                    let xj = &x[j * d..(j + 1) * d];
+                    let r2 = kernel.scaled_r2(xi, xj);
+                    let kij = kernel.family.profile(r2);
+                    g[d] += w * gv[i] * vv[j] * kij * s2; // d/d log s2
+                    let kp = kernel.family.profile_deriv(r2);
+                    for dim in 0..d {
+                        let diff = (xi[dim] - xj[dim]) / ls[dim];
+                        // d r2 / d log ell = -2 diff^2
+                        g[dim] += w * gv[i] * vv[j] * s2 * kp * (-2.0 * diff * diff);
+                    }
+                }
+            }
+        }
+        for j in 0..d + 2 {
+            if !g[j].is_finite() {
+                g[j] = 0.0;
+            }
+            m[j] = 0.9 * m[j] + 0.1 * g[j];
+            v[j] = 0.999 * v[j] + 0.001 * g[j] * g[j];
+            let mh = m[j] / (1.0 - 0.9f64.powi(t as i32));
+            let vh = v[j] / (1.0 - 0.999f64.powi(t as i32));
+            params[j] += 0.1 * mh / (vh.sqrt() + 1e-8);
+        }
+    }
+    let ls: Vec<f64> = params[..d].iter().map(|p| p.exp()).collect();
+    (
+        ls,
+        params[d].exp(),
+        1e-4 + params[d + 1].exp(),
+    )
+}
+
+fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    let rank = |xs: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+        let mut r = vec![0.0; xs.len()];
+        for (pos, &i) in idx.iter().enumerate() {
+            r[i] = pos as f64;
+        }
+        r
+    };
+    let ra = rank(a);
+    let rb = rank(b);
+    let n = a.len() as f64;
+    let d2: f64 = ra.iter().zip(&rb).map(|(x, y)| (x - y) * (x - y)).sum();
+    1.0 - 6.0 * d2 / (n * (n * n - 1.0)).max(1.0)
+}
+
+fn main() {
+    let quick = simplex_gp::util::bench::quick_mode();
+    let n_simplex = if quick { 1200 } else { 4000 };
+    let n_exact = if quick { 400 } else { 1000 }; // exact-grad epochs are O(n²d)
+    let epochs = if quick { 6 } else { 15 };
+
+    let mut table = Table::new(&["dataset", "dim", "ell_simplex", "ell_exact"]);
+    let mut summary = Table::new(&["dataset", "spearman_rho"]);
+    for spec in PAPER_DATASETS {
+        // keggdirected/elevators at full d make the exact-grad loop slow;
+        // still fine at these n.
+        let ds = generate(spec.name, n_simplex.min(spec.n_default), 0);
+        let sp = split_standardize(&ds, 1);
+        let d = spec.d;
+        let mut cfg = TrainConfig::default();
+        cfg.epochs = epochs;
+        cfg.probes = 6;
+        let out = train(
+            &sp.train.x,
+            &sp.train.y,
+            &sp.val.x,
+            &sp.val.y,
+            d,
+            KernelFamily::Matern32,
+            cfg,
+        )
+        .unwrap();
+        let ls_simplex = out.model.kernel.lengthscales.clone();
+        let ne = n_exact.min(sp.train.n());
+        let (ls_exact, _, _) =
+            train_exact_ard(&sp.train.x[..ne * d], &sp.train.y[..ne], d, epochs, 3);
+        for j in 0..d {
+            table.row(&[
+                spec.name.to_string(),
+                format!("l{j}"),
+                format!("{:.3}", ls_simplex[j]),
+                format!("{:.3}", ls_exact[j]),
+            ]);
+        }
+        summary.row(&[
+            spec.name.to_string(),
+            format!("{:.3}", spearman(&ls_simplex, &ls_exact)),
+        ]);
+        println!("[fig8] finished {}", spec.name);
+    }
+    println!("\nFig. 8 — learned ARD lengthscales, Simplex-GP vs Exact GP\n");
+    table.write_csv("fig8_lengthscales");
+    summary.print();
+    summary.write_csv("fig8_spearman");
+    println!("\nShape check (paper): relevance orderings agree (positive rank\ncorrelation); absolute values may differ via the outputscale trade-off.\n");
+}

@@ -1,0 +1,63 @@
+//! Table 1 — MVM time complexity, verified empirically: fit log-log
+//! scaling exponents of MVM wall time vs n for Exact (O(n²)), KISS-GP
+//! (O(n·2^d) — n-linear with a 2^d constant), SKIP (O(rnd)) and
+//! Simplex-GP (O(nd²)).
+
+use simplex_gp::baselines::{KissGpMvm, SkipMvm};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::mvm::{ExactMvm, MvmOperator, SimplexMvm};
+use simplex_gp::util::bench::{fmt_secs, time_budget, Table};
+use simplex_gp::util::stats::loglog_slope;
+use simplex_gp::util::Pcg64;
+
+fn main() {
+    let quick = simplex_gp::util::bench::quick_mode();
+    let d = 4;
+    let sizes: Vec<usize> = if quick {
+        vec![512, 1024, 2048]
+    } else {
+        vec![1024, 2048, 4096, 8192, 16384]
+    };
+    let budget = if quick { 0.2 } else { 1.0 };
+    let mut rng = Pcg64::new(2);
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+
+    let mut table = Table::new(&["n", "exact", "kissgp", "skip_r30", "simplex"]);
+    let mut times: [Vec<f64>; 4] = [vec![], vec![], vec![], vec![]];
+    let ns: Vec<f64> = sizes.iter().map(|&n| n as f64).collect();
+    for &n in &sizes {
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let v = rng.normal_vec(n);
+        let exact = ExactMvm::new(&kernel, &x, d);
+        let kiss = KissGpMvm::build(&x, d, &kernel, 10).unwrap();
+        let skip = SkipMvm::build(&x, d, &kernel, 30, 3).unwrap();
+        let simplex = SimplexMvm::build(&x, d, &kernel, 1);
+        let te = time_budget("exact", budget, 50, || exact.mvm(&v));
+        let tk = time_budget("kiss", budget, 50, || kiss.mvm(&v));
+        let ts = time_budget("skip", budget, 50, || skip.mvm(&v));
+        let tx = time_budget("simplex", budget, 50, || simplex.mvm(&v));
+        times[0].push(te.median_s);
+        times[1].push(tk.median_s);
+        times[2].push(ts.median_s);
+        times[3].push(tx.median_s);
+        table.row(&[
+            n.to_string(),
+            fmt_secs(te.median_s),
+            fmt_secs(tk.median_s),
+            fmt_secs(ts.median_s),
+            fmt_secs(tx.median_s),
+        ]);
+    }
+    println!("\nTable 1 — one-MVM wall time vs n (d = {d})\n");
+    table.print();
+    table.write_csv("table1_mvm_scaling");
+
+    let labels = ["exact", "kissgp", "skip", "simplex"];
+    let paper = ["O(n^2) => slope 2", "O(n 2^d) => slope 1", "O(rnd) => slope 1", "O(n d^2) => slope 1"];
+    println!("\nEmpirical log-log scaling exponents (paper's Table 1 claim):");
+    for i in 0..4 {
+        let slope = loglog_slope(&ns, &times[i]);
+        println!("  {:<8} slope {:+.2}   [{}]", labels[i], slope, paper[i]);
+    }
+    println!();
+}

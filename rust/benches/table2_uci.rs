@@ -1,0 +1,125 @@
+//! Table 2 — standardized test RMSE and NLL on the five benchmark
+//! analogs for Exact GP, SGPR (m = 512), SKIP (rank 100) and
+//! Simplex-GP, averaged over 3 seeds with 2-σ bands (paper protocol:
+//! 4/9–2/9–3/9 split, standardized, Adam lr 0.1, early stopping).
+//!
+//! Substitution note: synthetic analogs ⇒ absolute values differ from
+//! the paper; the claims under test are the *orderings* (Simplex-GP
+//! beats SKIP, approaches Exact, is competitive with SGPR).
+
+use simplex_gp::baselines::{ExactGp, Sgpr, SgprConfig, SkipGp};
+use simplex_gp::datasets::{generate, split_standardize, PAPER_DATASETS};
+use simplex_gp::gp::{train, TrainConfig};
+use simplex_gp::kernels::KernelFamily;
+use simplex_gp::util::bench::Table;
+use simplex_gp::util::stats::{gaussian_nll, mean, rmse, std};
+
+fn two_sigma(vals: &[f64]) -> String {
+    format!("{:.3}±{:.3}", mean(vals), 2.0 * std(vals))
+}
+
+fn main() {
+    let quick = simplex_gp::util::bench::quick_mode();
+    let trials: u64 = if quick { 1 } else { 3 };
+    let n_cap = if quick { 1500 } else { 4000 };
+    let exact_cap = 2000; // exact-GP O(n²d) solves dominate beyond this
+    let skip_rank = 30; // within the paper's 20–100 band; rank 100 joint
+                        // rebuilds are prohibitive on this 1-core testbed
+    let nll_points = 128;
+
+    let mut rmse_table = Table::new(&["dataset", "exact_gp", "sgpr", "skip", "simplex_gp"]);
+    let mut nll_table = Table::new(&["dataset", "exact_gp", "sgpr", "skip", "simplex_gp"]);
+
+    for spec in PAPER_DATASETS {
+        let mut r = [vec![], vec![], vec![], vec![]];
+        let mut l = [vec![], vec![], vec![], vec![]];
+        for trial in 0..trials {
+            let n = n_cap.min(spec.n_default);
+            let ds = generate(spec.name, n, trial);
+            let sp = split_standardize(&ds, trial + 10);
+            let d = spec.d;
+            let (xtr, ytr) = (&sp.train.x, &sp.train.y);
+            let (xv, yv) = (&sp.val.x, &sp.val.y);
+            let (xte, yte) = (&sp.test.x, &sp.test.y);
+            let t_nll = nll_points.min(yte.len());
+
+            // --- Simplex-GP: full MLL training ---
+            let mut cfg = TrainConfig::default();
+            cfg.epochs = if quick { 8 } else { 20 };
+            cfg.probes = 6;
+            cfg.seed = trial;
+            let out = train(xtr, ytr, xv, yv, d, KernelFamily::Matern32, cfg).unwrap();
+            let model = out.model;
+            let pred = model.predict_mean(xte);
+            r[3].push(rmse(&pred, yte));
+            let (ms, vs) = model.predict(&xte[..t_nll * d]);
+            l[3].push(gaussian_nll(&ms, &vs, &yte[..t_nll]));
+            // Transfer the learned hyperparameters to the baselines
+            // (paper trains each with the same Adam protocol; the learned
+            // kernels agree qualitatively per its Appendix C, so a shared
+            // kernel isolates the approximation quality comparison).
+            let kernel = model.kernel.clone();
+            let noise = model.noise;
+
+            // --- Exact GP (subsampled if needed) ---
+            let ne = exact_cap.min(ytr.len());
+            let gp = ExactGp::fit(&xtr[..ne * d], &ytr[..ne], d, kernel.clone(), noise, 1e-2)
+                .unwrap();
+            let pred = gp.predict_mean(xte);
+            r[0].push(rmse(&pred, yte));
+            let (ms, vs) = gp.predict(&xte[..t_nll * d]);
+            l[0].push(gaussian_nll(&ms, &vs, &yte[..t_nll]));
+
+            // --- SGPR m=512 ---
+            let mut scfg = SgprConfig::default();
+            scfg.m_inducing = 512.min(ytr.len() / 2);
+            scfg.epochs = if quick { 10 } else { 25 };
+            scfg.seed = trial;
+            let sg = Sgpr::train(xtr, ytr, d, KernelFamily::Matern32, scfg).unwrap();
+            let (ms_all, _) = sg.predict(xte);
+            r[1].push(rmse(&ms_all, yte));
+            let (ms, vs) = sg.predict(&xte[..t_nll * d]);
+            l[1].push(gaussian_nll(&ms, &vs, &yte[..t_nll]));
+
+            // --- SKIP ---
+            let sk = SkipGp::fit(xtr, ytr, d, kernel.clone(), noise, skip_rank, trial, 1e-2)
+                .unwrap();
+            match sk.predict_mean(xte) {
+                Ok(pred) => {
+                    r[2].push(rmse(&pred, yte));
+                    let (ms, vs) = sk.predict(&xte[..t_nll * d]).unwrap();
+                    l[2].push(gaussian_nll(&ms, &vs, &yte[..t_nll]));
+                }
+                Err(e) => {
+                    eprintln!("skip failed on {}: {e}", spec.name);
+                    r[2].push(f64::NAN);
+                    l[2].push(f64::NAN);
+                }
+            }
+        }
+        rmse_table.row(&[
+            spec.name.to_string(),
+            two_sigma(&r[0]),
+            two_sigma(&r[1]),
+            two_sigma(&r[2]),
+            two_sigma(&r[3]),
+        ]);
+        nll_table.row(&[
+            spec.name.to_string(),
+            two_sigma(&l[0]),
+            two_sigma(&l[1]),
+            two_sigma(&l[2]),
+            two_sigma(&l[3]),
+        ]);
+        // Incremental printing: these runs are long.
+        println!("[table2] finished {}", spec.name);
+    }
+
+    println!("\nTable 2a — standardized test RMSE (mean ± 2σ over {trials} trials)\n");
+    rmse_table.print();
+    rmse_table.write_csv("table2_rmse");
+    println!("\nTable 2b — test NLL ({nll_points}-point subsample for variance solves)\n");
+    nll_table.print();
+    nll_table.write_csv("table2_nll");
+    println!("\nShape check (paper): Simplex-GP < SKIP on RMSE everywhere, close to\nExact GP, competitive with SGPR.\n");
+}

@@ -1,0 +1,224 @@
+//! Exact GP baseline: the Table 2 "Exact GP" column and the Fig. 6
+//! KeOps-style exact MVM comparator. Solves run CG on the O(n²d)
+//! tile-recomputed MVM (no O(n²) storage), preconditioned with partial
+//! pivoted Cholesky; small problems may instead use the dense Cholesky
+//! path in [`crate::linalg`].
+
+use anyhow::{ensure, Result};
+
+use crate::kernels::ArdKernel;
+use crate::mvm::{ExactMvm, Shifted};
+use crate::solvers::precond::KernelRows;
+use crate::solvers::{cg_precond, CgOptions, PivCholPrecond};
+
+struct Rows<'a> {
+    kernel: &'a ArdKernel,
+    x: &'a [f64],
+    d: usize,
+}
+
+impl<'a> KernelRows for Rows<'a> {
+    fn len(&self) -> usize {
+        self.x.len() / self.d
+    }
+    fn row(&self, i: usize) -> Vec<f64> {
+        let xi = &self.x[i * self.d..(i + 1) * self.d];
+        (0..self.len())
+            .map(|j| self.kernel.eval(xi, &self.x[j * self.d..(j + 1) * self.d]))
+            .collect()
+    }
+    fn diag(&self) -> Vec<f64> {
+        vec![self.kernel.outputscale; self.len()]
+    }
+}
+
+/// A fitted exact GP.
+pub struct ExactGp {
+    pub kernel: ArdKernel,
+    pub noise: f64,
+    pub d: usize,
+    pub x_train: Vec<f64>,
+    pub y_train: Vec<f64>,
+    alpha: Vec<f64>,
+    pub cg_iterations: usize,
+}
+
+impl ExactGp {
+    /// Fit with fixed hyperparameters (preconditioned CG, rank per the
+    /// paper's Table 5 default of 100, capped by n).
+    pub fn fit(
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+        kernel: ArdKernel,
+        noise: f64,
+        cg_tol: f64,
+    ) -> Result<Self> {
+        ensure!(x.len() % d == 0 && y.len() == x.len() / d, "shape mismatch");
+        ensure!(noise > 0.0, "noise must be positive");
+        let op = ExactMvm::new(&kernel, x, d);
+        let shifted = Shifted::new(&op, noise);
+        let rows = Rows {
+            kernel: &kernel,
+            x,
+            d,
+        };
+        let rank = 100usize.min(y.len() / 2).max(1);
+        let pc = PivCholPrecond::build(&rows, rank, noise);
+        let pcf = |r: &[f64]| pc.solve(r);
+        let res = cg_precond(
+            &shifted,
+            y,
+            CgOptions {
+                tol: cg_tol,
+                max_iters: 1000,
+                min_iters: 1,
+            },
+            Some(&pcf),
+        );
+        Ok(ExactGp {
+            kernel,
+            noise,
+            d,
+            x_train: x.to_vec(),
+            y_train: y.to_vec(),
+            alpha: res.x,
+            cg_iterations: res.iterations,
+        })
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.y_train.len()
+    }
+
+    /// Predictive mean: K(X*, X) α, exact cross-covariance.
+    pub fn predict_mean(&self, x_star: &[f64]) -> Vec<f64> {
+        let t = x_star.len() / self.d;
+        let n = self.n_train();
+        let mut out = vec![0.0; t];
+        crate::util::parallel::par_fill(&mut out, |range, chunk| {
+            for (k, i) in range.enumerate() {
+                let xi = &x_star[i * self.d..(i + 1) * self.d];
+                let mut acc = 0.0;
+                for j in 0..n {
+                    acc += self
+                        .kernel
+                        .eval(xi, &self.x_train[j * self.d..(j + 1) * self.d])
+                        * self.alpha[j];
+                }
+                chunk[k] = acc;
+            }
+        });
+        out
+    }
+
+    /// Predictive mean + variance. Variance solves are batched through
+    /// `cg_multi`: the exact operator's multi-RHS MVM recomputes each
+    /// kernel entry once for all channels, so a 64-column batch costs
+    /// little more than one solve.
+    pub fn predict(&self, x_star: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let t = x_star.len() / self.d;
+        let n = self.n_train();
+        let mean = self.predict_mean(x_star);
+        let op = ExactMvm::new(&self.kernel, &self.x_train, self.d);
+        let shifted = Shifted::new(&op, self.noise);
+        let prior = self.kernel.outputscale + self.noise;
+        let mut var = vec![0.0; t];
+        let chunk = 64usize;
+        for c0 in (0..t).step_by(chunk) {
+            let c1 = (c0 + chunk).min(t);
+            let nc = c1 - c0;
+            // Interleaved k* columns for the batch.
+            let mut cols = vec![0.0; n * nc];
+            for (c, i) in (c0..c1).enumerate() {
+                let xi = &x_star[i * self.d..(i + 1) * self.d];
+                for j in 0..n {
+                    cols[j * nc + c] = self
+                        .kernel
+                        .eval(xi, &self.x_train[j * self.d..(j + 1) * self.d]);
+                }
+            }
+            let (sol, _) = crate::solvers::cg_multi(
+                &shifted,
+                &cols,
+                nc,
+                CgOptions {
+                    tol: 1e-2,
+                    max_iters: 500,
+                    min_iters: 1,
+                },
+            );
+            for (c, i) in (c0..c1).enumerate() {
+                let mut quad = 0.0;
+                for j in 0..n {
+                    quad += cols[j * nc + c] * sol[j * nc + c];
+                }
+                var[i] = (prior - quad).max(1e-8);
+            }
+        }
+        (mean, var)
+    }
+
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelFamily;
+    use crate::linalg::solve_spd;
+    use crate::util::Pcg64;
+
+    fn toy(n: usize, d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| (x[i * d]).sin() + 0.05 * rng.normal())
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn matches_dense_cholesky() {
+        let d = 2;
+        let (x, y) = toy(120, d, 1);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let noise = 0.1;
+        let gp = ExactGp::fit(&x, &y, d, kernel.clone(), noise, 1e-8).unwrap();
+        let mut km = kernel.cov_matrix(&x, d);
+        km.add_diag(noise);
+        let alpha = solve_spd(&km, &y).unwrap();
+        for i in 0..y.len() {
+            assert!(
+                (gp.alpha()[i] - alpha[i]).abs() < 1e-4,
+                "alpha {i}: {} vs {}",
+                gp.alpha()[i],
+                alpha[i]
+            );
+        }
+        // Predictions likewise.
+        let (xt, _) = toy(30, d, 2);
+        let mean = gp.predict_mean(&xt);
+        let kstar = kernel.cross_cov(&xt, &x, d);
+        let exact_mean = kstar.matvec(&alpha);
+        for i in 0..30 {
+            assert!((mean[i] - exact_mean[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn variance_positive_and_bounded() {
+        let d = 2;
+        let (x, y) = toy(100, d, 3);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 0.8);
+        let gp = ExactGp::fit(&x, &y, d, kernel, 0.05, 1e-6).unwrap();
+        let (xt, _) = toy(10, d, 4);
+        let (_, var) = gp.predict(&xt);
+        let prior = gp.kernel.outputscale + gp.noise;
+        for v in var {
+            assert!(v > 0.0 && v <= prior + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! KISS-GP (Wilson & Nickisch 2015): structured kernel interpolation on
+//! a dense rectilinear grid with Kronecker-of-Toeplitz algebra — the
+//! method whose 2^d scaling motivates the paper (Fig. 1, Table 1).
+//! Practical only for small d; the Fig. 1 / Table 1 benches use it to
+//! exhibit exactly that exponential wall.
+
+use anyhow::{ensure, Result};
+
+use crate::kernels::ArdKernel;
+use crate::linalg::{kron_toeplitz_matvec, SymToeplitz};
+use crate::mvm::MvmOperator;
+
+/// KISS-GP MVM operator: K ≈ W (T_1 ⊗ … ⊗ T_d) Wᵀ with multilinear
+/// interpolation weights (2^d nonzeros per row of W).
+pub struct KissGpMvm {
+    pub d: usize,
+    pub n: usize,
+    /// Grid points per dimension.
+    pub grid_size: usize,
+    /// Per-dimension Toeplitz factors of K_UU.
+    factors: Vec<SymToeplitz>,
+    /// Interpolation: for each input, 2^d (flat grid index, weight).
+    interp_idx: Vec<usize>,
+    interp_w: Vec<f64>,
+    /// Total grid points m = grid_size^d.
+    pub m: usize,
+}
+
+impl KissGpMvm {
+    /// Build on a regular grid covering the data range per dimension.
+    pub fn build(x: &[f64], d: usize, kernel: &ArdKernel, grid_size: usize) -> Result<Self> {
+        ensure!(d >= 1 && grid_size >= 2, "bad grid");
+        ensure!(x.len() % d == 0, "shape");
+        let n = x.len() / d;
+        let m = grid_size.pow(d as u32);
+        ensure!(
+            m <= 1 << 26,
+            "grid of {m} points exceeds memory budget (d={d} too high — this is the paper's point)"
+        );
+        // Per-dim ranges with one-cell padding.
+        let mut lo = vec![f64::INFINITY; d];
+        let mut hi = vec![f64::NEG_INFINITY; d];
+        for i in 0..n {
+            for j in 0..d {
+                lo[j] = lo[j].min(x[i * d + j]);
+                hi[j] = hi[j].max(x[i * d + j]);
+            }
+        }
+        let mut steps = vec![0.0; d];
+        for j in 0..d {
+            let span = (hi[j] - lo[j]).max(1e-9);
+            let step = span / (grid_size as f64 - 1.0);
+            lo[j] -= step * 0.5;
+            hi[j] += step * 0.5;
+            steps[j] = (hi[j] - lo[j]) / (grid_size as f64 - 1.0);
+        }
+        // Toeplitz factors: 1-D kernel profile along each dimension
+        // (RBF and separable kernels factor exactly; others approximately).
+        let factors: Vec<SymToeplitz> = (0..d)
+            .map(|j| {
+                let col: Vec<f64> = (0..grid_size)
+                    .map(|t| {
+                        let tau = t as f64 * steps[j] / kernel.lengthscales[j];
+                        kernel.family.profile(tau * tau)
+                    })
+                    .collect();
+                SymToeplitz::new(col)
+            })
+            .collect();
+        // Multilinear interpolation: 2^d corners per point.
+        let corners = 1usize << d;
+        let mut interp_idx = vec![0usize; n * corners];
+        let mut interp_w = vec![0.0; n * corners];
+        for i in 0..n {
+            // Per-dim cell + fraction.
+            let mut cell = vec![0usize; d];
+            let mut frac = vec![0.0; d];
+            for j in 0..d {
+                let t = ((x[i * d + j] - lo[j]) / steps[j])
+                    .clamp(0.0, grid_size as f64 - 1.0 - 1e-9);
+                cell[j] = t.floor() as usize;
+                frac[j] = t - cell[j] as f64;
+            }
+            for c in 0..corners {
+                let mut flat = 0usize;
+                let mut w = 1.0;
+                for j in 0..d {
+                    let hi_side = (c >> j) & 1 == 1;
+                    let idx = cell[j] + usize::from(hi_side);
+                    flat = flat * grid_size + idx;
+                    w *= if hi_side { frac[j] } else { 1.0 - frac[j] };
+                }
+                interp_idx[i * corners + c] = flat;
+                interp_w[i * corners + c] = w;
+            }
+        }
+        Ok(KissGpMvm {
+            d,
+            n,
+            grid_size,
+            factors,
+            interp_idx,
+            interp_w,
+            m,
+        })
+    }
+
+    /// Grid storage the method requires (Fig. 1 / Fig. 5 accounting).
+    pub fn grid_points(&self) -> usize {
+        self.m
+    }
+}
+
+impl MvmOperator for KissGpMvm {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n);
+        let corners = 1usize << self.d;
+        // Splat onto the grid.
+        let mut z = vec![0.0; self.m];
+        for i in 0..self.n {
+            for c in 0..corners {
+                z[self.interp_idx[i * corners + c]] += self.interp_w[i * corners + c] * v[i];
+            }
+        }
+        // Kronecker-Toeplitz MVM.
+        let z = kron_toeplitz_matvec(&self.factors, &z);
+        // Slice back.
+        let mut out = vec![0.0; self.n];
+        for i in 0..self.n {
+            let mut acc = 0.0;
+            for c in 0..corners {
+                acc += self.interp_w[i * corners + c] * z[self.interp_idx[i * corners + c]];
+            }
+            out[i] = acc;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelFamily;
+    use crate::mvm::ExactMvm;
+    use crate::util::stats::cosine_error;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn tracks_exact_mvm_low_d() {
+        let d = 2;
+        let n = 150;
+        let mut rng = Pcg64::new(1);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-1.5, 1.5)).collect();
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let kiss = KissGpMvm::build(&x, d, &k, 40).unwrap();
+        let exact = ExactMvm::new(&k, &x, d);
+        let v = rng.normal_vec(n);
+        let err = cosine_error(&kiss.mvm(&v), &exact.mvm(&v));
+        assert!(err < 0.01, "kiss cosine err {err}");
+    }
+
+    #[test]
+    fn finer_grid_reduces_error() {
+        let d = 2;
+        let n = 100;
+        let mut rng = Pcg64::new(2);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let exact = ExactMvm::new(&k, &x, d);
+        let v = rng.normal_vec(n);
+        let base = exact.mvm(&v);
+        let coarse = KissGpMvm::build(&x, d, &k, 10).unwrap();
+        let fine = KissGpMvm::build(&x, d, &k, 60).unwrap();
+        let e_coarse = cosine_error(&coarse.mvm(&v), &base);
+        let e_fine = cosine_error(&fine.mvm(&v), &base);
+        assert!(e_fine < e_coarse, "fine {e_fine} vs coarse {e_coarse}");
+    }
+
+    #[test]
+    fn symmetry() {
+        let d = 3;
+        let n = 60;
+        let mut rng = Pcg64::new(3);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+        let kiss = KissGpMvm::build(&x, d, &k, 12).unwrap();
+        let u = rng.normal_vec(n);
+        let v = rng.normal_vec(n);
+        let a = crate::util::stats::dot(&u, &kiss.mvm(&v));
+        let b = crate::util::stats::dot(&v, &kiss.mvm(&u));
+        assert!((a - b).abs() < 1e-9 * (1.0 + a.abs()));
+    }
+
+    #[test]
+    fn grid_grows_exponentially() {
+        // The Fig. 1 statement in executable form.
+        let mut rng = Pcg64::new(4);
+        let mut sizes = Vec::new();
+        for d in [1usize, 2, 3, 4] {
+            let x: Vec<f64> = (0..50 * d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+            let kiss = KissGpMvm::build(&x, d, &k, 10).unwrap();
+            sizes.push(kiss.grid_points());
+        }
+        assert_eq!(sizes, vec![10, 100, 1000, 10000]);
+        // And it refuses absurd d.
+        let x: Vec<f64> = (0..50 * 12).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, 12, 1.0);
+        assert!(KissGpMvm::build(&x, 12, &k, 10).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Baseline GP methods the paper compares against (Table 2, Figs. 1,
+//! 5, 6): Exact GP, SGPR, SKIP and KISS-GP — all built from scratch on
+//! the same solver substrate as Simplex-GP.
+
+pub mod exact;
+pub mod kissgp;
+pub mod sgpr;
+pub mod skip;
+
+pub use exact::ExactGp;
+pub use kissgp::KissGpMvm;
+pub use sgpr::{Sgpr, SgprConfig};
+pub use skip::{SkipGp, SkipMvm};
+
+use anyhow::{ensure, Result};
+
+use crate::kernels::ArdKernel;
+use crate::mvm::{MvmOperator, Shifted};
+use crate::solvers::{cg, CgOptions};
+
+/// Generic iterative GP over any MVM operator (used to run Table 2 with
+/// the SKIP operator, and for ablations swapping operators). The
+/// predictive mean uses exact cross-covariances (O(t·n·d)), matching
+/// how SKIP-based GPyTorch models predict.
+pub struct OperatorGp<O: MvmOperator> {
+    pub op: O,
+    pub kernel: ArdKernel,
+    pub noise: f64,
+    pub d: usize,
+    pub x_train: Vec<f64>,
+    pub y_train: Vec<f64>,
+    alpha: Vec<f64>,
+    pub cg_iterations: usize,
+}
+
+impl<O: MvmOperator> OperatorGp<O> {
+    pub fn fit(
+        op: O,
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+        kernel: ArdKernel,
+        noise: f64,
+        cg_tol: f64,
+    ) -> Result<Self> {
+        ensure!(op.len() == y.len(), "operator size mismatch");
+        ensure!(noise > 0.0, "noise must be positive");
+        let shifted = Shifted::new(&op, noise);
+        let res = cg(
+            &shifted,
+            y,
+            CgOptions {
+                tol: cg_tol,
+                max_iters: 500,
+                min_iters: 1,
+            },
+        );
+        let alpha = res.x;
+        let cg_iterations = res.iterations;
+        Ok(OperatorGp {
+            op,
+            kernel,
+            noise,
+            d,
+            x_train: x.to_vec(),
+            y_train: y.to_vec(),
+            alpha,
+            cg_iterations,
+        })
+    }
+
+    pub fn predict_mean(&self, x_star: &[f64]) -> Vec<f64> {
+        let t = x_star.len() / self.d;
+        let n = self.y_train.len();
+        let mut out = vec![0.0; t];
+        crate::util::parallel::par_fill(&mut out, |range, chunk| {
+            for (k, i) in range.enumerate() {
+                let xi = &x_star[i * self.d..(i + 1) * self.d];
+                let mut acc = 0.0;
+                for j in 0..n {
+                    acc += self
+                        .kernel
+                        .eval(xi, &self.x_train[j * self.d..(j + 1) * self.d])
+                        * self.alpha[j];
+                }
+                chunk[k] = acc;
+            }
+        });
+        out
+    }
+
+    /// Variance via exact cross-covariance columns + CG on the operator.
+    pub fn predict(&self, x_star: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let t = x_star.len() / self.d;
+        let n = self.y_train.len();
+        let mean = self.predict_mean(x_star);
+        let shifted = Shifted::new(&self.op, self.noise);
+        let prior = self.kernel.outputscale + self.noise;
+        let mut var = vec![0.0; t];
+        for i in 0..t {
+            let xi = &x_star[i * self.d..(i + 1) * self.d];
+            let kstar: Vec<f64> = (0..n)
+                .map(|j| {
+                    self.kernel
+                        .eval(xi, &self.x_train[j * self.d..(j + 1) * self.d])
+                })
+                .collect();
+            let sol = cg(
+                &shifted,
+                &kstar,
+                CgOptions {
+                    tol: 1e-2,
+                    max_iters: 500,
+                    min_iters: 1,
+                },
+            );
+            let quad = crate::util::stats::dot(&kstar, &sol.x);
+            var[i] = (prior - quad).max(1e-8);
+        }
+        (mean, var)
+    }
+
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelFamily;
+    use crate::util::stats::rmse;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn skip_gp_end_to_end() {
+        let d = 3;
+        let n = 400;
+        let mut rng = Pcg64::new(1);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| (1.2 * x[i * d]).sin() + 0.05 * rng.normal())
+            .collect();
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let gp = SkipGp::fit(&x, &y, d, kernel, 0.05, 30, 2, 1e-3).unwrap();
+        let xt: Vec<f64> = (0..100 * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let yt: Vec<f64> = (0..100).map(|i| (1.2 * xt[i * d]).sin()).collect();
+        let pred = gp.predict_mean(&xt).unwrap();
+        let err = rmse(&pred, &yt);
+        let base = rmse(&vec![0.0; 100], &yt);
+        assert!(err < 0.7 * base, "skip-gp rmse {err} vs {base}");
+    }
+
+    #[test]
+    fn operator_gp_with_exact_operator_is_consistent() {
+        // OperatorGp with the exact operator = a plain exact GP.
+        let d = 2;
+        let n = 150;
+        let mut rng = Pcg64::new(2);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| (x[i * d]).sin() + 0.05 * rng.normal())
+            .collect();
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let op = crate::mvm::ExactMvm::new(&kernel, &x, d);
+        // ExactMvm borrows x/kernel; keep the GP local to this scope.
+        let gp = OperatorGp::fit(op, &x, &y, d, kernel.clone(), 0.05, 1e-8).unwrap();
+        let pred = gp.predict_mean(&x[..20 * d]);
+        let err = rmse(&pred, &y[..20]);
+        assert!(err < 0.3, "train-fit rmse {err}");
+        let (_, var) = gp.predict(&x[..5 * d]);
+        for v in var {
+            assert!(v > 0.0 && v < kernel.outputscale + 0.05 + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,451 @@
+//! SKIP (Gardner et al. 2018b): product kernel interpolation — the
+//! paper's main scalable-SKI comparator (Table 2, Fig. 5).
+//!
+//! Per dimension j, the 1-D kernel is approximated by 1-D KISS
+//! (K^(j) = W_j T_j W_jᵀ, grid of 100 points per the paper's setup),
+//! compressed to a rank-r PSD factor L_j L_jᵀ via Lanczos; the full
+//! kernel is the Hadamard product ⊙_j K^(j) (exact for RBF, which
+//! factors across dimensions). Pairs are merged up a binary tree, each
+//! merge re-truncated to rank r with Lanczos on the merge operator
+//! (A ⊙ B)v = Σ_p a_p ⊙ (B (a_p ⊙ v)) — this is where SKIP's low-rank
+//! bottleneck (and its memory appetite, ~r Lanczos basis vectors of
+//! length n per level) comes from.
+
+use anyhow::{ensure, Result};
+
+use crate::kernels::ArdKernel;
+use crate::linalg::{eigh_tridiag, Mat, SymToeplitz};
+use crate::mvm::MvmOperator;
+use crate::solvers::lanczos;
+use crate::util::Pcg64;
+
+/// Rank-r PSD factor: K ≈ L Lᵀ (L is n×r, stored row-major).
+#[derive(Clone)]
+pub struct LowRankPsd {
+    pub l: Mat,
+}
+
+impl LowRankPsd {
+    pub fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        let ltv = self.l.matvec_t(v);
+        self.l.matvec(&ltv)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.l.cols
+    }
+}
+
+/// Hadamard-product operator of two PSD factors (used during merging).
+struct HadamardOp<'a> {
+    a: &'a LowRankPsd,
+    b: &'a LowRankPsd,
+}
+
+impl<'a> MvmOperator for HadamardOp<'a> {
+    fn len(&self) -> usize {
+        self.a.l.rows
+    }
+    fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        let n = self.len();
+        let mut out = vec![0.0; n];
+        // (A ⊙ B) v = Σ_p a_p ⊙ (B (a_p ⊙ v)).
+        for p in 0..self.a.rank() {
+            let ap: Vec<f64> = (0..n).map(|i| self.a.l[(i, p)]).collect();
+            let scaled: Vec<f64> = (0..n).map(|i| ap[i] * v[i]).collect();
+            let bv = self.b.mvm(&scaled);
+            for i in 0..n {
+                out[i] += ap[i] * bv[i];
+            }
+        }
+        out
+    }
+}
+
+/// Compress a symmetric PSD operator to rank r with Lanczos: run r
+/// steps, eigendecompose the tridiagonal, keep non-negative Ritz pairs.
+fn lanczos_compress(op: &dyn MvmOperator, r: usize, rng: &mut Pcg64) -> LowRankPsd {
+    let n = op.len();
+    let q0 = rng.normal_vec(n);
+    let res = lanczos(op, &q0, r, true);
+    let basis = res.q.unwrap();
+    let t = res.alpha.len();
+    let (evals, evecs) = eigh_tridiag(&res.alpha, &res.beta);
+    // L = Q · U · Λ^{1/2}, keeping positive eigenvalues.
+    let mut l = Mat::zeros(n, t);
+    for j in 0..t {
+        let lam = evals[j].max(0.0);
+        let s = lam.sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let mut acc = 0.0;
+            for k in 0..t.min(basis.len()) {
+                acc += basis[k][i] * evecs[(k, j)];
+            }
+            l[(i, j)] = acc * s;
+        }
+    }
+    LowRankPsd { l }
+}
+
+/// 1-D KISS operator for one input dimension (grid + Toeplitz).
+struct Kiss1d {
+    idx: Vec<usize>,
+    frac: Vec<f64>,
+    toeplitz: SymToeplitz,
+    n: usize,
+}
+
+impl Kiss1d {
+    fn build(coords: &[f64], kernel_profile: impl Fn(f64) -> f64, grid: usize) -> Self {
+        let n = coords.len();
+        let lo = coords.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = coords.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-9);
+        let step = span / (grid as f64 - 1.0);
+        let col: Vec<f64> = (0..grid).map(|t| kernel_profile(t as f64 * step)).collect();
+        let toeplitz = SymToeplitz::new(col);
+        let mut idx = vec![0usize; n];
+        let mut frac = vec![0.0; n];
+        for i in 0..n {
+            let t = ((coords[i] - lo) / step).clamp(0.0, grid as f64 - 1.0 - 1e-9);
+            idx[i] = t.floor() as usize;
+            frac[i] = t - idx[i] as f64;
+        }
+        Kiss1d {
+            idx,
+            frac,
+            toeplitz,
+            n,
+        }
+    }
+}
+
+impl MvmOperator for Kiss1d {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        let m = self.toeplitz.len();
+        let mut z = vec![0.0; m];
+        for i in 0..self.n {
+            z[self.idx[i]] += (1.0 - self.frac[i]) * v[i];
+            z[self.idx[i] + 1] += self.frac[i] * v[i];
+        }
+        let z = self.toeplitz.matvec(&z);
+        (0..self.n)
+            .map(|i| (1.0 - self.frac[i]) * z[self.idx[i]] + self.frac[i] * z[self.idx[i] + 1])
+            .collect()
+    }
+}
+
+/// The SKIP MVM operator: merged rank-r factor for ⊙_j K^(j).
+pub struct SkipMvm {
+    pub d: usize,
+    pub n: usize,
+    pub rank: usize,
+    pub outputscale: f64,
+    factor: LowRankPsd,
+    /// Peak bytes held during construction (Fig. 5 accounting: SKIP's
+    /// memory appetite comes from the per-level Lanczos bases).
+    pub peak_build_bytes: usize,
+}
+
+impl SkipMvm {
+    /// Build with rank `r` (paper: 20–100) and 100 grid points per dim.
+    pub fn build(
+        x: &[f64],
+        d: usize,
+        kernel: &ArdKernel,
+        rank: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(x.len() % d == 0, "shape");
+        let n = x.len() / d;
+        ensure!(n >= 2 && rank >= 2, "need n, rank >= 2");
+        let grid = 100usize.min(4 * n.max(2));
+        let mut rng = Pcg64::new(seed ^ 0x5717);
+        // Per-dimension rank-r factors.
+        let mut level: Vec<LowRankPsd> = (0..d)
+            .map(|j| {
+                let coords: Vec<f64> = (0..n).map(|i| x[i * d + j]).collect();
+                let ell = kernel.lengthscales[j];
+                let fam = kernel.family;
+                let k1 = Kiss1d::build(
+                    &coords,
+                    move |tau| {
+                        let t = tau / ell;
+                        fam.profile(t * t)
+                    },
+                    grid,
+                );
+                lanczos_compress(&k1, rank, &mut rng)
+            })
+            .collect();
+        let mut peak = level.iter().map(|f| f.l.data.len() * 8).sum::<usize>()
+            + n * rank * 8 * 2; // Lanczos basis + scratch
+        // Merge tree with re-truncation.
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            let mut it = level.into_iter();
+            while let (Some(a), b) = (it.next(), it.next()) {
+                match b {
+                    Some(b) => {
+                        let op = HadamardOp { a: &a, b: &b };
+                        next.push(lanczos_compress(&op, rank, &mut rng));
+                    }
+                    None => next.push(a),
+                }
+            }
+            level = next;
+            peak = peak.max(
+                level.iter().map(|f| f.l.data.len() * 8).sum::<usize>()
+                    + n * rank * 8 * 2,
+            );
+        }
+        Ok(SkipMvm {
+            d,
+            n,
+            rank,
+            outputscale: kernel.outputscale,
+            factor: level.pop().unwrap(),
+            peak_build_bytes: peak,
+        })
+    }
+
+    /// Bytes held by the final factor (steady-state memory).
+    pub fn storage_bytes(&self) -> usize {
+        self.factor.l.data.len() * 8
+    }
+}
+
+impl MvmOperator for SkipMvm {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = self.factor.mvm(v);
+        if self.outputscale != 1.0 {
+            for o in out.iter_mut() {
+                *o *= self.outputscale;
+            }
+        }
+        out
+    }
+}
+
+/// The train-block restriction of a joint (train ∪ test) operator:
+/// v_train ↦ (K_joint [v; 0])_train. Sharing one factorization between
+/// the solve and the cross-covariance keeps SKIP's low-rank eigenspaces
+/// self-consistent.
+struct TrainBlock<'a> {
+    joint: &'a SkipMvm,
+    n: usize,
+}
+
+impl<'a> MvmOperator for TrainBlock<'a> {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        let mut full = vec![0.0; self.joint.n];
+        full[..self.n].copy_from_slice(v);
+        let u = self.joint.mvm(&full);
+        u[..self.n].to_vec()
+    }
+}
+
+/// A SKIP-based GP regression model. Both the representer solve and the
+/// cross-covariance go through ONE joint (train ∪ test) SKIP operator,
+/// matching GPyTorch's joint-kernel evaluation — mixing operators with
+/// different low-rank eigenspaces (or exact cross-covariances) amplifies
+/// exactly the directions the rank truncation dropped and diverges.
+pub struct SkipGp {
+    pub kernel: ArdKernel,
+    pub noise: f64,
+    pub d: usize,
+    pub rank: usize,
+    pub seed: u64,
+    pub cg_tol: f64,
+    pub x_train: Vec<f64>,
+    pub y_train: Vec<f64>,
+}
+
+impl SkipGp {
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit(
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+        kernel: ArdKernel,
+        noise: f64,
+        rank: usize,
+        seed: u64,
+        cg_tol: f64,
+    ) -> Result<Self> {
+        ensure!(x.len() == y.len() * d, "shape mismatch");
+        ensure!(noise > 0.0, "noise must be positive");
+        Ok(SkipGp {
+            kernel,
+            noise,
+            d,
+            rank,
+            seed,
+            cg_tol,
+            x_train: x.to_vec(),
+            y_train: y.to_vec(),
+        })
+    }
+
+    fn joint_op(&self, x_star: &[f64]) -> Result<SkipMvm> {
+        let mut joint_x = self.x_train.clone();
+        joint_x.extend_from_slice(x_star);
+        SkipMvm::build(&joint_x, self.d, &self.kernel, self.rank, self.seed)
+    }
+
+    /// Predictive mean via the joint operator: solve α against the
+    /// train block, push [α; 0] through the joint MVM, read the test
+    /// block.
+    pub fn predict_mean(&self, x_star: &[f64]) -> Result<Vec<f64>> {
+        let n = self.y_train.len();
+        let joint = self.joint_op(x_star)?;
+        let block = TrainBlock { joint: &joint, n };
+        let shifted = crate::mvm::Shifted::new(&block, self.noise);
+        let res = crate::solvers::cg(
+            &shifted,
+            &self.y_train,
+            crate::solvers::CgOptions {
+                tol: self.cg_tol,
+                max_iters: 500,
+                min_iters: 1,
+            },
+        );
+        let mut v = vec![0.0; joint.n];
+        v[..n].copy_from_slice(&res.x);
+        let u = joint.mvm(&v);
+        Ok(u[n..].to_vec())
+    }
+
+    /// Mean + variance through the same joint operator.
+    pub fn predict(&self, x_star: &[f64]) -> Result<(Vec<f64>, Vec<f64>)> {
+        let n = self.y_train.len();
+        let t = x_star.len() / self.d;
+        let joint = self.joint_op(x_star)?;
+        let block = TrainBlock { joint: &joint, n };
+        let shifted = crate::mvm::Shifted::new(&block, self.noise);
+        let res = crate::solvers::cg(
+            &shifted,
+            &self.y_train,
+            crate::solvers::CgOptions {
+                tol: self.cg_tol,
+                max_iters: 500,
+                min_iters: 1,
+            },
+        );
+        let mut v = vec![0.0; joint.n];
+        v[..n].copy_from_slice(&res.x);
+        let mean = joint.mvm(&v)[n..].to_vec();
+        let prior = self.kernel.outputscale + self.noise;
+        let mut var = vec![0.0; t];
+        for i in 0..t {
+            let mut e = vec![0.0; joint.n];
+            e[n + i] = 1.0;
+            let col = joint.mvm(&e);
+            let kstar = &col[..n];
+            let sol = crate::solvers::cg(
+                &shifted,
+                kstar,
+                crate::solvers::CgOptions {
+                    tol: 1e-2,
+                    max_iters: 300,
+                    min_iters: 1,
+                },
+            );
+            let quad = crate::util::stats::dot(kstar, &sol.x);
+            var[i] = (prior - quad).max(1e-8);
+        }
+        Ok((mean, var))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelFamily;
+    use crate::mvm::ExactMvm;
+    use crate::util::stats::cosine_error;
+
+    #[test]
+    fn kiss1d_tracks_exact() {
+        let n = 120;
+        let mut rng = Pcg64::new(1);
+        let coords: Vec<f64> = (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let k1 = Kiss1d::build(&coords, |tau| (-0.5 * tau * tau).exp(), 200);
+        let v = rng.normal_vec(n);
+        let got = k1.mvm(&v);
+        // Exact 1-D RBF MVM.
+        let mut want = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                let d = coords[i] - coords[j];
+                want[i] += (-0.5 * d * d).exp() * v[j];
+            }
+        }
+        let err = cosine_error(&got, &want);
+        assert!(err < 1e-3, "kiss1d err {err}");
+    }
+
+    #[test]
+    fn skip_tracks_exact_rbf() {
+        // RBF factors exactly across dimensions, so SKIP at decent rank
+        // should track the exact MVM closely.
+        let d = 3;
+        let n = 150;
+        let mut rng = Pcg64::new(2);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-1.5, 1.5)).collect();
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let skip = SkipMvm::build(&x, d, &k, 40, 3).unwrap();
+        let exact = ExactMvm::new(&k, &x, d);
+        let v = rng.normal_vec(n);
+        let err = cosine_error(&skip.mvm(&v), &exact.mvm(&v));
+        assert!(err < 0.05, "skip cosine err {err}");
+    }
+
+    #[test]
+    fn low_rank_hurts() {
+        // The paper's observation: SKIP's low-rank truncation can limit
+        // accuracy — rank 4 must be worse than rank 40.
+        let d = 4;
+        let n = 120;
+        let mut rng = Pcg64::new(4);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-1.5, 1.5)).collect();
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.6);
+        let exact = ExactMvm::new(&k, &x, d);
+        let v = rng.normal_vec(n);
+        let base = exact.mvm(&v);
+        let lo = SkipMvm::build(&x, d, &k, 4, 5).unwrap();
+        let hi = SkipMvm::build(&x, d, &k, 40, 5).unwrap();
+        let e_lo = cosine_error(&lo.mvm(&v), &base);
+        let e_hi = cosine_error(&hi.mvm(&v), &base);
+        assert!(e_hi < e_lo, "rank-40 {e_hi} vs rank-4 {e_lo}");
+    }
+
+    #[test]
+    fn operator_is_symmetric_psd() {
+        let d = 2;
+        let n = 80;
+        let mut rng = Pcg64::new(6);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+        let skip = SkipMvm::build(&x, d, &k, 20, 7).unwrap();
+        let u = rng.normal_vec(n);
+        let v = rng.normal_vec(n);
+        let a = crate::util::stats::dot(&u, &skip.mvm(&v));
+        let b = crate::util::stats::dot(&v, &skip.mvm(&u));
+        assert!((a - b).abs() < 1e-8 * (1.0 + a.abs()));
+        // PSD: vᵀKv >= 0 (factor form guarantees it).
+        assert!(crate::util::stats::dot(&v, &skip.mvm(&v)) >= -1e-10);
+    }
+}

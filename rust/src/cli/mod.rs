@@ -1,0 +1,410 @@
+//! Command-line interface (clap is not in the vendored registry).
+//! Subcommand + `--key value` flag parsing plus the implementations of
+//! the `simplex-gp` binary's commands.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Config;
+use crate::datasets::{generate, spec_for, split_standardize};
+use crate::gp::{train, SolveMode, TrainConfig};
+use crate::kernels::{ArdKernel, KernelFamily};
+use crate::lattice::PermutohedralLattice;
+use crate::mvm::MvmOperator;
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--flag value` or bare boolean `--flag`.
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                args.flags.insert(key.to_string(), value);
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+}
+
+pub const USAGE: &str = "\
+simplex-gp — scalable GPs on the permutohedral lattice (ICML 2021 repro)
+
+USAGE: simplex-gp <command> [--flags]
+
+COMMANDS
+  train      --dataset <name> [--n N] [--epochs E] [--kernel rbf|matern32]
+             [--solver cg|rrcg] [--tol T] [--order R] [--seed S] [--track-mll]
+             Train on a synthetic UCI analog; prints per-epoch metrics and
+             final test RMSE/NLL.
+  mvm        --dataset <name> [--n N] [--order R] [--backend native|pjrt]
+             Time lattice MVMs and report cosine error vs the exact MVM.
+  sparsity   [--n N] — print the Table-3 sparsity rows for all datasets.
+  stencil    --kernel <fam> [--order R] — print the coverage-optimal
+             spacing and taps (the §4.1 discretization).
+  serve      --dataset <name> [--n N] [--addr HOST:PORT] — train quickly,
+             then serve predictions over the JSON-lines protocol.
+  goldens    [--artifacts DIR] — compile AOT artifacts on PJRT and replay
+             the python-generated goldens (cross-layer parity check).
+  datasets   — list the benchmark dataset analogs.
+  help       — this text.
+
+Defaults mirror the paper's Table 5; see config/mod.rs.
+";
+
+/// Entry point used by main.rs.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "mvm" => cmd_mvm(&args),
+        "sparsity" => cmd_sparsity(&args),
+        "stencil" => cmd_stencil(&args),
+        "serve" => cmd_serve(&args),
+        "goldens" => cmd_goldens(&args),
+        "datasets" => cmd_datasets(),
+        "" | "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn parse_kernel(args: &Args) -> Result<KernelFamily> {
+    let name = args.get("kernel").unwrap_or("matern32");
+    KernelFamily::parse(name).ok_or_else(|| anyhow!("unknown kernel '{name}'"))
+}
+
+fn load_split(args: &Args) -> Result<(crate::datasets::Split, usize)> {
+    let name = args
+        .get("dataset")
+        .ok_or_else(|| anyhow!("--dataset required (see `simplex-gp datasets`)"))?;
+    let spec = spec_for(name).ok_or_else(|| anyhow!("unknown dataset '{name}'"))?;
+    let n = args.get_usize("n", spec.n_default)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let ds = generate(name, n, seed);
+    Ok((split_standardize(&ds, seed.wrapping_add(1)), spec.d))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (split, d) = load_split(args)?;
+    let family = parse_kernel(args)?;
+    let cfg_file = match args.get("config") {
+        Some(p) => Config::load(std::path::Path::new(p))?,
+        None => Config::parse(crate::config::DEFAULT_CONFIG).unwrap(),
+    };
+    let mut cfg = TrainConfig::default();
+    cfg.epochs = args.get_usize("epochs", cfg_file.get_usize("train", "max_epochs", 30).min(30))?;
+    cfg.lr = cfg_file.get_f64("train", "learning_rate", 0.1);
+    cfg.order = args.get_usize("order", cfg_file.get_usize("train", "blur_order", 1))?;
+    cfg.min_noise = cfg_file.get_f64("train", "min_noise", 1e-4);
+    cfg.seed = args.get_usize("seed", 0)? as u64;
+    cfg.track_mll = args.get_flag("track-mll");
+    cfg.verbose = true;
+    let tol = args.get_f64("tol", cfg_file.get_f64("train", "cg_train_tolerance", 1.0))?;
+    cfg.solve = match args.get("solver").unwrap_or("cg") {
+        "cg" => SolveMode::Cg { tol },
+        "rrcg" => SolveMode::RrCg {
+            geom_p: 0.05,
+            min_iters: 10,
+        },
+        other => bail!("unknown solver '{other}'"),
+    };
+
+    println!(
+        "training on {} (n_train={}, d={d}, kernel={})",
+        split.train.name,
+        split.train.n(),
+        family.name()
+    );
+    let t0 = std::time::Instant::now();
+    let out = train(
+        &split.train.x,
+        &split.train.y,
+        &split.val.x,
+        &split.val.y,
+        d,
+        family,
+        cfg,
+    )?;
+    let train_secs = t0.elapsed().as_secs_f64();
+    let pred = out.model.predict_mean(&split.test.x);
+    let rmse = crate::util::stats::rmse(&pred, &split.test.y);
+    // NLL on a test subsample (variance solves are the expensive part).
+    let nll_points = 256.min(split.test.n());
+    let (mean_s, var_s) = out
+        .model
+        .predict(&split.test.x[..nll_points * d]);
+    let nll = crate::util::stats::gaussian_nll(
+        &mean_s,
+        &var_s,
+        &split.test.y[..nll_points],
+    );
+    println!(
+        "done in {train_secs:.1}s (best epoch {}): test RMSE {rmse:.4}, test NLL {nll:.4}",
+        out.best_epoch
+    );
+    println!(
+        "lengthscales: {:?}",
+        out.model
+            .kernel
+            .lengthscales
+            .iter()
+            .map(|l| (l * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "outputscale {:.3}, noise {:.4}, lattice points m = {}",
+        out.model.kernel.outputscale,
+        out.model.noise,
+        out.model.lattice_points()
+    );
+    Ok(())
+}
+
+fn cmd_mvm(args: &Args) -> Result<()> {
+    let (split, d) = load_split(args)?;
+    let family = parse_kernel(args)?;
+    let order = args.get_usize("order", 1)?;
+    let x = &split.train.x;
+    let n = split.train.n();
+    let kernel = ArdKernel::with_lengthscale(family, d, 1.0);
+
+    let t0 = std::time::Instant::now();
+    let lat = PermutohedralLattice::build(x, d, &kernel, order);
+    let build_s = t0.elapsed().as_secs_f64();
+    println!(
+        "lattice: n={n} d={d} m={} (m/L={:.4}) built in {:.3}s",
+        lat.m,
+        lat.sparsity_ratio(),
+        build_s
+    );
+
+    let mut rng = crate::util::Pcg64::new(7);
+    let v = rng.normal_vec(n);
+    let backend = args.get("backend").unwrap_or("native");
+    let (approx, mvm_s) = match backend {
+        "native" => {
+            let t = std::time::Instant::now();
+            let u = lat.mvm(&v);
+            (u, t.elapsed().as_secs_f64())
+        }
+        "pjrt" => {
+            let dir = std::path::PathBuf::from(
+                args.get("artifacts").unwrap_or("artifacts"),
+            );
+            let rt = crate::runtime::PjrtRuntime::new(&dir)?;
+            let px = crate::runtime::SimplexPjrtMvm::new(&rt, &lat, 1.0)?;
+            println!("pjrt backend: artifact {}", px.artifact_name());
+            let t = std::time::Instant::now();
+            let u = px.mvm(&v)?;
+            (u, t.elapsed().as_secs_f64())
+        }
+        other => bail!("unknown backend '{other}'"),
+    };
+    println!("one MVM: {:.3} ms", mvm_s * 1e3);
+    if n <= 20_000 {
+        let exact_op = crate::mvm::ExactMvm::new(&kernel, x, d);
+        let t = std::time::Instant::now();
+        let exact = exact_op.mvm(&v);
+        let exact_s = t.elapsed().as_secs_f64();
+        println!(
+            "exact MVM: {:.3} ms  (speedup {:.1}x), cosine error {:.2e}",
+            exact_s * 1e3,
+            exact_s / mvm_s.max(1e-12),
+            crate::util::stats::cosine_error(&approx, &exact)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sparsity(args: &Args) -> Result<()> {
+    let n_cap = args.get_usize("n", 16_384)?;
+    println!("{:<16} {:>9} {:>3} {:>9} {:>7}  (paper m/L)", "dataset", "n", "d", "m", "m/L");
+    for spec in crate::datasets::PAPER_DATASETS {
+        let n = n_cap.min(spec.n_default);
+        let ds = generate(spec.name, n, 0);
+        let split = split_standardize(&ds, 1);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, spec.d, 1.0);
+        let lat = PermutohedralLattice::build(&split.train.x, spec.d, &k, 1);
+        println!(
+            "{:<16} {:>9} {:>3} {:>9} {:>7.3}  ({:.3})",
+            spec.name,
+            lat.n,
+            spec.d,
+            lat.m,
+            lat.sparsity_ratio(),
+            spec.paper_sparsity
+        );
+    }
+    Ok(())
+}
+
+fn cmd_stencil(args: &Args) -> Result<()> {
+    let family = parse_kernel(args)?;
+    let order = args.get_usize("order", 1)?;
+    let st = crate::stencil::Stencil::build(family, order);
+    println!("kernel {} order {order}:", family.name());
+    println!("  coverage-optimal spacing s = {:.4}", st.spacing);
+    println!("  taps = {:?}", st.taps);
+    for d in [3usize, 9, 17] {
+        println!(
+            "  effective input step at d={d}: {:.4}",
+            st.input_step(d)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (split, d) = load_split(args)?;
+    let family = parse_kernel(args)?;
+    let mut tc = TrainConfig::default();
+    tc.epochs = args.get_usize("epochs", 10)?;
+    tc.verbose = true;
+    println!("fitting model for serving ({} train points)...", split.train.n());
+    let out = train(
+        &split.train.x,
+        &split.train.y,
+        &split.val.x,
+        &split.val.y,
+        d,
+        family,
+        tc,
+    )?;
+    let mut cfg = crate::coordinator::ServeConfig::default();
+    if let Some(addr) = args.get("addr") {
+        cfg.addr = addr.to_string();
+    }
+    let server = crate::coordinator::Server::start(out.model, cfg)?;
+    println!(
+        "serving on {} — JSON lines: {{\"id\":1,\"op\":\"predict\",\"x\":[[...{} floats...]]}}",
+        server.local_addr, d
+    );
+    println!("Ctrl-C to stop.");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_goldens(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let rt = crate::runtime::PjrtRuntime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    for spec in rt.manifest.artifacts.clone() {
+        let c = rt.compile(&spec.name)?;
+        let err = c.replay_goldens()?;
+        println!("{:<40} max |err| = {err:.3e}  {}", spec.name, if err < 1e-3 { "OK" } else { "FAIL" });
+        if err >= 1e-3 {
+            bail!("golden replay failed for {}", spec.name);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!(
+        "{:<16} {:>10} {:>3} {:>10}  description",
+        "name", "n (paper)", "d", "n (bench)"
+    );
+    for s in crate::datasets::PAPER_DATASETS {
+        println!(
+            "{:<16} {:>10} {:>3} {:>10}  synthetic analog (see datasets/synthetic.rs)",
+            s.name, s.n_paper, s.d, s.n_default
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&argv("train extra --dataset protein --n 100 --track-mll")).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("dataset"), Some("protein"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+        assert!(a.get_flag("track-mll"));
+        assert_eq!(a.positional, vec!["extra"]);
+        // A word after a flag is consumed as that flag's value.
+        let b = Args::parse(&argv("x --mode fast pos")).unwrap();
+        assert_eq!(b.get("mode"), Some("fast"));
+        assert_eq!(b.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn flag_type_errors() {
+        let a = Args::parse(&argv("x --n abc")).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn stencil_command_runs() {
+        run(&argv("stencil --kernel rbf --order 1")).unwrap();
+    }
+
+    #[test]
+    fn datasets_command_runs() {
+        run(&argv("datasets")).unwrap();
+    }
+
+    #[test]
+    fn sparsity_command_small() {
+        run(&argv("sparsity --n 1500")).unwrap();
+    }
+}

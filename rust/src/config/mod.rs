@@ -1,0 +1,217 @@
+//! Minimal TOML-subset configuration parser (serde/toml are not in the
+//! vendored registry). Supports what our configs need: `[sections]`,
+//! `key = value` with string/float/int/bool/array-of-number values, and
+//! `#` comments. Defaults mirror the paper's Table 5.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<f64>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat section → key → value map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(val.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(|v| v.as_usize())
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .and_then(|v| v.as_bool())
+            .unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut arr = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            arr.push(part.parse::<f64>().map_err(|e| format!("bad array item: {e}"))?);
+        }
+        return Ok(Value::Arr(arr));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+/// Default training config text (Table 5 of the paper), used when no
+/// file is given — also serves as documentation of every knob.
+pub const DEFAULT_CONFIG: &str = r#"
+[train]
+max_epochs = 100
+optimizer = "adam"       # fixed; Table 5
+learning_rate = 0.1
+cg_train_tolerance = 1.0
+cg_eval_tolerance = 0.01
+max_cg_iterations = 500
+precond_rank = 100
+max_lanczos_iterations = 100
+kernel = "matern32"       # { matern32, rbf }
+blur_order = 1
+min_noise = 1e-4
+probes = 8
+patience = 15
+
+[serve]
+addr = "127.0.0.1:7788"
+max_batch = 256
+max_wait_ms = 5
+backend = "native"        # { native, pjrt }
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_default_config() {
+        let cfg = Config::parse(DEFAULT_CONFIG).unwrap();
+        assert_eq!(cfg.get_f64("train", "learning_rate", 0.0), 0.1);
+        assert_eq!(cfg.get_usize("train", "max_epochs", 0), 100);
+        assert_eq!(cfg.get_str("train", "kernel", ""), "matern32");
+        assert_eq!(cfg.get_str("serve", "addr", ""), "127.0.0.1:7788");
+        assert_eq!(cfg.get_f64("train", "min_noise", 0.0), 1e-4);
+    }
+
+    #[test]
+    fn sections_keys_values() {
+        let cfg = Config::parse(
+            "top = 1\n[a]\nx = 2.5\ns = \"hi # there\"\nflag = true\narr = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_f64("", "top", 0.0), 1.0);
+        assert_eq!(cfg.get_f64("a", "x", 0.0), 2.5);
+        assert_eq!(cfg.get_str("a", "s", ""), "hi # there");
+        assert!(cfg.get_bool("a", "flag", false));
+        assert_eq!(
+            cfg.get("a", "arr"),
+            Some(&Value::Arr(vec![1.0, 2.0, 3.0]))
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("[unclosed\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("x = what\n").is_err());
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let cfg = Config::parse("# top\nx = 3 # trailing\n").unwrap();
+        assert_eq!(cfg.get_f64("", "x", 0.0), 3.0);
+    }
+}

@@ -1,0 +1,533 @@
+//! Layer-3 serving coordinator: a threaded prediction server with a
+//! dynamic batcher in front of the fitted Simplex-GP.
+//!
+//! Request path (no Python anywhere): TCP accept loop → per-connection
+//! reader threads → bounded request queue (backpressure) → batcher
+//! thread that coalesces up to `max_batch` prediction rows or
+//! `max_wait` of arrivals → one lattice filter pass for the whole batch
+//! → per-connection writers. MVMs can be routed to the native
+//! multithreaded path or to a PJRT artifact ([`crate::runtime`]).
+//!
+//! Wire protocol: JSON lines.
+//!   → {"id": 7, "op": "predict", "x": [[...d floats...], ...]}
+//!   → {"id": 8, "op": "mvm", "v": [...n floats...]}
+//!   → {"id": 9, "op": "stats"}
+//!   ← {"id": 7, "mean": [...], "elapsed_us": 1234}
+//!   ← {"id": 8, "u": [...]}
+//!   ← {"id": 9, "n": ..., "m": ..., "d": ..., "served": ...}
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::gp::SimplexGp;
+use crate::util::json::Json;
+
+/// Server configuration ([serve] section of the config file).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// Max prediction rows per coalesced batch.
+    pub max_batch: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Bounded queue length (backpressure: writers block when full).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7788".to_string(),
+            max_batch: 256,
+            max_wait: Duration::from_millis(5),
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// One queued unit of work.
+enum Work {
+    Predict {
+        id: f64,
+        x: Vec<f64>,
+        rows: usize,
+        reply: SyncSender<String>,
+        enqueued: Instant,
+    },
+    Mvm {
+        id: f64,
+        v: Vec<f64>,
+        reply: SyncSender<String>,
+    },
+    Stats {
+        id: f64,
+        reply: SyncSender<String>,
+    },
+}
+
+/// Running server handle (owned threads shut down when dropped after
+/// `shutdown`).
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    batch_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving `model` in background threads; returns immediately.
+    pub fn start(model: SimplexGp, cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = sync_channel::<Work>(cfg.queue_depth);
+
+        // Batcher thread owns the model.
+        let batch_stop = stop.clone();
+        let batch_served = served.clone();
+        let batch_cfg = cfg.clone();
+        let batch_thread = std::thread::spawn(move || {
+            batch_loop(model, rx, batch_cfg, batch_stop, batch_served);
+        });
+
+        // Accept loop.
+        let accept_stop = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            while !accept_stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = tx.clone();
+                        let stop = accept_stop.clone();
+                        std::thread::spawn(move || {
+                            let _ = connection_loop(stream, tx, stop);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+
+        Ok(Server {
+            local_addr,
+            stop,
+            served,
+            accept_thread: Some(accept_thread),
+            batch_thread: Some(batch_thread),
+        })
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.batch_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Per-connection: parse JSON lines, enqueue work, write replies from a
+/// dedicated writer thread (so slow clients don't stall the batcher).
+fn connection_loop(
+    stream: TcpStream,
+    tx: SyncSender<Work>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    // Latency path: without TCP_NODELAY, Nagle + delayed ACK adds ~40 ms
+    // per direction on small JSON-line frames (§Perf).
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let (reply_tx, reply_rx) = sync_channel::<String>(64);
+    let writer_thread = std::thread::spawn(move || {
+        while let Ok(line) = reply_rx.recv() {
+            if writer.write_all(line.as_bytes()).is_err()
+                || writer.write_all(b"\n").is_err()
+            {
+                break;
+            }
+        }
+    });
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    while !stop.load(Ordering::Relaxed) {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                match parse_request(trimmed, &reply_tx) {
+                    Ok(work) => {
+                        // Bounded send = backpressure.
+                        if tx.send(work).is_err() {
+                            break;
+                        }
+                    }
+                    Err(msg) => {
+                        let _ = reply_tx
+                            .send(format!("{{\"error\":{}}}", Json::Str(msg).to_string()));
+                    }
+                }
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
+    }
+    drop(reply_tx);
+    let _ = writer_thread.join();
+    Ok(())
+}
+
+fn parse_request(line: &str, reply: &SyncSender<String>) -> Result<Work, String> {
+    let json = Json::parse(line)?;
+    let id = json.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    match json.get("op").and_then(|v| v.as_str()) {
+        Some("predict") => {
+            let rows_json = json
+                .get("x")
+                .and_then(|v| v.as_arr())
+                .ok_or("predict needs x: [[...], ...]")?;
+            let mut x = Vec::new();
+            let mut rows = 0;
+            for row in rows_json {
+                let row = row.as_arr().ok_or("x rows must be arrays")?;
+                for v in row {
+                    x.push(v.as_f64().ok_or("x entries must be numbers")?);
+                }
+                rows += 1;
+            }
+            Ok(Work::Predict {
+                id,
+                x,
+                rows,
+                reply: reply.clone(),
+                enqueued: Instant::now(),
+            })
+        }
+        Some("mvm") => {
+            let v = json
+                .get("v")
+                .and_then(|v| v.as_arr())
+                .ok_or("mvm needs v: [...]")?
+                .iter()
+                .map(|x| x.as_f64().ok_or("v entries must be numbers"))
+                .collect::<Result<Vec<f64>, _>>()?;
+            Ok(Work::Mvm {
+                id,
+                v,
+                reply: reply.clone(),
+            })
+        }
+        Some("stats") => Ok(Work::Stats {
+            id,
+            reply: reply.clone(),
+        }),
+        _ => Err("unknown op (use predict | mvm | stats)".to_string()),
+    }
+}
+
+fn json_num_array(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+/// The batcher: coalesce predictions, execute, reply.
+fn batch_loop(
+    model: SimplexGp,
+    rx: Receiver<Work>,
+    cfg: ServeConfig,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+) {
+    let d = model.d;
+    let mut pending: Vec<(f64, usize, SyncSender<String>, Instant)> = Vec::new();
+    let mut batch_x: Vec<f64> = Vec::new();
+    let mut batch_rows = 0usize;
+
+    let flush = |pending: &mut Vec<(f64, usize, SyncSender<String>, Instant)>,
+                 batch_x: &mut Vec<f64>,
+                 batch_rows: &mut usize,
+                 served: &AtomicU64,
+                 model: &SimplexGp| {
+        if *batch_rows == 0 {
+            return;
+        }
+        let t0 = Instant::now();
+        let mean = model.predict_mean(batch_x);
+        let elapsed_us = t0.elapsed().as_micros() as f64;
+        let mut cursor = 0usize;
+        for (id, rows, reply, enqueued) in pending.drain(..) {
+            let slice = &mean[cursor..cursor + rows];
+            cursor += rows;
+            let mut obj = BTreeMap::new();
+            obj.insert("id".to_string(), Json::Num(id));
+            obj.insert("mean".to_string(), json_num_array(slice));
+            obj.insert("elapsed_us".to_string(), Json::Num(elapsed_us));
+            obj.insert(
+                "queue_us".to_string(),
+                Json::Num(enqueued.elapsed().as_micros() as f64),
+            );
+            // Count before sending: clients may observe the reply (and a
+            // test may read the counter) the instant send returns.
+            served.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Json::Obj(obj).to_string());
+        }
+        batch_x.clear();
+        *batch_rows = 0;
+    };
+
+    while !stop.load(Ordering::Relaxed) {
+        // Wait for the first item of a batch.
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(w) => w,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(_) => break,
+        };
+        let mut deadline = Instant::now() + cfg.max_wait;
+        let handle = |w: Work,
+                          pending: &mut Vec<(f64, usize, SyncSender<String>, Instant)>,
+                          batch_x: &mut Vec<f64>,
+                          batch_rows: &mut usize| {
+            match w {
+                Work::Predict {
+                    id,
+                    x,
+                    rows,
+                    reply,
+                    enqueued,
+                } => {
+                    if x.len() != rows * d {
+                        let _ = reply.send(format!(
+                            "{{\"id\":{id},\"error\":\"expected {d} features per row\"}}"
+                        ));
+                        return;
+                    }
+                    batch_x.extend_from_slice(&x);
+                    *batch_rows += rows;
+                    pending.push((id, rows, reply, enqueued));
+                }
+                Work::Mvm { id, v, reply } => {
+                    if v.len() != model.n_train() {
+                        let _ = reply.send(format!(
+                            "{{\"id\":{id},\"error\":\"mvm vector must have length {}\"}}",
+                            model.n_train()
+                        ));
+                        return;
+                    }
+                    let u = model.operator().lattice.mvm(&v);
+                    let mut obj = BTreeMap::new();
+                    obj.insert("id".to_string(), Json::Num(id));
+                    obj.insert("u".to_string(), json_num_array(&u));
+                    let _ = reply.send(Json::Obj(obj).to_string());
+                }
+                Work::Stats { id, reply } => {
+                    let mut obj = BTreeMap::new();
+                    obj.insert("id".to_string(), Json::Num(id));
+                    obj.insert("n".to_string(), Json::Num(model.n_train() as f64));
+                    obj.insert(
+                        "m".to_string(),
+                        Json::Num(model.lattice_points() as f64),
+                    );
+                    obj.insert("d".to_string(), Json::Num(d as f64));
+                    let _ = reply.send(Json::Obj(obj).to_string());
+                }
+            }
+        };
+        handle(first, &mut pending, &mut batch_x, &mut batch_rows);
+        // Fill the batch until deadline or capacity.
+        while batch_rows < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(w) => {
+                    handle(w, &mut pending, &mut batch_x, &mut batch_rows);
+                    if batch_rows >= cfg.max_batch {
+                        break;
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                Err(_) => {
+                    deadline = Instant::now();
+                    break;
+                }
+            }
+        }
+        flush(&mut pending, &mut batch_x, &mut batch_rows, &served, &model);
+    }
+    flush(&mut pending, &mut batch_x, &mut batch_rows, &served, &model);
+}
+
+/// Blocking client helper (examples, benches, tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: f64,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer,
+            next_id: 1.0,
+        })
+    }
+
+    fn roundtrip(&mut self, req: String) -> Result<Json> {
+        self.writer.write_all(req.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim()).map_err(|e| anyhow!("bad reply: {e}"))
+    }
+
+    /// Predict means for `rows × d` inputs.
+    pub fn predict(&mut self, x: &[f64], d: usize) -> Result<Vec<f64>> {
+        let id = self.next_id;
+        self.next_id += 1.0;
+        let rows: Vec<Json> = x
+            .chunks(d)
+            .map(|row| json_num_array(row))
+            .collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("id".to_string(), Json::Num(id));
+        obj.insert("op".to_string(), Json::Str("predict".to_string()));
+        obj.insert("x".to_string(), Json::Arr(rows));
+        let reply = self.roundtrip(Json::Obj(obj).to_string())?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(reply
+            .get("mean")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| anyhow!("reply missing mean"))?
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect())
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        let id = self.next_id;
+        self.next_id += 1.0;
+        self.roundtrip(format!("{{\"id\":{id},\"op\":\"stats\"}}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::GpConfig;
+    use crate::kernels::{ArdKernel, KernelFamily};
+    use crate::util::Pcg64;
+
+    fn tiny_model() -> SimplexGp {
+        let d = 2;
+        let mut rng = Pcg64::new(1);
+        let x: Vec<f64> = (0..200 * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..200)
+            .map(|i| (x[i * d]).sin() + 0.05 * rng.normal())
+            .collect();
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        SimplexGp::fit(&x, &y, d, kernel, 0.05, GpConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn serve_predict_roundtrip() {
+        let model = tiny_model();
+        let direct = model.predict_mean(&[0.5, -0.3, 1.0, 1.0]);
+        let mut cfg = ServeConfig::default();
+        cfg.addr = "127.0.0.1:0".to_string(); // ephemeral port
+        let server = Server::start(model, cfg).unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let got = client.predict(&[0.5, -0.3, 1.0, 1.0], 2).unwrap();
+        assert_eq!(got.len(), 2);
+        for i in 0..2 {
+            assert!((got[i] - direct[i]).abs() < 1e-9, "{} vs {}", got[i], direct[i]);
+        }
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("n").and_then(|v| v.as_f64()), Some(200.0));
+        assert!(server.served() >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_batched() {
+        let model = tiny_model();
+        let mut cfg = ServeConfig::default();
+        cfg.addr = "127.0.0.1:0".to_string();
+        cfg.max_wait = Duration::from_millis(20);
+        let server = Server::start(model, cfg).unwrap();
+        let addr = server.local_addr;
+        let handles: Vec<_> = (0..8)
+            .map(|k| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let x = vec![0.1 * k as f64, -0.1 * k as f64];
+                    c.predict(&x, 2).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let mean = h.join().unwrap();
+            assert_eq!(mean.len(), 1);
+            assert!(mean[0].is_finite());
+        }
+        assert!(server.served() >= 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_get_errors() {
+        let model = tiny_model();
+        let mut cfg = ServeConfig::default();
+        cfg.addr = "127.0.0.1:0".to_string();
+        let server = Server::start(model, cfg).unwrap();
+        let stream = TcpStream::connect(server.local_addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writer.write_all(b"this is not json\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "got: {line}");
+        // Wrong feature count.
+        writer
+            .write_all(b"{\"id\":1,\"op\":\"predict\",\"x\":[[1.0,2.0,3.0]]}\n")
+            .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "got: {line}");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,93 @@
+//! Tiny CSV loader so real UCI files drop in when available: numeric
+//! columns, last column is the target, optional header row, comma or
+//! whitespace separated.
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+/// Load a numeric CSV where the final column is the regression target.
+pub fn load_csv(path: &std::path::Path, name: &str) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading csv {path:?}"))?;
+    parse_csv(&text, name)
+}
+
+/// Parse CSV text (exposed for tests).
+pub fn parse_csv(text: &str, name: &str) -> Result<Dataset> {
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let mut d = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = if line.contains(',') {
+            line.split(',').map(|f| f.trim()).collect()
+        } else {
+            line.split_whitespace().collect()
+        };
+        let vals: Result<Vec<f64>, _> =
+            fields.iter().map(|f| f.parse::<f64>()).collect();
+        let vals = match vals {
+            Ok(v) => v,
+            Err(_) if lineno == 0 => continue, // header row
+            Err(e) => bail!("line {}: {e}", lineno + 1),
+        };
+        if vals.len() < 2 {
+            bail!("line {}: need at least 2 columns", lineno + 1);
+        }
+        match d {
+            None => d = Some(vals.len() - 1),
+            Some(dd) if dd != vals.len() - 1 => {
+                bail!("line {}: ragged row", lineno + 1)
+            }
+            _ => {}
+        }
+        let (feat, target) = vals.split_at(vals.len() - 1);
+        x.extend_from_slice(feat);
+        y.push(target[0]);
+    }
+    let d = d.context("csv has no data rows")?;
+    Ok(Dataset {
+        name: name.to_string(),
+        d,
+        x,
+        y,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comma_with_header() {
+        let ds = parse_csv("a,b,y\n1,2,3\n4,5,6\n", "t").unwrap();
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.x, vec![1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(ds.y, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn parses_whitespace_no_header() {
+        let ds = parse_csv("1 2 3\n4 5 6\n", "t").unwrap();
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.y, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(parse_csv("1,2,3\n4,5\n", "t").is_err());
+        assert!(parse_csv("", "t").is_err());
+        assert!(parse_csv("1\n", "t").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let ds = parse_csv("# c\n\n1,2\n", "t").unwrap();
+        assert_eq!(ds.d, 1);
+        assert_eq!(ds.y, vec![2.0]);
+    }
+}

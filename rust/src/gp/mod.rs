@@ -1,0 +1,8 @@
+//! Gaussian-process regression on the permutohedral lattice: the fitted
+//! model ([`model::SimplexGp`]) and the MLL trainer ([`trainer::train`]).
+
+pub mod model;
+pub mod trainer;
+
+pub use model::{GpConfig, SimplexGp};
+pub use trainer::{train, EpochRecord, SolveMode, TrainConfig, TrainOutcome};

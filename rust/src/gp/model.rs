@@ -1,0 +1,347 @@
+//! The Simplex-GP regression model: SKI inference with the
+//! permutohedral-lattice MVM inside the BBMM machinery (CG for solves,
+//! SLQ for log-determinants).
+
+use anyhow::{ensure, Result};
+
+use crate::kernels::ArdKernel;
+use crate::mvm::{Shifted, SimplexMvm};
+use crate::solvers::{cg, cg_multi, slq_logdet, CgOptions};
+
+/// Inference-time configuration (defaults mirror the paper's Table 5).
+#[derive(Clone, Debug)]
+pub struct GpConfig {
+    /// Blur stencil order r.
+    pub order: usize,
+    /// CG tolerance for evaluation/prediction solves.
+    pub cg_tol: f64,
+    /// Max CG iterations.
+    pub cg_max_iters: usize,
+    /// Use the exactly-symmetrized blur inside CG.
+    pub symmetrize: bool,
+    /// Lanczos steps for SLQ log-determinant.
+    pub slq_steps: usize,
+    /// Hutchinson probes for SLQ.
+    pub slq_probes: usize,
+    /// RNG seed for stochastic estimators.
+    pub seed: u64,
+}
+
+impl Default for GpConfig {
+    fn default() -> Self {
+        GpConfig {
+            order: 1,
+            cg_tol: 1e-2,
+            cg_max_iters: 500,
+            symmetrize: true,
+            slq_steps: 50,
+            slq_probes: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// A fitted Simplex-GP: lattice + representer weights α = (K̂+σ²I)⁻¹y.
+pub struct SimplexGp {
+    pub kernel: ArdKernel,
+    /// Observation noise σ².
+    pub noise: f64,
+    pub d: usize,
+    pub x_train: Vec<f64>,
+    pub y_train: Vec<f64>,
+    pub config: GpConfig,
+    op: SimplexMvm,
+    alpha: Vec<f64>,
+    /// Blur(Splat(α)) cached at fit time: prediction then only embeds
+    /// and slices the test points — O(t·d²) per request instead of a
+    /// full O(d²(n+m)) lattice pass (serving hot path, §Perf).
+    z_pred: Vec<f64>,
+    /// Iterations the fitting solve took (diagnostics).
+    pub fit_iterations: usize,
+}
+
+impl SimplexGp {
+    /// Fit with fixed hyperparameters: builds the lattice and solves for
+    /// the representer weights. (Hyperparameter *learning* lives in
+    /// [`crate::gp::trainer`].)
+    pub fn fit(
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+        kernel: ArdKernel,
+        noise: f64,
+        config: GpConfig,
+    ) -> Result<Self> {
+        ensure!(d >= 1, "d must be positive");
+        ensure!(x.len() % d == 0, "x length not a multiple of d");
+        let n = x.len() / d;
+        ensure!(y.len() == n, "y length {} != n {}", y.len(), n);
+        ensure!(noise > 0.0, "noise must be positive");
+        let op = SimplexMvm::build(x, d, &kernel, config.order)
+            .with_symmetrize(config.symmetrize);
+        let shifted = Shifted::new(&op, noise);
+        let res = cg(
+            &shifted,
+            y,
+            CgOptions {
+                tol: config.cg_tol,
+                max_iters: config.cg_max_iters,
+                    min_iters: 1,
+                },
+        );
+        let fit_iterations = res.iterations;
+        let alpha = res.x;
+        let z_pred = {
+            let lat = &op.lattice;
+            let taps = lat.stencil.taps.clone();
+            let mut z = lat.splat(&alpha, 1);
+            lat.blur(&mut z, 1, &taps);
+            z
+        };
+        Ok(SimplexGp {
+            kernel,
+            noise,
+            d,
+            x_train: x.to_vec(),
+            y_train: y.to_vec(),
+            config,
+            op,
+            alpha,
+            z_pred,
+            fit_iterations,
+        })
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.y_train.len()
+    }
+
+    /// Number of lattice points backing the model.
+    pub fn lattice_points(&self) -> usize {
+        self.op.lattice.m
+    }
+
+    /// The underlying lattice operator (benchmark access).
+    pub fn operator(&self) -> &SimplexMvm {
+        &self.op
+    }
+
+    /// Representer weights α.
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// Predictive mean at `x_star` (row-major `t × d`):
+    /// μ* = K(X*, X)·α computed as Slice*(Blur(Splat(α))).
+    pub fn predict_mean(&self, x_star: &[f64]) -> Vec<f64> {
+        let lat = &self.op.lattice;
+        let (off, w) = lat.embed_only(x_star, &self.kernel);
+        let mut mean = lat.slice_at(&off, &w, &self.z_pred, 1);
+        for m in mean.iter_mut() {
+            *m *= self.kernel.outputscale;
+        }
+        mean
+    }
+
+    /// Predictive mean and variance at `x_star`. The variance uses the
+    /// SKI identity  v*ᵢ = s²k(0) + σ² − k*ᵢᵀ(K̂+σ²I)⁻¹k*ᵢ  with the
+    /// cross-covariance columns k*ᵢ realized through the lattice and the
+    /// per-point solves batched through the multi-channel filter.
+    pub fn predict(&self, x_star: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let t = x_star.len() / self.d;
+        let mean = self.predict_mean(x_star);
+        let mut var = vec![0.0; t];
+        let lat = &self.op.lattice;
+        let (off, w) = lat.embed_only(x_star, &self.kernel);
+        let shifted = Shifted::new(&self.op, self.noise);
+        let prior = self.kernel.outputscale + self.noise;
+        // Batch test columns in chunks to bound the channel width.
+        let chunk = 64usize;
+        let dp1 = self.d + 1;
+        for c0 in (0..t).step_by(chunk) {
+            let c1 = (c0 + chunk).min(t);
+            let nc = c1 - c0;
+            // k*ᵢ columns: splat unit mass at test point i, blur, slice at
+            // training points. Build all nc channels in one filter pass.
+            let mut z = vec![0.0; (lat.m + 1) * nc];
+            for (c, i) in (c0..c1).enumerate() {
+                for k in 0..dp1 {
+                    let id = off[i * dp1 + k] as usize;
+                    if id != 0 {
+                        z[id * nc + c] += w[i * dp1 + k];
+                    }
+                }
+            }
+            lat.blur(&mut z, nc, &lat.stencil.taps.clone());
+            let mut cols = lat.slice(&z, nc); // n × nc cross-cov (unit scale)
+            for v in cols.iter_mut() {
+                *v *= self.kernel.outputscale;
+            }
+            let (sol, _) = cg_multi(
+                &shifted,
+                &cols,
+                nc,
+                CgOptions {
+                    tol: self.config.cg_tol,
+                    max_iters: self.config.cg_max_iters,
+                    min_iters: 1,
+                },
+            );
+            let n = self.n_train();
+            for (c, i) in (c0..c1).enumerate() {
+                let mut quad = 0.0;
+                for row in 0..n {
+                    quad += cols[row * nc + c] * sol[row * nc + c];
+                }
+                // Clamp: the SKI/CG approximation can overshoot.
+                var[i] = (prior - quad).max(1e-8);
+            }
+        }
+        (mean, var)
+    }
+
+    /// Marginal log-likelihood (Eq. 4), with the log-determinant
+    /// estimated by SLQ on the shifted operator.
+    pub fn mll(&self) -> f64 {
+        let n = self.n_train() as f64;
+        let shifted = Shifted::new(&self.op, self.noise);
+        let yt_alpha = crate::util::stats::dot(&self.y_train, &self.alpha);
+        let logdet = slq_logdet(
+            &shifted,
+            self.config.slq_steps,
+            self.config.slq_probes,
+            self.config.seed.wrapping_add(17),
+        );
+        -0.5 * yt_alpha - 0.5 * logdet - 0.5 * n * (2.0 * std::f64::consts::PI).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelFamily;
+    use crate::linalg::{logdet_spd, solve_spd};
+    use crate::util::stats::rmse;
+    use crate::util::Pcg64;
+
+    /// A smooth target on [0,1]^d.
+    fn toy_problem(n: usize, d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let row = &x[i * d..(i + 1) * d];
+                let s: f64 = row.iter().map(|v| (1.3 * v).sin()).sum();
+                s + 0.05 * rng.normal()
+            })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn fit_and_interpolate() {
+        let d = 2;
+        let (x, y) = toy_problem(300, d, 1);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let gp = SimplexGp::fit(&x, &y, d, kernel, 0.05, GpConfig::default()).unwrap();
+        // Training-point predictions should beat the trivial predictor.
+        let pred = gp.predict_mean(&x);
+        let err = rmse(&pred, &y);
+        let base = rmse(&vec![0.0; y.len()], &y);
+        assert!(err < 0.5 * base, "train rmse {err} vs baseline {base}");
+    }
+
+    #[test]
+    fn generalizes_to_test_points() {
+        let d = 2;
+        let (x, y) = toy_problem(500, d, 2);
+        let (xt, yt) = toy_problem(100, d, 3);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 0.5);
+        let gp = SimplexGp::fit(&x, &y, d, kernel, 0.05, GpConfig::default()).unwrap();
+        let pred = gp.predict_mean(&xt);
+        let err = rmse(&pred, &yt);
+        let base = rmse(&vec![0.0; yt.len()], &yt);
+        assert!(err < 0.6 * base, "test rmse {err} vs baseline {base}");
+    }
+
+    #[test]
+    fn predictive_variance_sane() {
+        let d = 2;
+        let (x, y) = toy_problem(200, d, 4);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let noise = 0.05;
+        let gp = SimplexGp::fit(&x, &y, d, kernel, noise, GpConfig::default()).unwrap();
+        // Variance near training data should be lower than far away.
+        let (_, var_near) = gp.predict(&x[..10 * d]);
+        let far: Vec<f64> = vec![30.0; 5 * d];
+        let (_, var_far) = gp.predict(&far);
+        let near_mean = crate::util::stats::mean(&var_near);
+        let far_mean = crate::util::stats::mean(&var_far);
+        assert!(
+            near_mean < far_mean,
+            "near var {near_mean} should be < far var {far_mean}"
+        );
+        // Far-field variance approaches the prior s² + σ².
+        let prior = gp.kernel.outputscale + noise;
+        assert!((far_mean - prior).abs() < 0.2 * prior);
+        for v in var_near {
+            assert!(v > 0.0 && v <= prior + 1e-6);
+        }
+    }
+
+    #[test]
+    fn mean_matches_exact_gp_on_small_problem() {
+        // Small n: compare lattice GP prediction against the dense exact
+        // GP. They won't be identical (SKI approximation) but should
+        // correlate strongly.
+        let d = 2;
+        let (x, y) = toy_problem(150, d, 5);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+        let noise = 0.1;
+        let gp =
+            SimplexGp::fit(&x, &y, d, kernel.clone(), noise, GpConfig::default()).unwrap();
+        let (xt, _) = toy_problem(40, d, 6);
+        let approx = gp.predict_mean(&xt);
+        // Dense exact.
+        let mut km = kernel.cov_matrix(&x, d);
+        km.add_diag(noise);
+        let alpha = solve_spd(&km, &y).unwrap();
+        let kstar = kernel.cross_cov(&xt, &x, d);
+        let exact = kstar.matvec(&alpha);
+        let cos = crate::util::stats::cosine_error(&approx, &exact);
+        assert!(cos < 0.05, "prediction cosine error {cos}");
+    }
+
+    #[test]
+    fn mll_tracks_exact_on_small_problem() {
+        let d = 2;
+        let (x, y) = toy_problem(120, d, 7);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+        let noise = 0.2;
+        let mut cfg = GpConfig::default();
+        cfg.cg_tol = 1e-6;
+        cfg.slq_probes = 30;
+        cfg.slq_steps = 60;
+        let gp = SimplexGp::fit(&x, &y, d, kernel.clone(), noise, cfg).unwrap();
+        let approx_mll = gp.mll();
+        let mut km = kernel.cov_matrix(&x, d);
+        km.add_diag(noise);
+        let alpha = solve_spd(&km, &y).unwrap();
+        let exact_mll = -0.5 * crate::util::stats::dot(&y, &alpha)
+            - 0.5 * logdet_spd(&km).unwrap()
+            - 0.5 * (y.len() as f64) * (2.0 * std::f64::consts::PI).ln();
+        let rel = (approx_mll - exact_mll).abs() / exact_mll.abs();
+        assert!(
+            rel < 0.15,
+            "mll approx {approx_mll} vs exact {exact_mll} (rel {rel})"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let kernel = ArdKernel::new(KernelFamily::Rbf, 2);
+        assert!(SimplexGp::fit(&[1.0, 2.0, 3.0], &[1.0], 2, kernel.clone(), 0.1, GpConfig::default()).is_err());
+        assert!(SimplexGp::fit(&[1.0, 2.0], &[1.0, 2.0], 2, kernel.clone(), 0.1, GpConfig::default()).is_err());
+        assert!(SimplexGp::fit(&[1.0, 2.0], &[1.0], 2, kernel, 0.0, GpConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,437 @@
+//! Hyperparameter learning: Adam ascent on the marginal log-likelihood
+//! with BBMM-style stochastic gradients (paper §4.2 / §5.4 and Table 5:
+//! Adam, lr 0.1, CG train tolerance 1.0, eval tolerance 0.01, max 100
+//! epochs, ARD kernels, early stopping on validation RMSE).
+//!
+//! Gradient of the MLL for θ ∈ {log ℓ_j, log s², log σ²}:
+//!   ∂MLL/∂θ = ½ αᵀ(∂K̂/∂θ)α − ½·tr(K̂⁻¹ ∂K̂/∂θ),  α = K̂⁻¹y,
+//! with the trace estimated by Hutchinson probes and the lengthscale
+//! bilinear forms gᵀ(∂K/∂ℓ)v computed by the Eq.(12)/(13) lattice
+//! filtering with k′.
+
+use anyhow::Result;
+
+use super::model::{GpConfig, SimplexGp};
+use crate::kernels::{ArdKernel, KernelFamily};
+use crate::mvm::{MvmOperator, Shifted, SimplexMvm};
+use crate::solvers::{cg_multi, rr_cg, slq_logdet, CgOptions, RrCgOptions};
+use crate::util::stats::{dot, rmse};
+use crate::util::Pcg64;
+
+/// Which linear solver drives training (Table 4 compares these).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SolveMode {
+    /// Plain CG at the given tolerance (paper default: 1.0).
+    Cg { tol: f64 },
+    /// Russian-roulette randomized truncation (Potapczynski et al.).
+    RrCg { geom_p: f64, min_iters: usize },
+}
+
+/// Training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    /// Hutchinson probes for trace estimation.
+    pub probes: usize,
+    pub solve: SolveMode,
+    pub max_cg_iters: usize,
+    /// Blur order r.
+    pub order: usize,
+    /// Likelihood-noise floor (Table 5: {1e-4, 1e-1}).
+    pub min_noise: f64,
+    pub seed: u64,
+    /// Early-stopping patience in epochs (on validation RMSE).
+    pub patience: usize,
+    /// Estimate the train MLL each epoch via SLQ (Fig. 7 curves; costs
+    /// one extra SLQ per epoch).
+    pub track_mll: bool,
+    pub verbose: bool,
+    /// Initial likelihood noise σ² (Table 4 / Fig. 7 stress the solver
+    /// by starting ill-conditioned, i.e. small).
+    pub init_noise: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 100,
+            lr: 0.1,
+            probes: 8,
+            solve: SolveMode::Cg { tol: 1.0 },
+            max_cg_iters: 500,
+            order: 1,
+            min_noise: 1e-4,
+            seed: 0,
+            patience: 15,
+            track_mll: false,
+            verbose: false,
+            init_noise: 0.1,
+        }
+    }
+}
+
+/// Per-epoch trace (drives Fig. 7 and Table 4).
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub mll: Option<f64>,
+    pub val_rmse: f64,
+    pub noise: f64,
+    pub outputscale: f64,
+    pub lengthscales: Vec<f64>,
+    pub epoch_secs: f64,
+    pub solve_iters: usize,
+}
+
+/// Result of a training run: the best model (by validation RMSE) plus
+/// the full epoch trace.
+pub struct TrainOutcome {
+    pub model: SimplexGp,
+    pub records: Vec<EpochRecord>,
+    pub best_epoch: usize,
+}
+
+/// Adam state over the unconstrained parameter vector.
+struct Adam {
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+    lr: f64,
+}
+
+impl Adam {
+    fn new(len: usize, lr: f64) -> Self {
+        Adam {
+            m: vec![0.0; len],
+            v: vec![0.0; len],
+            t: 0,
+            lr,
+        }
+    }
+
+    /// Ascent step (we maximize the MLL).
+    fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        const B1: f64 = 0.9;
+        const B2: f64 = 0.999;
+        const EPS: f64 = 1e-8;
+        self.t += 1;
+        let t = self.t as i32;
+        for i in 0..params.len() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * grad[i];
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * grad[i] * grad[i];
+            let mhat = self.m[i] / (1.0 - B1.powi(t));
+            let vhat = self.v[i] / (1.0 - B2.powi(t));
+            params[i] += self.lr * mhat / (vhat.sqrt() + EPS);
+        }
+    }
+}
+
+/// Unconstrained ↔ constrained parameter maps: all positives go through
+/// exp with a floor.
+fn unpack(params: &[f64], d: usize, min_noise: f64) -> (Vec<f64>, f64, f64) {
+    let ls: Vec<f64> = params[..d].iter().map(|p| p.exp().clamp(1e-4, 1e4)).collect();
+    let outputscale = params[d].exp().clamp(1e-6, 1e6);
+    let noise = min_noise + params[d + 1].exp().clamp(0.0, 1e4);
+    (ls, outputscale, noise)
+}
+
+/// Train a Simplex-GP on (x, y), early-stopping on (x_val, y_val).
+pub fn train(
+    x: &[f64],
+    y: &[f64],
+    x_val: &[f64],
+    y_val: &[f64],
+    d: usize,
+    family: KernelFamily,
+    cfg: TrainConfig,
+) -> Result<TrainOutcome> {
+    let n = y.len();
+    assert_eq!(x.len(), n * d);
+    let mut rng = Pcg64::new(cfg.seed);
+
+    // θ = [log ℓ_1..d, log s², log σ²-raw]; init ℓ=1 (standardized data),
+    // s²=1, σ²≈0.1.
+    let mut params = vec![0.0; d + 2];
+    params[d + 1] = (cfg.init_noise - cfg.min_noise).max(1e-6).ln();
+    let mut adam = Adam::new(params.len(), cfg.lr);
+
+    let mut records = Vec::with_capacity(cfg.epochs);
+    let mut best: Option<(f64, Vec<f64>, usize)> = None;
+    let mut since_best = 0usize;
+
+    for epoch in 0..cfg.epochs {
+        let t0 = std::time::Instant::now();
+        let (ls, outputscale, noise) = unpack(&params, d, cfg.min_noise);
+        let mut kernel = ArdKernel::new(family, d);
+        kernel.lengthscales = ls.clone();
+        kernel.outputscale = outputscale;
+
+        // Build the lattice for the current lengthscales.
+        let op = SimplexMvm::build(x, d, &kernel, cfg.order).with_symmetrize(true);
+        let shifted = Shifted::new(&op, noise);
+
+        // --- Solves: α = K̂⁻¹y and probe solves K̂⁻¹z_k (batched) ---
+        let p = cfg.probes;
+        let probes: Vec<Vec<f64>> = (0..p).map(|_| rng.rademacher_vec(n)).collect();
+        let (alpha, probe_solves, solve_iters) = match cfg.solve {
+            SolveMode::Cg { tol } => {
+                let nc = p + 1;
+                let mut rhs = vec![0.0; n * nc];
+                for i in 0..n {
+                    rhs[i * nc] = y[i];
+                    for (k, z) in probes.iter().enumerate() {
+                        rhs[i * nc + 1 + k] = z[i];
+                    }
+                }
+                let (sol, iters) = cg_multi(
+                    &shifted,
+                    &rhs,
+                    nc,
+                    CgOptions {
+                        tol,
+                        max_iters: cfg.max_cg_iters,
+                    min_iters: 10,
+                },
+                );
+                let alpha: Vec<f64> = (0..n).map(|i| sol[i * nc]).collect();
+                let psol: Vec<Vec<f64>> = (0..p)
+                    .map(|k| (0..n).map(|i| sol[i * nc + 1 + k]).collect())
+                    .collect();
+                (alpha, psol, iters)
+            }
+            SolveMode::RrCg { geom_p, min_iters } => {
+                let opts = RrCgOptions {
+                    geom_p,
+                    min_iters,
+                    max_iters: cfg.max_cg_iters,
+                    tol: 1e-8,
+                };
+                let ra = rr_cg(&shifted, y, opts, &mut rng);
+                let mut iters = ra.iterations;
+                let alpha = ra.x;
+                let mut psol = Vec::with_capacity(p);
+                for z in &probes {
+                    let rz = rr_cg(&shifted, z, opts, &mut rng);
+                    iters = iters.max(rz.iterations);
+                    psol.push(rz.x);
+                }
+                (alpha, psol, iters)
+            }
+        };
+
+        // --- Gradients ---
+        // ∂MLL/∂σ² = ½αᵀα − ½·(1/p)Σ zᵀK̂⁻¹z.
+        let mut tr_noise = 0.0;
+        for (z, sz) in probes.iter().zip(&probe_solves) {
+            tr_noise += dot(z, sz);
+        }
+        tr_noise /= p.max(1) as f64;
+        let g_noise = 0.5 * dot(&alpha, &alpha) - 0.5 * tr_noise;
+
+        // ∂MLL/∂s²: ∂K̂/∂s² = K_unit = op/s².
+        let k_alpha = op.mvm(&alpha);
+        let mut tr_scale = 0.0;
+        for (z, sz) in probes.iter().zip(&probe_solves) {
+            tr_scale += dot(sz, &op.mvm(z)) / outputscale;
+        }
+        tr_scale /= p.max(1) as f64;
+        let g_scale = 0.5 * dot(&alpha, &k_alpha) / outputscale - 0.5 * tr_scale;
+
+        // ∂MLL/∂ℓ_j via Eq.(12)/(13) filtering (unit-scale kernel ⇒ ×s²).
+        let mut g_ls = vec![0.0; d];
+        {
+            let lat = &op.lattice;
+            let ga = lat.grad_lengthscales(&alpha, &alpha, x, &kernel);
+            for j in 0..d {
+                g_ls[j] += 0.5 * outputscale * ga[j];
+            }
+            for (z, sz) in probes.iter().zip(&probe_solves) {
+                let gz = lat.grad_lengthscales(sz, z, x, &kernel);
+                for j in 0..d {
+                    g_ls[j] -= 0.5 * outputscale * gz[j] / p.max(1) as f64;
+                }
+            }
+        }
+
+        // Chain rule to unconstrained params (θ = log of positives).
+        let mut grad = vec![0.0; d + 2];
+        for j in 0..d {
+            grad[j] = g_ls[j] * ls[j];
+        }
+        grad[d] = g_scale * outputscale;
+        grad[d + 1] = g_noise * (noise - cfg.min_noise);
+
+        // Guard against NaN/Inf from degenerate solves.
+        for g in grad.iter_mut() {
+            if !g.is_finite() {
+                *g = 0.0;
+            }
+        }
+        adam.step(&mut params, &grad);
+
+        // --- Validation RMSE (eval-tolerance solve, Table 5: 0.01) ---
+        let mut eval_cfg = GpConfig::default();
+        eval_cfg.order = cfg.order;
+        eval_cfg.seed = cfg.seed;
+        let eval_model =
+            SimplexGp::fit(x, y, d, kernel.clone(), noise, eval_cfg.clone())?;
+        let val_pred = eval_model.predict_mean(x_val);
+        let val_rmse = rmse(&val_pred, y_val);
+
+        let mll = if cfg.track_mll {
+            let yt_a = dot(y, eval_model.alpha());
+            let ld = slq_logdet(&Shifted::new(eval_model.operator(), noise), 30, 6, cfg.seed + epoch as u64);
+            Some(
+                -0.5 * yt_a - 0.5 * ld
+                    - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln(),
+            )
+        } else {
+            None
+        };
+
+        let rec = EpochRecord {
+            epoch,
+            mll,
+            val_rmse,
+            noise,
+            outputscale,
+            lengthscales: ls.clone(),
+            epoch_secs: t0.elapsed().as_secs_f64(),
+            solve_iters,
+        };
+        if cfg.verbose {
+            println!(
+                "epoch {:3}  val_rmse {:.4}  noise {:.4}  s2 {:.3}  mll {:?}  [{:.2}s, {} iters]",
+                epoch, val_rmse, noise, outputscale, rec.mll, rec.epoch_secs, solve_iters
+            );
+        }
+        records.push(rec);
+
+        // Early stopping on validation RMSE (paper §5.4).
+        let improved = best.as_ref().map_or(true, |(b, _, _)| val_rmse < *b);
+        if improved {
+            // Save the *pre-step* params that produced this val RMSE.
+            let mut snapshot = vec![0.0; d + 2];
+            for j in 0..d {
+                snapshot[j] = ls[j].ln();
+            }
+            snapshot[d] = outputscale.ln();
+            snapshot[d + 1] = (noise - cfg.min_noise).max(1e-12).ln();
+            best = Some((val_rmse, snapshot, epoch));
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if since_best >= cfg.patience {
+                break;
+            }
+        }
+    }
+
+    // Refit the best model at evaluation tolerance.
+    let (_, best_params, best_epoch) = best.expect("at least one epoch must run");
+    let (ls, outputscale, noise) = unpack(&best_params, d, cfg.min_noise);
+    let mut kernel = ArdKernel::new(family, d);
+    kernel.lengthscales = ls;
+    kernel.outputscale = outputscale;
+    let mut eval_cfg = GpConfig::default();
+    eval_cfg.order = cfg.order;
+    eval_cfg.seed = cfg.seed;
+    let model = SimplexGp::fit(x, y, d, kernel, noise, eval_cfg)?;
+    Ok(TrainOutcome {
+        model,
+        records,
+        best_epoch,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Anisotropic target: only the first coordinate matters — ARD
+    /// should discover this.
+    fn ard_problem(n: usize, d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| (1.5 * x[i * d]).sin() + 0.05 * rng.normal())
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn training_improves_validation_rmse() {
+        let d = 2;
+        let (x, y) = ard_problem(400, d, 1);
+        let (xv, yv) = ard_problem(100, d, 2);
+        let mut cfg = TrainConfig::default();
+        cfg.epochs = 15;
+        cfg.probes = 4;
+        cfg.seed = 3;
+        let out = train(&x, &y, &xv, &yv, d, KernelFamily::Rbf, cfg).unwrap();
+        let first = out.records.first().unwrap().val_rmse;
+        let best = out.records[out.best_epoch].val_rmse;
+        assert!(
+            best < first * 0.9 || best < 0.15,
+            "no improvement: first {first}, best {best}"
+        );
+    }
+
+    #[test]
+    fn ard_discovers_relevant_dimension() {
+        let d = 3;
+        let (x, y) = ard_problem(500, d, 4);
+        let (xv, yv) = ard_problem(120, d, 5);
+        let mut cfg = TrainConfig::default();
+        cfg.epochs = 25;
+        cfg.probes = 4;
+        cfg.seed = 6;
+        let out = train(&x, &y, &xv, &yv, d, KernelFamily::Rbf, cfg).unwrap();
+        let ls = &out.model.kernel.lengthscales;
+        // Relevant dim (0) should have a *smaller* lengthscale than the
+        // irrelevant ones.
+        assert!(
+            ls[0] < ls[1] && ls[0] < ls[2],
+            "ARD failed: lengthscales {ls:?}"
+        );
+    }
+
+    #[test]
+    fn rrcg_mode_trains() {
+        let d = 2;
+        let (x, y) = ard_problem(300, d, 7);
+        let (xv, yv) = ard_problem(80, d, 8);
+        let mut cfg = TrainConfig::default();
+        cfg.epochs = 8;
+        cfg.probes = 3;
+        cfg.solve = SolveMode::RrCg {
+            geom_p: 0.1,
+            min_iters: 8,
+        };
+        cfg.seed = 9;
+        let out = train(&x, &y, &xv, &yv, d, KernelFamily::Matern32, cfg).unwrap();
+        let base = rmse(&vec![0.0; yv.len()], &yv);
+        let best = out.records[out.best_epoch].val_rmse;
+        assert!(best < base, "RR-CG training diverged: {best} vs {base}");
+    }
+
+    #[test]
+    fn records_are_complete() {
+        let d = 2;
+        let (x, y) = ard_problem(200, d, 10);
+        let (xv, yv) = ard_problem(50, d, 11);
+        let mut cfg = TrainConfig::default();
+        cfg.epochs = 3;
+        cfg.probes = 2;
+        cfg.track_mll = true;
+        let out = train(&x, &y, &xv, &yv, d, KernelFamily::Rbf, cfg).unwrap();
+        assert_eq!(out.records.len(), 3);
+        for r in &out.records {
+            assert!(r.mll.is_some());
+            assert!(r.val_rmse.is_finite());
+            assert!(r.epoch_secs > 0.0);
+            assert_eq!(r.lengthscales.len(), d);
+        }
+    }
+}

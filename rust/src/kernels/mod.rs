@@ -1,0 +1,306 @@
+//! Stationary covariance kernels with ARD lengthscales.
+//!
+//! Profiles are defined on the *scaled* squared distance r² = ‖(x−x′)/ℓ‖²
+//! so the permutohedral lattice (which embeds scaled inputs) and the
+//! exact MVM share one definition. Each family exposes:
+//!  - `profile(r2)`      — k as a function of squared distance,
+//!  - `profile_deriv(r2)` — dk/d(r²), needed for the Eq. (12)/(13)
+//!    gradient filtering,
+//!  - `spectral_1d(w)`    — the 1-D Fourier transform of the profile
+//!    along a line, used to cross-check the numeric transform in the
+//!    §4.1 stencil spacing search.
+
+/// The kernel families the paper evaluates (Table 5: {Matérn-3/2, RBF});
+/// we add Matérn-1/2 and 5/2 since the stencil machinery is generic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelFamily {
+    Rbf,
+    Matern12,
+    Matern32,
+    Matern52,
+}
+
+impl KernelFamily {
+    pub fn parse(s: &str) -> Option<KernelFamily> {
+        match s.to_ascii_lowercase().as_str() {
+            "rbf" | "gaussian" | "se" => Some(KernelFamily::Rbf),
+            "matern12" | "matern-1/2" | "matern0.5" => Some(KernelFamily::Matern12),
+            "matern32" | "matern-3/2" | "matern1.5" => Some(KernelFamily::Matern32),
+            "matern52" | "matern-5/2" | "matern2.5" => Some(KernelFamily::Matern52),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelFamily::Rbf => "rbf",
+            KernelFamily::Matern12 => "matern12",
+            KernelFamily::Matern32 => "matern32",
+            KernelFamily::Matern52 => "matern52",
+        }
+    }
+
+    /// k(r²) with unit lengthscale and unit outputscale.
+    #[inline]
+    pub fn profile(&self, r2: f64) -> f64 {
+        let r2 = r2.max(0.0);
+        match self {
+            KernelFamily::Rbf => (-0.5 * r2).exp(),
+            KernelFamily::Matern12 => (-r2.sqrt()).exp(),
+            KernelFamily::Matern32 => {
+                let t = (3.0 * r2).sqrt();
+                (1.0 + t) * (-t).exp()
+            }
+            KernelFamily::Matern52 => {
+                let t = (5.0 * r2).sqrt();
+                (1.0 + t + t * t / 3.0) * (-t).exp()
+            }
+        }
+    }
+
+    /// dk/d(r²) — the `k'` of the paper's Eq. (11)–(13).
+    #[inline]
+    pub fn profile_deriv(&self, r2: f64) -> f64 {
+        let r2 = r2.max(1e-30);
+        match self {
+            KernelFamily::Rbf => -0.5 * (-0.5 * r2).exp(),
+            KernelFamily::Matern12 => {
+                // d/dr2 exp(-r) = -exp(-r) / (2r): diverges at r → 0 (the
+                // exponential kernel has a cusp); callers needing k′(0)
+                // (gradient filtering) must reject this family.
+                if r2 <= 1e-20 {
+                    return f64::NEG_INFINITY;
+                }
+                let r = r2.sqrt();
+                -(-r).exp() / (2.0 * r)
+            }
+            KernelFamily::Matern32 => {
+                // k = (1 + t) e^{-t}, t = sqrt(3 r2); dk/dt = -t e^{-t};
+                // dt/dr2 = 3/(2t)  =>  dk/dr2 = -(3/2) e^{-t}.
+                let t = (3.0 * r2).sqrt();
+                -1.5 * (-t).exp()
+            }
+            KernelFamily::Matern52 => {
+                // k = (1 + t + t²/3) e^{-t}, t = sqrt(5 r2);
+                // dk/dt = -(t/3)(1 + t) e^{-t}; dt/dr2 = 5/(2t)
+                // => dk/dr2 = -(5/6)(1 + t) e^{-t}.
+                let t = (5.0 * r2).sqrt();
+                -(5.0 / 6.0) * (1.0 + t) * (-t).exp()
+            }
+        }
+    }
+
+    /// Analytic 1-D Fourier transform F[k](ω) of the profile restricted
+    /// to a line, k(τ) with τ the (unsquared) distance. Un-normalized —
+    /// only ratios of integrals matter in Eq. (9).
+    pub fn spectral_1d(&self, w: f64) -> f64 {
+        match self {
+            // F[e^{-τ²/2}] = √(2π) e^{-ω²/2}
+            KernelFamily::Rbf => (2.0 * std::f64::consts::PI).sqrt() * (-0.5 * w * w).exp(),
+            // F[e^{-|τ|}] = 2 / (1 + ω²)
+            KernelFamily::Matern12 => 2.0 / (1.0 + w * w),
+            // Matérn-ν in 1D: S(ω) ∝ (2ν + ω²)^{-(ν + 1/2)}
+            KernelFamily::Matern32 => {
+                let a = 3.0f64;
+                4.0 * a * a.sqrt() / (a + w * w).powi(2)
+            }
+            KernelFamily::Matern52 => {
+                let a = 5.0f64;
+                (16.0 / 3.0) * a * a * a.sqrt() / (a + w * w).powi(3)
+            }
+        }
+    }
+}
+
+/// ARD stationary kernel: per-dimension lengthscales plus an output
+/// scale; `k(x, x') = s² · profile(Σ_j ((x_j − x'_j)/ℓ_j)²)`.
+#[derive(Clone, Debug)]
+pub struct ArdKernel {
+    pub family: KernelFamily,
+    pub outputscale: f64,
+    pub lengthscales: Vec<f64>,
+}
+
+impl ArdKernel {
+    pub fn new(family: KernelFamily, dim: usize) -> Self {
+        ArdKernel {
+            family,
+            outputscale: 1.0,
+            lengthscales: vec![1.0; dim],
+        }
+    }
+
+    pub fn with_lengthscale(family: KernelFamily, dim: usize, ell: f64) -> Self {
+        ArdKernel {
+            family,
+            outputscale: 1.0,
+            lengthscales: vec![ell; dim],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lengthscales.len()
+    }
+
+    /// Scaled squared distance Σ ((xi−yi)/ℓi)².
+    #[inline]
+    pub fn scaled_r2(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.lengthscales.len());
+        let mut s = 0.0;
+        for j in 0..x.len() {
+            let d = (x[j] - y[j]) / self.lengthscales[j];
+            s += d * d;
+        }
+        s
+    }
+
+    #[inline]
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        self.outputscale * self.family.profile(self.scaled_r2(x, y))
+    }
+
+    /// Scale inputs by 1/ℓ (the lattice operates on scaled inputs).
+    pub fn scale_inputs(&self, x: &[f64], d: usize) -> Vec<f64> {
+        assert_eq!(self.lengthscales.len(), d);
+        let n = x.len() / d;
+        let mut out = Vec::with_capacity(x.len());
+        for i in 0..n {
+            for j in 0..d {
+                out.push(x[i * d + j] / self.lengthscales[j]);
+            }
+        }
+        out
+    }
+
+    /// Dense covariance matrix (tests / small-n baselines).
+    pub fn cov_matrix(&self, x: &[f64], d: usize) -> crate::linalg::Mat {
+        let n = x.len() / d;
+        let mut k = crate::linalg::Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.eval(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+        }
+        k
+    }
+
+    /// Cross-covariance matrix between two point sets.
+    pub fn cross_cov(&self, x: &[f64], y: &[f64], d: usize) -> crate::linalg::Mat {
+        let n = x.len() / d;
+        let m = y.len() / d;
+        let mut k = crate::linalg::Mat::zeros(n, m);
+        for i in 0..n {
+            for j in 0..m {
+                k[(i, j)] =
+                    self.eval(&x[i * d..(i + 1) * d], &y[j * d..(j + 1) * d]);
+            }
+        }
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FAMILIES: [KernelFamily; 4] = [
+        KernelFamily::Rbf,
+        KernelFamily::Matern12,
+        KernelFamily::Matern32,
+        KernelFamily::Matern52,
+    ];
+
+    #[test]
+    fn profile_at_zero_is_one() {
+        for f in FAMILIES {
+            assert!((f.profile(0.0) - 1.0).abs() < 1e-12, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn profile_monotone_decreasing() {
+        for f in FAMILIES {
+            let mut prev = f.profile(0.0);
+            for i in 1..100 {
+                let v = f.profile(i as f64 * 0.1);
+                assert!(v <= prev + 1e-12, "{f:?} not decreasing at {i}");
+                assert!(v >= 0.0);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn deriv_matches_finite_difference() {
+        for f in FAMILIES {
+            for r2 in [0.1, 0.5, 1.0, 4.0, 9.0] {
+                let h = 1e-6;
+                let fd = (f.profile(r2 + h) - f.profile(r2 - h)) / (2.0 * h);
+                let an = f.profile_deriv(r2);
+                assert!(
+                    (fd - an).abs() < 1e-5 * (1.0 + an.abs()),
+                    "{f:?} r2={r2}: fd={fd} an={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_matches_numeric_transform() {
+        // F[k](ω) = ∫ k(τ) e^{-iωτ} dτ = 2 ∫_0^∞ k(τ) cos(ωτ) dτ for even k.
+        for f in FAMILIES {
+            for w in [0.0, 0.5, 1.0, 2.0] {
+                let mut num = 0.0;
+                let dt = 1e-3;
+                let tmax = 60.0;
+                let mut t = dt / 2.0;
+                while t < tmax {
+                    num += 2.0 * f.profile(t * t) * (w * t).cos() * dt;
+                    t += dt;
+                }
+                let an = f.spectral_1d(w);
+                assert!(
+                    (num - an).abs() < 2e-2 * (1.0 + an.abs()),
+                    "{f:?} w={w}: numeric={num} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ard_scaling() {
+        let mut k = ArdKernel::new(KernelFamily::Rbf, 2);
+        k.lengthscales = vec![2.0, 0.5];
+        let x = [0.0, 0.0];
+        let y = [2.0, 0.5];
+        // r2 = (2/2)^2 + (0.5/0.5)^2 = 2.
+        assert!((k.scaled_r2(&x, &y) - 2.0).abs() < 1e-12);
+        assert!((k.eval(&x, &y) - (-1.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cov_matrix_is_symmetric_psd_diag() {
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, 2, 1.5);
+        let x = [0.0, 0.0, 1.0, 0.5, -0.3, 2.0];
+        let c = k.cov_matrix(&x, 2);
+        for i in 0..3 {
+            assert!((c[(i, i)] - 1.0).abs() < 1e-12);
+            for j in 0..3 {
+                assert!((c[(i, j)] - c[(j, i)]).abs() < 1e-14);
+                assert!(c[(i, j)] <= 1.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(KernelFamily::parse("RBF"), Some(KernelFamily::Rbf));
+        assert_eq!(
+            KernelFamily::parse("matern-3/2"),
+            Some(KernelFamily::Matern32)
+        );
+        assert_eq!(KernelFamily::parse("nope"), None);
+    }
+}

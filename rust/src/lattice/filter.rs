@@ -1,0 +1,638 @@
+//! Splat → Blur → Slice filtering on a built lattice, the Eq. (8)
+//! decomposition K ≈ W·K_UU·Wᵀ, plus the Eq. (12)/(13) gradient
+//! filtering that turns ∂L/∂x into one extra multi-channel filter call
+//! with the derivative profile k′.
+//!
+//! Value layout: `(m+1) × nc` row-major with row 0 the reserved null
+//! slot (always zero). Blur runs the d+1 lattice directions
+//! sequentially with double-buffering; each direction is a (2r+1)-tap
+//! stencil over the precomputed dense neighbor ids, parallelized over
+//! lattice points.
+
+use super::PermutohedralLattice;
+use crate::kernels::ArdKernel;
+use crate::stencil::Stencil;
+use crate::util::parallel;
+
+impl PermutohedralLattice {
+    /// Splat: `z = Wᵀ v` for `nc`-channel values `v` (`n × nc`).
+    /// Returns `(m+1) × nc` lattice values with the null row zero.
+    pub fn splat(&self, v: &[f64], nc: usize) -> Vec<f64> {
+        assert_eq!(v.len(), self.n * nc);
+        let dp1 = self.d + 1;
+        let mut z = vec![0.0; (self.m + 1) * nc];
+        // Scatter-add is inherently racy; serial here, sharded in the
+        // multithreaded variant below for large n (perf pass).
+        for i in 0..self.n {
+            for k in 0..dp1 {
+                let id = self.offsets[i * dp1 + k] as usize;
+                if id == 0 {
+                    continue;
+                }
+                let w = self.weights[i * dp1 + k];
+                for c in 0..nc {
+                    z[id * nc + c] += w * v[i * nc + c];
+                }
+            }
+        }
+        z
+    }
+
+    /// Blur in place with explicit taps (length 2r+1 matching the
+    /// lattice's neighbor width). Applies all d+1 directions.
+    pub fn blur(&self, z: &mut Vec<f64>, nc: usize, taps: &[f64]) {
+        let r = self.order();
+        assert_eq!(taps.len(), 2 * r + 1);
+        assert_eq!(z.len(), (self.m + 1) * nc);
+        self.blur_ordered(z, nc, taps, false)
+    }
+
+    /// Blur with an explicit direction order (forward 0..=d or reversed).
+    /// Directional blurs commute only on the infinite lattice; averaging
+    /// the two orders yields an *exactly* symmetric operator (each
+    /// directional blur matrix is symmetric, and (B₀…B_d)ᵀ = B_d…B₀).
+    fn blur_ordered(&self, z: &mut Vec<f64>, nc: usize, taps: &[f64], reversed: bool) {
+        let r = self.order();
+        let m = self.m;
+        let width = 2 * r;
+        let mut buf = vec![0.0; z.len()];
+        let dirs: Vec<usize> = if reversed {
+            (0..=self.d).rev().collect()
+        } else {
+            (0..=self.d).collect()
+        };
+        for j in dirs {
+            let nbr = &self.neighbors[j * m * width..(j + 1) * m * width];
+            {
+                let src = &z[..];
+                // Null row stays zero — and because row 0 holds zeros by
+                // construction, missing neighbors (id 0) can be gathered
+                // unconditionally: the branchless inner loops below are
+                // the MVM's hottest code (perf pass, EXPERIMENTS.md §Perf).
+                let out = &mut buf[nc..];
+                if r == 1 && nc == 1 {
+                    // Specialized 3-tap single-channel path.
+                    let (t_l, t_c, t_r) = (taps[0], taps[1], taps[2]);
+                    parallel::par_fill(out, |range, chunk| {
+                        for (k, p) in range.enumerate() {
+                            let n_l = nbr[2 * p] as usize;
+                            let n_r = nbr[2 * p + 1] as usize;
+                            chunk[k] = t_c * src[p + 1]
+                                + t_l * src[n_l]
+                                + t_r * src[n_r];
+                        }
+                    });
+                } else if r == 1 {
+                    // 3-tap multi-channel path.
+                    let (t_l, t_c, t_r) = (taps[0], taps[1], taps[2]);
+                    parallel::par_fill(out, |range, chunk| {
+                        let p0 = range.start / nc;
+                        let p1 = (range.end + nc - 1) / nc;
+                        for p in p0..p1 {
+                            let local = (p - p0) * nc;
+                            let n_l = nbr[2 * p] as usize * nc;
+                            let n_r = nbr[2 * p + 1] as usize * nc;
+                            let c_row = (p + 1) * nc;
+                            for c in 0..nc {
+                                chunk[local + c] = t_c * src[c_row + c]
+                                    + t_l * src[n_l + c]
+                                    + t_r * src[n_r + c];
+                            }
+                        }
+                    });
+                } else {
+                    parallel::par_fill(out, |range, chunk| {
+                        // range is over the flat (m × nc) output slice.
+                        let p0 = range.start / nc;
+                        let p1 = (range.end + nc - 1) / nc;
+                        debug_assert_eq!(range.start % nc, 0);
+                        for p in p0..p1 {
+                            let local = (p - p0) * nc;
+                            let center = taps[r];
+                            let srow = &src[(p + 1) * nc..(p + 2) * nc];
+                            for c in 0..nc {
+                                chunk[local + c] = center * srow[c];
+                            }
+                            let nrow = &nbr[p * width..(p + 1) * width];
+                            for t in 1..=r {
+                                // Slots r-t (−t step) and r+t-1 (+t step).
+                                for (slot, tap) in
+                                    [(r - t, taps[r - t]), (r + t - 1, taps[r + t])]
+                                {
+                                    let id = nrow[slot] as usize;
+                                    let srow = &src[id * nc..(id + 1) * nc];
+                                    for c in 0..nc {
+                                        chunk[local + c] += tap * srow[c];
+                                    }
+                                }
+                            }
+                        }
+                    });
+                }
+            }
+            buf[..nc].fill(0.0);
+            std::mem::swap(z, &mut buf);
+        }
+    }
+
+    /// Slice: `u = W z` back at the training inputs (`n × nc`).
+    pub fn slice(&self, z: &[f64], nc: usize) -> Vec<f64> {
+        self.slice_at(&self.offsets, &self.weights, z, nc)
+    }
+
+    /// Slice at arbitrary interpolation rows (e.g. test points embedded
+    /// with [`PermutohedralLattice::embed_only`]).
+    pub fn slice_at(
+        &self,
+        offsets: &[u32],
+        weights: &[f64],
+        z: &[f64],
+        nc: usize,
+    ) -> Vec<f64> {
+        let dp1 = self.d + 1;
+        assert_eq!(offsets.len() % dp1, 0);
+        assert_eq!(offsets.len(), weights.len());
+        assert_eq!(z.len(), (self.m + 1) * nc);
+        let n_out = offsets.len() / dp1;
+        let mut out = vec![0.0; n_out * nc];
+        parallel::par_fill(&mut out, |range, chunk| {
+            let i0 = range.start / nc;
+            let i1 = (range.end + nc - 1) / nc;
+            for i in i0..i1 {
+                let local = (i - i0) * nc;
+                for k in 0..dp1 {
+                    let id = offsets[i * dp1 + k] as usize;
+                    if id == 0 {
+                        continue;
+                    }
+                    let w = weights[i * dp1 + k];
+                    for c in 0..nc {
+                        chunk[local + c] += w * z[id * nc + c];
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Full filtering `u = W·B·Wᵀ v` with the lattice's own stencil —
+    /// the approximate kernel MVM `K_XX v` (unit outputscale).
+    pub fn filter(&self, v: &[f64], nc: usize) -> Vec<f64> {
+        let taps = self.stencil.taps.clone();
+        self.filter_with_taps(v, nc, &taps)
+    }
+
+    /// Filtering with explicit taps (the k′ path of §4.2 reuses the
+    /// lattice geometry but blurs with the derivative profile).
+    pub fn filter_with_taps(&self, v: &[f64], nc: usize, taps: &[f64]) -> Vec<f64> {
+        let mut z = self.splat(v, nc);
+        self.blur(&mut z, nc, taps);
+        self.slice(&z, nc)
+    }
+
+    /// Exactly-symmetric filtering: averages the forward and reversed
+    /// blur direction orders, ½·W(B₀…B_d + B_d…B₀)Wᵀ. Twice the blur
+    /// cost; used by the CG training path where operator symmetry keeps
+    /// the Krylov recurrences honest.
+    pub fn filter_symmetric(&self, v: &[f64], nc: usize) -> Vec<f64> {
+        let taps = self.stencil.taps.clone();
+        let z0 = self.splat(v, nc);
+        let mut fwd = z0.clone();
+        self.blur_ordered(&mut fwd, nc, &taps, false);
+        let mut rev = z0;
+        self.blur_ordered(&mut rev, nc, &taps, true);
+        for (a, b) in fwd.iter_mut().zip(&rev) {
+            *a = 0.5 * (*a + *b);
+        }
+        self.slice(&fwd, nc)
+    }
+
+    /// Single-channel symmetric MVM.
+    pub fn mvm_symmetric(&self, v: &[f64]) -> Vec<f64> {
+        self.filter_symmetric(v, 1)
+    }
+
+    /// Single-channel kernel MVM (no noise, unit outputscale).
+    pub fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        self.filter(v, 1)
+    }
+
+    /// Derivative stencil for the §4.2 gradient path, on the *same*
+    /// spacing as the lattice (both filters must share one geometry).
+    ///
+    /// The per-direction blurs compose multiplicatively over the d+1
+    /// lattice directions, so filtering directly with taps k′((i·s)²)
+    /// would raise the amplitude k′(0) to the (d+1)-th power. Instead we
+    /// factor k′(τ²) = k′(0)·ψ(τ) with ψ(0) = 1, blur with taps ψ(i·s)
+    /// and return the scalar k′(0) for the caller to apply once.
+    /// Requires k′(0) finite — true for RBF and Matérn-3/2, 5/2 (the
+    /// families the paper trains with); Matérn-1/2 has a cusp at 0 and
+    /// is rejected.
+    pub fn deriv_taps(&self) -> (Vec<f64>, f64) {
+        let r = self.order();
+        let s = self.stencil.spacing;
+        let k0 = self.stencil.family.profile_deriv(0.0);
+        assert!(
+            k0.is_finite() && k0 != 0.0,
+            "kernel family {:?} has no finite derivative at 0 (cusp); \
+             use finite differences for hyperparameter gradients",
+            self.stencil.family
+        );
+        let taps = (0..=2 * r)
+            .map(|j| {
+                let i = j as f64 - r as f64;
+                self.stencil.family.profile_deriv((i * s) * (i * s)) / k0
+            })
+            .collect();
+        (taps, k0)
+    }
+
+    /// Eq. (12)/(13): gradient of a bilinear form `L = gᵀ K v` with
+    /// respect to the *lengthscale-scaled* inputs x̃ (`n × d`,
+    /// `x̃ = x / ℓ`). Computed with a single 2(d+1)-channel filtering by
+    /// the derivative profile k′ on the stack
+    /// `V = [x̃ ⊙ g, g, x̃ ⊙ v, v]`.
+    pub fn grad_scaled_inputs(
+        &self,
+        g: &[f64],
+        v: &[f64],
+        x_scaled: &[f64],
+    ) -> Vec<f64> {
+        let (n, d) = (self.n, self.d);
+        assert_eq!(g.len(), n);
+        assert_eq!(v.len(), n);
+        assert_eq!(x_scaled.len(), n * d);
+        let nc = 2 * d + 2;
+        // Channel layout per point: [x̃⊙g (d), g, x̃⊙v (d), v].
+        let mut stack = vec![0.0; n * nc];
+        for i in 0..n {
+            let row = &x_scaled[i * d..(i + 1) * d];
+            let base = i * nc;
+            for j in 0..d {
+                stack[base + j] = row[j] * g[i];
+                stack[base + d + 1 + j] = row[j] * v[i];
+            }
+            stack[base + d] = g[i];
+            stack[base + 2 * d + 1] = v[i];
+        }
+        let (taps, k0) = self.deriv_taps();
+        let f = self.filter_with_taps(&stack, nc, &taps);
+        // Combine with A = K'(x̃⊙g), B = K'g, C = K'(x̃⊙v), D = K'v (K'
+        // is the normalized derivative filter rescaled by k′(0)):
+        //
+        //   ∂L/∂x̃_n = 2[ v_n x̃_n·B_n − v_n·A_n + g_n x̃_n·D_n − g_n·C_n ]
+        //
+        // NOTE: this is the *negative* of Eq. (12) as printed in the
+        // paper — re-deriving the Jacobian-vector product from Eq. (11)
+        // (and checking against finite differences of the exact kernel,
+        // see `gradient_matches_finite_difference`) shows the printed
+        // equation has its signs flipped.
+        let mut grad = vec![0.0; n * d];
+        for i in 0..n {
+            let base = i * nc;
+            let b_n = f[base + d];
+            let d_n = f[base + 2 * d + 1];
+            for j in 0..d {
+                let a_nj = f[base + j];
+                let c_nj = f[base + d + 1 + j];
+                let xnj = x_scaled[i * d + j];
+                grad[i * d + j] = 2.0
+                    * k0
+                    * (v[i] * xnj * b_n - v[i] * a_nj + g[i] * xnj * d_n
+                        - g[i] * c_nj);
+            }
+        }
+        grad
+    }
+
+    /// Gradient of `L = gᵀ K v` with respect to the ARD lengthscales,
+    /// via the chain rule through x̃ = x/ℓ: ∂L/∂ℓ_j = Σ_n ∂L/∂x̃_nj ·
+    /// (−x_nj/ℓ_j²).
+    pub fn grad_lengthscales(
+        &self,
+        g: &[f64],
+        v: &[f64],
+        x: &[f64],
+        kernel: &ArdKernel,
+    ) -> Vec<f64> {
+        let (n, d) = (self.n, self.d);
+        assert_eq!(x.len(), n * d);
+        let x_scaled: Vec<f64> = (0..n * d)
+            .map(|i| x[i] / kernel.lengthscales[i % d])
+            .collect();
+        let gx = self.grad_scaled_inputs(g, v, &x_scaled);
+        let mut gl = vec![0.0; d];
+        for i in 0..n {
+            for j in 0..d {
+                gl[j] += gx[i * d + j]
+                    * (-x[i * d + j] / (kernel.lengthscales[j] * kernel.lengthscales[j]));
+            }
+        }
+        gl
+    }
+
+    /// Measure the worst-case relative asymmetry |⟨u,Kv⟩−⟨v,Ku⟩|/(‖·‖)
+    /// over random probes — the sequential directional blur is exactly
+    /// symmetric only on the infinite lattice (boundary truncation
+    /// breaks commutativity; Adams et al. and the paper both accept
+    /// this second-order effect).
+    pub fn asymmetry_probe(&self, seed: u64, probes: usize) -> f64 {
+        let mut rng = crate::util::Pcg64::new(seed);
+        let mut worst: f64 = 0.0;
+        for _ in 0..probes {
+            let u = rng.normal_vec(self.n);
+            let v = rng.normal_vec(self.n);
+            let ku = self.mvm(&u);
+            let kv = self.mvm(&v);
+            let a = crate::util::stats::dot(&u, &kv);
+            let b = crate::util::stats::dot(&v, &ku);
+            let denom = a.abs().max(b.abs()).max(1e-12);
+            worst = worst.max((a - b).abs() / denom);
+        }
+        worst
+    }
+}
+
+/// Build a lattice and return the dense MVM matrix it realizes (test and
+/// Fig.4-style diagnostics; O(n²) — small n only).
+pub fn materialize_mvm_matrix(lat: &PermutohedralLattice) -> crate::linalg::Mat {
+    let n = lat.n;
+    let mut k = crate::linalg::Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = lat.mvm(&e);
+        for i in 0..n {
+            k[(i, j)] = col[i];
+        }
+        e[j] = 0.0;
+    }
+    k
+}
+
+/// Reference O(n²) exact MVM for a kernel (tests/benches).
+pub fn exact_mvm(kernel: &ArdKernel, x: &[f64], d: usize, v: &[f64]) -> Vec<f64> {
+    let n = x.len() / d;
+    assert_eq!(v.len(), n);
+    let mut out = vec![0.0; n];
+    parallel::par_fill(&mut out, |range, chunk| {
+        for (k, i) in range.enumerate() {
+            let xi = &x[i * d..(i + 1) * d];
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += kernel.eval(xi, &x[j * d..(j + 1) * d]) * v[j];
+            }
+            chunk[k] = acc;
+        }
+    });
+    out
+}
+
+/// Build a stencil for a family/order pair and immediately construct the
+/// lattice — convenience used by benches.
+pub fn build_lattice(
+    x: &[f64],
+    d: usize,
+    kernel: &ArdKernel,
+    order: usize,
+) -> PermutohedralLattice {
+    PermutohedralLattice::build_with_stencil(
+        x,
+        d,
+        kernel,
+        Stencil::build(kernel.family, order),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{ArdKernel, KernelFamily};
+    use crate::util::stats::{cosine_error, dot};
+    use crate::util::Pcg64;
+
+    fn random_points(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        rng.normal_vec(n * d)
+    }
+
+    #[test]
+    fn splat_slice_adjointness() {
+        // ⟨Wᵀv, z⟩ == ⟨v, Wz⟩ for random v, z: splat and slice are exact
+        // transposes by construction.
+        let d = 4;
+        let x = random_points(80, d, 1);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let mut rng = Pcg64::new(2);
+        let v = rng.normal_vec(lat.n);
+        let z = rng.normal_vec(lat.m + 1);
+        let wv = lat.splat(&v, 1);
+        let wz = lat.slice(&z, 1);
+        let lhs = dot(&wv, &z);
+        let rhs = dot(&v, &wz);
+        assert!((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn splat_conserves_mass() {
+        let d = 3;
+        let x = random_points(60, d, 3);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let v = vec![1.0; lat.n];
+        let z = lat.splat(&v, 1);
+        let total: f64 = z.iter().sum();
+        // Barycentric rows sum to 1 ⇒ total mass preserved.
+        assert!((total - lat.n as f64).abs() < 1e-9);
+        assert_eq!(z[0], 0.0, "null slot untouched");
+    }
+
+    #[test]
+    fn mvm_close_to_exact_rbf() {
+        // The headline correctness property (paper Fig. 4): cosine error
+        // of the lattice MVM vs the exact kernel MVM is small.
+        for d in [2usize, 3, 5] {
+            let n = 150;
+            let x = random_points(n, d, 10 + d as u64);
+            let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+            let lat = PermutohedralLattice::build(&x, d, &k, 1);
+            let mut rng = Pcg64::new(20);
+            let v = rng.normal_vec(n);
+            let approx = lat.mvm(&v);
+            let exact = exact_mvm(&k, &x, d, &v);
+            let err = cosine_error(&approx, &exact);
+            assert!(err < 0.05, "d={d}: cosine error {err}");
+        }
+    }
+
+    #[test]
+    fn mvm_close_to_exact_matern() {
+        let d = 3;
+        let n = 150;
+        let x = random_points(n, d, 31);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 1.2);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let mut rng = Pcg64::new(32);
+        let v = rng.normal_vec(n);
+        let approx = lat.mvm(&v);
+        let exact = exact_mvm(&k, &x, d, &v);
+        let err = cosine_error(&approx, &exact);
+        assert!(err < 0.08, "matern cosine error {err}");
+    }
+
+    #[test]
+    fn higher_order_not_much_worse() {
+        // Fig. 4 note: increasing r does not always reduce error, but it
+        // should stay in the same ballpark.
+        let d = 3;
+        let n = 120;
+        let x = random_points(n, d, 40);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let mut rng = Pcg64::new(41);
+        let v = rng.normal_vec(n);
+        let exact = exact_mvm(&k, &x, d, &v);
+        for r in [1usize, 2, 3] {
+            let lat = PermutohedralLattice::build(&x, d, &k, r);
+            let err = cosine_error(&lat.mvm(&v), &exact);
+            assert!(err < 0.1, "r={r}: err={err}");
+        }
+    }
+
+    #[test]
+    fn filter_linear_in_v() {
+        let d = 2;
+        let x = random_points(50, d, 50);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let mut rng = Pcg64::new(51);
+        let a = rng.normal_vec(50);
+        let b = rng.normal_vec(50);
+        let combo: Vec<f64> = a.iter().zip(&b).map(|(x, y)| 2.0 * x - 3.0 * y).collect();
+        let fa = lat.mvm(&a);
+        let fb = lat.mvm(&b);
+        let fc = lat.mvm(&combo);
+        for i in 0..50 {
+            let expect = 2.0 * fa[i] - 3.0 * fb[i];
+            assert!((fc[i] - expect).abs() < 1e-9 * (1.0 + expect.abs()));
+        }
+    }
+
+    #[test]
+    fn multichannel_matches_stacked_single() {
+        let d = 3;
+        let x = random_points(40, d, 60);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.9);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let mut rng = Pcg64::new(61);
+        let v0 = rng.normal_vec(40);
+        let v1 = rng.normal_vec(40);
+        let mut stacked = vec![0.0; 80];
+        for i in 0..40 {
+            stacked[2 * i] = v0[i];
+            stacked[2 * i + 1] = v1[i];
+        }
+        let f = lat.filter(&stacked, 2);
+        let f0 = lat.mvm(&v0);
+        let f1 = lat.mvm(&v1);
+        for i in 0..40 {
+            assert!((f[2 * i] - f0[i]).abs() < 1e-10);
+            assert!((f[2 * i + 1] - f1[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn asymmetry_is_second_order() {
+        let d = 3;
+        let x = random_points(200, d, 70);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        // Plain sequential blur: asymmetric only through boundary
+        // truncation; keep it bounded.
+        let asym = lat.asymmetry_probe(71, 5);
+        assert!(asym < 0.2, "blur asymmetry unexpectedly large: {asym}");
+        // The symmetrized operator must be exact to rounding.
+        let mut rng = Pcg64::new(72);
+        let u = rng.normal_vec(lat.n);
+        let v = rng.normal_vec(lat.n);
+        let ku = lat.mvm_symmetric(&u);
+        let kv = lat.mvm_symmetric(&v);
+        let a = dot(&u, &kv);
+        let b = dot(&v, &ku);
+        assert!(
+            (a - b).abs() < 1e-10 * (1.0 + a.abs()),
+            "symmetrized operator not symmetric: {a} vs {b}"
+        );
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // ∂(gᵀKv)/∂x̃ via Eq. 12/13 filtering vs central differences of
+        // the *exact* kernel bilinear form. The lattice gradient is an
+        // approximation of the exact gradient, so compare directionally
+        // (cosine) rather than element-wise.
+        let d = 2;
+        let n = 60;
+        let x = random_points(n, d, 80);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let mut rng = Pcg64::new(81);
+        let g = rng.normal_vec(n);
+        let v = rng.normal_vec(n);
+        // x̃ = x since ℓ = 1.
+        let lat = PermutohedralLattice::build(&x, d, &k, 2);
+        let grad = lat.grad_scaled_inputs(&g, &v, &x);
+        // Exact finite-difference gradient of gᵀ K(x) v.
+        let mut fd = vec![0.0; n * d];
+        let h = 1e-5;
+        let bilinear = |xs: &[f64]| -> f64 {
+            let kv = exact_mvm(&k, xs, d, &v);
+            dot(&g, &kv)
+        };
+        let mut xs = x.clone();
+        for idx in 0..n * d {
+            xs[idx] += h;
+            let up = bilinear(&xs);
+            xs[idx] -= 2.0 * h;
+            let down = bilinear(&xs);
+            xs[idx] += h;
+            fd[idx] = (up - down) / (2.0 * h);
+        }
+        let err = cosine_error(&grad, &fd);
+        assert!(err < 0.15, "gradient cosine error {err}");
+    }
+
+    #[test]
+    fn lengthscale_gradient_sign() {
+        // For a cloud with mostly positive v=g, increasing ℓ increases
+        // all kernel entries ⇒ ∂(gᵀKv)/∂ℓ > 0. Check the filtered
+        // gradient has the right sign.
+        let d = 2;
+        let n = 80;
+        let x = random_points(n, d, 90);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let v = vec![1.0; n];
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let gl = lat.grad_lengthscales(&v, &v, &x, &k);
+        for j in 0..d {
+            assert!(gl[j] > 0.0, "lengthscale grad {j} = {}", gl[j]);
+        }
+    }
+
+    #[test]
+    fn materialized_matrix_has_unit_scale_diag() {
+        let d = 2;
+        let x = random_points(40, d, 100);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let km = materialize_mvm_matrix(&lat);
+        // SKI-style interpolation smooths the diagonal below k(0)=1
+        // (barycentric rows mix neighboring vertices); it must stay
+        // positive, bounded by 1, and roughly uniform across points.
+        let diags: Vec<f64> = (0..40).map(|i| km[(i, i)]).collect();
+        for (i, &v) in diags.iter().enumerate() {
+            assert!(v > 0.4 && v < 1.05, "diag {i} = {v} out of range");
+        }
+        let spread = crate::util::stats::std(&diags);
+        assert!(spread < 0.15, "diagonal too nonuniform: std={spread}");
+    }
+}

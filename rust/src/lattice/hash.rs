@@ -1,0 +1,181 @@
+//! Open-addressing hash table from lattice-point keys to dense indices.
+//!
+//! Keys are the first `d` integer coordinates of a remainder-0 point of
+//! the permutohedral lattice A*_d embedded in R^{d+1} (the last
+//! coordinate is redundant: coordinates sum to zero). The table is the
+//! only irregular data structure on the build path; lookups during blur
+//! are resolved once into dense neighbor index arrays, so the request
+//! path never touches it (TPU-friendly, see DESIGN.md
+//! §Hardware-Adaptation).
+
+/// Maps `d`-int keys to `u32` ids, assigning ids densely in insertion
+/// order starting at 1 (id 0 is the caller's reserved null slot).
+pub struct KeyTable {
+    d: usize,
+    /// Flat storage of inserted keys, `d` ints per entry, entry `i`
+    /// (0-based) holds the key of id `i+1`.
+    keys: Vec<i32>,
+    /// Open-addressing slots: 0 = empty, else id.
+    slots: Vec<u32>,
+    mask: usize,
+    len: usize,
+}
+
+impl KeyTable {
+    /// `capacity_hint`: expected number of distinct keys.
+    pub fn new(d: usize, capacity_hint: usize) -> Self {
+        let cap = (capacity_hint.max(16) * 2).next_power_of_two();
+        KeyTable {
+            d,
+            keys: Vec::with_capacity(capacity_hint * d),
+            slots: vec![0; cap],
+            mask: cap - 1,
+            len: 0,
+        }
+    }
+
+    /// Number of distinct keys inserted.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Key of id `id` (1-based).
+    #[inline]
+    pub fn key(&self, id: u32) -> &[i32] {
+        let i = (id - 1) as usize;
+        &self.keys[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Bytes used by key storage + slot array (Fig. 5 accounting).
+    pub fn storage_bytes(&self) -> usize {
+        self.keys.capacity() * std::mem::size_of::<i32>()
+            + self.slots.len() * std::mem::size_of::<u32>()
+    }
+
+    #[inline]
+    fn hash(key: &[i32]) -> u64 {
+        // FxHash-style multiply-xor over the key ints: fast and well
+        // distributed for the small-magnitude lattice coordinates.
+        let mut h: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+        for &k in key {
+            h = (h ^ (k as u32 as u64)).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            h ^= h >> 29;
+        }
+        h
+    }
+
+    /// Look up `key`, inserting it with the next id if absent.
+    pub fn get_or_insert(&mut self, key: &[i32]) -> u32 {
+        debug_assert_eq!(key.len(), self.d);
+        if (self.len + 1) * 2 > self.slots.len() {
+            self.grow();
+        }
+        let mut pos = (Self::hash(key) as usize) & self.mask;
+        loop {
+            let id = self.slots[pos];
+            if id == 0 {
+                // Insert.
+                self.keys.extend_from_slice(key);
+                self.len += 1;
+                let new_id = self.len as u32;
+                self.slots[pos] = new_id;
+                return new_id;
+            }
+            if self.key(id) == key {
+                return id;
+            }
+            pos = (pos + 1) & self.mask;
+        }
+    }
+
+    /// Look up `key` without inserting; 0 if absent.
+    pub fn get(&self, key: &[i32]) -> u32 {
+        debug_assert_eq!(key.len(), self.d);
+        let mut pos = (Self::hash(key) as usize) & self.mask;
+        loop {
+            let id = self.slots[pos];
+            if id == 0 {
+                return 0;
+            }
+            if self.key(id) == key {
+                return id;
+            }
+            pos = (pos + 1) & self.mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.slots.len() * 2;
+        let mut slots = vec![0u32; new_cap];
+        let mask = new_cap - 1;
+        for id in 1..=self.len as u32 {
+            let mut pos = (Self::hash(self.key(id)) as usize) & mask;
+            while slots[pos] != 0 {
+                pos = (pos + 1) & mask;
+            }
+            slots[pos] = id;
+        }
+        self.slots = slots;
+        self.mask = mask;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn insert_then_get() {
+        let mut t = KeyTable::new(3, 4);
+        let a = t.get_or_insert(&[1, 2, -3]);
+        let b = t.get_or_insert(&[0, 0, 0]);
+        let a2 = t.get_or_insert(&[1, 2, -3]);
+        assert_eq!(a, 1);
+        assert_eq!(b, 2);
+        assert_eq!(a2, a);
+        assert_eq!(t.get(&[1, 2, -3]), a);
+        assert_eq!(t.get(&[9, 9, 9]), 0);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.key(a), &[1, 2, -3]);
+    }
+
+    #[test]
+    fn survives_growth_with_many_keys() {
+        let mut t = KeyTable::new(2, 4);
+        let mut rng = Pcg64::new(1);
+        let mut inserted: Vec<([i32; 2], u32)> = Vec::new();
+        for _ in 0..5000 {
+            let key = [
+                rng.below(2000) as i32 - 1000,
+                rng.below(2000) as i32 - 1000,
+            ];
+            let id = t.get_or_insert(&key);
+            inserted.push((key, id));
+        }
+        for (key, id) in &inserted {
+            assert_eq!(t.get(key), *id, "key {key:?} lost after growth");
+        }
+    }
+
+    #[test]
+    fn ids_dense_from_one() {
+        let mut t = KeyTable::new(1, 2);
+        for i in 0..100i32 {
+            let id = t.get_or_insert(&[i]);
+            assert_eq!(id as i32, i + 1);
+        }
+    }
+
+    #[test]
+    fn negative_coords_hash_distinctly() {
+        let mut t = KeyTable::new(2, 4);
+        let a = t.get_or_insert(&[-1, 1]);
+        let b = t.get_or_insert(&[1, -1]);
+        assert_ne!(a, b);
+    }
+}

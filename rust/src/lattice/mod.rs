@@ -1,0 +1,513 @@
+//! The permutohedral lattice (Adams, Baek & Davis 2010) adapted to
+//! kernel interpolation, per §3.2/§4 of the paper.
+//!
+//! Pipeline: inputs are scaled by the ARD lengthscales, multiplied by the
+//! embedding scale α = (d+1)/s (see [`crate::stencil`] for the
+//! derivation), elevated isometrically onto the hyperplane
+//! H_d = {y ∈ R^{d+1} : Σy = 0}, and rounded to their enclosing simplex
+//! of the A*_d lattice. Each input then holds barycentric weights over
+//! its d+1 enclosing vertices — the sparse rows of the SKI interpolation
+//! matrix W_X. MVMs are Splat (Wᵀ), Blur (K_UU), Slice (W).
+
+pub mod filter;
+pub mod hash;
+
+use crate::kernels::ArdKernel;
+use crate::stencil::Stencil;
+use hash::KeyTable;
+
+/// A built lattice: the SKI structure for one (X, kernel, order) triple.
+///
+/// Lattice point ids are 1-based; id 0 is a reserved null slot whose
+/// value is pinned to zero, which makes missing blur neighbors and
+/// padding (PJRT bucket shapes) safe by construction.
+pub struct PermutohedralLattice {
+    /// Input dimensionality.
+    pub d: usize,
+    /// Number of embedded inputs.
+    pub n: usize,
+    /// Number of lattice points (excluding the null slot).
+    pub m: usize,
+    /// Blur stencil (taps of the discretized kernel profile).
+    pub stencil: Stencil,
+    /// `n × (d+1)` lattice-point ids enclosing each input.
+    pub offsets: Vec<u32>,
+    /// `n × (d+1)` barycentric weights (each row sums to 1).
+    pub weights: Vec<f64>,
+    /// Blur adjacency: `(d+1) · m · 2r` ids; for direction `j`, point
+    /// `p` (0-based dense index = id-1), slot layout is
+    /// `[-r..-1, +1..+r]` neighbors. 0 = absent (null slot).
+    pub neighbors: Vec<u32>,
+    /// Key table (kept for diagnostics and re-splatting test points).
+    table: KeyTable,
+    /// Embedding scale α applied to lengthscale-normalized inputs.
+    pub alpha: f64,
+}
+
+/// Scratch for embedding one point (avoids per-point allocation).
+struct EmbedScratch {
+    elevated: Vec<f64>,
+    rem0: Vec<i32>,
+    rank: Vec<usize>,
+    bary: Vec<f64>,
+    key: Vec<i32>,
+}
+
+impl EmbedScratch {
+    fn new(d: usize) -> Self {
+        EmbedScratch {
+            elevated: vec![0.0; d + 1],
+            rem0: vec![0; d + 1],
+            rank: vec![0; d + 1],
+            bary: vec![0.0; d + 2],
+            key: vec![0; d],
+        }
+    }
+}
+
+impl PermutohedralLattice {
+    /// Build the lattice for `n` points `x` (row-major `n × d`), scaled
+    /// by the kernel's ARD lengthscales, with blur order `r` (the
+    /// paper's default is r = 1, Table 5).
+    pub fn build(x: &[f64], d: usize, kernel: &ArdKernel, order: usize) -> Self {
+        let stencil = Stencil::build(kernel.family, order);
+        Self::build_with_stencil(x, d, kernel, stencil)
+    }
+
+    /// Build with an explicit stencil (ablations; also lets the
+    /// gradient path reuse the geometry while filtering with k′).
+    pub fn build_with_stencil(
+        x: &[f64],
+        d: usize,
+        kernel: &ArdKernel,
+        stencil: Stencil,
+    ) -> Self {
+        assert!(d >= 1, "d must be >= 1");
+        assert_eq!(x.len() % d, 0, "x length not a multiple of d");
+        let n = x.len() / d;
+        let alpha = (d as f64 + 1.0) / stencil.spacing;
+
+        let scale_factors = elevation_scale_factors(d);
+        let mut table = KeyTable::new(d, n.min(1 << 20));
+        let mut offsets = vec![0u32; n * (d + 1)];
+        let mut weights = vec![0.0; n * (d + 1)];
+        let mut scratch = EmbedScratch::new(d);
+        let mut scaled = vec![0.0; d];
+
+        for i in 0..n {
+            // ARD scaling + embedding scale.
+            let row = &x[i * d..(i + 1) * d];
+            for j in 0..d {
+                scaled[j] = row[j] / kernel.lengthscales[j] * alpha;
+            }
+            embed_point(&scaled, &scale_factors, &mut scratch);
+            // Insert the d+1 enclosing vertices.
+            for k in 0..=d {
+                vertex_key(&scratch.rem0, &scratch.rank, d, k, &mut scratch.key);
+                let id = table.get_or_insert(&scratch.key);
+                offsets[i * (d + 1) + k] = id;
+                weights[i * (d + 1) + k] = scratch.bary[k];
+            }
+        }
+
+        let m = table.len();
+        let neighbors = build_neighbors(&table, d, m, stencil.order);
+
+        PermutohedralLattice {
+            d,
+            n,
+            m,
+            stencil,
+            offsets,
+            weights,
+            neighbors,
+            table,
+            alpha,
+        }
+    }
+
+    /// Assemble a lattice directly from its dense arrays (runtime parity
+    /// tests and PJRT golden replay). The key table is left empty, so
+    /// [`PermutohedralLattice::embed_only`] is unavailable on such a
+    /// lattice — filtering (`splat`/`blur`/`slice`/`mvm`) only touches
+    /// the dense arrays and works fully.
+    pub fn from_raw_parts(
+        d: usize,
+        n: usize,
+        m: usize,
+        stencil: Stencil,
+        offsets: Vec<u32>,
+        weights: Vec<f64>,
+        neighbors: Vec<u32>,
+    ) -> Self {
+        assert_eq!(offsets.len(), n * (d + 1));
+        assert_eq!(weights.len(), n * (d + 1));
+        assert_eq!(neighbors.len(), (d + 1) * m * 2 * stencil.order);
+        let alpha = (d as f64 + 1.0) / stencil.spacing;
+        PermutohedralLattice {
+            d,
+            n,
+            m,
+            stencil,
+            offsets,
+            weights,
+            neighbors,
+            table: KeyTable::new(d, 1),
+            alpha,
+        }
+    }
+
+    /// Blur order r.
+    pub fn order(&self) -> usize {
+        self.stencil.order
+    }
+
+    /// Sparsity ratio m / L with L = n·(d+1) — Table 3 of the paper.
+    pub fn sparsity_ratio(&self) -> f64 {
+        self.m as f64 / (self.n as f64 * (self.d as f64 + 1.0))
+    }
+
+    /// Bytes held by the lattice structure (Fig. 5 accounting).
+    pub fn storage_bytes(&self) -> usize {
+        self.offsets.capacity() * 4
+            + self.weights.capacity() * 8
+            + self.neighbors.capacity() * 4
+            + self.table.storage_bytes()
+    }
+
+    /// Embed extra points (e.g. test inputs for prediction) onto the
+    /// *existing* lattice: returns (offsets, weights) rows; vertices that
+    /// were never created by training points map to the null slot 0 and
+    /// contribute nothing (consistent with SKI: W_{X*} rows over U).
+    pub fn embed_only(&self, x: &[f64], kernel: &ArdKernel) -> (Vec<u32>, Vec<f64>) {
+        let d = self.d;
+        assert_eq!(x.len() % d, 0);
+        let n = x.len() / d;
+        let scale_factors = elevation_scale_factors(d);
+        let mut offsets = vec![0u32; n * (d + 1)];
+        let mut weights = vec![0.0; n * (d + 1)];
+        let mut scratch = EmbedScratch::new(d);
+        let mut scaled = vec![0.0; d];
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            for j in 0..d {
+                scaled[j] = row[j] / kernel.lengthscales[j] * self.alpha;
+            }
+            embed_point(&scaled, &scale_factors, &mut scratch);
+            for k in 0..=d {
+                vertex_key(&scratch.rem0, &scratch.rank, d, k, &mut scratch.key);
+                let id = self.table.get(&scratch.key);
+                offsets[i * (d + 1) + k] = id;
+                weights[i * (d + 1) + k] = if id == 0 { 0.0 } else { scratch.bary[k] };
+            }
+        }
+        (offsets, weights)
+    }
+}
+
+/// Orthonormal-columns elevation scale factors: 1/√((i+1)(i+2)).
+pub fn elevation_scale_factors(d: usize) -> Vec<f64> {
+    (0..d)
+        .map(|i| 1.0 / (((i + 1) * (i + 2)) as f64).sqrt())
+        .collect()
+}
+
+/// Elevate `z ∈ R^d` onto the hyperplane H_d ⊂ R^{d+1} using the
+/// triangular basis (O(d), exact isometry: ‖E z‖ = ‖z‖, Σ(E z) = 0),
+/// then round to the enclosing simplex and compute barycentric weights.
+/// Results land in `scratch` (`elevated`, `rem0`, `rank`, `bary`).
+fn embed_point(z: &[f64], scale_factors: &[f64], s: &mut EmbedScratch) {
+    let d = z.len();
+    // --- Elevate (triangular basis; column i-1 = sf·(1,..,1,-i,0,..)) ---
+    let e = &mut s.elevated;
+    let mut sm = 0.0;
+    for i in (1..=d).rev() {
+        let cf = z[i - 1] * scale_factors[i - 1];
+        e[i] = sm - i as f64 * cf;
+        sm += cf;
+    }
+    e[0] = sm;
+
+    // --- Greedy rounding to the nearest remainder-0 point ---
+    let dp1 = (d + 1) as f64;
+    let mut sum = 0i64;
+    for i in 0..=d {
+        let v = e[i] / dp1;
+        let up = v.ceil() * dp1;
+        let down = v.floor() * dp1;
+        s.rem0[i] = if up - e[i] < e[i] - down {
+            up as i64 as i32
+        } else {
+            down as i64 as i32
+        };
+        sum += (s.rem0[i] as i64) / (d as i64 + 1);
+    }
+
+    // --- Rank the residuals (descending) ---
+    for r in s.rank.iter_mut() {
+        *r = 0;
+    }
+    for i in 0..=d {
+        let di = e[i] - s.rem0[i] as f64;
+        for j in i + 1..=d {
+            let dj = e[j] - s.rem0[j] as f64;
+            if di < dj {
+                s.rank[i] += 1;
+            } else {
+                s.rank[j] += 1;
+            }
+        }
+    }
+
+    // --- Fix points whose rounded coordinates don't sum to zero ---
+    let dp1i = d as i64 + 1;
+    if sum > 0 {
+        for i in 0..=d {
+            if (s.rank[i] as i64) >= dp1i - sum {
+                s.rem0[i] -= dp1i as i32;
+                s.rank[i] = (s.rank[i] as i64 + sum - dp1i) as usize;
+            } else {
+                s.rank[i] = (s.rank[i] as i64 + sum) as usize;
+            }
+        }
+    } else if sum < 0 {
+        for i in 0..=d {
+            if (s.rank[i] as i64) < -sum {
+                s.rem0[i] += dp1i as i32;
+                s.rank[i] = (s.rank[i] as i64 + dp1i + sum) as usize;
+            } else {
+                s.rank[i] = (s.rank[i] as i64 + sum) as usize;
+            }
+        }
+    }
+
+    // --- Barycentric coordinates from sorted residuals ---
+    for b in s.bary.iter_mut() {
+        *b = 0.0;
+    }
+    for i in 0..=d {
+        let delta = (e[i] - s.rem0[i] as f64) / dp1;
+        s.bary[d - s.rank[i]] += delta;
+        s.bary[d + 1 - s.rank[i]] -= delta;
+    }
+    s.bary[0] += 1.0 + s.bary[d + 1];
+}
+
+/// First `d` coordinates of the vertex with remainder `k` of the simplex
+/// identified by (`rem0`, `rank`): key[i] = rem0[i] + canonical[k][rank[i]]
+/// where canonical[k] = (k,…,k, k−(d+1),…,k−(d+1)) per Eq. (7).
+#[inline]
+fn vertex_key(rem0: &[i32], rank: &[usize], d: usize, k: usize, key: &mut [i32]) {
+    for i in 0..d {
+        let c = if rank[i] <= d - k {
+            k as i32
+        } else {
+            k as i32 - (d as i32 + 1)
+        };
+        key[i] = rem0[i] + c;
+    }
+}
+
+/// Resolve the blur adjacency into dense index arrays: for each of the
+/// d+1 lattice directions and each point, the ids of the ±1..±r step
+/// neighbors (0 if the neighbor key was never created). The step vector
+/// along direction j is (+1, …, +1, −d at j, +1, …); missing neighbors
+/// are treated as zero-valued (the paper follows Adams et al. in not
+/// adding fill-in points during blur).
+fn build_neighbors(table: &KeyTable, d: usize, m: usize, r: usize) -> Vec<u32> {
+    let dirs = d + 1;
+    let width = 2 * r;
+    let mut out = vec![0u32; dirs * m * width];
+    let mut nkey = vec![0i32; d];
+    for p in 0..m {
+        let key = table.key((p + 1) as u32);
+        for j in 0..dirs {
+            let base = (j * m + p) * width;
+            for t in 1..=r {
+                // minus-t neighbor: key − t·step_j ; plus-t: key + t·step_j
+                // step_j has +1 in every coordinate except −d at j; for
+                // j == d (the implicit last coordinate) the stored first-d
+                // coords all change by +1.
+                for sgn in [-1i32, 1i32] {
+                    let ti = t as i32 * sgn;
+                    for c in 0..d {
+                        let delta = if c == j { -(d as i32) } else { 1 };
+                        nkey[c] = key[c] + ti * delta;
+                    }
+                    let id = table.get(&nkey);
+                    let slot = if sgn < 0 { r - t } else { r + t - 1 };
+                    out[base + slot] = id;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{ArdKernel, KernelFamily};
+    use crate::util::Pcg64;
+
+    fn random_points(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        rng.normal_vec(n * d)
+    }
+
+    #[test]
+    fn elevation_is_isometry_and_sums_zero() {
+        let mut rng = Pcg64::new(1);
+        for d in [1usize, 2, 3, 7, 16] {
+            let sf = elevation_scale_factors(d);
+            let mut s = EmbedScratch::new(d);
+            for _ in 0..20 {
+                let z = rng.normal_vec(d);
+                embed_point(&z, &sf, &mut s);
+                let sum: f64 = s.elevated.iter().sum();
+                assert!(sum.abs() < 1e-9 * (1.0 + crate::util::stats::norm2(&s.elevated)));
+                let nz = crate::util::stats::norm2(&z);
+                let ne = crate::util::stats::norm2(&s.elevated);
+                assert!((nz - ne).abs() < 1e-9 * (1.0 + nz), "d={d}: {nz} vs {ne}");
+            }
+        }
+    }
+
+    #[test]
+    fn barycentric_weights_valid() {
+        let mut rng = Pcg64::new(2);
+        for d in [1usize, 2, 3, 5, 9, 17] {
+            let sf = elevation_scale_factors(d);
+            let mut s = EmbedScratch::new(d);
+            for _ in 0..50 {
+                let z: Vec<f64> = (0..d).map(|_| rng.uniform_in(-20.0, 20.0)).collect();
+                embed_point(&z, &sf, &mut s);
+                let total: f64 = s.bary[..=d].iter().sum();
+                assert!((total - 1.0).abs() < 1e-9, "d={d} sum={total}");
+                for k in 0..=d {
+                    assert!(
+                        s.bary[k] >= -1e-12 && s.bary[k] <= 1.0 + 1e-12,
+                        "d={d} bary[{k}]={}",
+                        s.bary[k]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vertex_keys_are_consistent_lattice_points() {
+        // Every generated key must be ≡ k (mod d+1) in all coordinates.
+        let mut rng = Pcg64::new(3);
+        for d in [2usize, 4, 8] {
+            let sf = elevation_scale_factors(d);
+            let mut s = EmbedScratch::new(d);
+            let mut key = vec![0i32; d];
+            for _ in 0..30 {
+                let z: Vec<f64> = (0..d).map(|_| rng.uniform_in(-30.0, 30.0)).collect();
+                embed_point(&z, &sf, &mut s);
+                for k in 0..=d {
+                    vertex_key(&s.rem0, &s.rank, d, k, &mut key);
+                    let md = d as i32 + 1;
+                    let r0 = key[0].rem_euclid(md);
+                    assert_eq!(r0, (k as i32).rem_euclid(md), "remainder-k class");
+                    for c in 1..d {
+                        assert_eq!(key[c].rem_euclid(md), r0, "coords same class");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nearby_points_share_vertices() {
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, 3, 1.0);
+        // Two nearly identical points must splat to the same simplex.
+        let x = vec![0.5, 0.5, 0.5, 0.5 + 1e-9, 0.5, 0.5];
+        let lat = PermutohedralLattice::build(&x, 3, &k, 1);
+        assert_eq!(lat.n, 2);
+        assert_eq!(lat.m, 4, "both points share one simplex of 4 vertices");
+        assert_eq!(&lat.offsets[..4], &lat.offsets[4..8]);
+    }
+
+    #[test]
+    fn lattice_counts_bounded() {
+        for d in [2usize, 5, 10] {
+            let x = random_points(200, d, 42);
+            let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+            let lat = PermutohedralLattice::build(&x, d, &k, 1);
+            assert!(lat.m >= 1);
+            assert!(lat.m <= 200 * (d + 1), "m bounded by n(d+1)");
+            assert!(lat.sparsity_ratio() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn large_lengthscale_collapses_lattice() {
+        // With a huge lengthscale all points land in very few simplices.
+        let x = random_points(500, 4, 7);
+        let k_small = ArdKernel::with_lengthscale(KernelFamily::Rbf, 4, 0.05);
+        let k_large = ArdKernel::with_lengthscale(KernelFamily::Rbf, 4, 50.0);
+        let m_small = PermutohedralLattice::build(&x, 4, &k_small, 1).m;
+        let m_large = PermutohedralLattice::build(&x, 4, &k_large, 1).m;
+        assert!(
+            m_large * 10 < m_small,
+            "lengthscale should control sparsity: {m_large} vs {m_small}"
+        );
+        // The whole cloud spans a handful of simplices at ℓ=50.
+        assert!(m_large < 60, "m_large={m_large}");
+    }
+
+    #[test]
+    fn neighbors_are_mutual() {
+        // If q is the +t neighbor of p along direction j, then p is the
+        // −t neighbor of q along j.
+        let x = random_points(100, 3, 9);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, 3, 0.3);
+        let lat = PermutohedralLattice::build(&x, 3, &k, 2);
+        let r = lat.order();
+        let width = 2 * r;
+        let d = lat.d;
+        let mut checked = 0;
+        for p in 0..lat.m {
+            for j in 0..=d {
+                let base = (j * lat.m + p) * width;
+                for t in 1..=r {
+                    let plus = lat.neighbors[base + r + t - 1];
+                    if plus != 0 {
+                        let q = (plus - 1) as usize;
+                        let qbase = (j * lat.m + q) * width;
+                        let back = lat.neighbors[qbase + r - t];
+                        assert_eq!(back, (p + 1) as u32, "mutuality p={p} j={j} t={t}");
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 0, "no neighbor pairs found");
+    }
+
+    #[test]
+    fn embed_only_matches_build_for_same_points() {
+        let x = random_points(50, 4, 11);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, 4, 0.7);
+        let lat = PermutohedralLattice::build(&x, 4, &k, 1);
+        let (off, w) = lat.embed_only(&x, &k);
+        assert_eq!(off, lat.offsets);
+        for (a, b) in w.iter().zip(&lat.weights) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn embed_only_unknown_region_hits_null() {
+        let x = random_points(20, 3, 13);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, 3, 0.1);
+        let lat = PermutohedralLattice::build(&x, 3, &k, 1);
+        // A far-away probe should find no existing vertices.
+        let probe = vec![1e4, -1e4, 1e4];
+        let (off, w) = lat.embed_only(&probe, &k);
+        assert!(off.iter().all(|&o| o == 0));
+        assert!(w.iter().all(|&wi| wi == 0.0));
+    }
+}

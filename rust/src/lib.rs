@@ -1,0 +1,48 @@
+//! # Simplex-GP
+//!
+//! Scalable Gaussian-process inference via kernel interpolation on the
+//! permutohedral lattice — a production-grade reproduction of
+//! *"SKIing on Simplices: Kernel Interpolation on the Permutohedral
+//! Lattice for Scalable Gaussian Processes"* (Kapoor, Finzi, Wang,
+//! Wilson; ICML 2021).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! - **L1/L2 (build time)** — `python/compile/` authors the Pallas blur
+//!   kernel and the JAX splat→blur→slice MVM graph, AOT-lowered to HLO
+//!   text under `artifacts/`.
+//! - **L3 (this crate)** — builds the lattice, owns the Krylov solvers
+//!   and the GP trainer, serves predictions, and executes MVMs either on
+//!   the native multithreaded path or through the PJRT runtime
+//!   ([`runtime`]). Python is never on the request path.
+//!
+//! Quick taste (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use simplex_gp::kernels::{ArdKernel, KernelFamily};
+//! use simplex_gp::gp::model::SimplexGp;
+//!
+//! let d = 6;
+//! let (x, y): (Vec<f64>, Vec<f64>) = /* n×d inputs, n targets */
+//! # (vec![0.0; 60], vec![0.0; 10]);
+//! let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+//! let noise = 0.05;
+//! let gp = SimplexGp::fit(&x, &y, d, kernel, noise, Default::default()).unwrap();
+//! let (mean, var) = gp.predict(&x[..6 * d]);
+//! # let _ = (mean, var);
+//! ```
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod gp;
+pub mod kernels;
+pub mod lattice;
+pub mod linalg;
+pub mod mvm;
+pub mod runtime;
+pub mod solvers;
+pub mod stencil;
+pub mod util;

@@ -1,0 +1,242 @@
+//! Complex FFT: iterative radix-2 Cooley-Tukey plus Bluestein's algorithm
+//! for arbitrary lengths. Backs (a) the §4.1 stencil-spacing search
+//! (numerical Fourier transform of the kernel profile) and (b) the
+//! Toeplitz MVM used by the KISS-GP baseline (circulant embedding).
+
+/// Complex number as (re, im); a full complex type is overkill here.
+pub type C = (f64, f64);
+
+#[inline]
+fn c_add(a: C, b: C) -> C {
+    (a.0 + b.0, a.1 + b.1)
+}
+#[inline]
+fn c_sub(a: C, b: C) -> C {
+    (a.0 - b.0, a.1 - b.1)
+}
+#[inline]
+fn c_mul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+#[inline]
+fn c_conj(a: C) -> C {
+    (a.0, -a.1)
+}
+
+/// In-place radix-2 FFT; `data.len()` must be a power of two.
+/// `inverse` applies the conjugate transform *without* the 1/n scale.
+pub fn fft_pow2(data: &mut [C], inverse: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft_pow2 requires power-of-two length");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[i + k];
+                let v = c_mul(data[i + k + len / 2], w);
+                data[i + k] = c_add(u, v);
+                data[i + k + len / 2] = c_sub(u, v);
+                w = c_mul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Forward DFT of arbitrary length via Bluestein (chirp-z) when the
+/// length is not a power of two.
+pub fn dft(input: &[C], inverse: bool) -> Vec<C> {
+    let n = input.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n.is_power_of_two() {
+        let mut d = input.to_vec();
+        fft_pow2(&mut d, inverse);
+        return d;
+    }
+    // Bluestein: x_k * chirp_k convolved with conj chirp.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let m = (2 * n - 1).next_power_of_two();
+    let chirp: Vec<C> = (0..n)
+        .map(|k| {
+            let ang = sign * std::f64::consts::PI * (k as f64) * (k as f64) / n as f64;
+            (ang.cos(), ang.sin())
+        })
+        .collect();
+    let mut a = vec![(0.0, 0.0); m];
+    for k in 0..n {
+        a[k] = c_mul(input[k], chirp[k]);
+    }
+    let mut b = vec![(0.0, 0.0); m];
+    b[0] = c_conj(chirp[0]);
+    for k in 1..n {
+        let c = c_conj(chirp[k]);
+        b[k] = c;
+        b[m - k] = c;
+    }
+    fft_pow2(&mut a, false);
+    fft_pow2(&mut b, false);
+    for i in 0..m {
+        a[i] = c_mul(a[i], b[i]);
+    }
+    fft_pow2(&mut a, true);
+    let scale = 1.0 / m as f64;
+    (0..n)
+        .map(|k| c_mul((a[k].0 * scale, a[k].1 * scale), chirp[k]))
+        .collect()
+}
+
+/// Real-input forward DFT magnitude-preserving convenience: returns the
+/// complex spectrum of a real signal.
+pub fn dft_real(input: &[f64]) -> Vec<C> {
+    let cx: Vec<C> = input.iter().map(|&x| (x, 0.0)).collect();
+    dft(&cx, false)
+}
+
+/// Circular convolution of two real sequences of equal length via FFT.
+pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let m = n.next_power_of_two();
+    // Zero-pad to power of two while preserving circularity only when m ==
+    // n; otherwise fall back to Bluestein on exact length.
+    if m == n {
+        let mut fa: Vec<C> = a.iter().map(|&x| (x, 0.0)).collect();
+        let mut fb: Vec<C> = b.iter().map(|&x| (x, 0.0)).collect();
+        fft_pow2(&mut fa, false);
+        fft_pow2(&mut fb, false);
+        for i in 0..n {
+            fa[i] = c_mul(fa[i], fb[i]);
+        }
+        fft_pow2(&mut fa, true);
+        fa.iter().map(|c| c.0 / n as f64).collect()
+    } else {
+        let fa = dft(&a.iter().map(|&x| (x, 0.0)).collect::<Vec<_>>(), false);
+        let fb = dft(&b.iter().map(|&x| (x, 0.0)).collect::<Vec<_>>(), false);
+        let prod: Vec<C> = fa.iter().zip(&fb).map(|(&x, &y)| c_mul(x, y)).collect();
+        let inv = dft(&prod, true);
+        inv.iter().map(|c| c.0 / n as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn naive_dft(x: &[C], inverse: bool) -> Vec<C> {
+        let n = x.len();
+        let sign = if inverse { 1.0 } else { -1.0 };
+        (0..n)
+            .map(|k| {
+                let mut acc = (0.0, 0.0);
+                for (j, &xj) in x.iter().enumerate() {
+                    let ang =
+                        sign * 2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+                    acc = c_add(acc, c_mul(xj, (ang.cos(), ang.sin())));
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn assert_close(a: &[C], b: &[C], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for i in 0..a.len() {
+            assert!(
+                (a[i].0 - b[i].0).abs() < tol && (a[i].1 - b[i].1).abs() < tol,
+                "mismatch at {i}: {:?} vs {:?}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pow2_matches_naive() {
+        let mut rng = Pcg64::new(1);
+        let x: Vec<C> = (0..16).map(|_| (rng.normal(), rng.normal())).collect();
+        let mut y = x.clone();
+        fft_pow2(&mut y, false);
+        assert_close(&y, &naive_dft(&x, false), 1e-9);
+    }
+
+    #[test]
+    fn bluestein_matches_naive() {
+        let mut rng = Pcg64::new(2);
+        for n in [3usize, 5, 7, 12, 25] {
+            let x: Vec<C> = (0..n).map(|_| (rng.normal(), rng.normal())).collect();
+            let y = dft(&x, false);
+            assert_close(&y, &naive_dft(&x, false), 1e-8);
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let mut rng = Pcg64::new(3);
+        for n in [8usize, 10, 31] {
+            let x: Vec<C> = (0..n).map(|_| (rng.normal(), rng.normal())).collect();
+            let fwd = dft(&x, false);
+            let back = dft(&fwd, true);
+            let rec: Vec<C> = back
+                .iter()
+                .map(|c| (c.0 / n as f64, c.1 / n as f64))
+                .collect();
+            assert_close(&rec, &x, 1e-9);
+        }
+    }
+
+    #[test]
+    fn convolution_matches_naive() {
+        let mut rng = Pcg64::new(4);
+        for n in [8usize, 12] {
+            let a: Vec<f64> = rng.normal_vec(n);
+            let b: Vec<f64> = rng.normal_vec(n);
+            let c = circular_convolve(&a, &b);
+            for k in 0..n {
+                let mut s = 0.0;
+                for j in 0..n {
+                    s += a[j] * b[(k + n - j) % n];
+                }
+                assert!((c[k] - s).abs() < 1e-9, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn parseval_holds() {
+        let mut rng = Pcg64::new(5);
+        let x: Vec<f64> = rng.normal_vec(64);
+        let spec = dft_real(&x);
+        let e_time: f64 = x.iter().map(|v| v * v).sum();
+        let e_freq: f64 =
+            spec.iter().map(|c| c.0 * c.0 + c.1 * c.1).sum::<f64>() / 64.0;
+        assert!((e_time - e_freq).abs() < 1e-8);
+    }
+}

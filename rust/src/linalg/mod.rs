@@ -1,0 +1,10 @@
+//! Dense and structured linear algebra substrate: everything the GP
+//! stack and baselines need, implemented from scratch (no BLAS/LAPACK in
+//! the offline environment).
+
+pub mod dense;
+pub mod fft;
+pub mod toeplitz;
+
+pub use dense::{cholesky, eigh, eigh_tridiag, logdet_spd, solve_lower, solve_lower_t, solve_spd, Mat};
+pub use toeplitz::{kron_toeplitz_matvec, SymToeplitz};

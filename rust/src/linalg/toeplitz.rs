@@ -1,0 +1,179 @@
+//! Symmetric Toeplitz matrix-vector products via circulant embedding +
+//! FFT: the structure-exploiting core of the KISS-GP baseline (grid
+//! kernels on a regular 1-D grid are Toeplitz; Kronecker products of
+//! them cover the multi-dimensional grid).
+
+use super::fft::{dft, C};
+
+/// Symmetric Toeplitz matrix defined by its first column `col`
+/// (col[|i-j|] = A_ij). MVM is O(m log m) via embedding in a circulant of
+/// size 2m-2 (or 2m for m<2).
+#[derive(Clone, Debug)]
+pub struct SymToeplitz {
+    pub col: Vec<f64>,
+    /// Pre-computed spectrum of the circulant embedding.
+    spectrum: Vec<C>,
+    emb_len: usize,
+}
+
+impl SymToeplitz {
+    pub fn new(col: Vec<f64>) -> Self {
+        let m = col.len();
+        assert!(m >= 1);
+        // Circulant first column: [c0, c1, ..., c_{m-1}, c_{m-2}, ..., c1].
+        let emb_len = if m == 1 { 1 } else { 2 * m - 2 };
+        let mut emb = Vec::with_capacity(emb_len);
+        emb.extend_from_slice(&col);
+        for i in (1..m.saturating_sub(1)).rev() {
+            emb.push(col[i]);
+        }
+        let spec = dft(&emb.iter().map(|&x| (x, 0.0)).collect::<Vec<_>>(), false);
+        SymToeplitz {
+            col,
+            spectrum: spec,
+            emb_len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.col.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.col.is_empty()
+    }
+
+    /// Toeplitz MVM via the circulant embedding.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let m = self.col.len();
+        assert_eq!(v.len(), m);
+        if m == 1 {
+            return vec![self.col[0] * v[0]];
+        }
+        let n = self.emb_len;
+        let mut padded: Vec<C> = Vec::with_capacity(n);
+        padded.extend(v.iter().map(|&x| (x, 0.0)));
+        padded.resize(n, (0.0, 0.0));
+        let mut spec_v = dft(&padded, false);
+        for i in 0..n {
+            let (a, b) = spec_v[i];
+            let (c, d) = self.spectrum[i];
+            spec_v[i] = (a * c - b * d, a * d + b * c);
+        }
+        let back = dft(&spec_v, true);
+        (0..m).map(|i| back[i].0 / n as f64).collect()
+    }
+
+    /// Dense materialization (tests / small grids only).
+    pub fn to_dense(&self) -> super::dense::Mat {
+        let m = self.col.len();
+        let mut a = super::dense::Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..m {
+                a[(i, j)] = self.col[i.abs_diff(j)];
+            }
+        }
+        a
+    }
+}
+
+/// MVM with a Kronecker product of symmetric Toeplitz factors:
+/// (T_1 ⊗ ... ⊗ T_d) v, computed factor-by-factor in O(m Σ log m_k).
+/// `v.len()` must equal the product of factor sizes.
+pub fn kron_toeplitz_matvec(factors: &[SymToeplitz], v: &[f64]) -> Vec<f64> {
+    let total: usize = factors.iter().map(|t| t.len()).product();
+    assert_eq!(v.len(), total);
+    let mut x = v.to_vec();
+    // Apply each factor along its mode: reshape x as (left, m_k, right)
+    // and multiply along the middle axis.
+    let sizes: Vec<usize> = factors.iter().map(|t| t.len()).collect();
+    for (k, t) in factors.iter().enumerate() {
+        let mk = sizes[k];
+        let left: usize = sizes[..k].iter().product();
+        let right: usize = sizes[k + 1..].iter().product();
+        let mut out = vec![0.0; total];
+        for l in 0..left {
+            for r in 0..right {
+                // Gather the fiber.
+                let mut fiber = Vec::with_capacity(mk);
+                for i in 0..mk {
+                    fiber.push(x[(l * mk + i) * right + r]);
+                }
+                let prod = t.matvec(&fiber);
+                for i in 0..mk {
+                    out[(l * mk + i) * right + r] = prod[i];
+                }
+            }
+        }
+        x = out;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn toeplitz_matvec_matches_dense() {
+        let mut rng = Pcg64::new(1);
+        for m in [1usize, 2, 3, 8, 17] {
+            let col: Vec<f64> = (0..m).map(|i| (-0.3 * i as f64).exp()).collect();
+            let t = SymToeplitz::new(col);
+            let v = rng.normal_vec(m);
+            let fast = t.matvec(&v);
+            let slow = t.to_dense().matvec(&v);
+            for i in 0..m {
+                assert!((fast[i] - slow[i]).abs() < 1e-9, "m={m} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn kron_matches_dense_kron() {
+        let mut rng = Pcg64::new(2);
+        let t1 = SymToeplitz::new(vec![2.0, 0.5, 0.1]);
+        let t2 = SymToeplitz::new(vec![1.0, 0.3]);
+        let d1 = t1.to_dense();
+        let d2 = t2.to_dense();
+        // Dense Kronecker product.
+        let (m1, m2) = (3, 2);
+        let mut k = crate::linalg::dense::Mat::zeros(m1 * m2, m1 * m2);
+        for i1 in 0..m1 {
+            for j1 in 0..m1 {
+                for i2 in 0..m2 {
+                    for j2 in 0..m2 {
+                        k[(i1 * m2 + i2, j1 * m2 + j2)] = d1[(i1, j1)] * d2[(i2, j2)];
+                    }
+                }
+            }
+        }
+        let v = rng.normal_vec(m1 * m2);
+        let fast = kron_toeplitz_matvec(&[t1, t2], &v);
+        let slow = k.matvec(&v);
+        for i in 0..m1 * m2 {
+            assert!((fast[i] - slow[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn kron_three_factors_dims() {
+        let mut rng = Pcg64::new(3);
+        let ts: Vec<SymToeplitz> = [4usize, 3, 2]
+            .iter()
+            .map(|&m| {
+                SymToeplitz::new((0..m).map(|i| (-(i as f64)).exp()).collect())
+            })
+            .collect();
+        let v = rng.normal_vec(24);
+        let out = kron_toeplitz_matvec(&ts, &v);
+        assert_eq!(out.len(), 24);
+        // Symmetry of the Kronecker operator: <u, Kv> == <v, Ku>.
+        let u = rng.normal_vec(24);
+        let ku = kron_toeplitz_matvec(&ts, &u);
+        let uv: f64 = u.iter().zip(&out).map(|(a, b)| a * b).sum();
+        let vu: f64 = v.iter().zip(&ku).map(|(a, b)| a * b).sum();
+        assert!((uv - vu).abs() < 1e-9);
+    }
+}

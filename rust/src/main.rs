@@ -1,0 +1,10 @@
+//! `simplex-gp` — the Layer-3 leader binary: CLI over the library's
+//! training, MVM, sparsity, stencil, serving and golden-replay paths.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = simplex_gp::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,534 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust — the request
+//! path never touches Python.
+//!
+//! Artifacts have frozen bucket shapes; [`SimplexPjrtMvm`] pads the
+//! lattice arrays into the bucket (null slot 0 absorbs padding by
+//! construction) and truncates results on the way out. Anything that
+//! doesn't fit a bucket falls back to the native Rust path upstream —
+//! backend selection is a routing decision in the coordinator.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::lattice::PermutohedralLattice;
+use crate::util::json::Json;
+
+/// One artifact as described by `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub hlo_path: PathBuf,
+    /// Bucket parameters (d, n, m1, r, nc, ...).
+    pub params: BTreeMap<String, f64>,
+    /// Golden input descriptors: (name, dtype, shape, path).
+    pub inputs: Vec<GoldenArray>,
+    pub golden_out: GoldenArray,
+}
+
+/// Descriptor of a binary golden array on disk.
+#[derive(Clone, Debug)]
+pub struct GoldenArray {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub path: PathBuf,
+}
+
+impl GoldenArray {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Read as f64 regardless of on-disk dtype (f32/i32 widened).
+    pub fn read_f64(&self) -> Result<Vec<f64>> {
+        let bytes = std::fs::read(&self.path)
+            .with_context(|| format!("reading golden {:?}", self.path))?;
+        match self.dtype.as_str() {
+            "float32" => Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+                .collect()),
+            "int32" => Ok(bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+                .collect()),
+            other => bail!("unsupported golden dtype {other}"),
+        }
+    }
+
+    pub fn read_i32(&self) -> Result<Vec<i32>> {
+        let bytes = std::fs::read(&self.path)?;
+        if self.dtype != "int32" {
+            bail!("golden {:?} is {}, not int32", self.path, self.dtype);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn read_f32(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.path)?;
+        if self.dtype != "float32" {
+            bail!("golden {:?} is {}, not float32", self.path, self.dtype);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Parsed manifest.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let kind = a
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string();
+            let hlo = a
+                .get("hlo")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing hlo"))?;
+            let mut params = BTreeMap::new();
+            if let Some(p) = a.get("params").and_then(|p| p.as_obj()) {
+                for (k, v) in p {
+                    if let Some(x) = v.as_f64() {
+                        params.insert(k.clone(), x);
+                    }
+                }
+            }
+            let parse_golden = |g: &Json| -> Result<GoldenArray> {
+                Ok(GoldenArray {
+                    name: g
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("out")
+                        .to_string(),
+                    dtype: g
+                        .get("dtype")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("golden missing dtype"))?
+                        .to_string(),
+                    shape: g
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .ok_or_else(|| anyhow!("golden missing shape"))?
+                        .iter()
+                        .filter_map(|s| s.as_usize())
+                        .collect(),
+                    path: dir.join("goldens").join(
+                        g.get("path")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| anyhow!("golden missing path"))?,
+                    ),
+                })
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("artifact missing inputs"))?
+                .iter()
+                .map(parse_golden)
+                .collect::<Result<Vec<_>>>()?;
+            let golden_out = parse_golden(
+                a.get("golden_out")
+                    .ok_or_else(|| anyhow!("artifact missing golden_out"))?,
+            )?;
+            artifacts.push(ArtifactSpec {
+                name,
+                kind,
+                hlo_path: dir.join(hlo),
+                params,
+                inputs,
+                golden_out,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Best simplex bucket for a problem (d must match; n, m+1 must fit).
+    pub fn find_simplex_bucket(&self, d: usize, n: usize, m1: usize, r: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "simplex_mvm")
+            .filter(|a| {
+                a.params.get("d").copied() == Some(d as f64)
+                    && a.params.get("r").copied() == Some(r as f64)
+                    && a.params.get("n").copied().unwrap_or(0.0) >= n as f64
+                    && a.params.get("m1").copied().unwrap_or(0.0) >= m1 as f64
+            })
+            .min_by_key(|a| {
+                (a.params.get("n").copied().unwrap_or(f64::MAX)
+                    * a.params.get("m1").copied().unwrap_or(f64::MAX)) as u64
+            })
+    }
+}
+
+/// A compiled artifact on the PJRT CPU client.
+pub struct CompiledArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: one PJRT client + lazily compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    compiled: Mutex<BTreeMap<String, std::sync::Arc<CompiledArtifact>>>,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            compiled: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn compile(&self, name: &str) -> Result<std::sync::Arc<CompiledArtifact>> {
+        if let Some(c) = self.compiled.lock().unwrap().get(name) {
+            return Ok(c.clone());
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("hlo parse {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let arc = std::sync::Arc::new(CompiledArtifact { spec, exe });
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+}
+
+impl CompiledArtifact {
+    /// Execute with raw literals; returns the (single) tuple element as
+    /// a flat f32 vector.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let results = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?;
+        let lit = results[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Replay the manifest goldens through the executable and return the
+    /// max absolute deviation from the recorded reference output.
+    pub fn replay_goldens(&self) -> Result<f64> {
+        let mut literals = Vec::new();
+        for g in &self.spec.inputs {
+            let dims: Vec<i64> = g.shape.iter().map(|&s| s as i64).collect();
+            let lit = match g.dtype.as_str() {
+                "int32" => xla::Literal::vec1(&g.read_i32()?)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?,
+                "float32" => xla::Literal::vec1(&g.read_f32()?)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?,
+                other => bail!("dtype {other}"),
+            };
+            literals.push(lit);
+        }
+        let got = self.execute(&literals)?;
+        let want = self.spec.golden_out.read_f32()?;
+        if got.len() != want.len() {
+            bail!("golden length mismatch: {} vs {}", got.len(), want.len());
+        }
+        let mut max_err = 0.0f64;
+        for (a, b) in got.iter().zip(&want) {
+            max_err = max_err.max((*a as f64 - *b as f64).abs());
+        }
+        Ok(max_err)
+    }
+}
+
+/// PJRT-backed simplex MVM: pads a built lattice into an artifact bucket
+/// and runs the AOT executable for each MVM.
+pub struct SimplexPjrtMvm {
+    artifact: std::sync::Arc<CompiledArtifact>,
+    /// Padded inputs (constant across MVMs for a fixed lattice).
+    offsets: xla::Literal,
+    weights: xla::Literal,
+    neighbors: xla::Literal,
+    taps: xla::Literal,
+    n: usize,
+    bucket_n: usize,
+    pub outputscale: f64,
+}
+
+impl SimplexPjrtMvm {
+    /// Pack `lat` into a matching bucket from the runtime's manifest.
+    pub fn new(rt: &PjrtRuntime, lat: &PermutohedralLattice, outputscale: f64) -> Result<Self> {
+        let d = lat.d;
+        let r = lat.order();
+        let spec = rt
+            .manifest
+            .find_simplex_bucket(d, lat.n, lat.m + 1, r)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no simplex bucket for d={d} n={} m1={} r={r}; rebuild artifacts or use the native backend",
+                    lat.n,
+                    lat.m + 1
+                )
+            })?
+            .clone();
+        let bucket_n = spec.params["n"] as usize;
+        let bucket_m1 = spec.params["m1"] as usize;
+        let artifact = rt.compile(&spec.name)?;
+
+        let dp1 = d + 1;
+        // offsets (bucket_n, dp1): pad rows with 0 (null slot).
+        let mut off = vec![0i32; bucket_n * dp1];
+        for (i, &o) in lat.offsets.iter().enumerate() {
+            off[i] = o as i32;
+        }
+        // weights: pad with 0.
+        let mut w = vec![0f32; bucket_n * dp1];
+        for (i, &x) in lat.weights.iter().enumerate() {
+            w[i] = x as f32;
+        }
+        // neighbors: rust layout (dir*m + p)*2r + slot with 1-based ids and
+        // no null row → python layout (dp1, m1, 2r) including row 0.
+        let width = 2 * r;
+        let mut nbr = vec![0i32; dp1 * bucket_m1 * width];
+        for j in 0..dp1 {
+            for p in 0..lat.m {
+                for s in 0..width {
+                    let v = lat.neighbors[(j * lat.m + p) * width + s];
+                    nbr[(j * bucket_m1 + (p + 1)) * width + s] = v as i32;
+                }
+            }
+        }
+        let taps: Vec<f32> = lat.stencil.taps.iter().map(|&t| t as f32).collect();
+
+        let mk = |v: xla::Literal, dims: &[i64]| -> Result<xla::Literal> {
+            v.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+        };
+        Ok(SimplexPjrtMvm {
+            offsets: mk(xla::Literal::vec1(&off), &[bucket_n as i64, dp1 as i64])?,
+            weights: mk(xla::Literal::vec1(&w), &[bucket_n as i64, dp1 as i64])?,
+            neighbors: mk(
+                xla::Literal::vec1(&nbr),
+                &[dp1 as i64, bucket_m1 as i64, width as i64],
+            )?,
+            taps: xla::Literal::vec1(&taps),
+            artifact,
+            n: lat.n,
+            bucket_n,
+            outputscale,
+        })
+    }
+
+    pub fn artifact_name(&self) -> &str {
+        &self.artifact.spec.name
+    }
+
+    /// One MVM through the PJRT executable.
+    pub fn mvm(&self, v: &[f64]) -> Result<Vec<f64>> {
+        assert_eq!(v.len(), self.n);
+        let mut vf = vec![0f32; self.bucket_n];
+        for (i, &x) in v.iter().enumerate() {
+            vf[i] = x as f32;
+        }
+        let vlit = xla::Literal::vec1(&vf)
+            .reshape(&[self.bucket_n as i64, 1])
+            .map_err(|e| anyhow!("reshape v: {e:?}"))?;
+        // Literals are cheap handles; cloning shares the underlying data.
+        let out = self.artifact.execute(&[
+            self.offsets.shallow_clone()?,
+            self.weights.shallow_clone()?,
+            self.neighbors.shallow_clone()?,
+            self.taps.shallow_clone()?,
+            vlit,
+        ])?;
+        Ok(out[..self.n]
+            .iter()
+            .map(|&x| x as f64 * self.outputscale)
+            .collect())
+    }
+}
+
+/// Clone helper: the xla crate's Literal has no public clone, but
+/// reshaping to the same dims copies. Implemented as an extension trait.
+trait ShallowClone: Sized {
+    fn shallow_clone(&self) -> Result<Self>;
+}
+
+impl ShallowClone for xla::Literal {
+    fn shallow_clone(&self) -> Result<Self> {
+        // `Literal` exposes copy via reshape to its own dimensions.
+        let shape = self.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+        self.reshape(shape.dims())
+            .map_err(|e| anyhow!("clone-reshape: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> Option<PathBuf> {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if p.join("manifest.json").exists() {
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        for a in &m.artifacts {
+            assert!(a.hlo_path.exists(), "missing {:?}", a.hlo_path);
+            for g in &a.inputs {
+                assert!(g.path.exists(), "missing golden {:?}", g.path);
+            }
+        }
+    }
+
+    #[test]
+    fn goldens_replay_through_pjrt() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::new(&dir).unwrap();
+        for spec in rt.manifest.artifacts.clone() {
+            let c = rt.compile(&spec.name).unwrap();
+            let err = c.replay_goldens().unwrap();
+            assert!(
+                err < 1e-3,
+                "artifact {} deviates from golden by {err}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn native_filter_matches_golden_arrays() {
+        // Cross-layer parity: the Rust-native splat/blur/slice on the
+        // *same* raw arrays must agree with the python reference output.
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        for spec in m.artifacts.iter().filter(|a| a.kind == "simplex_mvm") {
+            let d = spec.params["d"] as usize;
+            let n = spec.params["n"] as usize;
+            let m1 = spec.params["m1"] as usize;
+            let r = spec.params["r"] as usize;
+            let find = |nm: &str| spec.inputs.iter().find(|g| g.name == nm).unwrap();
+            let offsets: Vec<u32> = find("offsets")
+                .read_i32()
+                .unwrap()
+                .iter()
+                .map(|&x| x as u32)
+                .collect();
+            let weights = find("weights").read_f64().unwrap();
+            let nbr_py = find("neighbors").read_i32().unwrap();
+            let taps = find("taps").read_f64().unwrap();
+            let v = find("v").read_f64().unwrap();
+            // python layout (dp1, m1, 2r) → rust layout (dir*m+p)*2r.
+            let dp1 = d + 1;
+            let mm = m1 - 1;
+            let width = 2 * r;
+            let mut nbr = vec![0u32; dp1 * mm * width];
+            for j in 0..dp1 {
+                for p in 0..mm {
+                    for s in 0..width {
+                        nbr[(j * mm + p) * width + s] =
+                            nbr_py[(j * m1 + (p + 1)) * width + s] as u32;
+                    }
+                }
+            }
+            let stencil = crate::stencil::Stencil::with_spacing(
+                crate::kernels::KernelFamily::Rbf,
+                r,
+                1.2,
+            );
+            // Override taps with the golden taps so arithmetic matches.
+            let mut stencil = stencil;
+            stencil.taps = taps.clone();
+            let lat = PermutohedralLattice::from_raw_parts(
+                d, n, mm, stencil, offsets, weights, nbr,
+            );
+            let got = lat.mvm(&v);
+            let want = spec.golden_out.read_f64().unwrap();
+            for i in 0..n {
+                assert!(
+                    (got[i] - want[i]).abs() < 2e-3 * (1.0 + want[i].abs()),
+                    "{}: row {i}: {} vs {}",
+                    spec.name,
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Conjugate gradients: single-RHS, batched multi-RHS (shared MVM,
+//! per-column recurrences) and preconditioned variants.
+//!
+//! Tolerance semantics follow GPyTorch: stop when the *RMS residual*
+//! ‖r‖₂/√n drops below `tol`. This is what makes the paper's train
+//! tolerance of 1.0 meaningful on standardized data (the initial RMS
+//! residual is ≈1, so training runs only a handful of loose iterations
+//! — the very instability §5.4 studies), while a relative criterion
+//! would terminate immediately at zero iterations.
+
+use crate::mvm::MvmOperator;
+use crate::util::stats::{axpy, dot, norm2};
+
+/// Outcome of a CG solve.
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Final RMS residual ‖b − Ax‖/√n.
+    pub rms_residual: f64,
+}
+
+/// Options shared by the CG variants.
+#[derive(Clone, Copy, Debug)]
+pub struct CgOptions {
+    pub tol: f64,
+    pub max_iters: usize,
+    /// Always run at least this many iterations even if the RMS
+    /// criterion is already met (standardized targets start at RMS
+    /// exactly 1.0, which would otherwise make tol = 1.0 a no-op).
+    pub min_iters: usize,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        CgOptions {
+            tol: 1e-2,
+            max_iters: 500, // paper Table 5: max CG iterations 500
+            min_iters: 10,
+        }
+    }
+}
+
+impl CgOptions {
+    pub fn with_tol(tol: f64) -> Self {
+        CgOptions {
+            tol,
+            ..Default::default()
+        }
+    }
+}
+
+/// Plain CG on `A x = b` for a symmetric positive definite operator.
+pub fn cg(a: &dyn MvmOperator, b: &[f64], opts: CgOptions) -> CgResult {
+    cg_precond(a, b, opts, None)
+}
+
+/// Preconditioned CG; `precond` applies `P⁻¹ v`.
+pub fn cg_precond(
+    a: &dyn MvmOperator,
+    b: &[f64],
+    opts: CgOptions,
+    precond: Option<&dyn Fn(&[f64]) -> Vec<f64>>,
+) -> CgResult {
+    let n = b.len();
+    assert_eq!(a.len(), n);
+    let sqrt_n = (n as f64).sqrt().max(1e-300);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut z = match precond {
+        Some(p) => p(&r),
+        None => r.clone(),
+    };
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut iterations = 0;
+    let mut rel = norm2(&r) / sqrt_n;
+    while (rel > opts.tol || iterations < opts.min_iters) && iterations < opts.max_iters
+    {
+        let ap = a.mvm(&p);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            // Operator not (numerically) PD along p — bail with what we
+            // have rather than diverging.
+            break;
+        }
+        let alpha = rz / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        rel = norm2(&r) / sqrt_n;
+        z = match precond {
+            Some(pc) => pc(&r),
+            None => r.clone(),
+        };
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+        iterations += 1;
+    }
+    CgResult {
+        x,
+        iterations,
+        converged: rel <= opts.tol,
+        rms_residual: rel,
+    }
+}
+
+/// Batched CG: solves `A X = B` for `nc` right-hand sides interleaved as
+/// `b[i*nc + c]`, sharing one multi-channel MVM per iteration (this is
+/// where the lattice filter's channel batching pays off). Each column
+/// runs an independent scalar recurrence; converged columns freeze.
+pub fn cg_multi(
+    a: &dyn MvmOperator,
+    b: &[f64],
+    nc: usize,
+    opts: CgOptions,
+) -> (Vec<f64>, usize) {
+    let n = a.len();
+    assert_eq!(b.len(), n * nc);
+    let mut x = vec![0.0; n * nc];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rs: Vec<f64> = (0..nc)
+        .map(|c| (0..n).map(|i| r[i * nc + c] * r[i * nc + c]).sum())
+        .collect();
+    let sqrt_n = (n as f64).sqrt().max(1e-300);
+    let mut active: Vec<bool> = (0..nc)
+        .map(|c| rs[c].sqrt() > 0.0)
+        .collect();
+    let mut iters = 0;
+    while active.iter().any(|&a| a) && iters < opts.max_iters {
+        let ap = a.mvm_multi(&p, nc);
+        // Per-column alpha.
+        let mut pap = vec![0.0; nc];
+        for i in 0..n {
+            for c in 0..nc {
+                pap[c] += p[i * nc + c] * ap[i * nc + c];
+            }
+        }
+        let mut alpha = vec![0.0; nc];
+        for c in 0..nc {
+            if active[c] && pap[c] > 0.0 && pap[c].is_finite() {
+                alpha[c] = rs[c] / pap[c];
+            } else {
+                active[c] = false;
+            }
+        }
+        for i in 0..n {
+            for c in 0..nc {
+                if active[c] {
+                    x[i * nc + c] += alpha[c] * p[i * nc + c];
+                    r[i * nc + c] -= alpha[c] * ap[i * nc + c];
+                }
+            }
+        }
+        let mut rs_new = vec![0.0; nc];
+        for i in 0..n {
+            for c in 0..nc {
+                rs_new[c] += r[i * nc + c] * r[i * nc + c];
+            }
+        }
+        for c in 0..nc {
+            if !active[c] {
+                continue;
+            }
+            if iters + 1 >= opts.min_iters && rs_new[c].sqrt() / sqrt_n <= opts.tol {
+                active[c] = false;
+                continue;
+            }
+            let beta = rs_new[c] / rs[c];
+            for i in 0..n {
+                p[i * nc + c] = r[i * nc + c] + beta * p[i * nc + c];
+            }
+        }
+        rs = rs_new;
+        iters += 1;
+    }
+    (x, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::mvm::DenseMvm;
+    use crate::util::Pcg64;
+
+    fn spd_op(n: usize, seed: u64) -> DenseMvm {
+        let mut rng = Pcg64::new(seed);
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n * n {
+            b.data[i] = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64);
+        DenseMvm { mat: a }
+    }
+
+    #[test]
+    fn solves_spd_system() {
+        let n = 50;
+        let op = spd_op(n, 1);
+        let mut rng = Pcg64::new(2);
+        let b = rng.normal_vec(n);
+        let res = cg(
+            &op,
+            &b,
+            CgOptions {
+                tol: 1e-10,
+                max_iters: 500,
+                    min_iters: 1,
+                },
+        );
+        assert!(res.converged, "rms={}", res.rms_residual);
+        let ax = op.mvm(&res.x);
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn loose_tolerance_stops_early() {
+        let n = 80;
+        let op = spd_op(n, 3);
+        let mut rng = Pcg64::new(4);
+        let b = rng.normal_vec(n);
+        let loose = cg(
+            &op,
+            &b,
+            CgOptions {
+                tol: 0.5,
+                max_iters: 500,
+                    min_iters: 1,
+                },
+        );
+        let tight = cg(
+            &op,
+            &b,
+            CgOptions {
+                tol: 1e-8,
+                max_iters: 500,
+                    min_iters: 1,
+                },
+        );
+        assert!(loose.iterations < tight.iterations);
+    }
+
+    #[test]
+    fn multi_matches_single() {
+        let n = 40;
+        let op = spd_op(n, 5);
+        let mut rng = Pcg64::new(6);
+        let nc = 4;
+        let b = rng.normal_vec(n * nc);
+        let (x, _) = cg_multi(
+            &op,
+            &b,
+            nc,
+            CgOptions {
+                tol: 1e-10,
+                max_iters: 500,
+                    min_iters: 1,
+                },
+        );
+        for c in 0..nc {
+            let bc: Vec<f64> = (0..n).map(|i| b[i * nc + c]).collect();
+            let single = cg(
+                &op,
+                &bc,
+                CgOptions {
+                    tol: 1e-10,
+                    max_iters: 500,
+                    min_iters: 1,
+                },
+            );
+            for i in 0..n {
+                assert!(
+                    (x[i * nc + c] - single.x[i]).abs() < 1e-5,
+                    "col {c} row {i}: {} vs {}",
+                    x[i * nc + c],
+                    single.x[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn preconditioner_reduces_iterations() {
+        // Ill-conditioned diagonal system: Jacobi preconditioning should
+        // crush the iteration count.
+        let n = 100;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = 1.0 + (i as f64) * 50.0;
+        }
+        let op = DenseMvm { mat: a.clone() };
+        let mut rng = Pcg64::new(7);
+        let b = rng.normal_vec(n);
+        let opts = CgOptions {
+            tol: 1e-8,
+            max_iters: 500,
+                    min_iters: 1,
+                };
+        let plain = cg(&op, &b, opts);
+        let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+        let pc = |r: &[f64]| -> Vec<f64> {
+            r.iter().zip(&diag).map(|(ri, di)| ri / di).collect()
+        };
+        let pre = cg_precond(&op, &b, opts, Some(&pc));
+        assert!(pre.converged);
+        assert!(
+            pre.iterations < plain.iterations,
+            "pre {} vs plain {}",
+            pre.iterations,
+            plain.iterations
+        );
+    }
+}

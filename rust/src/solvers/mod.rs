@@ -1,0 +1,13 @@
+//! Krylov-subspace solvers: CG (plain / preconditioned / batched),
+//! Lanczos + stochastic Lanczos quadrature for log-determinants, RR-CG
+//! randomized truncation, and the pivoted-Cholesky preconditioner.
+
+pub mod cg;
+pub mod lanczos;
+pub mod precond;
+pub mod rrcg;
+
+pub use cg::{cg, cg_multi, cg_precond, CgOptions, CgResult};
+pub use lanczos::{lanczos, slq_logdet, LanczosResult};
+pub use precond::{KernelRows, PivCholPrecond};
+pub use rrcg::{rr_cg, RrCgOptions, RrCgResult};

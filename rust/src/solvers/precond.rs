@@ -1,0 +1,231 @@
+//! Partial pivoted-Cholesky preconditioner for (K + σ²I) solves —
+//! GPyTorch's default (paper Table 5: preconditioner rank 100).
+//!
+//! Builds a rank-k approximation K ≈ L Lᵀ by greedily selecting the
+//! largest-residual-diagonal pivot, needing only kernel *rows* (never
+//! the full matrix), then applies (L Lᵀ + σ²I)⁻¹ via Woodbury:
+//!   (σ²I + LLᵀ)⁻¹ = σ⁻²[I − L(σ²I_k + LᵀL)⁻¹Lᵀ].
+
+use crate::linalg::{cholesky, solve_lower, solve_lower_t, Mat};
+
+/// Access to kernel rows/diagonal, decoupled from the MVM operator (the
+/// preconditioner approximates the *exact* kernel even when the solve
+/// operator is the lattice approximation).
+pub trait KernelRows: Sync {
+    fn len(&self) -> usize;
+    fn row(&self, i: usize) -> Vec<f64>;
+    fn diag(&self) -> Vec<f64>;
+}
+
+/// Rank-k pivoted Cholesky factor plus the Woodbury capacitance solve.
+pub struct PivCholPrecond {
+    /// n × k factor.
+    pub l: Mat,
+    /// Noise (shift) σ².
+    pub sigma2: f64,
+    /// Cholesky of the k×k capacitance (σ²I + LᵀL).
+    cap_chol: Mat,
+    /// Selected pivot indices (diagnostics).
+    pub pivots: Vec<usize>,
+}
+
+impl PivCholPrecond {
+    /// Build from kernel rows with target rank `k` and shift `sigma2`.
+    pub fn build(rows: &dyn KernelRows, k: usize, sigma2: f64) -> Self {
+        let n = rows.len();
+        let k = k.min(n);
+        let mut diag = rows.diag();
+        let mut l = Mat::zeros(n, k);
+        let mut pivots = Vec::with_capacity(k);
+        for col in 0..k {
+            // Greedy pivot: largest residual diagonal.
+            let (piv, &dmax) = diag
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            if dmax <= 1e-12 {
+                // Kernel numerically low-rank — truncate.
+                let mut l_trunc = Mat::zeros(n, col);
+                for i in 0..n {
+                    for j in 0..col {
+                        l_trunc[(i, j)] = l[(i, j)];
+                    }
+                }
+                l = l_trunc;
+                break;
+            }
+            pivots.push(piv);
+            let scale = dmax.sqrt();
+            let krow = rows.row(piv);
+            for i in 0..n {
+                let mut v = krow[i];
+                for j in 0..col {
+                    v -= l[(i, j)] * l[(piv, j)];
+                }
+                l[(i, col)] = v / scale;
+            }
+            for i in 0..n {
+                diag[i] -= l[(i, col)] * l[(i, col)];
+                if diag[i] < 0.0 {
+                    diag[i] = 0.0;
+                }
+            }
+        }
+        let kk = l.cols;
+        // Capacitance C = σ²I_k + LᵀL.
+        let mut cap = Mat::zeros(kk, kk);
+        for a in 0..kk {
+            for b in 0..kk {
+                let mut s = 0.0;
+                for i in 0..n {
+                    s += l[(i, a)] * l[(i, b)];
+                }
+                cap[(a, b)] = s;
+            }
+        }
+        cap.add_diag(sigma2.max(1e-12));
+        let cap_chol = cholesky(&cap).expect("capacitance must be PD");
+        PivCholPrecond {
+            l,
+            sigma2: sigma2.max(1e-12),
+            cap_chol,
+            pivots,
+        }
+    }
+
+    /// Apply `P⁻¹ v` with P = L Lᵀ + σ²I (Woodbury).
+    pub fn solve(&self, v: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(v.len(), n);
+        // Lᵀ v
+        let ltv = self.l.matvec_t(v);
+        // C⁻¹ Lᵀ v
+        let y = solve_lower_t(&self.cap_chol, &solve_lower(&self.cap_chol, &ltv));
+        // L y
+        let ly = self.l.matvec(&y);
+        let inv_s = 1.0 / self.sigma2;
+        (0..n).map(|i| inv_s * (v[i] - ly[i])).collect()
+    }
+
+    /// log|LLᵀ + σ²I| — available exactly from the factors; useful as a
+    /// deterministic complement/cross-check to SLQ.
+    pub fn logdet(&self) -> f64 {
+        let n = self.l.rows as f64;
+        let k = self.cap_chol.rows;
+        let mut ld = (n - k as f64) * self.sigma2.ln();
+        for i in 0..k {
+            ld += 2.0 * self.cap_chol[(i, i)].ln();
+        }
+        ld
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{ArdKernel, KernelFamily};
+    use crate::linalg::logdet_spd;
+    use crate::mvm::{DenseMvm, MvmOperator};
+    use crate::solvers::cg::{cg, cg_precond, CgOptions};
+    use crate::util::Pcg64;
+
+    struct ExactRows<'a> {
+        k: &'a ArdKernel,
+        x: &'a [f64],
+        d: usize,
+    }
+
+    impl<'a> KernelRows for ExactRows<'a> {
+        fn len(&self) -> usize {
+            self.x.len() / self.d
+        }
+        fn row(&self, i: usize) -> Vec<f64> {
+            let n = self.len();
+            let xi = &self.x[i * self.d..(i + 1) * self.d];
+            (0..n)
+                .map(|j| self.k.eval(xi, &self.x[j * self.d..(j + 1) * self.d]))
+                .collect()
+        }
+        fn diag(&self) -> Vec<f64> {
+            vec![self.k.outputscale; self.len()]
+        }
+    }
+
+    #[test]
+    fn full_rank_factor_is_exact_inverse() {
+        let d = 2;
+        let n = 30;
+        let mut rng = Pcg64::new(1);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let rows = ExactRows { k: &k, x: &x, d };
+        let sigma2 = 0.1;
+        let pc = PivCholPrecond::build(&rows, n, sigma2);
+        // P = K + σ²I exactly at full rank ⇒ P⁻¹(K+σ²I)v = v.
+        let mut km = k.cov_matrix(&x, d);
+        km.add_diag(sigma2);
+        let v = rng.normal_vec(n);
+        let kv = km.matvec(&v);
+        let back = pc.solve(&kv);
+        for i in 0..n {
+            assert!((back[i] - v[i]).abs() < 1e-6, "{} vs {}", back[i], v[i]);
+        }
+        // logdet matches dense.
+        let ld = logdet_spd(&km).unwrap();
+        assert!((pc.logdet() - ld).abs() < 1e-6);
+    }
+
+    #[test]
+    fn preconditioner_speeds_up_kernel_cg() {
+        // Smooth RBF kernel with small noise: notoriously ill-conditioned;
+        // rank-30 pivoted Cholesky should cut CG iterations sharply.
+        let d = 2;
+        let n = 200;
+        let mut rng = Pcg64::new(2);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.5);
+        let sigma2 = 1e-3;
+        let mut km = k.cov_matrix(&x, d);
+        km.add_diag(sigma2);
+        let op = DenseMvm { mat: km };
+        let b = rng.normal_vec(n);
+        let opts = CgOptions {
+            tol: 1e-8,
+            max_iters: 400,
+                    min_iters: 1,
+                };
+        let plain = cg(&op, &b, opts);
+        let rows = ExactRows { k: &k, x: &x, d };
+        let pc = PivCholPrecond::build(&rows, 30, sigma2);
+        let pcf = |r: &[f64]| pc.solve(r);
+        let pre = cg_precond(&op, &b, opts, Some(&pcf));
+        assert!(pre.converged, "preconditioned CG failed to converge");
+        assert!(
+            pre.iterations * 2 < plain.iterations.max(2),
+            "pre {} vs plain {}",
+            pre.iterations,
+            plain.iterations
+        );
+        // And the answer is right.
+        let ax = op.mvm(&pre.x);
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn pivots_are_distinct() {
+        let d = 3;
+        let n = 50;
+        let mut rng = Pcg64::new(3);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 1.0);
+        let rows = ExactRows { k: &k, x: &x, d };
+        let pc = PivCholPrecond::build(&rows, 20, 0.01);
+        let mut sorted = pc.pivots.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), pc.pivots.len(), "repeated pivots");
+    }
+}

@@ -1,0 +1,202 @@
+//! RR-CG — Russian-roulette randomized-truncation conjugate gradients
+//! (Potapczynski et al., 2021), the bias-free solver the paper
+//! recommends in §5.4 / Table 4 to avoid the instabilities of loose CG
+//! tolerances without paying the full tight-tolerance runtime.
+//!
+//! CG after J iterations gives x_J = Σ_{j≤J} Δx_j. Truncating at a
+//! random J and importance-weighting each increment by 1/P(J ≥ j) keeps
+//! the estimator unbiased for the *converged* solution:
+//!   x_RR = Σ_{j ≤ J} Δx_j / P(J ≥ j),  J ~ truncated geometric.
+
+use crate::mvm::MvmOperator;
+use crate::util::stats::{axpy, dot};
+use crate::util::Pcg64;
+
+/// RR-CG options: the geometric success probability controls the
+/// expected truncation depth E[J] ≈ 1/p (plus the floor).
+#[derive(Clone, Copy, Debug)]
+pub struct RrCgOptions {
+    /// Geometric parameter for the random truncation depth.
+    pub geom_p: f64,
+    /// Always run at least this many iterations (variance control).
+    pub min_iters: usize,
+    /// Hard cap (paper Table 5: 500).
+    pub max_iters: usize,
+    /// Residual tolerance — if CG converges to `tol` before the sampled
+    /// truncation J, stop there (the estimator is exact past
+    /// convergence; RR-CG(1e-8) in Table 4 sets this very tight so the
+    /// truncation is almost always the random J).
+    pub tol: f64,
+}
+
+impl Default for RrCgOptions {
+    fn default() -> Self {
+        RrCgOptions {
+            geom_p: 0.05,
+            min_iters: 10,
+            max_iters: 500,
+            tol: 1e-8,
+        }
+    }
+}
+
+/// Result of one RR-CG solve.
+pub struct RrCgResult {
+    /// The unbiased (importance-weighted) iterate.
+    pub x: Vec<f64>,
+    /// Iterations actually run.
+    pub iterations: usize,
+    /// The sampled truncation depth.
+    pub truncation: usize,
+}
+
+/// Unbiased randomized-truncation CG for SPD `A x = b`.
+pub fn rr_cg(a: &dyn MvmOperator, b: &[f64], opts: RrCgOptions, rng: &mut Pcg64) -> RrCgResult {
+    let n = b.len();
+    assert_eq!(a.len(), n);
+    // Sample truncation depth: min_iters + Geometric(p) failures.
+    let j_max = (opts.min_iters + rng.geometric(opts.geom_p)).min(opts.max_iters);
+    // Survival probabilities P(J >= j) for the importance weights.
+    // For j <= min_iters: P = 1. Beyond: P = (1-p)^(j - min_iters).
+    let survival = |j: usize| -> f64 {
+        if j <= opts.min_iters {
+            1.0
+        } else {
+            (1.0 - opts.geom_p).powi((j - opts.min_iters) as i32)
+        }
+    };
+
+    let sqrt_n = (n as f64).sqrt().max(1e-300);
+    let mut x_rr = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rs = dot(&r, &r);
+    let mut iterations = 0;
+    for j in 1..=j_max {
+        let ap = a.mvm(&p);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            break;
+        }
+        let alpha = rs / pap;
+        // Increment Δx_j = alpha·p, importance-weighted.
+        let w = 1.0 / survival(j);
+        axpy(alpha * w, &p, &mut x_rr);
+        axpy(-alpha, &ap, &mut r);
+        iterations = j;
+        let rs_new = dot(&r, &r);
+        if rs_new.sqrt() / sqrt_n <= opts.tol {
+            break;
+        }
+        let beta = rs_new / rs;
+        rs = rs_new;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+    }
+    RrCgResult {
+        x: x_rr,
+        iterations,
+        truncation: j_max,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::mvm::DenseMvm;
+    use crate::solvers::cg::{cg, CgOptions};
+
+    fn spd_op(n: usize, seed: u64) -> DenseMvm {
+        let mut rng = Pcg64::new(seed);
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n * n {
+            b.data[i] = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64);
+        DenseMvm { mat: a }
+    }
+
+    #[test]
+    fn unbiased_estimate_of_solution() {
+        // Mean of many RR-CG solves ≈ the converged CG solution.
+        let n = 30;
+        let op = spd_op(n, 1);
+        let mut rng = Pcg64::new(2);
+        let b = rng.normal_vec(n);
+        let exact = cg(
+            &op,
+            &b,
+            CgOptions {
+                tol: 1e-12,
+                max_iters: 500,
+                    min_iters: 1,
+                },
+        )
+        .x;
+        let opts = RrCgOptions {
+            geom_p: 0.25,
+            min_iters: 3,
+            max_iters: 500,
+            tol: 1e-14,
+        };
+        let trials = 4000;
+        let mut mean = vec![0.0; n];
+        for _ in 0..trials {
+            let r = rr_cg(&op, &b, opts, &mut rng);
+            for i in 0..n {
+                mean[i] += r.x[i] / trials as f64;
+            }
+        }
+        let err = crate::util::stats::rel_l2(&mean, &exact);
+        assert!(err < 0.05, "RR-CG mean deviates: rel {err}");
+    }
+
+    #[test]
+    fn truncation_depth_varies() {
+        let n = 20;
+        let op = spd_op(n, 3);
+        let mut rng = Pcg64::new(4);
+        let b = rng.normal_vec(n);
+        let opts = RrCgOptions {
+            geom_p: 0.2,
+            min_iters: 2,
+            max_iters: 500,
+            tol: 1e-14,
+        };
+        let depths: Vec<usize> = (0..50)
+            .map(|_| rr_cg(&op, &b, opts, &mut rng).truncation)
+            .collect();
+        let min = depths.iter().min().unwrap();
+        let max = depths.iter().max().unwrap();
+        assert!(min < max, "truncation should be random: {depths:?}");
+    }
+
+    #[test]
+    fn matches_cg_when_converged_early() {
+        // If the system converges before min_iters, RR weights are all 1
+        // and RR-CG equals CG exactly.
+        let n = 25;
+        let op = DenseMvm {
+            mat: Mat::eye(n), // converges in one iteration
+        };
+        let mut rng = Pcg64::new(5);
+        let b = rng.normal_vec(n);
+        let r = rr_cg(
+            &op,
+            &b,
+            RrCgOptions {
+                geom_p: 0.05,
+                min_iters: 10,
+                max_iters: 100,
+                tol: 1e-12,
+            },
+            &mut rng,
+        );
+        for i in 0..n {
+            assert!((r.x[i] - b[i]).abs() < 1e-10);
+        }
+    }
+}

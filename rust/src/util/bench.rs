@@ -1,0 +1,204 @@
+//! Minimal benchmark harness (criterion is not in the vendored registry).
+//!
+//! Every `rust/benches/*.rs` target uses this: warmup, repeated timed
+//! runs, trimmed statistics, aligned table printing that mirrors the
+//! paper's tables/figure series, and CSV output under
+//! `target/bench_results/` for plotting.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of timing one closure.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub label: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `iters` measured
+/// runs. The closure result is returned (last run) to keep the work
+/// observable.
+pub fn time_fn<R>(label: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> (Timing, R) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let r = f();
+        samples.push(t0.elapsed().as_secs_f64());
+        last = Some(std::hint::black_box(r));
+    }
+    let timing = Timing {
+        label: label.to_string(),
+        iters: samples.len(),
+        mean_s: stats::mean(&samples),
+        median_s: stats::median(&samples),
+        std_s: stats::std(&samples),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    (timing, last.unwrap())
+}
+
+/// Adaptive variant: keeps iterating until `budget_s` of measured time or
+/// `max_iters` runs, whichever first — good for benches whose per-run cost
+/// varies by orders of magnitude across the parameter sweep.
+pub fn time_budget<R>(
+    label: &str,
+    budget_s: f64,
+    max_iters: usize,
+    mut f: impl FnMut() -> R,
+) -> Timing {
+    // One warmup run.
+    std::hint::black_box(f());
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < max_iters.max(1)
+        && (samples.is_empty() || start.elapsed().as_secs_f64() < budget_s)
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        label: label.to_string(),
+        iters: samples.len(),
+        mean_s: stats::mean(&samples),
+        median_s: stats::median(&samples),
+        std_s: stats::std(&samples),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$}  ", c, width = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Also write the table as CSV under target/bench_results/<name>.csv.
+    pub fn write_csv(&self, name: &str) {
+        let dir = std::path::Path::new("target/bench_results");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let mut s = String::new();
+        s.push_str(&self.headers.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        let path = dir.join(format!("{name}.csv"));
+        if std::fs::write(&path, s).is_ok() {
+            println!("[csv] wrote {}", path.display());
+        }
+    }
+}
+
+/// Pretty seconds: "12.3 ms" / "4.56 s".
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Pretty byte counts.
+pub fn fmt_bytes(b: usize) -> String {
+    let b = b as f64;
+    if b < 1024.0 {
+        format!("{b:.0} B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1} MiB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+/// `--quick` flag helper: benches downscale workloads when set (CI runs).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("SIMPLEX_GP_BENCH_QUICK").is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_iters() {
+        let (t, v) = time_fn("x", 1, 5, || 42u32);
+        assert_eq!(t.iters, 5);
+        assert_eq!(v, 42);
+        assert!(t.mean_s >= 0.0);
+        assert!(t.min_s <= t.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn table_accepts_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // smoke
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(0.0123), "12.3 ms");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+    }
+
+    #[test]
+    fn budget_runs_at_least_once() {
+        let t = time_budget("y", 0.0, 10, || 1u8);
+        assert!(t.iters >= 1);
+    }
+}

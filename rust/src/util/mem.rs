@@ -1,0 +1,61 @@
+//! Process-level memory observation (the paper's Fig. 5 reports peak GPU
+//! memory; our analog is peak RSS plus exact accounting of the lattice /
+//! baseline data structures, which the fig5 bench reports side by side).
+
+/// Current resident set size in bytes, from /proc/self/statm (Linux).
+pub fn current_rss() -> usize {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/statm") {
+        let mut it = s.split_whitespace();
+        let _size = it.next();
+        if let Some(res) = it.next() {
+            if let Ok(pages) = res.parse::<usize>() {
+                return pages * page_size();
+            }
+        }
+    }
+    0
+}
+
+/// Peak resident set size in bytes, from /proc/self/status VmHWM (Linux).
+pub fn peak_rss() -> usize {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: usize = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0);
+                return kb * 1024;
+            }
+        }
+    }
+    0
+}
+
+fn page_size() -> usize {
+    // Linux default; avoiding libc::sysconf keeps this dependency-free and
+    // the 4 KiB assumption holds on every target we run on.
+    4096
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        let rss = current_rss();
+        assert!(rss > 0, "expected nonzero RSS, got {rss}");
+    }
+
+    #[test]
+    fn peak_at_least_current() {
+        // Touch some memory first so both are populated.
+        let v = vec![1u8; 1 << 20];
+        std::hint::black_box(&v);
+        let peak = peak_rss();
+        assert!(peak > 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared infrastructure: RNG, statistics, parallelism, benchmarking,
+//! memory observation, JSON. These are the substrates the offline build
+//! environment forces us to own (no rand/rayon/criterion/serde).
+
+pub mod bench;
+pub mod json;
+pub mod mem;
+pub mod parallel;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg64;

@@ -1,0 +1,162 @@
+//! Scoped data-parallel helpers built on `std::thread` (no rayon in the
+//! vendored registry). The MVM hot paths split index ranges across a
+//! fixed number of OS threads via `std::thread::scope`.
+
+/// Number of worker threads to use: `SIMPLEX_GP_THREADS` env var, else
+/// available parallelism, else 1.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("SIMPLEX_GP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Split `0..n` into at most `parts` contiguous chunks of near-equal size.
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1).min(n.max(1));
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(range, chunk_index)` over disjoint chunks of `0..n` in parallel.
+/// `f` must be `Sync` (called concurrently with disjoint ranges).
+pub fn par_ranges<F>(n: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, usize) + Sync,
+{
+    let nt = num_threads();
+    if nt <= 1 || n < 1024 {
+        f(0..n, 0);
+        return;
+    }
+    let ranges = chunk_ranges(n, nt);
+    std::thread::scope(|s| {
+        for (i, r) in ranges.into_iter().enumerate() {
+            let f = &f;
+            s.spawn(move || f(r, i));
+        }
+    });
+}
+
+/// Parallel map over disjoint mutable chunks of `out`: `f(chunk_range,
+/// out_chunk)` fills `out[chunk_range]`. This is the shape of every MVM
+/// output loop (each output element depends only on shared read-only
+/// state).
+pub fn par_fill<T, F>(out: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
+{
+    let n = out.len();
+    let nt = num_threads();
+    if nt <= 1 || n < 1024 {
+        f(0..n, out);
+        return;
+    }
+    let ranges = chunk_ranges(n, nt);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut offset = 0;
+        for r in ranges {
+            let (head, tail) = rest.split_at_mut(r.len());
+            rest = tail;
+            let f = &f;
+            let start = offset;
+            offset += r.len();
+            s.spawn(move || f(start..start + head.len(), head));
+        }
+    });
+}
+
+/// Parallel map-reduce: apply `map` to each chunk, combine with `reduce`.
+pub fn par_map_reduce<R, M, Rd>(n: usize, map: M, reduce: Rd, init: R) -> R
+where
+    R: Send,
+    M: Fn(std::ops::Range<usize>) -> R + Sync,
+    Rd: Fn(R, R) -> R,
+{
+    let nt = num_threads();
+    if nt <= 1 || n < 1024 {
+        return reduce(init, map(0..n));
+    }
+    let ranges = chunk_ranges(n, nt);
+    let partials: Vec<R> = std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                let map = &map;
+                s.spawn(move || map(r))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    partials.into_iter().fold(init, reduce)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for n in [0usize, 1, 7, 100, 1023] {
+            for p in [1usize, 2, 3, 8] {
+                let rs = chunk_ranges(n, p);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                // Contiguity.
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_fill_matches_serial() {
+        let mut out = vec![0u64; 10_000];
+        par_fill(&mut out, |range, chunk| {
+            for (k, i) in range.enumerate() {
+                chunk[k] = (i * i) as u64;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn par_ranges_covers_all() {
+        let count = AtomicUsize::new(0);
+        par_ranges(5000, |r, _| {
+            count.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 5000);
+    }
+
+    #[test]
+    fn map_reduce_sums() {
+        let s = par_map_reduce(
+            10_000,
+            |r| r.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+            0u64,
+        );
+        assert_eq!(s, (0..10_000u64).sum());
+    }
+}

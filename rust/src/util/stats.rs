@@ -1,0 +1,211 @@
+//! Small statistics helpers shared by metrics, benches and tests.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copies and sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// p-th percentile (nearest-rank), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Root-mean-squared error between predictions and targets.
+pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let se: f64 = pred
+        .iter()
+        .zip(target)
+        .map(|(p, t)| (p - t).powi(2))
+        .sum();
+    (se / pred.len() as f64).sqrt()
+}
+
+/// Mean Gaussian negative log-likelihood of targets under per-point
+/// predictive mean/variance (the paper's "test NLL" column).
+pub fn gaussian_nll(mean_: &[f64], var: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(mean_.len(), target.len());
+    assert_eq!(var.len(), target.len());
+    let n = target.len().max(1) as f64;
+    mean_
+        .iter()
+        .zip(var)
+        .zip(target)
+        .map(|((m, v), t)| {
+            let v = v.max(1e-12);
+            0.5 * ((2.0 * std::f64::consts::PI * v).ln() + (t - m).powi(2) / v)
+        })
+        .sum::<f64>()
+        / n
+}
+
+/// Cosine error `1 - <a,b> / (|a||b|)` — the metric of the paper's Fig. 4.
+pub fn cosine_error(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 1.0;
+    }
+    1.0 - dot / (na * nb)
+}
+
+/// Relative L2 error `|a-b| / |b|`.
+pub fn rel_l2(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let den: f64 = b.iter().map(|y| y * y).sum::<f64>().sqrt();
+    if den == 0.0 {
+        num
+    } else {
+        num / den
+    }
+}
+
+/// Ordinary least squares slope of log(y) vs log(x): empirical scaling
+/// exponent, used by the Table-1 bench to fit O(n^alpha).
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let mx = mean(&lx);
+    let my = mean(&ly);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..lx.len() {
+        num += (lx[i] - mx) * (ly[i] - my);
+        den += (lx[i] - mx) * (lx[i] - mx);
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_zero_for_equal() {
+        let a = [1.0, -2.0, 3.5];
+        assert_eq!(rmse(&a, &a), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_error_bounds() {
+        let a = [1.0, 0.0];
+        let b = [0.0, 1.0];
+        assert!((cosine_error(&a, &a)).abs() < 1e-12);
+        assert!((cosine_error(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [-1.0, 0.0];
+        assert!((cosine_error(&a, &c) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loglog_slope_recovers_exponent() {
+        let xs: Vec<f64> = vec![1e2, 1e3, 1e4, 1e5];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x.powf(2.0)).collect();
+        assert!((loglog_slope(&xs, &ys) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nll_of_standard_normal_sample() {
+        // NLL of target==mean with var=1 is 0.5*ln(2*pi).
+        let nll = gaussian_nll(&[0.0], &[1.0], &[0.0]);
+        assert!((nll - 0.5 * (2.0 * std::f64::consts::PI).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn axpy_dot_norm() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        assert_eq!(dot(&x, &x), 5.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,176 @@
+//! Cross-module integration tests: dataset → lattice → solver → model →
+//! coordinator, plus native-vs-PJRT parity on a *real* built lattice
+//! (the unit tests cover each layer; these cover the seams).
+
+use simplex_gp::baselines::ExactGp;
+use simplex_gp::coordinator::{Client, ServeConfig, Server};
+use simplex_gp::datasets::{generate, split_standardize};
+use simplex_gp::gp::{train, GpConfig, SimplexGp, TrainConfig};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::lattice::PermutohedralLattice;
+use simplex_gp::mvm::{MvmOperator, SimplexMvm};
+use simplex_gp::util::stats::{cosine_error, rmse};
+use simplex_gp::util::Pcg64;
+
+#[test]
+fn dataset_to_model_pipeline() {
+    // Full path: generator → split/standardize → fit → predict.
+    let ds = generate("protein", 1800, 3);
+    let sp = split_standardize(&ds, 4);
+    let d = 9;
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 1.0);
+    let gp = SimplexGp::fit(
+        &sp.train.x,
+        &sp.train.y,
+        d,
+        kernel,
+        0.1,
+        GpConfig::default(),
+    )
+    .unwrap();
+    let pred = gp.predict_mean(&sp.test.x);
+    let err = rmse(&pred, &sp.test.y);
+    let base = rmse(&vec![0.0; sp.test.n()], &sp.test.y);
+    assert!(err < base, "model no better than mean: {err} vs {base}");
+}
+
+#[test]
+fn trained_model_beats_untrained() {
+    let ds = generate("precipitation", 1500, 5);
+    let sp = split_standardize(&ds, 6);
+    let d = 3;
+    let mut cfg = TrainConfig::default();
+    cfg.epochs = 10;
+    cfg.probes = 4;
+    let out = train(
+        &sp.train.x,
+        &sp.train.y,
+        &sp.val.x,
+        &sp.val.y,
+        d,
+        KernelFamily::Rbf,
+        cfg,
+    )
+    .unwrap();
+    let trained = rmse(&out.model.predict_mean(&sp.test.x), &sp.test.y);
+    // Untrained reference: unit hyperparameters.
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+    let gp0 = SimplexGp::fit(
+        &sp.train.x,
+        &sp.train.y,
+        d,
+        kernel,
+        0.1,
+        GpConfig::default(),
+    )
+    .unwrap();
+    let untrained = rmse(&gp0.predict_mean(&sp.test.x), &sp.test.y);
+    assert!(
+        trained <= untrained * 1.05,
+        "training hurt: {trained} vs {untrained}"
+    );
+}
+
+#[test]
+fn simplex_and_exact_gp_agree_on_easy_problem() {
+    let ds = generate("protein", 900, 7);
+    let sp = split_standardize(&ds, 8);
+    let d = 9;
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.5);
+    let noise = 0.1;
+    let sgp = SimplexGp::fit(
+        &sp.train.x,
+        &sp.train.y,
+        d,
+        kernel.clone(),
+        noise,
+        GpConfig::default(),
+    )
+    .unwrap();
+    let egp = ExactGp::fit(&sp.train.x, &sp.train.y, d, kernel, noise, 1e-4).unwrap();
+    let ps = sgp.predict_mean(&sp.test.x);
+    let pe = egp.predict_mean(&sp.test.x);
+    let cos = cosine_error(&ps, &pe);
+    assert!(cos < 0.15, "simplex vs exact prediction cosine error {cos}");
+    // And both beat the trivial predictor.
+    let base = rmse(&vec![0.0; sp.test.n()], &sp.test.y);
+    assert!(rmse(&ps, &sp.test.y) < base);
+    assert!(rmse(&pe, &sp.test.y) < base);
+}
+
+#[test]
+fn pjrt_backend_matches_native_on_real_lattice() {
+    // Requires `make artifacts`. Skips (with a note) if absent.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = simplex_gp::runtime::PjrtRuntime::new(&dir).unwrap();
+    // d=3 bucket: n ≤ 2048, m+1 ≤ 4096, r=1.
+    let ds = generate("precipitation", 1600, 9);
+    let sp = split_standardize(&ds, 10);
+    let d = 3;
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+    let lat = PermutohedralLattice::build(&sp.train.x, d, &kernel, 1);
+    assert!(lat.m + 1 <= 4096, "lattice too large for the bucket: {}", lat.m);
+    let px = simplex_gp::runtime::SimplexPjrtMvm::new(&rt, &lat, 1.0).unwrap();
+    let mut rng = Pcg64::new(11);
+    let v = rng.normal_vec(lat.n);
+    let native = lat.mvm(&v);
+    let pjrt = px.mvm(&v).unwrap();
+    // f32 artifact vs f64 native: agree to single precision.
+    let err = simplex_gp::util::stats::rel_l2(&pjrt, &native);
+    assert!(err < 1e-4, "pjrt vs native rel err {err}");
+}
+
+#[test]
+fn serve_predictions_match_direct_calls() {
+    let ds = generate("elevators", 900, 12);
+    let sp = split_standardize(&ds, 13);
+    let d = 17;
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 1.0);
+    let gp = SimplexGp::fit(
+        &sp.train.x,
+        &sp.train.y,
+        d,
+        kernel,
+        0.1,
+        GpConfig::default(),
+    )
+    .unwrap();
+    let probe = sp.test.x[..4 * d].to_vec();
+    let direct = gp.predict_mean(&probe);
+    let mut cfg = ServeConfig::default();
+    cfg.addr = "127.0.0.1:0".to_string();
+    let server = Server::start(gp, cfg).unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let served = client.predict(&probe, d).unwrap();
+    for i in 0..4 {
+        assert!((served[i] - direct[i]).abs() < 1e-9);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn mvm_operator_consistency_across_backends() {
+    // SimplexMvm (operator) == lattice.mvm (direct) == symmetrized
+    // within tolerance.
+    let ds = generate("keggdirected", 1200, 14);
+    let sp = split_standardize(&ds, 15);
+    let d = 20;
+    let mut kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.2);
+    kernel.outputscale = 1.7;
+    let op = SimplexMvm::build(&sp.train.x, d, &kernel, 1);
+    let mut rng = Pcg64::new(16);
+    let v = rng.normal_vec(op.len());
+    let a = op.mvm(&v);
+    let direct: Vec<f64> = op.lattice.mvm(&v).iter().map(|x| x * 1.7).collect();
+    for i in 0..a.len() {
+        assert!((a[i] - direct[i]).abs() < 1e-12);
+    }
+    let sym = SimplexMvm::build(&sp.train.x, d, &kernel, 1).with_symmetrize(true);
+    let b = sym.mvm(&v);
+    let cos = cosine_error(&a, &b);
+    assert!(cos < 0.02, "symmetrization changed the operator too much: {cos}");
+}

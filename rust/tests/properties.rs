@@ -1,0 +1,249 @@
+//! Property-based sweeps (hand-rolled: proptest isn't in the vendored
+//! registry). Each property is exercised across a seeded family of
+//! random shapes/dimensions/lengthscales — failures print the exact
+//! (seed, d, n, ℓ) tuple for replay.
+
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::lattice::filter::exact_mvm;
+use simplex_gp::lattice::PermutohedralLattice;
+use simplex_gp::linalg::Mat;
+use simplex_gp::mvm::{DenseMvm, MvmOperator, Shifted, SimplexMvm};
+use simplex_gp::solvers::{cg, CgOptions};
+use simplex_gp::stencil::{fourier_coverage, optimal_spacing, spatial_coverage, Stencil};
+use simplex_gp::util::json::Json;
+use simplex_gp::util::stats::{cosine_error, dot};
+use simplex_gp::util::Pcg64;
+
+const FAMILIES: [KernelFamily; 4] = [
+    KernelFamily::Rbf,
+    KernelFamily::Matern12,
+    KernelFamily::Matern32,
+    KernelFamily::Matern52,
+];
+
+fn case_rng(seed: u64) -> Pcg64 {
+    Pcg64::with_stream(0x9e37_79b9, seed)
+}
+
+#[test]
+fn barycentric_weights_valid_across_shapes() {
+    for case in 0..40u64 {
+        let mut rng = case_rng(case);
+        let d = 1 + rng.below(20);
+        let n = 20 + rng.below(200);
+        let ell = rng.uniform_in(0.1, 3.0);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, ell);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        for i in 0..n {
+            let row = &lat.weights[i * (d + 1)..(i + 1) * (d + 1)];
+            let sum: f64 = row.iter().sum();
+            assert!(
+                (sum - 1.0).abs() < 1e-9,
+                "case {case} (d={d} n={n} ell={ell}): weight sum {sum}"
+            );
+            for &w in row {
+                assert!(w >= -1e-12, "case {case}: negative weight {w}");
+            }
+        }
+    }
+}
+
+#[test]
+fn splat_slice_adjoint_across_shapes() {
+    for case in 0..30u64 {
+        let mut rng = case_rng(1000 + case);
+        let d = 1 + rng.below(12);
+        let n = 30 + rng.below(150);
+        let ell = rng.uniform_in(0.2, 2.0);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, ell);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let v = rng.normal_vec(n);
+        let z = rng.normal_vec(lat.m + 1);
+        let lhs = dot(&lat.splat(&v, 1), &z);
+        let rhs = dot(&v, &lat.slice(&z, 1));
+        assert!(
+            (lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()),
+            "case {case} (d={d} n={n}): {lhs} vs {rhs}"
+        );
+    }
+}
+
+#[test]
+fn symmetrized_mvm_is_symmetric_across_shapes() {
+    for case in 0..15u64 {
+        let mut rng = case_rng(2000 + case);
+        let d = 2 + rng.below(10);
+        let n = 50 + rng.below(150);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let op = SimplexMvm::build(&x, d, &k, 1).with_symmetrize(true);
+        let u = rng.normal_vec(n);
+        let v = rng.normal_vec(n);
+        let a = dot(&u, &op.mvm(&v));
+        let b = dot(&v, &op.mvm(&u));
+        assert!(
+            (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+            "case {case} (d={d} n={n}): asym {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn mvm_tracks_exact_across_families_and_lengthscales() {
+    for case in 0..12u64 {
+        let mut rng = case_rng(3000 + case);
+        let d = 2 + rng.below(4);
+        let n = 120;
+        let fam = FAMILIES[rng.below(FAMILIES.len())];
+        let ell = rng.uniform_in(0.5, 2.0);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(fam, d, ell);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let v = rng.normal_vec(n);
+        let err = cosine_error(&lat.mvm(&v), &exact_mvm(&k, &x, d, &v));
+        assert!(
+            err < 0.12,
+            "case {case} ({fam:?} d={d} ell={ell:.2}): cosine err {err}"
+        );
+    }
+}
+
+#[test]
+fn cg_solves_shifted_simplex_systems() {
+    // The production solve: (symmetrized lattice MVM + σ²I) is solvable
+    // to tight tolerance across shapes, and the solution satisfies the
+    // residual bound.
+    for case in 0..8u64 {
+        let mut rng = case_rng(4000 + case);
+        let d = 2 + rng.below(6);
+        let n = 100 + rng.below(200);
+        let noise = rng.uniform_in(0.05, 0.5);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let op = SimplexMvm::build(&x, d, &k, 1).with_symmetrize(true);
+        let shifted = Shifted::new(&op, noise);
+        let b = rng.normal_vec(n);
+        let res = cg(
+            &shifted,
+            &b,
+            CgOptions {
+                tol: 1e-6,
+                max_iters: 500,
+                min_iters: 1,
+            },
+        );
+        let ax = shifted.mvm(&res.x);
+        let rnorm: f64 = ax
+            .iter()
+            .zip(&b)
+            .map(|(a, bb)| (a - bb) * (a - bb))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            rnorm / (n as f64).sqrt() < 1e-5,
+            "case {case} (d={d} n={n} noise={noise:.2}): residual {rnorm}"
+        );
+    }
+}
+
+#[test]
+fn stencil_balance_across_families_orders() {
+    for fam in FAMILIES {
+        for r in 1..=4usize {
+            let s = optimal_spacing(fam, r);
+            let gap = spatial_coverage(fam, r, s) - fourier_coverage(fam, s);
+            assert!(gap.abs() < 2e-3, "{fam:?} r={r}: gap {gap}");
+            let st = Stencil::build(fam, r);
+            assert_eq!(st.taps.len(), 2 * r + 1);
+            assert!((st.taps[r] - 1.0).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn cg_matches_dense_solve_on_random_spd() {
+    for case in 0..10u64 {
+        let mut rng = case_rng(5000 + case);
+        let n = 20 + rng.below(60);
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n * n {
+            b.data[i] = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64 * rng.uniform_in(0.1, 2.0));
+        let rhs = rng.normal_vec(n);
+        let dense_x = simplex_gp::linalg::solve_spd(&a, &rhs).unwrap();
+        let op = DenseMvm { mat: a };
+        let res = cg(
+            &op,
+            &rhs,
+            CgOptions {
+                tol: 1e-12,
+                max_iters: 1000,
+                min_iters: 1,
+            },
+        );
+        for i in 0..n {
+            assert!(
+                (res.x[i] - dense_x[i]).abs() < 1e-6,
+                "case {case}: x[{i}] {} vs {}",
+                res.x[i],
+                dense_x[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn json_roundtrip_random_values() {
+    for case in 0..30u64 {
+        let mut rng = case_rng(6000 + case);
+        // Random nested structure.
+        fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.next_u64() & 1 == 0),
+                2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+                3 => Json::Str(format!("s{}-\"quoted\"\n", rng.below(1000))),
+                4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for k in 0..rng.below(4) {
+                        m.insert(format!("k{k}"), random_json(rng, depth - 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: reparse failed: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}");
+    }
+}
+
+#[test]
+fn embed_only_is_partition_of_unity_inside_hull() {
+    // Points interpolated near training data keep weight mass ≈ 1.
+    for case in 0..10u64 {
+        let mut rng = case_rng(7000 + case);
+        let d = 2 + rng.below(6);
+        let n = 300;
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        // Probe at training points themselves.
+        let (off, w) = lat.embed_only(&x[..20 * d], &k);
+        for i in 0..20 {
+            let mass: f64 = w[i * (d + 1)..(i + 1) * (d + 1)].iter().sum();
+            assert!(
+                (mass - 1.0).abs() < 1e-9,
+                "case {case} point {i}: mass {mass}"
+            );
+            assert!(off[i * (d + 1)..(i + 1) * (d + 1)].iter().all(|&o| o != 0));
+        }
+    }
+}
