@@ -4,6 +4,11 @@
 //! three-layer architecture: after `make artifacts`, everything on the
 //! request path is Rust.
 //!
+//! Two phases: concurrent `predict` load (rows coalesce into one slice
+//! pass per batch) and concurrent raw `mvm` load (vectors coalesce into
+//! one row-major block driven through a single batched splat→blur→slice
+//! — see ARCHITECTURE.md, §Batch layout).
+//!
 //!     cargo run --release --example serving
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -82,7 +87,55 @@ fn main() -> anyhow::Result<()> {
         percentile(&all, 95.0) * 1e3,
         percentile(&all, 99.0) * 1e3);
     println!("server served        : {} requests", server.served());
+    let predict_batches = server.batches();
+    println!(
+        "coalesced passes     : {} ({:.1} requests/pass)",
+        predict_batches,
+        total_reqs as f64 / predict_batches.max(1) as f64
+    );
     assert_eq!(completed.load(Ordering::Relaxed), total_reqs);
+
+    // --- Phase 2: concurrent raw MVMs through the block engine ---
+    let n = {
+        let mut c = Client::connect(&addr)?;
+        let stats = c.stats()?;
+        stats
+            .get("n")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("stats missing n"))? as usize
+    };
+    let mvm_clients = 6;
+    let mvm_requests = 8;
+    let t1 = Instant::now();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..mvm_clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut rng = Pcg64::new(500 + c as u64);
+                    let mut client = Client::connect(&addr).expect("connect");
+                    for _ in 0..mvm_requests {
+                        let v = rng.normal_vec(n);
+                        let u = client.mvm(&v).expect("mvm");
+                        assert_eq!(u.len(), n);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let mvm_wall = t1.elapsed().as_secs_f64();
+    let mvm_total = mvm_clients * mvm_requests;
+    let mvm_batches = server.batches() - predict_batches;
+    println!("\n=== mvm load (coalesced block MVMs) ===");
+    println!("requests             : {mvm_total} (n = {n} each)");
+    println!("wall time            : {mvm_wall:.2} s");
+    println!(
+        "block passes         : {} ({:.1} MVMs coalesced per lattice pass)",
+        mvm_batches,
+        mvm_total as f64 / mvm_batches.max(1) as f64
+    );
     server.shutdown();
     println!("\nOK: coordinator batched concurrent clients through one lattice pass per batch.");
     Ok(())

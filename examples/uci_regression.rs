@@ -73,8 +73,13 @@ fn main() -> anyhow::Result<()> {
     );
     println!("learned noise σ²        : {:.4}", model.noise);
     println!("learned outputscale     : {:.3}", model.kernel.outputscale);
-    println!("learned lengthscales    : {:?}",
-        model.kernel.lengthscales.iter().map(|l| (l * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    let rounded: Vec<f64> = model
+        .kernel
+        .lengthscales
+        .iter()
+        .map(|l| (l * 1000.0).round() / 1000.0)
+        .collect();
+    println!("learned lengthscales    : {rounded:?}");
     println!("\nloss curve (epoch, train MLL, val RMSE):");
     for r in &out.records {
         println!(

@@ -1,0 +1,109 @@
+//! Batched multi-RHS MVM throughput: one `b × n` block pass through
+//! the lattice vs `b` sequential single-RHS MVMs (the acceptance
+//! benchmark for the block engine: B = 8 must beat 8 sequential MVMs
+//! by ≥ 2×), plus the same comparison for block-CG, where every Krylov
+//! iteration shares one lattice traversal across all right-hand sides.
+//!
+//!     cargo bench --bench batch_mvm [-- --quick]
+
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::mvm::{MvmOperator, Shifted, SimplexMvm};
+use simplex_gp::solvers::{cg, cg_block, CgOptions};
+use simplex_gp::util::bench::{fmt_secs, quick_mode, time_budget, Table};
+use simplex_gp::util::Pcg64;
+
+fn main() {
+    let quick = quick_mode();
+    let d = 4;
+    let n: usize = if quick { 4_096 } else { 32_768 };
+    let budget = if quick { 0.3 } else { 1.5 };
+    let mut rng = Pcg64::new(7);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+    let op = SimplexMvm::build(&x, d, &kernel, 1);
+    println!(
+        "lattice: n = {n}, d = {d}, m = {} ({} threads)\n",
+        op.lattice.m,
+        simplex_gp::util::parallel::num_threads()
+    );
+
+    // --- MVM throughput: sequential singles vs one block pass ---
+    let mut table = Table::new(&[
+        "B",
+        "sequential",
+        "block",
+        "speedup",
+        "RHS/s (block)",
+    ]);
+    for &b in &[1usize, 8, 32] {
+        let v = rng.normal_vec(n * b);
+        let seq = time_budget(&format!("seq b={b}"), budget, 50, || {
+            let mut out = Vec::with_capacity(n * b);
+            for c in 0..b {
+                out.extend_from_slice(&op.mvm(&v[c * n..(c + 1) * n]));
+            }
+            out
+        });
+        let blk = time_budget(&format!("block b={b}"), budget, 50, || op.mvm_block(&v, b));
+        let speedup = seq.median_s / blk.median_s.max(1e-12);
+        table.row(&[
+            b.to_string(),
+            fmt_secs(seq.median_s),
+            fmt_secs(blk.median_s),
+            format!("{speedup:.2}x"),
+            format!("{:.0}", b as f64 / blk.median_s.max(1e-12)),
+        ]);
+        if b == 8 {
+            println!(
+                "acceptance: B=8 block vs 8 sequential MVMs = {speedup:.2}x {}",
+                if speedup >= 2.0 { "(>= 2x: PASS)" } else { "(< 2x: FAIL)" }
+            );
+        }
+    }
+    println!("\nBatched MVM — one splat->blur->slice pass for all B RHS\n");
+    table.print();
+    table.write_csv("batch_mvm");
+
+    // --- Block-CG: probes + target solved in one Krylov run ---
+    let noise = 0.1;
+    let sym = SimplexMvm::build(&x, d, &kernel, 1).with_symmetrize(true);
+    let shifted = Shifted::new(&sym, noise);
+    let nrhs = 8;
+    let rhs = rng.normal_vec(n * nrhs);
+    let opts = CgOptions {
+        tol: 1e-4,
+        max_iters: 200,
+        min_iters: 1,
+    };
+    let mut cg_table = Table::new(&["solver", "time", "iterations"]);
+    let seq = time_budget("cg sequential", budget, 10, || {
+        let mut worst = 0usize;
+        for c in 0..nrhs {
+            let r = cg(&shifted, &rhs[c * n..(c + 1) * n], opts);
+            worst = worst.max(r.iterations);
+        }
+        worst
+    });
+    let blk = time_budget("cg block", budget, 10, || {
+        cg_block(&shifted, &rhs, nrhs, opts).iterations
+    });
+    let iters = cg_block(&shifted, &rhs, nrhs, opts).iterations;
+    cg_table.row(&[
+        format!("{nrhs} sequential CG solves"),
+        fmt_secs(seq.median_s),
+        iters.to_string(),
+    ]);
+    cg_table.row(&[
+        format!("block-CG ({nrhs} RHS)"),
+        fmt_secs(blk.median_s),
+        iters.to_string(),
+    ]);
+    println!(
+        "\nBlock-CG vs sequential CG (B = {nrhs}, tol = {:.0e}) — speedup {:.2}x\n",
+        opts.tol,
+        seq.median_s / blk.median_s.max(1e-12)
+    );
+    cg_table.print();
+    cg_table.write_csv("batch_cg");
+    println!();
+}

@@ -53,7 +53,12 @@ fn main() {
     table.write_csv("table1_mvm_scaling");
 
     let labels = ["exact", "kissgp", "skip", "simplex"];
-    let paper = ["O(n^2) => slope 2", "O(n 2^d) => slope 1", "O(rnd) => slope 1", "O(n d^2) => slope 1"];
+    let paper = [
+        "O(n^2) => slope 2",
+        "O(n 2^d) => slope 1",
+        "O(rnd) => slope 1",
+        "O(n d^2) => slope 1",
+    ];
     println!("\nEmpirical log-log scaling exponents (paper's Table 1 claim):");
     for i in 0..4 {
         let slope = loglog_slope(&ns, &times[i]);

@@ -338,7 +338,8 @@ fn cmd_goldens(args: &Args) -> Result<()> {
     for spec in rt.manifest.artifacts.clone() {
         let c = rt.compile(&spec.name)?;
         let err = c.replay_goldens()?;
-        println!("{:<40} max |err| = {err:.3e}  {}", spec.name, if err < 1e-3 { "OK" } else { "FAIL" });
+        let verdict = if err < 1e-3 { "OK" } else { "FAIL" };
+        println!("{:<40} max |err| = {err:.3e}  {verdict}", spec.name);
         if err >= 1e-3 {
             bail!("golden replay failed for {}", spec.name);
         }

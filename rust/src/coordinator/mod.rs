@@ -3,18 +3,23 @@
 //!
 //! Request path (no Python anywhere): TCP accept loop → per-connection
 //! reader threads → bounded request queue (backpressure) → batcher
-//! thread that coalesces up to `max_batch` prediction rows or
-//! `max_wait` of arrivals → one lattice filter pass for the whole batch
-//! → per-connection writers. MVMs can be routed to the native
-//! multithreaded path or to a PJRT artifact ([`crate::runtime`]).
+//! thread that coalesces up to `max_batch` work units or `max_wait` of
+//! arrivals → ONE lattice pass per request class for the whole batch →
+//! per-connection writers. Prediction rows from concurrent clients
+//! merge into a single slice pass; concurrent `mvm` requests stack
+//! into a row-major `b × n` block and run through one batched
+//! splat→blur→slice ([`crate::lattice::PermutohedralLattice::mvm_block`]),
+//! so serving throughput rides the same multi-RHS engine as the
+//! solvers. MVMs can be routed to the native multithreaded path or to
+//! a PJRT artifact ([`crate::runtime`]).
 //!
 //! Wire protocol: JSON lines.
 //!   → {"id": 7, "op": "predict", "x": [[...d floats...], ...]}
 //!   → {"id": 8, "op": "mvm", "v": [...n floats...]}
 //!   → {"id": 9, "op": "stats"}
 //!   ← {"id": 7, "mean": [...], "elapsed_us": 1234}
-//!   ← {"id": 8, "u": [...]}
-//!   ← {"id": 9, "n": ..., "m": ..., "d": ..., "served": ...}
+//!   ← {"id": 8, "u": [...], "batched_with": 3}
+//!   ← {"id": 9, "n": ..., "m": ..., "d": ..., "served": ..., "batches": ...}
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -29,7 +34,7 @@ use anyhow::{anyhow, Result};
 use crate::gp::SimplexGp;
 use crate::util::json::Json;
 
-/// Server configuration ([serve] section of the config file).
+/// Server configuration (`[serve]` section of the config file).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub addr: String,
@@ -75,9 +80,11 @@ enum Work {
 /// Running server handle (owned threads shut down when dropped after
 /// `shutdown`).
 pub struct Server {
+    /// Address the listener actually bound (resolves `:0` requests).
     pub local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     served: Arc<AtomicU64>,
+    batches: Arc<AtomicU64>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     batch_thread: Option<std::thread::JoinHandle<()>>,
 }
@@ -91,14 +98,16 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let served = Arc::new(AtomicU64::new(0));
+        let batches = Arc::new(AtomicU64::new(0));
         let (tx, rx) = sync_channel::<Work>(cfg.queue_depth);
 
         // Batcher thread owns the model.
         let batch_stop = stop.clone();
         let batch_served = served.clone();
+        let batch_batches = batches.clone();
         let batch_cfg = cfg.clone();
         let batch_thread = std::thread::spawn(move || {
-            batch_loop(model, rx, batch_cfg, batch_stop, batch_served);
+            batch_loop(model, rx, batch_cfg, batch_stop, batch_served, batch_batches);
         });
 
         // Accept loop.
@@ -125,15 +134,24 @@ impl Server {
             local_addr,
             stop,
             served,
+            batches,
             accept_thread: Some(accept_thread),
             batch_thread: Some(batch_thread),
         })
     }
 
+    /// Requests answered so far (predict + mvm).
     pub fn served(&self) -> u64 {
         self.served.load(Ordering::Relaxed)
     }
 
+    /// Coalesced lattice passes executed so far; `served() / batches()`
+    /// is the average coalescing factor the dynamic batcher achieved.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Stop the accept loop and batcher and join their threads.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
@@ -258,32 +276,48 @@ fn json_num_array(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
 
-/// The batcher: coalesce predictions, execute, reply.
-fn batch_loop(
-    model: SimplexGp,
-    rx: Receiver<Work>,
-    cfg: ServeConfig,
-    stop: Arc<AtomicBool>,
-    served: Arc<AtomicU64>,
-) {
-    let d = model.d;
-    let mut pending: Vec<(f64, usize, SyncSender<String>, Instant)> = Vec::new();
-    let mut batch_x: Vec<f64> = Vec::new();
-    let mut batch_rows = 0usize;
+/// Work accumulated by the batcher between flushes: coalesced
+/// prediction rows plus a coalesced block of raw MVM right-hand sides.
+#[derive(Default)]
+struct Batch {
+    /// (id, rows, reply, enqueued) per pending predict request.
+    predicts: Vec<(f64, usize, SyncSender<String>, Instant)>,
+    /// Concatenated prediction inputs (Σ rows × d).
+    predict_x: Vec<f64>,
+    predict_rows: usize,
+    /// (id, reply) per pending mvm request.
+    mvms: Vec<(f64, SyncSender<String>)>,
+    /// Row-major `b × n` block of mvm vectors awaiting one batched
+    /// lattice pass.
+    mvm_v: Vec<f64>,
+}
 
-    let flush = |pending: &mut Vec<(f64, usize, SyncSender<String>, Instant)>,
-                 batch_x: &mut Vec<f64>,
-                 batch_rows: &mut usize,
-                 served: &AtomicU64,
-                 model: &SimplexGp| {
-        if *batch_rows == 0 {
-            return;
-        }
+impl Batch {
+    /// Total coalesced work units (caps the fill loop).
+    fn units(&self) -> usize {
+        self.predict_rows + self.mvms.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.predicts.is_empty() && self.mvms.is_empty()
+    }
+}
+
+/// Execute everything queued in `batch` — one slice pass for all
+/// prediction rows, one block MVM for all mvm vectors — and reply.
+fn flush_batch(
+    batch: &mut Batch,
+    served: &AtomicU64,
+    batches: &AtomicU64,
+    model: &SimplexGp,
+) {
+    if !batch.predicts.is_empty() {
         let t0 = Instant::now();
-        let mean = model.predict_mean(batch_x);
+        let mean = model.predict_mean(&batch.predict_x);
         let elapsed_us = t0.elapsed().as_micros() as f64;
+        batches.fetch_add(1, Ordering::Relaxed);
         let mut cursor = 0usize;
-        for (id, rows, reply, enqueued) in pending.drain(..) {
+        for (id, rows, reply, enqueued) in batch.predicts.drain(..) {
             let slice = &mean[cursor..cursor + rows];
             cursor += rows;
             let mut obj = BTreeMap::new();
@@ -299,8 +333,84 @@ fn batch_loop(
             served.fetch_add(1, Ordering::Relaxed);
             let _ = reply.send(Json::Obj(obj).to_string());
         }
-        batch_x.clear();
-        *batch_rows = 0;
+        batch.predict_x.clear();
+        batch.predict_rows = 0;
+    }
+    if !batch.mvms.is_empty() {
+        let b = batch.mvms.len();
+        let n = model.n_train();
+        // One splat→blur→slice pass for all b concurrent MVM requests.
+        let u = model.operator().lattice.mvm_block(&batch.mvm_v, b);
+        batches.fetch_add(1, Ordering::Relaxed);
+        for (k, (id, reply)) in batch.mvms.drain(..).enumerate() {
+            let mut obj = BTreeMap::new();
+            obj.insert("id".to_string(), Json::Num(id));
+            obj.insert("u".to_string(), json_num_array(&u[k * n..(k + 1) * n]));
+            obj.insert("batched_with".to_string(), Json::Num(b as f64));
+            served.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Json::Obj(obj).to_string());
+        }
+        batch.mvm_v.clear();
+    }
+}
+
+/// The batcher: coalesce predictions and MVMs, execute, reply.
+fn batch_loop(
+    model: SimplexGp,
+    rx: Receiver<Work>,
+    cfg: ServeConfig,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+    batches: Arc<AtomicU64>,
+) {
+    let d = model.d;
+    let mut batch = Batch::default();
+
+    let handle = |w: Work, batch: &mut Batch| match w {
+        Work::Predict {
+            id,
+            x,
+            rows,
+            reply,
+            enqueued,
+        } => {
+            if x.len() != rows * d {
+                let _ = reply.send(format!(
+                    "{{\"id\":{id},\"error\":\"expected {d} features per row\"}}"
+                ));
+                return;
+            }
+            batch.predict_x.extend_from_slice(&x);
+            batch.predict_rows += rows;
+            batch.predicts.push((id, rows, reply, enqueued));
+        }
+        Work::Mvm { id, v, reply } => {
+            if v.len() != model.n_train() {
+                let _ = reply.send(format!(
+                    "{{\"id\":{id},\"error\":\"mvm vector must have length {}\"}}",
+                    model.n_train()
+                ));
+                return;
+            }
+            batch.mvm_v.extend_from_slice(&v);
+            batch.mvms.push((id, reply));
+        }
+        Work::Stats { id, reply } => {
+            let mut obj = BTreeMap::new();
+            obj.insert("id".to_string(), Json::Num(id));
+            obj.insert("n".to_string(), Json::Num(model.n_train() as f64));
+            obj.insert("m".to_string(), Json::Num(model.lattice_points() as f64));
+            obj.insert("d".to_string(), Json::Num(d as f64));
+            obj.insert(
+                "served".to_string(),
+                Json::Num(served.load(Ordering::Relaxed) as f64),
+            );
+            obj.insert(
+                "batches".to_string(),
+                Json::Num(batches.load(Ordering::Relaxed) as f64),
+            );
+            let _ = reply.send(Json::Obj(obj).to_string());
+        }
     };
 
     while !stop.load(Ordering::Relaxed) {
@@ -310,80 +420,31 @@ fn batch_loop(
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
             Err(_) => break,
         };
-        let mut deadline = Instant::now() + cfg.max_wait;
-        let handle = |w: Work,
-                          pending: &mut Vec<(f64, usize, SyncSender<String>, Instant)>,
-                          batch_x: &mut Vec<f64>,
-                          batch_rows: &mut usize| {
-            match w {
-                Work::Predict {
-                    id,
-                    x,
-                    rows,
-                    reply,
-                    enqueued,
-                } => {
-                    if x.len() != rows * d {
-                        let _ = reply.send(format!(
-                            "{{\"id\":{id},\"error\":\"expected {d} features per row\"}}"
-                        ));
-                        return;
-                    }
-                    batch_x.extend_from_slice(&x);
-                    *batch_rows += rows;
-                    pending.push((id, rows, reply, enqueued));
-                }
-                Work::Mvm { id, v, reply } => {
-                    if v.len() != model.n_train() {
-                        let _ = reply.send(format!(
-                            "{{\"id\":{id},\"error\":\"mvm vector must have length {}\"}}",
-                            model.n_train()
-                        ));
-                        return;
-                    }
-                    let u = model.operator().lattice.mvm(&v);
-                    let mut obj = BTreeMap::new();
-                    obj.insert("id".to_string(), Json::Num(id));
-                    obj.insert("u".to_string(), json_num_array(&u));
-                    let _ = reply.send(Json::Obj(obj).to_string());
-                }
-                Work::Stats { id, reply } => {
-                    let mut obj = BTreeMap::new();
-                    obj.insert("id".to_string(), Json::Num(id));
-                    obj.insert("n".to_string(), Json::Num(model.n_train() as f64));
-                    obj.insert(
-                        "m".to_string(),
-                        Json::Num(model.lattice_points() as f64),
-                    );
-                    obj.insert("d".to_string(), Json::Num(d as f64));
-                    let _ = reply.send(Json::Obj(obj).to_string());
-                }
-            }
-        };
-        handle(first, &mut pending, &mut batch_x, &mut batch_rows);
+        let deadline = Instant::now() + cfg.max_wait;
+        handle(first, &mut batch);
         // Fill the batch until deadline or capacity.
-        while batch_rows < cfg.max_batch {
+        while batch.units() < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(w) => {
-                    handle(w, &mut pending, &mut batch_x, &mut batch_rows);
-                    if batch_rows >= cfg.max_batch {
+                    handle(w, &mut batch);
+                    if batch.units() >= cfg.max_batch {
                         break;
                     }
                 }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
-                Err(_) => {
-                    deadline = Instant::now();
-                    break;
-                }
+                Err(_) => break,
             }
         }
-        flush(&mut pending, &mut batch_x, &mut batch_rows, &served, &model);
+        if !batch.is_empty() {
+            flush_batch(&mut batch, &served, &batches, &model);
+        }
     }
-    flush(&mut pending, &mut batch_x, &mut batch_rows, &served, &model);
+    if !batch.is_empty() {
+        flush_batch(&mut batch, &served, &batches, &model);
+    }
 }
 
 /// Blocking client helper (examples, benches, tests).
@@ -438,6 +499,29 @@ impl Client {
             .collect())
     }
 
+    /// Raw kernel MVM `u = K v` (unit outputscale) through the server's
+    /// dynamic batcher; concurrent calls coalesce into one block MVM.
+    pub fn mvm(&mut self, v: &[f64]) -> Result<Vec<f64>> {
+        let id = self.next_id;
+        self.next_id += 1.0;
+        let mut obj = BTreeMap::new();
+        obj.insert("id".to_string(), Json::Num(id));
+        obj.insert("op".to_string(), Json::Str("mvm".to_string()));
+        obj.insert("v".to_string(), json_num_array(v));
+        let reply = self.roundtrip(Json::Obj(obj).to_string())?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(reply
+            .get("u")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| anyhow!("reply missing u"))?
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect())
+    }
+
+    /// Server statistics (`n`, `m`, `d`, `served`, `batches`).
     pub fn stats(&mut self) -> Result<Json> {
         let id = self.next_id;
         self.next_id += 1.0;
@@ -505,6 +589,58 @@ mod tests {
             assert!(mean[0].is_finite());
         }
         assert!(server.served() >= 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn coalesced_mvm_matches_direct() {
+        let model = tiny_model();
+        let n = model.n_train();
+        let mut rng = Pcg64::new(5);
+        let v = rng.normal_vec(n);
+        let direct = model.operator().lattice.mvm(&v);
+        let mut cfg = ServeConfig::default();
+        cfg.addr = "127.0.0.1:0".to_string();
+        // Generous window: the assertion below is about coalescing, not
+        // latency, and CI runners schedule threads slowly.
+        cfg.max_wait = Duration::from_millis(250);
+        let server = Server::start(model, cfg).unwrap();
+        let addr = server.local_addr;
+        // Several concurrent mvm requests (same vector) must coalesce
+        // into block passes and all agree with the direct result. A
+        // barrier lines the sends up inside one batching window.
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(6));
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let v = v.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    barrier.wait();
+                    c.mvm(&v).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let u = h.join().unwrap();
+            assert_eq!(u.len(), n);
+            for i in 0..n {
+                assert!(
+                    (u[i] - direct[i]).abs() < 1e-9 * (1.0 + direct[i].abs()),
+                    "row {i}: {} vs {}",
+                    u[i],
+                    direct[i]
+                );
+            }
+        }
+        assert!(server.served() >= 6);
+        // Coalescing must have produced fewer lattice passes than
+        // requests (the 250 ms window comfortably gathers 6 clients).
+        assert!(
+            server.batches() < 6,
+            "no coalescing: {} batches for 6 mvm requests",
+            server.batches()
+        );
         server.shutdown();
     }
 

@@ -6,7 +6,7 @@ use anyhow::{ensure, Result};
 
 use crate::kernels::ArdKernel;
 use crate::mvm::{Shifted, SimplexMvm};
-use crate::solvers::{cg, cg_multi, slq_logdet, CgOptions};
+use crate::solvers::{cg, cg_block, slq_logdet, CgOptions};
 
 /// Inference-time configuration (defaults mirror the paper's Table 5).
 #[derive(Clone, Debug)]
@@ -86,8 +86,8 @@ impl SimplexGp {
             CgOptions {
                 tol: config.cg_tol,
                 max_iters: config.cg_max_iters,
-                    min_iters: 1,
-                },
+                min_iters: 1,
+            },
         );
         let fit_iterations = res.iterations;
         let alpha = res.x;
@@ -145,8 +145,11 @@ impl SimplexGp {
 
     /// Predictive mean and variance at `x_star`. The variance uses the
     /// SKI identity  v*ᵢ = s²k(0) + σ² − k*ᵢᵀ(K̂+σ²I)⁻¹k*ᵢ  with the
-    /// cross-covariance columns k*ᵢ realized through the lattice and the
-    /// per-point solves batched through the multi-channel filter.
+    /// cross-covariance columns k*ᵢ realized through the lattice and
+    /// the per-point solves batched: each chunk of test columns runs
+    /// one multi-channel filter pass and one block-CG solve, so every
+    /// Krylov iteration is a single lattice traversal shared by the
+    /// whole chunk.
     pub fn predict(&self, x_star: &[f64]) -> (Vec<f64>, Vec<f64>) {
         let t = x_star.len() / self.d;
         let mean = self.predict_mean(x_star);
@@ -155,14 +158,16 @@ impl SimplexGp {
         let (off, w) = lat.embed_only(x_star, &self.kernel);
         let shifted = Shifted::new(&self.op, self.noise);
         let prior = self.kernel.outputscale + self.noise;
-        // Batch test columns in chunks to bound the channel width.
+        // Batch test columns in chunks to bound the block width.
         let chunk = 64usize;
         let dp1 = self.d + 1;
+        let n = self.n_train();
         for c0 in (0..t).step_by(chunk) {
             let c1 = (c0 + chunk).min(t);
             let nc = c1 - c0;
-            // k*ᵢ columns: splat unit mass at test point i, blur, slice at
-            // training points. Build all nc channels in one filter pass.
+            // k*ᵢ columns: splat unit mass at test point i, blur, slice
+            // at training points. Build all nc channels in one filter
+            // pass (point-interleaved lattice layout).
             let mut z = vec![0.0; (lat.m + 1) * nc];
             for (c, i) in (c0..c1).enumerate() {
                 for k in 0..dp1 {
@@ -173,11 +178,14 @@ impl SimplexGp {
                 }
             }
             lat.blur(&mut z, nc, &lat.stencil.taps.clone());
-            let mut cols = lat.slice(&z, nc); // n × nc cross-cov (unit scale)
+            // Cross-covariance columns as a row-major block (`nc × n`,
+            // test column c contiguous) — ready for block CG and the
+            // final quadratic form without any strided access.
+            let mut cols = lat.slice_block(&z, nc);
             for v in cols.iter_mut() {
                 *v *= self.kernel.outputscale;
             }
-            let (sol, _) = cg_multi(
+            let sol = cg_block(
                 &shifted,
                 &cols,
                 nc,
@@ -187,12 +195,11 @@ impl SimplexGp {
                     min_iters: 1,
                 },
             );
-            let n = self.n_train();
             for (c, i) in (c0..c1).enumerate() {
-                let mut quad = 0.0;
-                for row in 0..n {
-                    quad += cols[row * nc + c] * sol[row * nc + c];
-                }
+                let quad = crate::util::stats::dot(
+                    &cols[c * n..(c + 1) * n],
+                    &sol.x[c * n..(c + 1) * n],
+                );
                 // Clamp: the SKI/CG approximation can overshoot.
                 var[i] = (prior - quad).max(1e-8);
             }
@@ -340,8 +347,10 @@ mod tests {
     #[test]
     fn rejects_bad_inputs() {
         let kernel = ArdKernel::new(KernelFamily::Rbf, 2);
-        assert!(SimplexGp::fit(&[1.0, 2.0, 3.0], &[1.0], 2, kernel.clone(), 0.1, GpConfig::default()).is_err());
-        assert!(SimplexGp::fit(&[1.0, 2.0], &[1.0, 2.0], 2, kernel.clone(), 0.1, GpConfig::default()).is_err());
-        assert!(SimplexGp::fit(&[1.0, 2.0], &[1.0], 2, kernel, 0.0, GpConfig::default()).is_err());
+        let cfg = GpConfig::default;
+        // x not a multiple of d, y length mismatch, non-positive noise.
+        assert!(SimplexGp::fit(&[1.0, 2.0, 3.0], &[1.0], 2, kernel.clone(), 0.1, cfg()).is_err());
+        assert!(SimplexGp::fit(&[1.0, 2.0], &[1.0, 2.0], 2, kernel.clone(), 0.1, cfg()).is_err());
+        assert!(SimplexGp::fit(&[1.0, 2.0], &[1.0], 2, kernel, 0.0, cfg()).is_err());
     }
 }

@@ -14,7 +14,7 @@ use anyhow::Result;
 use super::model::{GpConfig, SimplexGp};
 use crate::kernels::{ArdKernel, KernelFamily};
 use crate::mvm::{MvmOperator, Shifted, SimplexMvm};
-use crate::solvers::{cg_multi, rr_cg, slq_logdet, CgOptions, RrCgOptions};
+use crate::solvers::{cg_block, rr_cg, slq_logdet, CgOptions, RrCgOptions};
 use crate::util::stats::{dot, rmse};
 use crate::util::Pcg64;
 
@@ -171,34 +171,35 @@ pub fn train(
         let op = SimplexMvm::build(x, d, &kernel, cfg.order).with_symmetrize(true);
         let shifted = Shifted::new(&op, noise);
 
-        // --- Solves: α = K̂⁻¹y and probe solves K̂⁻¹z_k (batched) ---
+        // --- Solves: α = K̂⁻¹y and probe solves K̂⁻¹z_k, all in ONE
+        // block-CG run: RHS 0 is the target, RHS 1..=p the Hutchinson
+        // probes, so every Krylov iteration costs a single lattice pass
+        // for the whole bundle.
         let p = cfg.probes;
         let probes: Vec<Vec<f64>> = (0..p).map(|_| rng.rademacher_vec(n)).collect();
         let (alpha, probe_solves, solve_iters) = match cfg.solve {
             SolveMode::Cg { tol } => {
-                let nc = p + 1;
-                let mut rhs = vec![0.0; n * nc];
-                for i in 0..n {
-                    rhs[i * nc] = y[i];
-                    for (k, z) in probes.iter().enumerate() {
-                        rhs[i * nc + 1 + k] = z[i];
-                    }
+                let nrhs = p + 1;
+                let mut rhs = vec![0.0; n * nrhs];
+                rhs[..n].copy_from_slice(y);
+                for (k, z) in probes.iter().enumerate() {
+                    rhs[(k + 1) * n..(k + 2) * n].copy_from_slice(z);
                 }
-                let (sol, iters) = cg_multi(
+                let res = cg_block(
                     &shifted,
                     &rhs,
-                    nc,
+                    nrhs,
                     CgOptions {
                         tol,
                         max_iters: cfg.max_cg_iters,
-                    min_iters: 10,
-                },
+                        min_iters: 10,
+                    },
                 );
-                let alpha: Vec<f64> = (0..n).map(|i| sol[i * nc]).collect();
+                let alpha = res.x[..n].to_vec();
                 let psol: Vec<Vec<f64>> = (0..p)
-                    .map(|k| (0..n).map(|i| sol[i * nc + 1 + k]).collect())
+                    .map(|k| res.x[(k + 1) * n..(k + 2) * n].to_vec())
                     .collect();
-                (alpha, psol, iters)
+                (alpha, psol, res.iterations)
             }
             SolveMode::RrCg { geom_p, min_iters } => {
                 let opts = RrCgOptions {
@@ -229,13 +230,21 @@ pub fn train(
         tr_noise /= p.max(1) as f64;
         let g_noise = 0.5 * dot(&alpha, &alpha) - 0.5 * tr_noise;
 
-        // ∂MLL/∂s²: ∂K̂/∂s² = K_unit = op/s².
+        // ∂MLL/∂s²: ∂K̂/∂s² = K_unit = op/s². The p probe MVMs for the
+        // trace term ride one batched lattice pass.
         let k_alpha = op.mvm(&alpha);
         let mut tr_scale = 0.0;
-        for (z, sz) in probes.iter().zip(&probe_solves) {
-            tr_scale += dot(sz, &op.mvm(z)) / outputscale;
+        if p > 0 {
+            let mut zblock = vec![0.0; n * p];
+            for (k, z) in probes.iter().enumerate() {
+                zblock[k * n..(k + 1) * n].copy_from_slice(z);
+            }
+            let kz = op.mvm_block(&zblock, p);
+            for (k, sz) in probe_solves.iter().enumerate() {
+                tr_scale += dot(sz, &kz[k * n..(k + 1) * n]) / outputscale;
+            }
+            tr_scale /= p as f64;
         }
-        tr_scale /= p.max(1) as f64;
         let g_scale = 0.5 * dot(&alpha, &k_alpha) / outputscale - 0.5 * tr_scale;
 
         // ∂MLL/∂ℓ_j via Eq.(12)/(13) filtering (unit-scale kernel ⇒ ×s²).
@@ -281,7 +290,8 @@ pub fn train(
 
         let mll = if cfg.track_mll {
             let yt_a = dot(y, eval_model.alpha());
-            let ld = slq_logdet(&Shifted::new(eval_model.operator(), noise), 30, 6, cfg.seed + epoch as u64);
+            let shifted_eval = Shifted::new(eval_model.operator(), noise);
+            let ld = slq_logdet(&shifted_eval, 30, 6, cfg.seed + epoch as u64);
             Some(
                 -0.5 * yt_a - 0.5 * ld
                     - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln(),

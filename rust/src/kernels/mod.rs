@@ -90,7 +90,7 @@ impl KernelFamily {
         }
     }
 
-    /// Analytic 1-D Fourier transform F[k](ω) of the profile restricted
+    /// Analytic 1-D Fourier transform `F[k](ω)` of the profile restricted
     /// to a line, k(τ) with τ the (unsquared) distance. Un-normalized —
     /// only ratios of integrals matter in Eq. (9).
     pub fn spectral_1d(&self, w: f64) -> f64 {

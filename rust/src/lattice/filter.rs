@@ -3,11 +3,17 @@
 //! filtering that turns ∂L/∂x into one extra multi-channel filter call
 //! with the derivative profile k′.
 //!
-//! Value layout: `(m+1) × nc` row-major with row 0 the reserved null
-//! slot (always zero). Blur runs the d+1 lattice directions
-//! sequentially with double-buffering; each direction is a (2r+1)-tap
-//! stencil over the precomputed dense neighbor ids, parallelized over
-//! lattice points.
+//! Lattice value layout: `(m+1) × nc` point-interleaved with row 0 the
+//! reserved null slot (always zero). Blur runs the d+1 lattice
+//! directions sequentially with double-buffering; each direction is a
+//! (2r+1)-tap stencil over the precomputed dense neighbor ids,
+//! parallelized over lattice points.
+//!
+//! Two multi-RHS conventions exist (see ARCHITECTURE.md, §Batch
+//! layout): the `*_block` entry points take row-major `b × n` blocks
+//! (each RHS contiguous — the solver/serving convention) and convert
+//! to/from the point-interleaved lattice layout internally, so `b`
+//! right-hand sides share ONE splat→blur→slice traversal.
 
 use super::PermutohedralLattice;
 use crate::kernels::ArdKernel;
@@ -83,9 +89,10 @@ impl PermutohedralLattice {
                         }
                     });
                 } else if r == 1 {
-                    // 3-tap multi-channel path.
+                    // 3-tap multi-channel path (chunks aligned to whole
+                    // points so range.start / nc is exact).
                     let (t_l, t_c, t_r) = (taps[0], taps[1], taps[2]);
-                    parallel::par_fill(out, |range, chunk| {
+                    parallel::par_fill_groups(out, nc, |range, chunk| {
                         let p0 = range.start / nc;
                         let p1 = (range.end + nc - 1) / nc;
                         for p in p0..p1 {
@@ -101,8 +108,9 @@ impl PermutohedralLattice {
                         }
                     });
                 } else {
-                    parallel::par_fill(out, |range, chunk| {
-                        // range is over the flat (m × nc) output slice.
+                    parallel::par_fill_groups(out, nc, |range, chunk| {
+                        // range is over the flat (m × nc) output slice,
+                        // chunked on whole-point boundaries.
                         let p0 = range.start / nc;
                         let p1 = (range.end + nc - 1) / nc;
                         debug_assert_eq!(range.start % nc, 0);
@@ -155,7 +163,7 @@ impl PermutohedralLattice {
         assert_eq!(z.len(), (self.m + 1) * nc);
         let n_out = offsets.len() / dp1;
         let mut out = vec![0.0; n_out * nc];
-        parallel::par_fill(&mut out, |range, chunk| {
+        parallel::par_fill_groups(&mut out, nc, |range, chunk| {
             let i0 = range.start / nc;
             let i1 = (range.end + nc - 1) / nc;
             for i in i0..i1 {
@@ -215,6 +223,110 @@ impl PermutohedralLattice {
     /// Single-channel kernel MVM (no noise, unit outputscale).
     pub fn mvm(&self, v: &[f64]) -> Vec<f64> {
         self.filter(v, 1)
+    }
+
+    /// Splat a row-major multi-RHS block: `Z = Wᵀ` applied to each of
+    /// the `b` RHS rows of `v` (`b × n`, RHS `c` at `v[c*n..(c+1)*n]`).
+    /// Returns `(m+1) × b` point-interleaved lattice values with the
+    /// null row zero. One traversal of the offset/weight rows serves
+    /// all `b` RHS; the strided gather of a point's `b` values is
+    /// hoisted so the d+1 scatter rows reuse it.
+    pub fn splat_block(&self, v: &[f64], b: usize) -> Vec<f64> {
+        assert!(b >= 1, "batch size must be >= 1");
+        assert_eq!(v.len(), self.n * b);
+        let dp1 = self.d + 1;
+        let n = self.n;
+        let mut z = vec![0.0; (self.m + 1) * b];
+        let mut vals = vec![0.0; b];
+        // Scatter-add is inherently racy; serial like `splat` (the blur
+        // dominates the pass, and a serial scatter keeps the batched
+        // path bitwise identical to the single-RHS one).
+        for i in 0..n {
+            for (c, val) in vals.iter_mut().enumerate() {
+                *val = v[c * n + i];
+            }
+            for k in 0..dp1 {
+                let id = self.offsets[i * dp1 + k] as usize;
+                if id == 0 {
+                    continue;
+                }
+                let w = self.weights[i * dp1 + k];
+                let zrow = &mut z[id * b..(id + 1) * b];
+                for (zc, val) in zrow.iter_mut().zip(&vals) {
+                    *zc += w * val;
+                }
+            }
+        }
+        z
+    }
+
+    /// Slice point-interleaved lattice values back to a row-major
+    /// `b × n_out` block at arbitrary interpolation rows — the batched
+    /// counterpart of [`PermutohedralLattice::slice_at`].
+    pub fn slice_at_block(
+        &self,
+        offsets: &[u32],
+        weights: &[f64],
+        z: &[f64],
+        b: usize,
+    ) -> Vec<f64> {
+        let inter = self.slice_at(offsets, weights, z, b);
+        let n_out = offsets.len() / (self.d + 1);
+        crate::util::layout::interleaved_to_block(&inter, n_out, b)
+    }
+
+    /// Slice at the training inputs, returning a row-major `b × n`
+    /// block.
+    pub fn slice_block(&self, z: &[f64], b: usize) -> Vec<f64> {
+        self.slice_at_block(&self.offsets, &self.weights, z, b)
+    }
+
+    /// Batched multi-RHS filtering: the approximate kernel MVM
+    /// `K_XX` applied to `b` right-hand sides in ONE
+    /// splat→blur→slice pass over the lattice (row-major `b × n` in and
+    /// out). This is the engine behind [`crate::mvm::MvmOperator::mvm_block`]:
+    /// the offset/weight/neighbor traversals are amortized over the
+    /// batch and the blur inner loops run over `b` contiguous channels
+    /// per lattice point.
+    pub fn filter_block(&self, v: &[f64], b: usize) -> Vec<f64> {
+        let taps = self.stencil.taps.clone();
+        self.filter_block_with_taps(v, b, &taps)
+    }
+
+    /// Batched filtering with explicit taps (the k′ derivative profile
+    /// path reuses the geometry exactly as
+    /// [`PermutohedralLattice::filter_with_taps`] does).
+    pub fn filter_block_with_taps(&self, v: &[f64], b: usize, taps: &[f64]) -> Vec<f64> {
+        let mut z = self.splat_block(v, b);
+        self.blur(&mut z, b, taps);
+        self.slice_block(&z, b)
+    }
+
+    /// Batched exactly-symmetric filtering: the `b`-RHS counterpart of
+    /// [`PermutohedralLattice::filter_symmetric`] (forward + reversed
+    /// blur orders averaged; one splat and one slice, two blurs).
+    pub fn filter_block_symmetric(&self, v: &[f64], b: usize) -> Vec<f64> {
+        let taps = self.stencil.taps.clone();
+        let z0 = self.splat_block(v, b);
+        let mut fwd = z0.clone();
+        self.blur_ordered(&mut fwd, b, &taps, false);
+        let mut rev = z0;
+        self.blur_ordered(&mut rev, b, &taps, true);
+        for (f, r) in fwd.iter_mut().zip(&rev) {
+            *f = 0.5 * (*f + *r);
+        }
+        self.slice_block(&fwd, b)
+    }
+
+    /// Batched kernel MVM (unit outputscale): `b × n` block in, `b × n`
+    /// block out.
+    pub fn mvm_block(&self, v: &[f64], b: usize) -> Vec<f64> {
+        self.filter_block(v, b)
+    }
+
+    /// Batched symmetrized kernel MVM, `b × n` in/out.
+    pub fn mvm_block_symmetric(&self, v: &[f64], b: usize) -> Vec<f64> {
+        self.filter_block_symmetric(v, b)
     }
 
     /// Derivative stencil for the §4.2 gradient path, on the *same*
@@ -539,6 +651,75 @@ mod tests {
             assert!((f[2 * i] - f0[i]).abs() < 1e-10);
             assert!((f[2 * i + 1] - f1[i]).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn block_filter_matches_stacked_single() {
+        // The block engine must reproduce the single-RHS path exactly:
+        // same traversal order per channel ⇒ bitwise-identical sums.
+        let d = 3;
+        let n = 70;
+        let x = random_points(n, d, 200);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let lat = PermutohedralLattice::build(&x, d, &k, 2);
+        let mut rng = Pcg64::new(201);
+        let b = 4;
+        let v = rng.normal_vec(n * b);
+        let block = lat.filter_block(&v, b);
+        let sym = lat.filter_block_symmetric(&v, b);
+        for c in 0..b {
+            let row = &v[c * n..(c + 1) * n];
+            let single = lat.mvm(row);
+            let single_sym = lat.mvm_symmetric(row);
+            for i in 0..n {
+                assert!(
+                    (block[c * n + i] - single[i]).abs() < 1e-12,
+                    "rhs {c} row {i}: {} vs {}",
+                    block[c * n + i],
+                    single[i]
+                );
+                assert!(
+                    (sym[c * n + i] - single_sym[i]).abs() < 1e-12,
+                    "sym rhs {c} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_splat_slice_adjoint_per_rhs() {
+        // ⟨Wᵀv_c, z_c⟩ == ⟨v_c, W z_c⟩ for every RHS of a block.
+        let d = 4;
+        let x = random_points(60, d, 210);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 0.6);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let mut rng = Pcg64::new(211);
+        let b = 3;
+        let v = rng.normal_vec(lat.n * b);
+        let z = rng.normal_vec((lat.m + 1) * b);
+        let wv = lat.splat_block(&v, b); // (m+1) × b interleaved
+        let wz = lat.slice_block(&z, b); // b × n block
+        for c in 0..b {
+            let lhs: f64 = (0..lat.m + 1).map(|p| wv[p * b + c] * z[p * b + c]).sum();
+            let rhs = dot(&v[c * lat.n..(c + 1) * lat.n], &wz[c * lat.n..(c + 1) * lat.n]);
+            assert!(
+                (lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()),
+                "rhs {c}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_single_rhs_degenerates_to_mvm() {
+        let d = 2;
+        let x = random_points(40, d, 220);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let mut rng = Pcg64::new(221);
+        let v = rng.normal_vec(40);
+        let a = lat.mvm_block(&v, 1);
+        let b = lat.mvm(&v);
+        assert_eq!(a, b, "b=1 block path must equal the single-RHS path");
     }
 
     #[test]

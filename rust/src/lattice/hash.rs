@@ -39,6 +39,7 @@ impl KeyTable {
         self.len
     }
 
+    /// True when no keys have been inserted.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

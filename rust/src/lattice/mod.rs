@@ -294,8 +294,8 @@ fn embed_point(z: &[f64], scale_factors: &[f64], s: &mut EmbedScratch) {
 }
 
 /// First `d` coordinates of the vertex with remainder `k` of the simplex
-/// identified by (`rem0`, `rank`): key[i] = rem0[i] + canonical[k][rank[i]]
-/// where canonical[k] = (k,…,k, k−(d+1),…,k−(d+1)) per Eq. (7).
+/// identified by (`rem0`, `rank`): `key[i] = rem0[i] + canonical[k][rank[i]]`
+/// where `canonical[k] = (k,…,k, k−(d+1),…,k−(d+1))` per Eq. (7).
 #[inline]
 fn vertex_key(rem0: &[i32], rank: &[usize], d: usize, k: usize, key: &mut [i32]) {
     for i in 0..d {

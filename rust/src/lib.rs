@@ -6,7 +6,9 @@
 //! Lattice for Scalable Gaussian Processes"* (Kapoor, Finzi, Wang,
 //! Wilson; ICML 2021).
 //!
-//! The crate is the Layer-3 coordinator of a three-layer stack:
+//! The crate is the Layer-3 coordinator of a three-layer stack (see
+//! ARCHITECTURE.md at the repo root for the full dataflow, the
+//! null-slot-0 invariant, and the batch layout conventions):
 //!
 //! - **L1/L2 (build time)** — `python/compile/` authors the Pallas blur
 //!   kernel and the JAX splat→blur→slice MVM graph, AOT-lowered to HLO
@@ -14,7 +16,14 @@
 //! - **L3 (this crate)** — builds the lattice, owns the Krylov solvers
 //!   and the GP trainer, serves predictions, and executes MVMs either on
 //!   the native multithreaded path or through the PJRT runtime
-//!   ([`runtime`]). Python is never on the request path.
+//!   ([`runtime`], cargo feature `pjrt`). Python is never on the
+//!   request path.
+//!
+//! Everything downstream of the lattice is batched: operators expose
+//! [`mvm::MvmOperator::mvm_block`] over row-major `B × n` blocks, the
+//! solvers drive it via [`solvers::cg_block`] / [`solvers::lanczos_block`],
+//! and the serving coordinator coalesces concurrent requests into the
+//! same engine — `B` right-hand sides cost one lattice traversal.
 //!
 //! Quick taste (see `examples/quickstart.rs`):
 //!

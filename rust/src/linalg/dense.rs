@@ -102,8 +102,9 @@ impl Mat {
         let mut out = Mat::zeros(m, n);
         let a = &self.data;
         let b = &other.data;
-        parallel::par_fill(&mut out.data, |range, chunk| {
-            // range indexes the flat output; recover the row span.
+        parallel::par_fill_groups(&mut out.data, n, |range, chunk| {
+            // range indexes the flat output, chunked on whole output
+            // rows; recover the row span.
             let i0 = range.start / n;
             let i1 = (range.end + n - 1) / n;
             debug_assert_eq!(range.start % n, 0);

@@ -6,5 +6,7 @@ pub mod dense;
 pub mod fft;
 pub mod toeplitz;
 
-pub use dense::{cholesky, eigh, eigh_tridiag, logdet_spd, solve_lower, solve_lower_t, solve_spd, Mat};
+pub use dense::{
+    cholesky, eigh, eigh_tridiag, logdet_spd, solve_lower, solve_lower_t, solve_spd, Mat,
+};
 pub use toeplitz::{kron_toeplitz_matvec, SymToeplitz};

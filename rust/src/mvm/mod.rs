@@ -1,11 +1,20 @@
 //! MVM operators — the black-box interface the Krylov solvers consume
 //! (Table 1 of the paper: Exact O(n²), KISS-GP O(n·2^d), SKIP O(rnd),
-//! Simplex-GP O(nd²)). All operators implement [`MvmOperator`]; multi-
-//! RHS variants amortize memory traffic across right-hand sides (the
-//! batched-CG hot path).
+//! Simplex-GP O(nd²)). All operators implement [`MvmOperator`]; the
+//! multi-RHS entry points amortize memory traffic across right-hand
+//! sides (the batched-CG / batched-SLQ hot path).
+//!
+//! Multi-RHS layout convention (ARCHITECTURE.md, §Batch layout):
+//! [`MvmOperator::mvm_block`] takes row-major `b × n` blocks — RHS `c`
+//! is the contiguous slice `v[c*n..(c+1)*n]` — which is what the block
+//! solvers and the serving coordinator speak. The legacy
+//! point-interleaved form ([`MvmOperator::mvm_multi`]) remains for
+//! callers that build per-point channel stacks (the §4.2 gradient
+//! filtering path).
 
 use crate::kernels::ArdKernel;
 use crate::lattice::PermutohedralLattice;
+use crate::util::layout::{block_to_interleaved, interleaved_to_block};
 use crate::util::parallel;
 
 /// A symmetric PSD(ish) linear operator `v ↦ K v` of size n.
@@ -33,6 +42,24 @@ pub trait MvmOperator: Sync {
         out
     }
 
+    /// `K V` for a row-major `b × n` block of right-hand sides (RHS `c`
+    /// contiguous at `v[c*n..(c+1)*n]`) — the multi-RHS engine the block
+    /// solvers and the serving coordinator drive. Default: apply
+    /// [`MvmOperator::mvm`] to each contiguous RHS row (zero-copy
+    /// slicing, no layout shuffle); structured operators override with
+    /// one shared pass over their data (e.g. one splat→blur→slice for
+    /// [`SimplexMvm`]).
+    fn mvm_block(&self, v: &[f64], b: usize) -> Vec<f64> {
+        let n = self.len();
+        assert_eq!(v.len(), n * b);
+        let mut out = Vec::with_capacity(n * b);
+        for c in 0..b {
+            out.extend_from_slice(&self.mvm(&v[c * n..(c + 1) * n]));
+        }
+        out
+    }
+
+    /// True when the operator has dimension zero.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -40,11 +67,14 @@ pub trait MvmOperator: Sync {
 
 /// `(K + σ² I) v` wrapper used by every solve.
 pub struct Shifted<'a, O: MvmOperator + ?Sized> {
+    /// The wrapped kernel operator.
     pub op: &'a O,
+    /// Diagonal shift σ² added to every MVM.
     pub shift: f64,
 }
 
 impl<'a, O: MvmOperator + ?Sized> Shifted<'a, O> {
+    /// Wrap `op` as `op + shift·I`.
     pub fn new(op: &'a O, shift: f64) -> Self {
         Shifted { op, shift }
     }
@@ -68,19 +98,30 @@ impl<'a, O: MvmOperator + ?Sized> MvmOperator for Shifted<'a, O> {
         }
         out
     }
+    fn mvm_block(&self, v: &[f64], b: usize) -> Vec<f64> {
+        let mut out = self.op.mvm_block(v, b);
+        for (o, vi) in out.iter_mut().zip(v) {
+            *o += self.shift * vi;
+        }
+        out
+    }
 }
 
 /// Exact dense-free MVM: recomputes kernel entries tile by tile (the
 /// KeOps-style baseline of Fig. 6) — O(n²d) time, O(n) memory,
 /// multithreaded over output rows with register-blocked inner tiles.
 pub struct ExactMvm<'a> {
+    /// Kernel whose entries are recomputed on the fly.
     pub kernel: &'a ArdKernel,
+    /// Row-major `n × d` inputs.
     pub x: &'a [f64],
+    /// Input dimensionality.
     pub d: usize,
     n: usize,
 }
 
 impl<'a> ExactMvm<'a> {
+    /// Wrap `(kernel, x)` as an exact O(n²d) MVM operator.
     pub fn new(kernel: &'a ArdKernel, x: &'a [f64], d: usize) -> Self {
         assert_eq!(x.len() % d, 0);
         ExactMvm {
@@ -129,7 +170,7 @@ impl<'a> MvmOperator for ExactMvm<'a> {
         assert_eq!(v.len(), self.n * nc);
         let (x, d, kernel, n) = (self.x, self.d, self.kernel, self.n);
         let mut out = vec![0.0; n * nc];
-        parallel::par_fill(&mut out, |range, chunk| {
+        parallel::par_fill_groups(&mut out, nc, |range, chunk| {
             let i0 = range.start / nc;
             let i1 = (range.end + nc - 1) / nc;
             for i in i0..i1 {
@@ -149,13 +190,24 @@ impl<'a> MvmOperator for ExactMvm<'a> {
         });
         out
     }
+
+    fn mvm_block(&self, v: &[f64], b: usize) -> Vec<f64> {
+        // Route through the interleaved kernel-entry-reuse path: the two
+        // O(n·b) transposes are noise next to the O(n²·d) entry cost the
+        // batching amortizes b-fold.
+        assert_eq!(v.len(), self.n * b);
+        let inter = block_to_interleaved(v, self.n, b);
+        interleaved_to_block(&self.mvm_multi(&inter, b), self.n, b)
+    }
 }
 
 /// The paper's contribution: lattice-accelerated MVM, O(d²(n+m)).
 /// Holds the built lattice plus the kernel's outputscale (the lattice
 /// itself realizes the unit-outputscale kernel).
 pub struct SimplexMvm {
+    /// The built lattice (splat/blur/slice structure).
     pub lattice: PermutohedralLattice,
+    /// Kernel outputscale s² applied after the unit-scale lattice MVM.
     pub outputscale: f64,
     /// Use the exactly-symmetrized blur (2× cost) — required for strict
     /// Krylov theory; the plain sequential blur is what the paper ships.
@@ -173,6 +225,7 @@ impl SimplexMvm {
         }
     }
 
+    /// Toggle the exactly-symmetrized blur (builder style).
     pub fn with_symmetrize(mut self, on: bool) -> Self {
         self.symmetrize = on;
         self
@@ -211,10 +264,27 @@ impl MvmOperator for SimplexMvm {
         }
         out
     }
+
+    fn mvm_block(&self, v: &[f64], b: usize) -> Vec<f64> {
+        // The paper's hot path, batched: one splat→blur→slice pass over
+        // the lattice serves all b right-hand sides.
+        let mut out = if self.symmetrize {
+            self.lattice.filter_block_symmetric(v, b)
+        } else {
+            self.lattice.filter_block(v, b)
+        };
+        if self.outputscale != 1.0 {
+            for o in out.iter_mut() {
+                *o *= self.outputscale;
+            }
+        }
+        out
+    }
 }
 
 /// Dense-matrix operator (tests and small baselines).
 pub struct DenseMvm {
+    /// The explicit matrix.
     pub mat: crate::linalg::Mat,
 }
 
@@ -273,6 +343,46 @@ mod tests {
                     assert!(
                         (batched[i * nc + c] - single[i]).abs() < 1e-10,
                         "channel {c} row {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_matches_single_across_operators() {
+        let d = 3;
+        let n = 50;
+        let mut rng = Pcg64::new(7);
+        let x = rng.normal_vec(n * d);
+        let mut k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.9);
+        k.outputscale = 1.4;
+        let exact = ExactMvm::new(&k, &x, d);
+        let simplex = SimplexMvm::build(&x, d, &k, 1);
+        let sym = SimplexMvm::build(&x, d, &k, 1).with_symmetrize(true);
+        let dense = DenseMvm {
+            mat: k.cov_matrix(&x, d),
+        };
+        let b = 3;
+        let v = rng.normal_vec(n * b);
+        for op in [&exact as &dyn MvmOperator, &simplex, &sym, &dense] {
+            let block = op.mvm_block(&v, b);
+            let shifted = Shifted::new(op, 0.7);
+            let shifted_block = shifted.mvm_block(&v, b);
+            for c in 0..b {
+                let row = &v[c * n..(c + 1) * n];
+                let single = op.mvm(row);
+                for i in 0..n {
+                    let idx = c * n + i;
+                    assert!(
+                        (block[idx] - single[i]).abs() < 1e-12,
+                        "rhs {c} row {i}: {} vs {}",
+                        block[idx],
+                        single[i]
+                    );
+                    assert!(
+                        (shifted_block[idx] - single[i] - 0.7 * row[i]).abs() < 1e-12,
+                        "shifted rhs {c} row {i}"
                     );
                 }
             }

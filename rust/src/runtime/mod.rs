@@ -7,14 +7,19 @@
 //! construction) and truncates results on the way out. Anything that
 //! doesn't fit a bucket falls back to the native Rust path upstream —
 //! backend selection is a routing decision in the coordinator.
+//!
+//! The execution half of this module (PJRT client, compiled
+//! executables) needs the vendored `xla` crate and is gated behind the
+//! `pjrt` cargo feature. Without it, manifest/golden parsing still
+//! works and the runtime types exist as stubs whose constructors
+//! return a descriptive error, so the CLI and coordinator compile
+//! unchanged.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::lattice::PermutohedralLattice;
 use crate::util::json::Json;
 
 /// One artifact as described by `manifest.json`.
@@ -180,7 +185,13 @@ impl Manifest {
     }
 
     /// Best simplex bucket for a problem (d must match; n, m+1 must fit).
-    pub fn find_simplex_bucket(&self, d: usize, n: usize, m1: usize, r: usize) -> Option<&ArtifactSpec> {
+    pub fn find_simplex_bucket(
+        &self,
+        d: usize,
+        n: usize,
+        m1: usize,
+        r: usize,
+    ) -> Option<&ArtifactSpec> {
         self.artifacts
             .iter()
             .filter(|a| a.kind == "simplex_mvm")
@@ -198,18 +209,23 @@ impl Manifest {
 }
 
 /// A compiled artifact on the PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct CompiledArtifact {
+    /// Manifest entry this executable was compiled from.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// The runtime: one PJRT client + lazily compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
+    /// Parsed artifact manifest.
     pub manifest: Manifest,
-    compiled: Mutex<BTreeMap<String, std::sync::Arc<CompiledArtifact>>>,
+    compiled: std::sync::Mutex<BTreeMap<String, std::sync::Arc<CompiledArtifact>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     pub fn new(artifact_dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
@@ -217,7 +233,7 @@ impl PjrtRuntime {
         Ok(PjrtRuntime {
             client,
             manifest,
-            compiled: Mutex::new(BTreeMap::new()),
+            compiled: std::sync::Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -255,6 +271,7 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl CompiledArtifact {
     /// Execute with raw literals; returns the (single) tuple element as
     /// a flat f32 vector.
@@ -303,6 +320,7 @@ impl CompiledArtifact {
 
 /// PJRT-backed simplex MVM: pads a built lattice into an artifact bucket
 /// and runs the AOT executable for each MVM.
+#[cfg(feature = "pjrt")]
 pub struct SimplexPjrtMvm {
     artifact: std::sync::Arc<CompiledArtifact>,
     /// Padded inputs (constant across MVMs for a fixed lattice).
@@ -315,9 +333,14 @@ pub struct SimplexPjrtMvm {
     pub outputscale: f64,
 }
 
+#[cfg(feature = "pjrt")]
 impl SimplexPjrtMvm {
     /// Pack `lat` into a matching bucket from the runtime's manifest.
-    pub fn new(rt: &PjrtRuntime, lat: &PermutohedralLattice, outputscale: f64) -> Result<Self> {
+    pub fn new(
+        rt: &PjrtRuntime,
+        lat: &crate::lattice::PermutohedralLattice,
+        outputscale: f64,
+    ) -> Result<Self> {
         let d = lat.d;
         let r = lat.order();
         let spec = rt
@@ -409,16 +432,110 @@ impl SimplexPjrtMvm {
 
 /// Clone helper: the xla crate's Literal has no public clone, but
 /// reshaping to the same dims copies. Implemented as an extension trait.
+#[cfg(feature = "pjrt")]
 trait ShallowClone: Sized {
     fn shallow_clone(&self) -> Result<Self>;
 }
 
+#[cfg(feature = "pjrt")]
 impl ShallowClone for xla::Literal {
     fn shallow_clone(&self) -> Result<Self> {
         // `Literal` exposes copy via reshape to its own dimensions.
         let shape = self.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
         self.reshape(shape.dims())
             .map_err(|e| anyhow!("clone-reshape: {e:?}"))
+    }
+}
+
+/// Marker for the feature-gated stubs below: uninhabited, so the stub
+/// runtime types can never actually be constructed.
+#[cfg(not(feature = "pjrt"))]
+enum NeverBuilt {}
+
+#[cfg(not(feature = "pjrt"))]
+const PJRT_DISABLED: &str = "PJRT backend compiled out: add the vendored \
+     `xla` crate to [dependencies] in Cargo.toml, then rebuild with \
+     `--features pjrt`; the native multithreaded MVM path is unaffected";
+
+/// Stub of the PJRT runtime used when the crate is built without the
+/// `pjrt` feature. [`Manifest`] parsing still works; constructing the
+/// runtime itself returns an error, so every caller falls back to the
+/// native backend with a clear message.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime {
+    /// Parsed artifact manifest (never populated: the constructor
+    /// always fails without the feature).
+    pub manifest: Manifest,
+    never: NeverBuilt,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    /// Always fails without the `pjrt` feature.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let _ = artifact_dir;
+        Err(anyhow!(PJRT_DISABLED))
+    }
+
+    /// Platform name of the backing PJRT client (unreachable here).
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact
+    /// (unreachable here).
+    pub fn compile(&self, name: &str) -> Result<std::sync::Arc<CompiledArtifact>> {
+        let _ = name;
+        match self.never {}
+    }
+}
+
+/// Stub of a compiled artifact when the `pjrt` feature is disabled.
+#[cfg(not(feature = "pjrt"))]
+pub struct CompiledArtifact {
+    /// Manifest entry this executable would have been compiled from.
+    pub spec: ArtifactSpec,
+    never: NeverBuilt,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl CompiledArtifact {
+    /// Replay the manifest goldens (unreachable here).
+    pub fn replay_goldens(&self) -> Result<f64> {
+        match self.never {}
+    }
+}
+
+/// Stub of the PJRT-backed simplex MVM when the `pjrt` feature is
+/// disabled; [`SimplexPjrtMvm::new`] always errors.
+#[cfg(not(feature = "pjrt"))]
+pub struct SimplexPjrtMvm {
+    /// Outputscale the MVM would apply (never populated).
+    pub outputscale: f64,
+    never: NeverBuilt,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl SimplexPjrtMvm {
+    /// Always fails without the `pjrt` feature.
+    pub fn new(
+        rt: &PjrtRuntime,
+        lat: &crate::lattice::PermutohedralLattice,
+        outputscale: f64,
+    ) -> Result<Self> {
+        let _ = (rt, lat, outputscale);
+        Err(anyhow!(PJRT_DISABLED))
+    }
+
+    /// Name of the bucket artifact backing this MVM (unreachable here).
+    pub fn artifact_name(&self) -> &str {
+        match self.never {}
+    }
+
+    /// One MVM through the PJRT executable (unreachable here).
+    pub fn mvm(&self, v: &[f64]) -> Result<Vec<f64>> {
+        let _ = v;
+        match self.never {}
     }
 }
 
@@ -451,6 +568,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn goldens_replay_through_pjrt() {
         let Some(dir) = artifact_dir() else {
@@ -515,7 +633,7 @@ mod tests {
             // Override taps with the golden taps so arithmetic matches.
             let mut stencil = stencil;
             stencil.taps = taps.clone();
-            let lat = PermutohedralLattice::from_raw_parts(
+            let lat = crate::lattice::PermutohedralLattice::from_raw_parts(
                 d, n, mm, stencil, offsets, weights, nbr,
             );
             let got = lat.mvm(&v);

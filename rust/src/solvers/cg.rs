@@ -14,8 +14,11 @@ use crate::util::stats::{axpy, dot, norm2};
 /// Outcome of a CG solve.
 #[derive(Clone, Debug)]
 pub struct CgResult {
+    /// The final iterate.
     pub x: Vec<f64>,
+    /// Iterations run.
     pub iterations: usize,
+    /// Whether the RMS criterion was met.
     pub converged: bool,
     /// Final RMS residual ‖b − Ax‖/√n.
     pub rms_residual: f64,
@@ -24,7 +27,9 @@ pub struct CgResult {
 /// Options shared by the CG variants.
 #[derive(Clone, Copy, Debug)]
 pub struct CgOptions {
+    /// RMS-residual stopping tolerance.
     pub tol: f64,
+    /// Hard iteration cap (paper Table 5: 500).
     pub max_iters: usize,
     /// Always run at least this many iterations even if the RMS
     /// criterion is already met (standardized targets start at RMS
@@ -43,6 +48,7 @@ impl Default for CgOptions {
 }
 
 impl CgOptions {
+    /// Defaults with an explicit tolerance.
     pub fn with_tol(tol: f64) -> Self {
         CgOptions {
             tol,
@@ -109,10 +115,98 @@ pub fn cg_precond(
     }
 }
 
-/// Batched CG: solves `A X = B` for `nc` right-hand sides interleaved as
-/// `b[i*nc + c]`, sharing one multi-channel MVM per iteration (this is
-/// where the lattice filter's channel batching pays off). Each column
-/// runs an independent scalar recurrence; converged columns freeze.
+/// Outcome of a block (multi-RHS) CG solve.
+#[derive(Clone, Debug)]
+pub struct BlockCgResult {
+    /// Solutions as a row-major `b × n` block (RHS `c` contiguous at
+    /// `x[c*n..(c+1)*n]`).
+    pub x: Vec<f64>,
+    /// Iterations of the shared Krylov loop (= the slowest RHS).
+    pub iterations: usize,
+    /// Iterations each RHS ran before freezing — identical to what a
+    /// sequential single-RHS [`cg`] on that column would report.
+    pub rhs_iterations: Vec<usize>,
+    /// Per-RHS convergence flags (RMS criterion met).
+    pub converged: Vec<bool>,
+    /// Per-RHS final RMS residuals ‖b_c − A x_c‖/√n.
+    pub rms_residual: Vec<f64>,
+}
+
+/// Block CG: solves `A X = B` for `b` right-hand sides stored as a
+/// row-major `b × n` block, sharing ONE [`MvmOperator::mvm_block`] per
+/// iteration — for the lattice operator that means one
+/// splat→blur→slice pass drives every RHS (target + probes + test
+/// columns). Each RHS runs an independent scalar recurrence on its
+/// contiguous row; converged RHS freeze while the rest keep iterating,
+/// and the per-column arithmetic is bitwise identical to sequential
+/// single-RHS CG.
+pub fn cg_block(
+    a: &dyn MvmOperator,
+    b: &[f64],
+    nrhs: usize,
+    opts: CgOptions,
+) -> BlockCgResult {
+    let n = a.len();
+    assert!(nrhs >= 1, "need at least one right-hand side");
+    assert_eq!(b.len(), n * nrhs);
+    let sqrt_n = (n as f64).sqrt().max(1e-300);
+    let mut x = vec![0.0; n * nrhs];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rs: Vec<f64> = (0..nrhs)
+        .map(|c| dot(&r[c * n..(c + 1) * n], &r[c * n..(c + 1) * n]))
+        .collect();
+    let mut active: Vec<bool> = rs.iter().map(|&v| v.sqrt() > 0.0).collect();
+    let mut rhs_iterations = vec![0usize; nrhs];
+    let mut iters = 0;
+    while active.iter().any(|&on| on) && iters < opts.max_iters {
+        let ap = a.mvm_block(&p, nrhs);
+        for c in 0..nrhs {
+            if !active[c] {
+                continue;
+            }
+            let c0 = c * n;
+            let c1 = c0 + n;
+            let pap = dot(&p[c0..c1], &ap[c0..c1]);
+            if pap <= 0.0 || !pap.is_finite() {
+                // Not (numerically) PD along this column's direction —
+                // freeze it with the current iterate, as single-RHS CG
+                // would bail.
+                active[c] = false;
+                continue;
+            }
+            let alpha = rs[c] / pap;
+            axpy(alpha, &p[c0..c1], &mut x[c0..c1]);
+            axpy(-alpha, &ap[c0..c1], &mut r[c0..c1]);
+            let rs_new = dot(&r[c0..c1], &r[c0..c1]);
+            rhs_iterations[c] = iters + 1;
+            if iters + 1 >= opts.min_iters && rs_new.sqrt() / sqrt_n <= opts.tol {
+                active[c] = false;
+                rs[c] = rs_new;
+                continue;
+            }
+            let beta = rs_new / rs[c];
+            rs[c] = rs_new;
+            for i in c0..c1 {
+                p[i] = r[i] + beta * p[i];
+            }
+        }
+        iters += 1;
+    }
+    let rms_residual: Vec<f64> = rs.iter().map(|&v| v.sqrt() / sqrt_n).collect();
+    let converged = rms_residual.iter().map(|&v| v <= opts.tol).collect();
+    BlockCgResult {
+        x,
+        iterations: iters,
+        rhs_iterations,
+        converged,
+        rms_residual,
+    }
+}
+
+/// Batched CG over point-interleaved right-hand sides (`b[i*nc + c]`),
+/// kept for callers that build per-point channel stacks. Thin wrapper:
+/// transposes to the block layout, runs [`cg_block`], transposes back.
 pub fn cg_multi(
     a: &dyn MvmOperator,
     b: &[f64],
@@ -121,65 +215,12 @@ pub fn cg_multi(
 ) -> (Vec<f64>, usize) {
     let n = a.len();
     assert_eq!(b.len(), n * nc);
-    let mut x = vec![0.0; n * nc];
-    let mut r = b.to_vec();
-    let mut p = r.clone();
-    let mut rs: Vec<f64> = (0..nc)
-        .map(|c| (0..n).map(|i| r[i * nc + c] * r[i * nc + c]).sum())
-        .collect();
-    let sqrt_n = (n as f64).sqrt().max(1e-300);
-    let mut active: Vec<bool> = (0..nc)
-        .map(|c| rs[c].sqrt() > 0.0)
-        .collect();
-    let mut iters = 0;
-    while active.iter().any(|&a| a) && iters < opts.max_iters {
-        let ap = a.mvm_multi(&p, nc);
-        // Per-column alpha.
-        let mut pap = vec![0.0; nc];
-        for i in 0..n {
-            for c in 0..nc {
-                pap[c] += p[i * nc + c] * ap[i * nc + c];
-            }
-        }
-        let mut alpha = vec![0.0; nc];
-        for c in 0..nc {
-            if active[c] && pap[c] > 0.0 && pap[c].is_finite() {
-                alpha[c] = rs[c] / pap[c];
-            } else {
-                active[c] = false;
-            }
-        }
-        for i in 0..n {
-            for c in 0..nc {
-                if active[c] {
-                    x[i * nc + c] += alpha[c] * p[i * nc + c];
-                    r[i * nc + c] -= alpha[c] * ap[i * nc + c];
-                }
-            }
-        }
-        let mut rs_new = vec![0.0; nc];
-        for i in 0..n {
-            for c in 0..nc {
-                rs_new[c] += r[i * nc + c] * r[i * nc + c];
-            }
-        }
-        for c in 0..nc {
-            if !active[c] {
-                continue;
-            }
-            if iters + 1 >= opts.min_iters && rs_new[c].sqrt() / sqrt_n <= opts.tol {
-                active[c] = false;
-                continue;
-            }
-            let beta = rs_new[c] / rs[c];
-            for i in 0..n {
-                p[i * nc + c] = r[i * nc + c] + beta * p[i * nc + c];
-            }
-        }
-        rs = rs_new;
-        iters += 1;
-    }
-    (x, iters)
+    let block = crate::util::layout::interleaved_to_block(b, n, nc);
+    let res = cg_block(a, &block, nc, opts);
+    (
+        crate::util::layout::block_to_interleaved(&res.x, n, nc),
+        res.iterations,
+    )
 }
 
 #[cfg(test)]
@@ -212,8 +253,8 @@ mod tests {
             CgOptions {
                 tol: 1e-10,
                 max_iters: 500,
-                    min_iters: 1,
-                },
+                min_iters: 1,
+            },
         );
         assert!(res.converged, "rms={}", res.rms_residual);
         let ax = op.mvm(&res.x);
@@ -234,8 +275,8 @@ mod tests {
             CgOptions {
                 tol: 0.5,
                 max_iters: 500,
-                    min_iters: 1,
-                },
+                min_iters: 1,
+            },
         );
         let tight = cg(
             &op,
@@ -243,8 +284,8 @@ mod tests {
             CgOptions {
                 tol: 1e-8,
                 max_iters: 500,
-                    min_iters: 1,
-                },
+                min_iters: 1,
+            },
         );
         assert!(loose.iterations < tight.iterations);
     }
@@ -263,8 +304,8 @@ mod tests {
             CgOptions {
                 tol: 1e-10,
                 max_iters: 500,
-                    min_iters: 1,
-                },
+                min_iters: 1,
+            },
         );
         for c in 0..nc {
             let bc: Vec<f64> = (0..n).map(|i| b[i * nc + c]).collect();
@@ -274,8 +315,8 @@ mod tests {
                 CgOptions {
                     tol: 1e-10,
                     max_iters: 500,
-                    min_iters: 1,
-                },
+                min_iters: 1,
+            },
             );
             for i in 0..n {
                 assert!(
@@ -285,6 +326,59 @@ mod tests {
                     single.x[i]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn block_matches_sequential_cg_exactly() {
+        // Per-RHS arithmetic in cg_block is the same sequence of FP ops
+        // as single-RHS cg ⇒ identical iterates and iteration counts.
+        let n = 40;
+        let op = spd_op(n, 11);
+        let mut rng = Pcg64::new(12);
+        let nrhs = 5;
+        let b = rng.normal_vec(n * nrhs);
+        let opts = CgOptions {
+            tol: 1e-9,
+            max_iters: 500,
+            min_iters: 1,
+        };
+        let res = cg_block(&op, &b, nrhs, opts);
+        let mut slowest = 0;
+        for c in 0..nrhs {
+            let single = cg(&op, &b[c * n..(c + 1) * n], opts);
+            assert_eq!(
+                res.rhs_iterations[c], single.iterations,
+                "rhs {c}: block {} vs sequential {} iterations",
+                res.rhs_iterations[c], single.iterations
+            );
+            assert_eq!(res.converged[c], single.converged);
+            for i in 0..n {
+                assert!(
+                    (res.x[c * n + i] - single.x[i]).abs() < 1e-12,
+                    "rhs {c} row {i}"
+                );
+            }
+            slowest = slowest.max(single.iterations);
+        }
+        assert_eq!(res.iterations, slowest);
+    }
+
+    #[test]
+    fn block_handles_zero_rhs_column() {
+        let n = 30;
+        let op = spd_op(n, 13);
+        let mut rng = Pcg64::new(14);
+        let mut b = vec![0.0; n * 3];
+        let live = rng.normal_vec(n);
+        b[..n].copy_from_slice(&live);
+        b[2 * n..].copy_from_slice(&live);
+        // Middle RHS is identically zero: must stay inactive with x = 0.
+        let res = cg_block(&op, &b, 3, CgOptions::with_tol(1e-8));
+        assert_eq!(res.rhs_iterations[1], 0);
+        assert!(res.x[n..2 * n].iter().all(|&v| v == 0.0));
+        for i in 0..n {
+            assert_eq!(res.x[i], res.x[2 * n + i], "identical RHS, identical solve");
         }
     }
 

@@ -1,6 +1,13 @@
 //! Lanczos tridiagonalization and stochastic Lanczos quadrature (SLQ)
 //! for log-determinants — the BBMM machinery behind the marginal
 //! log-likelihood (paper §2, Table 5: max Lanczos iterations 100).
+//!
+//! The probe recurrences of SLQ are independent, so [`lanczos_block`]
+//! advances all of them in lockstep with ONE [`MvmOperator::mvm_block`]
+//! per step: for the lattice operator, every Lanczos step costs one
+//! splat→blur→slice pass regardless of the probe count. Per-probe
+//! arithmetic is unchanged, so results match sequential [`lanczos`]
+//! runs exactly.
 
 use crate::linalg::dense::eigh_tridiag;
 use crate::mvm::MvmOperator;
@@ -10,8 +17,11 @@ use crate::util::Pcg64;
 /// Result of a Lanczos run: tridiagonal (diag, offdiag) of size ≤ t and
 /// optionally the orthonormal basis Q (n × steps, column-major by step).
 pub struct LanczosResult {
+    /// Tridiagonal diagonal entries α_1..α_k.
     pub alpha: Vec<f64>,
+    /// Tridiagonal off-diagonal entries β_1..β_{k−1}.
     pub beta: Vec<f64>,
+    /// Orthonormal basis vectors, one per step (when requested).
     pub q: Option<Vec<Vec<f64>>>,
 }
 
@@ -34,10 +44,9 @@ pub fn lanczos(
     let mut q_cur: Vec<f64> = q0.iter().map(|x| x / nrm).collect();
     let mut basis: Vec<Vec<f64>> = Vec::new();
     for step in 0..t {
-        if keep_basis || true {
-            // Basis is also needed internally for reorthogonalization.
-            basis.push(q_cur.clone());
-        }
+        // Basis is needed internally for reorthogonalization even when
+        // the caller doesn't want it back.
+        basis.push(q_cur.clone());
         let mut w = a.mvm(&q_cur);
         let a_k = dot(&q_cur, &w);
         alpha.push(a_k);
@@ -52,9 +61,7 @@ pub fn lanczos(
         }
         let b_k = norm2(&w);
         if b_k < 1e-12 || step + 1 == t {
-            if step + 1 < t {
-                // Invariant subspace found — stop early.
-            }
+            // b_k ≈ 0 means an invariant subspace was found early.
             break;
         }
         beta.push(b_k);
@@ -67,28 +74,139 @@ pub fn lanczos(
     }
 }
 
+/// Per-probe state of a lockstep block Lanczos run.
+struct ProbeState {
+    alpha: Vec<f64>,
+    beta: Vec<f64>,
+    basis: Vec<Vec<f64>>,
+    q_prev: Vec<f64>,
+    active: bool,
+}
+
+/// Run up to `t` Lanczos steps for `nrhs` independent start vectors at
+/// once. `q0` is a row-major `nrhs × n` block (start vector `c` at
+/// `q0[c*n..(c+1)*n]`); every step issues ONE block MVM shared by all
+/// still-active probes. Full per-probe reorthogonalization as in
+/// [`lanczos`]; a probe that finds an invariant subspace freezes while
+/// the others continue. Per-probe output is identical to running
+/// [`lanczos`] on its start vector alone.
+pub fn lanczos_block(
+    a: &dyn MvmOperator,
+    q0: &[f64],
+    nrhs: usize,
+    t: usize,
+    keep_basis: bool,
+) -> Vec<LanczosResult> {
+    let n = a.len();
+    assert!(nrhs >= 1, "need at least one start vector");
+    assert_eq!(q0.len(), n * nrhs);
+    let mut states: Vec<ProbeState> = (0..nrhs)
+        .map(|_| ProbeState {
+            alpha: Vec::with_capacity(t),
+            beta: Vec::with_capacity(t),
+            basis: Vec::new(),
+            q_prev: vec![0.0; n],
+            active: true,
+        })
+        .collect();
+    // Normalized current vectors, one contiguous row per probe.
+    let mut q_cur = vec![0.0; n * nrhs];
+    for c in 0..nrhs {
+        let row = &q0[c * n..(c + 1) * n];
+        let nrm = norm2(row);
+        assert!(nrm > 0.0, "lanczos start vector {c} is zero");
+        for (dst, src) in q_cur[c * n..(c + 1) * n].iter_mut().zip(row) {
+            *dst = src / nrm;
+        }
+    }
+    for step in 0..t {
+        if states.iter().all(|s| !s.active) {
+            break;
+        }
+        for (c, st) in states.iter_mut().enumerate() {
+            if st.active {
+                // Needed internally for reorthogonalization even when
+                // the caller doesn't want the basis back.
+                st.basis.push(q_cur[c * n..(c + 1) * n].to_vec());
+            }
+        }
+        // One block MVM drives every active probe's step. Frozen rows
+        // ride along (their output is ignored) — freezing is rare and
+        // short-lived enough that compacting isn't worth the shuffle.
+        let w_all = a.mvm_block(&q_cur, nrhs);
+        for (c, st) in states.iter_mut().enumerate() {
+            if !st.active {
+                continue;
+            }
+            let qc = &q_cur[c * n..(c + 1) * n];
+            let mut w = w_all[c * n..(c + 1) * n].to_vec();
+            let a_k = dot(qc, &w);
+            st.alpha.push(a_k);
+            axpy(-a_k, qc, &mut w);
+            if step > 0 {
+                axpy(-st.beta[step - 1], &st.q_prev, &mut w);
+            }
+            for qb in &st.basis {
+                let coef = dot(qb, &w);
+                axpy(-coef, qb, &mut w);
+            }
+            let b_k = norm2(&w);
+            if b_k < 1e-12 || step + 1 == t {
+                // Invariant subspace found (or step budget spent).
+                st.active = false;
+                continue;
+            }
+            st.beta.push(b_k);
+            st.q_prev.copy_from_slice(qc);
+            for (dst, wi) in q_cur[c * n..(c + 1) * n].iter_mut().zip(&w) {
+                *dst = wi / b_k;
+            }
+        }
+    }
+    states
+        .into_iter()
+        .map(|st| LanczosResult {
+            alpha: st.alpha,
+            beta: st.beta,
+            q: if keep_basis { Some(st.basis) } else { None },
+        })
+        .collect()
+}
+
+/// Gauss quadrature of `ln λ` for one probe's tridiagonal: the inner
+/// sum of the SLQ estimator, scaled by ‖z‖² = n for Rademacher probes.
+fn slq_probe_quadrature(lr: &LanczosResult, n: usize) -> f64 {
+    let (evals, evecs) = eigh_tridiag(&lr.alpha, &lr.beta);
+    let k = lr.alpha.len();
+    let mut quad = 0.0;
+    for j in 0..k {
+        let tau = evecs[(0, j)];
+        let lam = evals[j].max(1e-12);
+        quad += tau * tau * lam.ln();
+    }
+    quad * n as f64
+}
+
 /// Stochastic Lanczos quadrature estimate of `log|A|` for SPD `A`,
 /// using `probes` Rademacher probes and `t` Lanczos steps each:
 /// log|A| ≈ (n/p)·Σ_probes Σ_j (e₁ᵀu_j)² ln λ_j(T).
+///
+/// All probe recurrences advance in lockstep through
+/// [`lanczos_block`], so the whole estimate costs `t` block MVMs
+/// instead of `t · probes` single MVMs; the estimate itself is
+/// identical to running the probes sequentially.
 pub fn slq_logdet(a: &dyn MvmOperator, t: usize, probes: usize, seed: u64) -> f64 {
     let n = a.len();
+    let p = probes.max(1);
     let mut rng = Pcg64::new(seed);
-    let mut acc = 0.0;
-    for _ in 0..probes.max(1) {
-        let z = rng.rademacher_vec(n);
-        let lr = lanczos(a, &z, t, false);
-        let (evals, evecs) = eigh_tridiag(&lr.alpha, &lr.beta);
-        let k = lr.alpha.len();
-        let mut quad = 0.0;
-        for j in 0..k {
-            let tau = evecs[(0, j)];
-            let lam = evals[j].max(1e-12);
-            quad += tau * tau * lam.ln();
-        }
-        // ‖z‖² = n for Rademacher probes.
-        acc += quad * n as f64;
+    let mut z = vec![0.0; n * p];
+    for c in 0..p {
+        let zc = rng.rademacher_vec(n);
+        z[c * n..(c + 1) * n].copy_from_slice(&zc);
     }
-    acc / probes.max(1) as f64
+    let runs = lanczos_block(a, &z, p, t, false);
+    let acc: f64 = runs.iter().map(|lr| slq_probe_quadrature(lr, n)).sum();
+    acc / p as f64
 }
 
 #[cfg(test)]
@@ -145,6 +263,37 @@ mod tests {
                 let d = dot(&q[i], &q[j]);
                 let expect = if i == j { 1.0 } else { 0.0 };
                 assert!((d - expect).abs() < 1e-8, "q{i}·q{j} = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_lanczos_matches_sequential() {
+        // Lockstep probes share MVMs but run unchanged per-probe
+        // arithmetic: alpha/beta/basis must match sequential runs.
+        let n = 50;
+        let op = DenseMvm { mat: spd(n, 21) };
+        let mut rng = Pcg64::new(22);
+        let p = 3;
+        let q0 = rng.normal_vec(n * p);
+        let runs = lanczos_block(&op, &q0, p, 20, true);
+        assert_eq!(runs.len(), p);
+        for (c, blk) in runs.iter().enumerate() {
+            let single = lanczos(&op, &q0[c * n..(c + 1) * n], 20, true);
+            assert_eq!(blk.alpha.len(), single.alpha.len(), "probe {c}");
+            for (a, b) in blk.alpha.iter().zip(&single.alpha) {
+                assert!((a - b).abs() < 1e-12, "probe {c} alpha {a} vs {b}");
+            }
+            assert_eq!(blk.beta.len(), single.beta.len());
+            for (a, b) in blk.beta.iter().zip(&single.beta) {
+                assert!((a - b).abs() < 1e-12, "probe {c} beta {a} vs {b}");
+            }
+            let (qa, qb) = (blk.q.as_ref().unwrap(), single.q.as_ref().unwrap());
+            assert_eq!(qa.len(), qb.len());
+            for (va, vb) in qa.iter().zip(qb) {
+                for (a, b) in va.iter().zip(vb) {
+                    assert!((a - b).abs() < 1e-12, "probe {c} basis mismatch");
+                }
             }
         }
     }

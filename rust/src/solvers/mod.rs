@@ -1,13 +1,20 @@
-//! Krylov-subspace solvers: CG (plain / preconditioned / batched),
-//! Lanczos + stochastic Lanczos quadrature for log-determinants, RR-CG
-//! randomized truncation, and the pivoted-Cholesky preconditioner.
+//! Krylov-subspace solvers: CG (plain / preconditioned / block
+//! multi-RHS), Lanczos + stochastic Lanczos quadrature for
+//! log-determinants, RR-CG randomized truncation, and the
+//! pivoted-Cholesky preconditioner.
+//!
+//! Multi-RHS entry points ([`cg_block`], [`lanczos_block`]) take
+//! row-major `b × n` blocks (RHS-contiguous; ARCHITECTURE.md, §Batch
+//! layout) and issue one [`crate::mvm::MvmOperator::mvm_block`] per
+//! Krylov iteration, so the lattice traversal cost is shared by every
+//! right-hand side in flight.
 
 pub mod cg;
 pub mod lanczos;
 pub mod precond;
 pub mod rrcg;
 
-pub use cg::{cg, cg_multi, cg_precond, CgOptions, CgResult};
-pub use lanczos::{lanczos, slq_logdet, LanczosResult};
+pub use cg::{cg, cg_block, cg_multi, cg_precond, BlockCgResult, CgOptions, CgResult};
+pub use lanczos::{lanczos, lanczos_block, slq_logdet, LanczosResult};
 pub use precond::{KernelRows, PivCholPrecond};
 pub use rrcg::{rr_cg, RrCgOptions, RrCgResult};

@@ -12,8 +12,11 @@ use crate::linalg::{cholesky, solve_lower, solve_lower_t, Mat};
 /// preconditioner approximates the *exact* kernel even when the solve
 /// operator is the lattice approximation).
 pub trait KernelRows: Sync {
+    /// Matrix dimension n.
     fn len(&self) -> usize;
+    /// Row `i` of the kernel matrix.
     fn row(&self, i: usize) -> Vec<f64>;
+    /// The kernel diagonal.
     fn diag(&self) -> Vec<f64>;
 }
 
@@ -193,8 +196,8 @@ mod tests {
         let opts = CgOptions {
             tol: 1e-8,
             max_iters: 400,
-                    min_iters: 1,
-                };
+            min_iters: 1,
+        };
         let plain = cg(&op, &b, opts);
         let rows = ExactRows { k: &k, x: &x, d };
         let pc = PivCholPrecond::build(&rows, 30, sigma2);

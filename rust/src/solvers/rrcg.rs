@@ -13,7 +13,7 @@ use crate::util::stats::{axpy, dot};
 use crate::util::Pcg64;
 
 /// RR-CG options: the geometric success probability controls the
-/// expected truncation depth E[J] ≈ 1/p (plus the floor).
+/// expected truncation depth `E[J] ≈ 1/p` (plus the floor).
 #[derive(Clone, Copy, Debug)]
 pub struct RrCgOptions {
     /// Geometric parameter for the random truncation depth.
@@ -132,8 +132,8 @@ mod tests {
             CgOptions {
                 tol: 1e-12,
                 max_iters: 500,
-                    min_iters: 1,
-                },
+                min_iters: 1,
+            },
         )
         .x;
         let opts = RrCgOptions {

@@ -5,7 +5,7 @@
 //! spacing `s`. The spacing balances coverage of the kernel in the
 //! spatial and Fourier domains (Eq. 9 of the paper):
 //!
-//!   ∫_{-sm/2}^{sm/2} k(τ)dτ / ∫k  =  ∫_{-π/s}^{π/s} F[k](ω)dω / ∫F[k]
+//!   `∫_{-sm/2}^{sm/2} k(τ)dτ / ∫k  =  ∫_{-π/s}^{π/s} F[k](ω)dω / ∫F[k]`
 //!
 //! The LHS is monotonically increasing in `s` and the RHS monotonically
 //! decreasing, so the intersection is found by binary search. Following
@@ -88,8 +88,8 @@ pub fn spatial_coverage(family: KernelFamily, r: usize, s: f64) -> f64 {
     integrate_profile(family, half.min(tail_extent(family))) / total
 }
 
-/// Fourier coverage: fraction of ∫F[k](ω)dω captured on [-π/s, π/s],
-/// with F[k] computed by discrete FFT of the sampled profile (paper's
+/// Fourier coverage: fraction of `∫F[k](ω)dω` captured on `[-π/s, π/s]`,
+/// with `F[k]` computed by discrete FFT of the sampled profile (paper's
 /// numerical procedure). The cumulative integral is linearly
 /// interpolated between spectrum bins so the coverage is a *continuous*
 /// function of `s` — required for the binary search to converge to the
@@ -167,7 +167,7 @@ struct Spectrum {
     /// Raw one-sided spectrum values (read by the cross-check tests).
     #[cfg_attr(not(test), allow(dead_code))]
     vals: Vec<f64>,
-    /// cumulative[i] = Σ_{j<=i} weight_j·vals[j] (trapezoid about 0).
+    /// `cumulative[i] = Σ_{j<=i} weight_j·vals[j]` (trapezoid about 0).
     cumulative: Vec<f64>,
     dw: f64,
 }

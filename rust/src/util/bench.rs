@@ -23,7 +23,12 @@ pub struct Timing {
 /// Time `f` with `warmup` unmeasured runs followed by `iters` measured
 /// runs. The closure result is returned (last run) to keep the work
 /// observable.
-pub fn time_fn<R>(label: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> (Timing, R) {
+pub fn time_fn<R>(
+    label: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> R,
+) -> (Timing, R) {
     for _ in 0..warmup {
         std::hint::black_box(f());
     }

@@ -1,0 +1,84 @@
+//! Conversions between the two multi-RHS memory layouts of the batched
+//! MVM engine (ARCHITECTURE.md, §Batch layout):
+//!
+//! - **block** — row-major `b × n`; RHS `c` is the contiguous slice
+//!   `v[c*n..(c+1)*n]`. This is the convention at every operator and
+//!   solver boundary (`mvm_block`, `cg_block`, Lanczos probe blocks,
+//!   the coordinator), because each RHS stays a plain `&[f64]` vector.
+//! - **interleaved** — `n × b` with element `(i, c)` at `v[i*b + c]`.
+//!   This is the layout the lattice kernels use internally: one
+//!   traversal of a point's offsets/weights/neighbors touches all `b`
+//!   channels of that point contiguously.
+//!
+//! Both transposes run through [`crate::util::parallel::par_fill`] so
+//! large blocks convert at memory bandwidth.
+
+use super::parallel;
+
+/// Transpose a row-major `b × n` block into point-interleaved `n × b`
+/// values (`out[i*b + c] = v[c*n + i]`).
+pub fn block_to_interleaved(v: &[f64], n: usize, b: usize) -> Vec<f64> {
+    assert_eq!(v.len(), n * b, "block shape mismatch: {} != {n}×{b}", v.len());
+    let mut out = vec![0.0; n * b];
+    parallel::par_fill(&mut out, |range, chunk| {
+        let mut i = range.start / b;
+        let mut c = range.start % b;
+        for slot in chunk.iter_mut() {
+            *slot = v[c * n + i];
+            c += 1;
+            if c == b {
+                c = 0;
+                i += 1;
+            }
+        }
+    });
+    out
+}
+
+/// Transpose point-interleaved `n × b` values into a row-major `b × n`
+/// block (`out[c*n + i] = v[i*b + c]`).
+pub fn interleaved_to_block(v: &[f64], n: usize, b: usize) -> Vec<f64> {
+    assert_eq!(v.len(), n * b, "block shape mismatch: {} != {n}×{b}", v.len());
+    let mut out = vec![0.0; n * b];
+    parallel::par_fill(&mut out, |range, chunk| {
+        let mut c = range.start / n;
+        let mut i = range.start % n;
+        for slot in chunk.iter_mut() {
+            *slot = v[i * b + c];
+            i += 1;
+            if i == n {
+                i = 0;
+                c += 1;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn transposes_are_inverses() {
+        let mut rng = Pcg64::new(1);
+        for (n, b) in [(1usize, 1usize), (7, 3), (100, 8), (1500, 4)] {
+            let v = rng.normal_vec(n * b);
+            let inter = block_to_interleaved(&v, n, b);
+            let back = interleaved_to_block(&inter, n, b);
+            assert_eq!(v, back, "roundtrip failed for n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn element_mapping_is_correct() {
+        let n = 3;
+        let b = 2;
+        // block: rhs0 = [0,1,2], rhs1 = [10,11,12]
+        let block = vec![0.0, 1.0, 2.0, 10.0, 11.0, 12.0];
+        let inter = block_to_interleaved(&block, n, b);
+        assert_eq!(inter, vec![0.0, 10.0, 1.0, 11.0, 2.0, 12.0]);
+        assert_eq!(interleaved_to_block(&inter, n, b), block);
+    }
+}

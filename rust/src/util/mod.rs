@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod layout;
 pub mod mem;
 pub mod parallel;
 pub mod rng;

@@ -80,6 +80,42 @@ where
     });
 }
 
+/// [`par_fill`] with chunk boundaries aligned to multiples of `unit`:
+/// each chunk holds a whole number of `unit`-sized groups. This is what
+/// the interleaved multi-channel kernels need — their closures recover
+/// the point index as `range.start / nc`, which is only correct when
+/// every chunk starts on a channel-group boundary (`chunk_ranges` alone
+/// does not guarantee that).
+pub fn par_fill_groups<T, F>(out: &mut [T], unit: usize, f: F)
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
+{
+    let unit = unit.max(1);
+    // Hard assert: a ragged tail would be silently left unwritten.
+    assert_eq!(out.len() % unit, 0, "output not a whole number of groups");
+    let n = out.len();
+    let nt = num_threads();
+    if nt <= 1 || n < 1024 {
+        f(0..n, out);
+        return;
+    }
+    let ranges = chunk_ranges(n / unit, nt);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut offset = 0;
+        for r in ranges {
+            let len = r.len() * unit;
+            let (head, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let f = &f;
+            let start = offset;
+            offset += len;
+            s.spawn(move || f(start..start + len, head));
+        }
+    });
+}
+
 /// Parallel map-reduce: apply `map` to each chunk, combine with `reduce`.
 pub fn par_map_reduce<R, M, Rd>(n: usize, map: M, reduce: Rd, init: R) -> R
 where
@@ -137,6 +173,26 @@ mod tests {
         });
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn par_fill_groups_aligns_chunks() {
+        // 10_000 elements in groups of 3 does not divide evenly across
+        // typical thread counts — every chunk must still start and end
+        // on a group boundary, and every element must be written.
+        let unit = 3;
+        let groups = 10_000;
+        let mut out = vec![0u64; groups * unit];
+        par_fill_groups(&mut out, unit, |range, chunk| {
+            assert_eq!(range.start % unit, 0, "chunk start not group-aligned");
+            assert_eq!(range.len() % unit, 0, "chunk length not whole groups");
+            for (k, i) in range.enumerate() {
+                chunk[k] = (i / unit * 10 + i % unit) as u64;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i / unit * 10 + i % unit) as u64);
         }
     }
 

@@ -1,0 +1,230 @@
+//! Equivalence guarantees of the batched multi-RHS engine: for every
+//! operator and solver, the `b × n` block path must reproduce the
+//! single-RHS path to floating-point noise (the block engine reorders
+//! no per-RHS arithmetic — it only amortizes traversals), and block-CG
+//! must freeze each RHS at exactly the iteration sequential CG would
+//! stop at. Hand-rolled property sweeps in the style of
+//! `properties.rs`: failures print the (case, d, n, b) tuple for
+//! replay.
+
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::lattice::PermutohedralLattice;
+use simplex_gp::linalg::Mat;
+use simplex_gp::mvm::{DenseMvm, ExactMvm, MvmOperator, Shifted, SimplexMvm};
+use simplex_gp::solvers::{cg, cg_block, lanczos, lanczos_block, CgOptions};
+use simplex_gp::util::Pcg64;
+
+const BATCHES: [usize; 3] = [1, 3, 8];
+
+fn case_rng(seed: u64) -> Pcg64 {
+    Pcg64::with_stream(0x5eed_cafe, seed)
+}
+
+/// |a - b| must be ≤ 1e-12 absolutely and relative to the magnitude —
+/// far inside the 1e-10 acceptance bound, since the block engine runs
+/// the same FP operations per RHS.
+fn assert_matches(a: f64, b: f64, ctx: &str) {
+    let tol = 1e-12 * (1.0 + a.abs().max(b.abs()));
+    assert!((a - b).abs() <= tol, "{ctx}: {a} vs {b}");
+}
+
+#[test]
+fn simplex_block_mvm_matches_single_across_shapes() {
+    // The tentpole property: random d ∈ {2..8}, B ∈ {1, 3, 8} — the
+    // one-pass batched splat→blur→slice equals per-vector filtering.
+    for case in 0..12u64 {
+        let mut rng = case_rng(case);
+        let d = 2 + rng.below(7); // 2..=8
+        let n = 50 + rng.below(150);
+        let ell = rng.uniform_in(0.4, 2.0);
+        let order = 1 + rng.below(2); // r ∈ {1, 2}
+        let x = rng.normal_vec(n * d);
+        let mut k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, ell);
+        k.outputscale = rng.uniform_in(0.5, 3.0);
+        for symmetrize in [false, true] {
+            let op = SimplexMvm::build(&x, d, &k, order).with_symmetrize(symmetrize);
+            for &b in &BATCHES {
+                let v = rng.normal_vec(n * b);
+                let block = op.mvm_block(&v, b);
+                for c in 0..b {
+                    let single = op.mvm(&v[c * n..(c + 1) * n]);
+                    for i in 0..n {
+                        assert_matches(
+                            block[c * n + i],
+                            single[i],
+                            &format!(
+                                "case {case} (d={d} n={n} b={b} sym={symmetrize}) rhs {c} row {i}"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lattice_block_filter_matches_filter_across_shapes() {
+    // Same property one layer down, on the raw lattice (unit scale),
+    // including the b = 1 degenerate case being *exactly* the single
+    // path.
+    for case in 0..8u64 {
+        let mut rng = case_rng(100 + case);
+        let d = 2 + rng.below(7);
+        let n = 40 + rng.below(120);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 1.0);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        for &b in &BATCHES {
+            let v = rng.normal_vec(n * b);
+            let block = lat.filter_block(&v, b);
+            for c in 0..b {
+                let single = lat.mvm(&v[c * n..(c + 1) * n]);
+                for i in 0..n {
+                    assert_matches(
+                        block[c * n + i],
+                        single[i],
+                        &format!("case {case} (d={d} n={n} b={b}) rhs {c} row {i}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_and_shifted_block_mvm_match_single() {
+    for case in 0..6u64 {
+        let mut rng = case_rng(200 + case);
+        let d = 2 + rng.below(7);
+        let n = 40 + rng.below(80);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern52, d, 1.2);
+        let exact = ExactMvm::new(&k, &x, d);
+        let shift = rng.uniform_in(0.01, 1.0);
+        let shifted = Shifted::new(&exact, shift);
+        for &b in &BATCHES {
+            let v = rng.normal_vec(n * b);
+            let eb = exact.mvm_block(&v, b);
+            let sb = shifted.mvm_block(&v, b);
+            for c in 0..b {
+                let row = &v[c * n..(c + 1) * n];
+                let single = exact.mvm(row);
+                for i in 0..n {
+                    let ctx = format!("case {case} (d={d} n={n} b={b}) rhs {c} row {i}");
+                    assert_matches(eb[c * n + i], single[i], &ctx);
+                    assert_matches(sb[c * n + i], single[i] + shift * row[i], &ctx);
+                }
+            }
+        }
+    }
+}
+
+fn spd_op(n: usize, rng: &mut Pcg64) -> DenseMvm {
+    let mut b = Mat::zeros(n, n);
+    for i in 0..n * n {
+        b.data[i] = rng.normal();
+    }
+    let mut a = b.matmul(&b.transpose());
+    a.add_diag(n as f64 * rng.uniform_in(0.3, 2.0));
+    DenseMvm { mat: a }
+}
+
+#[test]
+fn block_cg_iteration_counts_match_sequential_cg() {
+    // Acceptance property: block-CG converges each RHS in exactly the
+    // iterations its sequential solve takes (per-column arithmetic is
+    // the same FP sequence), and the shared loop runs max over RHS.
+    for case in 0..8u64 {
+        let mut rng = case_rng(300 + case);
+        let n = 30 + rng.below(60);
+        let op = spd_op(n, &mut rng);
+        for &b in &BATCHES {
+            let rhs = rng.normal_vec(n * b);
+            let opts = CgOptions {
+                tol: 1e-9,
+                max_iters: 500,
+                min_iters: 1,
+            };
+            let res = cg_block(&op, &rhs, b, opts);
+            let mut slowest = 0usize;
+            for c in 0..b {
+                let single = cg(&op, &rhs[c * n..(c + 1) * n], opts);
+                assert_eq!(
+                    res.rhs_iterations[c], single.iterations,
+                    "case {case} (n={n} b={b}) rhs {c}: {} vs {} iterations",
+                    res.rhs_iterations[c], single.iterations
+                );
+                for i in 0..n {
+                    assert!(
+                        (res.x[c * n + i] - single.x[i]).abs() < 1e-10,
+                        "case {case} rhs {c} row {i}"
+                    );
+                }
+                slowest = slowest.max(single.iterations);
+            }
+            assert_eq!(res.iterations, slowest, "case {case} b={b}");
+        }
+    }
+}
+
+#[test]
+fn block_cg_on_lattice_operator_matches_sequential() {
+    // The production solve: (symmetrized lattice + σ²I) block-solved
+    // for target + probes together must equal the sequential solves.
+    for case in 0..4u64 {
+        let mut rng = case_rng(400 + case);
+        let d = 2 + rng.below(5);
+        let n = 80 + rng.below(120);
+        let noise = rng.uniform_in(0.05, 0.5);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let op = SimplexMvm::build(&x, d, &k, 1).with_symmetrize(true);
+        let shifted = Shifted::new(&op, noise);
+        let b = 4;
+        let rhs = rng.normal_vec(n * b);
+        let opts = CgOptions {
+            tol: 1e-8,
+            max_iters: 500,
+            min_iters: 1,
+        };
+        let res = cg_block(&shifted, &rhs, b, opts);
+        for c in 0..b {
+            let single = cg(&shifted, &rhs[c * n..(c + 1) * n], opts);
+            assert_eq!(
+                res.rhs_iterations[c], single.iterations,
+                "case {case} (d={d} n={n}) rhs {c} iterations"
+            );
+            for i in 0..n {
+                assert!(
+                    (res.x[c * n + i] - single.x[i]).abs()
+                        < 1e-10 * (1.0 + single.x[i].abs()),
+                    "case {case} rhs {c} row {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn block_lanczos_tridiagonals_match_sequential() {
+    for case in 0..4u64 {
+        let mut rng = case_rng(500 + case);
+        let n = 40 + rng.below(40);
+        let op = spd_op(n, &mut rng);
+        let p = 1 + rng.below(4);
+        let q0 = rng.normal_vec(n * p);
+        let t = 15 + rng.below(15);
+        let runs = lanczos_block(&op, &q0, p, t, false);
+        for (c, blk) in runs.iter().enumerate() {
+            let single = lanczos(&op, &q0[c * n..(c + 1) * n], t, false);
+            assert_eq!(blk.alpha.len(), single.alpha.len(), "case {case} probe {c}");
+            for (a, b) in blk.alpha.iter().zip(&single.alpha) {
+                assert_matches(*a, *b, &format!("case {case} probe {c} alpha"));
+            }
+            for (a, b) in blk.beta.iter().zip(&single.beta) {
+                assert_matches(*a, *b, &format!("case {case} probe {c} beta"));
+            }
+        }
+    }
+}

@@ -7,6 +7,7 @@ use simplex_gp::coordinator::{Client, ServeConfig, Server};
 use simplex_gp::datasets::{generate, split_standardize};
 use simplex_gp::gp::{train, GpConfig, SimplexGp, TrainConfig};
 use simplex_gp::kernels::{ArdKernel, KernelFamily};
+#[cfg(feature = "pjrt")]
 use simplex_gp::lattice::PermutohedralLattice;
 use simplex_gp::mvm::{MvmOperator, SimplexMvm};
 use simplex_gp::util::stats::{cosine_error, rmse};
@@ -98,6 +99,7 @@ fn simplex_and_exact_gp_agree_on_easy_problem() {
     assert!(rmse(&pe, &sp.test.y) < base);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_backend_matches_native_on_real_lattice() {
     // Requires `make artifacts`. Skips (with a note) if absent.
