@@ -9,7 +9,11 @@
 //! one row-major block driven through a single batched splat→blur→slice
 //! — see ARCHITECTURE.md, §Batch layout).
 //!
-//!     cargo run --release --example serving
+//!     cargo run --release --example serving [-- --shards P]
+//!
+//! `--shards P` partitions the model across P data-parallel lattices
+//! (0 = auto from cores); the coordinator then routes every coalesced
+//! MVM block to P shard workers.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
@@ -21,26 +25,47 @@ use simplex_gp::kernels::{ArdKernel, KernelFamily};
 use simplex_gp::util::stats::percentile;
 use simplex_gp::util::Pcg64;
 
+/// `--shards P` from the command line (default 1, 0 = auto).
+fn shards_arg() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--shards")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
 fn main() -> anyhow::Result<()> {
     // Model: protein analog, modest size so the demo is quick.
     let ds = generate("protein", 8000, 0);
     let sp = split_standardize(&ds, 1);
     let d = 9;
     let kernel = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 1.0);
-    let model = SimplexGp::fit(&sp.train.x, &sp.train.y, d, kernel, 0.05, GpConfig::default())?;
+    let gp_cfg = GpConfig {
+        shards: shards_arg(),
+        ..GpConfig::default()
+    };
+    let model = SimplexGp::fit(&sp.train.x, &sp.train.y, d, kernel, 0.05, gp_cfg)?;
     println!(
-        "model ready: n = {}, m = {} lattice points",
+        "model ready: n = {}, m = {} lattice points, {} shard(s)",
         model.n_train(),
-        model.lattice_points()
+        model.lattice_points(),
+        model.shards()
     );
+    let model_shards = model.shards();
 
-    let mut cfg = ServeConfig::default();
-    cfg.addr = "127.0.0.1:0".to_string();
-    cfg.max_batch = 512;
-    cfg.max_wait = std::time::Duration::from_millis(2);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_batch: 512,
+        max_wait: std::time::Duration::from_millis(2),
+        ..ServeConfig::default()
+    };
     let server = Server::start(model, cfg)?;
     let addr = server.local_addr;
-    println!("coordinator listening on {addr} (dynamic batching: 512 rows / 2 ms)");
+    println!(
+        "coordinator listening on {addr} (dynamic batching: 512 rows / 2 ms, \
+         {model_shards} shard worker(s))"
+    );
 
     // Concurrent clients.
     let clients = 8;
@@ -95,15 +120,21 @@ fn main() -> anyhow::Result<()> {
     );
     assert_eq!(completed.load(Ordering::Relaxed), total_reqs);
 
-    // --- Phase 2: concurrent raw MVMs through the block engine ---
-    let n = {
+    // --- Phase 2: concurrent raw MVMs through the shard workers ---
+    let (n, stat_shards) = {
         let mut c = Client::connect(&addr)?;
         let stats = c.stats()?;
-        stats
+        let n = stats
             .get("n")
             .and_then(|v| v.as_f64())
-            .ok_or_else(|| anyhow::anyhow!("stats missing n"))? as usize
+            .ok_or_else(|| anyhow::anyhow!("stats missing n"))? as usize;
+        let s = stats
+            .get("shards")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(1.0) as usize;
+        (n, s)
     };
+    println!("\nserver stats: n = {n}, shards = {stat_shards}");
     let mvm_clients = 6;
     let mvm_requests = 8;
     let t1 = Instant::now();
@@ -128,8 +159,9 @@ fn main() -> anyhow::Result<()> {
     let mvm_wall = t1.elapsed().as_secs_f64();
     let mvm_total = mvm_clients * mvm_requests;
     let mvm_batches = server.batches() - predict_batches;
-    println!("\n=== mvm load (coalesced block MVMs) ===");
+    println!("\n=== mvm load (coalesced block MVMs over shard workers) ===");
     println!("requests             : {mvm_total} (n = {n} each)");
+    println!("shard workers        : {stat_shards}");
     println!("wall time            : {mvm_wall:.2} s");
     println!(
         "block passes         : {} ({:.1} MVMs coalesced per lattice pass)",

@@ -13,7 +13,20 @@ use simplex_gp::kernels::KernelFamily;
 use simplex_gp::util::stats::{gaussian_nll, rmse};
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // `--shards P` (default 1, 0 = auto from cores) — pulled out before
+    // positional parsing so it can appear anywhere.
+    let shards: usize = match args.iter().position(|a| a == "--shards") {
+        Some(i) => {
+            let v = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("--shards needs a value"))?
+                .parse()?;
+            args.drain(i..=i + 1);
+            v
+        }
+        None => 1,
+    };
     let name = args.first().map(|s| s.as_str()).unwrap_or("protein");
     let spec = spec_for(name).ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
     let n: usize = args
@@ -33,11 +46,14 @@ fn main() -> anyhow::Result<()> {
         split.test.n()
     );
 
-    let mut cfg = TrainConfig::default();
-    cfg.epochs = epochs;
-    cfg.probes = 8;
-    cfg.verbose = true;
-    cfg.track_mll = true;
+    let cfg = TrainConfig {
+        epochs,
+        probes: 8,
+        verbose: true,
+        track_mll: true,
+        shards,
+        ..TrainConfig::default()
+    };
     let t0 = std::time::Instant::now();
     let out = train(
         &split.train.x,
@@ -67,9 +83,10 @@ fn main() -> anyhow::Result<()> {
         rmse(&vec![0.0; split.test.n()], &split.test.y)
     );
     println!(
-        "lattice points m        : {} (m/L = {:.3})",
+        "lattice points m        : {} (m/L = {:.3}, {} shard(s))",
         model.lattice_points(),
-        model.lattice_points() as f64 / (split.train.n() as f64 * (spec.d as f64 + 1.0))
+        model.lattice_points() as f64 / (split.train.n() as f64 * (spec.d as f64 + 1.0)),
+        model.shards()
     );
     println!("learned noise σ²        : {:.4}", model.noise);
     println!("learned outputscale     : {:.3}", model.kernel.outputscale);

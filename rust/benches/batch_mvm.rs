@@ -2,14 +2,23 @@
 //! the lattice vs `b` sequential single-RHS MVMs (the acceptance
 //! benchmark for the block engine: B = 8 must beat 8 sequential MVMs
 //! by ≥ 2×), plus the same comparison for block-CG, where every Krylov
-//! iteration shares one lattice traversal across all right-hand sides.
+//! iteration shares one lattice traversal across all right-hand sides,
+//! plus the PR-2 shard-scaling sweep: single-request MVM wall time vs
+//! shard count P on n = 50k (acceptance: ≥ 1.5× at P = 4).
+//!
+//! With `SIMPLEX_GP_BENCH_JSON=<path>` set (CI bench-smoke), every row
+//! is appended to the perf-trajectory JSON file as
+//! `{"bench", "n", "d", "B", "shards", "ns_per_mvm"}` records.
 //!
 //!     cargo bench --bench batch_mvm [-- --quick]
 
 use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::lattice::ShardedLattice;
 use simplex_gp::mvm::{MvmOperator, Shifted, SimplexMvm};
 use simplex_gp::solvers::{cg, cg_block, CgOptions};
-use simplex_gp::util::bench::{fmt_secs, quick_mode, time_budget, Table};
+use simplex_gp::util::bench::{
+    append_bench_json, bench_record, fmt_secs, quick_mode, time_budget, Table,
+};
 use simplex_gp::util::Pcg64;
 
 fn main() {
@@ -53,6 +62,16 @@ fn main() {
             format!("{speedup:.2}x"),
             format!("{:.0}", b as f64 / blk.median_s.max(1e-12)),
         ]);
+        append_bench_json(&bench_record(
+            "batch_mvm",
+            &[
+                ("n", n as f64),
+                ("d", d as f64),
+                ("B", b as f64),
+                ("shards", 1.0),
+                ("ns_per_mvm", blk.median_s * 1e9 / b as f64),
+            ],
+        ));
         if b == 8 {
             println!(
                 "acceptance: B=8 block vs 8 sequential MVMs = {speedup:.2}x {}",
@@ -63,6 +82,78 @@ fn main() {
     println!("\nBatched MVM — one splat->blur->slice pass for all B RHS\n");
     table.print();
     table.write_csv("batch_mvm");
+
+    // --- PR-2 shard scaling: single-request MVM wall time vs P ---
+    // n stays at 50k even in quick mode: the acceptance target is
+    // single-request latency improving with shards on n >= 50k
+    // (>= 1.5x at P = 4). Points are sorted along the first coordinate
+    // so the contiguous row ranges become spatial slabs — the locality
+    // assumption contiguous-range sharding is designed around
+    // (ARCHITECTURE.md §Sharding): spatially disjoint shards keep
+    // Σ_p m_p ≈ m, so the blur work is conserved while the serial splat
+    // scatter and the per-shard traversals run P-way concurrent.
+    let shard_n: usize = 50_000;
+    let shard_d = 4;
+    let shard_budget = if quick { 0.4 } else { 2.0 };
+    let xs: Vec<f64> = {
+        let mut r = Pcg64::new(11);
+        let raw: Vec<f64> = (0..shard_n * shard_d).map(|_| r.normal()).collect();
+        let mut order: Vec<usize> = (0..shard_n).collect();
+        order.sort_by(|&a, &b| raw[a * shard_d].total_cmp(&raw[b * shard_d]));
+        let mut sorted = Vec::with_capacity(shard_n * shard_d);
+        for i in order {
+            sorted.extend_from_slice(&raw[i * shard_d..(i + 1) * shard_d]);
+        }
+        sorted
+    };
+    let vs = {
+        let mut r = Pcg64::new(12);
+        r.normal_vec(shard_n)
+    };
+    let mut shard_table = Table::new(&["P", "build", "one MVM", "speedup vs P=1"]);
+    let mut base_mvm_s = 0.0;
+    for &p in &[1usize, 2, 4] {
+        let t0 = std::time::Instant::now();
+        let lat = ShardedLattice::build(&xs, shard_d, &kernel, 1, p);
+        let build_s = t0.elapsed().as_secs_f64();
+        let t = time_budget(&format!("shard p={p}"), shard_budget, 30, || lat.mvm(&vs));
+        if p == 1 {
+            base_mvm_s = t.median_s;
+        }
+        let speedup = base_mvm_s / t.median_s.max(1e-12);
+        shard_table.row(&[
+            p.to_string(),
+            fmt_secs(build_s),
+            fmt_secs(t.median_s),
+            format!("{speedup:.2}x"),
+        ]);
+        append_bench_json(&bench_record(
+            "shard_mvm",
+            &[
+                ("n", shard_n as f64),
+                ("d", shard_d as f64),
+                ("B", 1.0),
+                ("shards", p as f64),
+                ("ns_per_mvm", t.median_s * 1e9),
+            ],
+        ));
+        if p == 4 {
+            println!(
+                "acceptance: P=4 sharded vs single-lattice MVM = {speedup:.2}x {}",
+                if speedup >= 1.5 {
+                    "(>= 1.5x: PASS)"
+                } else {
+                    "(< 1.5x: FAIL)"
+                }
+            );
+        }
+    }
+    println!(
+        "\nShard scaling — one MVM, n = {shard_n}, d = {shard_d} ({} threads)\n",
+        simplex_gp::util::parallel::num_threads()
+    );
+    shard_table.print();
+    shard_table.write_csv("shard_mvm");
 
     // --- Block-CG: probes + target solved in one Krylov run ---
     let noise = 0.1;

@@ -14,16 +14,18 @@ fn run_curve(
     tol: f64,
     epochs: usize,
 ) -> Vec<(usize, f64, f64)> {
-    let mut cfg = TrainConfig::default();
-    cfg.epochs = epochs;
-    cfg.probes = 6;
-    cfg.solve = SolveMode::Cg { tol };
-    cfg.track_mll = true;
-    cfg.patience = epochs + 1;
-    // Ill-conditioned start — the regime where loose CG destabilizes
-    // training (paper §5.4 / Appendix B).
-    cfg.init_noise = 1e-3;
-    cfg.min_noise = 1e-4;
+    let cfg = TrainConfig {
+        epochs,
+        probes: 6,
+        solve: SolveMode::Cg { tol },
+        track_mll: true,
+        patience: epochs + 1,
+        // Ill-conditioned start — the regime where loose CG destabilizes
+        // training (paper §5.4 / Appendix B).
+        init_noise: 1e-3,
+        min_noise: 1e-4,
+        ..TrainConfig::default()
+    };
     let out = train(
         &sp.train.x,
         &sp.train.y,

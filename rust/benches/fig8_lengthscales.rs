@@ -145,9 +145,11 @@ fn main() {
         let ds = generate(spec.name, n_simplex.min(spec.n_default), 0);
         let sp = split_standardize(&ds, 1);
         let d = spec.d;
-        let mut cfg = TrainConfig::default();
-        cfg.epochs = epochs;
-        cfg.probes = 6;
+        let cfg = TrainConfig {
+            epochs,
+            probes: 6,
+            ..TrainConfig::default()
+        };
         let out = train(
             &sp.train.x,
             &sp.train.y,

@@ -6,7 +6,7 @@
 use simplex_gp::baselines::{KissGpMvm, SkipMvm};
 use simplex_gp::kernels::{ArdKernel, KernelFamily};
 use simplex_gp::mvm::{ExactMvm, MvmOperator, SimplexMvm};
-use simplex_gp::util::bench::{fmt_secs, time_budget, Table};
+use simplex_gp::util::bench::{append_bench_json, bench_record, fmt_secs, time_budget, Table};
 use simplex_gp::util::stats::loglog_slope;
 use simplex_gp::util::Pcg64;
 
@@ -40,6 +40,26 @@ fn main() {
         times[1].push(tk.median_s);
         times[2].push(ts.median_s);
         times[3].push(tx.median_s);
+        // Perf-trajectory records (CI bench-smoke → BENCH_PR2.json).
+        for (op, t) in [("exact", &te), ("kissgp", &tk), ("skip", &ts), ("simplex", &tx)] {
+            let mut rec = bench_record(
+                "table1_mvm_scaling",
+                &[
+                    ("n", n as f64),
+                    ("d", d as f64),
+                    ("B", 1.0),
+                    ("shards", 1.0),
+                    ("ns_per_mvm", t.median_s * 1e9),
+                ],
+            );
+            if let simplex_gp::util::json::Json::Obj(map) = &mut rec {
+                map.insert(
+                    "op".to_string(),
+                    simplex_gp::util::json::Json::Str(op.to_string()),
+                );
+            }
+            append_bench_json(&rec);
+        }
         table.row(&[
             n.to_string(),
             fmt_secs(te.median_s),

@@ -44,10 +44,12 @@ fn main() {
             let t_nll = nll_points.min(yte.len());
 
             // --- Simplex-GP: full MLL training ---
-            let mut cfg = TrainConfig::default();
-            cfg.epochs = if quick { 8 } else { 20 };
-            cfg.probes = 6;
-            cfg.seed = trial;
+            let cfg = TrainConfig {
+                epochs: if quick { 8 } else { 20 },
+                probes: 6,
+                seed: trial,
+                ..TrainConfig::default()
+            };
             let out = train(xtr, ytr, xv, yv, d, KernelFamily::Matern32, cfg).unwrap();
             let model = out.model;
             let pred = model.predict_mean(xte);
@@ -71,10 +73,12 @@ fn main() {
             l[0].push(gaussian_nll(&ms, &vs, &yte[..t_nll]));
 
             // --- SGPR m=512 ---
-            let mut scfg = SgprConfig::default();
-            scfg.m_inducing = 512.min(ytr.len() / 2);
-            scfg.epochs = if quick { 10 } else { 25 };
-            scfg.seed = trial;
+            let scfg = SgprConfig {
+                m_inducing: 512.min(ytr.len() / 2),
+                epochs: if quick { 10 } else { 25 },
+                seed: trial,
+                ..SgprConfig::default()
+            };
             let sg = Sgpr::train(xtr, ytr, d, KernelFamily::Matern32, scfg).unwrap();
             let (ms_all, _) = sg.predict(xte);
             r[1].push(rmse(&ms_all, yte));

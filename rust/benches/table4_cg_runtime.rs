@@ -15,15 +15,18 @@ fn epoch_time(
     solve: SolveMode,
     epochs: usize,
 ) -> (f64, f64) {
-    let mut cfg = TrainConfig::default();
-    cfg.epochs = epochs;
-    cfg.probes = 6;
-    cfg.solve = solve;
-    cfg.patience = epochs + 1; // no early stopping inside the measurement
-    // Start ill-conditioned (small noise): this is the regime where CG
-    // tolerance dominates runtime, as in the paper's full-size runs.
-    cfg.init_noise = 1e-3;
-    cfg.min_noise = 1e-4;
+    let cfg = TrainConfig {
+        epochs,
+        probes: 6,
+        solve,
+        patience: epochs + 1, // no early stopping inside the measurement
+        // Start ill-conditioned (small noise): this is the regime where
+        // CG tolerance dominates runtime, as in the paper's full-size
+        // runs.
+        init_noise: 1e-3,
+        min_noise: 1e-4,
+        ..TrainConfig::default()
+    };
     let out = train(
         &sp.train.x,
         &sp.train.y,

@@ -17,7 +17,7 @@ struct Rows<'a> {
     d: usize,
 }
 
-impl<'a> KernelRows for Rows<'a> {
+impl KernelRows for Rows<'_> {
     fn len(&self) -> usize {
         self.x.len() / self.d
     }
@@ -63,7 +63,7 @@ impl ExactGp {
             x,
             d,
         };
-        let rank = 100usize.min(y.len() / 2).max(1);
+        let rank = (y.len() / 2).clamp(1, 100);
         let pc = PivCholPrecond::build(&rows, rank, noise);
         let pcf = |r: &[f64]| pc.solve(r);
         let res = cg_precond(

@@ -347,10 +347,12 @@ mod tests {
         let d = 2;
         let (x, y) = toy(600, d, 3);
         let (xt, yt) = toy(150, d, 4);
-        let mut cfg = SgprConfig::default();
-        cfg.m_inducing = 64;
-        cfg.epochs = 20;
-        cfg.train_subsample = 600;
+        let cfg = SgprConfig {
+            m_inducing: 64,
+            epochs: 20,
+            train_subsample: 600,
+            ..SgprConfig::default()
+        };
         let model = Sgpr::train(&x, &y, d, KernelFamily::Rbf, cfg).unwrap();
         let pred = model.predict_mean(&xt);
         let err = rmse(&pred, &yt);

@@ -42,7 +42,7 @@ struct HadamardOp<'a> {
     b: &'a LowRankPsd,
 }
 
-impl<'a> MvmOperator for HadamardOp<'a> {
+impl MvmOperator for HadamardOp<'_> {
     fn len(&self) -> usize {
         self.a.l.rows
     }
@@ -245,7 +245,7 @@ struct TrainBlock<'a> {
     n: usize,
 }
 
-impl<'a> MvmOperator for TrainBlock<'a> {
+impl MvmOperator for TrainBlock<'_> {
     fn len(&self) -> usize {
         self.n
     }

@@ -10,7 +10,7 @@ use crate::config::Config;
 use crate::datasets::{generate, spec_for, split_standardize};
 use crate::gp::{train, SolveMode, TrainConfig};
 use crate::kernels::{ArdKernel, KernelFamily};
-use crate::lattice::PermutohedralLattice;
+use crate::lattice::{PermutohedralLattice, ShardedLattice};
 use crate::mvm::MvmOperator;
 
 /// Parsed command line: subcommand, flags, positionals.
@@ -78,19 +78,26 @@ USAGE: simplex-gp <command> [--flags]
 COMMANDS
   train      --dataset <name> [--n N] [--epochs E] [--kernel rbf|matern32]
              [--solver cg|rrcg] [--tol T] [--order R] [--seed S] [--track-mll]
+             [--shards P]
              Train on a synthetic UCI analog; prints per-epoch metrics and
              final test RMSE/NLL.
   mvm        --dataset <name> [--n N] [--order R] [--backend native|pjrt]
+             [--shards P]
              Time lattice MVMs and report cosine error vs the exact MVM.
   sparsity   [--n N] — print the Table-3 sparsity rows for all datasets.
   stencil    --kernel <fam> [--order R] — print the coverage-optimal
              spacing and taps (the §4.1 discretization).
-  serve      --dataset <name> [--n N] [--addr HOST:PORT] — train quickly,
-             then serve predictions over the JSON-lines protocol.
+  serve      --dataset <name> [--n N] [--addr HOST:PORT] [--shards P] —
+             train quickly, then serve predictions over the JSON-lines
+             protocol.
   goldens    [--artifacts DIR] — compile AOT artifacts on PJRT and replay
              the python-generated goldens (cross-layer parity check).
   datasets   — list the benchmark dataset analogs.
   help       — this text.
+
+--shards P partitions the training points across P data-parallel
+lattices (0 = auto from cores); train/mvm/serve default to the config's
+[train] shards value (1).
 
 Defaults mirror the paper's Table 5; see config/mod.rs.
 ";
@@ -119,6 +126,19 @@ fn parse_kernel(args: &Args) -> Result<KernelFamily> {
     KernelFamily::parse(name).ok_or_else(|| anyhow!("unknown kernel '{name}'"))
 }
 
+/// Config file from `--config`, else the built-in defaults.
+fn load_config(args: &Args) -> Result<Config> {
+    match args.get("config") {
+        Some(p) => Config::load(std::path::Path::new(p)),
+        None => Ok(Config::parse(crate::config::DEFAULT_CONFIG).unwrap()),
+    }
+}
+
+/// `--shards` flag, defaulting to the config's `[train] shards` (1).
+fn shards_arg(args: &Args, cfg_file: &Config) -> Result<usize> {
+    args.get_usize("shards", cfg_file.get_usize("train", "shards", 1))
+}
+
 fn load_split(args: &Args) -> Result<(crate::datasets::Split, usize)> {
     let name = args
         .get("dataset")
@@ -133,26 +153,28 @@ fn load_split(args: &Args) -> Result<(crate::datasets::Split, usize)> {
 fn cmd_train(args: &Args) -> Result<()> {
     let (split, d) = load_split(args)?;
     let family = parse_kernel(args)?;
-    let cfg_file = match args.get("config") {
-        Some(p) => Config::load(std::path::Path::new(p))?,
-        None => Config::parse(crate::config::DEFAULT_CONFIG).unwrap(),
-    };
-    let mut cfg = TrainConfig::default();
-    cfg.epochs = args.get_usize("epochs", cfg_file.get_usize("train", "max_epochs", 30).min(30))?;
-    cfg.lr = cfg_file.get_f64("train", "learning_rate", 0.1);
-    cfg.order = args.get_usize("order", cfg_file.get_usize("train", "blur_order", 1))?;
-    cfg.min_noise = cfg_file.get_f64("train", "min_noise", 1e-4);
-    cfg.seed = args.get_usize("seed", 0)? as u64;
-    cfg.track_mll = args.get_flag("track-mll");
-    cfg.verbose = true;
+    let cfg_file = load_config(args)?;
     let tol = args.get_f64("tol", cfg_file.get_f64("train", "cg_train_tolerance", 1.0))?;
-    cfg.solve = match args.get("solver").unwrap_or("cg") {
+    let solve = match args.get("solver").unwrap_or("cg") {
         "cg" => SolveMode::Cg { tol },
         "rrcg" => SolveMode::RrCg {
             geom_p: 0.05,
             min_iters: 10,
         },
         other => bail!("unknown solver '{other}'"),
+    };
+    let cfg = TrainConfig {
+        epochs: args
+            .get_usize("epochs", cfg_file.get_usize("train", "max_epochs", 30).min(30))?,
+        lr: cfg_file.get_f64("train", "learning_rate", 0.1),
+        order: args.get_usize("order", cfg_file.get_usize("train", "blur_order", 1))?,
+        min_noise: cfg_file.get_f64("train", "min_noise", 1e-4),
+        seed: args.get_usize("seed", 0)? as u64,
+        track_mll: args.get_flag("track-mll"),
+        verbose: true,
+        solve,
+        shards: shards_arg(args, &cfg_file)?,
+        ..TrainConfig::default()
     };
 
     println!(
@@ -198,10 +220,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             .collect::<Vec<_>>()
     );
     println!(
-        "outputscale {:.3}, noise {:.4}, lattice points m = {}",
+        "outputscale {:.3}, noise {:.4}, lattice points m = {}, shards = {}",
         out.model.kernel.outputscale,
         out.model.noise,
-        out.model.lattice_points()
+        out.model.lattice_points(),
+        out.model.shards()
     );
     Ok(())
 }
@@ -210,17 +233,19 @@ fn cmd_mvm(args: &Args) -> Result<()> {
     let (split, d) = load_split(args)?;
     let family = parse_kernel(args)?;
     let order = args.get_usize("order", 1)?;
+    let shards = shards_arg(args, &load_config(args)?)?;
     let x = &split.train.x;
     let n = split.train.n();
     let kernel = ArdKernel::with_lengthscale(family, d, 1.0);
 
     let t0 = std::time::Instant::now();
-    let lat = PermutohedralLattice::build(x, d, &kernel, order);
+    let lat = ShardedLattice::build(x, d, &kernel, order, shards);
     let build_s = t0.elapsed().as_secs_f64();
     println!(
-        "lattice: n={n} d={d} m={} (m/L={:.4}) built in {:.3}s",
-        lat.m,
+        "lattice: n={n} d={d} m={} (m/L={:.4}) shards={} built in {:.3}s",
+        lat.m(),
         lat.sparsity_ratio(),
+        lat.shard_count(),
         build_s
     );
 
@@ -234,11 +259,14 @@ fn cmd_mvm(args: &Args) -> Result<()> {
             (u, t.elapsed().as_secs_f64())
         }
         "pjrt" => {
+            if lat.shard_count() != 1 {
+                bail!("--backend pjrt requires --shards 1 (one artifact bucket per lattice)");
+            }
             let dir = std::path::PathBuf::from(
                 args.get("artifacts").unwrap_or("artifacts"),
             );
             let rt = crate::runtime::PjrtRuntime::new(&dir)?;
-            let px = crate::runtime::SimplexPjrtMvm::new(&rt, &lat, 1.0)?;
+            let px = crate::runtime::SimplexPjrtMvm::new(&rt, &lat.shards[0], 1.0)?;
             println!("pjrt backend: artifact {}", px.artifact_name());
             let t = std::time::Instant::now();
             let u = px.mvm(&v)?;
@@ -303,9 +331,12 @@ fn cmd_stencil(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let (split, d) = load_split(args)?;
     let family = parse_kernel(args)?;
-    let mut tc = TrainConfig::default();
-    tc.epochs = args.get_usize("epochs", 10)?;
-    tc.verbose = true;
+    let tc = TrainConfig {
+        epochs: args.get_usize("epochs", 10)?,
+        verbose: true,
+        shards: shards_arg(args, &load_config(args)?)?,
+        ..TrainConfig::default()
+    };
     println!("fitting model for serving ({} train points)...", split.train.n());
     let out = train(
         &split.train.x,
@@ -316,14 +347,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         family,
         tc,
     )?;
-    let mut cfg = crate::coordinator::ServeConfig::default();
-    if let Some(addr) = args.get("addr") {
-        cfg.addr = addr.to_string();
-    }
+    let shards = out.model.shards();
+    let cfg = match args.get("addr") {
+        Some(addr) => crate::coordinator::ServeConfig {
+            addr: addr.to_string(),
+            ..crate::coordinator::ServeConfig::default()
+        },
+        None => crate::coordinator::ServeConfig::default(),
+    };
     let server = crate::coordinator::Server::start(out.model, cfg)?;
     println!(
-        "serving on {} — JSON lines: {{\"id\":1,\"op\":\"predict\",\"x\":[[...{} floats...]]}}",
-        server.local_addr, d
+        "serving on {} with {} shard worker(s) — JSON lines: \
+         {{\"id\":1,\"op\":\"predict\",\"x\":[[...{} floats...]]}}",
+        server.local_addr, shards, d
     );
     println!("Ctrl-C to stop.");
     loop {

@@ -164,6 +164,7 @@ blur_order = 1
 min_noise = 1e-4
 probes = 8
 patience = 15
+shards = 1                # data-parallel lattice shards (0 = auto from cores)
 
 [serve]
 addr = "127.0.0.1:7788"
@@ -184,6 +185,7 @@ mod tests {
         assert_eq!(cfg.get_str("train", "kernel", ""), "matern32");
         assert_eq!(cfg.get_str("serve", "addr", ""), "127.0.0.1:7788");
         assert_eq!(cfg.get_f64("train", "min_noise", 0.0), 1e-4);
+        assert_eq!(cfg.get_usize("train", "shards", 0), 1);
     }
 
     #[test]

@@ -7,11 +7,16 @@
 //! arrivals → ONE lattice pass per request class for the whole batch →
 //! per-connection writers. Prediction rows from concurrent clients
 //! merge into a single slice pass; concurrent `mvm` requests stack
-//! into a row-major `b × n` block and run through one batched
-//! splat→blur→slice ([`crate::lattice::PermutohedralLattice::mvm_block`]),
-//! so serving throughput rides the same multi-RHS engine as the
-//! solvers. MVMs can be routed to the native multithreaded path or to
-//! a PJRT artifact ([`crate::runtime`]).
+//! into a row-major `b × n` block that the batcher routes to **P
+//! persistent shard workers over channels** (the internal `ShardPool`):
+//! each worker runs its shard's one-pass batched splat→blur→slice
+//! ([`crate::lattice::ShardedLattice::shard_mvm_block`]) and the
+//! batcher reassembles the rows, so serving throughput rides the same
+//! multi-RHS engine as the solvers *and* a single request's latency
+//! scales down with shards. Replies are byte-identical to the direct
+//! in-process path (same per-shard arithmetic, shard-ordered
+//! assembly). MVMs can be routed to the native multithreaded path or
+//! to a PJRT artifact ([`crate::runtime`]).
 //!
 //! Wire protocol: JSON lines.
 //!   → {"id": 7, "op": "predict", "x": [[...d floats...], ...]}
@@ -19,7 +24,7 @@
 //!   → {"id": 9, "op": "stats"}
 //!   ← {"id": 7, "mean": [...], "elapsed_us": 1234}
 //!   ← {"id": 8, "u": [...], "batched_with": 3}
-//!   ← {"id": 9, "n": ..., "m": ..., "d": ..., "served": ..., "batches": ...}
+//!   ← {"id": 9, "n": ..., "m": ..., "d": ..., "shards": ..., "served": ..., "batches": ...}
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -32,6 +37,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::gp::SimplexGp;
+use crate::lattice::ShardedLattice;
 use crate::util::json::Json;
 
 /// Server configuration (`[serve]` section of the config file).
@@ -101,7 +107,9 @@ impl Server {
         let batches = Arc::new(AtomicU64::new(0));
         let (tx, rx) = sync_channel::<Work>(cfg.queue_depth);
 
-        // Batcher thread owns the model.
+        // Batcher thread owns the model (shared with the shard workers
+        // it spawns).
+        let model = Arc::new(model);
         let batch_stop = stop.clone();
         let batch_served = served.clone();
         let batch_batches = batches.clone();
@@ -276,6 +284,126 @@ fn json_num_array(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
 
+/// One coalesced block-MVM job, broadcast to every shard worker. The
+/// full `b × n` block is shared (Arc) — each worker gathers only its
+/// shard's row segments. `job` tags the batch so the batcher can
+/// discard stale results after a partial failure.
+struct ShardJob {
+    v: Arc<Vec<f64>>,
+    b: usize,
+    job: u64,
+}
+
+/// P persistent shard workers fed over channels by the batcher: worker
+/// `p` owns shard `p` of the model's [`ShardedLattice`] and answers
+/// every coalesced block request with its shard's `b × n_p` rows. This
+/// extends PR 1's request coalescing with data parallelism *within* a
+/// batch — one request's latency now scales down with shards, not just
+/// throughput with batch width.
+///
+/// Failure model: the pool is an optimization, never a correctness
+/// dependency. For P = 1 no workers are spawned at all (the direct
+/// call is strictly cheaper than a channel hop). If a worker dies
+/// (send fails fast on a disconnected channel) or stalls past
+/// [`ShardPool::RESULT_TIMEOUT`], `mvm_block` returns `None` and the
+/// batcher computes the batch in-thread instead; results from an
+/// abandoned batch carry a stale job id and are discarded on the next
+/// call, so a partial failure can never splice old numbers into a new
+/// reply.
+struct ShardPool {
+    jobs: Vec<SyncSender<ShardJob>>,
+    results: Receiver<(u64, usize, Vec<f64>)>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_job: std::cell::Cell<u64>,
+}
+
+impl ShardPool {
+    /// How long to wait for one shard's rows before abandoning the
+    /// pool for this batch (generous: a shard MVM is milliseconds).
+    const RESULT_TIMEOUT: Duration = Duration::from_secs(10);
+
+    fn start(model: &Arc<SimplexGp>) -> ShardPool {
+        let p = model.operator().lattice.shard_count();
+        let (res_tx, res_rx) = sync_channel::<(u64, usize, Vec<f64>)>(p.max(1));
+        let mut jobs = Vec::new();
+        let mut workers = Vec::new();
+        // P = 1: the direct in-thread path is strictly better; an empty
+        // pool makes mvm_block return None and the caller fall through.
+        if p > 1 {
+            for shard in 0..p {
+                let (tx, rx) = sync_channel::<ShardJob>(1);
+                jobs.push(tx);
+                let model = model.clone();
+                let res_tx = res_tx.clone();
+                workers.push(std::thread::spawn(move || {
+                    // Workers exit when the batcher drops the job senders.
+                    while let Ok(job) = rx.recv() {
+                        let part = model
+                            .operator()
+                            .lattice
+                            .shard_mvm_block(shard, &job.v, job.b);
+                        if res_tx.send((job.job, shard, part)).is_err() {
+                            break;
+                        }
+                    }
+                }));
+            }
+        }
+        ShardPool {
+            jobs,
+            results: res_rx,
+            workers,
+            next_job: std::cell::Cell::new(0),
+        }
+    }
+
+    /// Route one coalesced `b × n` block to the shard workers and
+    /// reassemble their replies in shard order. `None` if the pool is
+    /// empty (P = 1), a worker is gone, or a result times out — the
+    /// caller falls back to the in-thread path.
+    fn mvm_block(&self, lat: &ShardedLattice, v: &Arc<Vec<f64>>, b: usize) -> Option<Vec<f64>> {
+        if self.jobs.is_empty() {
+            return None;
+        }
+        let job = self.next_job.get();
+        self.next_job.set(job + 1);
+        let n = lat.n;
+        let mut sent = 0usize;
+        for tx in &self.jobs {
+            if tx.send(ShardJob { v: v.clone(), b, job }).is_err() {
+                break;
+            }
+            sent += 1;
+        }
+        // A partial broadcast means some shards never got the job: fall
+        // back immediately (don't wait on the in-flight results — they
+        // carry this job id and the stale-id drain below discards them
+        // on the next call).
+        if sent < self.jobs.len() {
+            return None;
+        }
+        let mut out = vec![0.0; n * b];
+        let mut received = 0usize;
+        while received < sent {
+            let (jid, p, part) = self.results.recv_timeout(Self::RESULT_TIMEOUT).ok()?;
+            if jid != job {
+                // Stale result from an abandoned batch — drop it.
+                continue;
+            }
+            lat.scatter_shard_block(&mut out, p, &part, b);
+            received += 1;
+        }
+        Some(out)
+    }
+
+    fn shutdown(self) {
+        drop(self.jobs);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
 /// Work accumulated by the batcher between flushes: coalesced
 /// prediction rows plus a coalesced block of raw MVM right-hand sides.
 #[derive(Default)]
@@ -304,12 +432,14 @@ impl Batch {
 }
 
 /// Execute everything queued in `batch` — one slice pass for all
-/// prediction rows, one block MVM for all mvm vectors — and reply.
+/// prediction rows, one shard-routed block MVM for all mvm vectors —
+/// and reply.
 fn flush_batch(
     batch: &mut Batch,
     served: &AtomicU64,
     batches: &AtomicU64,
     model: &SimplexGp,
+    pool: &ShardPool,
 ) {
     if !batch.predicts.is_empty() {
         let t0 = Instant::now();
@@ -339,8 +469,15 @@ fn flush_batch(
     if !batch.mvms.is_empty() {
         let b = batch.mvms.len();
         let n = model.n_train();
-        // One splat→blur→slice pass for all b concurrent MVM requests.
-        let u = model.operator().lattice.mvm_block(&batch.mvm_v, b);
+        let lat = &model.operator().lattice;
+        // One batched splat→blur→slice per shard worker for all b
+        // concurrent MVM requests, routed over the pool's channels;
+        // byte-identical to the direct in-process sharded MVM (same
+        // per-shard arithmetic, shard-ordered reassembly).
+        let v = Arc::new(std::mem::take(&mut batch.mvm_v));
+        let u = pool
+            .mvm_block(lat, &v, b)
+            .unwrap_or_else(|| lat.mvm_block(&v, b));
         batches.fetch_add(1, Ordering::Relaxed);
         for (k, (id, reply)) in batch.mvms.drain(..).enumerate() {
             let mut obj = BTreeMap::new();
@@ -350,13 +487,13 @@ fn flush_batch(
             served.fetch_add(1, Ordering::Relaxed);
             let _ = reply.send(Json::Obj(obj).to_string());
         }
-        batch.mvm_v.clear();
     }
 }
 
-/// The batcher: coalesce predictions and MVMs, execute, reply.
+/// The batcher: coalesce predictions and MVMs, route to the shard
+/// workers, reply.
 fn batch_loop(
-    model: SimplexGp,
+    model: Arc<SimplexGp>,
     rx: Receiver<Work>,
     cfg: ServeConfig,
     stop: Arc<AtomicBool>,
@@ -364,6 +501,7 @@ fn batch_loop(
     batches: Arc<AtomicU64>,
 ) {
     let d = model.d;
+    let pool = ShardPool::start(&model);
     let mut batch = Batch::default();
 
     let handle = |w: Work, batch: &mut Batch| match w {
@@ -401,6 +539,7 @@ fn batch_loop(
             obj.insert("n".to_string(), Json::Num(model.n_train() as f64));
             obj.insert("m".to_string(), Json::Num(model.lattice_points() as f64));
             obj.insert("d".to_string(), Json::Num(d as f64));
+            obj.insert("shards".to_string(), Json::Num(model.shards() as f64));
             obj.insert(
                 "served".to_string(),
                 Json::Num(served.load(Ordering::Relaxed) as f64),
@@ -439,12 +578,13 @@ fn batch_loop(
             }
         }
         if !batch.is_empty() {
-            flush_batch(&mut batch, &served, &batches, &model);
+            flush_batch(&mut batch, &served, &batches, &model, &pool);
         }
     }
     if !batch.is_empty() {
-        flush_batch(&mut batch, &served, &batches, &model);
+        flush_batch(&mut batch, &served, &batches, &model, &pool);
     }
+    pool.shutdown();
 }
 
 /// Blocking client helper (examples, benches, tests).
@@ -478,10 +618,7 @@ impl Client {
     pub fn predict(&mut self, x: &[f64], d: usize) -> Result<Vec<f64>> {
         let id = self.next_id;
         self.next_id += 1.0;
-        let rows: Vec<Json> = x
-            .chunks(d)
-            .map(|row| json_num_array(row))
-            .collect();
+        let rows: Vec<Json> = x.chunks(d).map(json_num_array).collect();
         let mut obj = BTreeMap::new();
         obj.insert("id".to_string(), Json::Num(id));
         obj.insert("op".to_string(), Json::Str("predict".to_string()));
@@ -551,8 +688,10 @@ mod tests {
     fn serve_predict_roundtrip() {
         let model = tiny_model();
         let direct = model.predict_mean(&[0.5, -0.3, 1.0, 1.0]);
-        let mut cfg = ServeConfig::default();
-        cfg.addr = "127.0.0.1:0".to_string(); // ephemeral port
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(), // ephemeral port
+            ..ServeConfig::default()
+        };
         let server = Server::start(model, cfg).unwrap();
         let mut client = Client::connect(&server.local_addr).unwrap();
         let got = client.predict(&[0.5, -0.3, 1.0, 1.0], 2).unwrap();
@@ -569,9 +708,11 @@ mod tests {
     #[test]
     fn concurrent_clients_batched() {
         let model = tiny_model();
-        let mut cfg = ServeConfig::default();
-        cfg.addr = "127.0.0.1:0".to_string();
-        cfg.max_wait = Duration::from_millis(20);
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_wait: Duration::from_millis(20),
+            ..ServeConfig::default()
+        };
         let server = Server::start(model, cfg).unwrap();
         let addr = server.local_addr;
         let handles: Vec<_> = (0..8)
@@ -599,11 +740,13 @@ mod tests {
         let mut rng = Pcg64::new(5);
         let v = rng.normal_vec(n);
         let direct = model.operator().lattice.mvm(&v);
-        let mut cfg = ServeConfig::default();
-        cfg.addr = "127.0.0.1:0".to_string();
-        // Generous window: the assertion below is about coalescing, not
-        // latency, and CI runners schedule threads slowly.
-        cfg.max_wait = Duration::from_millis(250);
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            // Generous window: the assertion below is about coalescing,
+            // not latency, and CI runners schedule threads slowly.
+            max_wait: Duration::from_millis(250),
+            ..ServeConfig::default()
+        };
         let server = Server::start(model, cfg).unwrap();
         let addr = server.local_addr;
         // Several concurrent mvm requests (same vector) must coalesce
@@ -647,8 +790,10 @@ mod tests {
     #[test]
     fn malformed_requests_get_errors() {
         let model = tiny_model();
-        let mut cfg = ServeConfig::default();
-        cfg.addr = "127.0.0.1:0".to_string();
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            ..ServeConfig::default()
+        };
         let server = Server::start(model, cfg).unwrap();
         let stream = TcpStream::connect(server.local_addr).unwrap();
         let mut writer = stream.try_clone().unwrap();

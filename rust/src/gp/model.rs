@@ -5,7 +5,7 @@
 use anyhow::{ensure, Result};
 
 use crate::kernels::ArdKernel;
-use crate::mvm::{Shifted, SimplexMvm};
+use crate::mvm::{Shifted, ShardedMvm};
 use crate::solvers::{cg, cg_block, slq_logdet, CgOptions};
 
 /// Inference-time configuration (defaults mirror the paper's Table 5).
@@ -25,6 +25,10 @@ pub struct GpConfig {
     pub slq_probes: usize,
     /// RNG seed for stochastic estimators.
     pub seed: u64,
+    /// Data-parallel lattice shards: 1 = single lattice (the paper's
+    /// exact setting), 0 = auto from cores, P > 1 = exact partitioned
+    /// semantics (see `crate::lattice::shard`).
+    pub shards: usize,
 }
 
 impl Default for GpConfig {
@@ -37,6 +41,7 @@ impl Default for GpConfig {
             slq_steps: 50,
             slq_probes: 10,
             seed: 0,
+            shards: 1,
         }
     }
 }
@@ -50,12 +55,13 @@ pub struct SimplexGp {
     pub x_train: Vec<f64>,
     pub y_train: Vec<f64>,
     pub config: GpConfig,
-    op: SimplexMvm,
+    op: ShardedMvm,
     alpha: Vec<f64>,
-    /// Blur(Splat(α)) cached at fit time: prediction then only embeds
-    /// and slices the test points — O(t·d²) per request instead of a
-    /// full O(d²(n+m)) lattice pass (serving hot path, §Perf).
-    z_pred: Vec<f64>,
+    /// Per-shard Blur(Splat(α)) cached at fit time: prediction then only
+    /// embeds and slices the test points — O(t·d²) per request instead
+    /// of a full O(d²(n+m)) lattice pass (serving hot path, §Perf).
+    /// One entry per shard; the cross-shard sum happens at slice time.
+    z_pred: Vec<Vec<f64>>,
     /// Iterations the fitting solve took (diagnostics).
     pub fit_iterations: usize,
 }
@@ -77,7 +83,7 @@ impl SimplexGp {
         let n = x.len() / d;
         ensure!(y.len() == n, "y length {} != n {}", y.len(), n);
         ensure!(noise > 0.0, "noise must be positive");
-        let op = SimplexMvm::build(x, d, &kernel, config.order)
+        let op = ShardedMvm::build(x, d, &kernel, config.order, config.shards)
             .with_symmetrize(config.symmetrize);
         let shifted = Shifted::new(&op, noise);
         let res = cg(
@@ -91,13 +97,7 @@ impl SimplexGp {
         );
         let fit_iterations = res.iterations;
         let alpha = res.x;
-        let z_pred = {
-            let lat = &op.lattice;
-            let taps = lat.stencil.taps.clone();
-            let mut z = lat.splat(&alpha, 1);
-            lat.blur(&mut z, 1, &taps);
-            z
-        };
+        let z_pred = op.lattice.splat_blur(&alpha, 1);
         Ok(SimplexGp {
             kernel,
             noise,
@@ -116,13 +116,19 @@ impl SimplexGp {
         self.y_train.len()
     }
 
-    /// Number of lattice points backing the model.
+    /// Number of lattice points backing the model (summed over shards).
     pub fn lattice_points(&self) -> usize {
-        self.op.lattice.m
+        self.op.lattice.m()
     }
 
-    /// The underlying lattice operator (benchmark access).
-    pub fn operator(&self) -> &SimplexMvm {
+    /// Number of data-parallel lattice shards.
+    pub fn shards(&self) -> usize {
+        self.op.shard_count()
+    }
+
+    /// The underlying (sharded) lattice operator (coordinator and
+    /// benchmark access).
+    pub fn operator(&self) -> &ShardedMvm {
         &self.op
     }
 
@@ -132,11 +138,17 @@ impl SimplexGp {
     }
 
     /// Predictive mean at `x_star` (row-major `t × d`):
-    /// μ* = K(X*, X)·α computed as Slice*(Blur(Splat(α))).
+    /// μ* = K(X*, X)·α computed as Slice*(Blur(Splat(α))), with the
+    /// cross-shard sum Σ_p K(X*, X_p)·α_p taken at slice time.
     pub fn predict_mean(&self, x_star: &[f64]) -> Vec<f64> {
-        let lat = &self.op.lattice;
-        let (off, w) = lat.embed_only(x_star, &self.kernel);
-        let mut mean = lat.slice_at(&off, &w, &self.z_pred, 1);
+        let embeds = self.op.lattice.embed_only(x_star, &self.kernel);
+        self.predict_mean_at(&embeds)
+    }
+
+    /// Mean from pre-embedded test rows (shared with [`SimplexGp::predict`]
+    /// so the P-shard embedding pass runs once per request, not twice).
+    fn predict_mean_at(&self, embeds: &[(Vec<u32>, Vec<f64>)]) -> Vec<f64> {
+        let mut mean = self.op.lattice.slice_at_sum(embeds, &self.z_pred, 1);
         for m in mean.iter_mut() {
             *m *= self.kernel.outputscale;
         }
@@ -152,36 +164,27 @@ impl SimplexGp {
     /// whole chunk.
     pub fn predict(&self, x_star: &[f64]) -> (Vec<f64>, Vec<f64>) {
         let t = x_star.len() / self.d;
-        let mean = self.predict_mean(x_star);
         let mut var = vec![0.0; t];
         let lat = &self.op.lattice;
-        let (off, w) = lat.embed_only(x_star, &self.kernel);
+        // One P-shard embedding pass serves both the mean and the
+        // variance columns.
+        let embeds = lat.embed_only(x_star, &self.kernel);
+        let mean = self.predict_mean_at(&embeds);
         let shifted = Shifted::new(&self.op, self.noise);
         let prior = self.kernel.outputscale + self.noise;
         // Batch test columns in chunks to bound the block width.
         let chunk = 64usize;
-        let dp1 = self.d + 1;
         let n = self.n_train();
         for c0 in (0..t).step_by(chunk) {
             let c1 = (c0 + chunk).min(t);
             let nc = c1 - c0;
-            // k*ᵢ columns: splat unit mass at test point i, blur, slice
-            // at training points. Build all nc channels in one filter
-            // pass (point-interleaved lattice layout).
-            let mut z = vec![0.0; (lat.m + 1) * nc];
-            for (c, i) in (c0..c1).enumerate() {
-                for k in 0..dp1 {
-                    let id = off[i * dp1 + k] as usize;
-                    if id != 0 {
-                        z[id * nc + c] += w[i * dp1 + k];
-                    }
-                }
-            }
-            lat.blur(&mut z, nc, &lat.stencil.taps.clone());
-            // Cross-covariance columns as a row-major block (`nc × n`,
-            // test column c contiguous) — ready for block CG and the
-            // final quadratic form without any strided access.
-            let mut cols = lat.slice_block(&z, nc);
+            // k*ᵢ columns: splat unit mass at test point i on every
+            // shard, blur, slice at that shard's training points. Each
+            // training row lives in exactly one shard, so the per-shard
+            // results concatenate into a row-major `nc × n` block —
+            // ready for block CG and the final quadratic form without
+            // any strided access.
+            let mut cols = lat.cross_cov_block(&embeds, c0, c1);
             for v in cols.iter_mut() {
                 *v *= self.kernel.outputscale;
             }
@@ -196,10 +199,15 @@ impl SimplexGp {
                 },
             );
             for (c, i) in (c0..c1).enumerate() {
+                // dot over the full rows is Σ_p k*ᵖᵀ(K̃ₚ+σ²I)⁻¹k*ᵖ on
+                // the block-diagonal sharded operator; dividing by P
+                // gives the committee-mean variance reduction (identity
+                // for P = 1), matching the mean reduction in
+                // `ShardedLattice::slice_at_sum`.
                 let quad = crate::util::stats::dot(
                     &cols[c * n..(c + 1) * n],
                     &sol.x[c * n..(c + 1) * n],
-                );
+                ) / lat.shard_count() as f64;
                 // Clamp: the SKI/CG approximation can overshoot.
                 var[i] = (prior - quad).max(1e-8);
             }
@@ -325,10 +333,12 @@ mod tests {
         let (x, y) = toy_problem(120, d, 7);
         let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
         let noise = 0.2;
-        let mut cfg = GpConfig::default();
-        cfg.cg_tol = 1e-6;
-        cfg.slq_probes = 30;
-        cfg.slq_steps = 60;
+        let cfg = GpConfig {
+            cg_tol: 1e-6,
+            slq_probes: 30,
+            slq_steps: 60,
+            ..GpConfig::default()
+        };
         let gp = SimplexGp::fit(&x, &y, d, kernel.clone(), noise, cfg).unwrap();
         let approx_mll = gp.mll();
         let mut km = kernel.cov_matrix(&x, d);

@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use super::model::{GpConfig, SimplexGp};
 use crate::kernels::{ArdKernel, KernelFamily};
-use crate::mvm::{MvmOperator, Shifted, SimplexMvm};
+use crate::mvm::{MvmOperator, ShardedMvm, Shifted};
 use crate::solvers::{cg_block, rr_cg, slq_logdet, CgOptions, RrCgOptions};
 use crate::util::stats::{dot, rmse};
 use crate::util::Pcg64;
@@ -50,6 +50,10 @@ pub struct TrainConfig {
     /// Initial likelihood noise σ² (Table 4 / Fig. 7 stress the solver
     /// by starting ill-conditioned, i.e. small).
     pub init_noise: f64,
+    /// Data-parallel lattice shards (1 = single lattice, 0 = auto from
+    /// cores); the per-epoch lattice build, the block-CG solves and the
+    /// gradient filtering all run on the sharded operator.
+    pub shards: usize,
 }
 
 impl Default for TrainConfig {
@@ -67,6 +71,7 @@ impl Default for TrainConfig {
             track_mll: false,
             verbose: false,
             init_noise: 0.1,
+            shards: 1,
         }
     }
 }
@@ -167,8 +172,10 @@ pub fn train(
         kernel.lengthscales = ls.clone();
         kernel.outputscale = outputscale;
 
-        // Build the lattice for the current lengthscales.
-        let op = SimplexMvm::build(x, d, &kernel, cfg.order).with_symmetrize(true);
+        // Build the (sharded) lattice for the current lengthscales —
+        // shard builds run in parallel, and block-CG/SLQ below drive the
+        // sharded operator through the unchanged MvmOperator surface.
+        let op = ShardedMvm::build(x, d, &kernel, cfg.order, cfg.shards).with_symmetrize(true);
         let shifted = Shifted::new(&op, noise);
 
         // --- Solves: α = K̂⁻¹y and probe solves K̂⁻¹z_k, all in ONE
@@ -280,11 +287,13 @@ pub fn train(
         adam.step(&mut params, &grad);
 
         // --- Validation RMSE (eval-tolerance solve, Table 5: 0.01) ---
-        let mut eval_cfg = GpConfig::default();
-        eval_cfg.order = cfg.order;
-        eval_cfg.seed = cfg.seed;
-        let eval_model =
-            SimplexGp::fit(x, y, d, kernel.clone(), noise, eval_cfg.clone())?;
+        let eval_cfg = GpConfig {
+            order: cfg.order,
+            seed: cfg.seed,
+            shards: cfg.shards,
+            ..GpConfig::default()
+        };
+        let eval_model = SimplexGp::fit(x, y, d, kernel.clone(), noise, eval_cfg)?;
         let val_pred = eval_model.predict_mean(x_val);
         let val_rmse = rmse(&val_pred, y_val);
 
@@ -344,9 +353,12 @@ pub fn train(
     let mut kernel = ArdKernel::new(family, d);
     kernel.lengthscales = ls;
     kernel.outputscale = outputscale;
-    let mut eval_cfg = GpConfig::default();
-    eval_cfg.order = cfg.order;
-    eval_cfg.seed = cfg.seed;
+    let eval_cfg = GpConfig {
+        order: cfg.order,
+        seed: cfg.seed,
+        shards: cfg.shards,
+        ..GpConfig::default()
+    };
     let model = SimplexGp::fit(x, y, d, kernel, noise, eval_cfg)?;
     Ok(TrainOutcome {
         model,
@@ -375,10 +387,12 @@ mod tests {
         let d = 2;
         let (x, y) = ard_problem(400, d, 1);
         let (xv, yv) = ard_problem(100, d, 2);
-        let mut cfg = TrainConfig::default();
-        cfg.epochs = 15;
-        cfg.probes = 4;
-        cfg.seed = 3;
+        let cfg = TrainConfig {
+            epochs: 15,
+            probes: 4,
+            seed: 3,
+            ..TrainConfig::default()
+        };
         let out = train(&x, &y, &xv, &yv, d, KernelFamily::Rbf, cfg).unwrap();
         let first = out.records.first().unwrap().val_rmse;
         let best = out.records[out.best_epoch].val_rmse;
@@ -393,10 +407,12 @@ mod tests {
         let d = 3;
         let (x, y) = ard_problem(500, d, 4);
         let (xv, yv) = ard_problem(120, d, 5);
-        let mut cfg = TrainConfig::default();
-        cfg.epochs = 25;
-        cfg.probes = 4;
-        cfg.seed = 6;
+        let cfg = TrainConfig {
+            epochs: 25,
+            probes: 4,
+            seed: 6,
+            ..TrainConfig::default()
+        };
         let out = train(&x, &y, &xv, &yv, d, KernelFamily::Rbf, cfg).unwrap();
         let ls = &out.model.kernel.lengthscales;
         // Relevant dim (0) should have a *smaller* lengthscale than the
@@ -412,14 +428,16 @@ mod tests {
         let d = 2;
         let (x, y) = ard_problem(300, d, 7);
         let (xv, yv) = ard_problem(80, d, 8);
-        let mut cfg = TrainConfig::default();
-        cfg.epochs = 8;
-        cfg.probes = 3;
-        cfg.solve = SolveMode::RrCg {
-            geom_p: 0.1,
-            min_iters: 8,
+        let cfg = TrainConfig {
+            epochs: 8,
+            probes: 3,
+            solve: SolveMode::RrCg {
+                geom_p: 0.1,
+                min_iters: 8,
+            },
+            seed: 9,
+            ..TrainConfig::default()
         };
-        cfg.seed = 9;
         let out = train(&x, &y, &xv, &yv, d, KernelFamily::Matern32, cfg).unwrap();
         let base = rmse(&vec![0.0; yv.len()], &yv);
         let best = out.records[out.best_epoch].val_rmse;
@@ -427,14 +445,35 @@ mod tests {
     }
 
     #[test]
+    fn sharded_training_converges() {
+        let d = 2;
+        let (x, y) = ard_problem(400, d, 12);
+        let (xv, yv) = ard_problem(100, d, 13);
+        let cfg = TrainConfig {
+            epochs: 8,
+            probes: 3,
+            seed: 14,
+            shards: 2,
+            ..TrainConfig::default()
+        };
+        let out = train(&x, &y, &xv, &yv, d, KernelFamily::Rbf, cfg).unwrap();
+        assert_eq!(out.model.shards(), 2);
+        let base = rmse(&vec![0.0; yv.len()], &yv);
+        let best = out.records[out.best_epoch].val_rmse;
+        assert!(best < base, "sharded training diverged: {best} vs {base}");
+    }
+
+    #[test]
     fn records_are_complete() {
         let d = 2;
         let (x, y) = ard_problem(200, d, 10);
         let (xv, yv) = ard_problem(50, d, 11);
-        let mut cfg = TrainConfig::default();
-        cfg.epochs = 3;
-        cfg.probes = 2;
-        cfg.track_mll = true;
+        let cfg = TrainConfig {
+            epochs: 3,
+            probes: 2,
+            track_mll: true,
+            ..TrainConfig::default()
+        };
         let out = train(&x, &y, &xv, &yv, d, KernelFamily::Rbf, cfg).unwrap();
         assert_eq!(out.records.len(), 3);
         for r in &out.records {

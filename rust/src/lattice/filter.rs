@@ -94,7 +94,7 @@ impl PermutohedralLattice {
                     let (t_l, t_c, t_r) = (taps[0], taps[1], taps[2]);
                     parallel::par_fill_groups(out, nc, |range, chunk| {
                         let p0 = range.start / nc;
-                        let p1 = (range.end + nc - 1) / nc;
+                        let p1 = range.end.div_ceil(nc);
                         for p in p0..p1 {
                             let local = (p - p0) * nc;
                             let n_l = nbr[2 * p] as usize * nc;
@@ -112,7 +112,7 @@ impl PermutohedralLattice {
                         // range is over the flat (m × nc) output slice,
                         // chunked on whole-point boundaries.
                         let p0 = range.start / nc;
-                        let p1 = (range.end + nc - 1) / nc;
+                        let p1 = range.end.div_ceil(nc);
                         debug_assert_eq!(range.start % nc, 0);
                         for p in p0..p1 {
                             let local = (p - p0) * nc;
@@ -165,7 +165,7 @@ impl PermutohedralLattice {
         let mut out = vec![0.0; n_out * nc];
         parallel::par_fill_groups(&mut out, nc, |range, chunk| {
             let i0 = range.start / nc;
-            let i1 = (range.end + nc - 1) / nc;
+            let i1 = range.end.div_ceil(nc);
             for i in i0..i1 {
                 let local = (i - i0) * nc;
                 for k in 0..dp1 {

@@ -11,6 +11,9 @@
 
 pub mod filter;
 pub mod hash;
+pub mod shard;
+
+pub use shard::ShardedLattice;
 
 use crate::kernels::ArdKernel;
 use crate::stencil::Stencil;
@@ -180,12 +183,26 @@ impl PermutohedralLattice {
     /// were never created by training points map to the null slot 0 and
     /// contribute nothing (consistent with SKI: W_{X*} rows over U).
     pub fn embed_only(&self, x: &[f64], kernel: &ArdKernel) -> (Vec<u32>, Vec<f64>) {
+        let geo = self.embed_geometry(x, kernel);
+        self.lookup_embedding(&geo)
+    }
+
+    /// The geometric half of [`PermutohedralLattice::embed_only`]: per
+    /// point the enclosing-simplex identity (`rem0`, `rank`) and
+    /// barycentric weights, with NO hash lookups. The geometry depends
+    /// only on `(d, lengthscales, α)` — identical for every shard of a
+    /// [`crate::lattice::ShardedLattice`] — so shards compute it once
+    /// and resolve only [`PermutohedralLattice::lookup_embedding`]
+    /// against their own key tables.
+    pub fn embed_geometry(&self, x: &[f64], kernel: &ArdKernel) -> Embedding {
         let d = self.d;
         assert_eq!(x.len() % d, 0);
         let n = x.len() / d;
+        let dp1 = d + 1;
         let scale_factors = elevation_scale_factors(d);
-        let mut offsets = vec![0u32; n * (d + 1)];
-        let mut weights = vec![0.0; n * (d + 1)];
+        let mut rem0 = vec![0i32; n * dp1];
+        let mut rank = vec![0usize; n * dp1];
+        let mut bary = vec![0.0; n * dp1];
         let mut scratch = EmbedScratch::new(d);
         let mut scaled = vec![0.0; d];
         for i in 0..n {
@@ -194,15 +211,59 @@ impl PermutohedralLattice {
                 scaled[j] = row[j] / kernel.lengthscales[j] * self.alpha;
             }
             embed_point(&scaled, &scale_factors, &mut scratch);
+            rem0[i * dp1..(i + 1) * dp1].copy_from_slice(&scratch.rem0);
+            rank[i * dp1..(i + 1) * dp1].copy_from_slice(&scratch.rank);
+            bary[i * dp1..(i + 1) * dp1].copy_from_slice(&scratch.bary[..dp1]);
+        }
+        Embedding {
+            d,
+            n,
+            rem0,
+            rank,
+            bary,
+        }
+    }
+
+    /// Resolve a shared [`Embedding`] against *this* lattice's key
+    /// table: (offsets, weights) rows, unknown vertices mapping to the
+    /// null slot 0 with weight 0. Together with
+    /// [`PermutohedralLattice::embed_geometry`] this is exactly
+    /// [`PermutohedralLattice::embed_only`].
+    pub fn lookup_embedding(&self, e: &Embedding) -> (Vec<u32>, Vec<f64>) {
+        assert_eq!(e.d, self.d);
+        let d = self.d;
+        let dp1 = d + 1;
+        let mut offsets = vec![0u32; e.n * dp1];
+        let mut weights = vec![0.0; e.n * dp1];
+        let mut key = vec![0i32; d];
+        for i in 0..e.n {
+            let rem0 = &e.rem0[i * dp1..(i + 1) * dp1];
+            let rank = &e.rank[i * dp1..(i + 1) * dp1];
             for k in 0..=d {
-                vertex_key(&scratch.rem0, &scratch.rank, d, k, &mut scratch.key);
-                let id = self.table.get(&scratch.key);
-                offsets[i * (d + 1) + k] = id;
-                weights[i * (d + 1) + k] = if id == 0 { 0.0 } else { scratch.bary[k] };
+                vertex_key(rem0, rank, d, k, &mut key);
+                let id = self.table.get(&key);
+                offsets[i * dp1 + k] = id;
+                weights[i * dp1 + k] = if id == 0 { 0.0 } else { e.bary[i * dp1 + k] };
             }
         }
         (offsets, weights)
     }
+}
+
+/// Shard-reusable geometric embedding of input rows (the output of
+/// [`PermutohedralLattice::embed_geometry`]): simplex identities and
+/// barycentric weights, independent of any particular key table.
+pub struct Embedding {
+    /// Input dimensionality.
+    pub d: usize,
+    /// Number of embedded rows.
+    pub n: usize,
+    /// `n × (d+1)` remainder-0 coordinates of each enclosing simplex.
+    rem0: Vec<i32>,
+    /// `n × (d+1)` residual ranks identifying the simplex vertex order.
+    rank: Vec<usize>,
+    /// `n × (d+1)` barycentric weights.
+    bary: Vec<f64>,
 }
 
 /// Orthonormal-columns elevation scale factors: 1/√((i+1)(i+2)).
@@ -261,24 +322,28 @@ fn embed_point(z: &[f64], scale_factors: &[f64], s: &mut EmbedScratch) {
 
     // --- Fix points whose rounded coordinates don't sum to zero ---
     let dp1i = d as i64 + 1;
-    if sum > 0 {
-        for i in 0..=d {
-            if (s.rank[i] as i64) >= dp1i - sum {
-                s.rem0[i] -= dp1i as i32;
-                s.rank[i] = (s.rank[i] as i64 + sum - dp1i) as usize;
-            } else {
-                s.rank[i] = (s.rank[i] as i64 + sum) as usize;
+    match sum.cmp(&0) {
+        std::cmp::Ordering::Greater => {
+            for i in 0..=d {
+                if (s.rank[i] as i64) >= dp1i - sum {
+                    s.rem0[i] -= dp1i as i32;
+                    s.rank[i] = (s.rank[i] as i64 + sum - dp1i) as usize;
+                } else {
+                    s.rank[i] = (s.rank[i] as i64 + sum) as usize;
+                }
             }
         }
-    } else if sum < 0 {
-        for i in 0..=d {
-            if (s.rank[i] as i64) < -sum {
-                s.rem0[i] += dp1i as i32;
-                s.rank[i] = (s.rank[i] as i64 + dp1i + sum) as usize;
-            } else {
-                s.rank[i] = (s.rank[i] as i64 + sum) as usize;
+        std::cmp::Ordering::Less => {
+            for i in 0..=d {
+                if (s.rank[i] as i64) < -sum {
+                    s.rem0[i] += dp1i as i32;
+                    s.rank[i] = (s.rank[i] as i64 + dp1i + sum) as usize;
+                } else {
+                    s.rank[i] = (s.rank[i] as i64 + sum) as usize;
+                }
             }
         }
+        std::cmp::Ordering::Equal => {}
     }
 
     // --- Barycentric coordinates from sorted residuals ---
@@ -386,7 +451,7 @@ mod tests {
                 assert!((total - 1.0).abs() < 1e-9, "d={d} sum={total}");
                 for k in 0..=d {
                     assert!(
-                        s.bary[k] >= -1e-12 && s.bary[k] <= 1.0 + 1e-12,
+                        (-1e-12..=1.0 + 1e-12).contains(&s.bary[k]),
                         "d={d} bary[{k}]={}",
                         s.bary[k]
                     );

@@ -1,0 +1,524 @@
+//! Data-parallel sharding of the permutohedral lattice.
+//!
+//! A [`ShardedLattice`] partitions the n training points into P
+//! contiguous shards and builds one independent [`PermutohedralLattice`]
+//! per shard (in parallel). Each shard keeps the exact simplicial
+//! structure of Kapoor et al. (2021) over *its own* points; what changes
+//! is which splat rows can share hash slots — cross-shard kernel mass is
+//! dropped, so the realized operator is the block-diagonal
+//!
+//! ```text
+//!   K̃_sharded v = Σ_p  Eₚ Wᵖ Bᵖ Wᵖᵀ Eₚᵀ v        (Eₚ = shard-p row selector)
+//! ```
+//!
+//! in the spirit of the additive decompositions of Product Kernel
+//! Interpolation (Gardner et al., 2018). Semantics, exactly:
+//!
+//! - **P = 1** is the single-lattice path, bit for bit: one shard holds
+//!   all points and every entry point delegates to the same arithmetic.
+//! - **P > 1** is *exact partitioned semantics*: output rows of shard p
+//!   depend only on input rows of shard p (intra-shard taps are
+//!   identical to a single lattice built on those points; inter-shard
+//!   taps are zero). The approximation delta vs. the single lattice is
+//!   exactly the dropped cross-shard kernel mass — tested in
+//!   `rust/tests/shard_equivalence.rs` and documented in
+//!   ARCHITECTURE.md §Sharding.
+//! - **Test points** (prediction) see *every* shard: the cross-shard
+//!   reduction `K(X*, X) α = Σ_p K(X*, X_p) α_p` is a sum over shards,
+//!   owned by [`ShardedLattice::slice_at_sum`].
+//!
+//! Why shard at all: the single-lattice splat is a serial scatter and
+//! the blur walks one neighbor table, so a *single* MVM cannot use more
+//! cores than one pass exposes. Shards splat, blur and slice
+//! concurrently, letting one request's latency scale down with cores —
+//! the axis PR 1's RHS batching (throughput) did not touch.
+
+use super::PermutohedralLattice;
+use crate::kernels::ArdKernel;
+use crate::util::parallel;
+
+/// Auto-sharding floor: with `shards = 0`, never make shards smaller
+/// than this many points (tiny shards pay more per-pass overhead than
+/// their parallelism buys back).
+pub const AUTO_MIN_SHARD_POINTS: usize = 4096;
+
+/// Resolve a requested shard count: `0` means auto (one shard per core,
+/// capped so shards keep at least [`AUTO_MIN_SHARD_POINTS`] points);
+/// any value is clamped to `1..=n`.
+pub fn resolve_shard_count(requested: usize, n: usize) -> usize {
+    let p = if requested == 0 {
+        parallel::num_threads().min((n / AUTO_MIN_SHARD_POINTS).max(1))
+    } else {
+        requested
+    };
+    p.clamp(1, n.max(1))
+}
+
+/// P independent per-shard lattices over a contiguous partition of the
+/// training points, presenting the same MVM surface as a single
+/// [`PermutohedralLattice`] (plus per-shard entry points for the
+/// serving coordinator's shard workers).
+pub struct ShardedLattice {
+    /// Input dimensionality.
+    pub d: usize,
+    /// Total number of embedded inputs across all shards.
+    pub n: usize,
+    /// The per-shard lattices, in partition order.
+    pub shards: Vec<PermutohedralLattice>,
+    /// Partition boundaries: shard `p` owns rows
+    /// `bounds[p]..bounds[p+1]` (length `shards.len() + 1`).
+    pub bounds: Vec<usize>,
+}
+
+impl ShardedLattice {
+    /// Partition `x` (row-major `n × d`) into `shards` contiguous
+    /// shards (`0` = auto, see [`resolve_shard_count`]) and build one
+    /// lattice per shard in parallel.
+    pub fn build(x: &[f64], d: usize, kernel: &ArdKernel, order: usize, shards: usize) -> Self {
+        assert!(d >= 1, "d must be >= 1");
+        assert_eq!(x.len() % d, 0, "x length not a multiple of d");
+        let n = x.len() / d;
+        let p = resolve_shard_count(shards, n);
+        let mut bounds = Vec::with_capacity(p + 1);
+        bounds.push(0);
+        for r in parallel::chunk_ranges(n, p) {
+            bounds.push(r.end);
+        }
+        let lats: Vec<PermutohedralLattice> = if p == 1 {
+            vec![PermutohedralLattice::build(x, d, kernel, order)]
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..p)
+                    .map(|i| {
+                        let xs = &x[bounds[i] * d..bounds[i + 1] * d];
+                        s.spawn(move || PermutohedralLattice::build(xs, d, kernel, order))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+        ShardedLattice {
+            d,
+            n,
+            shards: lats,
+            bounds,
+        }
+    }
+
+    /// Number of shards P.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Rows owned by shard `p`.
+    pub fn shard_range(&self, p: usize) -> std::ops::Range<usize> {
+        self.bounds[p]..self.bounds[p + 1]
+    }
+
+    /// Total lattice points across shards (the sharded analog of a
+    /// single lattice's `m`).
+    pub fn m(&self) -> usize {
+        self.shards.iter().map(|l| l.m).sum()
+    }
+
+    /// Blur order r (identical across shards: one stencil).
+    pub fn order(&self) -> usize {
+        self.shards[0].order()
+    }
+
+    /// Sparsity ratio Σ_p m_p / (n·(d+1)).
+    pub fn sparsity_ratio(&self) -> f64 {
+        self.m() as f64 / (self.n as f64 * (self.d as f64 + 1.0))
+    }
+
+    /// Bytes held by all shard lattices.
+    pub fn storage_bytes(&self) -> usize {
+        self.shards.iter().map(|l| l.storage_bytes()).sum()
+    }
+
+    /// Run `f(p)` for every shard — concurrently when P > 1 — and
+    /// collect the results in shard order.
+    fn map_shards<R: Send>(&self, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+        let p = self.shards.len();
+        if p == 1 {
+            return vec![f(0)];
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..p)
+                .map(|i| {
+                    let f = &f;
+                    s.spawn(move || f(i))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    /// Gather shard `p`'s contiguous segment of each RHS row from a
+    /// full row-major `b × n` block into a local `b × n_p` block.
+    fn gather_shard_block(&self, p: usize, v: &[f64], b: usize) -> Vec<f64> {
+        assert_eq!(v.len(), self.n * b);
+        let (s0, s1) = (self.bounds[p], self.bounds[p + 1]);
+        let np = s1 - s0;
+        let mut local = vec![0.0; np * b];
+        for c in 0..b {
+            local[c * np..(c + 1) * np].copy_from_slice(&v[c * self.n + s0..c * self.n + s1]);
+        }
+        local
+    }
+
+    /// Write shard `p`'s local `b × n_p` block into its row segments of
+    /// a full row-major `b × n` block — the single place that knows how
+    /// shard rows map back into the block layout (the serving
+    /// coordinator's reassembly uses this too).
+    pub fn scatter_shard_block(&self, out: &mut [f64], p: usize, part: &[f64], b: usize) {
+        let n = self.n;
+        assert_eq!(out.len(), n * b);
+        let (s0, s1) = (self.bounds[p], self.bounds[p + 1]);
+        let np = s1 - s0;
+        assert_eq!(part.len(), np * b);
+        for c in 0..b {
+            out[c * n + s0..c * n + s1].copy_from_slice(&part[c * np..(c + 1) * np]);
+        }
+    }
+
+    /// Assemble per-shard `b × n_p` blocks into one row-major `b × n`
+    /// block (each RHS row is the concatenation of the shard segments).
+    fn scatter_block(&self, parts: Vec<Vec<f64>>, b: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.n * b];
+        for (p, part) in parts.into_iter().enumerate() {
+            self.scatter_shard_block(&mut out, p, &part, b);
+        }
+        out
+    }
+
+    /// Shard `p`'s rows of the batched kernel MVM: gather the shard's
+    /// segment of each RHS from the full row-major `b × n` block, run
+    /// the shard lattice's one-pass batched filter, return the local
+    /// `b × n_p` block. This is the unit of work the serving
+    /// coordinator's shard workers execute.
+    pub fn shard_mvm_block(&self, p: usize, v: &[f64], b: usize) -> Vec<f64> {
+        let local = self.gather_shard_block(p, v, b);
+        self.shards[p].filter_block(&local, b)
+    }
+
+    /// Symmetrized-blur variant of [`ShardedLattice::shard_mvm_block`].
+    pub fn shard_mvm_block_symmetric(&self, p: usize, v: &[f64], b: usize) -> Vec<f64> {
+        let local = self.gather_shard_block(p, v, b);
+        self.shards[p].filter_block_symmetric(&local, b)
+    }
+
+    /// Batched kernel MVM (unit outputscale): `b × n` block in and out,
+    /// shards running concurrently. Per shard the arithmetic is
+    /// identical to a single lattice on that shard's points, so P = 1
+    /// reproduces [`PermutohedralLattice::mvm_block`] exactly — and
+    /// takes a zero-copy fast path straight into it (no gather/scatter
+    /// on the crate's hottest path).
+    pub fn mvm_block(&self, v: &[f64], b: usize) -> Vec<f64> {
+        assert_eq!(v.len(), self.n * b);
+        if self.shards.len() == 1 {
+            return self.shards[0].filter_block(v, b);
+        }
+        let parts = self.map_shards(|p| self.shard_mvm_block(p, v, b));
+        self.scatter_block(parts, b)
+    }
+
+    /// Batched symmetrized kernel MVM, `b × n` in/out (P = 1 takes the
+    /// same zero-copy fast path as [`ShardedLattice::mvm_block`]).
+    pub fn mvm_block_symmetric(&self, v: &[f64], b: usize) -> Vec<f64> {
+        assert_eq!(v.len(), self.n * b);
+        if self.shards.len() == 1 {
+            return self.shards[0].filter_block_symmetric(v, b);
+        }
+        let parts = self.map_shards(|p| self.shard_mvm_block_symmetric(p, v, b));
+        self.scatter_block(parts, b)
+    }
+
+    /// Single-RHS kernel MVM (unit outputscale).
+    pub fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        self.mvm_block(v, 1)
+    }
+
+    /// Single-RHS symmetrized kernel MVM.
+    pub fn mvm_symmetric(&self, v: &[f64]) -> Vec<f64> {
+        self.mvm_block_symmetric(v, 1)
+    }
+
+    /// `Blur(Splat(v))` per shard for `nc` interleaved channels — the
+    /// cached prediction state: a mean prediction is then one slice
+    /// (plus the cross-shard sum) away.
+    pub fn splat_blur(&self, v: &[f64], nc: usize) -> Vec<Vec<f64>> {
+        assert_eq!(v.len(), self.n * nc);
+        self.map_shards(|p| {
+            let lat = &self.shards[p];
+            let (s0, s1) = (self.bounds[p], self.bounds[p + 1]);
+            let taps = lat.stencil.taps.clone();
+            let mut z = lat.splat(&v[s0 * nc..s1 * nc], nc);
+            lat.blur(&mut z, nc, &taps);
+            z
+        })
+    }
+
+    /// Embed extra points (e.g. test inputs) onto *every* shard's
+    /// existing lattice: per-shard `(offsets, weights)` rows. Vertices a
+    /// shard never created map to its null slot and contribute nothing.
+    /// The simplex geometry depends only on `(d, lengthscales, α)` —
+    /// identical across shards — so it is computed ONCE and only the
+    /// per-shard key-table lookups run per shard (concurrently).
+    pub fn embed_only(&self, x: &[f64], kernel: &ArdKernel) -> Vec<(Vec<u32>, Vec<f64>)> {
+        let geo = self.shards[0].embed_geometry(x, kernel);
+        self.map_shards(|p| self.shards[p].lookup_embedding(&geo))
+    }
+
+    /// Slice per-shard lattice values at pre-embedded rows and reduce
+    /// across shards: sum the shard contributions and normalize by P.
+    /// This method **owns the cross-shard reduction** for test points
+    /// (ARCHITECTURE.md §Sharding): each shard is an independent expert
+    /// on its partition, so a test-point prediction is the equal-weight
+    /// committee mean `(1/P) Σ_p K(X*, X_p) α_p` — a plain sum would
+    /// inflate smooth-function predictions by ≈P, since every shard's
+    /// slice already reconstructs the target from its own points. For
+    /// P = 1 the reduction is the identity (bitwise).
+    pub fn slice_at_sum(
+        &self,
+        embeds: &[(Vec<u32>, Vec<f64>)],
+        zs: &[Vec<f64>],
+        nc: usize,
+    ) -> Vec<f64> {
+        assert_eq!(embeds.len(), self.shards.len());
+        assert_eq!(zs.len(), self.shards.len());
+        let parts =
+            self.map_shards(|p| self.shards[p].slice_at(&embeds[p].0, &embeds[p].1, &zs[p], nc));
+        let p = self.shards.len();
+        let mut acc: Option<Vec<f64>> = None;
+        for part in parts {
+            match acc.as_mut() {
+                None => acc = Some(part),
+                Some(a) => {
+                    for (ai, pi) in a.iter_mut().zip(&part) {
+                        *ai += pi;
+                    }
+                }
+            }
+        }
+        let mut out = acc.unwrap_or_default();
+        if p > 1 {
+            let scale = 1.0 / p as f64;
+            for o in out.iter_mut() {
+                *o *= scale;
+            }
+        }
+        out
+    }
+
+    /// Cross-covariance columns for test points `c0..c1` of a
+    /// pre-embedded set: splat unit test mass per channel on each
+    /// shard, blur, slice at the shard's own training rows. Returns a
+    /// row-major `(c1-c0) × n` block — each training row belongs to
+    /// exactly one shard, so shard results concatenate (no sum). This
+    /// is the posterior-variance hot path of
+    /// [`crate::gp::SimplexGp::predict`].
+    pub fn cross_cov_block(
+        &self,
+        embeds: &[(Vec<u32>, Vec<f64>)],
+        c0: usize,
+        c1: usize,
+    ) -> Vec<f64> {
+        assert_eq!(embeds.len(), self.shards.len());
+        let nc = c1 - c0;
+        let dp1 = self.d + 1;
+        let parts = self.map_shards(|p| {
+            let lat = &self.shards[p];
+            let (off, w) = (&embeds[p].0, &embeds[p].1);
+            let mut z = vec![0.0; (lat.m + 1) * nc];
+            for (c, i) in (c0..c1).enumerate() {
+                for k in 0..dp1 {
+                    let id = off[i * dp1 + k] as usize;
+                    if id != 0 {
+                        z[id * nc + c] += w[i * dp1 + k];
+                    }
+                }
+            }
+            let taps = lat.stencil.taps.clone();
+            lat.blur(&mut z, nc, &taps);
+            lat.slice_block(&z, nc)
+        });
+        self.scatter_block(parts, nc)
+    }
+
+    /// Gradient of `L = gᵀ K v` w.r.t. the ARD lengthscales. The
+    /// bilinear form decomposes over the block-diagonal shards, so the
+    /// per-shard Eq. (12)/(13) filtered gradients simply add.
+    pub fn grad_lengthscales(
+        &self,
+        g: &[f64],
+        v: &[f64],
+        x: &[f64],
+        kernel: &ArdKernel,
+    ) -> Vec<f64> {
+        let d = self.d;
+        assert_eq!(g.len(), self.n);
+        assert_eq!(v.len(), self.n);
+        assert_eq!(x.len(), self.n * d);
+        let parts = self.map_shards(|p| {
+            let (s0, s1) = (self.bounds[p], self.bounds[p + 1]);
+            self.shards[p].grad_lengthscales(&g[s0..s1], &v[s0..s1], &x[s0 * d..s1 * d], kernel)
+        });
+        let mut out = vec![0.0; d];
+        for part in parts {
+            for (o, pi) in out.iter_mut().zip(&part) {
+                *o += pi;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelFamily;
+    use crate::util::Pcg64;
+
+    fn random_points(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        rng.normal_vec(n * d)
+    }
+
+    #[test]
+    fn shard_count_resolution() {
+        assert_eq!(resolve_shard_count(1, 100), 1);
+        assert_eq!(resolve_shard_count(4, 100), 4);
+        // Clamped to n.
+        assert_eq!(resolve_shard_count(10, 3), 3);
+        // Auto never exceeds n / AUTO_MIN_SHARD_POINTS (floor 1).
+        assert_eq!(resolve_shard_count(0, 100), 1);
+        let p = resolve_shard_count(0, 20 * AUTO_MIN_SHARD_POINTS);
+        assert!((1..=20).contains(&p));
+    }
+
+    #[test]
+    fn bounds_partition_all_rows() {
+        let d = 3;
+        let n = 101;
+        let x = random_points(n, d, 1);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        for p in [1usize, 2, 4, 7] {
+            let lat = ShardedLattice::build(&x, d, &k, 1, p);
+            assert_eq!(lat.shard_count(), p);
+            assert_eq!(lat.bounds.len(), p + 1);
+            assert_eq!(lat.bounds[0], 0);
+            assert_eq!(*lat.bounds.last().unwrap(), n);
+            let total: usize = (0..p).map(|i| lat.shard_range(i).len()).sum();
+            assert_eq!(total, n);
+            for (i, shard) in lat.shards.iter().enumerate() {
+                assert_eq!(shard.n, lat.shard_range(i).len());
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_is_the_single_lattice_bitwise() {
+        let d = 4;
+        let n = 120;
+        let x = random_points(n, d, 2);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 0.7);
+        let single = PermutohedralLattice::build(&x, d, &k, 1);
+        let sharded = ShardedLattice::build(&x, d, &k, 1, 1);
+        let mut rng = Pcg64::new(3);
+        let v = rng.normal_vec(n);
+        assert_eq!(sharded.mvm(&v), single.mvm(&v));
+        assert_eq!(sharded.mvm_symmetric(&v), single.mvm_symmetric(&v));
+        let b = 3;
+        let vb = rng.normal_vec(n * b);
+        assert_eq!(sharded.mvm_block(&vb, b), single.filter_block(&vb, b));
+        assert_eq!(sharded.m(), single.m);
+    }
+
+    #[test]
+    fn partitioned_semantics_match_per_shard_lattices() {
+        // Exact partitioned semantics: shard p's output rows equal a
+        // standalone lattice built on shard p's points.
+        let d = 3;
+        let n = 90;
+        let x = random_points(n, d, 4);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.6);
+        let mut rng = Pcg64::new(5);
+        let v = rng.normal_vec(n);
+        for p in [2usize, 4] {
+            let sharded = ShardedLattice::build(&x, d, &k, 1, p);
+            let u = sharded.mvm(&v);
+            for i in 0..p {
+                let r = sharded.shard_range(i);
+                let solo = PermutohedralLattice::build(&x[r.start * d..r.end * d], d, &k, 1);
+                let us = solo.mvm(&v[r.clone()]);
+                for (got, want) in u[r].iter().zip(&us) {
+                    assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_matches_single_rhs_across_shards() {
+        let d = 5;
+        let n = 80;
+        let x = random_points(n, d, 6);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let sharded = ShardedLattice::build(&x, d, &k, 1, 3);
+        let mut rng = Pcg64::new(7);
+        let b = 4;
+        let v = rng.normal_vec(n * b);
+        let block = sharded.mvm_block(&v, b);
+        for c in 0..b {
+            let single = sharded.mvm(&v[c * n..(c + 1) * n]);
+            for i in 0..n {
+                assert!((block[c * n + i] - single[i]).abs() < 1e-12, "rhs {c} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn slice_at_sum_is_the_committee_mean() {
+        // The cross-shard reduction is the equal-weight mean of the
+        // per-shard slices; check it against the manual combination.
+        let d = 2;
+        let n = 60;
+        let x = random_points(n, d, 8);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let sharded = ShardedLattice::build(&x, d, &k, 1, 2);
+        let mut rng = Pcg64::new(9);
+        let alpha = rng.normal_vec(n);
+        let zs = sharded.splat_blur(&alpha, 1);
+        let probe = random_points(5, d, 10);
+        let embeds = sharded.embed_only(&probe, &k);
+        let got = sharded.slice_at_sum(&embeds, &zs, 1);
+        let mut want = vec![0.0; 5];
+        for p in 0..2 {
+            let part = sharded.shards[p].slice_at(&embeds[p].0, &embeds[p].1, &zs[p], 1);
+            for (w, v) in want.iter_mut().zip(&part) {
+                *w += 0.5 * v;
+            }
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn grad_lengthscales_sums_shard_contributions() {
+        let d = 2;
+        let n = 70;
+        let x = random_points(n, d, 11);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let sharded = ShardedLattice::build(&x, d, &k, 1, 2);
+        let v = vec![1.0; n];
+        let gl = sharded.grad_lengthscales(&v, &v, &x, &k);
+        assert_eq!(gl.len(), d);
+        // Same sign property as the single-lattice test: mostly positive
+        // v = g ⇒ growing ℓ grows the bilinear form.
+        for (j, g) in gl.iter().enumerate() {
+            assert!(*g > 0.0, "lengthscale grad {j} = {g}");
+        }
+    }
+}

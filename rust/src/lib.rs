@@ -25,6 +25,14 @@
 //! and the serving coordinator coalesces concurrent requests into the
 //! same engine — `B` right-hand sides cost one lattice traversal.
 //!
+//! Orthogonally, the engine shards: [`lattice::ShardedLattice`] splits
+//! the training points across P data-parallel lattices (exact
+//! partitioned semantics, see ARCHITECTURE.md §Sharding),
+//! [`mvm::ShardedMvm`] presents them as one operator so the solvers and
+//! trainer run unchanged, and the coordinator routes each coalesced
+//! block to P persistent shard workers — a *single* request's latency
+//! scales down with cores, not just throughput with batch width.
+//!
 //! Quick taste (see `examples/quickstart.rs`):
 //!
 //! ```no_run

@@ -106,7 +106,7 @@ impl Mat {
             // range indexes the flat output, chunked on whole output
             // rows; recover the row span.
             let i0 = range.start / n;
-            let i1 = (range.end + n - 1) / n;
+            let i1 = range.end.div_ceil(n);
             debug_assert_eq!(range.start % n, 0);
             let mut local = vec![0.0; (i1 - i0) * n];
             for i in i0..i1 {

@@ -12,6 +12,10 @@
 //! callers that build per-point channel stacks (the §4.2 gradient
 //! filtering path).
 
+pub mod sharded;
+
+pub use sharded::ShardedMvm;
+
 use crate::kernels::ArdKernel;
 use crate::lattice::PermutohedralLattice;
 use crate::util::layout::{block_to_interleaved, interleaved_to_block};
@@ -80,7 +84,7 @@ impl<'a, O: MvmOperator + ?Sized> Shifted<'a, O> {
     }
 }
 
-impl<'a, O: MvmOperator + ?Sized> MvmOperator for Shifted<'a, O> {
+impl<O: MvmOperator + ?Sized> MvmOperator for Shifted<'_, O> {
     fn len(&self) -> usize {
         self.op.len()
     }
@@ -142,7 +146,7 @@ impl<'a> ExactMvm<'a> {
     }
 }
 
-impl<'a> MvmOperator for ExactMvm<'a> {
+impl MvmOperator for ExactMvm<'_> {
     fn len(&self) -> usize {
         self.n
     }
@@ -172,7 +176,7 @@ impl<'a> MvmOperator for ExactMvm<'a> {
         let mut out = vec![0.0; n * nc];
         parallel::par_fill_groups(&mut out, nc, |range, chunk| {
             let i0 = range.start / nc;
-            let i1 = (range.end + nc - 1) / nc;
+            let i1 = range.end.div_ceil(nc);
             for i in i0..i1 {
                 let local = (i - i0) * nc;
                 let xi = &x[i * d..(i + 1) * d];

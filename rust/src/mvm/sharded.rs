@@ -1,0 +1,140 @@
+//! The sharded lattice operator: [`ShardedMvm`] presents a
+//! [`ShardedLattice`] as an [`MvmOperator`], so block-CG, Lanczos/SLQ
+//! and the GP trainer run unchanged on top of P data-parallel shards.
+//!
+//! For P = 1 every entry point is bitwise identical to
+//! [`crate::mvm::SimplexMvm`]; for P > 1 the operator realizes the
+//! exact partitioned (block-diagonal) semantics documented in
+//! [`crate::lattice::shard`].
+
+use crate::kernels::ArdKernel;
+use crate::lattice::ShardedLattice;
+use crate::mvm::MvmOperator;
+use crate::util::layout::{block_to_interleaved, interleaved_to_block};
+
+/// Lattice-accelerated MVM over P shards. Holds the built shard
+/// lattices plus the kernel's outputscale (the lattices realize the
+/// unit-outputscale kernel).
+pub struct ShardedMvm {
+    /// The built per-shard lattices.
+    pub lattice: ShardedLattice,
+    /// Kernel outputscale s² applied after the unit-scale lattice MVM.
+    pub outputscale: f64,
+    /// Use the exactly-symmetrized blur (2× cost) inside each shard.
+    pub symmetrize: bool,
+}
+
+impl ShardedMvm {
+    /// Build from data: constructs one lattice per shard for
+    /// `(x, kernel, order)`; `shards = 0` means auto from cores.
+    pub fn build(x: &[f64], d: usize, kernel: &ArdKernel, order: usize, shards: usize) -> Self {
+        let lattice = ShardedLattice::build(x, d, kernel, order, shards);
+        ShardedMvm {
+            lattice,
+            outputscale: kernel.outputscale,
+            symmetrize: false,
+        }
+    }
+
+    /// Toggle the exactly-symmetrized blur (builder style).
+    pub fn with_symmetrize(mut self, on: bool) -> Self {
+        self.symmetrize = on;
+        self
+    }
+
+    /// Number of shards P.
+    pub fn shard_count(&self) -> usize {
+        self.lattice.shard_count()
+    }
+
+    fn scale(&self, mut out: Vec<f64>) -> Vec<f64> {
+        if self.outputscale != 1.0 {
+            for o in out.iter_mut() {
+                *o *= self.outputscale;
+            }
+        }
+        out
+    }
+}
+
+impl MvmOperator for ShardedMvm {
+    fn len(&self) -> usize {
+        self.lattice.n
+    }
+
+    fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        let out = if self.symmetrize {
+            self.lattice.mvm_symmetric(v)
+        } else {
+            self.lattice.mvm(v)
+        };
+        self.scale(out)
+    }
+
+    fn mvm_multi(&self, v: &[f64], nc: usize) -> Vec<f64> {
+        // The shard engine speaks the block layout; transpose through it.
+        let n = self.len();
+        assert_eq!(v.len(), n * nc);
+        let block = interleaved_to_block(v, n, nc);
+        block_to_interleaved(&self.mvm_block(&block, nc), n, nc)
+    }
+
+    fn mvm_block(&self, v: &[f64], b: usize) -> Vec<f64> {
+        let out = if self.symmetrize {
+            self.lattice.mvm_block_symmetric(v, b)
+        } else {
+            self.lattice.mvm_block(v, b)
+        };
+        self.scale(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelFamily;
+    use crate::mvm::SimplexMvm;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn single_shard_matches_simplex_mvm_bitwise() {
+        let d = 3;
+        let n = 80;
+        let mut rng = Pcg64::new(1);
+        let x = rng.normal_vec(n * d);
+        let mut k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        k.outputscale = 1.9;
+        for symmetrize in [false, true] {
+            let single = SimplexMvm::build(&x, d, &k, 1).with_symmetrize(symmetrize);
+            let sharded = ShardedMvm::build(&x, d, &k, 1, 1).with_symmetrize(symmetrize);
+            let v = rng.normal_vec(n);
+            assert_eq!(sharded.mvm(&v), single.mvm(&v), "sym={symmetrize}");
+            let b = 4;
+            let vb = rng.normal_vec(n * b);
+            assert_eq!(sharded.mvm_block(&vb, b), single.mvm_block(&vb, b), "sym={symmetrize}");
+        }
+    }
+
+    #[test]
+    fn multi_matches_block_per_channel() {
+        let d = 2;
+        let n = 50;
+        let mut rng = Pcg64::new(2);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 0.7);
+        let op = ShardedMvm::build(&x, d, &k, 1, 2);
+        let nc = 3;
+        let v = rng.normal_vec(n * nc);
+        let multi = op.mvm_multi(&v, nc);
+        for c in 0..nc {
+            let col: Vec<f64> = (0..n).map(|i| v[i * nc + c]).collect();
+            let single = op.mvm(&col);
+            for i in 0..n {
+                assert!(
+                    (multi[i * nc + c] - single[i]).abs() < 1e-12,
+                    "channel {c} row {i}"
+                );
+            }
+        }
+    }
+}

@@ -139,7 +139,7 @@ mod tests {
         d: usize,
     }
 
-    impl<'a> KernelRows for ExactRows<'a> {
+    impl KernelRows for ExactRows<'_> {
         fn len(&self) -> usize {
             self.x.len() / self.d
         }

@@ -175,6 +175,35 @@ pub fn quick_mode() -> bool {
         || std::env::var("SIMPLEX_GP_BENCH_QUICK").is_ok()
 }
 
+/// Build a flat JSON bench record: `{"bench": <name>, k₁: v₁, ...}`.
+pub fn bench_record(bench: &str, fields: &[(&str, f64)]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str(bench.to_string()));
+    for (k, v) in fields {
+        obj.insert((*k).to_string(), Json::Num(*v));
+    }
+    Json::Obj(obj)
+}
+
+/// Append one JSON record (one line) to the perf-trajectory file named
+/// by `SIMPLEX_GP_BENCH_JSON` — CI's bench-smoke job points it at
+/// `BENCH_PR2.json` and uploads the file as an artifact. No-op when the
+/// variable is unset, so local bench runs leave no stray files.
+pub fn append_bench_json(record: &crate::util::json::Json) {
+    let Ok(path) = std::env::var("SIMPLEX_GP_BENCH_JSON") else {
+        return;
+    };
+    use std::io::Write as _;
+    let file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path);
+    if let Ok(mut f) = file {
+        let _ = writeln!(f, "{record}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,5 +234,13 @@ mod tests {
     fn budget_runs_at_least_once() {
         let t = time_budget("y", 0.0, 10, || 1u8);
         assert!(t.iters >= 1);
+    }
+
+    #[test]
+    fn bench_record_roundtrips() {
+        let r = bench_record("shard_mvm", &[("n", 5.0), ("shards", 2.0)]);
+        let parsed = crate::util::json::Json::parse(&r.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("shard_mvm"));
+        assert_eq!(parsed.get("shards").and_then(|v| v.as_f64()), Some(2.0));
     }
 }

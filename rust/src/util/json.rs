@@ -50,13 +50,6 @@ impl Json {
         self.as_obj().and_then(|m| m.get(key))
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -110,6 +103,17 @@ impl Json {
     }
 }
 
+/// Compact serialization; `Json::to_string()` (via `Display`) parses
+/// back to an equal value, and `Num` uses Rust's shortest round-trip
+/// float formatting, so float bits survive a serialize→parse cycle.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
+    }
+}
+
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
@@ -133,7 +137,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn peek(&self) -> Option<u8> {
         self.bytes.get(self.pos).copied()
     }

@@ -17,7 +17,7 @@ pub fn num_threads() -> usize {
 
 /// Split `0..n` into at most `parts` contiguous chunks of near-equal size.
 pub fn chunk_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
-    let parts = parts.max(1).min(n.max(1));
+    let parts = parts.clamp(1, n.max(1));
     let base = n / parts;
     let rem = n % parts;
     let mut out = Vec::with_capacity(parts);

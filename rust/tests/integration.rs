@@ -40,9 +40,11 @@ fn trained_model_beats_untrained() {
     let ds = generate("precipitation", 1500, 5);
     let sp = split_standardize(&ds, 6);
     let d = 3;
-    let mut cfg = TrainConfig::default();
-    cfg.epochs = 10;
-    cfg.probes = 4;
+    let cfg = TrainConfig {
+        epochs: 10,
+        probes: 4,
+        ..TrainConfig::default()
+    };
     let out = train(
         &sp.train.x,
         &sp.train.y,
@@ -143,8 +145,10 @@ fn serve_predictions_match_direct_calls() {
     .unwrap();
     let probe = sp.test.x[..4 * d].to_vec();
     let direct = gp.predict_mean(&probe);
-    let mut cfg = ServeConfig::default();
-    cfg.addr = "127.0.0.1:0".to_string();
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        ..ServeConfig::default()
+    };
     let server = Server::start(gp, cfg).unwrap();
     let mut client = Client::connect(&server.local_addr).unwrap();
     let served = client.predict(&probe, d).unwrap();

@@ -1,0 +1,316 @@
+//! Equivalence guarantees of the sharded data-parallel lattice engine
+//! (ARCHITECTURE.md §Sharding):
+//!
+//! - P = 1 must reproduce the single-lattice operator to ≤ 1e-10 (it is
+//!   in fact bitwise identical — one shard runs the same arithmetic).
+//! - P > 1 has *exact partitioned semantics*: shard p's output rows
+//!   equal a standalone lattice built on shard p's points, for both the
+//!   single-RHS and the `b × n` block paths, across d ∈ {2, 5, 8} and
+//!   P ∈ {1, 2, 4}.
+//! - Block-CG on the sharded operator converges each RHS exactly as
+//!   sequential CG does, and (P > 1) the converged solution equals the
+//!   concatenation of independent per-shard solves — CG on a
+//!   block-diagonal operator cannot mix shards.
+//! - The serving coordinator's shard workers return byte-identical
+//!   replies to the direct in-process path (float bits survive the JSON
+//!   round trip: shortest round-trip formatting on the way out, exact
+//!   parse on the way in).
+
+use simplex_gp::coordinator::{Client, ServeConfig, Server};
+use simplex_gp::gp::{GpConfig, SimplexGp};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::lattice::{PermutohedralLattice, ShardedLattice};
+use simplex_gp::mvm::{MvmOperator, ShardedMvm, Shifted, SimplexMvm};
+use simplex_gp::solvers::{cg, cg_block, CgOptions};
+use simplex_gp::util::stats::rmse;
+use simplex_gp::util::Pcg64;
+
+const DIMS: [usize; 3] = [2, 5, 8];
+const SHARDS: [usize; 3] = [1, 2, 4];
+
+fn random_points(n: usize, d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::with_stream(0x5aa2_d011, seed);
+    rng.normal_vec(n * d)
+}
+
+#[test]
+fn p1_matches_single_lattice_across_dims() {
+    // The acceptance bound: sharded vs single-lattice agreement ≤ 1e-10
+    // for P = 1, on both the raw lattice surface and the operator.
+    for (case, &d) in DIMS.iter().enumerate() {
+        let n = 120;
+        let x = random_points(n, d, case as u64);
+        let mut k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.9);
+        k.outputscale = 1.3;
+        let mut rng = Pcg64::new(40 + case as u64);
+        let v = rng.normal_vec(n);
+        let b = 3;
+        let vb = rng.normal_vec(n * b);
+        for symmetrize in [false, true] {
+            let single = SimplexMvm::build(&x, d, &k, 1).with_symmetrize(symmetrize);
+            let sharded = ShardedMvm::build(&x, d, &k, 1, 1).with_symmetrize(symmetrize);
+            let (a, bb) = (sharded.mvm(&v), single.mvm(&v));
+            for i in 0..n {
+                assert!(
+                    (a[i] - bb[i]).abs() <= 1e-10,
+                    "d={d} sym={symmetrize} row {i}: {} vs {}",
+                    a[i],
+                    bb[i]
+                );
+            }
+            let (ab, sb) = (sharded.mvm_block(&vb, b), single.mvm_block(&vb, b));
+            for i in 0..n * b {
+                assert!(
+                    (ab[i] - sb[i]).abs() <= 1e-10,
+                    "d={d} sym={symmetrize} block idx {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn partitioned_semantics_across_dims_and_shards() {
+    // Exact partitioned semantics for every (d, P): shard p's rows of
+    // the sharded MVM equal a standalone lattice built on shard p's
+    // points, and the block path matches the single-RHS path per RHS.
+    for &d in &DIMS {
+        let n = 96;
+        let x = random_points(n, d, 100 + d as u64);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 0.8);
+        let mut rng = Pcg64::new(200 + d as u64);
+        let v = rng.normal_vec(n);
+        for &p in &SHARDS {
+            let sharded = ShardedLattice::build(&x, d, &k, 1, p);
+            assert_eq!(sharded.shard_count(), p);
+            let u = sharded.mvm(&v);
+            for s in 0..p {
+                let r = sharded.shard_range(s);
+                let solo = PermutohedralLattice::build(&x[r.start * d..r.end * d], d, &k, 1);
+                let us = solo.mvm(&v[r.clone()]);
+                for (i, (got, want)) in u[r].iter().zip(&us).enumerate() {
+                    assert!(
+                        (got - want).abs() < 1e-12,
+                        "d={d} P={p} shard {s} row {i}: {got} vs {want}"
+                    );
+                }
+            }
+            let b = 4;
+            let vb = rng.normal_vec(n * b);
+            let block = sharded.mvm_block(&vb, b);
+            for c in 0..b {
+                let single = sharded.mvm(&vb[c * n..(c + 1) * n]);
+                for i in 0..n {
+                    assert!(
+                        (block[c * n + i] - single[i]).abs() < 1e-12,
+                        "d={d} P={p} rhs {c} row {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn block_cg_on_sharded_operator_matches_sequential() {
+    // The production solve shape: (symmetrized sharded lattice + σ²I)
+    // block-solved must freeze each RHS at exactly the sequential
+    // iteration count with the same iterates, for every shard count.
+    let d = 3;
+    let n = 150;
+    let noise = 0.2;
+    let x = random_points(n, d, 7);
+    let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+    let mut rng = Pcg64::new(8);
+    let b = 3;
+    let rhs = rng.normal_vec(n * b);
+    let opts = CgOptions {
+        tol: 1e-8,
+        max_iters: 500,
+        min_iters: 1,
+    };
+    for &p in &SHARDS {
+        let op = ShardedMvm::build(&x, d, &k, 1, p).with_symmetrize(true);
+        let shifted = Shifted::new(&op, noise);
+        let res = cg_block(&shifted, &rhs, b, opts);
+        for c in 0..b {
+            let single = cg(&shifted, &rhs[c * n..(c + 1) * n], opts);
+            assert_eq!(
+                res.rhs_iterations[c], single.iterations,
+                "P={p} rhs {c} iterations"
+            );
+            for i in 0..n {
+                assert!(
+                    (res.x[c * n + i] - single.x[i]).abs() <= 1e-10 * (1.0 + single.x[i].abs()),
+                    "P={p} rhs {c} row {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_solve_equals_independent_shard_solves() {
+    // CG on the block-diagonal sharded operator cannot mix shards: the
+    // converged solution restricted to shard p equals an independent
+    // solve of shard p's own system (a standalone lattice on its
+    // points). This is the solver-level witness of the partitioned
+    // semantics.
+    let d = 2;
+    let n = 140;
+    let noise = 0.3;
+    let x = random_points(n, d, 9);
+    let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+    let mut rng = Pcg64::new(10);
+    let y = rng.normal_vec(n);
+    let opts = CgOptions {
+        tol: 1e-10,
+        max_iters: 800,
+        min_iters: 1,
+    };
+    let p = 2;
+    let sharded = ShardedMvm::build(&x, d, &k, 1, p).with_symmetrize(true);
+    let shifted = Shifted::new(&sharded, noise);
+    let full = cg(&shifted, &y, opts);
+    assert!(full.converged, "full solve rms={}", full.rms_residual);
+    for s in 0..p {
+        let r = sharded.lattice.shard_range(s);
+        let solo =
+            SimplexMvm::build(&x[r.start * d..r.end * d], d, &k, 1).with_symmetrize(true);
+        let solo_shifted = Shifted::new(&solo, noise);
+        let part = cg(&solo_shifted, &y[r.clone()], opts);
+        for (i, (got, want)) in full.x[r].iter().zip(&part.x).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-6 * (1.0 + want.abs()),
+                "shard {s} row {i}: {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_model_tracks_unsharded_predictions() {
+    // End-to-end semantics of the committee-mean reduction: a P = 2
+    // model must predict close to the P = 1 model on a smooth target
+    // (both are consistent estimators of the same function) and both
+    // must beat the trivial predictor.
+    let d = 2;
+    let n = 400;
+    let mut rng = Pcg64::new(11);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| (1.3 * x[i * d]).sin() + (1.3 * x[i * d + 1]).sin() + 0.05 * rng.normal())
+        .collect();
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+    let gp1 = SimplexGp::fit(&x, &y, d, kernel.clone(), 0.05, GpConfig::default()).unwrap();
+    let cfg2 = GpConfig {
+        shards: 2,
+        ..GpConfig::default()
+    };
+    let gp2 = SimplexGp::fit(&x, &y, d, kernel, 0.05, cfg2).unwrap();
+    assert_eq!(gp1.shards(), 1);
+    assert_eq!(gp2.shards(), 2);
+    let xt: Vec<f64> = (0..100 * d).map(|_| rng.uniform_in(-1.8, 1.8)).collect();
+    let yt: Vec<f64> = (0..100)
+        .map(|i| (1.3 * xt[i * d]).sin() + (1.3 * xt[i * d + 1]).sin())
+        .collect();
+    let p1 = gp1.predict_mean(&xt);
+    let p2 = gp2.predict_mean(&xt);
+    let base = rmse(&vec![0.0; 100], &yt);
+    assert!(rmse(&p1, &yt) < 0.5 * base, "unsharded model underfits");
+    assert!(rmse(&p2, &yt) < 0.5 * base, "sharded model underfits");
+    let cos = simplex_gp::util::stats::cosine_error(&p1, &p2);
+    assert!(cos < 0.1, "sharded vs unsharded prediction cosine error {cos}");
+    // Variance machinery stays sane under sharding.
+    let (_, var) = gp2.predict(&xt[..10 * d]);
+    let prior = gp2.kernel.outputscale + gp2.noise;
+    for v in var {
+        assert!(v > 0.0 && v <= prior + 1e-6, "variance {v} out of range");
+    }
+}
+
+#[test]
+fn coordinator_shard_workers_byte_identical_to_direct() {
+    // Concurrent clients against a sharded model must receive replies
+    // whose floats are bit-for-bit the direct in-process sharded MVM —
+    // the channel hop through the shard workers adds no numeric drift.
+    let d = 2;
+    let n = 200;
+    let mut rng = Pcg64::new(21);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let y: Vec<f64> = (0..n).map(|i| (x[i * d]).sin() + 0.05 * rng.normal()).collect();
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+    let cfg = GpConfig {
+        shards: 2,
+        ..GpConfig::default()
+    };
+    let model = SimplexGp::fit(&x, &y, d, kernel, 0.05, cfg).unwrap();
+    assert_eq!(model.shards(), 2);
+    let v = rng.normal_vec(n);
+    let direct = model.operator().lattice.mvm(&v);
+    let serve_cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_wait: std::time::Duration::from_millis(150),
+        ..ServeConfig::default()
+    };
+    let server = Server::start(model, serve_cfg).unwrap();
+    let addr = server.local_addr;
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(4));
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let v = v.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                barrier.wait();
+                c.mvm(&v).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let u = h.join().unwrap();
+        assert_eq!(u.len(), n);
+        for i in 0..n {
+            assert_eq!(
+                u[i].to_bits(),
+                direct[i].to_bits(),
+                "row {i}: served {} != direct {} (bitwise)",
+                u[i],
+                direct[i]
+            );
+        }
+    }
+    // Stats report the shard count.
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("shards").and_then(|s| s.as_f64()), Some(2.0));
+    server.shutdown();
+}
+
+#[test]
+fn coordinator_p1_byte_identical_to_raw_single_lattice() {
+    // With P = 1 the whole stack — model fit, shard worker, reply
+    // serialization — must reproduce the raw single-lattice MVM bit for
+    // bit: the unsharded PR-1 path is the P = 1 special case.
+    let d = 2;
+    let n = 150;
+    let mut rng = Pcg64::new(31);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let y: Vec<f64> = (0..n).map(|i| (x[i * d]).cos() + 0.05 * rng.normal()).collect();
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+    let model = SimplexGp::fit(&x, &y, d, kernel.clone(), 0.05, GpConfig::default()).unwrap();
+    let raw = PermutohedralLattice::build(&x, d, &kernel, 1);
+    let v = rng.normal_vec(n);
+    let want = raw.mvm(&v);
+    let serve_cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        ..ServeConfig::default()
+    };
+    let server = Server::start(model, serve_cfg).unwrap();
+    let mut c = Client::connect(&server.local_addr).unwrap();
+    let got = c.mvm(&v).unwrap();
+    for i in 0..n {
+        assert_eq!(got[i].to_bits(), want[i].to_bits(), "row {i}");
+    }
+    server.shutdown();
+}
