@@ -1,0 +1,177 @@
+//! Preconditioned block-CG sweep (the PR-3 acceptance bench): CG
+//! iterations and wall time for rank ∈ {0, 25, 100} per-shard
+//! pivoted-Cholesky preconditioners × shard count P ∈ {1, 4} on the
+//! symmetrized lattice operator `K̃ + σ²I`.
+//!
+//! Conditioning regime: with the tiny paper-style noise (σ² = 1e-2 on
+//! unit-outputscale standardized data) the condition number of
+//! `K + σ²I` grows with the kernel's smoothness — the *larger*
+//! lengthscale is the ill-conditioned setting (top eigenvalue ≈ n·s²,
+//! smallest ≈ σ²), which is exactly where GPyTorch-style pivoted
+//! Cholesky bites: rank k captures the dominant eigenspace and the
+//! preconditioned spectrum clusters near 1. The sweep runs a rough and
+//! a smooth lengthscale and asserts acceptance (≥ 1.5× iteration
+//! reduction at rank 100) on whichever setting plain CG finds hardest.
+//!
+//! With `SIMPLEX_GP_BENCH_JSON=<path>` set (CI bench-smoke), every cell
+//! is appended to the perf-trajectory file as
+//! `{"bench", "n", "d", "ls", "rank", "shards", "cg_iters", "ns_per_solve"}`.
+//!
+//!     cargo bench --bench precond_cg [-- --quick]
+
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::mvm::{ShardedMvm, Shifted};
+use simplex_gp::solvers::{cg_block_precond, CgOptions, Precond};
+use simplex_gp::util::bench::{append_bench_json, bench_record, fmt_secs, quick_mode, Table};
+use simplex_gp::util::Pcg64;
+
+fn main() {
+    let quick = quick_mode();
+    let d = 4;
+    let n: usize = if quick { 2_048 } else { 16_384 };
+    let sigma2 = 1e-2;
+    let nrhs = 4;
+    let opts = CgOptions {
+        tol: 1e-6,
+        max_iters: 500,
+        min_iters: 1,
+    };
+
+    // Sort along the first coordinate so contiguous shards are spatial
+    // slabs (the locality assumption of ARCHITECTURE.md §Sharding).
+    let x: Vec<f64> = {
+        let mut rng = Pcg64::new(31);
+        let raw: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| raw[a * d].total_cmp(&raw[b * d]));
+        let mut sorted = Vec::with_capacity(n * d);
+        for i in order {
+            sorted.extend_from_slice(&raw[i * d..(i + 1) * d]);
+        }
+        sorted
+    };
+    let rhs = {
+        let mut rng = Pcg64::new(32);
+        rng.normal_vec(n * nrhs)
+    };
+
+    println!(
+        "preconditioned block-CG: n = {n}, d = {d}, sigma2 = {sigma2}, {} RHS, tol = {:.0e}\n",
+        nrhs, opts.tol
+    );
+    let mut table = Table::new(&[
+        "lengthscale",
+        "P",
+        "rank",
+        "build",
+        "solve",
+        "CG iters",
+        "iter cut",
+    ]);
+
+    // (ls, p) -> (baseline iters, rank-100 iters, max |Δx| vs baseline).
+    let mut cells: Vec<(f64, usize, usize, usize, f64)> = Vec::new();
+    for &ls in &[0.5f64, 2.0] {
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, ls);
+        for &p in &[1usize, 4] {
+            let op = ShardedMvm::build(&x, d, &kernel, 1, p).with_symmetrize(true);
+            let shifted = Shifted::new(&op, sigma2);
+            let mut base_iters = 0usize;
+            let mut r100_iters = 0usize;
+            let mut base_x: Vec<f64> = Vec::new();
+            let mut max_dx = 0.0f64;
+            for &rank in &[0usize, 25, 100] {
+                let t0 = std::time::Instant::now();
+                let pc = if rank > 0 {
+                    Some(op.build_precond(&x, &kernel, rank, sigma2))
+                } else {
+                    None
+                };
+                let build_s = t0.elapsed().as_secs_f64();
+                let t1 = std::time::Instant::now();
+                let res = cg_block_precond(
+                    &shifted,
+                    &rhs,
+                    nrhs,
+                    opts,
+                    pc.as_ref().map(|pc| pc as &dyn Precond),
+                );
+                let solve_s = t1.elapsed().as_secs_f64();
+                if rank == 0 {
+                    base_iters = res.iterations;
+                    base_x = res.x.clone();
+                } else {
+                    let dx = res
+                        .x
+                        .iter()
+                        .zip(&base_x)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f64, f64::max);
+                    max_dx = max_dx.max(dx);
+                    if rank == 100 {
+                        r100_iters = res.iterations;
+                    }
+                }
+                let cut = if rank == 0 || res.iterations == 0 {
+                    "-".to_string()
+                } else {
+                    format!("{:.2}x", base_iters as f64 / res.iterations as f64)
+                };
+                table.row(&[
+                    format!("{ls}"),
+                    p.to_string(),
+                    rank.to_string(),
+                    fmt_secs(build_s),
+                    fmt_secs(solve_s),
+                    res.iterations.to_string(),
+                    cut,
+                ]);
+                append_bench_json(&bench_record(
+                    "precond_cg",
+                    &[
+                        ("n", n as f64),
+                        ("d", d as f64),
+                        ("ls", ls),
+                        ("rank", rank as f64),
+                        ("shards", p as f64),
+                        ("cg_iters", res.iterations as f64),
+                        ("ns_per_solve", solve_s * 1e9),
+                    ],
+                ));
+            }
+            cells.push((ls, p, base_iters, r100_iters, max_dx));
+        }
+    }
+
+    println!("\nPreconditioned block-CG — iterations / latency by rank and shard count\n");
+    table.print();
+    table.write_csv("precond_cg");
+
+    // Acceptance on the ill-conditioned setting: the lengthscale whose
+    // P = 1 unpreconditioned solve needed the most iterations.
+    let hard_ls = cells
+        .iter()
+        .filter(|c| c.1 == 1)
+        .max_by_key(|c| c.2)
+        .map(|c| c.0)
+        .unwrap();
+    println!(
+        "\nill-conditioned setting: lengthscale = {hard_ls} (largest plain-CG iteration count)"
+    );
+    for &(ls, p, base, r100, max_dx) in &cells {
+        if ls != hard_ls {
+            continue;
+        }
+        let ratio = base as f64 / (r100 as f64).max(1.0);
+        println!(
+            "acceptance (P = {p}): rank-100 cuts CG iterations {base} -> {r100} = {ratio:.2}x {} \
+             (max |dx| vs unpreconditioned {max_dx:.2e})",
+            if ratio >= 1.5 {
+                "(>= 1.5x: PASS)"
+            } else {
+                "(< 1.5x: FAIL)"
+            }
+        );
+    }
+    println!();
+}

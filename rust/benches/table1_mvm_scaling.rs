@@ -40,7 +40,7 @@ fn main() {
         times[1].push(tk.median_s);
         times[2].push(ts.median_s);
         times[3].push(tx.median_s);
-        // Perf-trajectory records (CI bench-smoke → BENCH_PR2.json).
+        // Perf-trajectory records (CI bench-smoke → BENCH_PR3.json).
         for (op, t) in [("exact", &te), ("kissgp", &tk), ("skip", &ts), ("simplex", &tx)] {
             let mut rec = bench_record(
                 "table1_mvm_scaling",

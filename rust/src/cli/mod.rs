@@ -78,18 +78,20 @@ USAGE: simplex-gp <command> [--flags]
 COMMANDS
   train      --dataset <name> [--n N] [--epochs E] [--kernel rbf|matern32]
              [--solver cg|rrcg] [--tol T] [--order R] [--seed S] [--track-mll]
-             [--shards P]
+             [--shards P] [--precond-rank K]
              Train on a synthetic UCI analog; prints per-epoch metrics and
              final test RMSE/NLL.
   mvm        --dataset <name> [--n N] [--order R] [--backend native|pjrt]
-             [--shards P]
-             Time lattice MVMs and report cosine error vs the exact MVM.
+             [--shards P] [--precond-rank K] [--noise S2]
+             Time lattice MVMs, report cosine error vs the exact MVM, and
+             (K > 0) compare CG iterations with/without the rank-K
+             per-shard pivoted-Cholesky preconditioner.
   sparsity   [--n N] — print the Table-3 sparsity rows for all datasets.
   stencil    --kernel <fam> [--order R] — print the coverage-optimal
              spacing and taps (the §4.1 discretization).
-  serve      --dataset <name> [--n N] [--addr HOST:PORT] [--shards P] —
-             train quickly, then serve predictions over the JSON-lines
-             protocol.
+  serve      --dataset <name> [--n N] [--addr HOST:PORT] [--shards P]
+             [--precond-rank K] — train quickly, then serve predictions
+             over the JSON-lines protocol.
   goldens    [--artifacts DIR] — compile AOT artifacts on PJRT and replay
              the python-generated goldens (cross-layer parity check).
   datasets   — list the benchmark dataset analogs.
@@ -98,6 +100,12 @@ COMMANDS
 --shards P partitions the training points across P data-parallel
 lattices (0 = auto from cores); train/mvm/serve default to the config's
 [train] shards value (1).
+
+--precond-rank K preconditions every CG solve with a rank-K pivoted
+Cholesky of the exact kernel, one factor per shard (block-diagonal —
+exact structure for the sharded operator). 0 disables it;
+train/mvm/serve default to the config's [train] precond_rank value
+(100, the paper's Table 5 setting).
 
 Defaults mirror the paper's Table 5; see config/mod.rs.
 ";
@@ -139,6 +147,15 @@ fn shards_arg(args: &Args, cfg_file: &Config) -> Result<usize> {
     args.get_usize("shards", cfg_file.get_usize("train", "shards", 1))
 }
 
+/// `--precond-rank` flag, defaulting to the config's
+/// `[train] precond_rank` (100, Table 5). 0 = unpreconditioned.
+fn precond_rank_arg(args: &Args, cfg_file: &Config) -> Result<usize> {
+    args.get_usize(
+        "precond-rank",
+        cfg_file.get_usize("train", "precond_rank", 100),
+    )
+}
+
 fn load_split(args: &Args) -> Result<(crate::datasets::Split, usize)> {
     let name = args
         .get("dataset")
@@ -174,6 +191,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         verbose: true,
         solve,
         shards: shards_arg(args, &cfg_file)?,
+        precond_rank: precond_rank_arg(args, &cfg_file)?,
         ..TrainConfig::default()
     };
 
@@ -220,11 +238,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             .collect::<Vec<_>>()
     );
     println!(
-        "outputscale {:.3}, noise {:.4}, lattice points m = {}, shards = {}",
+        "outputscale {:.3}, noise {:.4}, lattice points m = {}, shards = {}, precond rank = {}",
         out.model.kernel.outputscale,
         out.model.noise,
         out.model.lattice_points(),
-        out.model.shards()
+        out.model.shards(),
+        out.model.precond_rank()
     );
     Ok(())
 }
@@ -233,7 +252,8 @@ fn cmd_mvm(args: &Args) -> Result<()> {
     let (split, d) = load_split(args)?;
     let family = parse_kernel(args)?;
     let order = args.get_usize("order", 1)?;
-    let shards = shards_arg(args, &load_config(args)?)?;
+    let cfg_file = load_config(args)?;
+    let shards = shards_arg(args, &cfg_file)?;
     let x = &split.train.x;
     let n = split.train.n();
     let kernel = ArdKernel::with_lengthscale(family, d, 1.0);
@@ -287,6 +307,49 @@ fn cmd_mvm(args: &Args) -> Result<()> {
             crate::util::stats::cosine_error(&approx, &exact)
         );
     }
+
+    // CG iteration comparison: unpreconditioned vs rank-K per-shard
+    // pivoted Cholesky on the symmetrized (K̃ + σ²I) solve.
+    let rank = precond_rank_arg(args, &cfg_file)?;
+    if rank > 0 {
+        let noise = args.get_f64("noise", 1e-2)?;
+        let op = crate::mvm::ShardedMvm {
+            lattice: lat,
+            outputscale: kernel.outputscale,
+            symmetrize: true,
+        };
+        let shifted = crate::mvm::Shifted::new(&op, noise);
+        let opts = crate::solvers::CgOptions {
+            tol: 1e-4,
+            max_iters: 500,
+            min_iters: 1,
+        };
+        let t0 = std::time::Instant::now();
+        let plain = crate::solvers::cg_block(&shifted, &v, 1, opts);
+        let plain_s = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let pc = op.build_precond(x, &kernel, rank, noise);
+        let pc_build_s = t1.elapsed().as_secs_f64();
+        let t2 = std::time::Instant::now();
+        let pre = crate::solvers::cg_block_precond(
+            &shifted,
+            &v,
+            1,
+            opts,
+            Some(&pc as &dyn crate::solvers::Precond),
+        );
+        let pre_s = t2.elapsed().as_secs_f64();
+        println!(
+            "CG solve (tol 1e-4, sigma2 = {noise}): {} iters / {:.1} ms unpreconditioned \
+             -> {} iters / {:.1} ms with rank-{rank} per-shard pivoted Cholesky \
+             (factor built in {:.1} ms)",
+            plain.iterations,
+            plain_s * 1e3,
+            pre.iterations,
+            pre_s * 1e3,
+            pc_build_s * 1e3
+        );
+    }
     Ok(())
 }
 
@@ -331,10 +394,12 @@ fn cmd_stencil(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let (split, d) = load_split(args)?;
     let family = parse_kernel(args)?;
+    let cfg_file = load_config(args)?;
     let tc = TrainConfig {
         epochs: args.get_usize("epochs", 10)?,
         verbose: true,
-        shards: shards_arg(args, &load_config(args)?)?,
+        shards: shards_arg(args, &cfg_file)?,
+        precond_rank: precond_rank_arg(args, &cfg_file)?,
         ..TrainConfig::default()
     };
     println!("fitting model for serving ({} train points)...", split.train.n());

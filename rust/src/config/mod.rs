@@ -157,7 +157,7 @@ learning_rate = 0.1
 cg_train_tolerance = 1.0
 cg_eval_tolerance = 0.01
 max_cg_iterations = 500
-precond_rank = 100
+precond_rank = 100        # per-shard pivoted-Cholesky rank (0 = off; Table 5)
 max_lanczos_iterations = 100
 kernel = "matern32"       # { matern32, rbf }
 blur_order = 1
@@ -186,6 +186,7 @@ mod tests {
         assert_eq!(cfg.get_str("serve", "addr", ""), "127.0.0.1:7788");
         assert_eq!(cfg.get_f64("train", "min_noise", 0.0), 1e-4);
         assert_eq!(cfg.get_usize("train", "shards", 0), 1);
+        assert_eq!(cfg.get_usize("train", "precond_rank", 0), 100);
     }
 
     #[test]

@@ -24,7 +24,14 @@
 //!   → {"id": 9, "op": "stats"}
 //!   ← {"id": 7, "mean": [...], "elapsed_us": 1234}
 //!   ← {"id": 8, "u": [...], "batched_with": 3}
-//!   ← {"id": 9, "n": ..., "m": ..., "d": ..., "shards": ..., "served": ..., "batches": ...}
+//!   ← {"id": 9, "n": ..., "m": ..., "d": ..., "shards": ..., "served": ..., "batches": ...,
+//!      "cg_iters": ..., "precond_rank": ...}
+//!
+//! `cg_iters` is the realized CG iteration count of the model's fitting
+//! solve and `precond_rank` the per-shard pivoted-Cholesky rank it ran
+//! with (0 = unpreconditioned) — together they expose the solver cost
+//! behind the served model, so operators can see the preconditioner
+//! paying for itself without rerunning the fit.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -541,6 +548,14 @@ fn batch_loop(
             obj.insert("d".to_string(), Json::Num(d as f64));
             obj.insert("shards".to_string(), Json::Num(model.shards() as f64));
             obj.insert(
+                "cg_iters".to_string(),
+                Json::Num(model.fit_iterations as f64),
+            );
+            obj.insert(
+                "precond_rank".to_string(),
+                Json::Num(model.precond_rank() as f64),
+            );
+            obj.insert(
                 "served".to_string(),
                 Json::Num(served.load(Ordering::Relaxed) as f64),
             );
@@ -701,7 +716,45 @@ mod tests {
         }
         let stats = client.stats().unwrap();
         assert_eq!(stats.get("n").and_then(|v| v.as_f64()), Some(200.0));
+        // Solver diagnostics: the fit's realized CG iterations and the
+        // (here disabled) preconditioner rank.
+        assert!(stats.get("cg_iters").and_then(|v| v.as_f64()).unwrap_or(-1.0) >= 1.0);
+        assert_eq!(stats.get("precond_rank").and_then(|v| v.as_f64()), Some(0.0));
         assert!(server.served() >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn preconditioned_model_serves_and_reports_rank() {
+        let d = 2;
+        let mut rng = Pcg64::new(8);
+        let x: Vec<f64> = (0..200 * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..200)
+            .map(|i| (x[i * d]).sin() + 0.05 * rng.normal())
+            .collect();
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let cfg = GpConfig {
+            precond_rank: 20,
+            ..GpConfig::default()
+        };
+        let model = SimplexGp::fit(&x, &y, d, kernel, 0.05, cfg).unwrap();
+        let direct = model.predict_mean(&x[..2 * d]);
+        let server = Server::start(
+            model,
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let got = client.predict(&x[..2 * d], d).unwrap();
+        for i in 0..2 {
+            assert!((got[i] - direct[i]).abs() < 1e-9);
+        }
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("precond_rank").and_then(|v| v.as_f64()), Some(20.0));
+        assert!(stats.get("cg_iters").and_then(|v| v.as_f64()).unwrap_or(-1.0) >= 1.0);
         server.shutdown();
     }
 

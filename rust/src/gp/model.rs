@@ -6,7 +6,9 @@ use anyhow::{ensure, Result};
 
 use crate::kernels::ArdKernel;
 use crate::mvm::{Shifted, ShardedMvm};
-use crate::solvers::{cg, cg_block, slq_logdet, CgOptions};
+use crate::solvers::{
+    cg_block_precond, slq_logdet, CgOptions, Precond, ShardedPivCholPrecond,
+};
 
 /// Inference-time configuration (defaults mirror the paper's Table 5).
 #[derive(Clone, Debug)]
@@ -29,6 +31,10 @@ pub struct GpConfig {
     /// exact setting), 0 = auto from cores, P > 1 = exact partitioned
     /// semantics (see `crate::lattice::shard`).
     pub shards: usize,
+    /// Pivoted-Cholesky preconditioner rank per shard for every CG
+    /// solve (fit + predictive-variance columns). 0 = off (bit-identical
+    /// to the unpreconditioned path); the paper's Table 5 uses 100.
+    pub precond_rank: usize,
 }
 
 impl Default for GpConfig {
@@ -42,6 +48,7 @@ impl Default for GpConfig {
             slq_probes: 10,
             seed: 0,
             shards: 1,
+            precond_rank: 0,
         }
     }
 }
@@ -56,6 +63,10 @@ pub struct SimplexGp {
     pub y_train: Vec<f64>,
     pub config: GpConfig,
     op: ShardedMvm,
+    /// Per-shard pivoted-Cholesky preconditioner (None when
+    /// `config.precond_rank == 0`); built once at fit time and reused by
+    /// every predictive-variance solve.
+    precond: Option<ShardedPivCholPrecond>,
     alpha: Vec<f64>,
     /// Per-shard Blur(Splat(α)) cached at fit time: prediction then only
     /// embeds and slices the test points — O(t·d²) per request instead
@@ -85,18 +96,31 @@ impl SimplexGp {
         ensure!(noise > 0.0, "noise must be positive");
         let op = ShardedMvm::build(x, d, &kernel, config.order, config.shards)
             .with_symmetrize(config.symmetrize);
+        // Per-shard pivoted Cholesky of the exact kernel + σ²I — exact
+        // block structure for the sharded operator; rank 0 keeps the
+        // existing unpreconditioned path bit for bit.
+        let precond = if config.precond_rank > 0 {
+            Some(op.build_precond(x, &kernel, config.precond_rank, noise))
+        } else {
+            None
+        };
         let shifted = Shifted::new(&op, noise);
-        let res = cg(
+        let opts = CgOptions {
+            tol: config.cg_tol,
+            max_iters: config.cg_max_iters,
+            min_iters: 1,
+        };
+        // One solver entry point for both paths: with None this runs
+        // single-RHS CG's exact floating-point sequence (pinned by
+        // `rust/tests/precond_equivalence.rs`).
+        let res = cg_block_precond(
             &shifted,
             y,
-            CgOptions {
-                tol: config.cg_tol,
-                max_iters: config.cg_max_iters,
-                min_iters: 1,
-            },
+            1,
+            opts,
+            precond.as_ref().map(|pc| pc as &dyn Precond),
         );
-        let fit_iterations = res.iterations;
-        let alpha = res.x;
+        let (alpha, fit_iterations) = (res.x, res.iterations);
         let z_pred = op.lattice.splat_blur(&alpha, 1);
         Ok(SimplexGp {
             kernel,
@@ -106,6 +130,7 @@ impl SimplexGp {
             y_train: y.to_vec(),
             config,
             op,
+            precond,
             alpha,
             z_pred,
             fit_iterations,
@@ -124,6 +149,11 @@ impl SimplexGp {
     /// Number of data-parallel lattice shards.
     pub fn shards(&self) -> usize {
         self.op.shard_count()
+    }
+
+    /// Configured preconditioner rank per shard (0 = unpreconditioned).
+    pub fn precond_rank(&self) -> usize {
+        self.config.precond_rank
     }
 
     /// The underlying (sharded) lattice operator (coordinator and
@@ -188,7 +218,7 @@ impl SimplexGp {
             for v in cols.iter_mut() {
                 *v *= self.kernel.outputscale;
             }
-            let sol = cg_block(
+            let sol = cg_block_precond(
                 &shifted,
                 &cols,
                 nc,
@@ -197,6 +227,7 @@ impl SimplexGp {
                     max_iters: self.config.cg_max_iters,
                     min_iters: 1,
                 },
+                self.precond.as_ref().map(|pc| pc as &dyn Precond),
             );
             for (c, i) in (c0..c1).enumerate() {
                 // dot over the full rows is Σ_p k*ᵖᵀ(K̃ₚ+σ²I)⁻¹k*ᵖ on

@@ -32,6 +32,16 @@
 //! cores than one pass exposes. Shards splat, blur and slice
 //! concurrently, letting one request's latency scale down with cores —
 //! the axis PR 1's RHS batching (throughput) did not touch.
+//!
+//! The block-diagonal structure is also what makes *per-shard
+//! preconditioning* exact: a
+//! [`crate::solvers::ShardedPivCholPrecond`] built over the same
+//! [`ShardedLattice::bounds`] partition (one pivoted-Cholesky factor
+//! per shard, from that shard's exact kernel rows) applies
+//! block-diagonally and therefore commutes with the sharded operator's
+//! own block structure — no kernel mass the operator keeps falls
+//! between preconditioner blocks. [`crate::mvm::ShardedMvm::build_precond`]
+//! owns the pairing.
 
 use super::PermutohedralLattice;
 use crate::kernels::ArdKernel;
@@ -66,7 +76,13 @@ pub struct ShardedLattice {
     /// The per-shard lattices, in partition order.
     pub shards: Vec<PermutohedralLattice>,
     /// Partition boundaries: shard `p` owns rows
-    /// `bounds[p]..bounds[p+1]` (length `shards.len() + 1`).
+    /// `bounds[p]..bounds[p+1]` (length `shards.len() + 1`,
+    /// `bounds[0] == 0`, last entry `== n`). Everything that must agree
+    /// with the operator's block structure — the coordinator's shard
+    /// workers, `scatter_shard_block`, and the per-shard
+    /// pivoted-Cholesky preconditioner
+    /// ([`crate::solvers::ShardedPivCholPrecond`]) — partitions against
+    /// this same vector.
     pub bounds: Vec<usize>,
 }
 

@@ -136,13 +136,38 @@ impl<'a> ExactMvm<'a> {
         }
     }
 
+    /// The same `(kernel, x)` pair as a row source for the
+    /// pivoted-Cholesky preconditioner — ONE home for the row/diag
+    /// evaluation logic (`solvers::precond::ExactKernelRows`).
+    fn kernel_rows(&self) -> crate::solvers::precond::ExactKernelRows<'a> {
+        crate::solvers::precond::ExactKernelRows {
+            kernel: self.kernel,
+            x: self.x,
+            d: self.d,
+        }
+    }
+
     /// Row i of the kernel matrix (used by the pivoted-Cholesky
     /// preconditioner).
     pub fn row(&self, i: usize) -> Vec<f64> {
-        let xi = &self.x[i * self.d..(i + 1) * self.d];
-        (0..self.n)
-            .map(|j| self.kernel.eval(xi, &self.x[j * self.d..(j + 1) * self.d]))
-            .collect()
+        crate::solvers::precond::KernelRows::row(&self.kernel_rows(), i)
+    }
+}
+
+/// The exact operator doubles as a [`KernelRows`] source, so
+/// `PivCholPrecond::build(&exact_op, rank, sigma2)` works directly on
+/// the operator the preconditioner is meant to approximate. Delegates
+/// to [`crate::solvers::precond::ExactKernelRows`] over the same
+/// `(kernel, x)` pair — no second copy of the evaluation logic.
+impl crate::solvers::precond::KernelRows for ExactMvm<'_> {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn row(&self, i: usize) -> Vec<f64> {
+        ExactMvm::row(self, i)
+    }
+    fn diag(&self) -> Vec<f64> {
+        crate::solvers::precond::KernelRows::diag(&self.kernel_rows())
     }
 }
 
@@ -390,6 +415,27 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn exact_mvm_serves_kernel_rows() {
+        use crate::solvers::precond::KernelRows;
+        let d = 2;
+        let n = 25;
+        let mut rng = Pcg64::new(9);
+        let x = rng.normal_vec(n * d);
+        let mut k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        k.outputscale = 1.7;
+        let op = ExactMvm::new(&k, &x, d);
+        assert_eq!(KernelRows::len(&op), n);
+        let dense = k.cov_matrix(&x, d);
+        let row3 = KernelRows::row(&op, 3);
+        for j in 0..n {
+            assert!((row3[j] - dense[(3, j)]).abs() < 1e-14);
+        }
+        for (i, v) in KernelRows::diag(&op).into_iter().enumerate() {
+            assert!((v - dense[(i, i)]).abs() < 1e-14);
         }
     }
 

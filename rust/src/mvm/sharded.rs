@@ -10,6 +10,7 @@
 use crate::kernels::ArdKernel;
 use crate::lattice::ShardedLattice;
 use crate::mvm::MvmOperator;
+use crate::solvers::precond::ShardedPivCholPrecond;
 use crate::util::layout::{block_to_interleaved, interleaved_to_block};
 
 /// Lattice-accelerated MVM over P shards. Holds the built shard
@@ -45,6 +46,31 @@ impl ShardedMvm {
     /// Number of shards P.
     pub fn shard_count(&self) -> usize {
         self.lattice.shard_count()
+    }
+
+    /// Row-partition boundaries of the underlying shard set: shard `p`
+    /// owns rows `shard_bounds()[p]..shard_bounds()[p+1]`. This is the
+    /// partition a per-shard preconditioner must be built against.
+    pub fn shard_bounds(&self) -> &[usize] {
+        &self.lattice.bounds
+    }
+
+    /// Build the per-shard pivoted-Cholesky preconditioner matched to
+    /// this operator's row partition (`x` must be the same `n × d`
+    /// inputs the operator was built from; `sigma2` the shift of the
+    /// solve). Because the sharded operator is block-diagonal over the
+    /// same partition, the resulting block-diagonal Woodbury apply is
+    /// structurally exact for it — no kernel mass the operator keeps is
+    /// approximated away by sharding the preconditioner
+    /// (`crate::solvers::precond`, module docs).
+    pub fn build_precond(
+        &self,
+        x: &[f64],
+        kernel: &ArdKernel,
+        rank: usize,
+        sigma2: f64,
+    ) -> ShardedPivCholPrecond {
+        ShardedPivCholPrecond::build(x, self.lattice.d, kernel, rank, sigma2, &self.lattice.bounds)
     }
 
     fn scale(&self, mut out: Vec<f64>) -> Vec<f64> {
@@ -112,6 +138,25 @@ mod tests {
             let b = 4;
             let vb = rng.normal_vec(n * b);
             assert_eq!(sharded.mvm_block(&vb, b), single.mvm_block(&vb, b), "sym={symmetrize}");
+        }
+    }
+
+    #[test]
+    fn build_precond_uses_operator_partition() {
+        let d = 2;
+        let n = 90;
+        let mut rng = Pcg64::new(3);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.9);
+        for shards in [1usize, 3] {
+            let op = ShardedMvm::build(&x, d, &k, 1, shards);
+            let pc = op.build_precond(&x, &k, 12, 0.05);
+            assert_eq!(pc.shard_count(), op.shard_count());
+            assert_eq!(op.shard_bounds().len(), op.shard_count() + 1);
+            use crate::solvers::Precond;
+            assert_eq!(pc.len(), n);
+            let v = rng.normal_vec(n);
+            assert_eq!(pc.apply(&v).len(), n);
         }
     }
 

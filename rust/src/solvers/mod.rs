@@ -3,18 +3,28 @@
 //! log-determinants, RR-CG randomized truncation, and the
 //! pivoted-Cholesky preconditioner.
 //!
-//! Multi-RHS entry points ([`cg_block`], [`lanczos_block`]) take
-//! row-major `b × n` blocks (RHS-contiguous; ARCHITECTURE.md, §Batch
-//! layout) and issue one [`crate::mvm::MvmOperator::mvm_block`] per
-//! Krylov iteration, so the lattice traversal cost is shared by every
-//! right-hand side in flight.
+//! Multi-RHS entry points ([`cg_block`], [`cg_block_precond`],
+//! [`lanczos_block`]) take row-major `b × n` blocks (RHS-contiguous;
+//! ARCHITECTURE.md, §Batch layout) and issue one
+//! [`crate::mvm::MvmOperator::mvm_block`] per Krylov iteration, so the
+//! lattice traversal cost is shared by every right-hand side in flight.
+//!
+//! Preconditioning plugs in through the [`Precond`] application trait:
+//! [`PivCholPrecond`] (single rank-k pivoted-Cholesky factor) and
+//! [`ShardedPivCholPrecond`] (one factor per lattice shard, applied
+//! block-diagonally — exact structure for the sharded operator) are
+//! interchangeable at every preconditioned call site.
 
 pub mod cg;
 pub mod lanczos;
 pub mod precond;
 pub mod rrcg;
 
-pub use cg::{cg, cg_block, cg_multi, cg_precond, BlockCgResult, CgOptions, CgResult};
+pub use cg::{
+    cg, cg_block, cg_block_precond, cg_multi, cg_precond, BlockCgResult, CgOptions, CgResult,
+};
 pub use lanczos::{lanczos, lanczos_block, slq_logdet, LanczosResult};
-pub use precond::{KernelRows, PivCholPrecond};
+pub use precond::{
+    ExactKernelRows, KernelRows, PivCholPrecond, Precond, ShardedPivCholPrecond,
+};
 pub use rrcg::{rr_cg, RrCgOptions, RrCgResult};

@@ -1,16 +1,41 @@
-//! Partial pivoted-Cholesky preconditioner for (K + σ²I) solves —
+//! Partial pivoted-Cholesky preconditioning for `(K + σ²I)` solves —
 //! GPyTorch's default (paper Table 5: preconditioner rank 100).
 //!
-//! Builds a rank-k approximation K ≈ L Lᵀ by greedily selecting the
-//! largest-residual-diagonal pivot, needing only kernel *rows* (never
-//! the full matrix), then applies (L Lᵀ + σ²I)⁻¹ via Woodbury:
-//!   (σ²I + LLᵀ)⁻¹ = σ⁻²[I − L(σ²I_k + LᵀL)⁻¹Lᵀ].
+//! Two pieces live here:
+//!
+//! - [`PivCholPrecond`] builds a rank-k approximation `K ≈ L Lᵀ` by
+//!   greedily selecting the largest-residual-diagonal pivot, needing
+//!   only kernel *rows* (never the full matrix), then applies
+//!   `(L Lᵀ + σ²I)⁻¹` via the Woodbury identity
+//!   `(σ²I + LLᵀ)⁻¹ = σ⁻²(I − L(σ²I_k + LᵀL)⁻¹Lᵀ)`.
+//! - [`ShardedPivCholPrecond`] holds one such factor per shard of a
+//!   [`crate::lattice::ShardedLattice`] and applies them
+//!   block-diagonally. Because the sharded operator *is* block-diagonal
+//!   over the same row partition (ARCHITECTURE.md §Sharding), the
+//!   per-shard factors don't approximate away any structure the sharded
+//!   operator has: at full rank the sharded preconditioner inverts
+//!   `blockdiag_p(K_pp) + σ²I` exactly, which is exactly the kernel
+//!   mass the sharded operator keeps.
+//!
+//! Both implement [`Precond`], the application interface the
+//! preconditioned CG variants ([`crate::solvers::cg_precond`],
+//! [`crate::solvers::cg_block_precond`]) consume.
 
+use crate::kernels::ArdKernel;
 use crate::linalg::{cholesky, solve_lower, solve_lower_t, Mat};
 
-/// Access to kernel rows/diagonal, decoupled from the MVM operator (the
-/// preconditioner approximates the *exact* kernel even when the solve
-/// operator is the lattice approximation).
+/// Access to kernel rows/diagonal, decoupled from the MVM operator.
+///
+/// Contract:
+/// - [`KernelRows::row`]`(i)` returns row `i` of the *exact* kernel
+///   matrix, outputscale included — the preconditioner approximates the
+///   exact kernel even when the solve operator is the lattice
+///   approximation (the approximation error the lattice introduces is
+///   *relative* to the kernel, so a good exact-kernel preconditioner
+///   remains a good lattice-operator preconditioner).
+/// - [`KernelRows::diag`] returns the kernel diagonal `k(xᵢ, xᵢ)`
+///   (= the outputscale for stationary kernels).
+/// - `Sync` is required so per-shard factors can build in parallel.
 pub trait KernelRows: Sync {
     /// Matrix dimension n.
     fn len(&self) -> usize;
@@ -18,6 +43,68 @@ pub trait KernelRows: Sync {
     fn row(&self, i: usize) -> Vec<f64>;
     /// The kernel diagonal.
     fn diag(&self) -> Vec<f64>;
+    /// True when the matrix has dimension zero.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// [`KernelRows`] over an explicit `(kernel, points)` pair — the
+/// canonical source for preconditioner factors (the whole matrix is
+/// never formed; rows are evaluated on demand).
+pub struct ExactKernelRows<'a> {
+    /// Kernel whose rows are evaluated on demand.
+    pub kernel: &'a ArdKernel,
+    /// Row-major `n × d` inputs.
+    pub x: &'a [f64],
+    /// Input dimensionality.
+    pub d: usize,
+}
+
+impl KernelRows for ExactKernelRows<'_> {
+    fn len(&self) -> usize {
+        self.x.len() / self.d
+    }
+    fn row(&self, i: usize) -> Vec<f64> {
+        let n = self.len();
+        let xi = &self.x[i * self.d..(i + 1) * self.d];
+        (0..n)
+            .map(|j| self.kernel.eval(xi, &self.x[j * self.d..(j + 1) * self.d]))
+            .collect()
+    }
+    fn diag(&self) -> Vec<f64> {
+        vec![self.kernel.outputscale; self.len()]
+    }
+}
+
+/// Application side of a preconditioner: `z = P⁻¹ r`.
+///
+/// This is the interface the preconditioned CG variants consume, so
+/// single-factor ([`PivCholPrecond`]) and per-shard block-diagonal
+/// ([`ShardedPivCholPrecond`]) preconditioners are interchangeable at
+/// every call site. Implementations must be linear and must map the
+/// zero vector to the zero vector (block-CG relies on this to keep
+/// identically-zero right-hand sides frozen at zero iterations).
+pub trait Precond: Sync {
+    /// Operator dimension n.
+    fn len(&self) -> usize;
+    /// Apply `P⁻¹` to a single residual vector.
+    fn apply(&self, r: &[f64]) -> Vec<f64>;
+    /// Apply `P⁻¹` to a row-major `b × n` block of residuals (RHS `c`
+    /// contiguous at `r[c*n..(c+1)*n]`). Default: per-RHS [`Precond::apply`].
+    fn apply_block(&self, r: &[f64], nrhs: usize) -> Vec<f64> {
+        let n = self.len();
+        assert_eq!(r.len(), n * nrhs);
+        let mut out = Vec::with_capacity(n * nrhs);
+        for c in 0..nrhs {
+            out.extend_from_slice(&self.apply(&r[c * n..(c + 1) * n]));
+        }
+        out
+    }
+    /// True when the operator has dimension zero.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// Rank-k pivoted Cholesky factor plus the Woodbury capacitance solve.
@@ -34,6 +121,10 @@ pub struct PivCholPrecond {
 
 impl PivCholPrecond {
     /// Build from kernel rows with target rank `k` and shift `sigma2`.
+    ///
+    /// `k` is clamped to n; the factor truncates early if the residual
+    /// diagonal vanishes (numerically low-rank kernel). Cost: `k` kernel
+    /// rows plus `O(n·k²)` factor updates — independent of the solve.
     pub fn build(rows: &dyn KernelRows, k: usize, sigma2: f64) -> Self {
         let n = rows.len();
         let k = k.min(n);
@@ -97,7 +188,7 @@ impl PivCholPrecond {
         }
     }
 
-    /// Apply `P⁻¹ v` with P = L Lᵀ + σ²I (Woodbury).
+    /// Apply `P⁻¹ v` with `P = L Lᵀ + σ²I` (Woodbury).
     pub fn solve(&self, v: &[f64]) -> Vec<f64> {
         let n = self.l.rows;
         assert_eq!(v.len(), n);
@@ -111,7 +202,7 @@ impl PivCholPrecond {
         (0..n).map(|i| inv_s * (v[i] - ly[i])).collect()
     }
 
-    /// log|LLᵀ + σ²I| — available exactly from the factors; useful as a
+    /// `log|LLᵀ + σ²I|` — available exactly from the factors; useful as a
     /// deterministic complement/cross-check to SLQ.
     pub fn logdet(&self) -> f64 {
         let n = self.l.rows as f64;
@@ -124,6 +215,122 @@ impl PivCholPrecond {
     }
 }
 
+impl Precond for PivCholPrecond {
+    fn len(&self) -> usize {
+        self.l.rows
+    }
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        self.solve(r)
+    }
+}
+
+/// One rank-k pivoted-Cholesky factor per shard of a
+/// [`crate::lattice::ShardedLattice`], applied block-diagonally over
+/// the shard row partition.
+///
+/// Why this is the *right* preconditioner for the sharded operator:
+/// the sharded kernel MVM is exactly block-diagonal over the same
+/// partition (`K̃ = blockdiag_p(K̃_pp)`, cross-shard mass dropped —
+/// ARCHITECTURE.md §Sharding), so a block-diagonal `P` gives
+/// `P⁻¹(K̃ + σ²I) = blockdiag_p(P_p⁻¹(K̃_pp + σ²I))`: each shard is
+/// preconditioned independently and nothing is lost to off-diagonal
+/// coupling. At rank ≥ n_p per shard, `P` inverts the sharded
+/// operator's exact-kernel analog exactly.
+///
+/// For P = 1 (one shard spanning all rows) the build and the apply are
+/// bit-for-bit the single-factor [`PivCholPrecond`] path.
+pub struct ShardedPivCholPrecond {
+    /// Per-shard Woodbury factors, in shard order.
+    pub parts: Vec<PivCholPrecond>,
+    /// Row partition: shard `p` owns rows `bounds[p]..bounds[p+1]`.
+    bounds: Vec<usize>,
+    n: usize,
+}
+
+impl ShardedPivCholPrecond {
+    /// Build one rank-`rank` factor per shard from exact kernel rows of
+    /// that shard's points, in parallel across shards.
+    ///
+    /// `bounds` is the shard row partition (`bounds[p]..bounds[p+1]`,
+    /// `bounds[0] == 0`, `bounds.last() == n`) — pass
+    /// `ShardedLattice::bounds` (or use
+    /// [`crate::mvm::ShardedMvm::build_precond`], which does). `rank`
+    /// is per shard and clamped to each shard's size; `sigma2` is the
+    /// same σ² the solve operator is shifted by.
+    pub fn build(
+        x: &[f64],
+        d: usize,
+        kernel: &ArdKernel,
+        rank: usize,
+        sigma2: f64,
+        bounds: &[usize],
+    ) -> Self {
+        assert!(d >= 1, "d must be >= 1");
+        assert_eq!(x.len() % d, 0, "x length not a multiple of d");
+        let n = x.len() / d;
+        assert!(bounds.len() >= 2, "bounds must have at least 2 entries");
+        assert_eq!(bounds[0], 0, "bounds must start at row 0");
+        assert_eq!(*bounds.last().unwrap(), n, "bounds must end at n");
+        let p = bounds.len() - 1;
+        let parts: Vec<PivCholPrecond> = if p == 1 {
+            vec![PivCholPrecond::build(
+                &ExactKernelRows { kernel, x, d },
+                rank,
+                sigma2,
+            )]
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..p)
+                    .map(|i| {
+                        let xs = &x[bounds[i] * d..bounds[i + 1] * d];
+                        s.spawn(move || {
+                            PivCholPrecond::build(
+                                &ExactKernelRows { kernel, x: xs, d },
+                                rank,
+                                sigma2,
+                            )
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+        ShardedPivCholPrecond {
+            parts,
+            bounds: bounds.to_vec(),
+            n,
+        }
+    }
+
+    /// Number of shards P.
+    pub fn shard_count(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// `log|P|` — the sum of the per-shard Woodbury log-determinants
+    /// (exact for the block-diagonal preconditioner).
+    pub fn logdet(&self) -> f64 {
+        self.parts.iter().map(|p| p.logdet()).sum()
+    }
+}
+
+impl Precond for ShardedPivCholPrecond {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        assert_eq!(r.len(), self.n);
+        if self.parts.len() == 1 {
+            return self.parts[0].solve(r);
+        }
+        let mut out = Vec::with_capacity(self.n);
+        for (p, part) in self.parts.iter().enumerate() {
+            out.extend_from_slice(&part.solve(&r[self.bounds[p]..self.bounds[p + 1]]));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,28 +340,6 @@ mod tests {
     use crate::solvers::cg::{cg, cg_precond, CgOptions};
     use crate::util::Pcg64;
 
-    struct ExactRows<'a> {
-        k: &'a ArdKernel,
-        x: &'a [f64],
-        d: usize,
-    }
-
-    impl KernelRows for ExactRows<'_> {
-        fn len(&self) -> usize {
-            self.x.len() / self.d
-        }
-        fn row(&self, i: usize) -> Vec<f64> {
-            let n = self.len();
-            let xi = &self.x[i * self.d..(i + 1) * self.d];
-            (0..n)
-                .map(|j| self.k.eval(xi, &self.x[j * self.d..(j + 1) * self.d]))
-                .collect()
-        }
-        fn diag(&self) -> Vec<f64> {
-            vec![self.k.outputscale; self.len()]
-        }
-    }
-
     #[test]
     fn full_rank_factor_is_exact_inverse() {
         let d = 2;
@@ -162,7 +347,7 @@ mod tests {
         let mut rng = Pcg64::new(1);
         let x = rng.normal_vec(n * d);
         let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
-        let rows = ExactRows { k: &k, x: &x, d };
+        let rows = ExactKernelRows { kernel: &k, x: &x, d };
         let sigma2 = 0.1;
         let pc = PivCholPrecond::build(&rows, n, sigma2);
         // P = K + σ²I exactly at full rank ⇒ P⁻¹(K+σ²I)v = v.
@@ -199,7 +384,7 @@ mod tests {
             min_iters: 1,
         };
         let plain = cg(&op, &b, opts);
-        let rows = ExactRows { k: &k, x: &x, d };
+        let rows = ExactKernelRows { kernel: &k, x: &x, d };
         let pc = PivCholPrecond::build(&rows, 30, sigma2);
         let pcf = |r: &[f64]| pc.solve(r);
         let pre = cg_precond(&op, &b, opts, Some(&pcf));
@@ -224,11 +409,87 @@ mod tests {
         let mut rng = Pcg64::new(3);
         let x = rng.normal_vec(n * d);
         let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 1.0);
-        let rows = ExactRows { k: &k, x: &x, d };
+        let rows = ExactKernelRows { kernel: &k, x: &x, d };
         let pc = PivCholPrecond::build(&rows, 20, 0.01);
         let mut sorted = pc.pivots.clone();
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), pc.pivots.len(), "repeated pivots");
+    }
+
+    #[test]
+    fn sharded_single_shard_matches_pivchol_bitwise() {
+        // One shard spanning all rows IS the single-factor path: the
+        // build runs the same arithmetic on the same rows, so factors,
+        // pivots and applications agree bit for bit.
+        let d = 3;
+        let n = 60;
+        let mut rng = Pcg64::new(4);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let sigma2 = 0.05;
+        let rank = 20;
+        let single =
+            PivCholPrecond::build(&ExactKernelRows { kernel: &k, x: &x, d }, rank, sigma2);
+        let sharded = ShardedPivCholPrecond::build(&x, d, &k, rank, sigma2, &[0, n]);
+        assert_eq!(sharded.shard_count(), 1);
+        assert_eq!(sharded.parts[0].pivots, single.pivots);
+        assert_eq!(sharded.parts[0].l.data, single.l.data);
+        let v = rng.normal_vec(n);
+        assert_eq!(sharded.apply(&v), single.solve(&v));
+        assert_eq!(sharded.logdet(), single.logdet());
+    }
+
+    #[test]
+    fn sharded_apply_is_block_diagonal() {
+        // P = 2: the application must equal the concatenation of the
+        // per-shard Woodbury solves on the row segments, bit for bit.
+        let d = 2;
+        let n = 80;
+        let split = 33;
+        let mut rng = Pcg64::new(5);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 0.7);
+        let sigma2 = 0.02;
+        let rank = 15;
+        let sharded = ShardedPivCholPrecond::build(&x, d, &k, rank, sigma2, &[0, split, n]);
+        assert_eq!(sharded.shard_count(), 2);
+        let lo = PivCholPrecond::build(
+            &ExactKernelRows { kernel: &k, x: &x[..split * d], d },
+            rank,
+            sigma2,
+        );
+        let hi = PivCholPrecond::build(
+            &ExactKernelRows { kernel: &k, x: &x[split * d..], d },
+            rank,
+            sigma2,
+        );
+        let v = rng.normal_vec(n);
+        let got = sharded.apply(&v);
+        assert_eq!(&got[..split], lo.solve(&v[..split]).as_slice());
+        assert_eq!(&got[split..], hi.solve(&v[split..]).as_slice());
+    }
+
+    #[test]
+    fn precond_preserves_zero() {
+        // Linearity contract: block-CG keeps zero RHS frozen only if
+        // P⁻¹·0 = 0 exactly.
+        let d = 2;
+        let n = 40;
+        let mut rng = Pcg64::new(6);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let sharded = ShardedPivCholPrecond::build(&x, d, &k, 10, 0.1, &[0, 17, n]);
+        let z = vec![0.0; n];
+        assert!(sharded.apply(&z).iter().all(|&v| v == 0.0));
+        // Block application matches per-RHS application.
+        let v = rng.normal_vec(n * 3);
+        let block = sharded.apply_block(&v, 3);
+        for c in 0..3 {
+            assert_eq!(
+                &block[c * n..(c + 1) * n],
+                sharded.apply(&v[c * n..(c + 1) * n]).as_slice()
+            );
+        }
     }
 }

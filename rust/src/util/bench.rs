@@ -188,7 +188,7 @@ pub fn bench_record(bench: &str, fields: &[(&str, f64)]) -> crate::util::json::J
 
 /// Append one JSON record (one line) to the perf-trajectory file named
 /// by `SIMPLEX_GP_BENCH_JSON` — CI's bench-smoke job points it at
-/// `BENCH_PR2.json` and uploads the file as an artifact. No-op when the
+/// `BENCH_PR3.json` and uploads the file as an artifact. No-op when the
 /// variable is unset, so local bench runs leave no stray files.
 pub fn append_bench_json(record: &crate::util::json::Json) {
     let Ok(path) = std::env::var("SIMPLEX_GP_BENCH_JSON") else {
