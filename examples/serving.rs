@@ -58,6 +58,8 @@ fn main() -> anyhow::Result<()> {
         addr: "127.0.0.1:0".to_string(),
         max_batch: 512,
         max_wait: std::time::Duration::from_millis(2),
+        // Phase 3 streams live training points at the server.
+        allow_ingest: true,
         ..ServeConfig::default()
     };
     let server = Server::start(model, cfg)?;
@@ -168,6 +170,46 @@ fn main() -> anyhow::Result<()> {
         mvm_batches,
         mvm_total as f64 / mvm_batches.max(1) as f64
     );
+
+    // --- Phase 3: streaming ingest under live traffic ---
+    // New training points stream in over the wire; the server patches
+    // the lightest shard's lattice in place (no rebuild) and keeps
+    // serving — online regression, the scenario batch-only SKI setups
+    // cannot do.
+    let ingest_batches = 4;
+    let rows_per_ingest = 8;
+    let t2 = Instant::now();
+    {
+        let mut rng = Pcg64::new(900);
+        let mut client = Client::connect(&addr)?;
+        for _ in 0..ingest_batches {
+            let x: Vec<f64> = (0..rows_per_ingest * d).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..rows_per_ingest).map(|_| rng.normal() * 0.1).collect();
+            let n_now = client.ingest(&x, &y, d)?;
+            // Predictions keep flowing against the grown model.
+            let mean = client.predict(&x[..d], d)?;
+            assert_eq!(mean.len(), 1);
+            assert!(n_now >= n);
+        }
+    }
+    let ingest_wall = t2.elapsed().as_secs_f64();
+    let (n_final, ingested, rebuilds) = {
+        let mut c = Client::connect(&addr)?;
+        let stats = c.stats()?;
+        (
+            stats.get("n").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize,
+            stats.get("ingested").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize,
+            stats.get("rebuilds").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize,
+        )
+    };
+    println!("\n=== streaming ingest (incremental lattice updates) ===");
+    println!("ingest requests      : {ingest_batches} ({rows_per_ingest} rows each)");
+    println!("wall time            : {ingest_wall:.2} s");
+    println!("model grew           : {n} -> {n_final} training points");
+    println!("rows ingested        : {ingested} ({rebuilds} full rebuilds)");
+    assert_eq!(n_final, n + ingest_batches * rows_per_ingest);
+    assert_eq!(rebuilds, 0, "small batches must stay on the incremental path");
+
     server.shutdown();
     println!("\nOK: coordinator batched concurrent clients through one lattice pass per batch.");
     Ok(())

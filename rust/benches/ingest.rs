@@ -1,0 +1,144 @@
+//! Streaming-ingest cost vs full rebuild (the PR-4 acceptance bench):
+//! appending k ∈ {1, 64, 1024} points to a built n = 50k, d = 4 lattice
+//! via [`PermutohedralLattice::ingest`] against rebuilding from scratch
+//! on the n + k point set.
+//!
+//! Why ingest wins: a rebuild re-embeds and re-interns all n + k points
+//! (O(n·(d+1)) hash inserts) and re-resolves the entire blur adjacency
+//! (O(m·(d+1)·2r) lookups); ingest embeds only the k new points,
+//! interns only the keys they introduce, and patches adjacency for
+//! those keys alone (plus one dense relayout copy). Acceptance: the
+//! 64-point ingest is ≥ 5× faster than the rebuild.
+//!
+//! Each timed ingest starts from a `Clone` of the base lattice so the
+//! measured work is exactly one incremental batch; the clone cost is
+//! timed separately and reported as a reference column (it never counts
+//! against the ingest).
+//!
+//! With `SIMPLEX_GP_BENCH_JSON=<path>` set (CI bench-smoke), every row
+//! is appended to the perf-trajectory file as
+//! `{"bench": "ingest", "n", "d", "k", "new_keys", "ns_ingest",
+//!   "ns_rebuild", "speedup"}`.
+//!
+//!     cargo bench --bench ingest [-- --quick]
+
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::lattice::PermutohedralLattice;
+use simplex_gp::util::bench::{
+    append_bench_json, bench_record, fmt_secs, quick_mode, time_fn, Table,
+};
+use simplex_gp::util::Pcg64;
+
+fn main() {
+    let quick = quick_mode();
+    // The acceptance regime is pinned at n = 50k, d = 4 (ISSUE 4); quick
+    // mode keeps n and trims repetitions instead.
+    let n: usize = 50_000;
+    let d = 4;
+    let iters = if quick { 3 } else { 10 };
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+
+    let mut rng = Pcg64::new(71);
+    let x = rng.normal_vec(n * d);
+    let extra = rng.normal_vec(1024 * d);
+
+    let (t_base, base) = time_fn("base build", 0, 1, || {
+        PermutohedralLattice::build(&x, d, &kernel, 1)
+    });
+    println!(
+        "base lattice: n = {n}, d = {d}, m = {} built in {}\n",
+        base.m,
+        fmt_secs(t_base.median_s)
+    );
+
+    let mut table = Table::new(&[
+        "k",
+        "ingest",
+        "rebuild",
+        "speedup",
+        "new keys",
+        "clone (ref)",
+    ]);
+    let mut speedup_at_64 = 0.0f64;
+    for &k in &[1usize, 64, 1024] {
+        let batch = &extra[..k * d];
+
+        // Clone cost reference (not part of the timed ingest).
+        let (t_clone, _) = time_fn("clone", 1, iters, || base.clone());
+
+        // Pre-clone a pool of base lattices and time PURE ingest on
+        // each (cloning inside the timed closure would charge the copy
+        // to the ingest).
+        let mut pool: Vec<PermutohedralLattice> =
+            (0..iters + 1).map(|_| base.clone()).collect();
+        let mut new_keys = 0usize;
+        let mut samples = Vec::with_capacity(iters);
+        for lat in pool.iter_mut() {
+            let t0 = std::time::Instant::now();
+            let nk = lat.ingest(batch, &kernel);
+            samples.push(t0.elapsed().as_secs_f64());
+            new_keys = nk;
+        }
+        samples.remove(0); // warmup
+        samples.sort_by(f64::total_cmp);
+        let ingest_s = samples[samples.len() / 2];
+
+        // Rebuild cost at the final point set.
+        let mut full_x = x.clone();
+        full_x.extend_from_slice(batch);
+        let (t_rebuild, rebuilt) = time_fn("rebuild", 0, iters.min(3), || {
+            PermutohedralLattice::build(&full_x, d, &kernel, 1)
+        });
+        let rebuild_s = t_rebuild.median_s;
+
+        // Equivalence spot check: the ingested lattice IS the rebuilt
+        // one (bitwise — the invariants suite pins this exhaustively).
+        let ingested = &pool[1];
+        assert_eq!(ingested.m, rebuilt.m, "k={k}: m mismatch");
+        assert_eq!(ingested.offsets, rebuilt.offsets, "k={k}: offsets mismatch");
+        let mut vrng = Pcg64::new(72);
+        let v = vrng.normal_vec(n + k);
+        let (ui, uf) = (ingested.mvm(&v), rebuilt.mvm(&v));
+        for i in 0..n + k {
+            assert_eq!(ui[i].to_bits(), uf[i].to_bits(), "k={k}: mvm row {i}");
+        }
+
+        let speedup = rebuild_s / ingest_s.max(1e-12);
+        if k == 64 {
+            speedup_at_64 = speedup;
+        }
+        table.row(&[
+            k.to_string(),
+            fmt_secs(ingest_s),
+            fmt_secs(rebuild_s),
+            format!("{speedup:.1}x"),
+            new_keys.to_string(),
+            fmt_secs(t_clone.median_s),
+        ]);
+        append_bench_json(&bench_record(
+            "ingest",
+            &[
+                ("n", n as f64),
+                ("d", d as f64),
+                ("k", k as f64),
+                ("new_keys", new_keys as f64),
+                ("ns_ingest", ingest_s * 1e9),
+                ("ns_rebuild", rebuild_s * 1e9),
+                ("speedup", speedup),
+            ],
+        ));
+    }
+
+    println!("Streaming ingest vs full rebuild at n = {n}, d = {d}\n");
+    table.print();
+    table.write_csv("ingest");
+
+    println!(
+        "\nacceptance: 64-point ingest is {speedup_at_64:.1}x faster than a rebuild {}",
+        if speedup_at_64 >= 5.0 {
+            "(>= 5x: PASS)"
+        } else {
+            "(< 5x: FAIL)"
+        }
+    );
+}

@@ -90,8 +90,12 @@ COMMANDS
   stencil    --kernel <fam> [--order R] — print the coverage-optimal
              spacing and taps (the §4.1 discretization).
   serve      --dataset <name> [--n N] [--addr HOST:PORT] [--shards P]
-             [--precond-rank K] — train quickly, then serve predictions
-             over the JSON-lines protocol.
+             [--precond-rank K] [--ingest] — train quickly, then serve
+             predictions over the JSON-lines protocol. --ingest enables
+             the streaming `ingest` op (live training-point updates,
+             coalesced and absorbed incrementally up to the config's
+             [serve] max_ingest_batch rows per batch; larger coalesced
+             batches trigger a full refit).
   goldens    [--artifacts DIR] — compile AOT artifacts on PJRT and replay
              the python-generated goldens (cross-layer parity check).
   datasets   — list the benchmark dataset analogs.
@@ -413,19 +417,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         tc,
     )?;
     let shards = out.model.shards();
-    let cfg = match args.get("addr") {
-        Some(addr) => crate::coordinator::ServeConfig {
-            addr: addr.to_string(),
-            ..crate::coordinator::ServeConfig::default()
-        },
-        None => crate::coordinator::ServeConfig::default(),
+    let allow_ingest = args.get_flag("ingest");
+    let mut cfg = crate::coordinator::ServeConfig {
+        allow_ingest,
+        max_ingest_batch: cfg_file.get_usize("serve", "max_ingest_batch", 1024),
+        ..crate::coordinator::ServeConfig::default()
     };
+    if let Some(addr) = args.get("addr") {
+        cfg.addr = addr.to_string();
+    }
+    let max_ingest_batch = cfg.max_ingest_batch;
     let server = crate::coordinator::Server::start(out.model, cfg)?;
     println!(
         "serving on {} with {} shard worker(s) — JSON lines: \
          {{\"id\":1,\"op\":\"predict\",\"x\":[[...{} floats...]]}}",
         server.local_addr, shards, d
     );
+    if allow_ingest {
+        println!(
+            "streaming ingest enabled: {{\"id\":2,\"op\":\"ingest\",\"x\":[[...]],\"y\":[...]}} \
+             (incremental up to {max_ingest_batch} coalesced rows, full refit beyond)"
+        );
+    }
     println!("Ctrl-C to stop.");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -170,6 +170,7 @@ shards = 1                # data-parallel lattice shards (0 = auto from cores)
 addr = "127.0.0.1:7788"
 max_batch = 256
 max_wait_ms = 5
+max_ingest_batch = 1024   # largest coalesced ingest absorbed incrementally
 backend = "native"        # { native, pjrt }
 "#;
 
@@ -187,6 +188,7 @@ mod tests {
         assert_eq!(cfg.get_f64("train", "min_noise", 0.0), 1e-4);
         assert_eq!(cfg.get_usize("train", "shards", 0), 1);
         assert_eq!(cfg.get_usize("train", "precond_rank", 0), 100);
+        assert_eq!(cfg.get_usize("serve", "max_ingest_batch", 0), 1024);
     }
 
     #[test]

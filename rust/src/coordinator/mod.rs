@@ -22,23 +22,35 @@
 //!   → {"id": 7, "op": "predict", "x": [[...d floats...], ...]}
 //!   → {"id": 8, "op": "mvm", "v": [...n floats...]}
 //!   → {"id": 9, "op": "stats"}
+//!   → {"id": 10, "op": "ingest", "x": [[...d floats...], ...], "y": [...]}
 //!   ← {"id": 7, "mean": [...], "elapsed_us": 1234}
 //!   ← {"id": 8, "u": [...], "batched_with": 3}
 //!   ← {"id": 9, "n": ..., "m": ..., "d": ..., "shards": ..., "served": ..., "batches": ...,
-//!      "cg_iters": ..., "precond_rank": ...}
+//!      "cg_iters": ..., "precond_rank": ..., "ingested": ..., "rebuilds": ...}
+//!   ← {"id": 10, "ingested": 1, "n": ..., "shard": ..., "rebuild": 0}
 //!
 //! `cg_iters` is the realized CG iteration count of the model's fitting
 //! solve and `precond_rank` the per-shard pivoted-Cholesky rank it ran
 //! with (0 = unpreconditioned) — together they expose the solver cost
 //! behind the served model, so operators can see the preconditioner
 //! paying for itself without rerunning the fit.
+//!
+//! Streaming ingest (`ServeConfig::allow_ingest`, off by default):
+//! concurrent `ingest` requests coalesce like `mvm` requests do, and
+//! one write-locked [`SimplexGp::ingest`] absorbs the whole coalesced
+//! batch — appending to the lightest shard's lattice in place and
+//! re-solving the representer weights on the warm structure. A
+//! coalesced batch larger than `ServeConfig::max_ingest_batch` is past
+//! the incremental sweet spot and triggers a full refit instead; the
+//! `stats` op reports both totals (`ingested` rows, `rebuilds`). After
+//! an ingest, `mvm` vectors must match the *new* n (replies carry `n`).
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -57,6 +69,15 @@ pub struct ServeConfig {
     pub max_wait: Duration,
     /// Bounded queue length (backpressure: writers block when full).
     pub queue_depth: usize,
+    /// Accept `ingest` requests (streaming model mutation). Off by
+    /// default: a serving deployment must opt into mutability.
+    pub allow_ingest: bool,
+    /// Largest coalesced ingest batch absorbed *incrementally*; a
+    /// bigger batch triggers a full refit (`[serve] max_ingest_batch`).
+    pub max_ingest_batch: usize,
+    /// Accept debug ops (`debug_kill_worker`). Test-only: lets the
+    /// deterministic failure-path tests kill a shard worker on demand.
+    pub debug_ops: bool,
 }
 
 impl Default for ServeConfig {
@@ -66,6 +87,9 @@ impl Default for ServeConfig {
             max_batch: 256,
             max_wait: Duration::from_millis(5),
             queue_depth: 1024,
+            allow_ingest: false,
+            max_ingest_batch: 1024,
+            debug_ops: false,
         }
     }
 }
@@ -84,10 +108,35 @@ enum Work {
         v: Vec<f64>,
         reply: SyncSender<String>,
     },
+    Ingest {
+        id: f64,
+        x: Vec<f64>,
+        y: Vec<f64>,
+        rows: usize,
+        reply: SyncSender<String>,
+    },
     Stats {
         id: f64,
         reply: SyncSender<String>,
     },
+    /// Debug-only (`ServeConfig::debug_ops`): kill shard worker `shard`
+    /// so the failure-path tests can exercise the in-thread fallback
+    /// deterministically.
+    KillWorker {
+        id: f64,
+        shard: usize,
+        reply: SyncSender<String>,
+    },
+}
+
+/// Monotonic serving counters, shared between the batcher and the
+/// [`Server`] handle (and reported by the `stats` op).
+#[derive(Default)]
+struct Counters {
+    served: AtomicU64,
+    batches: AtomicU64,
+    ingested: AtomicU64,
+    rebuilds: AtomicU64,
 }
 
 /// Running server handle (owned threads shut down when dropped after
@@ -96,8 +145,7 @@ pub struct Server {
     /// Address the listener actually bound (resolves `:0` requests).
     pub local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    served: Arc<AtomicU64>,
-    batches: Arc<AtomicU64>,
+    counters: Arc<Counters>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     batch_thread: Option<std::thread::JoinHandle<()>>,
 }
@@ -110,19 +158,18 @@ impl Server {
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let served = Arc::new(AtomicU64::new(0));
-        let batches = Arc::new(AtomicU64::new(0));
+        let counters = Arc::new(Counters::default());
         let (tx, rx) = sync_channel::<Work>(cfg.queue_depth);
 
         // Batcher thread owns the model (shared with the shard workers
-        // it spawns).
-        let model = Arc::new(model);
+        // it spawns); the RwLock exists for the streaming-ingest path —
+        // every serving op takes a read lock, ingest takes the write.
+        let model = Arc::new(RwLock::new(model));
         let batch_stop = stop.clone();
-        let batch_served = served.clone();
-        let batch_batches = batches.clone();
+        let batch_counters = counters.clone();
         let batch_cfg = cfg.clone();
         let batch_thread = std::thread::spawn(move || {
-            batch_loop(model, rx, batch_cfg, batch_stop, batch_served, batch_batches);
+            batch_loop(model, rx, batch_cfg, batch_stop, batch_counters);
         });
 
         // Accept loop.
@@ -148,22 +195,32 @@ impl Server {
         Ok(Server {
             local_addr,
             stop,
-            served,
-            batches,
+            counters,
             accept_thread: Some(accept_thread),
             batch_thread: Some(batch_thread),
         })
     }
 
-    /// Requests answered so far (predict + mvm).
+    /// Requests answered so far (predict + mvm + ingest).
     pub fn served(&self) -> u64 {
-        self.served.load(Ordering::Relaxed)
+        self.counters.served.load(Ordering::Relaxed)
     }
 
     /// Coalesced lattice passes executed so far; `served() / batches()`
     /// is the average coalescing factor the dynamic batcher achieved.
     pub fn batches(&self) -> u64 {
-        self.batches.load(Ordering::Relaxed)
+        self.counters.batches.load(Ordering::Relaxed)
+    }
+
+    /// Total training rows absorbed through the `ingest` op.
+    pub fn ingested(&self) -> u64 {
+        self.counters.ingested.load(Ordering::Relaxed)
+    }
+
+    /// Full refits triggered by coalesced ingest batches larger than
+    /// `max_ingest_batch`.
+    pub fn rebuilds(&self) -> u64 {
+        self.counters.rebuilds.load(Ordering::Relaxed)
     }
 
     /// Stop the accept loop and batcher and join their threads.
@@ -279,11 +336,69 @@ fn parse_request(line: &str, reply: &SyncSender<String>) -> Result<Work, String>
                 reply: reply.clone(),
             })
         }
+        Some("ingest") => {
+            let rows_json = json
+                .get("x")
+                .and_then(|v| v.as_arr())
+                .ok_or("ingest needs x: [[...], ...]")?;
+            let mut x = Vec::new();
+            let mut rows = 0;
+            let mut row_len: Option<usize> = None;
+            for row in rows_json {
+                let row = row.as_arr().ok_or("x rows must be arrays")?;
+                // Ragged rows would silently re-chunk into wrong points
+                // downstream (the batcher only checks the aggregate
+                // length) — and unlike predict, ingest *persists* the
+                // corruption into the model. Reject here.
+                match row_len {
+                    None => row_len = Some(row.len()),
+                    Some(l) if l != row.len() => {
+                        return Err("ingest x rows must all have the same length".to_string())
+                    }
+                    Some(_) => {}
+                }
+                for v in row {
+                    x.push(v.as_f64().ok_or("x entries must be numbers")?);
+                }
+                rows += 1;
+            }
+            let y = json
+                .get("y")
+                .and_then(|v| v.as_arr())
+                .ok_or("ingest needs y: [...]")?
+                .iter()
+                .map(|v| v.as_f64().ok_or("y entries must be numbers"))
+                .collect::<Result<Vec<f64>, _>>()?;
+            if y.len() != rows {
+                return Err(format!("ingest y length {} != x rows {rows}", y.len()));
+            }
+            if rows == 0 {
+                return Err("ingest needs at least one row".to_string());
+            }
+            Ok(Work::Ingest {
+                id,
+                x,
+                y,
+                rows,
+                reply: reply.clone(),
+            })
+        }
         Some("stats") => Ok(Work::Stats {
             id,
             reply: reply.clone(),
         }),
-        _ => Err("unknown op (use predict | mvm | stats)".to_string()),
+        Some("debug_kill_worker") => {
+            let shard = json
+                .get("shard")
+                .and_then(|v| v.as_f64())
+                .ok_or("debug_kill_worker needs shard")? as usize;
+            Ok(Work::KillWorker {
+                id,
+                shard,
+                reply: reply.clone(),
+            })
+        }
+        _ => Err("unknown op (use predict | mvm | ingest | stats)".to_string()),
     }
 }
 
@@ -329,8 +444,8 @@ impl ShardPool {
     /// pool for this batch (generous: a shard MVM is milliseconds).
     const RESULT_TIMEOUT: Duration = Duration::from_secs(10);
 
-    fn start(model: &Arc<SimplexGp>) -> ShardPool {
-        let p = model.operator().lattice.shard_count();
+    fn start(model: &Arc<RwLock<SimplexGp>>) -> ShardPool {
+        let p = model.read().unwrap().operator().lattice.shard_count();
         let (res_tx, res_rx) = sync_channel::<(u64, usize, Vec<f64>)>(p.max(1));
         let mut jobs = Vec::new();
         let mut workers = Vec::new();
@@ -344,11 +459,18 @@ impl ShardPool {
                 let res_tx = res_tx.clone();
                 workers.push(std::thread::spawn(move || {
                     // Workers exit when the batcher drops the job senders.
+                    // Each job takes its own read lock: readers coexist
+                    // with the batcher's read lock, and ingest (the only
+                    // writer, on the batcher thread) never runs while a
+                    // job is in flight.
                     while let Ok(job) = rx.recv() {
-                        let part = model
-                            .operator()
-                            .lattice
-                            .shard_mvm_block(shard, &job.v, job.b);
+                        let part = {
+                            let guard = model.read().unwrap();
+                            guard
+                                .operator()
+                                .lattice
+                                .shard_mvm_block(shard, &job.v, job.b)
+                        };
                         if res_tx.send((job.job, shard, part)).is_err() {
                             break;
                         }
@@ -362,6 +484,28 @@ impl ShardPool {
             workers,
             next_job: std::cell::Cell::new(0),
         }
+    }
+
+    /// Kill worker `shard` deterministically (debug/test hook): drop its
+    /// job sender so the worker's `recv` errors and the thread exits,
+    /// then join it. Subsequent `mvm_block` calls see the dead sender,
+    /// return `None`, and the batcher falls back to the in-thread path —
+    /// exactly the degradation a crashed worker would cause, minus the
+    /// nondeterminism.
+    fn kill_worker(&mut self, shard: usize) -> bool {
+        if shard >= self.jobs.len() {
+            return false;
+        }
+        let (dead_tx, dead_rx) = sync_channel::<ShardJob>(1);
+        drop(dead_rx); // sends to dead_tx fail immediately
+        drop(std::mem::replace(&mut self.jobs[shard], dead_tx));
+        if shard < self.workers.len() {
+            // Detach rather than join: a worker mid-send on a full
+            // results channel would block a join; dropping the handle
+            // lets it exit on its own once its recv errors.
+            drop(self.workers.remove(shard));
+        }
+        true
     }
 
     /// Route one coalesced `b × n` block to the shard workers and
@@ -412,7 +556,8 @@ impl ShardPool {
 }
 
 /// Work accumulated by the batcher between flushes: coalesced
-/// prediction rows plus a coalesced block of raw MVM right-hand sides.
+/// prediction rows plus a coalesced block of raw MVM right-hand sides
+/// plus a coalesced ingest batch.
 #[derive(Default)]
 struct Batch {
     /// (id, rows, reply, enqueued) per pending predict request.
@@ -425,34 +570,42 @@ struct Batch {
     /// Row-major `b × n` block of mvm vectors awaiting one batched
     /// lattice pass.
     mvm_v: Vec<f64>,
+    /// (id, rows, reply) per pending ingest request.
+    ingests: Vec<(f64, usize, SyncSender<String>)>,
+    /// Concatenated ingest inputs/targets awaiting one model update.
+    ingest_x: Vec<f64>,
+    ingest_y: Vec<f64>,
 }
 
 impl Batch {
     /// Total coalesced work units (caps the fill loop).
     fn units(&self) -> usize {
-        self.predict_rows + self.mvms.len()
+        self.predict_rows + self.mvms.len() + self.ingest_y.len()
     }
 
     fn is_empty(&self) -> bool {
-        self.predicts.is_empty() && self.mvms.is_empty()
+        self.predicts.is_empty() && self.mvms.is_empty() && self.ingests.is_empty()
     }
 }
 
 /// Execute everything queued in `batch` — one slice pass for all
-/// prediction rows, one shard-routed block MVM for all mvm vectors —
-/// and reply.
+/// prediction rows, one shard-routed block MVM for all mvm vectors,
+/// one model update for all ingest rows — and reply. Ingest runs LAST
+/// so the batch's predict/mvm work (validated against the pre-ingest n)
+/// executes against the model it was addressed to. Returns `true` when
+/// the model was fully rebuilt (the pool may need restarting).
 fn flush_batch(
     batch: &mut Batch,
-    served: &AtomicU64,
-    batches: &AtomicU64,
-    model: &SimplexGp,
+    counters: &Counters,
+    model: &Arc<RwLock<SimplexGp>>,
     pool: &ShardPool,
-) {
+    cfg: &ServeConfig,
+) -> bool {
     if !batch.predicts.is_empty() {
         let t0 = Instant::now();
-        let mean = model.predict_mean(&batch.predict_x);
+        let mean = model.read().unwrap().predict_mean(&batch.predict_x);
         let elapsed_us = t0.elapsed().as_micros() as f64;
-        batches.fetch_add(1, Ordering::Relaxed);
+        counters.batches.fetch_add(1, Ordering::Relaxed);
         let mut cursor = 0usize;
         for (id, rows, reply, enqueued) in batch.predicts.drain(..) {
             let slice = &mean[cursor..cursor + rows];
@@ -467,7 +620,7 @@ fn flush_batch(
             );
             // Count before sending: clients may observe the reply (and a
             // test may read the counter) the instant send returns.
-            served.fetch_add(1, Ordering::Relaxed);
+            counters.served.fetch_add(1, Ordering::Relaxed);
             let _ = reply.send(Json::Obj(obj).to_string());
         }
         batch.predict_x.clear();
@@ -475,95 +628,216 @@ fn flush_batch(
     }
     if !batch.mvms.is_empty() {
         let b = batch.mvms.len();
-        let n = model.n_train();
-        let lat = &model.operator().lattice;
+        let guard = model.read().unwrap();
+        let n = guard.n_train();
+        let lat = &guard.operator().lattice;
         // One batched splat→blur→slice per shard worker for all b
         // concurrent MVM requests, routed over the pool's channels;
         // byte-identical to the direct in-process sharded MVM (same
-        // per-shard arithmetic, shard-ordered reassembly).
+        // per-shard arithmetic, shard-ordered reassembly). Worker read
+        // locks coexist with ours.
         let v = Arc::new(std::mem::take(&mut batch.mvm_v));
         let u = pool
             .mvm_block(lat, &v, b)
             .unwrap_or_else(|| lat.mvm_block(&v, b));
-        batches.fetch_add(1, Ordering::Relaxed);
+        drop(guard);
+        counters.batches.fetch_add(1, Ordering::Relaxed);
         for (k, (id, reply)) in batch.mvms.drain(..).enumerate() {
             let mut obj = BTreeMap::new();
             obj.insert("id".to_string(), Json::Num(id));
             obj.insert("u".to_string(), json_num_array(&u[k * n..(k + 1) * n]));
             obj.insert("batched_with".to_string(), Json::Num(b as f64));
-            served.fetch_add(1, Ordering::Relaxed);
+            counters.served.fetch_add(1, Ordering::Relaxed);
             let _ = reply.send(Json::Obj(obj).to_string());
         }
     }
+    let mut rebuilt = false;
+    if !batch.ingests.is_empty() {
+        let x = std::mem::take(&mut batch.ingest_x);
+        let y = std::mem::take(&mut batch.ingest_y);
+        let rows = y.len();
+        let mut guard = model.write().unwrap();
+        let result: Result<(usize, bool)> = if rows > cfg.max_ingest_batch {
+            // Past the incremental sweet spot: one full refit absorbs
+            // the whole coalesced batch (appended at the end — the
+            // rebuild repartitions anyway).
+            let d = guard.d;
+            let mut xs = guard.x_train.clone();
+            xs.extend_from_slice(&x);
+            let mut ys = guard.y_train.clone();
+            ys.extend_from_slice(&y);
+            SimplexGp::fit(
+                &xs,
+                &ys,
+                d,
+                guard.kernel.clone(),
+                guard.noise,
+                guard.config.clone(),
+            )
+            .map(|fresh| {
+                *guard = fresh;
+                counters.rebuilds.fetch_add(1, Ordering::Relaxed);
+                rebuilt = true;
+                (0usize, true)
+            })
+        } else {
+            guard.ingest(&x, &y).map(|out| (out.shard, false))
+        };
+        let n_now = guard.n_train();
+        drop(guard);
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        match result {
+            Ok((shard, was_rebuild)) => {
+                counters.ingested.fetch_add(rows as u64, Ordering::Relaxed);
+                for (id, req_rows, reply) in batch.ingests.drain(..) {
+                    let mut obj = BTreeMap::new();
+                    obj.insert("id".to_string(), Json::Num(id));
+                    obj.insert("ingested".to_string(), Json::Num(req_rows as f64));
+                    obj.insert("n".to_string(), Json::Num(n_now as f64));
+                    obj.insert("shard".to_string(), Json::Num(shard as f64));
+                    obj.insert(
+                        "rebuild".to_string(),
+                        Json::Num(if was_rebuild { 1.0 } else { 0.0 }),
+                    );
+                    counters.served.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Json::Obj(obj).to_string());
+                }
+            }
+            Err(e) => {
+                let msg = Json::Str(format!("ingest failed: {e}"));
+                for (id, _, reply) in batch.ingests.drain(..) {
+                    let _ = reply.send(format!("{{\"id\":{id},\"error\":{msg}}}"));
+                }
+            }
+        }
+    }
+    rebuilt
 }
 
-/// The batcher: coalesce predictions and MVMs, route to the shard
-/// workers, reply.
+/// The batcher: coalesce predictions, MVMs and ingests, route to the
+/// shard workers, reply. The only thread that ever takes the model's
+/// write lock (ingest / rebuild), so reads can never deadlock with it.
 fn batch_loop(
-    model: Arc<SimplexGp>,
+    model: Arc<RwLock<SimplexGp>>,
     rx: Receiver<Work>,
     cfg: ServeConfig,
     stop: Arc<AtomicBool>,
-    served: Arc<AtomicU64>,
-    batches: Arc<AtomicU64>,
+    counters: Arc<Counters>,
 ) {
-    let d = model.d;
-    let pool = ShardPool::start(&model);
+    let d = model.read().unwrap().d;
+    let mut pool = ShardPool::start(&model);
     let mut batch = Batch::default();
+    // Debug kill requests drain after the flush so in-flight batches
+    // complete on the live pool first (deterministic ordering for the
+    // failure-path tests).
+    let mut kills: Vec<(f64, usize, SyncSender<String>)> = Vec::new();
 
-    let handle = |w: Work, batch: &mut Batch| match w {
-        Work::Predict {
-            id,
-            x,
-            rows,
-            reply,
-            enqueued,
-        } => {
-            if x.len() != rows * d {
-                let _ = reply.send(format!(
-                    "{{\"id\":{id},\"error\":\"expected {d} features per row\"}}"
-                ));
-                return;
+    let handle = |w: Work, batch: &mut Batch, kills: &mut Vec<(f64, usize, SyncSender<String>)>| {
+        match w {
+            Work::Predict {
+                id,
+                x,
+                rows,
+                reply,
+                enqueued,
+            } => {
+                if x.len() != rows * d {
+                    let _ = reply.send(format!(
+                        "{{\"id\":{id},\"error\":\"expected {d} features per row\"}}"
+                    ));
+                    return;
+                }
+                batch.predict_x.extend_from_slice(&x);
+                batch.predict_rows += rows;
+                batch.predicts.push((id, rows, reply, enqueued));
             }
-            batch.predict_x.extend_from_slice(&x);
-            batch.predict_rows += rows;
-            batch.predicts.push((id, rows, reply, enqueued));
-        }
-        Work::Mvm { id, v, reply } => {
-            if v.len() != model.n_train() {
-                let _ = reply.send(format!(
-                    "{{\"id\":{id},\"error\":\"mvm vector must have length {}\"}}",
-                    model.n_train()
-                ));
-                return;
+            Work::Mvm { id, v, reply } => {
+                let n = model.read().unwrap().n_train();
+                if v.len() != n {
+                    let _ = reply.send(format!(
+                        "{{\"id\":{id},\"error\":\"mvm vector must have length {n}\"}}"
+                    ));
+                    return;
+                }
+                batch.mvm_v.extend_from_slice(&v);
+                batch.mvms.push((id, reply));
             }
-            batch.mvm_v.extend_from_slice(&v);
-            batch.mvms.push((id, reply));
-        }
-        Work::Stats { id, reply } => {
-            let mut obj = BTreeMap::new();
-            obj.insert("id".to_string(), Json::Num(id));
-            obj.insert("n".to_string(), Json::Num(model.n_train() as f64));
-            obj.insert("m".to_string(), Json::Num(model.lattice_points() as f64));
-            obj.insert("d".to_string(), Json::Num(d as f64));
-            obj.insert("shards".to_string(), Json::Num(model.shards() as f64));
-            obj.insert(
-                "cg_iters".to_string(),
-                Json::Num(model.fit_iterations as f64),
-            );
-            obj.insert(
-                "precond_rank".to_string(),
-                Json::Num(model.precond_rank() as f64),
-            );
-            obj.insert(
-                "served".to_string(),
-                Json::Num(served.load(Ordering::Relaxed) as f64),
-            );
-            obj.insert(
-                "batches".to_string(),
-                Json::Num(batches.load(Ordering::Relaxed) as f64),
-            );
-            let _ = reply.send(Json::Obj(obj).to_string());
+            Work::Ingest {
+                id,
+                x,
+                y,
+                rows,
+                reply,
+            } => {
+                if !cfg.allow_ingest {
+                    let _ = reply.send(format!(
+                        "{{\"id\":{id},\"error\":\"ingest disabled (start the server with ingest enabled)\"}}"
+                    ));
+                    return;
+                }
+                if x.len() != rows * d {
+                    let _ = reply.send(format!(
+                        "{{\"id\":{id},\"error\":\"expected {d} features per row\"}}"
+                    ));
+                    return;
+                }
+                // A single NaN/Inf would flow through the re-solve into
+                // α and poison every later prediction — reject before
+                // mutating the model.
+                if x.iter().chain(y.iter()).any(|v| !v.is_finite()) {
+                    let _ = reply.send(format!(
+                        "{{\"id\":{id},\"error\":\"ingest values must be finite\"}}"
+                    ));
+                    return;
+                }
+                batch.ingest_x.extend_from_slice(&x);
+                batch.ingest_y.extend_from_slice(&y);
+                batch.ingests.push((id, rows, reply));
+            }
+            Work::Stats { id, reply } => {
+                let guard = model.read().unwrap();
+                let mut obj = BTreeMap::new();
+                obj.insert("id".to_string(), Json::Num(id));
+                obj.insert("n".to_string(), Json::Num(guard.n_train() as f64));
+                obj.insert("m".to_string(), Json::Num(guard.lattice_points() as f64));
+                obj.insert("d".to_string(), Json::Num(d as f64));
+                obj.insert("shards".to_string(), Json::Num(guard.shards() as f64));
+                obj.insert(
+                    "cg_iters".to_string(),
+                    Json::Num(guard.fit_iterations as f64),
+                );
+                obj.insert(
+                    "precond_rank".to_string(),
+                    Json::Num(guard.precond_rank() as f64),
+                );
+                drop(guard);
+                obj.insert(
+                    "served".to_string(),
+                    Json::Num(counters.served.load(Ordering::Relaxed) as f64),
+                );
+                obj.insert(
+                    "batches".to_string(),
+                    Json::Num(counters.batches.load(Ordering::Relaxed) as f64),
+                );
+                obj.insert(
+                    "ingested".to_string(),
+                    Json::Num(counters.ingested.load(Ordering::Relaxed) as f64),
+                );
+                obj.insert(
+                    "rebuilds".to_string(),
+                    Json::Num(counters.rebuilds.load(Ordering::Relaxed) as f64),
+                );
+                let _ = reply.send(Json::Obj(obj).to_string());
+            }
+            Work::KillWorker { id, shard, reply } => {
+                if !cfg.debug_ops {
+                    let _ = reply.send(format!(
+                        "{{\"id\":{id},\"error\":\"debug ops disabled\"}}"
+                    ));
+                    return;
+                }
+                kills.push((id, shard, reply));
+            }
         }
     };
 
@@ -575,16 +849,17 @@ fn batch_loop(
             Err(_) => break,
         };
         let deadline = Instant::now() + cfg.max_wait;
-        handle(first, &mut batch);
-        // Fill the batch until deadline or capacity.
-        while batch.units() < cfg.max_batch {
+        handle(first, &mut batch, &mut kills);
+        // Fill the batch until deadline or capacity (a pending kill
+        // flushes immediately so its ordering stays deterministic).
+        while batch.units() < cfg.max_batch && kills.is_empty() {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(w) => {
-                    handle(w, &mut batch);
+                    handle(w, &mut batch, &mut kills);
                     if batch.units() >= cfg.max_batch {
                         break;
                     }
@@ -593,11 +868,25 @@ fn batch_loop(
             }
         }
         if !batch.is_empty() {
-            flush_batch(&mut batch, &served, &batches, &model, &pool);
+            let rebuilt = flush_batch(&mut batch, &counters, &model, &pool, &cfg);
+            if rebuilt {
+                // A full refit may have changed the shard count (auto
+                // sharding scales with n): restart the worker pool
+                // against the fresh model.
+                let old = std::mem::replace(&mut pool, ShardPool::start(&model));
+                old.shutdown();
+            }
+        }
+        for (id, shard, reply) in kills.drain(..) {
+            let ok = pool.kill_worker(shard);
+            let _ = reply.send(format!(
+                "{{\"id\":{id},\"killed\":{}}}",
+                if ok { 1 } else { 0 }
+            ));
         }
     }
     if !batch.is_empty() {
-        flush_batch(&mut batch, &served, &batches, &model, &pool);
+        flush_batch(&mut batch, &counters, &model, &pool, &cfg);
     }
     pool.shutdown();
 }
@@ -673,7 +962,31 @@ impl Client {
             .collect())
     }
 
-    /// Server statistics (`n`, `m`, `d`, `served`, `batches`).
+    /// Stream `rows × d` training inputs + targets into the served
+    /// model (requires a server started with ingest enabled). Returns
+    /// the model's new training-set size n.
+    pub fn ingest(&mut self, x: &[f64], y: &[f64], d: usize) -> Result<usize> {
+        let id = self.next_id;
+        self.next_id += 1.0;
+        let rows: Vec<Json> = x.chunks(d).map(json_num_array).collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("id".to_string(), Json::Num(id));
+        obj.insert("op".to_string(), Json::Str("ingest".to_string()));
+        obj.insert("x".to_string(), Json::Arr(rows));
+        obj.insert("y".to_string(), json_num_array(y));
+        let reply = self.roundtrip(Json::Obj(obj).to_string())?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        reply
+            .get("n")
+            .and_then(|v| v.as_f64())
+            .map(|n| n as usize)
+            .ok_or_else(|| anyhow!("reply missing n"))
+    }
+
+    /// Server statistics (`n`, `m`, `d`, `served`, `batches`,
+    /// `ingested`, `rebuilds`, ...).
     pub fn stats(&mut self) -> Result<Json> {
         let id = self.next_id;
         self.next_id += 1.0;
@@ -837,6 +1150,247 @@ mod tests {
             "no coalescing: {} batches for 6 mvm requests",
             server.batches()
         );
+        server.shutdown();
+    }
+
+    fn sharded_model(shards: usize) -> SimplexGp {
+        let d = 2;
+        let mut rng = Pcg64::new(31);
+        let x: Vec<f64> = (0..240 * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..240)
+            .map(|i| (x[i * d]).sin() + 0.05 * rng.normal())
+            .collect();
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let cfg = GpConfig {
+            shards,
+            ..GpConfig::default()
+        };
+        SimplexGp::fit(&x, &y, d, kernel, 0.05, cfg).unwrap()
+    }
+
+    #[test]
+    fn ingest_roundtrip_updates_model_and_stats() {
+        let model = tiny_model();
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_ingest: true,
+            ..ServeConfig::default()
+        };
+        let server = Server::start(model, cfg).unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let n = client.ingest(&[0.3, -0.2, 1.1, 0.4], &[0.25, 0.9], 2).unwrap();
+        assert_eq!(n, 202);
+        // The model serves predictions at the new size, and stats
+        // report the stream totals.
+        let got = client.predict(&[0.3, -0.2], 2).unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(got[0].is_finite());
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("n").and_then(|v| v.as_f64()), Some(202.0));
+        assert_eq!(stats.get("ingested").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(stats.get("rebuilds").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(server.ingested(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_ingest_rejected_without_mutating_model() {
+        let model = tiny_model();
+        let server = Server::start(
+            model,
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                allow_ingest: true,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let stream = TcpStream::connect(server.local_addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        // Ragged rows: aggregate length would pass (1 + 3 = 2·2) but the
+        // per-row shapes are wrong — must be rejected at parse time.
+        writer
+            .write_all(b"{\"id\":1,\"op\":\"ingest\",\"x\":[[1.0],[2.0,3.0,4.0]],\"y\":[0.1,0.2]}\n")
+            .unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("same length"), "got: {line}");
+        // Non-finite values must be rejected before touching the model.
+        writer
+            .write_all(
+                b"{\"id\":2,\"op\":\"ingest\",\"x\":[[1.0,2.0]],\"y\":[1e999]}\n",
+            )
+            .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("finite"), "got: {line}");
+        // The model is untouched and still serving.
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("n").and_then(|v| v.as_f64()), Some(200.0));
+        assert_eq!(stats.get("ingested").and_then(|v| v.as_f64()), Some(0.0));
+        let got = client.predict(&[0.1, 0.2], 2).unwrap();
+        assert!(got[0].is_finite());
+        server.shutdown();
+    }
+
+    #[test]
+    fn ingest_disabled_by_default() {
+        let model = tiny_model();
+        let server = Server::start(
+            model,
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let err = client.ingest(&[0.0, 0.0], &[0.0], 2).unwrap_err();
+        assert!(err.to_string().contains("ingest disabled"), "{err}");
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("n").and_then(|v| v.as_f64()), Some(200.0));
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_ingest_batch_triggers_full_rebuild() {
+        let model = tiny_model();
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_ingest: true,
+            max_ingest_batch: 3,
+            ..ServeConfig::default()
+        };
+        let server = Server::start(model, cfg).unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let mut rng = Pcg64::new(41);
+        let rows = 8; // > max_ingest_batch ⇒ refit path
+        let x: Vec<f64> = (0..rows * 2).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let n = client.ingest(&x, &y, 2).unwrap();
+        assert_eq!(n, 200 + rows);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("rebuilds").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(
+            stats.get("ingested").and_then(|v| v.as_f64()),
+            Some(rows as f64)
+        );
+        // Still serving after the rebuild.
+        let got = client.predict(&x[..2], 2).unwrap();
+        assert!(got[0].is_finite());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shard_pool_fallback_is_byte_identical_after_worker_death() {
+        // The direct ShardPool contract: a killed worker makes
+        // mvm_block return None, and the batcher's fallback result is
+        // byte-identical to what the pool produced before the death.
+        let model = Arc::new(RwLock::new(sharded_model(2)));
+        let mut pool = ShardPool::start(&model);
+        let guard = model.read().unwrap();
+        let n = guard.n_train();
+        let lat = &guard.operator().lattice;
+        let mut rng = Pcg64::new(51);
+        let b = 3;
+        let v = Arc::new(rng.normal_vec(n * b));
+        let direct = lat.mvm_block(&v, b);
+        let via_pool = pool.mvm_block(lat, &v, b).expect("live pool must answer");
+        for i in 0..n * b {
+            assert_eq!(via_pool[i].to_bits(), direct[i].to_bits(), "row {i}");
+        }
+        drop(guard);
+        assert!(pool.kill_worker(0));
+        let guard = model.read().unwrap();
+        let lat = &guard.operator().lattice;
+        assert!(
+            pool.mvm_block(lat, &v, b).is_none(),
+            "dead worker must abandon the pool path"
+        );
+        // The caller's fallback (exactly what flush_batch runs).
+        let fallback = lat.mvm_block(&v, b);
+        for i in 0..n * b {
+            assert_eq!(fallback[i].to_bits(), direct[i].to_bits(), "row {i}");
+        }
+        drop(guard);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn killed_worker_degrades_to_byte_identical_replies_end_to_end() {
+        // Full-stack deterministic failure path: kill shard worker 0
+        // mid-stream via the debug op; replies before and after must be
+        // byte-identical (float bits survive the JSON round trip) and
+        // stats must stay coherent.
+        let model = sharded_model(2);
+        let direct = {
+            let mut rng = Pcg64::new(61);
+            let v = rng.normal_vec(model.n_train());
+            (v.clone(), model.operator().lattice.mvm(&v))
+        };
+        let server = Server::start(
+            model,
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                debug_ops: true,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let before = client.mvm(&direct.0).unwrap();
+        for i in 0..before.len() {
+            assert_eq!(before[i].to_bits(), direct.1[i].to_bits(), "pre-kill row {i}");
+        }
+        // Kill worker 0 (raw request — the op is debug-only).
+        let stream = TcpStream::connect(server.local_addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writer
+            .write_all(b"{\"id\":99,\"op\":\"debug_kill_worker\",\"shard\":0}\n")
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"killed\":1"), "got: {line}");
+        // Mid-stream: the same MVM must still be answered, byte-identical,
+        // through the in-thread fallback.
+        let after = client.mvm(&direct.0).unwrap();
+        for i in 0..after.len() {
+            assert_eq!(after[i].to_bits(), direct.1[i].to_bits(), "post-kill row {i}");
+        }
+        let stats = client.stats().unwrap();
+        // `shards` reports the model's partition count (not live
+        // workers) and the batch counters keep advancing coherently.
+        assert_eq!(stats.get("shards").and_then(|v| v.as_f64()), Some(2.0));
+        let batches = stats.get("batches").and_then(|v| v.as_f64()).unwrap();
+        let served = stats.get("served").and_then(|v| v.as_f64()).unwrap();
+        assert!(served >= 2.0, "served={served}");
+        assert!(batches >= 2.0 && batches <= served, "batches={batches}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn debug_ops_rejected_when_disabled() {
+        let model = sharded_model(2);
+        let server = Server::start(
+            model,
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let stream = TcpStream::connect(server.local_addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writer
+            .write_all(b"{\"id\":1,\"op\":\"debug_kill_worker\",\"shard\":0}\n")
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("debug ops disabled"), "got: {line}");
         server.shutdown();
     }
 

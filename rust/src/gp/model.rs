@@ -5,7 +5,7 @@
 use anyhow::{ensure, Result};
 
 use crate::kernels::ArdKernel;
-use crate::mvm::{Shifted, ShardedMvm};
+use crate::mvm::{MvmOperator, Shifted, ShardedMvm};
 use crate::solvers::{
     cg_block_precond, slq_logdet, CgOptions, Precond, ShardedPivCholPrecond,
 };
@@ -91,36 +91,60 @@ impl SimplexGp {
     ) -> Result<Self> {
         ensure!(d >= 1, "d must be positive");
         ensure!(x.len() % d == 0, "x length not a multiple of d");
+        let op = ShardedMvm::build(x, d, &kernel, config.order, config.shards)
+            .with_symmetrize(config.symmetrize);
+        Self::fit_from_operator(x, y, d, kernel, noise, config, op, None)
+    }
+
+    /// Fit from an **already-built** operator (and, optionally, its
+    /// matching preconditioner) — the warm-start entry point.
+    ///
+    /// Two callers need this: the trainer, which has just built the
+    /// epoch's sharded operator + factors for the training solve and
+    /// should not build them again for the per-epoch eval fit (the
+    /// former double build, ARCHITECTURE.md §Streaming ingest), and the
+    /// streaming-ingest path, which patches the operator in place and
+    /// re-solves on the warm structure ([`SimplexGp::ingest`]).
+    ///
+    /// Contracts: `op` must have been built from exactly `(x, kernel,
+    /// config.order, config.shards)` — its `symmetrize` setting wins
+    /// over `config.symmetrize` (the operator is used as-is). `precond`,
+    /// when given, must be built against `op`'s shard partition and this
+    /// `(kernel, noise)`; when `None` and `config.precond_rank > 0` the
+    /// factors are built here (so `SimplexGp::fit` delegates to this
+    /// unchanged, bit for bit).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit_from_operator(
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+        kernel: ArdKernel,
+        noise: f64,
+        config: GpConfig,
+        op: ShardedMvm,
+        precond: Option<ShardedPivCholPrecond>,
+    ) -> Result<Self> {
+        ensure!(d >= 1, "d must be positive");
+        ensure!(x.len() % d == 0, "x length not a multiple of d");
         let n = x.len() / d;
         ensure!(y.len() == n, "y length {} != n {}", y.len(), n);
         ensure!(noise > 0.0, "noise must be positive");
-        let op = ShardedMvm::build(x, d, &kernel, config.order, config.shards)
-            .with_symmetrize(config.symmetrize);
+        ensure!(op.len() == n, "operator dimension {} != n {}", op.len(), n);
         // Per-shard pivoted Cholesky of the exact kernel + σ²I — exact
         // block structure for the sharded operator; rank 0 keeps the
         // existing unpreconditioned path bit for bit.
-        let precond = if config.precond_rank > 0 {
-            Some(op.build_precond(x, &kernel, config.precond_rank, noise))
-        } else {
-            None
+        let precond = match precond {
+            Some(pc) => {
+                ensure!(pc.len() == n, "preconditioner dimension mismatch");
+                Some(pc)
+            }
+            None if config.precond_rank > 0 => {
+                Some(op.build_precond(x, &kernel, config.precond_rank, noise))
+            }
+            None => None,
         };
-        let shifted = Shifted::new(&op, noise);
-        let opts = CgOptions {
-            tol: config.cg_tol,
-            max_iters: config.cg_max_iters,
-            min_iters: 1,
-        };
-        // One solver entry point for both paths: with None this runs
-        // single-RHS CG's exact floating-point sequence (pinned by
-        // `rust/tests/precond_equivalence.rs`).
-        let res = cg_block_precond(
-            &shifted,
-            y,
-            1,
-            opts,
-            precond.as_ref().map(|pc| pc as &dyn Precond),
-        );
-        let (alpha, fit_iterations) = (res.x, res.iterations);
+        let (alpha, fit_iterations) =
+            Self::solve_alpha(&op, precond.as_ref(), y, noise, &config);
         let z_pred = op.lattice.splat_blur(&alpha, 1);
         Ok(SimplexGp {
             kernel,
@@ -135,6 +159,96 @@ impl SimplexGp {
             z_pred,
             fit_iterations,
         })
+    }
+
+    /// The representer-weight solve α = (K̂+σ²I)⁻¹y — one entry point
+    /// shared by [`SimplexGp::fit_from_operator`] and
+    /// [`SimplexGp::ingest`]. With no preconditioner this runs
+    /// single-RHS CG's exact floating-point sequence (pinned by
+    /// `rust/tests/precond_equivalence.rs`).
+    fn solve_alpha(
+        op: &ShardedMvm,
+        precond: Option<&ShardedPivCholPrecond>,
+        y: &[f64],
+        noise: f64,
+        config: &GpConfig,
+    ) -> (Vec<f64>, usize) {
+        let shifted = Shifted::new(op, noise);
+        let opts = CgOptions {
+            tol: config.cg_tol,
+            max_iters: config.cg_max_iters,
+            min_iters: 1,
+        };
+        let res = cg_block_precond(
+            &shifted,
+            y,
+            1,
+            opts,
+            precond.map(|pc| pc as &dyn Precond),
+        );
+        (res.x, res.iterations)
+    }
+
+    /// Streaming ingest: absorb `(x_new, y_new)` into the fitted model
+    /// without rebuilding anything that can be patched.
+    ///
+    /// What is **patched**: the owning shard's lattice
+    /// ([`ShardedMvm::ingest`] — append offsets/weights, intern only new
+    /// keys, patch blur adjacency for affected keys; bitwise-equal to a
+    /// rebuild of that shard), the training set (`x_new`/`y_new` spliced
+    /// at the owning shard's segment end so row order keeps matching the
+    /// operator), and — when preconditioning is on — *only* the ingested
+    /// shard's pivoted-Cholesky factor
+    /// ([`ShardedPivCholPrecond::refresh_shard`]).
+    ///
+    /// What is **recomputed**: the representer weights α (a fresh CG
+    /// solve on the patched operator at the fit tolerance — the warm
+    /// *structure* is what streaming saves; the weights are global) and
+    /// the cached prediction state `z_pred` (one splat+blur).
+    ///
+    /// Returns where the rows landed (shard / global row index).
+    pub fn ingest(&mut self, x_new: &[f64], y_new: &[f64]) -> Result<crate::lattice::IngestOutcome> {
+        ensure!(
+            x_new.len() % self.d == 0,
+            "x_new length not a multiple of d"
+        );
+        let rows = x_new.len() / self.d;
+        ensure!(rows >= 1, "ingest needs at least one row");
+        ensure!(
+            y_new.len() == rows,
+            "y_new length {} != rows {}",
+            y_new.len(),
+            rows
+        );
+        let outcome = self.op.ingest(x_new, &self.kernel);
+        let at = outcome.row_start;
+        self.x_train
+            .splice(at * self.d..at * self.d, x_new.iter().copied());
+        self.y_train.splice(at..at, y_new.iter().copied());
+        if let Some(pc) = self.precond.as_mut() {
+            let bounds = self.op.shard_bounds();
+            let (s0, s1) = (bounds[outcome.shard], bounds[outcome.shard + 1]);
+            pc.refresh_shard(
+                outcome.shard,
+                &self.x_train[s0 * self.d..s1 * self.d],
+                self.d,
+                &self.kernel,
+                self.config.precond_rank,
+                self.noise,
+                bounds,
+            );
+        }
+        let (alpha, iters) = Self::solve_alpha(
+            &self.op,
+            self.precond.as_ref(),
+            &self.y_train,
+            self.noise,
+            &self.config,
+        );
+        self.alpha = alpha;
+        self.fit_iterations = iters;
+        self.z_pred = self.op.lattice.splat_blur(&self.alpha, 1);
+        Ok(outcome)
     }
 
     pub fn n_train(&self) -> usize {
@@ -383,6 +497,99 @@ mod tests {
             rel < 0.15,
             "mll approx {approx_mll} vs exact {exact_mll} (rel {rel})"
         );
+    }
+
+    #[test]
+    fn fit_from_operator_bitwise_equals_fit() {
+        let d = 2;
+        let (x, y) = toy_problem(200, d, 8);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.6);
+        let noise = 0.05;
+        for rank in [0usize, 15] {
+            let cfg = GpConfig {
+                precond_rank: rank,
+                shards: 2,
+                ..GpConfig::default()
+            };
+            let plain = SimplexGp::fit(&x, &y, d, kernel.clone(), noise, cfg.clone()).unwrap();
+            let op = ShardedMvm::build(&x, d, &kernel, cfg.order, cfg.shards)
+                .with_symmetrize(cfg.symmetrize);
+            let pc = (rank > 0).then(|| op.build_precond(&x, &kernel, rank, noise));
+            let warm =
+                SimplexGp::fit_from_operator(&x, &y, d, kernel.clone(), noise, cfg, op, pc)
+                    .unwrap();
+            assert_eq!(plain.alpha(), warm.alpha(), "rank {rank}");
+            assert_eq!(plain.fit_iterations, warm.fit_iterations);
+        }
+    }
+
+    #[test]
+    fn ingest_bitwise_equals_refit_at_p1() {
+        // P = 1: ingest appends at the end, the patched lattice is
+        // bitwise the rebuilt one, so the re-solved α (and predictions)
+        // must equal a from-scratch fit on the concatenated data.
+        let d = 2;
+        let (x, y) = toy_problem(220, d, 9);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let noise = 0.05;
+        for rank in [0usize, 10] {
+            let cfg = GpConfig {
+                precond_rank: rank,
+                ..GpConfig::default()
+            };
+            let mut gp = SimplexGp::fit(
+                &x[..200 * d],
+                &y[..200],
+                d,
+                kernel.clone(),
+                noise,
+                cfg.clone(),
+            )
+            .unwrap();
+            let out = gp.ingest(&x[200 * d..], &y[200..]).unwrap();
+            assert_eq!(out.shard, 0);
+            assert_eq!(out.row_start, 200);
+            assert_eq!(gp.n_train(), 220);
+            let refit = SimplexGp::fit(&x, &y, d, kernel.clone(), noise, cfg).unwrap();
+            assert_eq!(gp.alpha(), refit.alpha(), "rank {rank}");
+            assert_eq!(gp.fit_iterations, refit.fit_iterations);
+            let probe = &x[..8 * d];
+            assert_eq!(gp.predict_mean(probe), refit.predict_mean(probe));
+        }
+    }
+
+    #[test]
+    fn sharded_ingest_keeps_row_alignment_and_predicts() {
+        // P = 2: rows land mid-array (lightest shard); the spliced
+        // training set must stay aligned with the operator rows, so
+        // training-point predictions keep tracking the targets.
+        let d = 2;
+        let (x, y) = toy_problem(300, d, 10);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let cfg = GpConfig {
+            shards: 2,
+            precond_rank: 8,
+            ..GpConfig::default()
+        };
+        let mut gp =
+            SimplexGp::fit(&x[..280 * d], &y[..280], d, kernel, 0.05, cfg).unwrap();
+        let out = gp.ingest(&x[280 * d..], &y[280..]).unwrap();
+        assert_eq!(out.rows, 20);
+        assert!(out.shard < 2);
+        assert_eq!(gp.n_train(), 300);
+        // The ingested rows are in the training set at row_start.
+        for i in 0..20 {
+            let r = out.row_start + i;
+            assert_eq!(gp.y_train[r], y[280 + i]);
+            assert_eq!(
+                &gp.x_train[r * d..(r + 1) * d],
+                &x[(280 + i) * d..(281 + i) * d]
+            );
+        }
+        let pred = gp.predict_mean(&gp.x_train.clone());
+        let err = rmse(&pred, &gp.y_train);
+        let base = rmse(&vec![0.0; gp.n_train()], &gp.y_train);
+        assert!(err < 0.6 * base, "post-ingest rmse {err} vs baseline {base}");
     }
 
     #[test]

@@ -186,6 +186,18 @@ pub fn train(
         let op = ShardedMvm::build(x, d, &kernel, cfg.order, cfg.shards).with_symmetrize(true);
         let shifted = Shifted::new(&op, noise);
 
+        // Per-shard pivoted Cholesky for this epoch's hyperparameters —
+        // ONE factor set serves both the training solve (the whole
+        // target+probes bundle) and the per-epoch eval fit below via
+        // `fit_from_operator` (rank 0 = off, bitwise the
+        // unpreconditioned path). RR-CG ignores it for the training
+        // solve by design; the eval fit still uses it.
+        let precond = if cfg.precond_rank > 0 {
+            Some(op.build_precond(x, &kernel, cfg.precond_rank, noise))
+        } else {
+            None
+        };
+
         // --- Solves: α = K̂⁻¹y and probe solves K̂⁻¹z_k, all in ONE
         // block-CG run: RHS 0 is the target, RHS 1..=p the Hutchinson
         // probes, so every Krylov iteration costs a single lattice pass
@@ -200,15 +212,6 @@ pub fn train(
                 for (k, z) in probes.iter().enumerate() {
                     rhs[(k + 1) * n..(k + 2) * n].copy_from_slice(z);
                 }
-                // Per-shard pivoted Cholesky for this epoch's
-                // hyperparameters — one factor set preconditions the
-                // whole target+probes bundle (rank 0 = off, bitwise
-                // the unpreconditioned path).
-                let precond = if cfg.precond_rank > 0 {
-                    Some(op.build_precond(x, &kernel, cfg.precond_rank, noise))
-                } else {
-                    None
-                };
                 let res = cg_block_precond(
                     &shifted,
                     &rhs,
@@ -305,6 +308,11 @@ pub fn train(
         adam.step(&mut params, &grad);
 
         // --- Validation RMSE (eval-tolerance solve, Table 5: 0.01) ---
+        // The epoch's operator and preconditioner move into the eval
+        // fit instead of being rebuilt at the same hyperparameters —
+        // this kills the former per-epoch double build (lattice +
+        // factors were each built twice per epoch before
+        // `fit_from_operator` existed).
         let eval_cfg = GpConfig {
             order: cfg.order,
             seed: cfg.seed,
@@ -312,7 +320,8 @@ pub fn train(
             precond_rank: cfg.precond_rank,
             ..GpConfig::default()
         };
-        let eval_model = SimplexGp::fit(x, y, d, kernel.clone(), noise, eval_cfg)?;
+        let eval_model =
+            SimplexGp::fit_from_operator(x, y, d, kernel.clone(), noise, eval_cfg, op, precond)?;
         let val_pred = eval_model.predict_mean(x_val);
         let val_rmse = rmse(&val_pred, y_val);
 

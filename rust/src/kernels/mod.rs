@@ -172,16 +172,29 @@ impl ArdKernel {
         out
     }
 
-    /// Dense covariance matrix (tests / small-n baselines).
+    /// Row `i` of the covariance matrix `K(X, X)` — **the one shared
+    /// row kernel**. Both [`ArdKernel::cov_matrix`] and the
+    /// pivoted-Cholesky row source
+    /// (`crate::solvers::precond::ExactKernelRows`) evaluate rows
+    /// through this method, so the dense-matrix tests and the
+    /// preconditioner factors consume bitwise-identical numbers by
+    /// construction instead of by parallel-evolution luck.
+    pub fn cov_row(&self, x: &[f64], d: usize, i: usize) -> Vec<f64> {
+        let n = x.len() / d;
+        let xi = &x[i * d..(i + 1) * d];
+        (0..n)
+            .map(|j| self.eval(xi, &x[j * d..(j + 1) * d]))
+            .collect()
+    }
+
+    /// Dense covariance matrix (tests / small-n baselines), assembled
+    /// row by row from [`ArdKernel::cov_row`].
     pub fn cov_matrix(&self, x: &[f64], d: usize) -> crate::linalg::Mat {
         let n = x.len() / d;
         let mut k = crate::linalg::Mat::zeros(n, n);
         for i in 0..n {
-            for j in 0..=i {
-                let v = self.eval(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
-                k[(i, j)] = v;
-                k[(j, i)] = v;
-            }
+            let row = self.cov_row(x, d, i);
+            k.data[i * n..(i + 1) * n].copy_from_slice(&row);
         }
         k
     }

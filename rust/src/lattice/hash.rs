@@ -10,6 +10,9 @@
 
 /// Maps `d`-int keys to `u32` ids, assigning ids densely in insertion
 /// order starting at 1 (id 0 is the caller's reserved null slot).
+/// `Clone` is cheap relative to a rebuild and lets benchmarks snapshot
+/// a built lattice before measuring incremental ingest.
+#[derive(Clone)]
 pub struct KeyTable {
     d: usize,
     /// Flat storage of inserted keys, `d` ints per entry, entry `i`

@@ -13,7 +13,7 @@ pub mod filter;
 pub mod hash;
 pub mod shard;
 
-pub use shard::ShardedLattice;
+pub use shard::{IngestOutcome, ShardedLattice};
 
 use crate::kernels::ArdKernel;
 use crate::stencil::Stencil;
@@ -24,6 +24,11 @@ use hash::KeyTable;
 /// Lattice point ids are 1-based; id 0 is a reserved null slot whose
 /// value is pinned to zero, which makes missing blur neighbors and
 /// padding (PJRT bucket shapes) safe by construction.
+///
+/// The structure is append-friendly: [`PermutohedralLattice::ingest`]
+/// adds new points without rebuilding — same arrays, bitwise-identical
+/// to a from-scratch build on the concatenated point set.
+#[derive(Clone)]
 pub struct PermutohedralLattice {
     /// Input dimensionality.
     pub d: usize,
@@ -247,6 +252,125 @@ impl PermutohedralLattice {
             }
         }
         (offsets, weights)
+    }
+
+    /// Append `x` (row-major `k × d`) to the lattice *in place* — the
+    /// streaming-ingest primitive. Three incremental steps instead of a
+    /// rebuild:
+    ///
+    /// 1. each new point's offsets/barycentric weights are appended
+    ///    (same per-point arithmetic as [`PermutohedralLattice::build`]),
+    /// 2. only lattice keys the new points introduce are inserted into
+    ///    the hash map (ids stay insertion-ordered, so they match a
+    ///    from-scratch build on the concatenated point set),
+    /// 3. the blur adjacency is patched for affected keys only: each new
+    ///    key's neighbor row is resolved, and existing keys gain the new
+    ///    ids through neighbor mutuality (`p`'s `+t` neighbor is `q` ⟺
+    ///    `q`'s `−t` neighbor is `p`) — old-key-to-old-key slots are
+    ///    never touched.
+    ///
+    /// The result is **bitwise identical** to
+    /// `PermutohedralLattice::build` on `[old points; x]` (pinned by
+    /// `rust/tests/invariants.rs`), at O(k·(d+1)) embedding work plus
+    /// O(new_keys·(d+1)·2r) hash lookups plus one dense adjacency
+    /// re-layout — a small fraction of a rebuild for small batches
+    /// (`rust/benches/ingest.rs`).
+    ///
+    /// `kernel` must be the kernel the lattice was built with (same
+    /// lengthscales — the embedding scale is baked into `alpha`).
+    /// Panics on a lattice assembled via
+    /// [`PermutohedralLattice::from_raw_parts`]: its key table is empty,
+    /// so new keys cannot be interned consistently.
+    ///
+    /// Returns the number of new lattice keys created.
+    pub fn ingest(&mut self, x: &[f64], kernel: &ArdKernel) -> usize {
+        let d = self.d;
+        assert_eq!(x.len() % d, 0, "x length not a multiple of d");
+        assert_eq!(
+            self.table.len(),
+            self.m,
+            "ingest requires a populated key table \
+             (from_raw_parts lattices cannot ingest)"
+        );
+        let k_new = x.len() / d;
+        if k_new == 0 {
+            return 0;
+        }
+        let m_old = self.m;
+        let scale_factors = elevation_scale_factors(d);
+        let mut scratch = EmbedScratch::new(d);
+        let mut scaled = vec![0.0; d];
+        self.offsets.reserve(k_new * (d + 1));
+        self.weights.reserve(k_new * (d + 1));
+        for i in 0..k_new {
+            let row = &x[i * d..(i + 1) * d];
+            for j in 0..d {
+                scaled[j] = row[j] / kernel.lengthscales[j] * self.alpha;
+            }
+            embed_point(&scaled, &scale_factors, &mut scratch);
+            for k in 0..=d {
+                vertex_key(&scratch.rem0, &scratch.rank, d, k, &mut scratch.key);
+                let id = self.table.get_or_insert(&scratch.key);
+                self.offsets.push(id);
+                self.weights.push(scratch.bary[k]);
+            }
+        }
+        self.n += k_new;
+        let m_new = self.table.len();
+        let new_keys = m_new - m_old;
+        if new_keys > 0 {
+            self.patch_neighbors(m_old, m_new);
+            self.m = m_new;
+        }
+        new_keys
+    }
+
+    /// Grow the blur adjacency from `m_old` to `m_new` lattice points:
+    /// re-layout the direction-major array (row stride is `m`, so a
+    /// grown `m` shifts every direction block — a straight per-direction
+    /// copy), resolve the new keys' neighbor rows against the updated
+    /// table, and propagate each found pair to the partner row via
+    /// mutuality. Every slot whose value differs from a from-scratch
+    /// [`build_neighbors`] run involves a new key on one end, and every
+    /// such slot is written here — so the patched array equals the
+    /// rebuilt one exactly.
+    fn patch_neighbors(&mut self, m_old: usize, m_new: usize) {
+        let d = self.d;
+        let r = self.order();
+        let dirs = d + 1;
+        let width = 2 * r;
+        let mut out = vec![0u32; dirs * m_new * width];
+        for j in 0..dirs {
+            let src = &self.neighbors[j * m_old * width..(j + 1) * m_old * width];
+            out[j * m_new * width..j * m_new * width + m_old * width].copy_from_slice(src);
+        }
+        let mut nkey = vec![0i32; d];
+        for q in m_old..m_new {
+            for j in 0..dirs {
+                let qbase = (j * m_new + q) * width;
+                for t in 1..=r {
+                    for sgn in [-1i32, 1i32] {
+                        let ti = t as i32 * sgn;
+                        let key = self.table.key((q + 1) as u32);
+                        for c in 0..d {
+                            let delta = if c == j { -(d as i32) } else { 1 };
+                            nkey[c] = key[c] + ti * delta;
+                        }
+                        let id = self.table.get(&nkey);
+                        let slot = if sgn < 0 { r - t } else { r + t - 1 };
+                        out[qbase + slot] = id;
+                        if id != 0 {
+                            // Mutuality: q's ±t neighbor along j is p ⟺
+                            // p's ∓t neighbor along j is q.
+                            let p = (id - 1) as usize;
+                            let back = if sgn < 0 { r + t - 1 } else { r - t };
+                            out[(j * m_new + p) * width + back] = (q + 1) as u32;
+                        }
+                    }
+                }
+            }
+        }
+        self.neighbors = out;
     }
 }
 
@@ -562,6 +686,95 @@ mod tests {
         for (a, b) in w.iter().zip(&lat.weights) {
             assert!((a - b).abs() < 1e-12);
         }
+    }
+
+    /// Compare every dense array of two lattices for exact equality —
+    /// the ingest-vs-rebuild contract.
+    fn assert_lattices_identical(a: &PermutohedralLattice, b: &PermutohedralLattice) {
+        assert_eq!(a.d, b.d);
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.m, b.m);
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.neighbors, b.neighbors);
+        assert_eq!(a.weights.len(), b.weights.len());
+        for (i, (wa, wb)) in a.weights.iter().zip(&b.weights).enumerate() {
+            assert_eq!(wa.to_bits(), wb.to_bits(), "weight {i}: {wa} vs {wb}");
+        }
+    }
+
+    #[test]
+    fn ingest_bitwise_equals_from_scratch_build() {
+        let d = 3;
+        let x = random_points(120, d, 21);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 0.6);
+        for r in [1usize, 2] {
+            // Build on the first 80 points, ingest the rest in two
+            // uneven batches; must equal one build on all 120.
+            let mut inc = PermutohedralLattice::build(&x[..80 * d], d, &k, r);
+            let m_base = inc.m;
+            let new1 = inc.ingest(&x[80 * d..107 * d], &k);
+            let new2 = inc.ingest(&x[107 * d..], &k);
+            let full = PermutohedralLattice::build(&x, d, &k, r);
+            assert_eq!(m_base + new1 + new2, full.m, "key accounting");
+            assert_lattices_identical(&inc, &full);
+            // And the realized MVM is the same arithmetic, bit for bit.
+            let mut rng = Pcg64::new(22);
+            let v = rng.normal_vec(120);
+            let (ui, uf) = (inc.mvm(&v), full.mvm(&v));
+            for i in 0..120 {
+                assert_eq!(ui[i].to_bits(), uf[i].to_bits(), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn ingest_empty_batch_is_noop() {
+        let d = 2;
+        let x = random_points(40, d, 23);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let mut lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let before = (lat.n, lat.m, lat.offsets.clone(), lat.neighbors.clone());
+        assert_eq!(lat.ingest(&[], &k), 0);
+        assert_eq!((lat.n, lat.m), (before.0, before.1));
+        assert_eq!(lat.offsets, before.2);
+        assert_eq!(lat.neighbors, before.3);
+    }
+
+    #[test]
+    fn ingest_duplicate_point_adds_no_keys() {
+        let d = 3;
+        let x = random_points(50, d, 24);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+        let mut lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let m0 = lat.m;
+        let nbr0 = lat.neighbors.clone();
+        // Re-ingesting an existing point lands in an existing simplex:
+        // no new keys, adjacency untouched, one more splat row.
+        let new_keys = lat.ingest(&x[..d], &k);
+        assert_eq!(new_keys, 0);
+        assert_eq!(lat.m, m0);
+        assert_eq!(lat.neighbors, nbr0);
+        assert_eq!(lat.n, 51);
+        assert_eq!(&lat.offsets[50 * (d + 1)..], &lat.offsets[..d + 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "populated key table")]
+    fn ingest_rejects_raw_parts_lattice() {
+        let d = 2;
+        let x = random_points(10, d, 25);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let built = PermutohedralLattice::build(&x, d, &k, 1);
+        let mut raw = PermutohedralLattice::from_raw_parts(
+            built.d,
+            built.n,
+            built.m,
+            built.stencil.clone(),
+            built.offsets.clone(),
+            built.weights.clone(),
+            built.neighbors.clone(),
+        );
+        raw.ingest(&x[..d], &k);
     }
 
     #[test]

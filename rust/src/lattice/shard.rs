@@ -64,6 +64,24 @@ pub fn resolve_shard_count(requested: usize, n: usize) -> usize {
     p.clamp(1, n.max(1))
 }
 
+/// Outcome of a streaming ingest into a [`ShardedLattice`] (and, via
+/// delegation, [`crate::mvm::ShardedMvm`] / [`crate::gp::SimplexGp`]):
+/// where the new rows landed, so callers can keep their own row-aligned
+/// state (training targets, residuals) in operator row order.
+#[derive(Clone, Copy, Debug)]
+pub struct IngestOutcome {
+    /// Shard that received the rows (the lightest shard at ingest time).
+    pub shard: usize,
+    /// Global row index where the new rows were inserted — the end of
+    /// the owning shard's segment. Rows of later shards shift up by
+    /// `rows`; callers must splice row-aligned vectors at this index.
+    pub row_start: usize,
+    /// Number of rows appended.
+    pub rows: usize,
+    /// New lattice keys the batch created in the owning shard.
+    pub new_lattice_keys: usize,
+}
+
 /// P independent per-shard lattices over a contiguous partition of the
 /// training points, presenting the same MVM surface as a single
 /// [`PermutohedralLattice`] (plus per-shard entry points for the
@@ -124,6 +142,45 @@ impl ShardedLattice {
     /// Number of shards P.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Streaming ingest: append `x` (row-major `k × d`) to exactly one
+    /// shard's lattice in place.
+    ///
+    /// **Ownership rule: the batch goes to the *lightest* shard** (the
+    /// one with the fewest points; lowest index on ties). Appending —
+    /// rather than repartitioning — keeps every existing row in its
+    /// shard, so all cached per-shard state (lattice values, the other
+    /// shards' preconditioner factors) stays valid; routing to the
+    /// lightest shard keeps the partition balanced under sustained
+    /// streaming. The owning shard's update is
+    /// [`PermutohedralLattice::ingest`] — bitwise identical to
+    /// rebuilding that shard from scratch on its concatenated points.
+    ///
+    /// The new rows take the global indices
+    /// `row_start..row_start + rows` (the end of the owning shard's
+    /// segment); later shards' rows shift up by `rows`. Callers holding
+    /// row-aligned vectors must splice at
+    /// [`IngestOutcome::row_start`] — [`crate::gp::SimplexGp::ingest`]
+    /// does this for the training set.
+    pub fn ingest(&mut self, x: &[f64], kernel: &ArdKernel) -> IngestOutcome {
+        assert_eq!(x.len() % self.d, 0, "x length not a multiple of d");
+        let rows = x.len() / self.d;
+        let shard = (0..self.shards.len())
+            .min_by_key(|&p| self.shards[p].n)
+            .expect("at least one shard");
+        let new_lattice_keys = self.shards[shard].ingest(x, kernel);
+        let row_start = self.bounds[shard + 1];
+        for b in self.bounds[shard + 1..].iter_mut() {
+            *b += rows;
+        }
+        self.n += rows;
+        IngestOutcome {
+            shard,
+            row_start,
+            rows,
+            new_lattice_keys,
+        }
     }
 
     /// Rows owned by shard `p`.
@@ -518,6 +575,63 @@ mod tests {
         }
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ingest_routes_to_lightest_shard_and_keeps_partition() {
+        let d = 3;
+        let n = 90;
+        let x = random_points(n, d, 20);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+        let mut lat = ShardedLattice::build(&x, d, &k, 1, 3);
+        let sizes: Vec<usize> = lat.shards.iter().map(|s| s.n).collect();
+        let lightest = (0..3).min_by_key(|&p| sizes[p]).unwrap();
+        let batch = random_points(4, d, 21);
+        let out = lat.ingest(&batch, &k);
+        assert_eq!(out.shard, lightest);
+        assert_eq!(out.rows, 4);
+        assert_eq!(lat.n, n + 4);
+        assert_eq!(*lat.bounds.last().unwrap(), n + 4);
+        assert_eq!(lat.shards[lightest].n, sizes[lightest] + 4);
+        assert_eq!(out.row_start, lat.bounds[lightest + 1] - 4);
+        // Partition still covers all rows contiguously.
+        let total: usize = (0..3).map(|p| lat.shard_range(p).len()).sum();
+        assert_eq!(total, n + 4);
+        for p in 0..3 {
+            assert_eq!(lat.shards[p].n, lat.shard_range(p).len());
+        }
+    }
+
+    #[test]
+    fn ingested_shard_matches_standalone_rebuild() {
+        // Exact partitioned semantics survive ingest: each shard equals
+        // a from-scratch lattice on its final point set, bit for bit.
+        let d = 2;
+        let n = 60;
+        let x = random_points(n, d, 22);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 0.8);
+        let mut lat = ShardedLattice::build(&x, d, &k, 1, 2);
+        // Track per-shard point sets alongside the ingests.
+        let mut shard_x: Vec<Vec<f64>> = (0..2)
+            .map(|p| x[lat.bounds[p] * d..lat.bounds[p + 1] * d].to_vec())
+            .collect();
+        for batch_seed in 0..3u64 {
+            let batch = random_points(5, d, 30 + batch_seed);
+            let out = lat.ingest(&batch, &k);
+            shard_x[out.shard].extend_from_slice(&batch);
+        }
+        let mut rng = Pcg64::new(23);
+        for p in 0..2 {
+            let solo = PermutohedralLattice::build(&shard_x[p], d, &k, 1);
+            assert_eq!(lat.shards[p].offsets, solo.offsets);
+            assert_eq!(lat.shards[p].neighbors, solo.neighbors);
+            let np = solo.n;
+            let v = rng.normal_vec(np);
+            let (a, b) = (lat.shards[p].mvm(&v), solo.mvm(&v));
+            for i in 0..np {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "shard {p} row {i}");
+            }
         }
     }
 

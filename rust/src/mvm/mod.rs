@@ -440,6 +440,44 @@ mod tests {
     }
 
     #[test]
+    fn cov_matrix_and_kernel_rows_share_one_row_kernel_bitwise() {
+        // Regression pin: `ArdKernel::cov_matrix`, `ExactKernelRows::row`
+        // and `ExactMvm`'s KernelRows impl all route through
+        // `ArdKernel::cov_row`, so their numbers must agree bit for bit
+        // (not merely to tolerance) — across families and outputscales.
+        use crate::solvers::precond::{ExactKernelRows, KernelRows};
+        let d = 3;
+        let n = 30;
+        let mut rng = Pcg64::new(11);
+        let x = rng.normal_vec(n * d);
+        for (fam, scale) in [(KernelFamily::Rbf, 1.0), (KernelFamily::Matern32, 2.3)] {
+            let mut k = ArdKernel::with_lengthscale(fam, d, 0.9);
+            k.outputscale = scale;
+            let dense = k.cov_matrix(&x, d);
+            let op = ExactMvm::new(&k, &x, d);
+            let rows = ExactKernelRows { kernel: &k, x: &x, d };
+            for i in 0..n {
+                let via_op = KernelRows::row(&op, i);
+                let via_rows = KernelRows::row(&rows, i);
+                let via_cov = k.cov_row(&x, d, i);
+                for j in 0..n {
+                    let want = dense[(i, j)].to_bits();
+                    assert_eq!(via_cov[j].to_bits(), want, "{fam:?} cov_row ({i},{j})");
+                    assert_eq!(via_rows[j].to_bits(), want, "{fam:?} ExactKernelRows ({i},{j})");
+                    assert_eq!(via_op[j].to_bits(), want, "{fam:?} ExactMvm ({i},{j})");
+                }
+            }
+            // And the matrix stayed exactly symmetric (eval is bitwise
+            // symmetric in its arguments).
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(dense[(i, j)].to_bits(), dense[(j, i)].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
     fn shifted_adds_diagonal() {
         let d = 2;
         let n = 30;

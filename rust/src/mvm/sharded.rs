@@ -8,7 +8,7 @@
 //! [`crate::lattice::shard`].
 
 use crate::kernels::ArdKernel;
-use crate::lattice::ShardedLattice;
+use crate::lattice::{IngestOutcome, ShardedLattice};
 use crate::mvm::MvmOperator;
 use crate::solvers::precond::ShardedPivCholPrecond;
 use crate::util::layout::{block_to_interleaved, interleaved_to_block};
@@ -46,6 +46,17 @@ impl ShardedMvm {
     /// Number of shards P.
     pub fn shard_count(&self) -> usize {
         self.lattice.shard_count()
+    }
+
+    /// Streaming ingest: append `x` (row-major `k × d`) to the lightest
+    /// shard's lattice in place (see [`ShardedLattice::ingest`] for the
+    /// ownership rule and row-index contract). The operator dimension
+    /// grows by `k`; `kernel` must be the kernel the operator was built
+    /// with. A preconditioner built against the old partition becomes
+    /// stale for the ingested shard only — refresh it with
+    /// [`crate::solvers::ShardedPivCholPrecond::refresh_shard`].
+    pub fn ingest(&mut self, x: &[f64], kernel: &ArdKernel) -> IngestOutcome {
+        self.lattice.ingest(x, kernel)
     }
 
     /// Row-partition boundaries of the underlying shard set: shard `p`
@@ -158,6 +169,23 @@ mod tests {
             let v = rng.normal_vec(n);
             assert_eq!(pc.apply(&v).len(), n);
         }
+    }
+
+    #[test]
+    fn ingest_grows_operator_and_matches_rebuild_at_p1() {
+        let d = 3;
+        let n = 70;
+        let mut rng = Pcg64::new(9);
+        let x = rng.normal_vec(n * d);
+        let mut k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        k.outputscale = 1.6;
+        let mut op = ShardedMvm::build(&x[..60 * d], d, &k, 1, 1).with_symmetrize(true);
+        let out = op.ingest(&x[60 * d..], &k);
+        assert_eq!(out.rows, 10);
+        assert_eq!(op.len(), n);
+        let full = ShardedMvm::build(&x, d, &k, 1, 1).with_symmetrize(true);
+        let v = rng.normal_vec(n);
+        assert_eq!(op.mvm(&v), full.mvm(&v), "P=1 ingest == rebuild bitwise");
     }
 
     #[test]

@@ -66,11 +66,11 @@ impl KernelRows for ExactKernelRows<'_> {
         self.x.len() / self.d
     }
     fn row(&self, i: usize) -> Vec<f64> {
-        let n = self.len();
-        let xi = &self.x[i * self.d..(i + 1) * self.d];
-        (0..n)
-            .map(|j| self.kernel.eval(xi, &self.x[j * self.d..(j + 1) * self.d]))
-            .collect()
+        // THE shared row kernel: `ArdKernel::cov_row` is the single
+        // home of kernel-row evaluation, so preconditioner factors and
+        // `cov_matrix`-backed tests consume bitwise-identical rows
+        // (regression-pinned in `rust/src/mvm/mod.rs` tests).
+        self.kernel.cov_row(self.x, self.d, i)
     }
     fn diag(&self) -> Vec<f64> {
         vec![self.kernel.outputscale; self.len()]
@@ -307,6 +307,60 @@ impl ShardedPivCholPrecond {
         self.parts.len()
     }
 
+    /// Row partition the factors are applied over (shard `p` owns rows
+    /// `bounds()[p]..bounds()[p+1]`).
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// Refresh shard `p`'s factor after a streaming ingest — the
+    /// **preconditioner staleness contract** (ARCHITECTURE.md
+    /// §Streaming ingest): an ingest appends rows to exactly one shard,
+    /// so exactly one factor goes stale. This rebuilds *only* that
+    /// factor, from the shard's post-ingest points (`x_shard`,
+    /// row-major `n_p × d`), and adopts the shifted row partition
+    /// (`bounds` — pass the operator's updated
+    /// [`crate::mvm::ShardedMvm::shard_bounds`]). The other `P − 1`
+    /// factors are reused untouched: their points did not change, and
+    /// the block-diagonal structure means their Woodbury applies remain
+    /// exactly as valid as at build time — for P shards an ingest costs
+    /// one factor build instead of P.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refresh_shard(
+        &mut self,
+        p: usize,
+        x_shard: &[f64],
+        d: usize,
+        kernel: &ArdKernel,
+        rank: usize,
+        sigma2: f64,
+        bounds: &[usize],
+    ) {
+        assert!(p < self.parts.len(), "shard index out of range");
+        assert_eq!(
+            bounds.len(),
+            self.bounds.len(),
+            "ingest never changes the shard count"
+        );
+        assert_eq!(x_shard.len() % d, 0, "x_shard length not a multiple of d");
+        assert_eq!(
+            x_shard.len() / d,
+            bounds[p + 1] - bounds[p],
+            "x_shard must be the owning shard's full post-ingest point set"
+        );
+        self.parts[p] = PivCholPrecond::build(
+            &ExactKernelRows {
+                kernel,
+                x: x_shard,
+                d,
+            },
+            rank,
+            sigma2,
+        );
+        self.bounds = bounds.to_vec();
+        self.n = *bounds.last().unwrap();
+    }
+
     /// `log|P|` — the sum of the per-shard Woodbury log-determinants
     /// (exact for the block-diagonal preconditioner).
     pub fn logdet(&self) -> f64 {
@@ -468,6 +522,42 @@ mod tests {
         let got = sharded.apply(&v);
         assert_eq!(&got[..split], lo.solve(&v[..split]).as_slice());
         assert_eq!(&got[split..], hi.solve(&v[split..]).as_slice());
+    }
+
+    #[test]
+    fn refresh_shard_rebuilds_only_the_ingested_factor() {
+        // Grow shard 1 by 6 rows; its factor must equal a from-scratch
+        // build on the grown segment, shard 0's must be reused bit for
+        // bit, and the application must adopt the new partition.
+        let d = 2;
+        let n = 70;
+        let split = 30;
+        let grow = 6;
+        let mut rng = Pcg64::new(7);
+        let x = rng.normal_vec(n * d);
+        let extra = rng.normal_vec(grow * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.9);
+        let (rank, sigma2) = (12, 0.05);
+        let mut pc = ShardedPivCholPrecond::build(&x, d, &k, rank, sigma2, &[0, split, n]);
+        let part0_l = pc.parts[0].l.data.clone();
+        // Shard 1's post-ingest points: old segment + appended batch.
+        let mut x1 = x[split * d..].to_vec();
+        x1.extend_from_slice(&extra);
+        pc.refresh_shard(1, &x1, d, &k, rank, sigma2, &[0, split, n + grow]);
+        assert_eq!(pc.parts[0].l.data, part0_l, "untouched factor reused");
+        let solo = PivCholPrecond::build(
+            &ExactKernelRows { kernel: &k, x: &x1, d },
+            rank,
+            sigma2,
+        );
+        assert_eq!(pc.parts[1].l.data, solo.l.data);
+        assert_eq!(pc.parts[1].pivots, solo.pivots);
+        assert_eq!(pc.bounds(), &[0, split, n + grow]);
+        // Block-diagonal apply over the new partition.
+        let v = rng.normal_vec(n + grow);
+        let got = pc.apply(&v);
+        assert_eq!(got.len(), n + grow);
+        assert_eq!(&got[split..], solo.solve(&v[split..]).as_slice());
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! Seeded-random property harness: ONE place asserting the invariants
+//! the stack's correctness rests on, swept over the cross product
+//! d ∈ {2, 5, 9} × shards P ∈ {1, 3} × batch B ∈ {1, 7} × kernel
+//! families — configurations the ad-hoc suites only spot-check.
+//!
+//! Invariants (per ISSUE 4):
+//! - **MVM symmetry**: ⟨u, K̃v⟩ = ⟨K̃u, v⟩ on the symmetrized operator.
+//! - **PSD-ness**: Lanczos Ritz values of K̃ stay ≥ −1e-8 (relative to
+//!   the top Ritz value) — the Krylov solvers' working assumption.
+//! - **Batch/single equivalence**: `mvm_block(·, B)` row c equals
+//!   `mvm` on RHS c, ≤ 1e-12 (the per-RHS arithmetic is identical).
+//! - **Shard/single equivalence**: shard p's output rows equal a
+//!   standalone lattice built on shard p's points, ≤ 1e-12.
+//! - **Ingest-vs-rebuild bit equality**: streaming points into a built
+//!   lattice yields the same arrays — and bitwise-identical MVMs — as a
+//!   from-scratch build at the final point set.
+//!
+//! All randomness flows through the crate's own seeded [`Pcg64`]
+//! (no external dependencies); every case prints its parameters in the
+//! assertion message so a failure is reproducible from the seed.
+
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::lattice::{PermutohedralLattice, ShardedLattice};
+use simplex_gp::linalg::eigh_tridiag;
+use simplex_gp::mvm::{MvmOperator, ShardedMvm};
+use simplex_gp::solvers::lanczos;
+use simplex_gp::util::stats::dot;
+use simplex_gp::util::Pcg64;
+
+const DIMS: [usize; 3] = [2, 5, 9];
+const SHARDS: [usize; 2] = [1, 3];
+const BATCHES: [usize; 2] = [1, 7];
+const FAMILIES: [KernelFamily; 2] = [KernelFamily::Rbf, KernelFamily::Matern32];
+
+/// One sweep configuration, with a seed derived from its coordinates so
+/// every case is independently reproducible.
+struct Case {
+    d: usize,
+    p: usize,
+    b: usize,
+    family: KernelFamily,
+    seed: u64,
+}
+
+fn cases() -> Vec<Case> {
+    let mut out = Vec::new();
+    let mut idx = 0u64;
+    for &d in &DIMS {
+        for &p in &SHARDS {
+            for &b in &BATCHES {
+                for &family in &FAMILIES {
+                    out.push(Case {
+                        d,
+                        p,
+                        b,
+                        family,
+                        seed: 0xa11c_e000 + idx,
+                    });
+                    idx += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn random_points(n: usize, d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::with_stream(0x16e5_7001, seed);
+    rng.normal_vec(n * d)
+}
+
+#[test]
+fn mvm_symmetry_across_the_sweep() {
+    for c in cases() {
+        let n = 150;
+        let x = random_points(n, c.d, c.seed);
+        let k = ArdKernel::with_lengthscale(c.family, c.d, 1.0);
+        let op = ShardedMvm::build(&x, c.d, &k, 1, c.p).with_symmetrize(true);
+        let mut rng = Pcg64::with_stream(0x5e11, c.seed);
+        let u = rng.normal_vec(n);
+        let v = rng.normal_vec(n);
+        let a = dot(&u, &op.mvm(&v));
+        let b = dot(&v, &op.mvm(&u));
+        assert!(
+            (a - b).abs() <= 1e-10 * (1.0 + a.abs().max(b.abs())),
+            "case (d={} P={} {:?} seed={}): asymmetry {a} vs {b}",
+            c.d,
+            c.p,
+            c.family,
+            c.seed
+        );
+    }
+}
+
+#[test]
+fn psd_via_lanczos_ritz_values_across_the_sweep() {
+    // The Krylov solvers assume K̃ ⪰ 0 (up to rounding): every Ritz
+    // value of a Lanczos run lies in the operator's numerical range, so
+    // min-Ritz ≥ −1e-8·scale certifies no materially negative
+    // directions were found.
+    for c in cases() {
+        let n = 150;
+        let x = random_points(n, c.d, c.seed);
+        let k = ArdKernel::with_lengthscale(c.family, c.d, 1.0);
+        let op = ShardedMvm::build(&x, c.d, &k, 1, c.p).with_symmetrize(true);
+        let mut rng = Pcg64::with_stream(0x9d, c.seed);
+        let q0 = rng.normal_vec(n);
+        let lr = lanczos(&op, &q0, 30, false);
+        let (ritz, _) = eigh_tridiag(&lr.alpha, &lr.beta);
+        let top = ritz.last().copied().unwrap_or(0.0).max(1.0);
+        let bottom = ritz.first().copied().unwrap_or(0.0);
+        assert!(
+            bottom >= -1e-8 * top,
+            "case (d={} P={} {:?} seed={}): min Ritz {bottom:.3e} (top {top:.3e})",
+            c.d,
+            c.p,
+            c.family,
+            c.seed
+        );
+    }
+}
+
+#[test]
+fn batch_single_equivalence_across_the_sweep() {
+    for c in cases() {
+        let n = 120;
+        let x = random_points(n, c.d, c.seed.wrapping_add(1));
+        let mut k = ArdKernel::with_lengthscale(c.family, c.d, 0.9);
+        k.outputscale = 1.4;
+        for symmetrize in [false, true] {
+            let op = ShardedMvm::build(&x, c.d, &k, 1, c.p).with_symmetrize(symmetrize);
+            let mut rng = Pcg64::with_stream(0xba7c4, c.seed);
+            let v = rng.normal_vec(n * c.b);
+            let block = op.mvm_block(&v, c.b);
+            for col in 0..c.b {
+                let single = op.mvm(&v[col * n..(col + 1) * n]);
+                for i in 0..n {
+                    let (got, want) = (block[col * n + i], single[i]);
+                    assert!(
+                        (got - want).abs() <= 1e-12,
+                        "case (d={} P={} B={} {:?} sym={symmetrize}) rhs {col} row {i}: \
+                         {got} vs {want}",
+                        c.d,
+                        c.p,
+                        c.b,
+                        c.family
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_single_equivalence_across_the_sweep() {
+    for c in cases() {
+        if c.p == 1 {
+            continue; // the P = 1 case IS the single lattice (below)
+        }
+        let n = 120;
+        let x = random_points(n, c.d, c.seed.wrapping_add(2));
+        let k = ArdKernel::with_lengthscale(c.family, c.d, 0.8);
+        let sharded = ShardedLattice::build(&x, c.d, &k, 1, c.p);
+        let mut rng = Pcg64::with_stream(0x54a2d, c.seed);
+        let v = rng.normal_vec(n);
+        let u = sharded.mvm(&v);
+        for p in 0..c.p {
+            let r = sharded.shard_range(p);
+            let solo =
+                PermutohedralLattice::build(&x[r.start * c.d..r.end * c.d], c.d, &k, 1);
+            let us = solo.mvm(&v[r.clone()]);
+            for (i, (got, want)) in u[r].iter().zip(&us).enumerate() {
+                assert!(
+                    (got - want).abs() <= 1e-12,
+                    "case (d={} P={} {:?}) shard {p} row {i}: {got} vs {want}",
+                    c.d,
+                    c.p,
+                    c.family
+                );
+            }
+        }
+    }
+    // P = 1 leg: the sharded operator reproduces the single lattice.
+    for &d in &DIMS {
+        let n = 120;
+        let x = random_points(n, d, 77);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let sharded = ShardedLattice::build(&x, d, &k, 1, 1);
+        let single = PermutohedralLattice::build(&x, d, &k, 1);
+        let mut rng = Pcg64::with_stream(0x54a2e, d as u64);
+        let v = rng.normal_vec(n);
+        assert_eq!(sharded.mvm(&v), single.mvm(&v), "d={d}");
+    }
+}
+
+#[test]
+fn ingest_vs_rebuild_bit_equality_across_the_sweep() {
+    // Stream the tail of each case's point set into a lattice built on
+    // the head; every shard must be bit-identical to a from-scratch
+    // build on its final point set, and the full MVM must match bitwise.
+    for c in cases() {
+        let n = 120;
+        let batch_rows = 15;
+        let x = random_points(n, c.d, c.seed.wrapping_add(3));
+        let k = ArdKernel::with_lengthscale(c.family, c.d, 0.9);
+        let base = n - 2 * batch_rows;
+        let mut lat = ShardedLattice::build(&x[..base * c.d], c.d, &k, 1, c.p);
+        // Track each shard's final point set while streaming.
+        let mut shard_x: Vec<Vec<f64>> = (0..c.p)
+            .map(|p| x[lat.bounds[p] * c.d..lat.bounds[p + 1] * c.d].to_vec())
+            .collect();
+        for step in 0..2 {
+            let lo = (base + step * batch_rows) * c.d;
+            let hi = lo + batch_rows * c.d;
+            let out = lat.ingest(&x[lo..hi], &k);
+            assert_eq!(out.rows, batch_rows);
+            shard_x[out.shard].extend_from_slice(&x[lo..hi]);
+        }
+        assert_eq!(lat.n, n);
+        let mut rng = Pcg64::with_stream(0x16e5, c.seed);
+        for p in 0..c.p {
+            let solo = PermutohedralLattice::build(&shard_x[p], c.d, &k, 1);
+            assert_eq!(
+                lat.shards[p].offsets, solo.offsets,
+                "case (d={} P={} {:?}) shard {p} offsets",
+                c.d, c.p, c.family
+            );
+            assert_eq!(lat.shards[p].neighbors, solo.neighbors);
+            assert_eq!(lat.shards[p].m, solo.m);
+            for (i, (a, b)) in lat.shards[p].weights.iter().zip(&solo.weights).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case (d={} P={} {:?}) shard {p} weight {i}",
+                    c.d,
+                    c.p,
+                    c.family
+                );
+            }
+            let v = rng.normal_vec(solo.n);
+            let (ua, ub) = (lat.shards[p].mvm(&v), solo.mvm(&v));
+            for i in 0..solo.n {
+                assert_eq!(
+                    ua[i].to_bits(),
+                    ub[i].to_bits(),
+                    "case (d={} P={} {:?}) shard {p} mvm row {i}",
+                    c.d,
+                    c.p,
+                    c.family
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ingest_stream_bitwise_equals_rebuild_for_batches_1_64_1024() {
+    // The ISSUE-4 acceptance pin: streaming n points in batches of
+    // k ∈ {1, 64, 1024} yields MVMs bitwise-equal to a from-scratch
+    // lattice build at the final point set.
+    let d = 4;
+    let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+    for &(n_total, batch) in &[(400usize, 1usize), (1000, 64), (2100, 1024)] {
+        let x = random_points(n_total, d, 1000 + batch as u64);
+        let base = 128;
+        let mut inc = PermutohedralLattice::build(&x[..base * d], d, &k, 1);
+        let mut at = base;
+        while at < n_total {
+            let hi = (at + batch).min(n_total);
+            inc.ingest(&x[at * d..hi * d], &k);
+            at = hi;
+        }
+        let full = PermutohedralLattice::build(&x, d, &k, 1);
+        assert_eq!(inc.n, full.n, "batch {batch}");
+        assert_eq!(inc.m, full.m, "batch {batch}");
+        assert_eq!(inc.offsets, full.offsets, "batch {batch}");
+        assert_eq!(inc.neighbors, full.neighbors, "batch {batch}");
+        for (i, (a, b)) in inc.weights.iter().zip(&full.weights).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "batch {batch} weight {i}");
+        }
+        let mut rng = Pcg64::with_stream(0xacce7, batch as u64);
+        let v = rng.normal_vec(n_total);
+        let (ui, uf) = (inc.mvm(&v), full.mvm(&v));
+        for i in 0..n_total {
+            assert_eq!(ui[i].to_bits(), uf[i].to_bits(), "batch {batch} row {i}");
+        }
+    }
+}
