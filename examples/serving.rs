@@ -4,10 +4,14 @@
 //! three-layer architecture: after `make artifacts`, everything on the
 //! request path is Rust.
 //!
-//! Two phases: concurrent `predict` load (rows coalesce into one slice
-//! pass per batch) and concurrent raw `mvm` load (vectors coalesce into
+//! Four phases: concurrent `predict` load (rows coalesce into one slice
+//! pass per batch), concurrent raw `mvm` load (vectors coalesce into
 //! one row-major block driven through a single batched splat→blur→slice
-//! — see ARCHITECTURE.md, §Batch layout).
+//! — see ARCHITECTURE.md, §Batch layout), streaming ingest under live
+//! traffic, and a multi-node finale: one coordinator + two remote
+//! `shard-worker` endpoints on localhost, with replies asserted
+//! byte-identical to local compute (docs/PROTOCOL.md,
+//! docs/DEPLOYMENT.md).
 //!
 //!     cargo run --release --example serving [-- --shards P]
 //!
@@ -18,6 +22,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
+use simplex_gp::coordinator::transport::ClusterConfig;
+use simplex_gp::coordinator::worker::{ShardWorker, WorkerConfig};
 use simplex_gp::coordinator::{Client, ServeConfig, Server};
 use simplex_gp::datasets::{generate, split_standardize};
 use simplex_gp::gp::{GpConfig, SimplexGp};
@@ -211,6 +217,118 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(rebuilds, 0, "small batches must stay on the incremental path");
 
     server.shutdown();
+
+    // --- Phase 4: multi-node — remote shard workers over TCP ---
+    // The same shard pool, with the in-process channel transport
+    // swapped for TCP: two `shard-worker` processes (here in-process
+    // for a self-contained demo; `simplex-gp shard-worker` is the real
+    // thing) each hold one shard replica, synced by fingerprint, and
+    // replies stay byte-identical to local compute because floats
+    // round-trip bit-exactly through the frame protocol
+    // (docs/PROTOCOL.md; topologies in docs/DEPLOYMENT.md).
+    println!("\n=== multi-node (remote shard workers over TCP) ===");
+    let w1 = ShardWorker::start(WorkerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        ..WorkerConfig::default()
+    })?;
+    let w2 = ShardWorker::start(WorkerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        ..WorkerConfig::default()
+    })?;
+    println!("shard-workers listening on {} and {}", w1.local_addr, w2.local_addr);
+
+    let ds4 = generate("protein", 4000, 4);
+    let sp4 = split_standardize(&ds4, 5);
+    let kernel4 = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 1.0);
+    let model4 = SimplexGp::fit(
+        &sp4.train.x,
+        &sp4.train.y,
+        d,
+        kernel4,
+        0.05,
+        GpConfig {
+            shards: 2,
+            ..GpConfig::default()
+        },
+    )?;
+    let n4 = model4.n_train();
+    let mut rng = Pcg64::new(4242);
+    let probe = rng.normal_vec(n4);
+    let direct = model4.operator().lattice.mvm(&probe);
+
+    let cluster = ClusterConfig {
+        workers: vec![w1.local_addr.to_string(), w2.local_addr.to_string()],
+        ..ClusterConfig::default()
+    };
+    let server = Server::start(
+        model4,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_ingest: true,
+            cluster,
+            ..ServeConfig::default()
+        },
+    )?;
+    let mut client = Client::connect(&server.local_addr)?;
+    // Replicas sync in the background; wait for both links (a not-yet-
+    // synced shard would be computed on the coordinator — still
+    // byte-identical, but the demo wants the remote path on screen).
+    let t3 = Instant::now();
+    let mut remote = 0usize;
+    while t3.elapsed().as_secs() < 15 {
+        remote = client
+            .stats()?
+            .get("remote_workers")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as usize;
+        if remote == 2 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!(
+        "replicas synced on {remote}/2 workers after {:.2} s",
+        t3.elapsed().as_secs_f64()
+    );
+
+    let u = client.mvm(&probe)?;
+    for i in 0..n4 {
+        assert_eq!(
+            u[i].to_bits(),
+            direct[i].to_bits(),
+            "remote mvm row {i} diverged from local compute"
+        );
+    }
+    println!(
+        "remote mvm (n = {n4}, 2 shards on 2 workers): byte-identical to \
+         local compute ({} jobs served remotely)",
+        w1.served() + w2.served()
+    );
+
+    // Streaming ingest propagates to the owning worker's replica
+    // (fingerprint-verified), so serving keeps riding the remote path.
+    let xi: Vec<f64> = (0..8 * d).map(|_| rng.normal()).collect();
+    let yi: Vec<f64> = (0..8).map(|_| rng.normal() * 0.1).collect();
+    let n_after = client.ingest(&xi, &yi, d)?;
+    let probe2 = rng.normal_vec(n_after);
+    let served_before = w1.served() + w2.served();
+    let u2 = client.mvm(&probe2)?;
+    assert_eq!(u2.len(), n_after);
+    let stats = client.stats()?;
+    let still_remote = stats
+        .get("remote_workers")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as usize;
+    println!(
+        "ingest of 8 rows propagated (n {n4} -> {n_after}); post-ingest mvm \
+         served with {still_remote}/2 workers synced ({} further remote jobs)",
+        (w1.served() + w2.served()).saturating_sub(served_before)
+    );
+
+    server.shutdown();
+    w1.shutdown();
+    w2.shutdown();
+
     println!("\nOK: coordinator batched concurrent clients through one lattice pass per batch.");
     Ok(())
 }

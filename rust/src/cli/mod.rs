@@ -90,12 +90,21 @@ COMMANDS
   stencil    --kernel <fam> [--order R] — print the coverage-optimal
              spacing and taps (the §4.1 discretization).
   serve      --dataset <name> [--n N] [--addr HOST:PORT] [--shards P]
-             [--precond-rank K] [--ingest] — train quickly, then serve
-             predictions over the JSON-lines protocol. --ingest enables
-             the streaming `ingest` op (live training-point updates,
-             coalesced and absorbed incrementally up to the config's
-             [serve] max_ingest_batch rows per batch; larger coalesced
-             batches trigger a full refit).
+             [--precond-rank K] [--ingest] [--workers A:P1,B:P2]
+             — train quickly, then serve predictions over the JSON-lines
+             protocol (docs/PROTOCOL.md). --ingest enables the streaming
+             `ingest` op (live training-point updates, coalesced and
+             absorbed incrementally up to the config's [serve]
+             max_ingest_batch rows per batch; larger coalesced batches
+             trigger a full refit). --workers routes shard jobs to
+             remote shard-worker processes (defaults to the config's
+             [cluster] workers; empty = in-process pool).
+  shard-worker  [--listen HOST:PORT] [--frame-mb N] — hold shard
+             replicas for a remote coordinator and serve
+             shard_mvm_block/ingest jobs over the length-prefixed frame
+             protocol (docs/PROTOCOL.md; deployment recipes in
+             docs/DEPLOYMENT.md). Default listen address 127.0.0.1:7900;
+             port 0 picks an ephemeral port (printed on startup).
   goldens    [--artifacts DIR] — compile AOT artifacts on PJRT and replay
              the python-generated goldens (cross-layer parity check).
   datasets   — list the benchmark dataset analogs.
@@ -123,6 +132,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "sparsity" => cmd_sparsity(&args),
         "stencil" => cmd_stencil(&args),
         "serve" => cmd_serve(&args),
+        "shard-worker" => cmd_shard_worker(&args),
         "goldens" => cmd_goldens(&args),
         "datasets" => cmd_datasets(),
         "" | "help" | "--help" | "-h" => {
@@ -418,27 +428,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     let shards = out.model.shards();
     let allow_ingest = args.get_flag("ingest");
+    // Multi-node: `--workers a:p,b:p` overrides the config's
+    // `[cluster] workers`; empty keeps the in-process shard pool.
+    let mut cluster = crate::coordinator::transport::ClusterConfig::from_config(&cfg_file);
+    if let Some(w) = args.get("workers") {
+        cluster.workers = crate::coordinator::transport::parse_worker_list(w);
+    }
     let mut cfg = crate::coordinator::ServeConfig {
         allow_ingest,
         max_ingest_batch: cfg_file.get_usize("serve", "max_ingest_batch", 1024),
+        cluster,
         ..crate::coordinator::ServeConfig::default()
     };
     if let Some(addr) = args.get("addr") {
         cfg.addr = addr.to_string();
     }
     let max_ingest_batch = cfg.max_ingest_batch;
+    let remote = cfg.cluster.workers.clone();
     let server = crate::coordinator::Server::start(out.model, cfg)?;
     println!(
         "serving on {} with {} shard worker(s) — JSON lines: \
          {{\"id\":1,\"op\":\"predict\",\"x\":[[...{} floats...]]}}",
         server.local_addr, shards, d
     );
+    if !remote.is_empty() {
+        println!(
+            "multi-node: routing {shards} shard(s) over TCP to {} remote \
+             shard-worker(s): {} (stats op reports remote_workers; a dead \
+             worker's shards fall back to the coordinator, byte-identical)",
+            remote.len(),
+            remote.join(", ")
+        );
+    }
     if allow_ingest {
         println!(
             "streaming ingest enabled: {{\"id\":2,\"op\":\"ingest\",\"x\":[[...]],\"y\":[...]}} \
              (incremental up to {max_ingest_batch} coalesced rows, full refit beyond)"
         );
     }
+    println!("Ctrl-C to stop.");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `shard-worker`: hold shard replicas and serve a remote coordinator
+/// over the length-prefixed frame protocol (`docs/PROTOCOL.md`). The
+/// worker starts empty — the coordinator pushes shard contents with
+/// `refresh_shard` on connect — so no dataset flags exist here.
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let cfg_file = load_config(args)?;
+    let listen = args.get("listen").unwrap_or("127.0.0.1:7900").to_string();
+    let frame_mb = args.get_usize("frame-mb", cfg_file.get_usize("cluster", "frame_mb", 64))?;
+    let worker = crate::coordinator::worker::ShardWorker::start(
+        crate::coordinator::worker::WorkerConfig {
+            listen,
+            max_frame_bytes: frame_mb * 1024 * 1024,
+        },
+    )?;
+    println!(
+        "shard-worker listening on {} (protocol v{}, frame cap {frame_mb} MiB)",
+        worker.local_addr,
+        crate::coordinator::transport::PROTOCOL_VERSION
+    );
     println!("Ctrl-C to stop.");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -172,6 +172,20 @@ max_batch = 256
 max_wait_ms = 5
 max_ingest_batch = 1024   # largest coalesced ingest absorbed incrementally
 backend = "native"        # { native, pjrt }
+
+[cluster]
+# Remote shard workers (comma-separated host:port; "" = in-process
+# shard pool). Shard p is served by worker p mod W; a dead worker's
+# shards are computed on the coordinator (byte-identical fallback).
+# See docs/DEPLOYMENT.md for topologies and docs/PROTOCOL.md for the
+# wire protocol.
+workers = ""
+frame_mb = 64             # frame payload cap, both directions
+connect_timeout_ms = 1000
+result_timeout_ms = 10000 # per-shard reply deadline before local fallback
+refresh_timeout_ms = 60000 # replica rebuild deadline (scales with shard size)
+backoff_ms = 50           # initial reconnect backoff (doubles per failure)
+backoff_max_ms = 2000
 "#;
 
 #[cfg(test)]
@@ -189,6 +203,14 @@ mod tests {
         assert_eq!(cfg.get_usize("train", "shards", 0), 1);
         assert_eq!(cfg.get_usize("train", "precond_rank", 0), 100);
         assert_eq!(cfg.get_usize("serve", "max_ingest_batch", 0), 1024);
+        // [cluster] defaults: in-process pool, documented timeouts.
+        assert_eq!(cfg.get_str("cluster", "workers", "x"), "");
+        assert_eq!(cfg.get_usize("cluster", "frame_mb", 0), 64);
+        assert_eq!(cfg.get_usize("cluster", "result_timeout_ms", 0), 10_000);
+        assert_eq!(cfg.get_usize("cluster", "refresh_timeout_ms", 0), 60_000);
+        assert_eq!(cfg.get_usize("cluster", "backoff_ms", 0), 50);
+        assert_eq!(cfg.get_usize("cluster", "backoff_max_ms", 0), 2000);
+        assert_eq!(cfg.get_usize("cluster", "connect_timeout_ms", 0), 1000);
     }
 
     #[test]

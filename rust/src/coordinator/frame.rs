@@ -1,0 +1,215 @@
+//! Length-prefixed JSON frames — the shard-worker wire format.
+//!
+//! One frame is
+//!
+//! ```text
+//!   <payload byte length, ASCII decimal>\n<payload bytes>\n
+//! ```
+//!
+//! where the payload is one UTF-8 JSON document ([`crate::util::json`]).
+//! The explicit length (unlike the coordinator's client-facing JSON
+//! *lines*) lets a frame carry arbitrarily large vector payloads without
+//! scanning for a delimiter, and lets the receiver enforce a hard size
+//! cap *before* allocating. Floats round-trip bit-exactly (shortest
+//! round-trip formatting, negative zero preserved) — the property the
+//! remote-vs-local byte-identity tests pin. The full protocol is
+//! specified in `docs/PROTOCOL.md`.
+
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Default cap on a single frame's payload (`[cluster] frame_mb`, 64):
+/// large enough for a coalesced `b × n_p` block at serving sizes, small
+/// enough that a corrupt length prefix cannot OOM the process.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// Serialize `payload` as one frame onto `w` and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &Json) -> Result<()> {
+    let body = payload.to_string();
+    w.write_all(body.len().to_string().as_bytes())?;
+    w.write_all(b"\n")?;
+    w.write_all(body.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Incremental frame reader over a (possibly read-timeout) byte stream.
+///
+/// [`FrameReader::read_frame`] tolerates `WouldBlock`/`TimedOut` reads
+/// by retrying — partial frames accumulate in the internal buffer — so
+/// the underlying socket can carry a short read timeout and the caller
+/// can still observe a stop flag between poll intervals.
+pub struct FrameReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+    max_bytes: usize,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(inner: R, max_bytes: usize) -> Self {
+        FrameReader {
+            inner,
+            buf: Vec::new(),
+            max_bytes,
+        }
+    }
+
+    /// Read one complete frame and parse its payload.
+    ///
+    /// Returns `Ok(None)` on a clean EOF at a frame boundary, or when
+    /// `stop` flips true while waiting between timed-out reads (a
+    /// *partial* frame at EOF is an error — the peer died mid-write).
+    /// `deadline` bounds the total wait when `stop` is `None`-driven
+    /// polling is not enough (the coordinator's result timeout).
+    pub fn read_frame(
+        &mut self,
+        stop: Option<&AtomicBool>,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Option<Json>> {
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            // A complete frame already buffered?
+            if let Some(frame) = self.try_extract()? {
+                return Ok(Some(frame));
+            }
+            if let Some(s) = stop {
+                if s.load(Ordering::Relaxed) {
+                    return Ok(None);
+                }
+            }
+            if let Some(dl) = deadline {
+                if std::time::Instant::now() >= dl {
+                    bail!("frame read timed out");
+                }
+            }
+            match self.inner.read(&mut chunk) {
+                Ok(0) => {
+                    if self.buf.is_empty() {
+                        return Ok(None);
+                    }
+                    bail!("connection closed mid-frame ({} bytes buffered)", self.buf.len());
+                }
+                Ok(k) => self.buf.extend_from_slice(&chunk[..k]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Pop one complete frame off the buffer, if present.
+    fn try_extract(&mut self) -> Result<Option<Json>> {
+        let Some(nl) = self.buf.iter().position(|&b| b == b'\n') else {
+            // No header line yet; bound the header itself too.
+            if self.buf.len() > 32 {
+                bail!("frame header not terminated within 32 bytes");
+            }
+            return Ok(None);
+        };
+        let len: usize = std::str::from_utf8(&self.buf[..nl])
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .ok_or_else(|| anyhow!("bad frame length header"))?;
+        if len > self.max_bytes {
+            bail!("frame of {len} bytes exceeds the {} byte cap", self.max_bytes);
+        }
+        // header + '\n' + payload + '\n'
+        let total = nl + 1 + len + 1;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        if self.buf[total - 1] != b'\n' {
+            bail!("frame missing trailing newline");
+        }
+        let payload = std::str::from_utf8(&self.buf[nl + 1..total - 1])
+            .map_err(|_| anyhow!("frame payload is not UTF-8"))?;
+        let json = Json::parse(payload).map_err(|e| anyhow!("frame payload: {e}"))?;
+        self.buf.drain(..total);
+        Ok(Some(json))
+    }
+}
+
+/// Poll-interval read timeout for sockets drained through
+/// [`FrameReader`]: short enough that stop flags and deadlines are
+/// observed promptly, long enough to stay off the scheduler's back.
+pub const POLL_READ_TIMEOUT: Duration = Duration::from_millis(100);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn frame_roundtrip_over_a_buffer() {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".to_string(), Json::Str("hello".to_string()));
+        obj.insert("v".to_string(), Json::num_array(&[1.5, -0.0, 2e-308]));
+        let msg = Json::Obj(obj);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        write_frame(&mut buf, &Json::Num(7.0)).unwrap();
+        let mut r = FrameReader::new(&buf[..], DEFAULT_MAX_FRAME_BYTES);
+        let got = r.read_frame(None, None).unwrap().unwrap();
+        assert_eq!(got, msg);
+        // Bit-exactness through the frame.
+        let v = got.get("v").unwrap().to_f64_vec().unwrap();
+        assert_eq!(v[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.read_frame(None, None).unwrap().unwrap(), Json::Num(7.0));
+        // Clean EOF at a frame boundary.
+        assert!(r.read_frame(None, None).unwrap().is_none());
+    }
+
+    #[test]
+    fn partial_frame_at_eof_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::Str("x".repeat(100))).unwrap();
+        buf.truncate(buf.len() - 5);
+        let mut r = FrameReader::new(&buf[..], DEFAULT_MAX_FRAME_BYTES);
+        assert!(r.read_frame(None, None).is_err());
+    }
+
+    #[test]
+    fn oversized_and_garbage_frames_rejected() {
+        let mut r = FrameReader::new(&b"999999999\n"[..], 1024);
+        assert!(r.read_frame(None, None).is_err());
+        let mut r = FrameReader::new(&b"notanumber\n{}\n"[..], 1024);
+        assert!(r.read_frame(None, None).is_err());
+        // Unterminated header.
+        let long = vec![b'1'; 64];
+        let mut r = FrameReader::new(&long[..], 1024);
+        assert!(r.read_frame(None, None).is_err());
+    }
+
+    #[test]
+    fn frames_split_across_reads_reassemble() {
+        // A Read impl that returns one byte at a time exercises the
+        // accumulation path.
+        struct OneByte<'a>(&'a [u8], usize);
+        impl Read for OneByte<'_> {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.1 >= self.0.len() {
+                    return Ok(0);
+                }
+                out[0] = self.0[self.1];
+                self.1 += 1;
+                Ok(1)
+            }
+        }
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::num_array(&[1.0, 2.0, 3.0])).unwrap();
+        let mut r = FrameReader::new(OneByte(&buf, 0), 1024);
+        let got = r.read_frame(None, None).unwrap().unwrap();
+        assert_eq!(got.to_f64_vec().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -26,7 +26,8 @@
 //!   ← {"id": 7, "mean": [...], "elapsed_us": 1234}
 //!   ← {"id": 8, "u": [...], "batched_with": 3}
 //!   ← {"id": 9, "n": ..., "m": ..., "d": ..., "shards": ..., "served": ..., "batches": ...,
-//!      "cg_iters": ..., "precond_rank": ..., "ingested": ..., "rebuilds": ...}
+//!      "cg_iters": ..., "precond_rank": ..., "ingested": ..., "rebuilds": ...,
+//!      "cluster_workers": ..., "remote_workers": ...}
 //!   ← {"id": 10, "ingested": 1, "n": ..., "shard": ..., "rebuild": 0}
 //!
 //! `cg_iters` is the realized CG iteration count of the model's fitting
@@ -44,6 +45,25 @@
 //! the incremental sweet spot and triggers a full refit instead; the
 //! `stats` op reports both totals (`ingested` rows, `rebuilds`). After
 //! an ingest, `mvm` vectors must match the *new* n (replies carry `n`).
+//!
+//! Multi-node: the shard workers sit behind a pluggable
+//! [`transport::ShardTransport`]. The default is the in-process
+//! [`transport::LocalTransport`] (threads + channels, the PR 2 pool bit
+//! for bit); configuring `[cluster] workers` (or `serve --workers`)
+//! swaps in [`transport::TcpTransport`], which ships each shard's jobs
+//! to a remote [`worker::ShardWorker`] (`simplex-gp shard-worker`) over
+//! the length-prefixed JSON frame protocol of [`frame`] — replies stay
+//! byte-identical because floats round-trip bit-exactly and the remote
+//! replica is fingerprint-verified against the coordinator's shard.
+//! Either way the transport is an optimization, never a correctness
+//! dependency: any shard whose worker is dead, stale, or slow is
+//! computed in-thread from the coordinator's own model (the normative
+//! protocol spec is `docs/PROTOCOL.md`; topologies and failure
+//! semantics are in `docs/DEPLOYMENT.md`).
+
+pub mod frame;
+pub mod transport;
+pub mod worker;
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -59,9 +79,14 @@ use crate::gp::SimplexGp;
 use crate::lattice::ShardedLattice;
 use crate::util::json::Json;
 
-/// Server configuration (`[serve]` section of the config file).
+use transport::{ClusterConfig, LocalTransport, ShardTransport, TcpTransport};
+
+/// Server configuration (`[serve]` + `[cluster]` sections of the config
+/// file).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
+    /// Listen address (`host:port`; port 0 binds an ephemeral port,
+    /// reported via [`Server::local_addr`]).
     pub addr: String,
     /// Max prediction rows per coalesced batch.
     pub max_batch: usize,
@@ -78,6 +103,10 @@ pub struct ServeConfig {
     /// Accept debug ops (`debug_kill_worker`). Test-only: lets the
     /// deterministic failure-path tests kill a shard worker on demand.
     pub debug_ops: bool,
+    /// Multi-node shard transport (`[cluster]`): with a non-empty
+    /// `workers` list the shard pool runs over TCP to remote
+    /// `shard-worker` processes instead of in-process threads.
+    pub cluster: ClusterConfig,
 }
 
 impl Default for ServeConfig {
@@ -90,6 +119,7 @@ impl Default for ServeConfig {
             allow_ingest: false,
             max_ingest_batch: 1024,
             debug_ops: false,
+            cluster: ClusterConfig::default(),
         }
     }
 }
@@ -137,6 +167,10 @@ struct Counters {
     batches: AtomicU64,
     ingested: AtomicU64,
     rebuilds: AtomicU64,
+    /// Live remote shard-worker links (connected *and* replica-synced);
+    /// 0 under the in-process transport. A gauge, not a counter —
+    /// maintained by [`transport::TcpTransport`]'s I/O threads.
+    remote_connected: Arc<AtomicU64>,
 }
 
 /// Running server handle (owned threads shut down when dropped after
@@ -403,155 +437,144 @@ fn parse_request(line: &str, reply: &SyncSender<String>) -> Result<Work, String>
 }
 
 fn json_num_array(xs: &[f64]) -> Json {
-    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    Json::num_array(xs)
 }
 
-/// One coalesced block-MVM job, broadcast to every shard worker. The
-/// full `b × n` block is shared (Arc) — each worker gathers only its
-/// shard's row segments. `job` tags the batch so the batcher can
-/// discard stale results after a partial failure.
-struct ShardJob {
-    v: Arc<Vec<f64>>,
-    b: usize,
-    job: u64,
-}
-
-/// P persistent shard workers fed over channels by the batcher: worker
-/// `p` owns shard `p` of the model's [`ShardedLattice`] and answers
-/// every coalesced block request with its shard's `b × n_p` rows. This
-/// extends PR 1's request coalescing with data parallelism *within* a
-/// batch — one request's latency now scales down with shards, not just
-/// throughput with batch width.
+/// The batcher's shard pool: job-id bookkeeping and per-shard fallback
+/// on top of a pluggable [`ShardTransport`].
 ///
-/// Failure model: the pool is an optimization, never a correctness
-/// dependency. For P = 1 no workers are spawned at all (the direct
-/// call is strictly cheaper than a channel hop). If a worker dies
-/// (send fails fast on a disconnected channel) or stalls past
-/// [`ShardPool::RESULT_TIMEOUT`], `mvm_block` returns `None` and the
-/// batcher computes the batch in-thread instead; results from an
-/// abandoned batch carry a stale job id and are discarded on the next
-/// call, so a partial failure can never splice old numbers into a new
-/// reply.
+/// PR 2's in-process pool ([`transport::LocalTransport`]) and the
+/// multi-node TCP pool ([`transport::TcpTransport`]) both sit behind
+/// the same exchange: submit one job per shard slot, collect `(job id,
+/// slot, rows)` results, reassemble in shard order. This wrapper owns
+/// the failure semantics the transports share:
+///
+/// - a slot whose worker declines ([`ShardTransport::submit`] returns
+///   `false`), fails (a `None` result), or times out is computed
+///   **in-thread from the coordinator's own model** — the same
+///   per-shard arithmetic, so the reply stays byte-identical and a
+///   dead worker degrades one shard's latency, never correctness;
+/// - results from an abandoned batch carry a stale job id and are
+///   discarded, so a partial failure can never splice old numbers into
+///   a new reply.
 struct ShardPool {
-    jobs: Vec<SyncSender<ShardJob>>,
-    results: Receiver<(u64, usize, Vec<f64>)>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    transport: Box<dyn ShardTransport>,
+    /// How long to wait for one shard's rows before computing that
+    /// shard in-thread (`[cluster] result_timeout_ms`; generous for the
+    /// local pool, where a shard MVM is milliseconds).
+    result_timeout: Duration,
     next_job: std::cell::Cell<u64>,
 }
 
 impl ShardPool {
-    /// How long to wait for one shard's rows before abandoning the
-    /// pool for this batch (generous: a shard MVM is milliseconds).
-    const RESULT_TIMEOUT: Duration = Duration::from_secs(10);
-
-    fn start(model: &Arc<RwLock<SimplexGp>>) -> ShardPool {
-        let p = model.read().unwrap().operator().lattice.shard_count();
-        let (res_tx, res_rx) = sync_channel::<(u64, usize, Vec<f64>)>(p.max(1));
-        let mut jobs = Vec::new();
-        let mut workers = Vec::new();
-        // P = 1: the direct in-thread path is strictly better; an empty
-        // pool makes mvm_block return None and the caller fall through.
-        if p > 1 {
-            for shard in 0..p {
-                let (tx, rx) = sync_channel::<ShardJob>(1);
-                jobs.push(tx);
-                let model = model.clone();
-                let res_tx = res_tx.clone();
-                workers.push(std::thread::spawn(move || {
-                    // Workers exit when the batcher drops the job senders.
-                    // Each job takes its own read lock: readers coexist
-                    // with the batcher's read lock, and ingest (the only
-                    // writer, on the batcher thread) never runs while a
-                    // job is in flight.
-                    while let Ok(job) = rx.recv() {
-                        let part = {
-                            let guard = model.read().unwrap();
-                            guard
-                                .operator()
-                                .lattice
-                                .shard_mvm_block(shard, &job.v, job.b)
-                        };
-                        if res_tx.send((job.job, shard, part)).is_err() {
-                            break;
-                        }
-                    }
-                }));
-            }
-        }
+    /// Start the pool for the model's current shard set: the TCP
+    /// transport when `[cluster] workers` is configured, the in-process
+    /// thread pool otherwise (P = 1 spawns nothing and keeps the
+    /// zero-copy direct path).
+    fn start(
+        model: &Arc<RwLock<SimplexGp>>,
+        cfg: &ServeConfig,
+        counters: &Counters,
+    ) -> ShardPool {
+        let transport: Box<dyn ShardTransport> = if cfg.cluster.workers.is_empty() {
+            Box::new(LocalTransport::start(model))
+        } else {
+            Box::new(TcpTransport::start(
+                model,
+                &cfg.cluster,
+                counters.remote_connected.clone(),
+            ))
+        };
         ShardPool {
-            jobs,
-            results: res_rx,
-            workers,
+            transport,
+            result_timeout: cfg.cluster.result_timeout,
             next_job: std::cell::Cell::new(0),
         }
     }
 
-    /// Kill worker `shard` deterministically (debug/test hook): drop its
-    /// job sender so the worker's `recv` errors and the thread exits,
-    /// then join it. Subsequent `mvm_block` calls see the dead sender,
-    /// return `None`, and the batcher falls back to the in-thread path —
-    /// exactly the degradation a crashed worker would cause, minus the
-    /// nondeterminism.
+    /// Kill the worker serving `shard` deterministically (debug/test
+    /// hook). Subsequent jobs for its shards fail fast and the batcher
+    /// computes them in-thread — exactly the degradation a crashed
+    /// worker would cause, minus the nondeterminism.
     fn kill_worker(&mut self, shard: usize) -> bool {
-        if shard >= self.jobs.len() {
-            return false;
-        }
-        let (dead_tx, dead_rx) = sync_channel::<ShardJob>(1);
-        drop(dead_rx); // sends to dead_tx fail immediately
-        drop(std::mem::replace(&mut self.jobs[shard], dead_tx));
-        if shard < self.workers.len() {
-            // Detach rather than join: a worker mid-send on a full
-            // results channel would block a join; dropping the handle
-            // lets it exit on its own once its recv errors.
-            drop(self.workers.remove(shard));
-        }
-        true
+        self.transport.kill(shard)
     }
 
-    /// Route one coalesced `b × n` block to the shard workers and
-    /// reassemble their replies in shard order. `None` if the pool is
-    /// empty (P = 1), a worker is gone, or a result times out — the
-    /// caller falls back to the in-thread path.
+    /// Propagate a streaming-ingest batch to the remote replica of
+    /// `shard` (no-op on the local transport).
+    fn propagate_ingest(&self, shard: usize, x: &[f64], expect_fingerprint: u64) {
+        self.transport.ingest(shard, x, expect_fingerprint);
+    }
+
+    /// Route one coalesced `b × n` block through the shard workers and
+    /// reassemble their replies in shard order. `None` only when the
+    /// pool is disabled (local transport at P = 1) — the caller runs
+    /// the direct zero-copy path. Otherwise the reply is always
+    /// produced: any shard the transport cannot serve is computed
+    /// in-thread, byte-identically.
     fn mvm_block(&self, lat: &ShardedLattice, v: &Arc<Vec<f64>>, b: usize) -> Option<Vec<f64>> {
-        if self.jobs.is_empty() {
+        let slots = self.transport.slots();
+        if slots == 0 {
             return None;
         }
         let job = self.next_job.get();
         self.next_job.set(job + 1);
         let n = lat.n;
-        let mut sent = 0usize;
-        for tx in &self.jobs {
-            if tx.send(ShardJob { v: v.clone(), b, job }).is_err() {
+        let mut out = vec![0.0; n * b];
+        let mut waiting = vec![false; slots];
+        let mut waiting_count = 0usize;
+        for p in 0..slots {
+            if self.transport.submit(p, lat, v, b, job) {
+                waiting[p] = true;
+                waiting_count += 1;
+            }
+        }
+        // Declined slots: compute in-thread while the accepted ones run
+        // remotely/concurrently.
+        for p in 0..slots {
+            if !waiting[p] {
+                let part = lat.shard_mvm_block(p, v, b);
+                lat.scatter_shard_block(&mut out, p, &part, b);
+            }
+        }
+        let deadline = Instant::now() + self.result_timeout;
+        while waiting_count > 0 {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
                 break;
             }
-            sent += 1;
-        }
-        // A partial broadcast means some shards never got the job: fall
-        // back immediately (don't wait on the in-flight results — they
-        // carry this job id and the stale-id drain below discards them
-        // on the next call).
-        if sent < self.jobs.len() {
-            return None;
-        }
-        let mut out = vec![0.0; n * b];
-        let mut received = 0usize;
-        while received < sent {
-            let (jid, p, part) = self.results.recv_timeout(Self::RESULT_TIMEOUT).ok()?;
-            if jid != job {
+            let Some((jid, p, part)) = self.transport.recv_result(remaining) else {
+                break;
+            };
+            if jid != job || p >= slots || !waiting[p] {
                 // Stale result from an abandoned batch — drop it.
                 continue;
             }
-            lat.scatter_shard_block(&mut out, p, &part, b);
-            received += 1;
+            waiting[p] = false;
+            waiting_count -= 1;
+            match part {
+                Some(part) => lat.scatter_shard_block(&mut out, p, &part, b),
+                // The worker accepted but failed the job: in-thread.
+                None => {
+                    let part = lat.shard_mvm_block(p, v, b);
+                    lat.scatter_shard_block(&mut out, p, &part, b);
+                }
+            }
+        }
+        // Timed-out shards: compute in-thread. A late result carries
+        // this job id and is discarded by the stale check above on the
+        // next call.
+        for p in 0..slots {
+            if waiting[p] {
+                let part = lat.shard_mvm_block(p, v, b);
+                lat.scatter_shard_block(&mut out, p, &part, b);
+            }
         }
         Some(out)
     }
 
     fn shutdown(self) {
-        drop(self.jobs);
-        for w in self.workers {
-            let _ = w.join();
-        }
+        self.transport.shutdown();
     }
 }
 
@@ -657,7 +680,10 @@ fn flush_batch(
         let y = std::mem::take(&mut batch.ingest_y);
         let rows = y.len();
         let mut guard = model.write().unwrap();
-        let result: Result<(usize, bool)> = if rows > cfg.max_ingest_batch {
+        // Third element: the post-ingest shard fingerprint, for
+        // propagating the delta to a remote replica (None on rebuild —
+        // the pool restarts and re-syncs replicas wholesale).
+        let result: Result<(usize, bool, Option<u64>)> = if rows > cfg.max_ingest_batch {
             // Past the incremental sweet spot: one full refit absorbs
             // the whole coalesced batch (appended at the end — the
             // rebuild repartitions anyway).
@@ -678,16 +704,27 @@ fn flush_batch(
                 *guard = fresh;
                 counters.rebuilds.fetch_add(1, Ordering::Relaxed);
                 rebuilt = true;
-                (0usize, true)
+                (0usize, true, None)
             })
         } else {
-            guard.ingest(&x, &y).map(|out| (out.shard, false))
+            guard.ingest(&x, &y).map(|out| {
+                let fp = guard.operator().lattice.shards[out.shard].fingerprint();
+                (out.shard, false, Some(fp))
+            })
         };
         let n_now = guard.n_train();
         drop(guard);
+        // Keep a remote replica in step: ship the same rows to the
+        // worker holding the ingested shard (per-link FIFO means any
+        // later mvm job sees the patched replica). No-op for the local
+        // pool, skipped when the link is down — its reconnect refresh
+        // rebuilds from the already patched model.
+        if let Ok((shard, false, Some(fp))) = &result {
+            pool.propagate_ingest(*shard, &x, *fp);
+        }
         counters.batches.fetch_add(1, Ordering::Relaxed);
         match result {
-            Ok((shard, was_rebuild)) => {
+            Ok((shard, was_rebuild, _)) => {
                 counters.ingested.fetch_add(rows as u64, Ordering::Relaxed);
                 for (id, req_rows, reply) in batch.ingests.drain(..) {
                     let mut obj = BTreeMap::new();
@@ -725,7 +762,7 @@ fn batch_loop(
     counters: Arc<Counters>,
 ) {
     let d = model.read().unwrap().d;
-    let mut pool = ShardPool::start(&model);
+    let mut pool = ShardPool::start(&model, &cfg, &counters);
     let mut batch = Batch::default();
     // Debug kill requests drain after the flush so in-flight batches
     // complete on the live pool first (deterministic ordering for the
@@ -827,6 +864,17 @@ fn batch_loop(
                     "rebuilds".to_string(),
                     Json::Num(counters.rebuilds.load(Ordering::Relaxed) as f64),
                 );
+                // Multi-node visibility: how many remote shard workers
+                // are configured vs currently connected-and-synced
+                // (0/0 under the in-process transport).
+                obj.insert(
+                    "cluster_workers".to_string(),
+                    Json::Num(cfg.cluster.workers.len() as f64),
+                );
+                obj.insert(
+                    "remote_workers".to_string(),
+                    Json::Num(counters.remote_connected.load(Ordering::Relaxed) as f64),
+                );
                 let _ = reply.send(Json::Obj(obj).to_string());
             }
             Work::KillWorker { id, shard, reply } => {
@@ -872,8 +920,12 @@ fn batch_loop(
             if rebuilt {
                 // A full refit may have changed the shard count (auto
                 // sharding scales with n): restart the worker pool
-                // against the fresh model.
-                let old = std::mem::replace(&mut pool, ShardPool::start(&model));
+                // against the fresh model. Remote transports reconnect
+                // and re-sync replicas against the rebuilt shards.
+                let old = std::mem::replace(
+                    &mut pool,
+                    ShardPool::start(&model, &cfg, &counters),
+                );
                 old.shutdown();
             }
         }
@@ -899,6 +951,8 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a running [`Server`] (JSON-lines client protocol,
+    /// `docs/PROTOCOL.md` §1).
     pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
@@ -1285,11 +1339,14 @@ mod tests {
 
     #[test]
     fn shard_pool_fallback_is_byte_identical_after_worker_death() {
-        // The direct ShardPool contract: a killed worker makes
-        // mvm_block return None, and the batcher's fallback result is
-        // byte-identical to what the pool produced before the death.
+        // The direct ShardPool contract: a killed worker's shard is
+        // computed in-thread, and the pool's reply stays byte-identical
+        // to what it produced before the death (the other shard still
+        // runs on its worker).
         let model = Arc::new(RwLock::new(sharded_model(2)));
-        let mut pool = ShardPool::start(&model);
+        let cfg = ServeConfig::default();
+        let counters = Counters::default();
+        let mut pool = ShardPool::start(&model, &cfg, &counters);
         let guard = model.read().unwrap();
         let n = guard.n_train();
         let lat = &guard.operator().lattice;
@@ -1303,17 +1360,31 @@ mod tests {
         }
         drop(guard);
         assert!(pool.kill_worker(0));
+        assert!(!pool.kill_worker(7), "out-of-range kill must report false");
         let guard = model.read().unwrap();
         let lat = &guard.operator().lattice;
-        assert!(
-            pool.mvm_block(lat, &v, b).is_none(),
-            "dead worker must abandon the pool path"
-        );
-        // The caller's fallback (exactly what flush_batch runs).
-        let fallback = lat.mvm_block(&v, b);
+        let degraded = pool
+            .mvm_block(lat, &v, b)
+            .expect("a dead worker degrades one shard, never the pool");
         for i in 0..n * b {
-            assert_eq!(fallback[i].to_bits(), direct[i].to_bits(), "row {i}");
+            assert_eq!(degraded[i].to_bits(), direct[i].to_bits(), "row {i}");
         }
+        drop(guard);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shard_pool_disabled_for_single_shard() {
+        // P = 1 keeps the zero-copy direct path: no workers, no pool.
+        let model = Arc::new(RwLock::new(tiny_model()));
+        let cfg = ServeConfig::default();
+        let counters = Counters::default();
+        let pool = ShardPool::start(&model, &cfg, &counters);
+        let guard = model.read().unwrap();
+        let n = guard.n_train();
+        let lat = &guard.operator().lattice;
+        let v = Arc::new(vec![1.0; n]);
+        assert!(pool.mvm_block(lat, &v, 1).is_none());
         drop(guard);
         pool.shutdown();
     }

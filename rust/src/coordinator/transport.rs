@@ -1,0 +1,933 @@
+//! Pluggable shard-worker transports: the job/result exchange between
+//! the coordinator's batcher and the P shard workers, behind one trait.
+//!
+//! PR 2 introduced the in-process shard pool: persistent threads fed
+//! over `sync_channel`s, each answering a coalesced `b × n` block with
+//! its shard's `b × n_p` rows. ARCHITECTURE.md promised that multi-node
+//! sharding would be "a transport swap, not a redesign" — this module is
+//! that swap. The exchange contract ([`ShardTransport`]) stays exactly
+//! the PR 2 one: submit a job per shard slot, collect `(job id, slot,
+//! rows)` results, degrade (never wedge) when a worker is gone.
+//!
+//! Two implementations:
+//!
+//! - [`LocalTransport`] — the original channel pair + worker threads,
+//!   bit for bit. For P = 1 it spawns nothing and reports zero slots,
+//!   preserving the zero-copy direct path into the single lattice.
+//! - [`TcpTransport`] — one I/O thread per configured remote worker
+//!   ([`crate::coordinator::worker`], the `shard-worker` CLI mode),
+//!   speaking the length-prefixed JSON frame protocol of
+//!   [`crate::coordinator::frame`] (`docs/PROTOCOL.md`). Shards are
+//!   assigned round-robin across workers; each connection handshakes
+//!   (protocol version, shard assignment) and syncs replicas with
+//!   `refresh_shard` ops verified by lattice fingerprints, then serves
+//!   `shard_mvm_block` jobs. Floats cross the wire through
+//!   [`crate::util::json`]'s bit-exact round trip, so remote replies
+//!   are byte-identical to local computation
+//!   (`rust/tests/remote_shard.rs` pins this over loopback).
+//!
+//! Failure semantics (both transports): a transport is an optimization,
+//! never a correctness dependency. A slot whose worker is dead,
+//! unsynced, or slow simply declines the job ([`ShardTransport::submit`]
+//! returns `false`) or fails it (a `None` result), and the batcher
+//! computes that shard in-thread from its own authoritative model —
+//! byte-identical output, degraded latency. [`TcpTransport`] additionally
+//! reconnects with exponential backoff and re-syncs replicas on
+//! reconnect, so a bounced worker rejoins without operator action.
+
+use std::collections::BTreeMap;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::frame::{write_frame, FrameReader, DEFAULT_MAX_FRAME_BYTES, POLL_READ_TIMEOUT};
+use crate::config::Config;
+use crate::gp::SimplexGp;
+use crate::lattice::ShardedLattice;
+use crate::util::json::Json;
+
+/// Version of the shard-worker frame protocol. The `hello` handshake
+/// carries it; a coordinator and worker must agree exactly (the
+/// protocol has no negotiation — see `docs/PROTOCOL.md` §Versioning).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// `[cluster]` configuration: remote shard workers and the transport's
+/// timeouts. An empty `workers` list means the in-process
+/// [`LocalTransport`] (the default deployment).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Remote worker addresses (`host:port`), comma-separated in the
+    /// config file / `--workers` flag. Shard `p` is assigned to worker
+    /// `p % workers.len()`.
+    pub workers: Vec<String>,
+    /// TCP connect timeout per attempt.
+    pub connect_timeout: Duration,
+    /// How long the batcher waits for one shard's rows before computing
+    /// that shard in-thread (also the per-op reply deadline on a live
+    /// connection).
+    pub result_timeout: Duration,
+    /// Reply deadline for `refresh_shard` (replica rebuilds scale with
+    /// shard size, so this is much longer than `result_timeout`).
+    pub refresh_timeout: Duration,
+    /// Initial reconnect backoff; doubles per failed attempt.
+    pub backoff: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+    /// Frame payload cap in bytes (both directions).
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            workers: Vec::new(),
+            connect_timeout: Duration::from_millis(1000),
+            result_timeout: Duration::from_secs(10),
+            refresh_timeout: Duration::from_secs(60),
+            backoff: Duration::from_millis(50),
+            backoff_max: Duration::from_millis(2000),
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Read the `[cluster]` section of a parsed config file (missing
+    /// keys fall back to the defaults above; `workers` is a
+    /// comma-separated string because the config grammar has no string
+    /// arrays).
+    pub fn from_config(cfg: &Config) -> ClusterConfig {
+        let base = ClusterConfig::default();
+        let ms = |key: &str, default: Duration| {
+            Duration::from_millis(
+                cfg.get_usize("cluster", key, default.as_millis() as usize) as u64
+            )
+        };
+        ClusterConfig {
+            workers: parse_worker_list(cfg.get_str("cluster", "workers", "")),
+            connect_timeout: ms("connect_timeout_ms", base.connect_timeout),
+            result_timeout: ms("result_timeout_ms", base.result_timeout),
+            refresh_timeout: ms("refresh_timeout_ms", base.refresh_timeout),
+            backoff: ms("backoff_ms", base.backoff),
+            backoff_max: ms("backoff_max_ms", base.backoff_max),
+            max_frame_bytes: cfg.get_usize("cluster", "frame_mb", 64) * 1024 * 1024,
+        }
+    }
+}
+
+/// Split a comma-separated `host:port` list (empty string → empty list).
+pub fn parse_worker_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|w| w.trim().to_string())
+        .filter(|w| !w.is_empty())
+        .collect()
+}
+
+/// One `shard_mvm_block` result: `(job id, shard slot, rows)`. `None`
+/// rows mean the worker failed the job after accepting it (connection
+/// died mid-roundtrip, stale replica, remote error) — the caller
+/// computes that shard in-thread.
+pub type ShardResultMsg = (u64, usize, Option<Vec<f64>>);
+
+/// The job/result exchange between the batcher and P shard workers.
+///
+/// Contract (identical to the PR 2 in-process pool):
+///
+/// - [`ShardTransport::slots`] shard slots exist, numbered by shard
+///   index; 0 means "no pool" and the caller runs the direct path.
+/// - [`ShardTransport::submit`] hands slot `p` one job for the shared
+///   `b × n` block; `false` means the worker cannot take it (dead,
+///   unsynced, or killed) and the caller owns that shard's compute.
+/// - Results arrive unordered via [`ShardTransport::recv_result`],
+///   tagged with the job id so stale results from abandoned batches are
+///   discarded, never spliced into a newer reply.
+/// - [`ShardTransport::ingest`] propagates a streaming-ingest batch to
+///   the worker replica holding `shard` (no-op for the local pool,
+///   whose workers read the coordinator's own just-patched model).
+/// - [`ShardTransport::kill`] deterministically disables the worker
+///   serving a slot (debug/test hook behind `ServeConfig::debug_ops`).
+pub trait ShardTransport: Send {
+    /// Number of shard slots this transport serves (0 = pool disabled).
+    fn slots(&self) -> usize;
+
+    /// Submit a `shard_mvm_block` job for shard `slot` of the coalesced
+    /// `b × n` block `v`. Returns `false` when the slot's worker cannot
+    /// take the job — the caller must compute that shard itself.
+    fn submit(
+        &self,
+        slot: usize,
+        lat: &ShardedLattice,
+        v: &Arc<Vec<f64>>,
+        b: usize,
+        job: u64,
+    ) -> bool;
+
+    /// Wait up to `timeout` for the next result message.
+    fn recv_result(&self, timeout: Duration) -> Option<ShardResultMsg>;
+
+    /// Propagate an ingest of `x` (row-major `k × d`) into `shard`'s
+    /// remote replica; `expect_fingerprint` is the coordinator's shard
+    /// fingerprint *after* the ingest, which the worker's reply must
+    /// match (a mismatch marks the replica unsynced and forces a
+    /// refresh on reconnect).
+    fn ingest(&self, shard: usize, x: &[f64], expect_fingerprint: u64);
+
+    /// Deterministically disable the worker serving `slot` (all slots
+    /// that worker holds degrade to in-thread compute). Returns whether
+    /// the slot existed.
+    fn kill(&mut self, slot: usize) -> bool;
+
+    /// Stop worker threads / close connections and join.
+    fn shutdown(self: Box<Self>);
+}
+
+// ---------------------------------------------------------------------
+// LocalTransport — the PR 2 in-process pool, verbatim.
+// ---------------------------------------------------------------------
+
+/// One coalesced block-MVM job, broadcast to every local shard worker.
+/// The full `b × n` block is shared (`Arc`) — each worker gathers only
+/// its shard's row segments.
+struct LocalJob {
+    v: Arc<Vec<f64>>,
+    b: usize,
+    job: u64,
+}
+
+/// P persistent in-process shard workers fed over channels: worker `p`
+/// owns shard `p` of the model's [`ShardedLattice`] and answers every
+/// coalesced block request with its shard's `b × n_p` rows. For P = 1
+/// no workers are spawned at all (the direct call is strictly cheaper
+/// than a channel hop) and [`ShardTransport::slots`] reports 0.
+pub struct LocalTransport {
+    jobs: Vec<SyncSender<LocalJob>>,
+    results: Receiver<ShardResultMsg>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl LocalTransport {
+    /// Spawn one worker thread per shard of the model's lattice
+    /// (none for P = 1). Each job takes its own read lock: readers
+    /// coexist with the batcher's read lock, and ingest (the only
+    /// writer, on the batcher thread) never runs while a job is in
+    /// flight.
+    pub fn start(model: &Arc<RwLock<SimplexGp>>) -> LocalTransport {
+        let p = model.read().unwrap().operator().lattice.shard_count();
+        let (res_tx, res_rx) = sync_channel::<ShardResultMsg>(p.max(1));
+        let mut jobs = Vec::new();
+        let mut workers = Vec::new();
+        if p > 1 {
+            for shard in 0..p {
+                let (tx, rx) = sync_channel::<LocalJob>(1);
+                jobs.push(tx);
+                let model = model.clone();
+                let res_tx = res_tx.clone();
+                workers.push(std::thread::spawn(move || {
+                    // Workers exit when the transport drops the job
+                    // senders.
+                    while let Ok(job) = rx.recv() {
+                        let part = {
+                            let guard = model.read().unwrap();
+                            guard
+                                .operator()
+                                .lattice
+                                .shard_mvm_block(shard, &job.v, job.b)
+                        };
+                        if res_tx.send((job.job, shard, Some(part))).is_err() {
+                            break;
+                        }
+                    }
+                }));
+            }
+        }
+        LocalTransport {
+            jobs,
+            results: res_rx,
+            workers,
+        }
+    }
+}
+
+impl ShardTransport for LocalTransport {
+    fn slots(&self) -> usize {
+        self.jobs.len()
+    }
+
+    fn submit(
+        &self,
+        slot: usize,
+        _lat: &ShardedLattice,
+        v: &Arc<Vec<f64>>,
+        b: usize,
+        job: u64,
+    ) -> bool {
+        self.jobs[slot]
+            .send(LocalJob {
+                v: v.clone(),
+                b,
+                job,
+            })
+            .is_ok()
+    }
+
+    fn recv_result(&self, timeout: Duration) -> Option<ShardResultMsg> {
+        self.results.recv_timeout(timeout).ok()
+    }
+
+    fn ingest(&self, _shard: usize, _x: &[f64], _expect_fingerprint: u64) {
+        // Local workers read the coordinator's own model, which the
+        // batcher has already patched — nothing to propagate.
+    }
+
+    /// Drop slot `slot`'s job sender so the worker's `recv` errors and
+    /// the thread exits. Subsequent `submit` calls fail fast and the
+    /// batcher computes that shard in-thread — exactly the degradation
+    /// a crashed worker would cause, minus the nondeterminism.
+    fn kill(&mut self, slot: usize) -> bool {
+        if slot >= self.jobs.len() {
+            return false;
+        }
+        let (dead_tx, dead_rx) = sync_channel::<LocalJob>(1);
+        drop(dead_rx); // sends to dead_tx fail immediately
+        drop(std::mem::replace(&mut self.jobs[slot], dead_tx));
+        if slot < self.workers.len() {
+            // Detach rather than join: a worker mid-send on a full
+            // results channel would block a join; dropping the handle
+            // lets it exit on its own once its recv errors.
+            drop(self.workers.remove(slot));
+        }
+        true
+    }
+
+    fn shutdown(self: Box<Self>) {
+        drop(self.jobs);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TcpTransport — remote shard workers over length-prefixed JSON frames.
+// ---------------------------------------------------------------------
+
+/// Message to a worker link's I/O thread. Per-link FIFO ordering is the
+/// consistency mechanism: an `Ingest` enqueued after the model update
+/// is applied to the replica before any later `Mvm` for the grown n.
+enum LinkMsg {
+    Mvm {
+        shard: usize,
+        job: u64,
+        b: usize,
+        local: Vec<f64>,
+    },
+    Ingest {
+        shard: usize,
+        x: Vec<f64>,
+        expect_fp: u64,
+    },
+}
+
+/// One remote worker endpoint: a dedicated I/O thread owns the
+/// connection (connect → handshake → sync → serve), fed over a bounded
+/// channel. `ready` is true only while the connection is up and every
+/// assigned shard's replica fingerprint has been verified.
+struct WorkerLink {
+    tx: Option<SyncSender<LinkMsg>>,
+    ready: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    /// Set when an ingest delta could not be enqueued for a ready link
+    /// (queue full behind a slow worker): the I/O thread must drop the
+    /// connection and re-sync rather than keep serving a replica that
+    /// missed the patch.
+    unsync: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Remote shard pool: shards assigned round-robin over the configured
+/// worker addresses, jobs shipped as `b × n_p` gathered blocks, replies
+/// byte-identical to local compute (bit-exact float round trip).
+pub struct TcpTransport {
+    links: Vec<WorkerLink>,
+    /// `assignment[p]` = index into `links` serving shard `p`.
+    assignment: Vec<usize>,
+    results: Receiver<ShardResultMsg>,
+    slots: usize,
+}
+
+impl TcpTransport {
+    /// Connect the configured workers to the model's shard set.
+    /// Returns immediately; connections are established (and re-
+    /// established) in the background, and unsynced slots decline jobs
+    /// until their replicas verify. `connected_gauge` is incremented /
+    /// decremented as links come up and down (the coordinator's `stats`
+    /// op reports it as `remote_workers`).
+    pub fn start(
+        model: &Arc<RwLock<SimplexGp>>,
+        cluster: &ClusterConfig,
+        connected_gauge: Arc<AtomicU64>,
+    ) -> TcpTransport {
+        let slots = model.read().unwrap().operator().lattice.shard_count();
+        let w = cluster.workers.len();
+        assert!(w > 0, "TcpTransport needs at least one worker address");
+        let assignment: Vec<usize> = (0..slots).map(|p| p % w).collect();
+        let (res_tx, res_rx) = sync_channel::<ShardResultMsg>(slots.max(1));
+        let mut links = Vec::with_capacity(w);
+        for (wi, addr) in cluster.workers.iter().enumerate() {
+            let assigned: Vec<usize> =
+                (0..slots).filter(|p| assignment[*p] == wi).collect();
+            if assigned.is_empty() {
+                // More workers than shards: idle link, never connected.
+                links.push(WorkerLink {
+                    tx: None,
+                    ready: Arc::new(AtomicBool::new(false)),
+                    stop: Arc::new(AtomicBool::new(true)),
+                    unsync: Arc::new(AtomicBool::new(false)),
+                    handle: None,
+                });
+                continue;
+            }
+            let (tx, rx) = sync_channel::<LinkMsg>(assigned.len() + 1);
+            let ready = Arc::new(AtomicBool::new(false));
+            let stop = Arc::new(AtomicBool::new(false));
+            let unsync = Arc::new(AtomicBool::new(false));
+            let io = LinkIo {
+                addr: addr.clone(),
+                assigned,
+                model: model.clone(),
+                cluster: cluster.clone(),
+                ready: ready.clone(),
+                stop: stop.clone(),
+                unsync: unsync.clone(),
+                res_tx: res_tx.clone(),
+                gauge: connected_gauge.clone(),
+            };
+            let handle = std::thread::spawn(move || io.run(rx));
+            links.push(WorkerLink {
+                tx: Some(tx),
+                ready,
+                stop,
+                unsync,
+                handle: Some(handle),
+            });
+        }
+        TcpTransport {
+            links,
+            assignment,
+            results: res_rx,
+            slots,
+        }
+    }
+}
+
+impl ShardTransport for TcpTransport {
+    fn slots(&self) -> usize {
+        self.slots
+    }
+
+    fn submit(
+        &self,
+        slot: usize,
+        lat: &ShardedLattice,
+        v: &Arc<Vec<f64>>,
+        b: usize,
+        job: u64,
+    ) -> bool {
+        let link = &self.links[self.assignment[slot]];
+        if !link.ready.load(Ordering::Acquire) {
+            return false;
+        }
+        let Some(tx) = link.tx.as_ref() else {
+            return false;
+        };
+        let local = lat.gather_shard_block(slot, v, b);
+        // Non-blocking: a queue still full behind a slow worker means
+        // "decline" (the caller computes this shard in-thread) — never
+        // a stalled batcher.
+        tx.try_send(LinkMsg::Mvm {
+            shard: slot,
+            job,
+            b,
+            local,
+        })
+        .is_ok()
+    }
+
+    fn recv_result(&self, timeout: Duration) -> Option<ShardResultMsg> {
+        self.results.recv_timeout(timeout).ok()
+    }
+
+    fn ingest(&self, shard: usize, x: &[f64], expect_fingerprint: u64) {
+        if shard >= self.assignment.len() {
+            return;
+        }
+        let link = &self.links[self.assignment[shard]];
+        // An unsynced link will full-refresh from the (already patched)
+        // model on reconnect — enqueueing the delta would double-apply.
+        if !link.ready.load(Ordering::Acquire) {
+            return;
+        }
+        if let Some(tx) = link.tx.as_ref() {
+            // Non-blocking like `submit`. A ready link that cannot take
+            // the delta (queue full behind a slow worker) must NOT keep
+            // serving its now-stale replica: flag it so the I/O thread
+            // drops the connection and re-syncs from the patched model.
+            if tx
+                .try_send(LinkMsg::Ingest {
+                    shard,
+                    x: x.to_vec(),
+                    expect_fp: expect_fingerprint,
+                })
+                .is_err()
+            {
+                link.ready.store(false, Ordering::Release);
+                link.unsync.store(true, Ordering::Release);
+            }
+        }
+    }
+
+    /// Kill the worker link serving `slot`: every shard assigned to
+    /// that worker degrades to in-thread compute, and the link never
+    /// reconnects (deterministic — the failure-path tests rely on it).
+    fn kill(&mut self, slot: usize) -> bool {
+        if slot >= self.assignment.len() {
+            return false;
+        }
+        let link = &mut self.links[self.assignment[slot]];
+        link.stop.store(true, Ordering::Release);
+        link.ready.store(false, Ordering::Release);
+        link.tx = None; // disconnects the I/O thread's queue
+        true
+    }
+
+    fn shutdown(mut self: Box<Self>) {
+        for link in &mut self.links {
+            link.stop.store(true, Ordering::Release);
+            link.tx = None;
+        }
+        for link in &mut self.links {
+            if let Some(h) = link.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Everything a worker link's I/O thread owns.
+struct LinkIo {
+    addr: String,
+    assigned: Vec<usize>,
+    model: Arc<RwLock<SimplexGp>>,
+    cluster: ClusterConfig,
+    ready: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    unsync: Arc<AtomicBool>,
+    res_tx: SyncSender<ShardResultMsg>,
+    gauge: Arc<AtomicU64>,
+}
+
+/// A live, synced connection: writer half + framed reader half.
+struct Conn {
+    writer: TcpStream,
+    reader: FrameReader<TcpStream>,
+}
+
+impl LinkIo {
+    fn run(self, rx: Receiver<LinkMsg>) {
+        let mut conn: Option<Conn> = None;
+        let mut backoff = self.cluster.backoff;
+        let mut next_attempt = Instant::now();
+        let mut last_err = String::new();
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                break;
+            }
+            // A dropped ingest delta (queue full) marked us unsynced:
+            // the replica missed a patch, so the connection must go and
+            // the reconnect refresh rebuild from the patched model.
+            if self.unsync.swap(false, Ordering::AcqRel) && conn.is_some() {
+                self.drop_conn(&mut conn);
+                next_attempt = Instant::now();
+            }
+            if conn.is_none() && Instant::now() >= next_attempt {
+                match self.connect_and_sync() {
+                    Ok(c) => {
+                        conn = Some(c);
+                        self.ready.store(true, Ordering::Release);
+                        self.gauge.fetch_add(1, Ordering::Relaxed);
+                        backoff = self.cluster.backoff;
+                        last_err.clear();
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        if msg != last_err {
+                            eprintln!(
+                                "shard-worker {}: connect/sync failed: {msg} \
+                                 (retrying with backoff)",
+                                self.addr
+                            );
+                            last_err = msg;
+                        }
+                        next_attempt = Instant::now() + backoff;
+                        backoff = (backoff * 2).min(self.cluster.backoff_max);
+                    }
+                }
+            }
+            match rx.recv_timeout(POLL_READ_TIMEOUT) {
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+                Ok(msg) => {
+                    let lost = match conn.as_mut() {
+                        None => {
+                            // Not connected: fail the job fast so the
+                            // batcher computes the shard in-thread.
+                            self.fail_msg(&msg);
+                            continue;
+                        }
+                        Some(c) => self.handle_msg(c, msg),
+                    };
+                    if lost {
+                        self.drop_conn(&mut conn);
+                        next_attempt = Instant::now() + backoff;
+                    }
+                }
+            }
+        }
+        self.drop_conn(&mut conn);
+    }
+
+    /// Mark the link down (gauge, ready flag) and close the socket.
+    fn drop_conn(&self, conn: &mut Option<Conn>) {
+        if conn.take().is_some() {
+            self.ready.store(false, Ordering::Release);
+            self.gauge.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Fail a message we cannot serve: MVM jobs get a `None` result so
+    /// the batcher falls back immediately; ingest deltas are dropped —
+    /// the reconnect refresh rebuilds the replica from the already
+    /// patched model.
+    fn fail_msg(&self, msg: &LinkMsg) {
+        if let LinkMsg::Mvm { shard, job, .. } = msg {
+            let _ = self.res_tx.send((*job, *shard, None));
+        }
+    }
+
+    /// Serve one message on a live connection. Returns `true` when the
+    /// connection must be dropped (I/O error, protocol violation, or a
+    /// replica that no longer matches the model).
+    fn handle_msg(&self, conn: &mut Conn, msg: LinkMsg) -> bool {
+        match msg {
+            LinkMsg::Mvm {
+                shard,
+                job,
+                b,
+                local,
+            } => {
+                let expect_len = local.len();
+                match self.roundtrip_mvm(conn, shard, job, b, &local) {
+                    Ok(u) if u.len() == expect_len => {
+                        let _ = self.res_tx.send((job, shard, Some(u)));
+                        false
+                    }
+                    Ok(u) => {
+                        // Stale replica (wrong n_p): fall back and force
+                        // a resync.
+                        eprintln!(
+                            "shard-worker {}: shard {shard} replied {} rows, \
+                             expected {expect_len} — resyncing",
+                            self.addr,
+                            u.len()
+                        );
+                        let _ = self.res_tx.send((job, shard, None));
+                        true
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "shard-worker {}: shard {shard} mvm failed: {e} — \
+                             falling back locally",
+                            self.addr
+                        );
+                        let _ = self.res_tx.send((job, shard, None));
+                        true
+                    }
+                }
+            }
+            LinkMsg::Ingest {
+                shard,
+                x,
+                expect_fp,
+            } => match self.roundtrip_ingest(conn, shard, &x, expect_fp) {
+                Ok(()) => false,
+                Err(e) => {
+                    eprintln!(
+                        "shard-worker {}: shard {shard} ingest propagation \
+                         failed: {e} — replica will refresh on reconnect",
+                        self.addr
+                    );
+                    true
+                }
+            },
+        }
+    }
+
+    fn roundtrip_mvm(
+        &self,
+        conn: &mut Conn,
+        shard: usize,
+        job: u64,
+        b: usize,
+        local: &[f64],
+    ) -> Result<Vec<f64>> {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".to_string(), Json::Str("shard_mvm_block".to_string()));
+        obj.insert("shard".to_string(), Json::Num(shard as f64));
+        obj.insert("job".to_string(), Json::Num(job as f64));
+        // `b` is explicit so the worker can reject a stale replica even
+        // when the block length happens to divide by its old n_p — a
+        // stale replica must fail the job, never return plausible rows.
+        obj.insert("b".to_string(), Json::Num(b as f64));
+        obj.insert("v".to_string(), Json::num_array(local));
+        write_frame(&mut conn.writer, &Json::Obj(obj))?;
+        let deadline = Instant::now() + self.cluster.result_timeout;
+        let reply = conn
+            .reader
+            .read_frame(Some(&self.stop), Some(deadline))?
+            .ok_or_else(|| anyhow!("connection closed"))?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            bail!("worker error: {err}");
+        }
+        reply
+            .get("u")
+            .and_then(|u| u.to_f64_vec())
+            .ok_or_else(|| anyhow!("reply missing u"))
+    }
+
+    fn roundtrip_ingest(
+        &self,
+        conn: &mut Conn,
+        shard: usize,
+        x: &[f64],
+        expect_fp: u64,
+    ) -> Result<()> {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".to_string(), Json::Str("ingest".to_string()));
+        obj.insert("shard".to_string(), Json::Num(shard as f64));
+        obj.insert("x".to_string(), Json::num_array(x));
+        write_frame(&mut conn.writer, &Json::Obj(obj))?;
+        let deadline = Instant::now() + self.cluster.result_timeout;
+        let reply = conn
+            .reader
+            .read_frame(Some(&self.stop), Some(deadline))?
+            .ok_or_else(|| anyhow!("connection closed"))?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            bail!("worker error: {err}");
+        }
+        let fp = reply
+            .get("fingerprint")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| anyhow!("ingest reply missing fingerprint"))?;
+        if fp != format_fp(expect_fp) {
+            bail!(
+                "replica fingerprint {fp} != expected {} after ingest",
+                format_fp(expect_fp)
+            );
+        }
+        Ok(())
+    }
+
+    /// Dial, handshake, and sync every assigned shard's replica. A
+    /// shard the worker already holds at the expected fingerprint (the
+    /// `hello` reply lists held shards) skips its `refresh_shard` —
+    /// reconnects after a coordinator or network bounce are cheap.
+    fn connect_and_sync(&self) -> Result<Conn> {
+        let addr = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| anyhow!("resolve {}: {e}", self.addr))?
+            .next()
+            .ok_or_else(|| anyhow!("resolve {}: no addresses", self.addr))?;
+        let stream = TcpStream::connect_timeout(&addr, self.cluster.connect_timeout)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(POLL_READ_TIMEOUT))?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = FrameReader::new(stream, self.cluster.max_frame_bytes);
+
+        // Handshake: protocol version + shard assignment.
+        let mut hello = BTreeMap::new();
+        hello.insert("op".to_string(), Json::Str("hello".to_string()));
+        hello.insert("version".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+        hello.insert(
+            "shards".to_string(),
+            Json::Arr(
+                self.assigned
+                    .iter()
+                    .map(|&p| Json::Num(p as f64))
+                    .collect(),
+            ),
+        );
+        write_frame(&mut writer, &Json::Obj(hello))?;
+        let deadline = Instant::now() + self.cluster.result_timeout;
+        let reply = reader
+            .read_frame(Some(&self.stop), Some(deadline))?
+            .ok_or_else(|| anyhow!("connection closed during handshake"))?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            bail!("handshake rejected: {err}");
+        }
+        let version = reply.get("version").and_then(|v| v.as_f64());
+        if version != Some(PROTOCOL_VERSION as f64) {
+            bail!(
+                "protocol version mismatch: worker speaks {version:?}, \
+                 coordinator speaks {PROTOCOL_VERSION}"
+            );
+        }
+        // Fingerprints of shards the worker already holds.
+        let mut held: BTreeMap<usize, String> = BTreeMap::new();
+        if let Some(list) = reply.get("shards").and_then(|s| s.as_arr()) {
+            for item in list {
+                if let (Some(p), Some(fp)) = (
+                    item.get("shard").and_then(|v| v.as_usize()),
+                    item.get("fingerprint").and_then(|v| v.as_str()),
+                ) {
+                    held.insert(p, fp.to_string());
+                }
+            }
+        }
+
+        let mut synced: Vec<(usize, u64)> = Vec::with_capacity(self.assigned.len());
+        for &p in &self.assigned {
+            // Snapshot the shard under the read lock, then do the slow
+            // network work without holding it.
+            let (msg, expect_fp) = {
+                let guard = self.model.read().unwrap();
+                let lat = &guard.operator().lattice;
+                if p >= lat.shard_count() {
+                    bail!("shard {p} no longer exists (model rebuilt)");
+                }
+                let fp = lat.shards[p].fingerprint();
+                if held.get(&p) == Some(&format_fp(fp)) {
+                    (None, fp) // replica already matches — skip refresh
+                } else {
+                    let d = lat.d;
+                    let (s0, s1) = (lat.bounds[p], lat.bounds[p + 1]);
+                    let mut obj = BTreeMap::new();
+                    obj.insert(
+                        "op".to_string(),
+                        Json::Str("refresh_shard".to_string()),
+                    );
+                    obj.insert("shard".to_string(), Json::Num(p as f64));
+                    obj.insert("d".to_string(), Json::Num(d as f64));
+                    obj.insert(
+                        "order".to_string(),
+                        Json::Num(guard.config.order as f64),
+                    );
+                    let mut kern = BTreeMap::new();
+                    kern.insert(
+                        "family".to_string(),
+                        Json::Str(guard.kernel.family.name().to_string()),
+                    );
+                    kern.insert(
+                        "outputscale".to_string(),
+                        Json::Num(guard.kernel.outputscale),
+                    );
+                    kern.insert(
+                        "lengthscales".to_string(),
+                        Json::num_array(&guard.kernel.lengthscales),
+                    );
+                    obj.insert("kernel".to_string(), Json::Obj(kern));
+                    obj.insert(
+                        "x".to_string(),
+                        Json::num_array(&guard.x_train[s0 * d..s1 * d]),
+                    );
+                    (Some(Json::Obj(obj)), fp)
+                }
+            };
+            synced.push((p, expect_fp));
+            let Some(msg) = msg else { continue };
+            write_frame(&mut writer, &msg)?;
+            let deadline = Instant::now() + self.cluster.refresh_timeout;
+            let reply = reader
+                .read_frame(Some(&self.stop), Some(deadline))?
+                .ok_or_else(|| anyhow!("connection closed during refresh"))?;
+            if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+                bail!("refresh_shard {p} rejected: {err}");
+            }
+            let fp = reply
+                .get("fingerprint")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("refresh reply missing fingerprint"))?;
+            if fp != format_fp(expect_fp) {
+                bail!(
+                    "shard {p} replica fingerprint {fp} != {} — \
+                     worker build diverges from coordinator",
+                    format_fp(expect_fp)
+                );
+            }
+        }
+        // Close the snapshot race: an ingest that landed while the
+        // refresh frames were in flight was NOT propagated to this link
+        // (the batcher skips non-ready links, and we only go ready when
+        // this function returns). Re-verify every assigned shard against
+        // the *current* model — any drift fails the sync, and the
+        // immediate retry snapshots the patched state.
+        {
+            let guard = self.model.read().unwrap();
+            let lat = &guard.operator().lattice;
+            for &(p, fp) in &synced {
+                if p >= lat.shard_count() || lat.shards[p].fingerprint() != fp {
+                    bail!("model changed during replica sync (shard {p}); resyncing");
+                }
+            }
+        }
+        Ok(Conn { writer, reader })
+    }
+}
+
+/// Canonical wire encoding of a lattice fingerprint (u64 exceeds f64's
+/// exact integer range, so it travels as a fixed-width hex string).
+pub fn format_fp(fp: u64) -> String {
+    format!("{fp:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_list_parsing() {
+        assert!(parse_worker_list("").is_empty());
+        assert_eq!(
+            parse_worker_list("a:1, b:2 ,,c:3"),
+            vec!["a:1", "b:2", "c:3"]
+        );
+    }
+
+    #[test]
+    fn cluster_config_from_file() {
+        let cfg = Config::parse(
+            "[cluster]\nworkers = \"127.0.0.1:7900,127.0.0.1:7901\"\n\
+             result_timeout_ms = 500\nframe_mb = 8\nbackoff_ms = 10\n",
+        )
+        .unwrap();
+        let cc = ClusterConfig::from_config(&cfg);
+        assert_eq!(cc.workers.len(), 2);
+        assert_eq!(cc.result_timeout, Duration::from_millis(500));
+        assert_eq!(cc.max_frame_bytes, 8 * 1024 * 1024);
+        assert_eq!(cc.backoff, Duration::from_millis(10));
+        // Unset keys keep the defaults.
+        assert_eq!(cc.connect_timeout, Duration::from_millis(1000));
+        assert_eq!(cc.refresh_timeout, Duration::from_secs(60));
+    }
+
+    #[test]
+    fn fingerprint_wire_encoding_is_fixed_width() {
+        assert_eq!(format_fp(0), "0000000000000000");
+        assert_eq!(format_fp(u64::MAX), "ffffffffffffffff");
+        assert_eq!(format_fp(0xdead_beef), "00000000deadbeef");
+    }
+}

@@ -1,0 +1,650 @@
+//! The remote shard worker — the server half of the multi-node shard
+//! transport (`simplex-gp shard-worker`).
+//!
+//! A [`ShardWorker`] holds replicas of one or more shard lattices and
+//! serves the coordinator's [`crate::coordinator::transport::TcpTransport`]
+//! over the length-prefixed JSON frame protocol of
+//! [`crate::coordinator::frame`] (normative spec: `docs/PROTOCOL.md`).
+//! It starts *empty*: the coordinator pushes each assigned shard's
+//! points and kernel with `refresh_shard`, the worker rebuilds the
+//! lattice locally (the build is deterministic, so the replica is
+//! bitwise the coordinator's shard — verified by fingerprint), and from
+//! then on answers `shard_mvm_block` jobs with its shard's `b × n_p`
+//! rows and absorbs streaming `ingest` deltas in place.
+//!
+//! Shard state is shared across connections, so a coordinator that
+//! bounces (or a network blip that forces a reconnect) finds its
+//! replicas still warm: the `hello` reply lists held shards with
+//! fingerprints and the coordinator skips `refresh_shard` for every
+//! replica that still matches.
+//!
+//! The worker is stateless with respect to the GP itself — it never
+//! sees targets, representer weights, or the preconditioner. It holds
+//! exactly what a `shard_mvm_block` needs: the shard lattice and its
+//! kernel. All aggregation (shard-order reassembly, cross-shard
+//! reductions, solves) stays on the coordinator.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::frame::{write_frame, FrameReader, DEFAULT_MAX_FRAME_BYTES, POLL_READ_TIMEOUT};
+use super::transport::{format_fp, PROTOCOL_VERSION};
+use crate::kernels::{ArdKernel, KernelFamily};
+use crate::lattice::PermutohedralLattice;
+use crate::util::json::Json;
+
+/// Shard-worker configuration (CLI flags of the `shard-worker`
+/// subcommand; see also `[cluster] frame_mb`).
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Listen address (`host:port`; port 0 binds an ephemeral port,
+    /// reported via [`ShardWorker::local_addr`]).
+    pub listen: String,
+    /// Frame payload cap in bytes (both directions). Must admit the
+    /// largest `refresh_shard` (≈ 25 bytes per coordinate) and
+    /// `shard_mvm_block` (≈ 25 bytes per float, `b × n_p` of them) the
+    /// deployment will see.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            listen: "127.0.0.1:7900".to_string(),
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+/// One shard replica: the lattice plus the kernel it was built with
+/// (needed to absorb `ingest` deltas with identical arithmetic).
+struct HeldShard {
+    lattice: PermutohedralLattice,
+    kernel: ArdKernel,
+}
+
+/// State shared by every connection: the held shard replicas and the
+/// served-jobs counter.
+struct WorkerState {
+    shards: Mutex<BTreeMap<usize, HeldShard>>,
+    served: AtomicU64,
+}
+
+/// Running shard-worker handle (test and embedding entry point; the
+/// CLI wraps it and blocks).
+pub struct ShardWorker {
+    /// Address the listener actually bound (resolves `:0` requests).
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    state: Arc<WorkerState>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardWorker {
+    /// Bind and start serving in background threads; returns
+    /// immediately.
+    pub fn start(cfg: WorkerConfig) -> Result<ShardWorker> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| anyhow!("bind {}: {e}", cfg.listen))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(WorkerState {
+            shards: Mutex::new(BTreeMap::new()),
+            served: AtomicU64::new(0),
+        });
+        let accept_stop = stop.clone();
+        let accept_state = state.clone();
+        let max_frame = cfg.max_frame_bytes;
+        let accept_thread = std::thread::spawn(move || {
+            while !accept_stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let stop = accept_stop.clone();
+                        let state = accept_state.clone();
+                        std::thread::spawn(move || {
+                            let _ = serve_connection(stream, state, stop, max_frame);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(ShardWorker {
+            local_addr,
+            stop,
+            state,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// `shard_mvm_block` jobs answered so far (tests assert the remote
+    /// path actually ran, not just that the fallback was correct).
+    pub fn served(&self) -> u64 {
+        self.state.served.load(Ordering::Relaxed)
+    }
+
+    /// Shard ids currently held (replicas synced by a coordinator).
+    pub fn held_shards(&self) -> Vec<usize> {
+        self.state.shards.lock().unwrap().keys().copied().collect()
+    }
+
+    /// Stop accepting, wind down connection threads, and join.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve one coordinator connection: framed request → framed reply,
+/// strictly in order (the transport relies on per-connection FIFO for
+/// ingest/mvm consistency).
+fn serve_connection(
+    stream: TcpStream,
+    state: Arc<WorkerState>,
+    stop: Arc<AtomicBool>,
+    max_frame: usize,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(POLL_READ_TIMEOUT))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = FrameReader::new(stream, max_frame);
+    while let Some(req) = reader.read_frame(Some(&stop), None)? {
+        let reply = handle_op(&req, &state);
+        write_frame(&mut writer, &reply)?;
+    }
+    let _ = writer.flush();
+    Ok(())
+}
+
+fn err_reply(req: &Json, msg: String) -> Json {
+    let mut obj = BTreeMap::new();
+    // Echo the routing fields so the coordinator can attribute the
+    // failure to the right job/shard.
+    for key in ["job", "shard"] {
+        if let Some(v) = req.get(key) {
+            obj.insert(key.to_string(), v.clone());
+        }
+    }
+    obj.insert("error".to_string(), Json::Str(msg));
+    Json::Obj(obj)
+}
+
+/// Shard status object used by `hello` and `stats` replies.
+fn shard_status(p: usize, held: &HeldShard) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("shard".to_string(), Json::Num(p as f64));
+    obj.insert("n".to_string(), Json::Num(held.lattice.n as f64));
+    obj.insert("m".to_string(), Json::Num(held.lattice.m as f64));
+    obj.insert(
+        "fingerprint".to_string(),
+        Json::Str(format_fp(held.lattice.fingerprint())),
+    );
+    Json::Obj(obj)
+}
+
+fn handle_op(req: &Json, state: &WorkerState) -> Json {
+    match req.get("op").and_then(|v| v.as_str()) {
+        Some("hello") => {
+            let version = req.get("version").and_then(|v| v.as_f64());
+            if version != Some(PROTOCOL_VERSION as f64) {
+                return err_reply(
+                    req,
+                    format!(
+                        "protocol version mismatch: coordinator speaks {version:?}, \
+                         worker speaks {PROTOCOL_VERSION}"
+                    ),
+                );
+            }
+            let shards = state.shards.lock().unwrap();
+            let mut obj = BTreeMap::new();
+            obj.insert("ok".to_string(), Json::Num(1.0));
+            obj.insert("version".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+            obj.insert(
+                "shards".to_string(),
+                Json::Arr(shards.iter().map(|(p, h)| shard_status(*p, h)).collect()),
+            );
+            Json::Obj(obj)
+        }
+        Some("refresh_shard") => match refresh_shard(req, state) {
+            Ok(reply) => reply,
+            Err(e) => err_reply(req, e.to_string()),
+        },
+        Some("shard_mvm_block") => match shard_mvm_block(req, state) {
+            Ok(reply) => reply,
+            Err(e) => err_reply(req, e.to_string()),
+        },
+        Some("ingest") => match ingest(req, state) {
+            Ok(reply) => reply,
+            Err(e) => err_reply(req, e.to_string()),
+        },
+        Some("stats") => {
+            let shards = state.shards.lock().unwrap();
+            let mut obj = BTreeMap::new();
+            obj.insert("ok".to_string(), Json::Num(1.0));
+            obj.insert("version".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+            obj.insert(
+                "served".to_string(),
+                Json::Num(state.served.load(Ordering::Relaxed) as f64),
+            );
+            obj.insert(
+                "shards".to_string(),
+                Json::Arr(shards.iter().map(|(p, h)| shard_status(*p, h)).collect()),
+            );
+            Json::Obj(obj)
+        }
+        _ => err_reply(
+            req,
+            "unknown op (use hello | refresh_shard | shard_mvm_block | ingest | stats)"
+                .to_string(),
+        ),
+    }
+}
+
+/// Build (or rebuild) one shard replica from pushed points + kernel.
+fn refresh_shard(req: &Json, state: &WorkerState) -> Result<Json> {
+    let shard = req
+        .get("shard")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("refresh_shard needs shard"))?;
+    let d = req
+        .get("d")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("refresh_shard needs d"))?;
+    if d == 0 {
+        return Err(anyhow!("d must be >= 1"));
+    }
+    let order = req
+        .get("order")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("refresh_shard needs order"))?;
+    let kern = req
+        .get("kernel")
+        .ok_or_else(|| anyhow!("refresh_shard needs kernel"))?;
+    let family_name = kern
+        .get("family")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("kernel needs family"))?;
+    let family = KernelFamily::parse(family_name)
+        .ok_or_else(|| anyhow!("unknown kernel family '{family_name}'"))?;
+    let lengthscales = kern
+        .get("lengthscales")
+        .and_then(|v| v.to_f64_vec())
+        .ok_or_else(|| anyhow!("kernel needs lengthscales"))?;
+    if lengthscales.len() != d {
+        return Err(anyhow!(
+            "kernel has {} lengthscales for d = {d}",
+            lengthscales.len()
+        ));
+    }
+    let outputscale = kern
+        .get("outputscale")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("kernel needs outputscale"))?;
+    let x = req
+        .get("x")
+        .and_then(|v| v.to_f64_vec())
+        .ok_or_else(|| anyhow!("refresh_shard needs x"))?;
+    if x.is_empty() || x.len() % d != 0 {
+        return Err(anyhow!("x length {} is not a positive multiple of d = {d}", x.len()));
+    }
+    let kernel = ArdKernel {
+        family,
+        outputscale,
+        lengthscales,
+    };
+    let lattice = PermutohedralLattice::build(&x, d, &kernel, order);
+    let held = HeldShard { lattice, kernel };
+    let reply = ok_shard_reply(shard, &held, None);
+    state.shards.lock().unwrap().insert(shard, held);
+    Ok(reply)
+}
+
+/// Answer one `b × n_p` block job from the shard replica. The block
+/// length must equal exactly `b × n_p` for the replica's n_p — `b` is
+/// explicit in the request precisely so a stale replica (missed or
+/// double-applied ingest ⇒ different n_p) can never reinterpret the
+/// block at a different width and return plausible-but-wrong rows; it
+/// fails the job and the coordinator falls back and resyncs.
+fn shard_mvm_block(req: &Json, state: &WorkerState) -> Result<Json> {
+    let shard = req
+        .get("shard")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("shard_mvm_block needs shard"))?;
+    let job = req
+        .get("job")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("shard_mvm_block needs job"))?;
+    let b = req
+        .get("b")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("shard_mvm_block needs b"))?;
+    if b == 0 {
+        return Err(anyhow!("b must be >= 1"));
+    }
+    let v = req
+        .get("v")
+        .and_then(|v| v.to_f64_vec())
+        .ok_or_else(|| anyhow!("shard_mvm_block needs v"))?;
+    let shards = state.shards.lock().unwrap();
+    let held = shards
+        .get(&shard)
+        .ok_or_else(|| anyhow!("shard {shard} not held (refresh_shard first)"))?;
+    let np = held.lattice.n;
+    if v.len() != b * np {
+        return Err(anyhow!(
+            "block length {} != b × n_p = {b} × {np} (replica stale?)",
+            v.len()
+        ));
+    }
+    // Identical arithmetic to `ShardedLattice::shard_mvm_block`, which
+    // gathers the segment and calls the shard lattice's `filter_block`:
+    // here the coordinator already gathered, so this IS that call —
+    // byte-identical rows by construction.
+    let u = held.lattice.filter_block(&v, b);
+    state.served.fetch_add(1, Ordering::Relaxed);
+    let mut obj = BTreeMap::new();
+    obj.insert("job".to_string(), Json::Num(job));
+    obj.insert("shard".to_string(), Json::Num(shard as f64));
+    obj.insert("u".to_string(), Json::num_array(&u));
+    Ok(Json::Obj(obj))
+}
+
+/// Absorb a streaming-ingest delta into the shard replica (same
+/// incremental patch as the coordinator's own
+/// [`PermutohedralLattice::ingest`], hence the same resulting bits —
+/// the reply fingerprint proves it).
+fn ingest(req: &Json, state: &WorkerState) -> Result<Json> {
+    let shard = req
+        .get("shard")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("ingest needs shard"))?;
+    let x = req
+        .get("x")
+        .and_then(|v| v.to_f64_vec())
+        .ok_or_else(|| anyhow!("ingest needs x"))?;
+    let mut shards = state.shards.lock().unwrap();
+    let held = shards
+        .get_mut(&shard)
+        .ok_or_else(|| anyhow!("shard {shard} not held (refresh_shard first)"))?;
+    let d = held.lattice.d;
+    if x.is_empty() || x.len() % d != 0 {
+        return Err(anyhow!(
+            "x length {} is not a positive multiple of d = {d}",
+            x.len()
+        ));
+    }
+    let kernel = held.kernel.clone();
+    let new_keys = held.lattice.ingest(&x, &kernel);
+    Ok(ok_shard_reply(shard, held, Some(new_keys)))
+}
+
+fn ok_shard_reply(shard: usize, held: &HeldShard, new_keys: Option<usize>) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("ok".to_string(), Json::Num(1.0));
+    obj.insert("shard".to_string(), Json::Num(shard as f64));
+    obj.insert("n".to_string(), Json::Num(held.lattice.n as f64));
+    obj.insert("m".to_string(), Json::Num(held.lattice.m as f64));
+    if let Some(k) = new_keys {
+        obj.insert("new_keys".to_string(), Json::Num(k as f64));
+    }
+    obj.insert(
+        "fingerprint".to_string(),
+        Json::Str(format_fp(held.lattice.fingerprint())),
+    );
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+    use std::time::Instant;
+
+    fn req(parts: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            parts
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    fn fresh_state() -> WorkerState {
+        WorkerState {
+            shards: Mutex::new(BTreeMap::new()),
+            served: AtomicU64::new(0),
+        }
+    }
+
+    fn refresh_req(shard: usize, d: usize, x: &[f64]) -> Json {
+        req(vec![
+            ("op", Json::Str("refresh_shard".to_string())),
+            ("shard", Json::Num(shard as f64)),
+            ("d", Json::Num(d as f64)),
+            ("order", Json::Num(1.0)),
+            (
+                "kernel",
+                req(vec![
+                    ("family", Json::Str("rbf".to_string())),
+                    ("outputscale", Json::Num(1.0)),
+                    ("lengthscales", Json::num_array(&vec![0.8; d])),
+                ]),
+            ),
+            ("x", Json::num_array(x)),
+        ])
+    }
+
+    #[test]
+    fn hello_checks_version_and_lists_shards() {
+        let state = fresh_state();
+        let bad = handle_op(
+            &req(vec![
+                ("op", Json::Str("hello".to_string())),
+                ("version", Json::Num(99.0)),
+            ]),
+            &state,
+        );
+        assert!(bad.get("error").is_some());
+        let ok = handle_op(
+            &req(vec![
+                ("op", Json::Str("hello".to_string())),
+                ("version", Json::Num(PROTOCOL_VERSION as f64)),
+            ]),
+            &state,
+        );
+        assert_eq!(ok.get("ok").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(ok.get("shards").and_then(|v| v.as_arr()).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn refresh_then_mvm_matches_direct_filter_bitwise() {
+        let d = 3;
+        let mut rng = Pcg64::new(7);
+        let x = rng.normal_vec(40 * d);
+        let state = fresh_state();
+        let reply = handle_op(&refresh_req(2, d, &x), &state);
+        assert_eq!(reply.get("ok").and_then(|v| v.as_f64()), Some(1.0), "{reply}");
+        let k = ArdKernel {
+            family: KernelFamily::Rbf,
+            outputscale: 1.0,
+            lengthscales: vec![0.8; d],
+        };
+        let direct_lat = PermutohedralLattice::build(&x, d, &k, 1);
+        assert_eq!(
+            reply.get("fingerprint").and_then(|v| v.as_str()),
+            Some(format_fp(direct_lat.fingerprint()).as_str())
+        );
+        let b = 2;
+        let v = rng.normal_vec(40 * b);
+        let direct = direct_lat.filter_block(&v, b);
+        let mvm_reply = handle_op(
+            &req(vec![
+                ("op", Json::Str("shard_mvm_block".to_string())),
+                ("shard", Json::Num(2.0)),
+                ("job", Json::Num(11.0)),
+                ("b", Json::Num(b as f64)),
+                ("v", Json::num_array(&v)),
+            ]),
+            &state,
+        );
+        let u = mvm_reply.get("u").and_then(|u| u.to_f64_vec()).unwrap();
+        assert_eq!(u.len(), direct.len());
+        for i in 0..u.len() {
+            assert_eq!(u[i].to_bits(), direct[i].to_bits(), "row {i}");
+        }
+        assert_eq!(state.served.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn ingest_patches_replica_to_rebuild_fingerprint() {
+        let d = 2;
+        let mut rng = Pcg64::new(9);
+        let x = rng.normal_vec(50 * d);
+        let state = fresh_state();
+        handle_op(&refresh_req(0, d, &x[..40 * d]), &state);
+        let reply = handle_op(
+            &req(vec![
+                ("op", Json::Str("ingest".to_string())),
+                ("shard", Json::Num(0.0)),
+                ("x", Json::num_array(&x[40 * d..])),
+            ]),
+            &state,
+        );
+        assert_eq!(reply.get("ok").and_then(|v| v.as_f64()), Some(1.0), "{reply}");
+        assert_eq!(reply.get("n").and_then(|v| v.as_f64()), Some(50.0));
+        let k = ArdKernel {
+            family: KernelFamily::Rbf,
+            outputscale: 1.0,
+            lengthscales: vec![0.8; d],
+        };
+        let full = PermutohedralLattice::build(&x, d, &k, 1);
+        assert_eq!(
+            reply.get("fingerprint").and_then(|v| v.as_str()),
+            Some(format_fp(full.fingerprint()).as_str())
+        );
+    }
+
+    #[test]
+    fn stale_replica_block_length_rejected() {
+        let d = 2;
+        let mut rng = Pcg64::new(11);
+        let x = rng.normal_vec(30 * d);
+        let state = fresh_state();
+        handle_op(&refresh_req(0, d, &x), &state);
+        // 31 ≠ 1·30 — the signature of a replica that missed an ingest.
+        let reply = handle_op(
+            &req(vec![
+                ("op", Json::Str("shard_mvm_block".to_string())),
+                ("shard", Json::Num(0.0)),
+                ("job", Json::Num(1.0)),
+                ("b", Json::Num(1.0)),
+                ("v", Json::num_array(&[0.0; 31])),
+            ]),
+            &state,
+        );
+        assert!(reply.get("error").is_some(), "{reply}");
+        // Routing fields are echoed for attribution.
+        assert_eq!(reply.get("job").and_then(|v| v.as_f64()), Some(1.0));
+        // b is explicit exactly so a divisible-but-wrong length cannot
+        // be reinterpreted at another width: 30 floats at b = 2 would
+        // "fit" an n_p = 15 replica, but against n_p = 30 it must fail.
+        let reply = handle_op(
+            &req(vec![
+                ("op", Json::Str("shard_mvm_block".to_string())),
+                ("shard", Json::Num(0.0)),
+                ("job", Json::Num(3.0)),
+                ("b", Json::Num(2.0)),
+                ("v", Json::num_array(&[0.0; 30])),
+            ]),
+            &state,
+        );
+        assert!(reply.get("error").is_some(), "{reply}");
+        // Unknown shard likewise errors.
+        let reply = handle_op(
+            &req(vec![
+                ("op", Json::Str("shard_mvm_block".to_string())),
+                ("shard", Json::Num(5.0)),
+                ("job", Json::Num(2.0)),
+                ("b", Json::Num(1.0)),
+                ("v", Json::num_array(&[0.0; 30])),
+            ]),
+            &state,
+        );
+        assert!(reply.get("error").is_some());
+    }
+
+    #[test]
+    fn worker_serves_frames_over_loopback() {
+        // End-to-end over a real socket: hello → refresh → mvm.
+        let worker = ShardWorker::start(WorkerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            ..WorkerConfig::default()
+        })
+        .unwrap();
+        let stream = TcpStream::connect(worker.local_addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream
+            .set_read_timeout(Some(POLL_READ_TIMEOUT))
+            .unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = FrameReader::new(stream, DEFAULT_MAX_FRAME_BYTES);
+        let deadline = || Some(Instant::now() + Duration::from_secs(10));
+
+        write_frame(
+            &mut writer,
+            &req(vec![
+                ("op", Json::Str("hello".to_string())),
+                ("version", Json::Num(PROTOCOL_VERSION as f64)),
+            ]),
+        )
+        .unwrap();
+        let hello = reader.read_frame(None, deadline()).unwrap().unwrap();
+        assert_eq!(hello.get("ok").and_then(|v| v.as_f64()), Some(1.0));
+
+        let d = 2;
+        let mut rng = Pcg64::new(13);
+        let x = rng.normal_vec(25 * d);
+        write_frame(&mut writer, &refresh_req(1, d, &x)).unwrap();
+        let refreshed = reader.read_frame(None, deadline()).unwrap().unwrap();
+        assert_eq!(refreshed.get("ok").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(worker.held_shards(), vec![1]);
+
+        let v = rng.normal_vec(25);
+        write_frame(
+            &mut writer,
+            &req(vec![
+                ("op", Json::Str("shard_mvm_block".to_string())),
+                ("shard", Json::Num(1.0)),
+                ("job", Json::Num(3.0)),
+                ("b", Json::Num(1.0)),
+                ("v", Json::num_array(&v)),
+            ]),
+        )
+        .unwrap();
+        let reply = reader.read_frame(None, deadline()).unwrap().unwrap();
+        let u = reply.get("u").and_then(|u| u.to_f64_vec()).unwrap();
+        let k = ArdKernel {
+            family: KernelFamily::Rbf,
+            outputscale: 1.0,
+            lengthscales: vec![0.8; d],
+        };
+        let direct = PermutohedralLattice::build(&x, d, &k, 1).filter_block(&v, 1);
+        for i in 0..25 {
+            assert_eq!(u[i].to_bits(), direct[i].to_bits(), "row {i}");
+        }
+        assert_eq!(worker.served(), 1);
+        worker.shutdown();
+    }
+}

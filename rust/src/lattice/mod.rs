@@ -183,6 +183,55 @@ impl PermutohedralLattice {
             + self.table.storage_bytes()
     }
 
+    /// Deterministic structural fingerprint: FNV-1a over every array
+    /// that the splat→blur→slice arithmetic reads (`offsets`, `weights`
+    /// bits, `neighbors`, stencil taps bits) plus the scalar shape
+    /// `(d, n, m, order, α bits)`.
+    ///
+    /// Two lattices with equal fingerprints produce bit-identical MVMs
+    /// for equal inputs, which is how the multi-node shard transport
+    /// verifies that a remote worker's replica matches the
+    /// coordinator's shard after a `refresh_shard`/`ingest` exchange
+    /// (`docs/PROTOCOL.md`). The lattice build and
+    /// [`PermutohedralLattice::ingest`] are deterministic, so a replica
+    /// rebuilt from the same points always matches.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: u64, x: u64) -> u64 {
+            // Fold all 64 bits through the byte-oriented FNV core.
+            let mut h = h;
+            for shift in [0u32, 8, 16, 24, 32, 40, 48, 56] {
+                h ^= (x >> shift) & 0xff;
+                h = h.wrapping_mul(PRIME);
+            }
+            h
+        }
+        let mut h = OFFSET;
+        for scalar in [
+            self.d as u64,
+            self.n as u64,
+            self.m as u64,
+            self.order() as u64,
+            self.alpha.to_bits(),
+        ] {
+            h = mix(h, scalar);
+        }
+        for &o in &self.offsets {
+            h = mix(h, o as u64);
+        }
+        for &w in &self.weights {
+            h = mix(h, w.to_bits());
+        }
+        for &nb in &self.neighbors {
+            h = mix(h, nb as u64);
+        }
+        for &t in &self.stencil.taps {
+            h = mix(h, t.to_bits());
+        }
+        h
+    }
+
     /// Embed extra points (e.g. test inputs for prediction) onto the
     /// *existing* lattice: returns (offsets, weights) rows; vertices that
     /// were never created by training points map to the null slot 0 and
@@ -725,6 +774,32 @@ mod tests {
                 assert_eq!(ui[i].to_bits(), uf[i].to_bits(), "row {i}");
             }
         }
+    }
+
+    #[test]
+    fn fingerprint_tracks_structure() {
+        let d = 3;
+        let x = random_points(90, d, 31);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+        let a = PermutohedralLattice::build(&x[..80 * d], d, &k, 1);
+        let b = PermutohedralLattice::build(&x[..80 * d], d, &k, 1);
+        // Deterministic build ⇒ identical fingerprints (the property the
+        // multi-node refresh_shard verification relies on).
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Different points, kernel, or order ⇒ different fingerprints.
+        let c = PermutohedralLattice::build(&x[d..81 * d], d, &k, 1);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let k2 = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.9);
+        let e = PermutohedralLattice::build(&x[..80 * d], d, &k2, 1);
+        assert_ne!(a.fingerprint(), e.fingerprint());
+        // Ingest changes the fingerprint, and matches a from-scratch
+        // build at the final point set (ingest is bitwise a rebuild).
+        let mut inc = PermutohedralLattice::build(&x[..80 * d], d, &k, 1);
+        let before = inc.fingerprint();
+        inc.ingest(&x[80 * d..], &k);
+        assert_ne!(before, inc.fingerprint());
+        let full = PermutohedralLattice::build(&x, d, &k, 1);
+        assert_eq!(inc.fingerprint(), full.fingerprint());
     }
 
     #[test]

@@ -228,8 +228,12 @@ impl ShardedLattice {
     }
 
     /// Gather shard `p`'s contiguous segment of each RHS row from a
-    /// full row-major `b × n` block into a local `b × n_p` block.
-    fn gather_shard_block(&self, p: usize, v: &[f64], b: usize) -> Vec<f64> {
+    /// full row-major `b × n` block into a local `b × n_p` block — the
+    /// inverse of [`ShardedLattice::scatter_shard_block`], and the
+    /// payload shape (`b × n_p`, each RHS contiguous) that a
+    /// `shard_mvm_block` job ships to a remote shard worker
+    /// (`docs/PROTOCOL.md`).
+    pub fn gather_shard_block(&self, p: usize, v: &[f64], b: usize) -> Vec<f64> {
         assert_eq!(v.len(), self.n * b);
         let (s0, s1) = (self.bounds[p], self.bounds[p + 1]);
         let np = s1 - s0;

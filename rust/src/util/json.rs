@@ -34,11 +34,35 @@ impl Json {
             _ => None,
         }
     }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
             _ => None,
         }
+    }
+
+    /// Wrap a float slice as a JSON array of numbers — the payload shape
+    /// of every vector on the coordinator and shard-worker wire
+    /// protocols (`docs/PROTOCOL.md`).
+    pub fn num_array(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    /// Extract a `Json::Arr` of numbers as a float vector; `None` if
+    /// this is not an array or any element is not a number.
+    pub fn to_f64_vec(&self) -> Option<Vec<f64>> {
+        let arr = self.as_arr()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            out.push(v.as_f64()?);
+        }
+        Some(out)
     }
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
@@ -55,7 +79,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // Integral values print without the ".0" — EXCEPT -0.0,
+                // whose sign bit would be lost by the integer path. The
+                // serving and shard-worker protocols pin replies at the
+                // float-bit level, so every f64 (sign of zero included)
+                // must survive a serialize→parse cycle.
+                if x.fract() == 0.0 && x.abs() < 1e15 && !(*x == 0.0 && x.is_sign_negative()) {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -347,6 +376,45 @@ mod tests {
         let v = Json::parse(r#"[[1,2],[3,[4]]]"#).unwrap();
         let a = v.as_arr().unwrap();
         assert_eq!(a[1].as_arr().unwrap()[1].as_arr().unwrap()[0].as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn float_bits_survive_roundtrip() {
+        // The wire protocols rely on serialize→parse being the identity
+        // at the bit level — shortest round-trip formatting plus the
+        // negative-zero guard.
+        for x in [
+            0.0f64,
+            -0.0,
+            1.0,
+            -3.0,
+            0.1,
+            -1.0 / 3.0,
+            1e-308,
+            2.2250738585072014e-308, // smallest normal
+            f64::MIN_POSITIVE,
+            1.7976931348623157e308,
+            123456789.123456789,
+            -9.007199254740993e15, // past the integer fast path
+        ] {
+            let s = Json::Num(x).to_string();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} via '{s}'");
+        }
+    }
+
+    #[test]
+    fn num_array_helpers() {
+        let xs = [1.5, -0.0, 3.0];
+        let j = Json::num_array(&xs);
+        let back = Json::parse(&j.to_string()).unwrap().to_f64_vec().unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(Json::parse("[1, \"x\"]").unwrap().to_f64_vec().is_none());
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Num(1.0).as_bool(), None);
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Multi-node shard transport equivalence suite (loopback).
+//!
+//! Pins the PR 5 contract from docs/PROTOCOL.md: a coordinator whose
+//! shard pool runs over TCP to remote `shard-worker` endpoints replies
+//! **byte-identically** (float bits through the JSON wire) to one
+//! running the in-process pool — for `mvm` and for `ingest`-then-`mvm`
+//! — at P ∈ {2, 3}; and killing a remote worker mid-stream degrades to
+//! correct (still byte-identical) replies without wedging the batcher,
+//! extending PR 4's deterministic `debug_kill_worker` failure tests to
+//! the remote pool.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use simplex_gp::coordinator::transport::ClusterConfig;
+use simplex_gp::coordinator::worker::{ShardWorker, WorkerConfig};
+use simplex_gp::coordinator::{Client, ServeConfig, Server};
+use simplex_gp::gp::{GpConfig, SimplexGp};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::util::Pcg64;
+
+/// Deterministic training problem: `SimplexGp::fit` has no hidden
+/// randomness, so two fits of the same data are the same model bit for
+/// bit — the basis for comparing a local-pool server against a
+/// remote-pool server.
+fn problem(n: usize, d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::new(seed);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| (x[i * d]).sin() + 0.05 * rng.normal())
+        .collect();
+    (x, y)
+}
+
+fn fit(x: &[f64], y: &[f64], d: usize, shards: usize) -> SimplexGp {
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+    let cfg = GpConfig {
+        shards,
+        ..GpConfig::default()
+    };
+    SimplexGp::fit(x, y, d, kernel, 0.05, cfg).unwrap()
+}
+
+fn start_workers(count: usize) -> Vec<ShardWorker> {
+    (0..count)
+        .map(|_| {
+            ShardWorker::start(WorkerConfig {
+                listen: "127.0.0.1:0".to_string(),
+                ..WorkerConfig::default()
+            })
+            .unwrap()
+        })
+        .collect()
+}
+
+fn remote_cfg(workers: &[ShardWorker]) -> ClusterConfig {
+    ClusterConfig {
+        workers: workers.iter().map(|w| w.local_addr.to_string()).collect(),
+        ..ClusterConfig::default()
+    }
+}
+
+/// Block until the server reports `want` connected-and-synced remote
+/// workers (replicas sync in the background after `Server::start`).
+fn wait_remote_synced(client: &mut Client, want: usize) {
+    let t0 = std::time::Instant::now();
+    loop {
+        let got = client
+            .stats()
+            .unwrap()
+            .get("remote_workers")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(-1.0) as i64;
+        if got == want as i64 {
+            return;
+        }
+        assert!(
+            t0.elapsed().as_secs() < 30,
+            "remote workers never synced: {got}/{want}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(
+            a[i].to_bits(),
+            b[i].to_bits(),
+            "{what}: row {i} ({} vs {})",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+#[test]
+fn remote_mvm_byte_identical_to_local_pool() {
+    let d = 2;
+    let (x, y) = problem(260, d, 11);
+    for shards in [2usize, 3] {
+        // Reference: the direct in-process sharded MVM.
+        let reference = fit(&x, &y, d, shards);
+        let n = reference.n_train();
+        let mut rng = Pcg64::new(100 + shards as u64);
+        let v = rng.normal_vec(n);
+        let direct = reference.operator().lattice.mvm(&v);
+
+        // Local-pool server.
+        let local_server = Server::start(
+            fit(&x, &y, d, shards),
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut local_client = Client::connect(&local_server.local_addr).unwrap();
+        let local_u = local_client.mvm(&v).unwrap();
+
+        // Remote-pool server: 2 workers; at P = 3 worker 0 holds shards
+        // {0, 2} (round-robin assignment).
+        let workers = start_workers(2);
+        let remote_server = Server::start(
+            fit(&x, &y, d, shards),
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                cluster: remote_cfg(&workers),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut remote_client = Client::connect(&remote_server.local_addr).unwrap();
+        wait_remote_synced(&mut remote_client, 2);
+        let remote_u = remote_client.mvm(&v).unwrap();
+
+        assert_bits_eq(&local_u, &direct, &format!("P={shards} local vs direct"));
+        assert_bits_eq(&remote_u, &direct, &format!("P={shards} remote vs direct"));
+        // The remote path must actually have served the jobs (not the
+        // fallback): every shard's job lands on some worker.
+        let served: u64 = workers.iter().map(|w| w.served()).sum();
+        assert!(
+            served as usize >= shards,
+            "P={shards}: only {served} remote jobs served"
+        );
+        // Both workers hold their round-robin assignment.
+        let held: Vec<Vec<usize>> =
+            workers.iter().map(|w| w.held_shards()).collect();
+        for p in 0..shards {
+            assert!(
+                held[p % 2].contains(&p),
+                "shard {p} not held by worker {} (held: {held:?})",
+                p % 2
+            );
+        }
+
+        remote_server.shutdown();
+        local_server.shutdown();
+        for w in workers {
+            w.shutdown();
+        }
+    }
+}
+
+#[test]
+fn remote_ingest_byte_identical_to_local_pool() {
+    let d = 2;
+    let (x, y) = problem(240, d, 21);
+    let (xi, yi) = problem(12, d, 22);
+    for shards in [2usize, 3] {
+        let workers = start_workers(2);
+        let mk_cfg = |cluster: Option<ClusterConfig>| ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_ingest: true,
+            cluster: cluster.unwrap_or_default(),
+            ..ServeConfig::default()
+        };
+        let local_server = Server::start(fit(&x, &y, d, shards), mk_cfg(None)).unwrap();
+        let remote_server = Server::start(
+            fit(&x, &y, d, shards),
+            mk_cfg(Some(remote_cfg(&workers))),
+        )
+        .unwrap();
+        let mut local_client = Client::connect(&local_server.local_addr).unwrap();
+        let mut remote_client = Client::connect(&remote_server.local_addr).unwrap();
+        wait_remote_synced(&mut remote_client, 2);
+
+        // Identical ingests land on the identical (lightest) shard and
+        // grow both models to the same n.
+        let n_local = local_client.ingest(&xi, &yi, d).unwrap();
+        let n_remote = remote_client.ingest(&xi, &yi, d).unwrap();
+        assert_eq!(n_local, 252);
+        assert_eq!(n_remote, 252);
+
+        // Post-ingest MVMs ride the *patched remote replica* (per-link
+        // FIFO: the ingest propagation precedes this job) and must match
+        // the local pool bit for bit.
+        let mut rng = Pcg64::new(200 + shards as u64);
+        let v = rng.normal_vec(n_local);
+        let served_before: u64 = workers.iter().map(|w| w.served()).sum();
+        let local_u = local_client.mvm(&v).unwrap();
+        let remote_u = remote_client.mvm(&v).unwrap();
+        assert_bits_eq(
+            &remote_u,
+            &local_u,
+            &format!("P={shards} post-ingest remote vs local"),
+        );
+        // Replicas stayed synced (no fallback, no resync churn): the
+        // remote jobs really were served against the patched lattices.
+        let served_after: u64 = workers.iter().map(|w| w.served()).sum();
+        assert!(
+            served_after >= served_before + shards as u64,
+            "P={shards}: post-ingest mvm did not run remotely \
+             ({served_before} -> {served_after})"
+        );
+        let still = remote_client
+            .stats()
+            .unwrap()
+            .get("remote_workers")
+            .and_then(|s| s.as_f64());
+        assert_eq!(still, Some(2.0), "P={shards}: replicas lost sync");
+
+        remote_server.shutdown();
+        local_server.shutdown();
+        for w in workers {
+            w.shutdown();
+        }
+    }
+}
+
+#[test]
+fn killed_remote_worker_degrades_to_byte_identical_replies() {
+    // PR 4's deterministic kill, extended to the remote pool: the
+    // debug op disables the worker link serving shard 0; its shards
+    // fall back to in-thread compute and replies stay byte-identical,
+    // mid-stream, without wedging the batcher.
+    let d = 2;
+    let (x, y) = problem(250, d, 31);
+    let reference = fit(&x, &y, d, 2);
+    let n = reference.n_train();
+    let mut rng = Pcg64::new(300);
+    let v = rng.normal_vec(n);
+    let direct = reference.operator().lattice.mvm(&v);
+
+    let workers = start_workers(2);
+    let server = Server::start(
+        fit(&x, &y, d, 2),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            debug_ops: true,
+            cluster: remote_cfg(&workers),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    wait_remote_synced(&mut client, 2);
+
+    let before = client.mvm(&v).unwrap();
+    assert_bits_eq(&before, &direct, "pre-kill");
+
+    // Kill the link serving shard 0 (raw request — the op is
+    // debug-only).
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(b"{\"id\":99,\"op\":\"debug_kill_worker\",\"shard\":0}\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"killed\":1"), "got: {line}");
+
+    let after = client.mvm(&v).unwrap();
+    assert_bits_eq(&after, &direct, "post-kill");
+
+    // Harder failure: stop the OTHER worker's process entirely (socket
+    // gone, not just the link). The first job after the shutdown may
+    // fail mid-roundtrip; the batcher must still answer byte-
+    // identically via the in-thread fallback.
+    let mut workers = workers;
+    let w1 = workers.remove(1);
+    w1.shutdown();
+    let aftermost = client.mvm(&v).unwrap();
+    assert_bits_eq(&aftermost, &direct, "post-shutdown");
+
+    // Batcher alive and stats coherent.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("shards").and_then(|s| s.as_f64()), Some(2.0));
+    assert_eq!(
+        stats.get("cluster_workers").and_then(|s| s.as_f64()),
+        Some(2.0)
+    );
+    let served = stats.get("served").and_then(|s| s.as_f64()).unwrap();
+    assert!(served >= 3.0, "served={served}");
+
+    server.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+}

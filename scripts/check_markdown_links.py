@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Check intra-repo markdown links.
+
+Walks every tracked .md file (README, ARCHITECTURE, CHANGES, docs/, ...)
+and verifies that every relative link target exists, so the cross-
+references between README ↔ ARCHITECTURE ↔ docs/PROTOCOL.md ↔
+docs/DEPLOYMENT.md ↔ CHANGES can't silently rot. External links
+(http/https/mailto) and pure in-page anchors are skipped; a `#fragment`
+on a relative link is stripped before the existence check (anchor
+validation would couple us to a renderer's slug rules).
+
+Run from anywhere inside the repo: `python3 scripts/check_markdown_links.py`.
+Exit code 0 = all links resolve.
+"""
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", "target", "node_modules", ".github", "__pycache__"}
+# [text](target) — won't match images' ! prefix differently (same rule
+# applies), tolerates titles: [t](path "title")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# Inline code spans hide example links that are not real references.
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+
+
+def repo_root() -> str:
+    d = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(d)
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def strip_code(text: str) -> str:
+    # Drop fenced blocks, then inline spans.
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(CODE_SPAN_RE.sub("", line))
+    return "\n".join(out)
+
+
+def main() -> int:
+    root = repo_root()
+    errors = []
+    checked = 0
+    for path in sorted(md_files(root)):
+        text = strip_code(open(path, encoding="utf-8").read())
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+            checked += 1
+            if not os.path.exists(resolved):
+                errors.append(
+                    f"{os.path.relpath(path, root)}: broken link '{target}' "
+                    f"(resolved to {os.path.relpath(resolved, root)})"
+                )
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} broken link(s) out of {checked} checked.")
+        return 1
+    print(f"OK: {checked} intra-repo markdown links resolve.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

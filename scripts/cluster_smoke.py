@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""Localhost coordinator + shard-worker smoke test (CI docs job).
+
+Boots the exact topology documented in docs/DEPLOYMENT.md's walkthrough
+— two `simplex-gp shard-worker` processes plus one `simplex-gp serve
+--workers ...` coordinator — then speaks both protocols from
+docs/PROTOCOL.md against them:
+
+  1. client protocol: poll `stats` until remote_workers == 2, then send
+     one `mvm` and assert a well-formed `u` reply of length n;
+  2. shard-worker protocol: send a framed `stats` to each worker and
+     assert the replicas are held and actually served the mvm's jobs.
+
+This is the docs' executable counterpart: if the wire formats or the
+CLI surface drift from what PROTOCOL.md/DEPLOYMENT.md describe, this
+script (run by CI next to the markdown link check) fails loudly.
+
+Usage: python3 scripts/cluster_smoke.py [path/to/simplex-gp]
+(defaults to target/release/simplex-gp).
+"""
+
+import json
+import os
+import re
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+DEADLINE_S = 300  # whole-script budget (includes the coordinator's fit)
+ADDR_RE = re.compile(r"(?:listening|serving) on (\S+:\d+)")
+
+
+class Proc:
+    """Child process with a background stdout line collector."""
+
+    def __init__(self, name, argv):
+        self.name = name
+        self.p = subprocess.Popen(
+            argv, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
+        )
+        self.lines = []
+        self._t = threading.Thread(target=self._pump, daemon=True)
+        self._t.start()
+
+    def _pump(self):
+        for line in self.p.stdout:
+            print(f"[{self.name}] {line}", end="")
+            self.lines.append(line)
+
+    def wait_addr(self, deadline):
+        while time.time() < deadline:
+            for line in list(self.lines):
+                m = ADDR_RE.search(line)
+                if m:
+                    return m.group(1)
+            if self.p.poll() is not None:
+                raise RuntimeError(f"{self.name} exited early ({self.p.returncode})")
+            time.sleep(0.1)
+        raise RuntimeError(f"{self.name}: no listen address within deadline")
+
+    def stop(self):
+        if self.p.poll() is None:
+            self.p.terminate()
+            try:
+                self.p.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                self.p.kill()
+
+
+def jsonl_request(addr, obj, timeout=30):
+    """One request on the coordinator's JSON-lines client protocol."""
+    host, port = addr.rsplit(":", 1)
+    with socket.create_connection((host, int(port)), timeout=timeout) as s:
+        s.sendall((json.dumps(obj) + "\n").encode())
+        buf = b""
+        while not buf.endswith(b"\n"):
+            chunk = s.recv(1 << 20)
+            if not chunk:
+                raise RuntimeError("connection closed before reply")
+            buf += chunk
+    return json.loads(buf.decode())
+
+
+def frame_request(addr, obj, timeout=30):
+    """One request/reply on the shard-worker frame protocol
+    (docs/PROTOCOL.md §2: `<len>\\n<payload>\\n`)."""
+    host, port = addr.rsplit(":", 1)
+    payload = json.dumps(obj).encode()
+    with socket.create_connection((host, int(port)), timeout=timeout) as s:
+        s.sendall(str(len(payload)).encode() + b"\n" + payload + b"\n")
+        buf = b""
+        while b"\n" not in buf:
+            buf += s.recv(1 << 20)
+        header, rest = buf.split(b"\n", 1)
+        want = int(header) + 1  # payload + trailing newline
+        while len(rest) < want:
+            chunk = s.recv(1 << 20)
+            if not chunk:
+                raise RuntimeError("connection closed mid-frame")
+            rest += chunk
+    return json.loads(rest[: want - 1].decode())
+
+
+def main():
+    binary = sys.argv[1] if len(sys.argv) > 1 else "target/release/simplex-gp"
+    if not os.path.exists(binary):
+        print(f"binary not found: {binary} (build with `cargo build --release`)")
+        return 1
+    deadline = time.time() + DEADLINE_S
+    procs = []
+    try:
+        w1 = Proc("worker1", [binary, "shard-worker", "--listen", "127.0.0.1:0"])
+        w2 = Proc("worker2", [binary, "shard-worker", "--listen", "127.0.0.1:0"])
+        procs += [w1, w2]
+        w1_addr = w1.wait_addr(deadline)
+        w2_addr = w2.wait_addr(deadline)
+
+        serve = Proc(
+            "serve",
+            [
+                binary, "serve",
+                "--dataset", "protein", "--n", "2000", "--epochs", "1",
+                "--shards", "2",
+                "--workers", f"{w1_addr},{w2_addr}",
+                "--addr", "127.0.0.1:0",
+            ],
+        )
+        procs.append(serve)
+        serve_addr = serve.wait_addr(deadline)
+
+        # 1. Wait for both replicas to sync (background handshake).
+        stats = {}
+        while time.time() < deadline:
+            stats = jsonl_request(serve_addr, {"id": 1, "op": "stats"})
+            if stats.get("remote_workers") == 2:
+                break
+            time.sleep(0.25)
+        assert stats.get("cluster_workers") == 2, stats
+        assert stats.get("remote_workers") == 2, (
+            f"replicas never synced: {stats}"
+        )
+        n = int(stats["n"])
+        assert stats.get("shards") == 2, stats
+
+        # 2. One raw MVM through the remote shard pool.
+        reply = jsonl_request(serve_addr, {"id": 2, "op": "mvm", "v": [0.5] * n})
+        assert "error" not in reply, reply
+        assert len(reply["u"]) == n, f"u has {len(reply['u'])} of {n} rows"
+        assert all(isinstance(x, (int, float)) for x in reply["u"][:10])
+        assert reply.get("batched_with", 0) >= 1, reply
+
+        # 3. The workers really served it: framed stats per worker.
+        total_served, held = 0, set()
+        for addr in (w1_addr, w2_addr):
+            ws = frame_request(addr, {"op": "stats"})
+            assert ws.get("ok") == 1, ws
+            assert ws.get("version") == 1, ws
+            total_served += int(ws.get("served", 0))
+            for sh in ws.get("shards", []):
+                held.add(int(sh["shard"]))
+                assert re.fullmatch(r"[0-9a-f]{16}", sh["fingerprint"]), sh
+        assert held == {0, 1}, f"replicas held: {held}"
+        assert total_served >= 2, f"remote path unused (served={total_served})"
+
+        print(
+            f"OK: coordinator at {serve_addr} served a {n}-point mvm over "
+            f"2 remote shard-workers ({total_served} remote jobs)."
+        )
+        return 0
+    finally:
+        for p in procs:
+            p.stop()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
