@@ -1,0 +1,280 @@
+//! Serving-path tail latency under open-loop load (the PR-6 bench).
+//!
+//! Drives a live coordinator with the [`loadgen`] harness across four
+//! deployment shapes:
+//!
+//!   inproc           in-process shard pool, serving-shaped mix
+//!   tcp              2 remote shard workers (loopback), same mix
+//!   tcp_slow         2 workers, worker 0 delayed `slow_ms` per MVM
+//!                    roundtrip (injected straggler), hedging OFF
+//!   tcp_slow_hedged  same straggler, hedging ON (`hedge_ms` race to
+//!                    the backup replica)
+//!
+//! The last two rows are the point: an injected straggler wrecks p99
+//! on an unhedged cluster and the hedge race claws it back, while the
+//! replies stay byte-identical (pinned by rust/tests/hedging.rs; this
+//! bench measures, the test asserts).
+//!
+//! Latency is open-loop (measured from *scheduled* arrival), so
+//! queueing behind the straggler counts against the tail — no
+//! coordinated omission.
+//!
+//! With `SIMPLEX_GP_BENCH_JSON=<path>` set (CI bench-smoke), one line
+//! per mode: `{"bench":"serving_load", "mode", "workers", "shards",
+//! "hedge_ms", "slow_ms", "rps", "sent", "ok", "errors",
+//! "achieved_rps", "p50_us", "p90_us", "p99_us", "p999_us", "max_us",
+//! "hedged", "hedge_wins"}`.
+//!
+//!     cargo bench --bench serving_load [-- --quick]
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use simplex_gp::coordinator::transport::ClusterConfig;
+use simplex_gp::coordinator::worker::{ShardWorker, WorkerConfig};
+use simplex_gp::coordinator::{Client, ServeConfig, Server};
+use simplex_gp::gp::{GpConfig, SimplexGp};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::loadgen::{self, Arrival, LoadSpec, Mix};
+use simplex_gp::util::bench::{append_bench_json, quick_mode, Table};
+use simplex_gp::util::json::Json;
+use simplex_gp::util::Pcg64;
+
+struct Scenario {
+    mode: &'static str,
+    workers: usize,
+    slow_ms: u64,
+    hedge_ms: u64,
+    spec: LoadSpec,
+}
+
+fn fit_model(n: usize, d: usize, shards: usize, seed: u64) -> SimplexGp {
+    let mut rng = Pcg64::new(seed);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| (x[i * d]).sin() + 0.05 * rng.normal())
+        .collect();
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+    let cfg = GpConfig {
+        shards,
+        ..GpConfig::default()
+    };
+    SimplexGp::fit(&x, &y, d, kernel, 0.05, cfg).unwrap()
+}
+
+/// Inject a per-roundtrip delay on the worker link serving `shard`
+/// (raw request — the op is debug-only and gated by `debug_ops`).
+fn inject_straggler(addr: &std::net::SocketAddr, shard: usize, delay_ms: u64) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(
+        writer,
+        "{{\"id\":7,\"op\":\"debug_delay_worker\",\"shard\":{shard},\"delay_ms\":{delay_ms}}}"
+    )
+    .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"delayed\":1"), "straggler injection failed: {line}");
+}
+
+fn wait_remote_synced(addr: &std::net::SocketAddr, want: usize) {
+    let mut client = Client::connect(addr).unwrap();
+    let t0 = Instant::now();
+    loop {
+        let got = client
+            .stats()
+            .unwrap()
+            .get("remote_workers")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(-1.0) as i64;
+        if got == want as i64 {
+            return;
+        }
+        assert!(
+            t0.elapsed().as_secs() < 30,
+            "remote workers never synced: {got}/{want}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn main() {
+    let quick = quick_mode();
+    let d = 2;
+    let shards = 2;
+    let n = if quick { 400 } else { 800 };
+
+    let serving_spec = |rps: f64, secs: f64| LoadSpec {
+        rps,
+        duration: Duration::from_secs_f64(secs),
+        clients: 8,
+        arrival: Arrival::Poisson,
+        mix: Mix::serving(),
+        ..LoadSpec::default()
+    };
+    // Straggler rows use pure-MVM bursty traffic: every request crosses
+    // the delayed link, so the tail shows the injected fault, not the
+    // mix.
+    let slow_spec = |rps: f64, secs: f64| LoadSpec {
+        rps,
+        duration: Duration::from_secs_f64(secs),
+        clients: 8,
+        arrival: Arrival::Bursty {
+            period: Duration::from_millis(200),
+            on_fraction: 0.5,
+        },
+        mix: Mix::mvm_only(),
+        ..LoadSpec::default()
+    };
+    let (rps, secs) = if quick { (150.0, 1.2) } else { (250.0, 3.0) };
+    let (slow_rps, slow_secs) = if quick { (50.0, 1.0) } else { (80.0, 2.0) };
+    let slow_ms: u64 = if quick { 200 } else { 300 };
+
+    let scenarios = [
+        Scenario {
+            mode: "inproc",
+            workers: 0,
+            slow_ms: 0,
+            hedge_ms: 0,
+            spec: serving_spec(rps, secs),
+        },
+        Scenario {
+            mode: "tcp",
+            workers: 2,
+            slow_ms: 0,
+            hedge_ms: 0,
+            spec: serving_spec(rps, secs),
+        },
+        Scenario {
+            mode: "tcp_slow",
+            workers: 2,
+            slow_ms,
+            hedge_ms: 0,
+            spec: slow_spec(slow_rps, slow_secs),
+        },
+        Scenario {
+            mode: "tcp_slow_hedged",
+            workers: 2,
+            slow_ms,
+            hedge_ms: 25,
+            spec: slow_spec(slow_rps, slow_secs),
+        },
+    ];
+
+    let mut table = Table::new(&[
+        "mode",
+        "workers",
+        "rps",
+        "ok",
+        "errors",
+        "p50_ms",
+        "p99_ms",
+        "p999_ms",
+        "achieved",
+        "hedged",
+        "hedge_wins",
+    ]);
+
+    for sc in &scenarios {
+        let workers: Vec<ShardWorker> = (0..sc.workers)
+            .map(|_| {
+                ShardWorker::start(WorkerConfig {
+                    listen: "127.0.0.1:0".to_string(),
+                    ..WorkerConfig::default()
+                })
+                .unwrap()
+            })
+            .collect();
+        let cluster = ClusterConfig {
+            workers: workers.iter().map(|w| w.local_addr.to_string()).collect(),
+            hedge: match sc.hedge_ms {
+                0 => None,
+                ms => Some(Duration::from_millis(ms)),
+            },
+            ..ClusterConfig::default()
+        };
+        let server = Server::start(
+            fit_model(n, d, shards, 0xbe6c),
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                allow_ingest: true,
+                debug_ops: sc.slow_ms > 0,
+                cluster,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        if sc.workers > 0 {
+            wait_remote_synced(&server.local_addr, sc.workers.min(shards));
+        }
+        if sc.slow_ms > 0 {
+            inject_straggler(&server.local_addr, 0, sc.slow_ms);
+        }
+
+        let report = loadgen::run(&server.local_addr, &sc.spec).unwrap();
+
+        let mut stats_client = Client::connect(&server.local_addr).unwrap();
+        let stats = stats_client.stats().unwrap();
+        let hedged = stats.get("hedged").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let hedge_wins = stats
+            .get("hedge_wins")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        drop(stats_client);
+        server.shutdown();
+        for w in workers {
+            w.shutdown();
+        }
+
+        let (p50, p90, p99, p999) = report.hist.quartet();
+        table.row(&[
+            sc.mode.to_string(),
+            sc.workers.to_string(),
+            format!("{:.0}", sc.spec.rps),
+            report.ok.to_string(),
+            report.errors.to_string(),
+            format!("{:.3}", p50 / 1e3),
+            format!("{:.3}", p99 / 1e3),
+            format!("{:.3}", p999 / 1e3),
+            format!("{:.0}", report.achieved_rps),
+            format!("{hedged:.0}"),
+            format!("{hedge_wins:.0}"),
+        ]);
+
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str("serving_load".to_string()));
+        obj.insert("mode".to_string(), Json::Str(sc.mode.to_string()));
+        for (k, v) in [
+            ("workers", sc.workers as f64),
+            ("shards", shards as f64),
+            ("hedge_ms", sc.hedge_ms as f64),
+            ("slow_ms", sc.slow_ms as f64),
+            ("rps", sc.spec.rps),
+            ("sent", report.sent as f64),
+            ("ok", report.ok as f64),
+            ("errors", report.errors as f64),
+            ("achieved_rps", report.achieved_rps),
+            ("p50_us", p50),
+            ("p90_us", p90),
+            ("p99_us", p99),
+            ("p999_us", p999),
+            ("max_us", report.hist.max_us()),
+            ("hedged", hedged),
+            ("hedge_wins", hedge_wins),
+        ] {
+            obj.insert(k.to_string(), Json::Num(v));
+        }
+        append_bench_json(&Json::Obj(obj));
+    }
+
+    println!(
+        "Open-loop serving load: n = {n}, d = {d}, P = {shards} \
+         (straggler = {slow_ms} ms on worker 0{})\n",
+        if quick { ", quick" } else { "" }
+    );
+    table.print();
+    table.write_csv("serving_load");
+}

@@ -91,6 +91,7 @@ COMMANDS
              spacing and taps (the §4.1 discretization).
   serve      --dataset <name> [--n N] [--addr HOST:PORT] [--shards P]
              [--precond-rank K] [--ingest] [--workers A:P1,B:P2]
+             [--hedge-ms H]
              — train quickly, then serve predictions over the JSON-lines
              protocol (docs/PROTOCOL.md). --ingest enables the streaming
              `ingest` op (live training-point updates, coalesced and
@@ -105,6 +106,17 @@ COMMANDS
              protocol (docs/PROTOCOL.md; deployment recipes in
              docs/DEPLOYMENT.md). Default listen address 127.0.0.1:7900;
              port 0 picks an ephemeral port (printed on startup).
+  loadbench  --dataset <name> [--n N] [--shards P] [--mode inproc|tcp]
+             [--workers W] [--rps R] [--duration-s S] [--clients C]
+             [--arrival poisson|bursty] [--mix mvm|serving]
+             [--hedge-ms H] [--slow-shard P --slow-ms MS] [--seed S]
+             — fit a model, start an ephemeral server (plus W loopback
+             shard workers under --mode tcp), fire a deterministic
+             open-loop schedule at it, and print latency percentiles
+             (p50/p90/p99/p99.9) and throughput. --slow-shard injects a
+             straggler via debug_delay_worker; --hedge-ms races slow
+             shards against their backup replicas (docs/DEPLOYMENT.md
+             §Hedged redundancy).
   goldens    [--artifacts DIR] — compile AOT artifacts on PJRT and replay
              the python-generated goldens (cross-layer parity check).
   datasets   — list the benchmark dataset analogs.
@@ -133,6 +145,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "stencil" => cmd_stencil(&args),
         "serve" => cmd_serve(&args),
         "shard-worker" => cmd_shard_worker(&args),
+        "loadbench" => cmd_loadbench(&args),
         "goldens" => cmd_goldens(&args),
         "datasets" => cmd_datasets(),
         "" | "help" | "--help" | "-h" => {
@@ -434,6 +447,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(w) = args.get("workers") {
         cluster.workers = crate::coordinator::transport::parse_worker_list(w);
     }
+    // `--hedge-ms H` overrides the config's `[cluster] hedge_ms`
+    // (0 disables hedging; needs >= 2 workers to take effect).
+    if args.get("hedge-ms").is_some() {
+        cluster.hedge = match args.get_usize("hedge-ms", 0)? {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms as u64)),
+        };
+    }
     let mut cfg = crate::coordinator::ServeConfig {
         allow_ingest,
         max_ingest_batch: cfg_file.get_usize("serve", "max_ingest_batch", 1024),
@@ -495,6 +516,169 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// `loadbench`: stand up an ephemeral serving stack (optionally with
+/// in-process loopback shard workers and an injected straggler), fire
+/// the open-loop load harness at it, and print the latency table. The
+/// model is fit directly (fixed hyperparameters) — this benchmarks the
+/// serving path, not the trainer.
+fn cmd_loadbench(args: &Args) -> Result<()> {
+    use crate::coordinator::worker::{ShardWorker, WorkerConfig};
+    use crate::coordinator::{Client, ServeConfig, Server};
+    use crate::gp::model::SimplexGp;
+    use crate::gp::GpConfig;
+    use crate::loadgen::{Arrival, LoadSpec, Mix};
+    use std::time::Duration;
+
+    let (split, d) = load_split(args)?;
+    let cfg_file = load_config(args)?;
+    let family = parse_kernel(args)?;
+    let shards = args.get_usize("shards", 2)?;
+    let mode = args.get("mode").unwrap_or("inproc");
+    let worker_count = args.get_usize("workers", 2)?;
+    let rps = args.get_f64("rps", 200.0)?;
+    let duration = Duration::from_secs_f64(args.get_f64("duration-s", 2.0)?);
+    let clients = args.get_usize("clients", 8)?;
+    let seed = args.get_usize("seed", 0x10ad)? as u64;
+    let hedge_ms = args.get_usize("hedge-ms", 0)?;
+    let slow_ms = args.get_usize("slow-ms", 0)?;
+    let slow_shard = args.get_usize("slow-shard", 0)?;
+    let arrival = match args.get("arrival").unwrap_or("poisson") {
+        "poisson" => Arrival::Poisson,
+        "bursty" => Arrival::Bursty {
+            period: Duration::from_millis(200),
+            on_fraction: 0.25,
+        },
+        other => bail!("unknown arrival '{other}' (use poisson | bursty)"),
+    };
+    let mix = match args.get("mix").unwrap_or("serving") {
+        "mvm" => Mix::mvm_only(),
+        "serving" => Mix::serving(),
+        other => bail!("unknown mix '{other}' (use mvm | serving)"),
+    };
+
+    println!(
+        "fitting {} (n={}, d={d}, shards={shards})...",
+        split.train.name,
+        split.train.n()
+    );
+    let kernel = ArdKernel::with_lengthscale(family, d, 0.5);
+    let model = SimplexGp::fit(
+        &split.train.x,
+        &split.train.y,
+        d,
+        kernel,
+        0.05,
+        GpConfig {
+            shards,
+            ..GpConfig::default()
+        },
+    )?;
+    let shards = model.shards();
+
+    // Loopback shard workers for --mode tcp (the multi-node serving
+    // shape, minus the network).
+    let mut workers = Vec::new();
+    let mut cluster = crate::coordinator::transport::ClusterConfig::from_config(&cfg_file);
+    cluster.workers = Vec::new();
+    match mode {
+        "inproc" => {}
+        "tcp" => {
+            for _ in 0..worker_count.max(1) {
+                let w = ShardWorker::start(WorkerConfig {
+                    listen: "127.0.0.1:0".to_string(),
+                    ..WorkerConfig::default()
+                })?;
+                cluster.workers.push(w.local_addr.to_string());
+                workers.push(w);
+            }
+        }
+        other => bail!("unknown mode '{other}' (use inproc | tcp)"),
+    }
+    cluster.hedge = match hedge_ms {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+
+    let server = Server::start(
+        model,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_ingest: true,
+            debug_ops: slow_ms > 0,
+            cluster,
+            ..ServeConfig::default()
+        },
+    )?;
+    let addr = server.local_addr;
+
+    if mode == "tcp" {
+        // Wait for every worker link to come up and sync its replicas —
+        // the measurement should see the steady state, not the warmup.
+        let mut probe = Client::connect(&addr)?;
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            let st = probe.stats()?;
+            let up = st
+                .get("remote_workers")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0);
+            if up >= workers.len().min(shards) {
+                break;
+            }
+            if std::time::Instant::now() > deadline {
+                bail!("shard workers failed to sync within 30s");
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+    if slow_ms > 0 {
+        // Inject the deterministic straggler (debug_delay_worker).
+        use std::io::{BufRead as _, BufReader, Write as _};
+        let stream = std::net::TcpStream::connect(addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        writer.write_all(
+            format!(
+                "{{\"id\":1,\"op\":\"debug_delay_worker\",\"shard\":{slow_shard},\
+                 \"delay_ms\":{slow_ms}}}\n"
+            )
+            .as_bytes(),
+        )?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        if !line.contains("\"delayed\":1") {
+            bail!("debug_delay_worker failed: {}", line.trim());
+        }
+        println!("injected straggler: shard {slow_shard} worker +{slow_ms}ms per job");
+    }
+
+    let spec = LoadSpec {
+        rps,
+        duration,
+        clients,
+        arrival,
+        mix,
+        seed,
+        ..LoadSpec::default()
+    };
+    println!(
+        "load: mode={mode} rps={rps} duration={:.1}s clients={clients} hedge_ms={hedge_ms}",
+        duration.as_secs_f64()
+    );
+    let report = crate::loadgen::run(&addr, &spec)?;
+    report.print();
+    println!(
+        "hedged {}  hedge_wins {}",
+        server.hedged(),
+        server.hedge_wins()
+    );
+    server.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+    Ok(())
 }
 
 fn cmd_goldens(args: &Args) -> Result<()> {

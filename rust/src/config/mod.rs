@@ -186,6 +186,11 @@ result_timeout_ms = 10000 # per-shard reply deadline before local fallback
 refresh_timeout_ms = 60000 # replica rebuild deadline (scales with shard size)
 backoff_ms = 50           # initial reconnect backoff (doubles per failure)
 backoff_max_ms = 2000
+# Hedged redundancy: shard p is replicated to worker (p+1) mod W, and a
+# shard still unanswered after hedge_ms is raced against the backup
+# (first reply wins; replies stay byte-identical). 0 = off. Costs 2x
+# replica memory per worker; see docs/DEPLOYMENT.md §Hedged redundancy.
+hedge_ms = 0
 "#;
 
 #[cfg(test)]
@@ -211,6 +216,7 @@ mod tests {
         assert_eq!(cfg.get_usize("cluster", "backoff_ms", 0), 50);
         assert_eq!(cfg.get_usize("cluster", "backoff_max_ms", 0), 2000);
         assert_eq!(cfg.get_usize("cluster", "connect_timeout_ms", 0), 1000);
+        assert_eq!(cfg.get_usize("cluster", "hedge_ms", 7), 0);
     }
 
     #[test]

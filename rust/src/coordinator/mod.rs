@@ -137,6 +137,7 @@ enum Work {
         id: f64,
         v: Vec<f64>,
         reply: SyncSender<String>,
+        enqueued: Instant,
     },
     Ingest {
         id: f64,
@@ -144,6 +145,7 @@ enum Work {
         y: Vec<f64>,
         rows: usize,
         reply: SyncSender<String>,
+        enqueued: Instant,
     },
     Stats {
         id: f64,
@@ -157,6 +159,15 @@ enum Work {
         shard: usize,
         reply: SyncSender<String>,
     },
+    /// Debug-only (`ServeConfig::debug_ops`): make the worker serving
+    /// `shard` sleep `delay_ms` before every job — the deterministic
+    /// straggler behind the hedging fault-injection tests (0 clears it).
+    DelayWorker {
+        id: f64,
+        shard: usize,
+        delay_ms: u64,
+        reply: SyncSender<String>,
+    },
 }
 
 /// Monotonic serving counters, shared between the batcher and the
@@ -167,10 +178,36 @@ struct Counters {
     batches: AtomicU64,
     ingested: AtomicU64,
     rebuilds: AtomicU64,
+    /// Hedges fired: shard jobs still unanswered at the hedge deadline
+    /// that were raced against a backup worker or the in-thread
+    /// fallback (0 with `hedge_ms` unset).
+    hedged: AtomicU64,
+    /// Hedges won by the *backup worker's* reply (an in-thread hedge is
+    /// not counted — it is the fallback, not a racer). Always ≤ hedged.
+    hedge_wins: AtomicU64,
     /// Live remote shard-worker links (connected *and* replica-synced);
     /// 0 under the in-process transport. A gauge, not a counter —
     /// maintained by [`transport::TcpTransport`]'s I/O threads.
     remote_connected: Arc<AtomicU64>,
+    /// Per-request service latency (enqueue → reply hand-off), feeding
+    /// the `stats` op's `p50_us`/`p99_us`. Only the batcher thread
+    /// records; the mutex is uncontended on the hot path.
+    latency: std::sync::Mutex<crate::loadgen::LatencyHistogram>,
+}
+
+impl Counters {
+    fn record_latency(&self, enqueued: Instant) {
+        if let Ok(mut h) = self.latency.lock() {
+            h.record(enqueued.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+
+    fn latency_percentiles(&self) -> (f64, f64) {
+        match self.latency.lock() {
+            Ok(h) => (h.percentile(50.0), h.percentile(99.0)),
+            Err(_) => (0.0, 0.0),
+        }
+    }
 }
 
 /// Running server handle (owned threads shut down when dropped after
@@ -255,6 +292,17 @@ impl Server {
     /// `max_ingest_batch`.
     pub fn rebuilds(&self) -> u64 {
         self.counters.rebuilds.load(Ordering::Relaxed)
+    }
+
+    /// Hedges fired (shard jobs raced against a backup / the in-thread
+    /// fallback after the `hedge_ms` deadline).
+    pub fn hedged(&self) -> u64 {
+        self.counters.hedged.load(Ordering::Relaxed)
+    }
+
+    /// Hedges won by the backup worker's reply (≤ `hedged`).
+    pub fn hedge_wins(&self) -> u64 {
+        self.counters.hedge_wins.load(Ordering::Relaxed)
     }
 
     /// Stop the accept loop and batcher and join their threads.
@@ -368,6 +416,7 @@ fn parse_request(line: &str, reply: &SyncSender<String>) -> Result<Work, String>
                 id,
                 v,
                 reply: reply.clone(),
+                enqueued: Instant::now(),
             })
         }
         Some("ingest") => {
@@ -415,6 +464,7 @@ fn parse_request(line: &str, reply: &SyncSender<String>) -> Result<Work, String>
                 y,
                 rows,
                 reply: reply.clone(),
+                enqueued: Instant::now(),
             })
         }
         Some("stats") => Ok(Work::Stats {
@@ -429,6 +479,22 @@ fn parse_request(line: &str, reply: &SyncSender<String>) -> Result<Work, String>
             Ok(Work::KillWorker {
                 id,
                 shard,
+                reply: reply.clone(),
+            })
+        }
+        Some("debug_delay_worker") => {
+            let shard = json
+                .get("shard")
+                .and_then(|v| v.as_f64())
+                .ok_or("debug_delay_worker needs shard")? as usize;
+            let delay_ms = json
+                .get("delay_ms")
+                .and_then(|v| v.as_f64())
+                .ok_or("debug_delay_worker needs delay_ms")? as u64;
+            Ok(Work::DelayWorker {
+                id,
+                shard,
+                delay_ms,
                 reply: reply.clone(),
             })
         }
@@ -463,6 +529,13 @@ struct ShardPool {
     /// shard in-thread (`[cluster] result_timeout_ms`; generous for the
     /// local pool, where a shard MVM is milliseconds).
     result_timeout: Duration,
+    /// Hedge deadline (`[cluster] hedge_ms`): a shard still unanswered
+    /// this long after submission is raced against its backup worker —
+    /// or, when no backup exists, computed in-thread right away instead
+    /// of waiting out `result_timeout`. `None` = hedging off (PR 5
+    /// behavior, bit for bit).
+    hedge: Option<Duration>,
+    counters: Arc<Counters>,
     next_job: std::cell::Cell<u64>,
 }
 
@@ -474,7 +547,7 @@ impl ShardPool {
     fn start(
         model: &Arc<RwLock<SimplexGp>>,
         cfg: &ServeConfig,
-        counters: &Counters,
+        counters: &Arc<Counters>,
     ) -> ShardPool {
         let transport: Box<dyn ShardTransport> = if cfg.cluster.workers.is_empty() {
             Box::new(LocalTransport::start(model))
@@ -488,6 +561,8 @@ impl ShardPool {
         ShardPool {
             transport,
             result_timeout: cfg.cluster.result_timeout,
+            hedge: cfg.cluster.hedge,
+            counters: counters.clone(),
             next_job: std::cell::Cell::new(0),
         }
     }
@@ -498,6 +573,13 @@ impl ShardPool {
     /// worker would cause, minus the nondeterminism.
     fn kill_worker(&mut self, shard: usize) -> bool {
         self.transport.kill(shard)
+    }
+
+    /// Make the worker serving `shard` artificially slow (debug/test
+    /// hook): every later job sleeps `delay` first. The deterministic
+    /// straggler behind `rust/tests/hedging.rs`.
+    fn delay_worker(&mut self, shard: usize, delay: Duration) -> bool {
+        self.transport.delay(shard, delay)
     }
 
     /// Propagate a streaming-ingest batch to the remote replica of
@@ -517,8 +599,13 @@ impl ShardPool {
         if slots == 0 {
             return None;
         }
+        // Job ids advance by 2: the even id tags this batch's primary
+        // submissions, the odd id (`job + 1`) its hedged backups. Both
+        // are accepted below; anything else is stale. Keeping the ids
+        // distinct is how `hedge_wins` can tell a backup's reply from a
+        // slow primary's without widening the result message.
         let job = self.next_job.get();
-        self.next_job.set(job + 1);
+        self.next_job.set(job + 2);
         let n = lat.n;
         let mut out = vec![0.0; n * b];
         let mut waiting = vec![false; slots];
@@ -537,33 +624,97 @@ impl ShardPool {
                 lat.scatter_shard_block(&mut out, p, &part, b);
             }
         }
-        let deadline = Instant::now() + self.result_timeout;
+        let start = Instant::now();
+        let deadline = start + self.result_timeout;
+        // One hedge point per batch: the first time the wait crosses it
+        // with shards still unanswered, those shards are raced.
+        let mut hedge_at = self.hedge.map(|h| start + h);
         while waiting_count > 0 {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
+            let now = Instant::now();
+            if now >= deadline {
                 break;
             }
-            let Some((jid, p, part)) = self.transport.recv_result(remaining) else {
-                break;
+            // Wait only as far as the hedge point so the race fires on
+            // time even when no result arrives at all.
+            let wait_until = match hedge_at {
+                Some(h) if h < deadline => h,
+                _ => deadline,
             };
-            if jid != job || p >= slots || !waiting[p] {
-                // Stale result from an abandoned batch — drop it.
-                continue;
-            }
-            waiting[p] = false;
-            waiting_count -= 1;
-            match part {
-                Some(part) => lat.scatter_shard_block(&mut out, p, &part, b),
-                // The worker accepted but failed the job: in-thread.
+            let remaining = wait_until.saturating_duration_since(now);
+            let got = if remaining.is_zero() {
+                None
+            } else {
+                self.transport.recv_result(remaining)
+            };
+            match got {
+                Some((jid, p, part)) => {
+                    if p >= slots || (jid != job && jid != job + 1) || !waiting[p] {
+                        // Stale result from an abandoned batch, or the
+                        // loser of a hedge race already satisfied —
+                        // drop it. This check is exactly why hedging
+                        // cannot change reply bytes: whichever copy
+                        // arrives first wins the slot, the other is
+                        // discarded here.
+                        continue;
+                    }
+                    match part {
+                        Some(part) => {
+                            if jid == job + 1 {
+                                self.counters.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                            }
+                            waiting[p] = false;
+                            waiting_count -= 1;
+                            lat.scatter_shard_block(&mut out, p, &part, b);
+                        }
+                        // A failed job (connection died mid-roundtrip,
+                        // stale replica): compute in-thread right away
+                        // — even when a hedge twin may still be in
+                        // flight, since we cannot know its fate. The
+                        // slot is no longer waiting, so a twin that
+                        // does arrive is discarded by the stale check.
+                        None => {
+                            waiting[p] = false;
+                            waiting_count -= 1;
+                            let part = lat.shard_mvm_block(p, v, b);
+                            lat.scatter_shard_block(&mut out, p, &part, b);
+                        }
+                    }
+                }
                 None => {
-                    let part = lat.shard_mvm_block(p, v, b);
-                    lat.scatter_shard_block(&mut out, p, &part, b);
+                    // recv timed out. If we were waiting for the hedge
+                    // point, fire the hedges and keep collecting;
+                    // otherwise (deadline reached or the transport's
+                    // channel died) leave the loop.
+                    match hedge_at {
+                        Some(h) if Instant::now() >= h => {
+                            hedge_at = None;
+                            for p in 0..slots {
+                                if !waiting[p] {
+                                    continue;
+                                }
+                                self.counters.hedged.fetch_add(1, Ordering::Relaxed);
+                                if !self.transport.submit_backup(p, lat, v, b, job + 1) {
+                                    // No backup (local pool, or its
+                                    // link is down/full): the hedge IS
+                                    // the in-thread fallback, now —
+                                    // not at result_timeout. The slow
+                                    // primary's late reply hits the
+                                    // stale check above.
+                                    waiting[p] = false;
+                                    waiting_count -= 1;
+                                    let part = lat.shard_mvm_block(p, v, b);
+                                    lat.scatter_shard_block(&mut out, p, &part, b);
+                                }
+                            }
+                        }
+                        _ => break,
+                    }
                 }
             }
         }
         // Timed-out shards: compute in-thread. A late result carries
-        // this job id and is discarded by the stale check above on the
-        // next call.
+        // this job id (or its hedge twin) and is discarded by the stale
+        // check above on the next call.
         for p in 0..slots {
             if waiting[p] {
                 let part = lat.shard_mvm_block(p, v, b);
@@ -588,13 +739,13 @@ struct Batch {
     /// Concatenated prediction inputs (Σ rows × d).
     predict_x: Vec<f64>,
     predict_rows: usize,
-    /// (id, reply) per pending mvm request.
-    mvms: Vec<(f64, SyncSender<String>)>,
+    /// (id, reply, enqueued) per pending mvm request.
+    mvms: Vec<(f64, SyncSender<String>, Instant)>,
     /// Row-major `b × n` block of mvm vectors awaiting one batched
     /// lattice pass.
     mvm_v: Vec<f64>,
-    /// (id, rows, reply) per pending ingest request.
-    ingests: Vec<(f64, usize, SyncSender<String>)>,
+    /// (id, rows, reply, enqueued) per pending ingest request.
+    ingests: Vec<(f64, usize, SyncSender<String>, Instant)>,
     /// Concatenated ingest inputs/targets awaiting one model update.
     ingest_x: Vec<f64>,
     ingest_y: Vec<f64>,
@@ -644,6 +795,7 @@ fn flush_batch(
             // Count before sending: clients may observe the reply (and a
             // test may read the counter) the instant send returns.
             counters.served.fetch_add(1, Ordering::Relaxed);
+            counters.record_latency(enqueued);
             let _ = reply.send(Json::Obj(obj).to_string());
         }
         batch.predict_x.clear();
@@ -665,12 +817,13 @@ fn flush_batch(
             .unwrap_or_else(|| lat.mvm_block(&v, b));
         drop(guard);
         counters.batches.fetch_add(1, Ordering::Relaxed);
-        for (k, (id, reply)) in batch.mvms.drain(..).enumerate() {
+        for (k, (id, reply, enqueued)) in batch.mvms.drain(..).enumerate() {
             let mut obj = BTreeMap::new();
             obj.insert("id".to_string(), Json::Num(id));
             obj.insert("u".to_string(), json_num_array(&u[k * n..(k + 1) * n]));
             obj.insert("batched_with".to_string(), Json::Num(b as f64));
             counters.served.fetch_add(1, Ordering::Relaxed);
+            counters.record_latency(enqueued);
             let _ = reply.send(Json::Obj(obj).to_string());
         }
     }
@@ -726,7 +879,7 @@ fn flush_batch(
         match result {
             Ok((shard, was_rebuild, _)) => {
                 counters.ingested.fetch_add(rows as u64, Ordering::Relaxed);
-                for (id, req_rows, reply) in batch.ingests.drain(..) {
+                for (id, req_rows, reply, enqueued) in batch.ingests.drain(..) {
                     let mut obj = BTreeMap::new();
                     obj.insert("id".to_string(), Json::Num(id));
                     obj.insert("ingested".to_string(), Json::Num(req_rows as f64));
@@ -737,12 +890,13 @@ fn flush_batch(
                         Json::Num(if was_rebuild { 1.0 } else { 0.0 }),
                     );
                     counters.served.fetch_add(1, Ordering::Relaxed);
+                    counters.record_latency(enqueued);
                     let _ = reply.send(Json::Obj(obj).to_string());
                 }
             }
             Err(e) => {
                 let msg = Json::Str(format!("ingest failed: {e}"));
-                for (id, _, reply) in batch.ingests.drain(..) {
+                for (id, _, reply, _) in batch.ingests.drain(..) {
                     let _ = reply.send(format!("{{\"id\":{id},\"error\":{msg}}}"));
                 }
             }
@@ -764,12 +918,25 @@ fn batch_loop(
     let d = model.read().unwrap().d;
     let mut pool = ShardPool::start(&model, &cfg, &counters);
     let mut batch = Batch::default();
-    // Debug kill requests drain after the flush so in-flight batches
-    // complete on the live pool first (deterministic ordering for the
-    // failure-path tests).
-    let mut kills: Vec<(f64, usize, SyncSender<String>)> = Vec::new();
+    // Debug fault-injection requests (kill / delay) drain after the
+    // flush so in-flight batches complete on the live pool first
+    // (deterministic ordering for the failure-path tests).
+    enum DebugCmd {
+        Kill {
+            id: f64,
+            shard: usize,
+            reply: SyncSender<String>,
+        },
+        Delay {
+            id: f64,
+            shard: usize,
+            delay_ms: u64,
+            reply: SyncSender<String>,
+        },
+    }
+    let mut debug: Vec<DebugCmd> = Vec::new();
 
-    let handle = |w: Work, batch: &mut Batch, kills: &mut Vec<(f64, usize, SyncSender<String>)>| {
+    let handle = |w: Work, batch: &mut Batch, debug: &mut Vec<DebugCmd>| {
         match w {
             Work::Predict {
                 id,
@@ -788,7 +955,12 @@ fn batch_loop(
                 batch.predict_rows += rows;
                 batch.predicts.push((id, rows, reply, enqueued));
             }
-            Work::Mvm { id, v, reply } => {
+            Work::Mvm {
+                id,
+                v,
+                reply,
+                enqueued,
+            } => {
                 let n = model.read().unwrap().n_train();
                 if v.len() != n {
                     let _ = reply.send(format!(
@@ -797,7 +969,7 @@ fn batch_loop(
                     return;
                 }
                 batch.mvm_v.extend_from_slice(&v);
-                batch.mvms.push((id, reply));
+                batch.mvms.push((id, reply, enqueued));
             }
             Work::Ingest {
                 id,
@@ -805,6 +977,7 @@ fn batch_loop(
                 y,
                 rows,
                 reply,
+                enqueued,
             } => {
                 if !cfg.allow_ingest {
                     let _ = reply.send(format!(
@@ -829,7 +1002,7 @@ fn batch_loop(
                 }
                 batch.ingest_x.extend_from_slice(&x);
                 batch.ingest_y.extend_from_slice(&y);
-                batch.ingests.push((id, rows, reply));
+                batch.ingests.push((id, rows, reply, enqueued));
             }
             Work::Stats { id, reply } => {
                 let guard = model.read().unwrap();
@@ -875,6 +1048,19 @@ fn batch_loop(
                     "remote_workers".to_string(),
                     Json::Num(counters.remote_connected.load(Ordering::Relaxed) as f64),
                 );
+                // Hedged-redundancy visibility (0/0 with hedge_ms unset)
+                // and the server-side service-latency percentiles.
+                obj.insert(
+                    "hedged".to_string(),
+                    Json::Num(counters.hedged.load(Ordering::Relaxed) as f64),
+                );
+                obj.insert(
+                    "hedge_wins".to_string(),
+                    Json::Num(counters.hedge_wins.load(Ordering::Relaxed) as f64),
+                );
+                let (p50, p99) = counters.latency_percentiles();
+                obj.insert("p50_us".to_string(), Json::Num(p50));
+                obj.insert("p99_us".to_string(), Json::Num(p99));
                 let _ = reply.send(Json::Obj(obj).to_string());
             }
             Work::KillWorker { id, shard, reply } => {
@@ -884,7 +1070,26 @@ fn batch_loop(
                     ));
                     return;
                 }
-                kills.push((id, shard, reply));
+                debug.push(DebugCmd::Kill { id, shard, reply });
+            }
+            Work::DelayWorker {
+                id,
+                shard,
+                delay_ms,
+                reply,
+            } => {
+                if !cfg.debug_ops {
+                    let _ = reply.send(format!(
+                        "{{\"id\":{id},\"error\":\"debug ops disabled\"}}"
+                    ));
+                    return;
+                }
+                debug.push(DebugCmd::Delay {
+                    id,
+                    shard,
+                    delay_ms,
+                    reply,
+                });
             }
         }
     };
@@ -897,17 +1102,18 @@ fn batch_loop(
             Err(_) => break,
         };
         let deadline = Instant::now() + cfg.max_wait;
-        handle(first, &mut batch, &mut kills);
-        // Fill the batch until deadline or capacity (a pending kill
-        // flushes immediately so its ordering stays deterministic).
-        while batch.units() < cfg.max_batch && kills.is_empty() {
+        handle(first, &mut batch, &mut debug);
+        // Fill the batch until deadline or capacity (a pending debug
+        // command flushes immediately so its ordering stays
+        // deterministic).
+        while batch.units() < cfg.max_batch && debug.is_empty() {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(w) => {
-                    handle(w, &mut batch, &mut kills);
+                    handle(w, &mut batch, &mut debug);
                     if batch.units() >= cfg.max_batch {
                         break;
                     }
@@ -929,12 +1135,28 @@ fn batch_loop(
                 old.shutdown();
             }
         }
-        for (id, shard, reply) in kills.drain(..) {
-            let ok = pool.kill_worker(shard);
-            let _ = reply.send(format!(
-                "{{\"id\":{id},\"killed\":{}}}",
-                if ok { 1 } else { 0 }
-            ));
+        for cmd in debug.drain(..) {
+            match cmd {
+                DebugCmd::Kill { id, shard, reply } => {
+                    let ok = pool.kill_worker(shard);
+                    let _ = reply.send(format!(
+                        "{{\"id\":{id},\"killed\":{}}}",
+                        if ok { 1 } else { 0 }
+                    ));
+                }
+                DebugCmd::Delay {
+                    id,
+                    shard,
+                    delay_ms,
+                    reply,
+                } => {
+                    let ok = pool.delay_worker(shard, Duration::from_millis(delay_ms));
+                    let _ = reply.send(format!(
+                        "{{\"id\":{id},\"delayed\":{}}}",
+                        if ok { 1 } else { 0 }
+                    ));
+                }
+            }
         }
     }
     if !batch.is_empty() {
@@ -1345,7 +1567,7 @@ mod tests {
         // runs on its worker).
         let model = Arc::new(RwLock::new(sharded_model(2)));
         let cfg = ServeConfig::default();
-        let counters = Counters::default();
+        let counters = Arc::new(Counters::default());
         let mut pool = ShardPool::start(&model, &cfg, &counters);
         let guard = model.read().unwrap();
         let n = guard.n_train();
@@ -1378,7 +1600,7 @@ mod tests {
         // P = 1 keeps the zero-copy direct path: no workers, no pool.
         let model = Arc::new(RwLock::new(tiny_model()));
         let cfg = ServeConfig::default();
-        let counters = Counters::default();
+        let counters = Arc::new(Counters::default());
         let pool = ShardPool::start(&model, &cfg, &counters);
         let guard = model.read().unwrap();
         let n = guard.n_train();
@@ -1462,6 +1684,39 @@ mod tests {
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("debug ops disabled"), "got: {line}");
+        writer
+            .write_all(b"{\"id\":2,\"op\":\"debug_delay_worker\",\"shard\":0,\"delay_ms\":100}\n")
+            .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("debug ops disabled"), "got: {line}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_report_hedging_and_latency_fields() {
+        // The new observability fields are always present: hedging
+        // counters pinned to 0 with hedge_ms unset, latency percentiles
+        // populated once anything has been served.
+        let model = tiny_model();
+        let server = Server::start(
+            model,
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        client.predict(&[0.1, 0.2], 2).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("hedged").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(stats.get("hedge_wins").and_then(|v| v.as_f64()), Some(0.0));
+        let p50 = stats.get("p50_us").and_then(|v| v.as_f64()).unwrap();
+        let p99 = stats.get("p99_us").and_then(|v| v.as_f64()).unwrap();
+        assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+        assert_eq!(server.hedged(), 0);
+        assert_eq!(server.hedge_wins(), 0);
         server.shutdown();
     }
 

@@ -79,6 +79,13 @@ pub struct ClusterConfig {
     pub backoff_max: Duration,
     /// Frame payload cap in bytes (both directions).
     pub max_frame_bytes: usize,
+    /// Hedged redundancy: when set, each shard also gets a *backup*
+    /// worker (shard `p` → workers `p % W` and `(p+1) % W`), and a job
+    /// still unanswered this long after submission is raced against the
+    /// backup (or the in-thread fallback when no backup exists) — first
+    /// reply wins, byte-identically. `None` (config `hedge_ms = 0`)
+    /// disables hedging: PR 5 behavior, bit for bit.
+    pub hedge: Option<Duration>,
 }
 
 impl Default for ClusterConfig {
@@ -91,6 +98,7 @@ impl Default for ClusterConfig {
             backoff: Duration::from_millis(50),
             backoff_max: Duration::from_millis(2000),
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            hedge: None,
         }
     }
 }
@@ -115,6 +123,10 @@ impl ClusterConfig {
             backoff: ms("backoff_ms", base.backoff),
             backoff_max: ms("backoff_max_ms", base.backoff_max),
             max_frame_bytes: cfg.get_usize("cluster", "frame_mb", 64) * 1024 * 1024,
+            hedge: match cfg.get_usize("cluster", "hedge_ms", 0) {
+                0 => None,
+                ms => Some(Duration::from_millis(ms as u64)),
+            },
         }
     }
 }
@@ -176,10 +188,39 @@ pub trait ShardTransport: Send {
     /// refresh on reconnect).
     fn ingest(&self, shard: usize, x: &[f64], expect_fingerprint: u64);
 
+    /// Submit the same job to slot `slot`'s *backup* worker (hedged
+    /// request). Returns `false` when no backup exists or it cannot
+    /// take the job — the caller races the in-thread fallback instead.
+    /// Both the primary's and the backup's replies arrive through
+    /// [`ShardTransport::recv_result`]; the loser is a stale result the
+    /// caller already discards by job id, so hedging never changes
+    /// reply bytes. Default: no backups (the local pool's hedge is the
+    /// in-thread fallback itself).
+    fn submit_backup(
+        &self,
+        _slot: usize,
+        _lat: &ShardedLattice,
+        _v: &Arc<Vec<f64>>,
+        _b: usize,
+        _job: u64,
+    ) -> bool {
+        false
+    }
+
     /// Deterministically disable the worker serving `slot` (all slots
     /// that worker holds degrade to in-thread compute). Returns whether
     /// the slot existed.
     fn kill(&mut self, slot: usize) -> bool;
+
+    /// Make the worker serving `slot` artificially slow: every
+    /// subsequent job it serves sleeps `delay` first (`Duration::ZERO`
+    /// clears it). Debug/test hook behind `ServeConfig::debug_ops` —
+    /// the deterministic stand-in for a straggling worker, which
+    /// `rust/tests/hedging.rs` uses to pin every hedging degradation
+    /// path. Returns whether the slot existed and supports delays.
+    fn delay(&mut self, _slot: usize, _delay: Duration) -> bool {
+        false
+    }
 
     /// Stop worker threads / close connections and join.
     fn shutdown(self: Box<Self>);
@@ -207,6 +248,10 @@ pub struct LocalTransport {
     jobs: Vec<SyncSender<LocalJob>>,
     results: Receiver<ShardResultMsg>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Per-slot artificial delay in microseconds (0 = none), read by
+    /// the worker thread before each job — the `debug_delay_worker`
+    /// hook. Indexed by shard slot, never reordered by `kill`.
+    delays: Vec<Arc<AtomicU64>>,
 }
 
 impl LocalTransport {
@@ -220,16 +265,23 @@ impl LocalTransport {
         let (res_tx, res_rx) = sync_channel::<ShardResultMsg>(p.max(1));
         let mut jobs = Vec::new();
         let mut workers = Vec::new();
+        let mut delays = Vec::new();
         if p > 1 {
             for shard in 0..p {
                 let (tx, rx) = sync_channel::<LocalJob>(1);
                 jobs.push(tx);
+                let delay = Arc::new(AtomicU64::new(0));
+                delays.push(delay.clone());
                 let model = model.clone();
                 let res_tx = res_tx.clone();
                 workers.push(std::thread::spawn(move || {
                     // Workers exit when the transport drops the job
                     // senders.
                     while let Ok(job) = rx.recv() {
+                        let us = delay.load(Ordering::Acquire);
+                        if us > 0 {
+                            std::thread::sleep(Duration::from_micros(us));
+                        }
                         let part = {
                             let guard = model.read().unwrap();
                             guard
@@ -248,6 +300,7 @@ impl LocalTransport {
             jobs,
             results: res_rx,
             workers,
+            delays,
         }
     }
 }
@@ -303,6 +356,18 @@ impl ShardTransport for LocalTransport {
         true
     }
 
+    /// Inject a per-job sleep into slot `slot`'s worker thread — the
+    /// deterministic "straggler" every hedging test leans on. With no
+    /// backup workers, a hedged job on a delayed slot falls to the
+    /// in-thread compute at the hedge deadline.
+    fn delay(&mut self, slot: usize, delay: Duration) -> bool {
+        if slot >= self.delays.len() {
+            return false;
+        }
+        self.delays[slot].store(delay.as_micros() as u64, Ordering::Release);
+        true
+    }
+
     fn shutdown(self: Box<Self>) {
         drop(self.jobs);
         for w in self.workers {
@@ -345,6 +410,10 @@ struct WorkerLink {
     /// connection and re-sync rather than keep serving a replica that
     /// missed the patch.
     unsync: Arc<AtomicBool>,
+    /// Artificial per-job delay in microseconds (0 = none), applied by
+    /// the I/O thread before each MVM roundtrip — the
+    /// `debug_delay_worker` hook.
+    delay_us: Arc<AtomicU64>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -355,6 +424,9 @@ pub struct TcpTransport {
     links: Vec<WorkerLink>,
     /// `assignment[p]` = index into `links` serving shard `p`.
     assignment: Vec<usize>,
+    /// `backup[p]` = index into `links` holding shard `p`'s hedge
+    /// replica (`(p+1) % W`); `None` when hedging is off or W < 2.
+    backup: Vec<Option<usize>>,
     results: Receiver<ShardResultMsg>,
     slots: usize,
 }
@@ -375,11 +447,23 @@ impl TcpTransport {
         let w = cluster.workers.len();
         assert!(w > 0, "TcpTransport needs at least one worker address");
         let assignment: Vec<usize> = (0..slots).map(|p| p % w).collect();
-        let (res_tx, res_rx) = sync_channel::<ShardResultMsg>(slots.max(1));
+        // Hedged redundancy: shard p's backup replica lives on the
+        // *next* worker, so losing (or merely straggling on) any one
+        // worker leaves every shard with a fast copy. Requires W ≥ 2 —
+        // with one worker the "backup" would be the primary itself.
+        let hedged = cluster.hedge.is_some() && w >= 2;
+        let backup: Vec<Option<usize>> = (0..slots)
+            .map(|p| if hedged { Some((p + 1) % w) } else { None })
+            .collect();
+        let (res_tx, res_rx) = sync_channel::<ShardResultMsg>(2 * slots.max(1));
         let mut links = Vec::with_capacity(w);
         for (wi, addr) in cluster.workers.iter().enumerate() {
-            let assigned: Vec<usize> =
-                (0..slots).filter(|p| assignment[*p] == wi).collect();
+            // A hedged worker holds its primary shards AND the backup
+            // replicas assigned to it — the 2× replica-memory cost
+            // documented in docs/DEPLOYMENT.md.
+            let assigned: Vec<usize> = (0..slots)
+                .filter(|p| assignment[*p] == wi || backup[*p] == Some(wi))
+                .collect();
             if assigned.is_empty() {
                 // More workers than shards: idle link, never connected.
                 links.push(WorkerLink {
@@ -387,6 +471,7 @@ impl TcpTransport {
                     ready: Arc::new(AtomicBool::new(false)),
                     stop: Arc::new(AtomicBool::new(true)),
                     unsync: Arc::new(AtomicBool::new(false)),
+                    delay_us: Arc::new(AtomicU64::new(0)),
                     handle: None,
                 });
                 continue;
@@ -395,6 +480,7 @@ impl TcpTransport {
             let ready = Arc::new(AtomicBool::new(false));
             let stop = Arc::new(AtomicBool::new(false));
             let unsync = Arc::new(AtomicBool::new(false));
+            let delay_us = Arc::new(AtomicU64::new(0));
             let io = LinkIo {
                 addr: addr.clone(),
                 assigned,
@@ -403,6 +489,7 @@ impl TcpTransport {
                 ready: ready.clone(),
                 stop: stop.clone(),
                 unsync: unsync.clone(),
+                delay_us: delay_us.clone(),
                 res_tx: res_tx.clone(),
                 gauge: connected_gauge.clone(),
             };
@@ -412,15 +499,46 @@ impl TcpTransport {
                 ready,
                 stop,
                 unsync,
+                delay_us,
                 handle: Some(handle),
             });
         }
         TcpTransport {
             links,
             assignment,
+            backup,
             results: res_rx,
             slots,
         }
+    }
+
+    /// Enqueue an MVM job on `link` (shared by the primary and backup
+    /// submit paths). Non-blocking: a full queue or a non-ready link
+    /// declines.
+    fn enqueue_mvm(
+        &self,
+        link_idx: usize,
+        slot: usize,
+        lat: &ShardedLattice,
+        v: &Arc<Vec<f64>>,
+        b: usize,
+        job: u64,
+    ) -> bool {
+        let link = &self.links[link_idx];
+        if !link.ready.load(Ordering::Acquire) {
+            return false;
+        }
+        let Some(tx) = link.tx.as_ref() else {
+            return false;
+        };
+        let local = lat.gather_shard_block(slot, v, b);
+        tx.try_send(LinkMsg::Mvm {
+            shard: slot,
+            job,
+            b,
+            local,
+        })
+        .is_ok()
     }
 }
 
@@ -437,24 +555,28 @@ impl ShardTransport for TcpTransport {
         b: usize,
         job: u64,
     ) -> bool {
-        let link = &self.links[self.assignment[slot]];
-        if !link.ready.load(Ordering::Acquire) {
-            return false;
-        }
-        let Some(tx) = link.tx.as_ref() else {
-            return false;
-        };
-        let local = lat.gather_shard_block(slot, v, b);
         // Non-blocking: a queue still full behind a slow worker means
         // "decline" (the caller computes this shard in-thread) — never
         // a stalled batcher.
-        tx.try_send(LinkMsg::Mvm {
-            shard: slot,
-            job,
-            b,
-            local,
-        })
-        .is_ok()
+        self.enqueue_mvm(self.assignment[slot], slot, lat, v, b, job)
+    }
+
+    /// Hedge `slot` to its backup worker. The backup holds a synced
+    /// replica of the shard (it was assigned it at link start and
+    /// receives ingest deltas), so its reply is byte-identical to the
+    /// primary's.
+    fn submit_backup(
+        &self,
+        slot: usize,
+        lat: &ShardedLattice,
+        v: &Arc<Vec<f64>>,
+        b: usize,
+        job: u64,
+    ) -> bool {
+        match self.backup.get(slot).copied().flatten() {
+            Some(bw) => self.enqueue_mvm(bw, slot, lat, v, b, job),
+            None => false,
+        }
     }
 
     fn recv_result(&self, timeout: Duration) -> Option<ShardResultMsg> {
@@ -465,27 +587,40 @@ impl ShardTransport for TcpTransport {
         if shard >= self.assignment.len() {
             return;
         }
-        let link = &self.links[self.assignment[shard]];
-        // An unsynced link will full-refresh from the (already patched)
-        // model on reconnect — enqueueing the delta would double-apply.
-        if !link.ready.load(Ordering::Acquire) {
-            return;
+        // Every replica of the shard gets the delta: the primary link
+        // and, under hedging, the backup link — a hedged job must find
+        // the backup as fresh as the primary.
+        let mut targets = vec![self.assignment[shard]];
+        if let Some(bw) = self.backup.get(shard).copied().flatten() {
+            if bw != self.assignment[shard] {
+                targets.push(bw);
+            }
         }
-        if let Some(tx) = link.tx.as_ref() {
-            // Non-blocking like `submit`. A ready link that cannot take
-            // the delta (queue full behind a slow worker) must NOT keep
-            // serving its now-stale replica: flag it so the I/O thread
-            // drops the connection and re-syncs from the patched model.
-            if tx
-                .try_send(LinkMsg::Ingest {
-                    shard,
-                    x: x.to_vec(),
-                    expect_fp: expect_fingerprint,
-                })
-                .is_err()
-            {
-                link.ready.store(false, Ordering::Release);
-                link.unsync.store(true, Ordering::Release);
+        for li in targets {
+            let link = &self.links[li];
+            // An unsynced link will full-refresh from the (already
+            // patched) model on reconnect — enqueueing the delta would
+            // double-apply.
+            if !link.ready.load(Ordering::Acquire) {
+                continue;
+            }
+            if let Some(tx) = link.tx.as_ref() {
+                // Non-blocking like `submit`. A ready link that cannot
+                // take the delta (queue full behind a slow worker) must
+                // NOT keep serving its now-stale replica: flag it so the
+                // I/O thread drops the connection and re-syncs from the
+                // patched model.
+                if tx
+                    .try_send(LinkMsg::Ingest {
+                        shard,
+                        x: x.to_vec(),
+                        expect_fp: expect_fingerprint,
+                    })
+                    .is_err()
+                {
+                    link.ready.store(false, Ordering::Release);
+                    link.unsync.store(true, Ordering::Release);
+                }
             }
         }
     }
@@ -501,6 +636,22 @@ impl ShardTransport for TcpTransport {
         link.stop.store(true, Ordering::Release);
         link.ready.store(false, Ordering::Release);
         link.tx = None; // disconnects the I/O thread's queue
+        true
+    }
+
+    /// Delay the *primary* link serving `slot`: its I/O thread sleeps
+    /// before every MVM roundtrip, making the worker look like a
+    /// straggler without touching the worker process. A hedged
+    /// coordinator then answers through the backup; an unhedged one
+    /// waits the delay out — the contrast `rust/tests/hedging.rs`
+    /// measures.
+    fn delay(&mut self, slot: usize, delay: Duration) -> bool {
+        if slot >= self.assignment.len() {
+            return false;
+        }
+        self.links[self.assignment[slot]]
+            .delay_us
+            .store(delay.as_micros() as u64, Ordering::Release);
         true
     }
 
@@ -526,6 +677,7 @@ struct LinkIo {
     ready: Arc<AtomicBool>,
     stop: Arc<AtomicBool>,
     unsync: Arc<AtomicBool>,
+    delay_us: Arc<AtomicU64>,
     res_tx: SyncSender<ShardResultMsg>,
     gauge: Arc<AtomicU64>,
 }
@@ -629,6 +781,16 @@ impl LinkIo {
                 b,
                 local,
             } => {
+                // Injected straggle (`debug_delay_worker`): sleep in
+                // short slices so shutdown stays responsive.
+                let delay = self.delay_us.load(Ordering::Acquire);
+                if delay > 0 {
+                    let until = Instant::now() + Duration::from_micros(delay);
+                    while Instant::now() < until && !self.stop.load(Ordering::Acquire) {
+                        let left = until.saturating_duration_since(Instant::now());
+                        std::thread::sleep(left.min(Duration::from_millis(20)));
+                    }
+                }
                 let expect_len = local.len();
                 match self.roundtrip_mvm(conn, shard, job, b, &local) {
                     Ok(u) if u.len() == expect_len => {
@@ -911,7 +1073,8 @@ mod tests {
     fn cluster_config_from_file() {
         let cfg = Config::parse(
             "[cluster]\nworkers = \"127.0.0.1:7900,127.0.0.1:7901\"\n\
-             result_timeout_ms = 500\nframe_mb = 8\nbackoff_ms = 10\n",
+             result_timeout_ms = 500\nframe_mb = 8\nbackoff_ms = 10\n\
+             hedge_ms = 25\n",
         )
         .unwrap();
         let cc = ClusterConfig::from_config(&cfg);
@@ -919,9 +1082,16 @@ mod tests {
         assert_eq!(cc.result_timeout, Duration::from_millis(500));
         assert_eq!(cc.max_frame_bytes, 8 * 1024 * 1024);
         assert_eq!(cc.backoff, Duration::from_millis(10));
+        assert_eq!(cc.hedge, Some(Duration::from_millis(25)));
         // Unset keys keep the defaults.
         assert_eq!(cc.connect_timeout, Duration::from_millis(1000));
         assert_eq!(cc.refresh_timeout, Duration::from_secs(60));
+        // hedge_ms = 0 (and absence) means hedging off.
+        let off = ClusterConfig::from_config(
+            &Config::parse("[cluster]\nhedge_ms = 0\n").unwrap(),
+        );
+        assert_eq!(off.hedge, None);
+        assert_eq!(ClusterConfig::default().hedge, None);
     }
 
     #[test]

@@ -67,6 +67,11 @@ impl Default for WorkerConfig {
 struct HeldShard {
     lattice: PermutohedralLattice,
     kernel: ArdKernel,
+    /// `shard_mvm_block` jobs answered from THIS replica (reset by
+    /// `refresh_shard`). Distinguishes primary from hedged-backup
+    /// traffic when a worker holds both roles for different shards —
+    /// the hedging tests assert the backup replica actually served.
+    served: u64,
 }
 
 /// State shared by every connection: the held shard replicas and the
@@ -138,6 +143,19 @@ impl ShardWorker {
         self.state.shards.lock().unwrap().keys().copied().collect()
     }
 
+    /// Jobs answered from the replica of `shard` specifically (0 when
+    /// the shard is not held). `served()` sums across replicas; this
+    /// view is what lets a test prove a *backup* replica won a hedge
+    /// race on a worker that also primaries another shard.
+    pub fn served_for(&self, shard: usize) -> u64 {
+        self.state
+            .shards
+            .lock()
+            .unwrap()
+            .get(&shard)
+            .map_or(0, |h| h.served)
+    }
+
     /// Stop accepting, wind down connection threads, and join.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
@@ -191,6 +209,7 @@ fn shard_status(p: usize, held: &HeldShard) -> Json {
         "fingerprint".to_string(),
         Json::Str(format_fp(held.lattice.fingerprint())),
     );
+    obj.insert("served".to_string(), Json::Num(held.served as f64));
     Json::Obj(obj)
 }
 
@@ -305,7 +324,11 @@ fn refresh_shard(req: &Json, state: &WorkerState) -> Result<Json> {
         lengthscales,
     };
     let lattice = PermutohedralLattice::build(&x, d, &kernel, order);
-    let held = HeldShard { lattice, kernel };
+    let held = HeldShard {
+        lattice,
+        kernel,
+        served: 0,
+    };
     let reply = ok_shard_reply(shard, &held, None);
     state.shards.lock().unwrap().insert(shard, held);
     Ok(reply)
@@ -337,9 +360,9 @@ fn shard_mvm_block(req: &Json, state: &WorkerState) -> Result<Json> {
         .get("v")
         .and_then(|v| v.to_f64_vec())
         .ok_or_else(|| anyhow!("shard_mvm_block needs v"))?;
-    let shards = state.shards.lock().unwrap();
+    let mut shards = state.shards.lock().unwrap();
     let held = shards
-        .get(&shard)
+        .get_mut(&shard)
         .ok_or_else(|| anyhow!("shard {shard} not held (refresh_shard first)"))?;
     let np = held.lattice.n;
     if v.len() != b * np {
@@ -353,6 +376,7 @@ fn shard_mvm_block(req: &Json, state: &WorkerState) -> Result<Json> {
     // here the coordinator already gathered, so this IS that call —
     // byte-identical rows by construction.
     let u = held.lattice.filter_block(&v, b);
+    held.served += 1;
     state.served.fetch_add(1, Ordering::Relaxed);
     let mut obj = BTreeMap::new();
     obj.insert("job".to_string(), Json::Num(job));
@@ -645,6 +669,8 @@ mod tests {
             assert_eq!(u[i].to_bits(), direct[i].to_bits(), "row {i}");
         }
         assert_eq!(worker.served(), 1);
+        assert_eq!(worker.served_for(1), 1);
+        assert_eq!(worker.served_for(0), 0);
         worker.shutdown();
     }
 }

@@ -58,6 +58,7 @@ pub mod gp;
 pub mod kernels;
 pub mod lattice;
 pub mod linalg;
+pub mod loadgen;
 pub mod mvm;
 pub mod runtime;
 pub mod solvers;

@@ -1,0 +1,303 @@
+//! Fixed-bucket log-scale latency histogram.
+//!
+//! The load harness records one sample per request and reports
+//! p50/p90/p99/p999; the serving coordinator keeps one histogram per
+//! server and surfaces `p50_us`/`p99_us` through the `stats` op. Both
+//! uses need the same three properties, which ordinary
+//! sorted-vector percentiles do not give:
+//!
+//! - **O(1) record** with no allocation after construction (the batcher
+//!   records on the request path);
+//! - **bounded memory** regardless of sample count (a histogram is 220
+//!   u64 buckets, ~2 KiB, forever);
+//! - **lossless merge**: per-thread histograms merged by bucket-wise
+//!   addition equal one histogram that recorded every sample — the
+//!   harness records into thread-local histograms and merges at the
+//!   end, and `rust/src/loadgen` unit tests pin the associativity.
+//!
+//! Buckets are log-spaced with [`SUB_BUCKETS`] buckets per octave
+//! (factor-of-2), so relative resolution is a constant
+//! `2^(1/8) − 1 ≈ 9%` across the full range [1 µs, ~2.8 h). Percentiles
+//! interpolate geometrically inside a bucket, which keeps
+//! `percentile(q)` monotone in `q` and exact at bucket boundaries.
+
+/// Log-sub-buckets per octave: bucket `i` covers
+/// `[2^(i/8), 2^((i+1)/8))` microseconds.
+pub const SUB_BUCKETS: usize = 8;
+
+/// Total bucket count: 220 buckets span `[1 µs, 2^27.5 µs ≈ 2.8 h)`,
+/// far beyond any per-request latency this stack can produce. Samples
+/// outside the range clamp to the end buckets.
+pub const BUCKETS: usize = 220;
+
+/// Fixed-bucket log-scale latency histogram (microsecond domain).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: vec![0u64; BUCKETS],
+            count: 0,
+            sum_us: 0.0,
+            max_us: 0.0,
+        }
+    }
+
+    /// Bucket index for a latency in microseconds. Sub-microsecond
+    /// samples clamp to bucket 0; samples past the top clamp to the
+    /// last bucket (the percentile then reports the bucket's lower
+    /// bound — a floor, never an invented value).
+    pub fn bucket_index(us: f64) -> usize {
+        if !(us > 1.0) {
+            return 0;
+        }
+        let i = (us.log2() * SUB_BUCKETS as f64).floor() as isize;
+        i.clamp(0, BUCKETS as isize - 1) as usize
+    }
+
+    /// Lower bound of bucket `i` in microseconds.
+    pub fn bucket_lo(i: usize) -> f64 {
+        (2f64).powf(i as f64 / SUB_BUCKETS as f64)
+    }
+
+    /// One sample, in microseconds.
+    pub fn record(&mut self, us: f64) {
+        let us = if us.is_finite() && us > 0.0 { us } else { 0.0 };
+        self.buckets[Self::bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Arithmetic mean of the raw samples (exact, not bucketed).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// Largest raw sample (exact, not bucketed).
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Absorb another histogram: bucket-wise addition. Merging
+    /// per-thread histograms in any grouping equals recording every
+    /// sample into one histogram (associativity is pinned by tests).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        if other.max_us > self.max_us {
+            self.max_us = other.max_us;
+        }
+    }
+
+    /// q-th percentile in microseconds, q ∈ [0, 100]; 0.0 when empty.
+    ///
+    /// Walks the cumulative bucket counts to the bucket containing the
+    /// target rank, then interpolates geometrically inside it (the
+    /// bucket is a log-scale interval, so the geometric midpoint is the
+    /// unbiased choice). Monotone in q by construction: the target rank
+    /// is monotone, the cumulative walk is monotone, and the in-bucket
+    /// interpolant is increasing.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 100.0);
+        // Target rank in (0, count]: the smallest r with cum ≥ r.
+        let target = (q / 100.0) * self.count as f64;
+        let target = target.max(1e-12);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if (next as f64) >= target {
+                let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+                let lo = Self::bucket_lo(i);
+                let hi = Self::bucket_lo(i + 1);
+                return lo * (hi / lo).powf(frac);
+            }
+            cum = next;
+        }
+        // All mass consumed (rounding): top of the highest non-empty
+        // bucket.
+        let last = self
+            .buckets
+            .iter()
+            .rposition(|&c| c > 0)
+            .unwrap_or(0);
+        Self::bucket_lo(last + 1)
+    }
+
+    /// Convenience tuple (p50, p90, p99, p99.9) in microseconds.
+    pub fn quartet(&self) -> (f64, f64, f64, f64) {
+        (
+            self.percentile(50.0),
+            self.percentile(90.0),
+            self.percentile(99.0),
+            self.percentile(99.9),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn bucket_boundaries() {
+        // Bucket 0 holds everything at or below 1 µs.
+        assert_eq!(LatencyHistogram::bucket_index(0.0), 0);
+        assert_eq!(LatencyHistogram::bucket_index(-3.0), 0);
+        assert_eq!(LatencyHistogram::bucket_index(0.5), 0);
+        assert_eq!(LatencyHistogram::bucket_index(1.0), 0);
+        // Mid-bucket values land where the closed-form bound says; probe
+        // just above each boundary to stay clear of FP wobble.
+        for i in [1usize, 7, 8, 40, BUCKETS - 1] {
+            let us = LatencyHistogram::bucket_lo(i) * 1.001;
+            assert_eq!(LatencyHistogram::bucket_index(us), i, "bucket {i}");
+        }
+        // One octave is SUB_BUCKETS buckets: 2 µs starts bucket 8.
+        assert_eq!(LatencyHistogram::bucket_index(2.0 * 1.001), SUB_BUCKETS);
+        // Far past the top: clamps to the last bucket.
+        assert_eq!(LatencyHistogram::bucket_index(1e300), BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentiles_monotone_in_q() {
+        let mut h = LatencyHistogram::new();
+        let mut rng = Pcg64::new(42);
+        for _ in 0..5000 {
+            // Heavy-tailed: latencies spanning 3 decades.
+            h.record(10.0 * (1.0 / rng.uniform().max(1e-3)));
+        }
+        let mut prev = -1.0;
+        for q10 in 0..=1000 {
+            let p = h.percentile(q10 as f64 / 10.0);
+            assert!(
+                p >= prev,
+                "percentile not monotone at q={}: {p} < {prev}",
+                q10 as f64 / 10.0
+            );
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn merge_equals_single_histogram_and_is_associative() {
+        let mut rng = Pcg64::new(7);
+        let samples: Vec<f64> = (0..3000).map(|_| 5.0 + 2000.0 * rng.uniform()).collect();
+        // One histogram over everything.
+        let mut all = LatencyHistogram::new();
+        for &s in &samples {
+            all.record(s);
+        }
+        // Three per-thread histograms over thirds.
+        let mut parts: Vec<LatencyHistogram> = (0..3)
+            .map(|k| {
+                let mut h = LatencyHistogram::new();
+                for &s in &samples[k * 1000..(k + 1) * 1000] {
+                    h.record(s);
+                }
+                h
+            })
+            .collect();
+        // (a ⊕ b) ⊕ c
+        let mut left = parts[0].clone();
+        left.merge(&parts[1].clone());
+        left.merge(&parts[2].clone());
+        // a ⊕ (b ⊕ c)
+        let mut bc = parts[1].clone();
+        bc.merge(&parts[2].clone());
+        let mut right = parts.remove(0);
+        right.merge(&bc);
+        for h in [&left, &right] {
+            assert_eq!(h.count(), all.count());
+            assert_eq!(h.buckets, all.buckets);
+            assert_eq!(h.max_us().to_bits(), all.max_us().to_bits());
+            for q in [0.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+                assert_eq!(h.percentile(q).to_bits(), all.percentile(q).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn golden_uniform_sequence() {
+        // 1..=1000 µs, one sample each: p50 ≈ 500, p90 ≈ 900, p99 ≈ 990,
+        // all within one bucket's relative resolution (2^(1/8) ≈ 9%).
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let (p50, p90, p99, p999) = h.quartet();
+        for (got, want) in [(p50, 500.0), (p90, 900.0), (p99, 990.0), (p999, 999.0)] {
+            assert!(
+                (got - want).abs() / want < 0.10,
+                "got {got}, want ≈ {want}"
+            );
+        }
+        assert!(p50 <= p90 && p90 <= p99 && p99 <= p999);
+        // Exact moments (not bucketed).
+        assert!((h.mean_us() - 500.5).abs() < 1e-9);
+        assert_eq!(h.max_us(), 1000.0);
+        // Empty histogram reports zeros.
+        let empty = LatencyHistogram::new();
+        assert_eq!(empty.percentile(50.0), 0.0);
+        assert_eq!(empty.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn golden_known_latency_sequence() {
+        // Hand-checkable golden: 9 samples at 100 µs and 1 at 10 ms.
+        // p50 must sit in the 100 µs bucket, p99+ in the 10 ms bucket.
+        let mut h = LatencyHistogram::new();
+        for _ in 0..9 {
+            h.record(100.0);
+        }
+        h.record(10_000.0);
+        let b100 = LatencyHistogram::bucket_index(100.0);
+        let b10k = LatencyHistogram::bucket_index(10_000.0);
+        let p50 = h.percentile(50.0);
+        assert!(
+            p50 >= LatencyHistogram::bucket_lo(b100)
+                && p50 < LatencyHistogram::bucket_lo(b100 + 1),
+            "p50 {p50} outside the 100 µs bucket"
+        );
+        for q in [95.0, 99.0, 99.9, 100.0] {
+            let p = h.percentile(q);
+            assert!(
+                p >= LatencyHistogram::bucket_lo(b10k),
+                "p{q} = {p} below the 10 ms bucket"
+            );
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Open-loop load harness for the serving coordinator.
+//!
+//! Generates a deterministic arrival schedule ([`schedule`]), fires it
+//! at a running [`Server`](crate::coordinator::Server) over the TCP
+//! client protocol from a pool of client connections, and records
+//! per-request latency into fixed-bucket log-scale histograms
+//! ([`hist::LatencyHistogram`]) with p50/p90/p99/p99.9 and throughput.
+//!
+//! **Open-loop semantics.** Every request's fire time is fixed up front
+//! by the arrival process; latency is measured from the *scheduled*
+//! arrival to reply completion. If a client thread falls behind (the
+//! server or a prior request stalled), the queueing delay counts
+//! against the tail — the standard correction for coordinated
+//! omission, without which a slow server grades its own homework.
+//!
+//! The same harness drives both deployment shapes: a server with the
+//! in-process shard pool, and one fanning out to remote shard workers
+//! over TCP (`mode` in the `serving_load` bench / `loadbench` CLI).
+//! Requests that the server answers with an error reply (e.g. an `mvm`
+//! raced by a concurrent `ingest` that grew `n`) are counted in
+//! `errors` and excluded from the latency histograms.
+
+pub mod hist;
+pub mod schedule;
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Client;
+use crate::util::bench::Table;
+use crate::util::Pcg64;
+
+pub use hist::LatencyHistogram;
+pub use schedule::{schedule, Arrival, Mix, OpKind, Planned};
+
+/// One load run's shape: arrival process, rate, mix, and client pool.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    /// Mean offered request rate (requests per second).
+    pub rps: f64,
+    /// Schedule horizon; the run ends when every planned request has
+    /// completed (possibly later than this under overload).
+    pub duration: Duration,
+    /// Concurrent client connections; planned requests are dealt
+    /// round-robin across them.
+    pub clients: usize,
+    pub arrival: Arrival,
+    pub mix: Mix,
+    /// Rows per `predict` request.
+    pub predict_rows: usize,
+    /// Rows per `ingest` request.
+    pub ingest_rows: usize,
+    /// Seeds both the schedule and the request payloads.
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            rps: 200.0,
+            duration: Duration::from_secs(2),
+            clients: 8,
+            arrival: Arrival::Poisson,
+            mix: Mix::serving(),
+            predict_rows: 4,
+            ingest_rows: 4,
+            seed: 0x10ad,
+        }
+    }
+}
+
+/// Outcome of a load run: counts, throughput, and latency histograms
+/// (overall and per op kind).
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub errors: u64,
+    /// Epoch → last completion, seconds.
+    pub wall_s: f64,
+    /// The schedule's mean rate (what was asked for).
+    pub offered_rps: f64,
+    /// Completed-ok requests per wall second (what was achieved).
+    pub achieved_rps: f64,
+    pub hist: LatencyHistogram,
+    pub predict: LatencyHistogram,
+    pub mvm: LatencyHistogram,
+    pub ingest: LatencyHistogram,
+}
+
+impl LoadReport {
+    /// Human-readable summary (used by the `loadbench` CLI).
+    pub fn print(&self) {
+        let mut t = Table::new(&[
+            "op", "count", "p50_ms", "p90_ms", "p99_ms", "p999_ms", "max_ms",
+        ]);
+        for (name, h) in [
+            ("predict", &self.predict),
+            ("mvm", &self.mvm),
+            ("ingest", &self.ingest),
+            ("all", &self.hist),
+        ] {
+            if h.count() == 0 && name != "all" {
+                continue;
+            }
+            let (p50, p90, p99, p999) = h.quartet();
+            t.row(&[
+                name.to_string(),
+                format!("{}", h.count()),
+                format!("{:.3}", p50 / 1e3),
+                format!("{:.3}", p90 / 1e3),
+                format!("{:.3}", p99 / 1e3),
+                format!("{:.3}", p999 / 1e3),
+                format!("{:.3}", h.max_us() / 1e3),
+            ]);
+        }
+        t.print();
+        println!(
+            "sent {}  ok {}  errors {}  wall {:.2}s  offered {:.0} rps  achieved {:.0} rps",
+            self.sent, self.ok, self.errors, self.wall_s, self.offered_rps, self.achieved_rps
+        );
+    }
+}
+
+struct ThreadStats {
+    sent: u64,
+    ok: u64,
+    errors: u64,
+    all: LatencyHistogram,
+    predict: LatencyHistogram,
+    mvm: LatencyHistogram,
+    ingest: LatencyHistogram,
+}
+
+impl ThreadStats {
+    fn new() -> ThreadStats {
+        ThreadStats {
+            sent: 0,
+            ok: 0,
+            errors: 0,
+            all: LatencyHistogram::new(),
+            predict: LatencyHistogram::new(),
+            mvm: LatencyHistogram::new(),
+            ingest: LatencyHistogram::new(),
+        }
+    }
+}
+
+/// Run the open-loop load against a serving coordinator at `addr`.
+///
+/// Probes the server's `stats` op for `n` and `d`, builds the schedule,
+/// and fires it from `spec.clients` connections. Ingest replies carry
+/// the server's new `n`; a shared counter propagates it so later `mvm`
+/// payloads use the freshest length this harness has observed (a
+/// concurrently raced `mvm` may still draw an error reply — counted,
+/// not crashed).
+pub fn run(addr: &SocketAddr, spec: &LoadSpec) -> Result<LoadReport> {
+    let plan = schedule(spec.arrival, spec.rps, spec.duration, spec.mix, spec.seed);
+    if plan.is_empty() {
+        return Err(anyhow!("load schedule is empty (rps or duration too small)"));
+    }
+    let clients = spec.clients.max(1);
+
+    let mut probe = Client::connect(addr)?;
+    let st = probe.stats()?;
+    let n0 = st
+        .get("n")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("stats reply missing n"))?;
+    let d = st
+        .get("d")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("stats reply missing d"))?;
+    drop(probe);
+
+    let mut per: Vec<Vec<Planned>> = vec![Vec::new(); clients];
+    for (i, p) in plan.iter().enumerate() {
+        per[i % clients].push(p.clone());
+    }
+    let mut conns = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        conns.push(Client::connect(addr)?);
+    }
+
+    let current_n = AtomicUsize::new(n0);
+    // Small headroom so every thread is parked on its first sleep
+    // before the schedule opens.
+    let epoch = Instant::now() + Duration::from_millis(30);
+
+    let stats: Vec<ThreadStats> = std::thread::scope(|s| {
+        let current_n = &current_n;
+        let handles: Vec<_> = conns
+            .drain(..)
+            .zip(per.iter())
+            .enumerate()
+            .map(|(ci, (mut client, mine))| {
+                s.spawn(move || {
+                    let mut ts = ThreadStats::new();
+                    let mut rng = Pcg64::with_stream(spec.seed ^ 0x7ead_0000, ci as u64);
+                    for p in mine {
+                        let sched = epoch + p.at;
+                        let now = Instant::now();
+                        if sched > now {
+                            std::thread::sleep(sched - now);
+                        }
+                        ts.sent += 1;
+                        let (res, h) = match p.kind {
+                            OpKind::Predict => {
+                                let rows = spec.predict_rows.max(1);
+                                let x: Vec<f64> = (0..rows * d)
+                                    .map(|_| rng.uniform_in(-2.0, 2.0))
+                                    .collect();
+                                (client.predict(&x, d).map(|_| ()), &mut ts.predict)
+                            }
+                            OpKind::Mvm => {
+                                let n = current_n.load(Ordering::Acquire);
+                                let v = rng.normal_vec(n);
+                                (client.mvm(&v).map(|_| ()), &mut ts.mvm)
+                            }
+                            OpKind::Ingest => {
+                                let rows = spec.ingest_rows.max(1);
+                                let x: Vec<f64> = (0..rows * d)
+                                    .map(|_| rng.uniform_in(-2.0, 2.0))
+                                    .collect();
+                                let y: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+                                (
+                                    client.ingest(&x, &y, d).map(|n| {
+                                        current_n.store(n, Ordering::Release);
+                                    }),
+                                    &mut ts.ingest,
+                                )
+                            }
+                        };
+                        let us = sched.elapsed().as_secs_f64() * 1e6;
+                        match res {
+                            Ok(()) => {
+                                ts.ok += 1;
+                                h.record(us);
+                                ts.all.record(us);
+                            }
+                            Err(_) => ts.errors += 1,
+                        }
+                    }
+                    ts
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("load client thread panicked"))
+            .collect()
+    });
+
+    let wall_s = epoch.elapsed().as_secs_f64().max(1e-9);
+    let mut report = LoadReport {
+        sent: 0,
+        ok: 0,
+        errors: 0,
+        wall_s,
+        offered_rps: spec.rps,
+        achieved_rps: 0.0,
+        hist: LatencyHistogram::new(),
+        predict: LatencyHistogram::new(),
+        mvm: LatencyHistogram::new(),
+        ingest: LatencyHistogram::new(),
+    };
+    for ts in &stats {
+        report.sent += ts.sent;
+        report.ok += ts.ok;
+        report.errors += ts.errors;
+        report.hist.merge(&ts.all);
+        report.predict.merge(&ts.predict);
+        report.mvm.merge(&ts.mvm);
+        report.ingest.merge(&ts.ingest);
+    }
+    report.achieved_rps = report.ok as f64 / wall_s;
+    Ok(report)
+}

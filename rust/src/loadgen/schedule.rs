@@ -1,0 +1,226 @@
+//! Arrival-process schedules for the open-loop load harness.
+//!
+//! An **open-loop** generator fixes every request's arrival time up
+//! front, independent of how fast the server answers — the only honest
+//! way to measure tail latency (a closed loop slows its own offered
+//! load whenever the server stalls, hiding exactly the tail it should
+//! expose). The schedule is therefore a pure function of
+//! (arrival process, rate, duration, mix, seed): fully deterministic,
+//! replayable, and usable both by the live harness and by the
+//! serial-replay invariants test.
+
+use std::time::Duration;
+
+use crate::util::Pcg64;
+
+/// Which client-protocol op a planned request issues.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Predict,
+    Mvm,
+    Ingest,
+}
+
+/// Relative op weights; they need not sum to 1 (normalized on use).
+#[derive(Clone, Copy, Debug)]
+pub struct Mix {
+    pub predict: f64,
+    pub mvm: f64,
+    pub ingest: f64,
+}
+
+impl Mix {
+    /// Pure MVM traffic (the default for latency benchmarking — every
+    /// reply is byte-checkable against a direct lattice MVM).
+    pub fn mvm_only() -> Mix {
+        Mix {
+            predict: 0.0,
+            mvm: 1.0,
+            ingest: 0.0,
+        }
+    }
+
+    /// A serving-shaped mix: mostly reads, a trickle of ingest.
+    pub fn serving() -> Mix {
+        Mix {
+            predict: 0.60,
+            mvm: 0.35,
+            ingest: 0.05,
+        }
+    }
+
+    fn pick(&self, rng: &mut Pcg64) -> OpKind {
+        let total = self.predict + self.mvm + self.ingest;
+        if !(total > 0.0) {
+            return OpKind::Mvm;
+        }
+        let u = rng.uniform() * total;
+        if u < self.predict {
+            OpKind::Predict
+        } else if u < self.predict + self.mvm {
+            OpKind::Mvm
+        } else {
+            OpKind::Ingest
+        }
+    }
+}
+
+/// The inter-arrival law.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrival {
+    /// Memoryless arrivals at the given mean rate (exponential
+    /// inter-arrival gaps) — the standard serving-traffic null model.
+    Poisson,
+    /// On/off bursts: all arrivals compress into the first
+    /// `on_fraction` of each `period`, at rate `rps / on_fraction`, so
+    /// the *average* rate still matches the requested rps. Stresses
+    /// queue buildup and batcher coalescing.
+    Bursty {
+        period: Duration,
+        on_fraction: f64,
+    },
+}
+
+/// One planned request: fire at `at` past the epoch, issuing `kind`.
+#[derive(Clone, Debug)]
+pub struct Planned {
+    pub at: Duration,
+    pub kind: OpKind,
+}
+
+/// Build the full open-loop schedule: arrival offsets from the chosen
+/// process at mean rate `rps` over `duration`, each tagged with an op
+/// drawn from `mix`. Deterministic in `seed`.
+pub fn schedule(
+    arrival: Arrival,
+    rps: f64,
+    duration: Duration,
+    mix: Mix,
+    seed: u64,
+) -> Vec<Planned> {
+    assert!(rps > 0.0, "schedule: rps must be positive");
+    let mut rng = Pcg64::with_stream(0x10ad_6e11, seed);
+    let horizon = duration.as_secs_f64();
+    let mut out = Vec::new();
+    match arrival {
+        Arrival::Poisson => {
+            let mut t = 0.0f64;
+            loop {
+                t += exp_gap(&mut rng, rps);
+                if t >= horizon {
+                    break;
+                }
+                out.push(Planned {
+                    at: Duration::from_secs_f64(t),
+                    kind: mix.pick(&mut rng),
+                });
+            }
+        }
+        Arrival::Bursty { period, on_fraction } => {
+            let period_s = period.as_secs_f64().max(1e-3);
+            let on = on_fraction.clamp(0.05, 1.0);
+            let rate_on = rps / on;
+            let mut t = 0.0f64;
+            loop {
+                t += exp_gap(&mut rng, rate_on);
+                // If t fell in an off-window, slide it (and the residual
+                // exponential gap — memorylessness makes this exact) to
+                // the start of the next period's on-window.
+                let phase = t.rem_euclid(period_s);
+                if phase >= on * period_s {
+                    t += period_s - phase;
+                }
+                if t >= horizon {
+                    break;
+                }
+                out.push(Planned {
+                    at: Duration::from_secs_f64(t),
+                    kind: mix.pick(&mut rng),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Exponential inter-arrival gap at `rate` per second (inverse-CDF on
+/// the crate RNG's 53-bit uniform; `1 - u` avoids ln(0)).
+fn exp_gap(rng: &mut Pcg64, rate: f64) -> f64 {
+    -(1.0 - rng.uniform()).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_schedule_is_deterministic_and_has_the_right_rate() {
+        let dur = Duration::from_secs(20);
+        let a = schedule(Arrival::Poisson, 100.0, dur, Mix::mvm_only(), 9);
+        let b = schedule(Arrival::Poisson, 100.0, dur, Mix::mvm_only(), 9);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.kind, y.kind);
+        }
+        // ~2000 expected arrivals; allow ±15% (σ ≈ 45).
+        assert!(
+            (a.len() as f64 - 2000.0).abs() < 300.0,
+            "got {} arrivals, expected ≈ 2000",
+            a.len()
+        );
+        // Offsets are sorted and inside the horizon.
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(a.last().unwrap().at < dur);
+    }
+
+    #[test]
+    fn bursty_schedule_keeps_arrivals_in_on_windows() {
+        let period = Duration::from_millis(200);
+        let on = 0.25;
+        let plan = schedule(
+            Arrival::Bursty {
+                period,
+                on_fraction: on,
+            },
+            200.0,
+            Duration::from_secs(10),
+            Mix::mvm_only(),
+            3,
+        );
+        assert!(plan.len() > 500, "only {} arrivals", plan.len());
+        let period_s = period.as_secs_f64();
+        for p in &plan {
+            let phase = p.at.as_secs_f64().rem_euclid(period_s);
+            assert!(
+                phase < on * period_s + 1e-9,
+                "arrival at {:?} lands in an off-window (phase {phase:.4}s)",
+                p.at
+            );
+        }
+        // Average rate still ≈ the requested 200 rps (±20%).
+        assert!(
+            (plan.len() as f64 - 2000.0).abs() < 400.0,
+            "got {} arrivals, expected ≈ 2000",
+            plan.len()
+        );
+    }
+
+    #[test]
+    fn mix_proportions_track_weights() {
+        let plan = schedule(
+            Arrival::Poisson,
+            500.0,
+            Duration::from_secs(10),
+            Mix::serving(),
+            17,
+        );
+        let total = plan.len() as f64;
+        let frac = |k: OpKind| plan.iter().filter(|p| p.kind == k).count() as f64 / total;
+        assert!((frac(OpKind::Predict) - 0.60).abs() < 0.05);
+        assert!((frac(OpKind::Mvm) - 0.35).abs() < 0.05);
+        assert!((frac(OpKind::Ingest) - 0.05).abs() < 0.03);
+    }
+}

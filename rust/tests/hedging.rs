@@ -1,0 +1,427 @@
+//! Hedged shard redundancy: deterministic fault-injection tests for
+//! every degradation path (PR 6).
+//!
+//! The straggler is injected with the debug-gated `debug_delay_worker`
+//! op (the coordinator-side twin of PR 4's `debug_kill_worker`): the
+//! link/worker serving a chosen shard sleeps a fixed delay before every
+//! job. Against that deterministic slow worker this suite pins the
+//! hedging contract from docs/DEPLOYMENT.md §Hedged redundancy:
+//!
+//! - hedged replies are **byte-identical** to local compute (the backup
+//!   holds a fingerprint-verified replica; the race loser is discarded
+//!   by job id, so which copy wins never shows in the bytes);
+//! - the hedge fires at `hedge_ms`, not at `result_timeout` — with one
+//!   slow worker, enabling hedging cuts p99 by ≥ 3× (the ISSUE 6
+//!   acceptance gate, enforced here rather than in the bench);
+//! - a hedge-winning backup leaves stats and job bookkeeping coherent;
+//! - with hedging off the behavior is PR 5's, bit for bit: slow worker
+//!   waited out, `hedged == hedge_wins == 0`;
+//! - the local (in-process) pool hedges too: no backup workers exist,
+//!   so the hedge IS the in-thread fallback, fired early.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use simplex_gp::coordinator::transport::ClusterConfig;
+use simplex_gp::coordinator::worker::{ShardWorker, WorkerConfig};
+use simplex_gp::coordinator::{Client, ServeConfig, Server};
+use simplex_gp::gp::{GpConfig, SimplexGp};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::loadgen::LatencyHistogram;
+use simplex_gp::util::Pcg64;
+
+fn problem(n: usize, d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::new(seed);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| (x[i * d]).sin() + 0.05 * rng.normal())
+        .collect();
+    (x, y)
+}
+
+/// `SimplexGp::fit` is deterministic: refitting the same data yields
+/// the same model bit for bit, so a separately fit reference model
+/// predicts the served replies exactly.
+fn fit(x: &[f64], y: &[f64], d: usize, shards: usize) -> SimplexGp {
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+    let cfg = GpConfig {
+        shards,
+        ..GpConfig::default()
+    };
+    SimplexGp::fit(x, y, d, kernel, 0.05, cfg).unwrap()
+}
+
+fn start_workers(count: usize) -> Vec<ShardWorker> {
+    (0..count)
+        .map(|_| {
+            ShardWorker::start(WorkerConfig {
+                listen: "127.0.0.1:0".to_string(),
+                ..WorkerConfig::default()
+            })
+            .unwrap()
+        })
+        .collect()
+}
+
+fn cluster_cfg(workers: &[ShardWorker], hedge_ms: u64) -> ClusterConfig {
+    ClusterConfig {
+        workers: workers.iter().map(|w| w.local_addr.to_string()).collect(),
+        hedge: match hedge_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        },
+        ..ClusterConfig::default()
+    }
+}
+
+fn wait_remote_synced(client: &mut Client, want: usize) {
+    let t0 = Instant::now();
+    loop {
+        let got = client
+            .stats()
+            .unwrap()
+            .get("remote_workers")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(-1.0) as i64;
+        if got == want as i64 {
+            return;
+        }
+        assert!(
+            t0.elapsed().as_secs() < 30,
+            "remote workers never synced: {got}/{want}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(
+            a[i].to_bits(),
+            b[i].to_bits(),
+            "{what}: row {i} ({} vs {})",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+/// Inject the deterministic straggler: the worker/link serving `shard`
+/// sleeps `delay_ms` before every subsequent job.
+fn delay_worker(addr: &std::net::SocketAddr, shard: usize, delay_ms: u64) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(
+            format!(
+                "{{\"id\":98,\"op\":\"debug_delay_worker\",\"shard\":{shard},\
+                 \"delay_ms\":{delay_ms}}}\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"delayed\":1"), "got: {line}");
+}
+
+/// Fire `k` serial mvms with per-request fresh vectors, assert every
+/// reply byte-identical to the reference model's direct MVM, and return
+/// the client-side latency histogram.
+fn serial_mvms(
+    client: &mut Client,
+    reference: &SimplexGp,
+    k: usize,
+    seed: u64,
+    what: &str,
+) -> LatencyHistogram {
+    let n = reference.n_train();
+    let mut rng = Pcg64::new(seed);
+    let mut hist = LatencyHistogram::new();
+    for i in 0..k {
+        let v = rng.normal_vec(n);
+        let direct = reference.operator().lattice.mvm(&v);
+        let t0 = Instant::now();
+        let u = client.mvm(&v).unwrap();
+        hist.record(t0.elapsed().as_secs_f64() * 1e6);
+        assert_bits_eq(&u, &direct, &format!("{what} request {i}"));
+    }
+    hist
+}
+
+/// The ISSUE 6 acceptance gate: with one injected-slow worker, turning
+/// hedging on cuts p99 by at least 3× versus hedging off, while every
+/// reply stays byte-identical to local compute — and the backup
+/// replica, not the fallback, is what serves the hedged shard.
+#[test]
+fn hedging_cuts_p99_at_least_3x_with_byte_identical_replies() {
+    let d = 2;
+    let (x, y) = problem(240, d, 71);
+    let reference = fit(&x, &y, d, 2);
+    const DELAY_MS: u64 = 600;
+    const HEDGE_MS: u64 = 30;
+    const K: usize = 8;
+
+    // Hedging OFF: every request waits out the slow worker.
+    let workers_off = start_workers(2);
+    let server_off = Server::start(
+        fit(&x, &y, d, 2),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            debug_ops: true,
+            cluster: cluster_cfg(&workers_off, 0),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client_off = Client::connect(&server_off.local_addr).unwrap();
+    wait_remote_synced(&mut client_off, 2);
+    delay_worker(&server_off.local_addr, 0, DELAY_MS);
+    let hist_off = serial_mvms(&mut client_off, &reference, K, 500, "hedge-off");
+    let p99_off = hist_off.percentile(99.0);
+    assert_eq!(server_off.hedged(), 0);
+    assert_eq!(server_off.hedge_wins(), 0);
+    server_off.shutdown();
+    for w in workers_off {
+        w.shutdown();
+    }
+
+    // Hedging ON: the same straggler, raced against the backup replica.
+    let workers_on = start_workers(2);
+    let server_on = Server::start(
+        fit(&x, &y, d, 2),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            debug_ops: true,
+            cluster: cluster_cfg(&workers_on, HEDGE_MS),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client_on = Client::connect(&server_on.local_addr).unwrap();
+    wait_remote_synced(&mut client_on, 2);
+    delay_worker(&server_on.local_addr, 0, DELAY_MS);
+    let hist_on = serial_mvms(&mut client_on, &reference, K, 500, "hedge-on");
+    let p99_on = hist_on.percentile(99.0);
+
+    // The slow worker really did cost the unhedged server its tail...
+    assert!(
+        p99_off >= (DELAY_MS as f64) * 1e3 * 0.9,
+        "straggler never bit: p99_off = {:.1} ms",
+        p99_off / 1e3
+    );
+    // ...and hedging bought it back: ≥ 3× (in practice ≈ 10-20×).
+    assert!(
+        p99_off >= 3.0 * p99_on,
+        "hedging cut p99 only {:.2}x ({:.1} ms -> {:.1} ms)",
+        p99_off / p99_on.max(1.0),
+        p99_off / 1e3,
+        p99_on / 1e3
+    );
+    // Hedges fired, and at least one was won by the BACKUP's reply
+    // (not the in-thread fallback)...
+    assert!(server_on.hedged() >= 1, "no hedge fired");
+    assert!(server_on.hedge_wins() >= 1, "no hedge won by the backup");
+    assert!(server_on.hedge_wins() <= server_on.hedged());
+    // ...which the worker-side per-shard counters corroborate: shard
+    // 0's jobs were answered from its backup replica on worker 1.
+    assert!(
+        workers_on[1].served_for(0) >= 1,
+        "backup replica of shard 0 on worker 1 never served \
+         (worker 1 shard counts: {:?})",
+        workers_on[1].held_shards()
+    );
+    server_on.shutdown();
+    for w in workers_on {
+        w.shutdown();
+    }
+}
+
+/// The hedge fires at `hedge_ms`, not at `result_timeout`: with a 10 s
+/// result timeout (the default) and a 1.5 s straggler, a hedged request
+/// completes in well under a second.
+#[test]
+fn hedge_fires_without_waiting_out_result_timeout() {
+    let d = 2;
+    let (x, y) = problem(220, d, 73);
+    let reference = fit(&x, &y, d, 2);
+    let workers = start_workers(2);
+    let cluster = cluster_cfg(&workers, 30);
+    assert_eq!(cluster.result_timeout, Duration::from_secs(10));
+    let server = Server::start(
+        fit(&x, &y, d, 2),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            debug_ops: true,
+            cluster,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    wait_remote_synced(&mut client, 2);
+    delay_worker(&server.local_addr, 0, 1500);
+
+    let mut rng = Pcg64::new(510);
+    let v = rng.normal_vec(reference.n_train());
+    let direct = reference.operator().lattice.mvm(&v);
+    let t0 = Instant::now();
+    let u = client.mvm(&v).unwrap();
+    let elapsed = t0.elapsed();
+    assert_bits_eq(&u, &direct, "hedged mvm");
+    assert!(
+        elapsed < Duration::from_millis(1000),
+        "hedge did not fire early: {elapsed:?} (delay 1.5s, timeout 10s)"
+    );
+    assert!(server.hedged() >= 1);
+    assert!(server.hedge_wins() >= 1);
+    server.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+/// A hedge-winning backup must not corrupt the batcher's bookkeeping:
+/// later requests (including after the straggler is cleared) still get
+/// byte-identical replies, counters stay coherent, and the stale
+/// primary replies that eventually arrive are discarded silently.
+#[test]
+fn hedge_winner_leaves_stats_and_bookkeeping_coherent() {
+    let d = 2;
+    let (x, y) = problem(230, d, 77);
+    let reference = fit(&x, &y, d, 2);
+    let workers = start_workers(2);
+    let server = Server::start(
+        fit(&x, &y, d, 2),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            debug_ops: true,
+            cluster: cluster_cfg(&workers, 25),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    wait_remote_synced(&mut client, 2);
+
+    delay_worker(&server.local_addr, 0, 400);
+    serial_mvms(&mut client, &reference, 4, 520, "while-slow");
+    // Clear the straggler (delay_ms 0) and keep going: the batcher must
+    // still route, discard the earlier losers, and reply bit-exactly.
+    delay_worker(&server.local_addr, 0, 0);
+    serial_mvms(&mut client, &reference, 4, 530, "after-clear");
+
+    let stats = client.stats().unwrap();
+    let served = stats.get("served").and_then(|v| v.as_f64()).unwrap();
+    let hedged = stats.get("hedged").and_then(|v| v.as_f64()).unwrap();
+    let wins = stats.get("hedge_wins").and_then(|v| v.as_f64()).unwrap();
+    let p50 = stats.get("p50_us").and_then(|v| v.as_f64()).unwrap();
+    let p99 = stats.get("p99_us").and_then(|v| v.as_f64()).unwrap();
+    assert!(served >= 8.0, "served={served}");
+    assert!(hedged >= 1.0, "hedged={hedged}");
+    assert!(wins <= hedged, "hedge_wins={wins} > hedged={hedged}");
+    assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+    assert_eq!(server.hedged(), hedged as u64);
+    assert_eq!(server.hedge_wins(), wins as u64);
+    server.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+/// `hedge_ms = 0` (the default) reproduces PR 5 behavior bitwise: the
+/// slow worker is waited out, no backup replicas serve, and the hedging
+/// counters stay pinned at zero.
+#[test]
+fn hedging_off_reproduces_unhedged_behavior() {
+    let d = 2;
+    let (x, y) = problem(210, d, 79);
+    let reference = fit(&x, &y, d, 2);
+    let workers = start_workers(2);
+    let server = Server::start(
+        fit(&x, &y, d, 2),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            debug_ops: true,
+            cluster: cluster_cfg(&workers, 0),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    wait_remote_synced(&mut client, 2);
+    delay_worker(&server.local_addr, 0, 250);
+
+    let mut rng = Pcg64::new(540);
+    for i in 0..2 {
+        let v = rng.normal_vec(reference.n_train());
+        let direct = reference.operator().lattice.mvm(&v);
+        let t0 = Instant::now();
+        let u = client.mvm(&v).unwrap();
+        // Unhedged: the request waits the straggler out.
+        assert!(
+            t0.elapsed() >= Duration::from_millis(200),
+            "request {i} did not wait for the delayed worker"
+        );
+        assert_bits_eq(&u, &direct, &format!("unhedged request {i}"));
+    }
+    assert_eq!(server.hedged(), 0);
+    assert_eq!(server.hedge_wins(), 0);
+    // Without hedging no worker holds a backup replica: round-robin
+    // assignment only, one shard each.
+    assert_eq!(workers[0].held_shards(), vec![0]);
+    assert_eq!(workers[1].held_shards(), vec![1]);
+    assert_eq!(workers[1].served_for(0), 0);
+    server.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+/// The in-process pool hedges too: with no backup workers the hedge IS
+/// the in-thread fallback, fired at `hedge_ms` instead of waiting for
+/// `result_timeout`. `hedge_wins` stays 0 — the fallback is not a
+/// backup reply.
+#[test]
+fn local_pool_hedges_to_in_thread_fallback() {
+    let d = 2;
+    let (x, y) = problem(220, d, 83);
+    let reference = fit(&x, &y, d, 2);
+    let server = Server::start(
+        fit(&x, &y, d, 2),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            debug_ops: true,
+            cluster: ClusterConfig {
+                hedge: Some(Duration::from_millis(30)),
+                ..ClusterConfig::default()
+            },
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    delay_worker(&server.local_addr, 0, 700);
+
+    let mut rng = Pcg64::new(550);
+    let v = rng.normal_vec(reference.n_train());
+    let direct = reference.operator().lattice.mvm(&v);
+    let t0 = Instant::now();
+    let u = client.mvm(&v).unwrap();
+    let elapsed = t0.elapsed();
+    assert_bits_eq(&u, &direct, "local hedged mvm");
+    assert!(
+        elapsed < Duration::from_millis(500),
+        "local hedge did not fire early: {elapsed:?} (delay 700ms)"
+    );
+    assert!(server.hedged() >= 1, "no local hedge fired");
+    assert_eq!(
+        server.hedge_wins(),
+        0,
+        "the in-thread fallback must not count as a backup win"
+    );
+    server.shutdown();
+}

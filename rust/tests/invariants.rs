@@ -14,14 +14,23 @@
 //! - **Ingest-vs-rebuild bit equality**: streaming points into a built
 //!   lattice yields the same arrays — and bitwise-identical MVMs — as a
 //!   from-scratch build at the final point set.
+//! - **Concurrent-load determinism** (ISSUE 6): mvm traffic raced
+//!   against streaming ingest through the serving coordinator, fired
+//!   per an open-loop load schedule, is bitwise explainable by a
+//!   serial replay on a twin model.
 //!
 //! All randomness flows through the crate's own seeded [`Pcg64`]
 //! (no external dependencies); every case prints its parameters in the
 //! assertion message so a failure is reproducible from the seed.
 
+use std::time::{Duration, Instant};
+
+use simplex_gp::coordinator::{Client, ServeConfig, Server};
+use simplex_gp::gp::{GpConfig, SimplexGp};
 use simplex_gp::kernels::{ArdKernel, KernelFamily};
 use simplex_gp::lattice::{PermutohedralLattice, ShardedLattice};
 use simplex_gp::linalg::eigh_tridiag;
+use simplex_gp::loadgen::{schedule, Arrival, Mix, OpKind};
 use simplex_gp::mvm::{MvmOperator, ShardedMvm};
 use simplex_gp::solvers::lanczos;
 use simplex_gp::util::stats::dot;
@@ -285,4 +294,151 @@ fn ingest_stream_bitwise_equals_rebuild_for_batches_1_64_1024() {
             assert_eq!(ui[i].to_bits(), uf[i].to_bits(), "batch {batch} row {i}");
         }
     }
+}
+
+#[test]
+fn concurrent_load_bitwise_matches_serial_replay() {
+    // ISSUE-6 leg: mvm traffic raced against streaming ingest through
+    // the serving coordinator must be bitwise explainable by a serial
+    // replay on a twin model. The op sequence and fire times come from
+    // the open-loop load schedule; each segment between two scheduled
+    // ingests holds n fixed, so every concurrent mvm inside it has
+    // exactly one right answer no matter how the batcher coalesces or
+    // interleaves — the ingest then acts as a barrier and mutates the
+    // served model and the twin identically.
+    let d = 2;
+    let shards = 2;
+    let n0 = 200;
+    let x = random_points(n0, d, 0x6001);
+    let mut yrng = Pcg64::with_stream(0x6002, 1);
+    let y: Vec<f64> = (0..n0)
+        .map(|i| x[i * d].sin() + 0.05 * yrng.normal())
+        .collect();
+    let fit = |x: &[f64], y: &[f64]| {
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let cfg = GpConfig {
+            shards,
+            ..GpConfig::default()
+        };
+        SimplexGp::fit(x, y, d, kernel, 0.05, cfg).unwrap()
+    };
+    let mut twin = fit(&x, &y);
+    let server = Server::start(
+        fit(&x, &y),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_ingest: true,
+            // Generous coalescing window: concurrent mvms really do
+            // share batches instead of degenerating to serial service.
+            max_wait: Duration::from_millis(20),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+
+    // Phases = the schedule's mvm arrivals between consecutive ingest
+    // arrivals (predict weight 0: only mvm replies are byte-checkable).
+    let plan = schedule(
+        Arrival::Bursty {
+            period: Duration::from_millis(120),
+            on_fraction: 0.4,
+        },
+        260.0,
+        Duration::from_secs(1),
+        Mix {
+            predict: 0.0,
+            mvm: 0.85,
+            ingest: 0.15,
+        },
+        0x5eed,
+    );
+    let mut phases: Vec<Vec<Duration>> = vec![Vec::new()];
+    for p in &plan {
+        match p.kind {
+            OpKind::Mvm => phases.last_mut().unwrap().push(p.at),
+            OpKind::Ingest => phases.push(Vec::new()),
+            OpKind::Predict => {}
+        }
+    }
+    phases.truncate(5);
+
+    const MAX_CONC: usize = 8;
+    let mut clients: Vec<Client> = (0..MAX_CONC)
+        .map(|_| Client::connect(&server.local_addr).unwrap())
+        .collect();
+    let mut ingest_rng = Pcg64::with_stream(0x6003, 9);
+    let mut total_mvms = 0usize;
+
+    for (pi, offsets) in phases.iter().enumerate() {
+        let n = twin.n_train();
+        let m = offsets.len().clamp(1, MAX_CONC);
+        let vs: Vec<Vec<f64>> = (0..m)
+            .map(|j| Pcg64::with_stream(0x6004, (pi * 100 + j) as u64).normal_vec(n))
+            .collect();
+        let base = offsets.first().copied().unwrap_or(Duration::ZERO);
+        let epoch = Instant::now();
+        let replies: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = clients[..m]
+                .iter_mut()
+                .zip(vs.iter())
+                .enumerate()
+                .map(|(j, (client, v))| {
+                    let at = offsets
+                        .get(j)
+                        .copied()
+                        .unwrap_or(base)
+                        .saturating_sub(base);
+                    s.spawn(move || {
+                        let sched = epoch + at;
+                        let now = Instant::now();
+                        if sched > now {
+                            std::thread::sleep(sched - now);
+                        }
+                        client.mvm(v).unwrap()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("load client thread panicked"))
+                .collect()
+        });
+        for (j, (got, v)) in replies.iter().zip(&vs).enumerate() {
+            let want = twin.operator().lattice.mvm(v);
+            assert_eq!(got.len(), want.len(), "phase {pi} mvm {j}: length");
+            for i in 0..want.len() {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "phase {pi} mvm {j} row {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+        total_mvms += m;
+
+        // Phase barrier: one scheduled ingest, applied to both models.
+        let rows = 4;
+        let xi: Vec<f64> = (0..rows * d)
+            .map(|_| ingest_rng.uniform_in(-2.0, 2.0))
+            .collect();
+        let yi: Vec<f64> = (0..rows).map(|_| ingest_rng.normal()).collect();
+        let n_live = clients[0].ingest(&xi, &yi, d).unwrap();
+        twin.ingest(&xi, &yi).unwrap();
+        assert_eq!(n_live, twin.n_train(), "phase {pi}: ingest diverged");
+    }
+    assert!(
+        total_mvms >= 5,
+        "schedule produced too little concurrent traffic: {total_mvms} mvms"
+    );
+
+    // Closing cross-check at the final (grown) point set.
+    let v = Pcg64::with_stream(0x6005, 3).normal_vec(twin.n_train());
+    let want = twin.operator().lattice.mvm(&v);
+    let got = clients[0].mvm(&v).unwrap();
+    for i in 0..want.len() {
+        assert_eq!(got[i].to_bits(), want[i].to_bits(), "final mvm row {i}");
+    }
+    server.shutdown();
 }
