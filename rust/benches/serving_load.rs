@@ -1,27 +1,32 @@
 //! Serving-path tail latency under open-loop load (the PR-6 bench).
 //!
-//! Drives a live coordinator with the [`loadgen`] harness across four
+//! Drives a live coordinator with the [`loadgen`] harness across five
 //! deployment shapes:
 //!
 //!   inproc           in-process shard pool, serving-shaped mix
-//!   tcp              2 remote shard workers (loopback), same mix
+//!   tcp              2 remote shard workers (loopback), bin1 frames
+//!   tcp_json         same cluster forced onto v1 JSON frames — the
+//!                    bin1-vs-JSON wire-encoding comparison pair
 //!   tcp_slow         2 workers, worker 0 delayed `slow_ms` per MVM
 //!                    roundtrip (injected straggler), hedging OFF
 //!   tcp_slow_hedged  same straggler, hedging ON (`hedge_ms` race to
 //!                    the backup replica)
 //!
-//! The last two rows are the point: an injected straggler wrecks p99
+//! The straggler rows are the point: an injected straggler wrecks p99
 //! on an unhedged cluster and the hedge race claws it back, while the
 //! replies stay byte-identical (pinned by rust/tests/hedging.rs; this
-//! bench measures, the test asserts).
+//! bench measures, the test asserts). The tcp/tcp_json pair puts a
+//! number on what the protocol-v2 binary payloads buy at serving load
+//! (byte-identity across encodings is pinned by
+//! rust/tests/protocol_conformance.rs).
 //!
 //! Latency is open-loop (measured from *scheduled* arrival), so
 //! queueing behind the straggler counts against the tail — no
 //! coordinated omission.
 //!
 //! With `SIMPLEX_GP_BENCH_JSON=<path>` set (CI bench-smoke), one line
-//! per mode: `{"bench":"serving_load", "mode", "workers", "shards",
-//! "hedge_ms", "slow_ms", "rps", "sent", "ok", "errors",
+//! per mode: `{"bench":"serving_load", "mode", "encoding", "workers",
+//! "shards", "hedge_ms", "slow_ms", "rps", "sent", "ok", "errors",
 //! "achieved_rps", "p50_us", "p90_us", "p99_us", "p999_us", "max_us",
 //! "hedged", "hedge_wins"}`.
 //!
@@ -32,6 +37,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
+use simplex_gp::coordinator::frame::WireEncoding;
 use simplex_gp::coordinator::transport::ClusterConfig;
 use simplex_gp::coordinator::worker::{ShardWorker, WorkerConfig};
 use simplex_gp::coordinator::{Client, ServeConfig, Server};
@@ -47,6 +53,7 @@ struct Scenario {
     workers: usize,
     slow_ms: u64,
     hedge_ms: u64,
+    encoding: WireEncoding,
     spec: LoadSpec,
 }
 
@@ -139,6 +146,7 @@ fn main() {
             workers: 0,
             slow_ms: 0,
             hedge_ms: 0,
+            encoding: WireEncoding::Bin1,
             spec: serving_spec(rps, secs),
         },
         Scenario {
@@ -146,6 +154,15 @@ fn main() {
             workers: 2,
             slow_ms: 0,
             hedge_ms: 0,
+            encoding: WireEncoding::Bin1,
+            spec: serving_spec(rps, secs),
+        },
+        Scenario {
+            mode: "tcp_json",
+            workers: 2,
+            slow_ms: 0,
+            hedge_ms: 0,
+            encoding: WireEncoding::Json,
             spec: serving_spec(rps, secs),
         },
         Scenario {
@@ -153,6 +170,7 @@ fn main() {
             workers: 2,
             slow_ms,
             hedge_ms: 0,
+            encoding: WireEncoding::Bin1,
             spec: slow_spec(slow_rps, slow_secs),
         },
         Scenario {
@@ -160,12 +178,14 @@ fn main() {
             workers: 2,
             slow_ms,
             hedge_ms: 25,
+            encoding: WireEncoding::Bin1,
             spec: slow_spec(slow_rps, slow_secs),
         },
     ];
 
     let mut table = Table::new(&[
         "mode",
+        "enc",
         "workers",
         "rps",
         "ok",
@@ -194,6 +214,7 @@ fn main() {
                 0 => None,
                 ms => Some(Duration::from_millis(ms)),
             },
+            encoding: sc.encoding,
             ..ClusterConfig::default()
         };
         let server = Server::start(
@@ -232,6 +253,7 @@ fn main() {
         let (p50, p90, p99, p999) = report.hist.quartet();
         table.row(&[
             sc.mode.to_string(),
+            sc.encoding.as_str().to_string(),
             sc.workers.to_string(),
             format!("{:.0}", sc.spec.rps),
             report.ok.to_string(),
@@ -247,6 +269,10 @@ fn main() {
         let mut obj = BTreeMap::new();
         obj.insert("bench".to_string(), Json::Str("serving_load".to_string()));
         obj.insert("mode".to_string(), Json::Str(sc.mode.to_string()));
+        obj.insert(
+            "encoding".to_string(),
+            Json::Str(sc.encoding.as_str().to_string()),
+        );
         for (k, v) in [
             ("workers", sc.workers as f64),
             ("shards", shards as f64),

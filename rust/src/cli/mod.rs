@@ -91,7 +91,7 @@ COMMANDS
              spacing and taps (the §4.1 discretization).
   serve      --dataset <name> [--n N] [--addr HOST:PORT] [--shards P]
              [--precond-rank K] [--ingest] [--workers A:P1,B:P2]
-             [--hedge-ms H]
+             [--hedge-ms H] [--encoding json|bin1] [--shed-shards]
              — train quickly, then serve predictions over the JSON-lines
              protocol (docs/PROTOCOL.md). --ingest enables the streaming
              `ingest` op (live training-point updates, coalesced and
@@ -99,24 +99,33 @@ COMMANDS
              max_ingest_batch rows per batch; larger coalesced batches
              trigger a full refit). --workers routes shard jobs to
              remote shard-worker processes (defaults to the config's
-             [cluster] workers; empty = in-process pool).
-  shard-worker  [--listen HOST:PORT] [--frame-mb N] — hold shard
-             replicas for a remote coordinator and serve
-             shard_mvm_block/ingest jobs over the length-prefixed frame
-             protocol (docs/PROTOCOL.md; deployment recipes in
-             docs/DEPLOYMENT.md). Default listen address 127.0.0.1:7900;
-             port 0 picks an ephemeral port (printed on startup).
+             [cluster] workers; empty = in-process pool). --encoding
+             picks the worker-link payload encoding (bin1 = protocol-v2
+             binary, ~3x fewer wire bytes; v1 workers negotiate back to
+             json). --shed-shards drops the coordinator's local copies
+             of worker-served shard lattices, rebuilding on demand
+             (docs/DEPLOYMENT.md §Memory budget).
+  shard-worker  [--listen HOST:PORT] [--frame-mb N] [--max-protocol V]
+             — hold shard replicas for a remote coordinator and serve
+             shard_mvm_block/shard_solve_block/ingest jobs over the
+             length-prefixed frame protocol (docs/PROTOCOL.md;
+             deployment recipes in docs/DEPLOYMENT.md). Default listen
+             address 127.0.0.1:7900; port 0 picks an ephemeral port
+             (printed on startup). --max-protocol 1 emulates a legacy
+             v1 (JSON-only) worker for mixed-fleet testing.
   loadbench  --dataset <name> [--n N] [--shards P] [--mode inproc|tcp]
              [--workers W] [--rps R] [--duration-s S] [--clients C]
              [--arrival poisson|bursty] [--mix mvm|serving]
              [--hedge-ms H] [--slow-shard P --slow-ms MS] [--seed S]
+             [--encoding json|bin1] [--shed-shards]
              — fit a model, start an ephemeral server (plus W loopback
              shard workers under --mode tcp), fire a deterministic
              open-loop schedule at it, and print latency percentiles
              (p50/p90/p99/p99.9) and throughput. --slow-shard injects a
              straggler via debug_delay_worker; --hedge-ms races slow
              shards against their backup replicas (docs/DEPLOYMENT.md
-             §Hedged redundancy).
+             §Hedged redundancy); --encoding compares json vs bin1
+             frame payloads on the worker links.
   goldens    [--artifacts DIR] — compile AOT artifacts on PJRT and replay
              the python-generated goldens (cross-layer parity check).
   datasets   — list the benchmark dataset analogs.
@@ -455,6 +464,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ms => Some(std::time::Duration::from_millis(ms as u64)),
         };
     }
+    // `--encoding json|bin1` overrides `[cluster] encoding` (bin1 =
+    // protocol-v2 binary payloads; a v1 worker negotiates back to json).
+    if let Some(enc) = args.get("encoding") {
+        cluster.encoding = crate::coordinator::frame::WireEncoding::parse(enc)
+            .ok_or_else(|| anyhow!("unknown encoding '{enc}' (use json | bin1)"))?;
+    }
+    // `--shed-shards` drops the coordinator's local copies of
+    // worker-served shard lattices (rebuild on demand).
+    if args.get_flag("shed-shards") {
+        cluster.shed_shards = true;
+    }
     let mut cfg = crate::coordinator::ServeConfig {
         allow_ingest,
         max_ingest_batch: cfg_file.get_usize("serve", "max_ingest_batch", 1024),
@@ -501,16 +521,22 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
     let cfg_file = load_config(args)?;
     let listen = args.get("listen").unwrap_or("127.0.0.1:7900").to_string();
     let frame_mb = args.get_usize("frame-mb", cfg_file.get_usize("cluster", "frame_mb", 64))?;
+    // `--max-protocol 1` emulates a legacy v1 worker (JSON-only frames)
+    // for mixed-fleet rollout testing; the default speaks v2/bin1.
+    let max_protocol = args.get_usize(
+        "max-protocol",
+        crate::coordinator::transport::PROTOCOL_VERSION as usize,
+    )? as u32;
     let worker = crate::coordinator::worker::ShardWorker::start(
         crate::coordinator::worker::WorkerConfig {
             listen,
             max_frame_bytes: frame_mb * 1024 * 1024,
+            max_protocol_version: max_protocol,
         },
     )?;
     println!(
-        "shard-worker listening on {} (protocol v{}, frame cap {frame_mb} MiB)",
-        worker.local_addr,
-        crate::coordinator::transport::PROTOCOL_VERSION
+        "shard-worker listening on {} (protocol v{max_protocol}, frame cap {frame_mb} MiB)",
+        worker.local_addr
     );
     println!("Ctrl-C to stop.");
     loop {
@@ -600,6 +626,15 @@ fn cmd_loadbench(args: &Args) -> Result<()> {
         0 => None,
         ms => Some(Duration::from_millis(ms as u64)),
     };
+    // Wire encoding for the coordinator→worker links (tcp mode):
+    // bin1 (default, protocol v2) or json (v1 text frames).
+    if let Some(enc) = args.get("encoding") {
+        cluster.encoding = crate::coordinator::frame::WireEncoding::parse(enc)
+            .ok_or_else(|| anyhow!("unknown encoding '{enc}' (use json | bin1)"))?;
+    }
+    if args.get_flag("shed-shards") {
+        cluster.shed_shards = true;
+    }
 
     let server = Server::start(
         model,

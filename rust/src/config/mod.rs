@@ -191,6 +191,16 @@ backoff_max_ms = 2000
 # (first reply wins; replies stay byte-identical). 0 = off. Costs 2x
 # replica memory per worker; see docs/DEPLOYMENT.md §Hedged redundancy.
 hedge_ms = 0
+# Frame payload encoding for worker links: "bin1" ships f64 vectors as
+# raw little-endian bits after the JSON header (protocol v2, ~2.5-3x
+# fewer wire bytes, still bit-exact); "json" forces the v1 text frames.
+# A v1-only worker negotiates back to json automatically.
+encoding = "bin1"
+# Worker-resident shard memory: 1 = drop the coordinator's own copy of
+# every worker-served shard lattice (keep points + metadata), rebuilding
+# on demand when a link fails or a predict/ingest batch arrives. Best
+# for mvm-serving deployments; see docs/DEPLOYMENT.md §Memory budget.
+shed_shards = 0
 "#;
 
 #[cfg(test)]
@@ -217,6 +227,8 @@ mod tests {
         assert_eq!(cfg.get_usize("cluster", "backoff_max_ms", 0), 2000);
         assert_eq!(cfg.get_usize("cluster", "connect_timeout_ms", 0), 1000);
         assert_eq!(cfg.get_usize("cluster", "hedge_ms", 7), 0);
+        assert_eq!(cfg.get_str("cluster", "encoding", "x"), "bin1");
+        assert_eq!(cfg.get_usize("cluster", "shed_shards", 7), 0);
     }
 
     #[test]

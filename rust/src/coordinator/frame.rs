@@ -1,4 +1,4 @@
-//! Length-prefixed JSON frames — the shard-worker wire format.
+//! Length-prefixed frames — the shard-worker wire format.
 //!
 //! One frame is
 //!
@@ -6,15 +6,34 @@
 //!   <payload byte length, ASCII decimal>\n<payload bytes>\n
 //! ```
 //!
-//! where the payload is one UTF-8 JSON document ([`crate::util::json`]).
+//! The payload comes in two encodings, negotiated per connection in the
+//! `hello` exchange (`docs/PROTOCOL.md` §Versioning):
+//!
+//! - **`json`** (protocol v1): the payload is one UTF-8 JSON document
+//!   ([`crate::util::json`]). Floats round-trip bit-exactly (shortest
+//!   round-trip formatting, negative zero preserved) — the property the
+//!   remote-vs-local byte-identity tests pin.
+//! - **`bin1`** (protocol v2): the payload is a JSON *header*, a single
+//!   raw `\n`, then the concatenation of little-endian raw-bits f64
+//!   blobs. The header carries a reserved `"bin"` object mapping each
+//!   binary field name to its element count; blobs follow in the
+//!   header's (sorted) key order, `count × 8` bytes each. Because the
+//!   JSON writer escapes `\n` inside strings, a serialized JSON
+//!   document never contains a raw newline — the first raw `\n` in a
+//!   payload therefore unambiguously separates header from blobs, and a
+//!   pure-JSON payload is recognized by containing none. Bit-exactness
+//!   is `to_bits` passthrough; the vector payloads that dominate wire
+//!   volume (`shard_mvm_block` inputs/results, `refresh_shard` points,
+//!   ingest deltas, `shard_solve_block` blocks) shrink ~3× versus their
+//!   JSON spelling and skip float formatting entirely.
+//!
 //! The explicit length (unlike the coordinator's client-facing JSON
 //! *lines*) lets a frame carry arbitrarily large vector payloads without
 //! scanning for a delimiter, and lets the receiver enforce a hard size
-//! cap *before* allocating. Floats round-trip bit-exactly (shortest
-//! round-trip formatting, negative zero preserved) — the property the
-//! remote-vs-local byte-identity tests pin. The full protocol is
-//! specified in `docs/PROTOCOL.md`.
+//! cap *before* allocating. The recorded frames under
+//! `rust/tests/golden/` pin both encodings byte for byte.
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
@@ -28,15 +47,190 @@ use crate::util::json::Json;
 /// enough that a corrupt length prefix cannot OOM the process.
 pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
 
-/// Serialize `payload` as one frame onto `w` and flush.
-pub fn write_frame<W: Write>(w: &mut W, payload: &Json) -> Result<()> {
-    let body = payload.to_string();
-    w.write_all(body.len().to_string().as_bytes())?;
+/// Payload encoding of one shard-worker connection, negotiated in the
+/// `hello` exchange: protocol v2 peers speak [`WireEncoding::Bin1`] by
+/// default; a v1 peer (or an explicit `[cluster] encoding = "json"`)
+/// keeps every payload pure JSON. Both sides decode either encoding on
+/// receive — the negotiation only fixes what each side *sends*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireEncoding {
+    /// Pure-JSON payloads (protocol v1 and the v2 fallback).
+    Json,
+    /// JSON header + raw little-endian f64 blobs (protocol v2).
+    Bin1,
+}
+
+impl WireEncoding {
+    /// The wire spelling used in `hello` frames and config files.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WireEncoding::Json => "json",
+            WireEncoding::Bin1 => "bin1",
+        }
+    }
+
+    /// Parse a wire/config spelling; unknown names are `None` so callers
+    /// can negotiate down to JSON instead of failing.
+    pub fn parse(s: &str) -> Option<WireEncoding> {
+        match s {
+            "json" => Some(WireEncoding::Json),
+            "bin1" => Some(WireEncoding::Bin1),
+            _ => None,
+        }
+    }
+}
+
+/// Frame `payload` (already encoded) onto `w` and flush.
+pub fn write_payload<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    w.write_all(payload.len().to_string().as_bytes())?;
     w.write_all(b"\n")?;
-    w.write_all(body.as_bytes())?;
+    w.write_all(payload)?;
     w.write_all(b"\n")?;
     w.flush()?;
     Ok(())
+}
+
+/// Serialize `payload` as one pure-JSON frame onto `w` and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &Json) -> Result<()> {
+    write_payload(w, payload.to_string().as_bytes())
+}
+
+/// Encode a `bin1` payload: `msg` (an object that must NOT already
+/// contain the binary field names or a `"bin"` key) plus the named f64
+/// vectors as raw blobs. The produced bytes are deterministic — the
+/// header is compact sorted-key JSON and the blobs follow in sorted
+/// field-name order — which is what lets the golden-corpus test assert
+/// decode→re-encode is the identity.
+pub fn encode_bin_payload(msg: &Json, fields: &[(&str, &[f64])]) -> Vec<u8> {
+    let obj = msg.as_obj().expect("bin1 header must be a JSON object");
+    assert!(!fields.is_empty(), "bin1 payload needs at least one blob");
+    let mut header = obj.clone();
+    let mut bin = BTreeMap::new();
+    for (name, xs) in fields {
+        assert!(
+            !header.contains_key(*name) && !bin.contains_key(*name),
+            "binary field {name:?} collides"
+        );
+        bin.insert((*name).to_string(), Json::Num(xs.len() as f64));
+    }
+    assert!(!header.contains_key("bin"), "\"bin\" is reserved");
+    header.insert("bin".to_string(), Json::Obj(bin));
+    let mut out = Json::Obj(header).to_string().into_bytes();
+    out.push(b'\n');
+    let mut sorted: Vec<&(&str, &[f64])> = fields.iter().collect();
+    sorted.sort_by_key(|(name, _)| *name);
+    for (_, xs) in sorted {
+        for x in *xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Serialize a `bin1` frame ([`encode_bin_payload`]) onto `w` and flush.
+pub fn write_frame_bin<W: Write>(w: &mut W, msg: &Json, fields: &[(&str, &[f64])]) -> Result<()> {
+    write_payload(w, &encode_bin_payload(msg, fields))
+}
+
+/// Write `msg` under the connection's negotiated encoding. For
+/// [`WireEncoding::Bin1`], any of `bin_fields` present in `msg` as an
+/// all-number array is lifted out of the JSON and shipped as a raw
+/// blob; fields that are absent (or not float arrays) stay in the
+/// header, and a message with no liftable field degenerates to a plain
+/// JSON frame (always legal — bin1 receivers decode both).
+pub fn write_frame_enc<W: Write>(
+    w: &mut W,
+    msg: &Json,
+    enc: WireEncoding,
+    bin_fields: &[&str],
+) -> Result<()> {
+    if enc == WireEncoding::Json {
+        return write_frame(w, msg);
+    }
+    let Some(obj) = msg.as_obj() else {
+        return write_frame(w, msg);
+    };
+    let mut header = obj.clone();
+    let mut owned: Vec<(&str, Vec<f64>)> = Vec::new();
+    for name in bin_fields {
+        if let Some(xs) = header.get(*name).and_then(|f| f.to_f64_vec()) {
+            header.remove(*name);
+            owned.push((name, xs));
+        }
+    }
+    if owned.is_empty() {
+        return write_frame(w, msg);
+    }
+    let fields: Vec<(&str, &[f64])> = owned.iter().map(|(n, v)| (*n, v.as_slice())).collect();
+    write_frame_bin(w, &Json::Obj(header), &fields)
+}
+
+/// Decode one frame payload of either encoding into its message plus
+/// the (sorted) names of the fields that rode as binary blobs — empty
+/// for a pure-JSON payload. Blob vectors are merged back into the
+/// message as JSON number arrays and the reserved `"bin"` key is
+/// removed, so op handlers see the same shape under both encodings.
+///
+/// Every malformed input — truncated or oversized blob sections, counts
+/// that are not non-negative integers, a blob field colliding with a
+/// JSON field, a `"bin"` map without a blob section, raw bytes without
+/// a `"bin"` map — is a clean `Err`, never a panic or a misread vector.
+pub fn decode_payload(payload: &[u8]) -> std::result::Result<(Json, Vec<String>), String> {
+    let Some(nl) = payload.iter().position(|&b| b == b'\n') else {
+        // No raw newline: the whole payload is one JSON document.
+        let text =
+            std::str::from_utf8(payload).map_err(|_| "frame payload is not UTF-8".to_string())?;
+        let json = Json::parse(text).map_err(|e| format!("frame payload: {e}"))?;
+        if json.get("bin").is_some() {
+            return Err("\"bin\" header without a blob section".to_string());
+        }
+        return Ok((json, Vec::new()));
+    };
+    let header = std::str::from_utf8(&payload[..nl])
+        .map_err(|_| "bin1 header is not UTF-8".to_string())?;
+    let msg = Json::parse(header).map_err(|e| format!("bin1 header: {e}"))?;
+    let Json::Obj(mut obj) = msg else {
+        return Err("bin1 header is not a JSON object".to_string());
+    };
+    let Some(bin) = obj.remove("bin") else {
+        return Err("raw bytes after the header but no \"bin\" map".to_string());
+    };
+    let Json::Obj(bin) = bin else {
+        return Err("\"bin\" is not an object".to_string());
+    };
+    let mut blobs = &payload[nl + 1..];
+    let mut names = Vec::with_capacity(bin.len());
+    for (name, count) in &bin {
+        let count = count
+            .as_f64()
+            .filter(|c| c.fract() == 0.0 && *c >= 0.0 && *c <= u32::MAX as f64)
+            .map(|c| c as usize)
+            .ok_or_else(|| format!("bad blob count for {name:?}"))?;
+        let bytes = count
+            .checked_mul(8)
+            .ok_or_else(|| format!("blob length overflow for {name:?}"))?;
+        if blobs.len() < bytes {
+            return Err(format!(
+                "truncated blob for {name:?}: want {bytes} bytes, have {}",
+                blobs.len()
+            ));
+        }
+        let (chunk, rest) = blobs.split_at(bytes);
+        blobs = rest;
+        let mut v = Vec::with_capacity(count);
+        for word in chunk.chunks_exact(8) {
+            v.push(f64::from_le_bytes(word.try_into().unwrap()));
+        }
+        if obj.contains_key(name) {
+            return Err(format!("binary field {name:?} collides with a JSON field"));
+        }
+        obj.insert(name.clone(), Json::Arr(v.into_iter().map(Json::Num).collect()));
+        names.push(name.clone());
+    }
+    if !blobs.is_empty() {
+        return Err(format!("{} excess bytes after the declared blobs", blobs.len()));
+    }
+    Ok((Json::Obj(obj), names))
 }
 
 /// Incremental frame reader over a (possibly read-timeout) byte stream.
@@ -60,23 +254,47 @@ impl<R: Read> FrameReader<R> {
         }
     }
 
-    /// Read one complete frame and parse its payload.
+    /// Read one complete frame and decode its payload (either encoding).
     ///
     /// Returns `Ok(None)` on a clean EOF at a frame boundary, or when
     /// `stop` flips true while waiting between timed-out reads (a
     /// *partial* frame at EOF is an error — the peer died mid-write).
-    /// `deadline` bounds the total wait when `stop` is `None`-driven
-    /// polling is not enough (the coordinator's result timeout).
+    /// `deadline` bounds the total wait when `stop`-driven polling is
+    /// not enough (the coordinator's result timeout). A payload that
+    /// fails to decode is an error here (the strict mode the
+    /// coordinator's links use: a garbled reply means resync); servers
+    /// that want to answer garbage with an error frame instead use
+    /// [`FrameReader::read_frame_lenient`].
     pub fn read_frame(
         &mut self,
         stop: Option<&AtomicBool>,
         deadline: Option<std::time::Instant>,
     ) -> Result<Option<Json>> {
+        match self.read_frame_lenient(stop, deadline)? {
+            None => Ok(None),
+            Some(Ok(json)) => Ok(Some(json)),
+            Some(Err(reason)) => Err(anyhow!("{reason}")),
+        }
+    }
+
+    /// Like [`FrameReader::read_frame`], but a payload that fails to
+    /// decode — while the outer framing is intact, so the stream is
+    /// still at a frame boundary — comes back as `Ok(Some(Err(reason)))`
+    /// instead of a hard error. The shard worker uses this to answer
+    /// hostile payloads (truncated blobs, wrong-length blobs, encoding
+    /// mismatches) with a clean error *frame* and keep serving. Framing
+    /// violations (bad length header, oversized frame, missing trailing
+    /// newline) are still hard errors: the stream position is lost.
+    pub fn read_frame_lenient(
+        &mut self,
+        stop: Option<&AtomicBool>,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Option<std::result::Result<Json, String>>> {
         let mut chunk = [0u8; 64 * 1024];
         loop {
             // A complete frame already buffered?
-            if let Some(frame) = self.try_extract()? {
-                return Ok(Some(frame));
+            if let Some(payload) = self.try_extract()? {
+                return Ok(Some(decode_payload(&payload).map(|(json, _)| json)));
             }
             if let Some(s) = stop {
                 if s.load(Ordering::Relaxed) {
@@ -108,8 +326,8 @@ impl<R: Read> FrameReader<R> {
         }
     }
 
-    /// Pop one complete frame off the buffer, if present.
-    fn try_extract(&mut self) -> Result<Option<Json>> {
+    /// Pop one complete frame's raw payload off the buffer, if present.
+    fn try_extract(&mut self) -> Result<Option<Vec<u8>>> {
         let Some(nl) = self.buf.iter().position(|&b| b == b'\n') else {
             // No header line yet; bound the header itself too.
             if self.buf.len() > 32 {
@@ -132,11 +350,9 @@ impl<R: Read> FrameReader<R> {
         if self.buf[total - 1] != b'\n' {
             bail!("frame missing trailing newline");
         }
-        let payload = std::str::from_utf8(&self.buf[nl + 1..total - 1])
-            .map_err(|_| anyhow!("frame payload is not UTF-8"))?;
-        let json = Json::parse(payload).map_err(|e| anyhow!("frame payload: {e}"))?;
+        let payload = self.buf[nl + 1..total - 1].to_vec();
         self.buf.drain(..total);
-        Ok(Some(json))
+        Ok(Some(payload))
     }
 }
 
@@ -211,5 +427,155 @@ mod tests {
         let mut r = FrameReader::new(OneByte(&buf, 0), 1024);
         let got = r.read_frame(None, None).unwrap().unwrap();
         assert_eq!(got.to_f64_vec().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    fn msg(fields: &[(&str, Json)]) -> Json {
+        let mut obj = BTreeMap::new();
+        for (k, v) in fields {
+            obj.insert((*k).to_string(), v.clone());
+        }
+        Json::Obj(obj)
+    }
+
+    #[test]
+    fn bin1_roundtrip_is_bit_exact() {
+        // Full-entropy bit patterns, negative zero, subnormals: the
+        // blob is a to_bits passthrough, so every pattern survives.
+        let v: Vec<f64> = [
+            0x0000_0000_0000_0000u64,
+            0x8000_0000_0000_0000, // -0.0
+            0x3ff0_0000_0000_0001,
+            0x0000_0000_0000_0001, // smallest subnormal
+            0x7fef_ffff_ffff_ffff, // MAX
+            0xdead_beef_cafe_f00d,
+        ]
+        .iter()
+        .map(|&b| f64::from_bits(b))
+        .collect();
+        let head = msg(&[("op", Json::Str("shard_mvm_block".into())), ("b", Json::Num(2.0))]);
+        let mut buf = Vec::new();
+        write_frame_bin(&mut buf, &head, &[("v", &v)]).unwrap();
+        let mut r = FrameReader::new(&buf[..], DEFAULT_MAX_FRAME_BYTES);
+        let got = r.read_frame(None, None).unwrap().unwrap();
+        assert_eq!(got.get("op").unwrap().as_str(), Some("shard_mvm_block"));
+        assert!(got.get("bin").is_none(), "reserved key is stripped");
+        let back = got.get("v").unwrap().to_f64_vec().unwrap();
+        assert_eq!(back.len(), v.len());
+        for (a, b) in v.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bin1_reencode_is_the_identity() {
+        let head = msg(&[("job", Json::Num(4.0)), ("op", Json::Str("x".into()))]);
+        let u = [1.5f64, -0.0, 3.25];
+        let z = [f64::from_bits(0x1234_5678_9abc_def0)];
+        let payload = encode_bin_payload(&head, &[("z", &z), ("u", &u)]);
+        let (decoded, names) = decode_payload(&payload).unwrap();
+        assert_eq!(names, vec!["u".to_string(), "z".to_string()], "sorted order");
+        // Split the decoded message back apart and re-encode.
+        let mut header = decoded.as_obj().unwrap().clone();
+        let mut fields: Vec<(String, Vec<f64>)> = Vec::new();
+        for n in &names {
+            let xs = header.remove(n).unwrap().to_f64_vec().unwrap();
+            fields.push((n.clone(), xs));
+        }
+        let borrowed: Vec<(&str, &[f64])> =
+            fields.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect();
+        let again = encode_bin_payload(&Json::Obj(header), &borrowed);
+        assert_eq!(payload, again);
+    }
+
+    #[test]
+    fn bin1_hostile_payloads_are_clean_errors() {
+        let head = msg(&[("op", Json::Str("ingest".into()))]);
+        let x = [1.0f64, 2.0, 3.0];
+        let good = encode_bin_payload(&head, &[("x", &x)]);
+
+        // Truncated blob section.
+        assert!(decode_payload(&good[..good.len() - 1]).is_err());
+        assert!(decode_payload(&good[..good.len() - 8]).is_err());
+        // Excess bytes after the declared blobs.
+        let mut long = good.clone();
+        long.push(0u8);
+        assert!(decode_payload(&long).is_err());
+        // Blob count not matching the payload (header says 4, blob has 3).
+        let bad = br#"{"bin":{"x":4},"op":"ingest"}
+"#
+        .iter()
+        .copied()
+        .chain(std::iter::repeat(0u8).take(24))
+        .collect::<Vec<u8>>();
+        assert!(decode_payload(&bad).is_err());
+        // "bin" map without a blob section.
+        assert!(decode_payload(br#"{"bin":{"x":1},"op":"ingest"}"#).is_err());
+        // Raw bytes without a "bin" map.
+        assert!(decode_payload(b"{\"op\":\"ingest\"}\n12345678").is_err());
+        // Count is not a non-negative integer.
+        assert!(decode_payload(b"{\"bin\":{\"x\":-1}}\n").is_err());
+        assert!(decode_payload(b"{\"bin\":{\"x\":1.5}}\n\x00\x00\x00\x00\x00\x00\x00\x00").is_err());
+        // Binary field colliding with a JSON field.
+        assert!(decode_payload(
+            b"{\"bin\":{\"x\":1},\"x\":[1]}\n\x00\x00\x00\x00\x00\x00\x00\x00"
+        )
+        .is_err());
+        // Header not an object / not JSON at all.
+        assert!(decode_payload(b"[1,2]\n\x00").is_err());
+        assert!(decode_payload(b"not json\n\x00").is_err());
+        // The good payload still decodes (the corpus above didn't
+        // poison shared state).
+        assert!(decode_payload(&good).is_ok());
+    }
+
+    #[test]
+    fn lenient_reader_survives_hostile_payloads() {
+        // A well-framed but undecodable payload surfaces as
+        // Ok(Some(Err(..))) and the stream stays usable for the next
+        // frame — the worker's answer-with-an-error-frame contract.
+        let mut buf = Vec::new();
+        write_payload(&mut buf, b"{\"op\":\"ingest\"}\n123").unwrap();
+        write_frame(&mut buf, &msg(&[("op", Json::Str("stats".into()))])).unwrap();
+        let mut r = FrameReader::new(&buf[..], DEFAULT_MAX_FRAME_BYTES);
+        let first = r.read_frame_lenient(None, None).unwrap().unwrap();
+        assert!(first.is_err(), "hostile payload must decode to Err");
+        let second = r.read_frame_lenient(None, None).unwrap().unwrap().unwrap();
+        assert_eq!(second.get("op").unwrap().as_str(), Some("stats"));
+        assert!(r.read_frame_lenient(None, None).unwrap().is_none());
+    }
+
+    #[test]
+    fn write_frame_enc_lifts_vector_fields() {
+        let m = msg(&[
+            ("op", Json::Str("shard_mvm_block".into())),
+            ("shard", Json::Num(1.0)),
+            ("v", Json::num_array(&[1.0, -0.5, 2.0])),
+        ]);
+        let mut jbuf = Vec::new();
+        write_frame_enc(&mut jbuf, &m, WireEncoding::Json, &["v"]).unwrap();
+        let mut bbuf = Vec::new();
+        write_frame_enc(&mut bbuf, &m, WireEncoding::Bin1, &["v"]).unwrap();
+        assert_ne!(jbuf, bbuf);
+        for buf in [jbuf, bbuf] {
+            let mut r = FrameReader::new(&buf[..], DEFAULT_MAX_FRAME_BYTES);
+            let got = r.read_frame(None, None).unwrap().unwrap();
+            assert_eq!(got.get("v").unwrap().to_f64_vec().unwrap(), vec![1.0, -0.5, 2.0]);
+            assert_eq!(got.get("shard").unwrap().as_f64(), Some(1.0));
+        }
+        // No liftable field: degenerates to plain JSON, still decodes.
+        let plain = msg(&[("op", Json::Str("stats".into()))]);
+        let mut buf = Vec::new();
+        write_frame_enc(&mut buf, &plain, WireEncoding::Bin1, &["v", "u"]).unwrap();
+        let mut r = FrameReader::new(&buf[..], DEFAULT_MAX_FRAME_BYTES);
+        assert_eq!(r.read_frame(None, None).unwrap().unwrap(), plain);
+    }
+
+    #[test]
+    fn encoding_names_roundtrip() {
+        assert_eq!(WireEncoding::parse("bin1"), Some(WireEncoding::Bin1));
+        assert_eq!(WireEncoding::parse("json"), Some(WireEncoding::Json));
+        assert_eq!(WireEncoding::parse("gzip"), None);
+        assert_eq!(WireEncoding::Bin1.as_str(), "bin1");
+        assert_eq!(WireEncoding::Json.as_str(), "json");
     }
 }

@@ -79,7 +79,7 @@ use crate::gp::SimplexGp;
 use crate::lattice::ShardedLattice;
 use crate::util::json::Json;
 
-use transport::{ClusterConfig, LocalTransport, ShardTransport, TcpTransport};
+use transport::{ClusterConfig, LocalTransport, RemoteSolver, ShardTransport, TcpTransport};
 
 /// Server configuration (`[serve]` + `[cluster]` sections of the config
 /// file).
@@ -189,6 +189,12 @@ struct Counters {
     /// 0 under the in-process transport. A gauge, not a counter —
     /// maintained by [`transport::TcpTransport`]'s I/O threads.
     remote_connected: Arc<AtomicU64>,
+    /// Shard lattices rebuilt on demand because a request needed a shard
+    /// the coordinator had shed (`[cluster] shed_shards`). A high rate
+    /// means the fleet's links are flapping — or the deployment mixes
+    /// predict/ingest traffic into a shed-mode coordinator
+    /// (`docs/DEPLOYMENT.md` §Memory budget).
+    shed_rebuilds: AtomicU64,
     /// Per-request service latency (enqueue → reply hand-off), feeding
     /// the `stats` op's `p50_us`/`p99_us`. Only the batcher thread
     /// records; the mutex is uncontended on the hot path.
@@ -303,6 +309,12 @@ impl Server {
     /// Hedges won by the backup worker's reply (≤ `hedged`).
     pub fn hedge_wins(&self) -> u64 {
         self.counters.hedge_wins.load(Ordering::Relaxed)
+    }
+
+    /// Shard lattices rebuilt on demand in `[cluster] shed_shards` mode
+    /// (a request needed a shard the coordinator had shed).
+    pub fn shed_rebuilds(&self) -> u64 {
+        self.counters.shed_rebuilds.load(Ordering::Relaxed)
     }
 
     /// Stop the accept loop and batcher and join their threads.
@@ -552,6 +564,23 @@ impl ShardPool {
         let transport: Box<dyn ShardTransport> = if cfg.cluster.workers.is_empty() {
             Box::new(LocalTransport::start(model))
         } else {
+            {
+                let mut guard = model.write().unwrap();
+                // Per-shard preconditioner solves run on the worker
+                // holding the replica (`shard_solve_block`); any shard
+                // the solver cannot reach is solved locally,
+                // bit-identically.
+                guard.set_solve_hook(Some(Arc::new(RemoteSolver::new(cfg.cluster.clone()))));
+                if cfg.cluster.shed_shards {
+                    // Worker-resident shard memory: drop every shard
+                    // lattice the workers will serve, keeping points +
+                    // metadata. Anything a remote link cannot answer is
+                    // rebuilt on demand (`flush_batch`).
+                    for p in 0..guard.operator().lattice.shard_count() {
+                        guard.shed_shard(p);
+                    }
+                }
+            }
             Box::new(TcpTransport::start(
                 model,
                 &cfg.cluster,
@@ -592,13 +621,24 @@ impl ShardPool {
     /// reassemble their replies in shard order. `None` only when the
     /// pool is disabled (local transport at P = 1) — the caller runs
     /// the direct zero-copy path. Otherwise the reply is always
-    /// produced: any shard the transport cannot serve is computed
-    /// in-thread, byte-identically.
-    fn mvm_block(&self, lat: &ShardedLattice, v: &Arc<Vec<f64>>, b: usize) -> Option<Vec<f64>> {
+    /// produced for every *resident* shard: any shard the transport
+    /// cannot serve is computed in-thread, byte-identically. A shard
+    /// that is both unservable and **shed** (`[cluster] shed_shards`)
+    /// cannot be computed under the caller's read lock — its index is
+    /// returned in the second tuple element, and the caller
+    /// ([`flush_batch`]) rebuilds it under the write lock and fills in
+    /// its rows. The reply bytes are identical either way.
+    fn mvm_block(
+        &self,
+        lat: &ShardedLattice,
+        v: &Arc<Vec<f64>>,
+        b: usize,
+    ) -> Option<(Vec<f64>, Vec<usize>)> {
         let slots = self.transport.slots();
         if slots == 0 {
             return None;
         }
+        let mut missing: Vec<usize> = Vec::new();
         // Job ids advance by 2: the even id tags this batch's primary
         // submissions, the odd id (`job + 1`) its hedged backups. Both
         // are accepted below; anything else is stale. Keeping the ids
@@ -617,9 +657,14 @@ impl ShardPool {
             }
         }
         // Declined slots: compute in-thread while the accepted ones run
-        // remotely/concurrently.
+        // remotely/concurrently (shed shards are deferred to the
+        // caller's rebuild).
         for p in 0..slots {
             if !waiting[p] {
+                if lat.is_shed(p) {
+                    missing.push(p);
+                    continue;
+                }
                 let part = lat.shard_mvm_block(p, v, b);
                 lat.scatter_shard_block(&mut out, p, &part, b);
             }
@@ -675,8 +720,12 @@ impl ShardPool {
                         None => {
                             waiting[p] = false;
                             waiting_count -= 1;
-                            let part = lat.shard_mvm_block(p, v, b);
-                            lat.scatter_shard_block(&mut out, p, &part, b);
+                            if lat.is_shed(p) {
+                                missing.push(p);
+                            } else {
+                                let part = lat.shard_mvm_block(p, v, b);
+                                lat.scatter_shard_block(&mut out, p, &part, b);
+                            }
                         }
                     }
                 }
@@ -702,8 +751,12 @@ impl ShardPool {
                                     // stale check above.
                                     waiting[p] = false;
                                     waiting_count -= 1;
-                                    let part = lat.shard_mvm_block(p, v, b);
-                                    lat.scatter_shard_block(&mut out, p, &part, b);
+                                    if lat.is_shed(p) {
+                                        missing.push(p);
+                                    } else {
+                                        let part = lat.shard_mvm_block(p, v, b);
+                                        lat.scatter_shard_block(&mut out, p, &part, b);
+                                    }
                                 }
                             }
                         }
@@ -717,11 +770,22 @@ impl ShardPool {
         // check above on the next call.
         for p in 0..slots {
             if waiting[p] {
+                if lat.is_shed(p) {
+                    missing.push(p);
+                    continue;
+                }
                 let part = lat.shard_mvm_block(p, v, b);
                 lat.scatter_shard_block(&mut out, p, &part, b);
             }
         }
-        Some(out)
+        Some((out, missing))
+    }
+
+    /// Shards whose primary remote link is currently ready — the set
+    /// safe to (re-)shed under `[cluster] shed_shards`. Empty for the
+    /// in-process transport.
+    fn ready_shards(&self) -> Vec<usize> {
+        self.transport.ready_shards()
     }
 
     fn shutdown(self) {
@@ -775,6 +839,25 @@ fn flush_batch(
     pool: &ShardPool,
     cfg: &ServeConfig,
 ) -> bool {
+    // Shed mode: prediction (slice over every shard) and ingest (CG
+    // over the full operator) read every shard lattice directly, so
+    // any shed shard must be rebuilt first. This is the documented
+    // cost of mixing those ops into a shed-mode coordinator — `mvm`
+    // traffic alone never forces a rebuild while its links are up.
+    if !batch.predicts.is_empty() || !batch.ingests.is_empty() {
+        let shed: Vec<usize> = {
+            let guard = model.read().unwrap();
+            let lat = &guard.operator().lattice;
+            (0..lat.shard_count()).filter(|&p| lat.is_shed(p)).collect()
+        };
+        if !shed.is_empty() {
+            let mut guard = model.write().unwrap();
+            for &p in &shed {
+                guard.rebuild_shard(p);
+                counters.shed_rebuilds.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
     if !batch.predicts.is_empty() {
         let t0 = Instant::now();
         let mean = model.read().unwrap().predict_mean(&batch.predict_x);
@@ -803,19 +886,39 @@ fn flush_batch(
     }
     if !batch.mvms.is_empty() {
         let b = batch.mvms.len();
-        let guard = model.read().unwrap();
-        let n = guard.n_train();
-        let lat = &guard.operator().lattice;
+        let n = model.read().unwrap().n_train();
         // One batched splat→blur→slice per shard worker for all b
         // concurrent MVM requests, routed over the pool's channels;
         // byte-identical to the direct in-process sharded MVM (same
         // per-shard arithmetic, shard-ordered reassembly). Worker read
         // locks coexist with ours.
         let v = Arc::new(std::mem::take(&mut batch.mvm_v));
-        let u = pool
-            .mvm_block(lat, &v, b)
-            .unwrap_or_else(|| lat.mvm_block(&v, b));
-        drop(guard);
+        let u = {
+            let guard = model.read().unwrap();
+            let lat = &guard.operator().lattice;
+            match pool.mvm_block(lat, &v, b) {
+                None => lat.mvm_block(&v, b),
+                Some((out, missing)) if missing.is_empty() => out,
+                Some((mut out, missing)) => {
+                    // Shed shards the transport could not serve: trade
+                    // the read lock for the write lock, rebuild them
+                    // from the retained points (fingerprint-verified),
+                    // and fill in their rows — still byte-identical.
+                    drop(guard);
+                    let mut guard = model.write().unwrap();
+                    for &p in &missing {
+                        guard.rebuild_shard(p);
+                        counters.shed_rebuilds.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let lat = &guard.operator().lattice;
+                    for &p in &missing {
+                        let part = lat.shard_mvm_block(p, &v, b);
+                        lat.scatter_shard_block(&mut out, p, &part, b);
+                    }
+                    out
+                }
+            }
+        };
         counters.batches.fetch_add(1, Ordering::Relaxed);
         for (k, (id, reply, enqueued)) in batch.mvms.drain(..).enumerate() {
             let mut obj = BTreeMap::new();
@@ -861,7 +964,7 @@ fn flush_batch(
             })
         } else {
             guard.ingest(&x, &y).map(|out| {
-                let fp = guard.operator().lattice.shards[out.shard].fingerprint();
+                let fp = guard.operator().lattice.shard_fingerprint(out.shard);
                 (out.shard, false, Some(fp))
             })
         };
@@ -903,6 +1006,30 @@ fn flush_batch(
         }
     }
     rebuilt
+}
+
+/// Re-shed resident shards whose primary remote link is ready again
+/// (`[cluster] shed_shards`). A rebuild forced by a link failure or by
+/// a predict/ingest batch is temporary: once the fleet can serve a
+/// shard's MVMs again, the local copy goes back to metadata and the
+/// memory is returned.
+fn reshed_ready(model: &Arc<RwLock<SimplexGp>>, pool: &ShardPool) {
+    let ready = pool.ready_shards();
+    if ready.is_empty() {
+        return;
+    }
+    let to_shed: Vec<usize> = {
+        let guard = model.read().unwrap();
+        let lat = &guard.operator().lattice;
+        ready.into_iter().filter(|&p| !lat.is_shed(p)).collect()
+    };
+    if to_shed.is_empty() {
+        return;
+    }
+    let mut guard = model.write().unwrap();
+    for p in to_shed {
+        guard.shed_shard(p);
+    }
 }
 
 /// The batcher: coalesce predictions, MVMs and ingests, route to the
@@ -1020,7 +1147,18 @@ fn batch_loop(
                     "precond_rank".to_string(),
                     Json::Num(guard.precond_rank() as f64),
                 );
+                // Worker-resident shard memory (`[cluster] shed_shards`):
+                // how many shard lattices are currently metadata-only,
+                // and how many on-demand rebuilds fallbacks have forced.
+                obj.insert(
+                    "shed_shards".to_string(),
+                    Json::Num(guard.operator().lattice.shed_count() as f64),
+                );
                 drop(guard);
+                obj.insert(
+                    "shed_rebuilds".to_string(),
+                    Json::Num(counters.shed_rebuilds.load(Ordering::Relaxed) as f64),
+                );
                 obj.insert(
                     "served".to_string(),
                     Json::Num(counters.served.load(Ordering::Relaxed) as f64),
@@ -1133,6 +1271,8 @@ fn batch_loop(
                     ShardPool::start(&model, &cfg, &counters),
                 );
                 old.shutdown();
+            } else if cfg.cluster.shed_shards {
+                reshed_ready(&model, &pool);
             }
         }
         for cmd in debug.drain(..) {
@@ -1576,7 +1716,8 @@ mod tests {
         let b = 3;
         let v = Arc::new(rng.normal_vec(n * b));
         let direct = lat.mvm_block(&v, b);
-        let via_pool = pool.mvm_block(lat, &v, b).expect("live pool must answer");
+        let (via_pool, missing) = pool.mvm_block(lat, &v, b).expect("live pool must answer");
+        assert!(missing.is_empty());
         for i in 0..n * b {
             assert_eq!(via_pool[i].to_bits(), direct[i].to_bits(), "row {i}");
         }
@@ -1585,9 +1726,10 @@ mod tests {
         assert!(!pool.kill_worker(7), "out-of-range kill must report false");
         let guard = model.read().unwrap();
         let lat = &guard.operator().lattice;
-        let degraded = pool
+        let (degraded, missing) = pool
             .mvm_block(lat, &v, b)
             .expect("a dead worker degrades one shard, never the pool");
+        assert!(missing.is_empty(), "no shard is shed here");
         for i in 0..n * b {
             assert_eq!(degraded[i].to_bits(), direct[i].to_bits(), "row {i}");
         }
@@ -1609,6 +1751,50 @@ mod tests {
         assert!(pool.mvm_block(lat, &v, 1).is_none());
         drop(guard);
         pool.shutdown();
+    }
+
+    #[test]
+    fn shed_mode_rebuilds_on_demand_when_workers_unreachable() {
+        // `[cluster] shed_shards` with a fleet that never connects: the
+        // pool sheds every shard at start, every mvm forces on-demand
+        // rebuilds under the write lock, and replies stay byte-identical
+        // to the direct path. The worst case for the mode — it must
+        // degrade to correctness, not to an error.
+        let model = sharded_model(2);
+        let mut rng = Pcg64::new(71);
+        let v = rng.normal_vec(model.n_train());
+        let direct = model.operator().lattice.mvm(&v);
+        let server = Server::start(
+            model,
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                cluster: ClusterConfig {
+                    // Reserved port: connection refused, links never ready.
+                    workers: vec!["127.0.0.1:9".to_string()],
+                    shed_shards: true,
+                    ..ClusterConfig::default()
+                },
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("shed_shards").and_then(|s| s.as_f64()), Some(2.0));
+        let u = client.mvm(&v).unwrap();
+        for i in 0..u.len() {
+            assert_eq!(u[i].to_bits(), direct[i].to_bits(), "row {i}");
+        }
+        // Both shards were rebuilt on demand; with no ready links they
+        // stay resident afterwards.
+        assert_eq!(server.shed_rebuilds(), 2);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("shed_shards").and_then(|s| s.as_f64()), Some(0.0));
+        assert_eq!(stats.get("shed_rebuilds").and_then(|s| s.as_f64()), Some(2.0));
+        // Prediction still works (ensure-resident path is a no-op now).
+        let got = client.predict(&[0.1, 0.2], 2).unwrap();
+        assert!(got[0].is_finite());
+        server.shutdown();
     }
 
     #[test]

@@ -16,15 +16,28 @@
 //!   preserving the zero-copy direct path into the single lattice.
 //! - [`TcpTransport`] — one I/O thread per configured remote worker
 //!   ([`crate::coordinator::worker`], the `shard-worker` CLI mode),
-//!   speaking the length-prefixed JSON frame protocol of
+//!   speaking the length-prefixed frame protocol of
 //!   [`crate::coordinator::frame`] (`docs/PROTOCOL.md`). Shards are
 //!   assigned round-robin across workers; each connection handshakes
-//!   (protocol version, shard assignment) and syncs replicas with
-//!   `refresh_shard` ops verified by lattice fingerprints, then serves
-//!   `shard_mvm_block` jobs. Floats cross the wire through
-//!   [`crate::util::json`]'s bit-exact round trip, so remote replies
-//!   are byte-identical to local computation
-//!   (`rust/tests/remote_shard.rs` pins this over loopback).
+//!   (protocol version + payload encoding, shard assignment) and syncs
+//!   replicas with `refresh_shard` ops verified by lattice
+//!   fingerprints, then serves `shard_mvm_block` jobs. Under the
+//!   negotiated [`WireEncoding::Bin1`] floats cross the wire as raw
+//!   little-endian bits (`to_bits` passthrough); under the JSON
+//!   fallback they go through [`crate::util::json`]'s bit-exact
+//!   shortest round trip — either way remote replies are byte-identical
+//!   to local computation (`rust/tests/remote_shard.rs` pins this over
+//!   loopback, both encodings). A v1 worker rejects the v2 `hello`; the
+//!   link retries at version 1 on the same connection and the pair
+//!   settles on JSON, so mixed fleets keep working.
+//!
+//! Protocol v2 additionally moves work *toward* the workers:
+//! [`RemoteSolver`] ships `shard_solve_block` ops so per-shard
+//! preconditioner application runs on the worker holding the replica
+//! (see [`crate::solvers::precond::ShardSolveHook`]), and the
+//! `[cluster] shed_shards` mode lets the coordinator drop its own copy
+//! of remote-owned shard lattices entirely (docs/DEPLOYMENT.md
+//! §Memory budget).
 //!
 //! Failure semantics (both transports): a transport is an optimization,
 //! never a correctness dependency. A slot whose worker is dead,
@@ -39,21 +52,28 @@ use std::collections::BTreeMap;
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::frame::{write_frame, FrameReader, DEFAULT_MAX_FRAME_BYTES, POLL_READ_TIMEOUT};
+use super::frame::{
+    write_frame, write_frame_enc, FrameReader, WireEncoding, DEFAULT_MAX_FRAME_BYTES,
+    POLL_READ_TIMEOUT,
+};
 use crate::config::Config;
 use crate::gp::SimplexGp;
 use crate::lattice::ShardedLattice;
+use crate::solvers::ShardSolveHook;
 use crate::util::json::Json;
 
-/// Version of the shard-worker frame protocol. The `hello` handshake
-/// carries it; a coordinator and worker must agree exactly (the
-/// protocol has no negotiation — see `docs/PROTOCOL.md` §Versioning).
-pub const PROTOCOL_VERSION: u64 = 1;
+/// Highest shard-worker frame protocol version this build speaks. The
+/// `hello` handshake negotiates *down* from it: a worker accepts any
+/// version up to its own ceiling and echoes the accepted version (plus
+/// the payload encoding for v2+); a v1-era worker rejects a v2 `hello`
+/// and the coordinator retries at version 1 on the same connection —
+/// see `docs/PROTOCOL.md` §Versioning.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// `[cluster]` configuration: remote shard workers and the transport's
 /// timeouts. An empty `workers` list means the in-process
@@ -86,6 +106,17 @@ pub struct ClusterConfig {
     /// reply wins, byte-identically. `None` (config `hedge_ms = 0`)
     /// disables hedging: PR 5 behavior, bit for bit.
     pub hedge: Option<Duration>,
+    /// Payload encoding to *request* in the v2 `hello` (config
+    /// `encoding = "bin1" | "json"`). The worker's reply settles what
+    /// each side actually sends; a v1 worker always settles on JSON.
+    pub encoding: WireEncoding,
+    /// Shed mode (config `shed_shards = 1`): the coordinator drops its
+    /// in-memory copy of remote-owned shard lattices once their remote
+    /// replicas are synced, keeping only the points + kernel
+    /// hyperparameters, and rebuilds a shard on demand when the
+    /// per-shard fallback fires. Serves models bigger than one box's
+    /// RAM; see docs/DEPLOYMENT.md §Memory budget.
+    pub shed_shards: bool,
 }
 
 impl Default for ClusterConfig {
@@ -99,6 +130,8 @@ impl Default for ClusterConfig {
             backoff_max: Duration::from_millis(2000),
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
             hedge: None,
+            encoding: WireEncoding::Bin1,
+            shed_shards: false,
         }
     }
 }
@@ -127,6 +160,9 @@ impl ClusterConfig {
                 0 => None,
                 ms => Some(Duration::from_millis(ms as u64)),
             },
+            encoding: WireEncoding::parse(cfg.get_str("cluster", "encoding", "bin1"))
+                .unwrap_or(WireEncoding::Bin1),
+            shed_shards: cfg.get_usize("cluster", "shed_shards", 0) != 0,
         }
     }
 }
@@ -220,6 +256,17 @@ pub trait ShardTransport: Send {
     /// path. Returns whether the slot existed and supports delays.
     fn delay(&mut self, _slot: usize, _delay: Duration) -> bool {
         false
+    }
+
+    /// Shards whose *primary* worker link is currently up and synced —
+    /// the set the `shed_shards` policy may safely drop locally (a job
+    /// for them is expected to be served remotely; the fallback
+    /// rebuilds on demand if that expectation breaks). Default: none,
+    /// which disables shedding for transports without remote replicas
+    /// (the local pool reads the coordinator's own model, so shedding
+    /// under it would be self-defeating).
+    fn ready_shards(&self) -> Vec<usize> {
+        Vec::new()
     }
 
     /// Stop worker threads / close connections and join.
@@ -583,6 +630,12 @@ impl ShardTransport for TcpTransport {
         self.results.recv_timeout(timeout).ok()
     }
 
+    fn ready_shards(&self) -> Vec<usize> {
+        (0..self.slots)
+            .filter(|&p| self.links[self.assignment[p]].ready.load(Ordering::Acquire))
+            .collect()
+    }
+
     fn ingest(&self, shard: usize, x: &[f64], expect_fingerprint: u64) {
         if shard >= self.assignment.len() {
             return;
@@ -682,10 +735,13 @@ struct LinkIo {
     gauge: Arc<AtomicU64>,
 }
 
-/// A live, synced connection: writer half + framed reader half.
+/// A live, synced connection: writer half + framed reader half, plus
+/// the payload encoding the `hello` exchange settled on for this
+/// connection.
 struct Conn {
     writer: TcpStream,
     reader: FrameReader<TcpStream>,
+    enc: WireEncoding,
 }
 
 impl LinkIo {
@@ -855,7 +911,7 @@ impl LinkIo {
         // stale replica must fail the job, never return plausible rows.
         obj.insert("b".to_string(), Json::Num(b as f64));
         obj.insert("v".to_string(), Json::num_array(local));
-        write_frame(&mut conn.writer, &Json::Obj(obj))?;
+        write_frame_enc(&mut conn.writer, &Json::Obj(obj), conn.enc, &["v"])?;
         let deadline = Instant::now() + self.cluster.result_timeout;
         let reply = conn
             .reader
@@ -881,7 +937,7 @@ impl LinkIo {
         obj.insert("op".to_string(), Json::Str("ingest".to_string()));
         obj.insert("shard".to_string(), Json::Num(shard as f64));
         obj.insert("x".to_string(), Json::num_array(x));
-        write_frame(&mut conn.writer, &Json::Obj(obj))?;
+        write_frame_enc(&mut conn.writer, &Json::Obj(obj), conn.enc, &["x"])?;
         let deadline = Instant::now() + self.cluster.result_timeout;
         let reply = conn
             .reader
@@ -920,34 +976,16 @@ impl LinkIo {
         let mut writer = stream.try_clone()?;
         let mut reader = FrameReader::new(stream, self.cluster.max_frame_bytes);
 
-        // Handshake: protocol version + shard assignment.
-        let mut hello = BTreeMap::new();
-        hello.insert("op".to_string(), Json::Str("hello".to_string()));
-        hello.insert("version".to_string(), Json::Num(PROTOCOL_VERSION as f64));
-        hello.insert(
-            "shards".to_string(),
-            Json::Arr(
-                self.assigned
-                    .iter()
-                    .map(|&p| Json::Num(p as f64))
-                    .collect(),
-            ),
-        );
-        write_frame(&mut writer, &Json::Obj(hello))?;
-        let deadline = Instant::now() + self.cluster.result_timeout;
-        let reply = reader
-            .read_frame(Some(&self.stop), Some(deadline))?
-            .ok_or_else(|| anyhow!("connection closed during handshake"))?;
-        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
-            bail!("handshake rejected: {err}");
-        }
-        let version = reply.get("version").and_then(|v| v.as_f64());
-        if version != Some(PROTOCOL_VERSION as f64) {
-            bail!(
-                "protocol version mismatch: worker speaks {version:?}, \
-                 coordinator speaks {PROTOCOL_VERSION}"
-            );
-        }
+        // Handshake: protocol version + payload encoding + shard
+        // assignment, with the v1/JSON fallback for old workers.
+        let (enc, reply) = negotiate_hello(
+            &mut writer,
+            &mut reader,
+            Some(&self.stop),
+            self.cluster.result_timeout,
+            self.cluster.encoding,
+            &self.assigned,
+        )?;
         // Fingerprints of shards the worker already holds.
         let mut held: BTreeMap<usize, String> = BTreeMap::new();
         if let Some(list) = reply.get("shards").and_then(|s| s.as_arr()) {
@@ -971,7 +1009,7 @@ impl LinkIo {
                 if p >= lat.shard_count() {
                     bail!("shard {p} no longer exists (model rebuilt)");
                 }
-                let fp = lat.shards[p].fingerprint();
+                let fp = lat.shard_fingerprint(p);
                 if held.get(&p) == Some(&format_fp(fp)) {
                     (None, fp) // replica already matches — skip refresh
                 } else {
@@ -1011,7 +1049,7 @@ impl LinkIo {
             };
             synced.push((p, expect_fp));
             let Some(msg) = msg else { continue };
-            write_frame(&mut writer, &msg)?;
+            write_frame_enc(&mut writer, &msg, enc, &["x"])?;
             let deadline = Instant::now() + self.cluster.refresh_timeout;
             let reply = reader
                 .read_frame(Some(&self.stop), Some(deadline))?
@@ -1041,12 +1079,268 @@ impl LinkIo {
             let guard = self.model.read().unwrap();
             let lat = &guard.operator().lattice;
             for &(p, fp) in &synced {
-                if p >= lat.shard_count() || lat.shards[p].fingerprint() != fp {
+                if p >= lat.shard_count() || lat.shard_fingerprint(p) != fp {
                     bail!("model changed during replica sync (shard {p}); resyncing");
                 }
             }
         }
-        Ok(Conn { writer, reader })
+        Ok(Conn { writer, reader, enc })
+    }
+}
+
+/// Send the `hello` handshake on a fresh connection and settle the
+/// protocol version + payload encoding. Tries [`PROTOCOL_VERSION`]
+/// first, requesting `requested`; when the worker rejects it (a v1-era
+/// build answers with an error *frame* but keeps the connection open at
+/// a frame boundary), retries at version 1 on the same connection — the
+/// pair then speaks pure JSON. Returns the settled encoding and the
+/// accepting `hello` reply (its `shards` list carries held-replica
+/// fingerprints).
+fn negotiate_hello(
+    writer: &mut TcpStream,
+    reader: &mut FrameReader<TcpStream>,
+    stop: Option<&AtomicBool>,
+    reply_timeout: Duration,
+    requested: WireEncoding,
+    assigned: &[usize],
+) -> Result<(WireEncoding, Json)> {
+    let hello = |version: u32, with_enc: bool| {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".to_string(), Json::Str("hello".to_string()));
+        obj.insert("version".to_string(), Json::Num(version as f64));
+        if with_enc {
+            obj.insert(
+                "encoding".to_string(),
+                Json::Str(requested.as_str().to_string()),
+            );
+        }
+        obj.insert(
+            "shards".to_string(),
+            Json::Arr(assigned.iter().map(|&p| Json::Num(p as f64)).collect()),
+        );
+        Json::Obj(obj)
+    };
+    write_frame(writer, &hello(PROTOCOL_VERSION, true))?;
+    let deadline = Instant::now() + reply_timeout;
+    let mut reply = reader
+        .read_frame(stop, Some(deadline))?
+        .ok_or_else(|| anyhow!("connection closed during handshake"))?;
+    if reply.get("error").and_then(|e| e.as_str()).is_some() {
+        write_frame(writer, &hello(1, false))?;
+        let deadline = Instant::now() + reply_timeout;
+        reply = reader
+            .read_frame(stop, Some(deadline))?
+            .ok_or_else(|| anyhow!("connection closed during handshake"))?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            bail!("handshake rejected: {err}");
+        }
+    }
+    let version = reply.get("version").and_then(|v| v.as_f64());
+    match version {
+        Some(v) if v.fract() == 0.0 && v >= 1.0 && v <= PROTOCOL_VERSION as f64 => {}
+        _ => bail!(
+            "protocol version mismatch: worker speaks {version:?}, \
+             coordinator speaks <= {PROTOCOL_VERSION}"
+        ),
+    }
+    // The worker's reply is final; a true v1 reply carries no
+    // `encoding` at all, which (like any unknown spelling) means JSON.
+    let enc = reply
+        .get("encoding")
+        .and_then(|e| e.as_str())
+        .and_then(WireEncoding::parse)
+        .unwrap_or(WireEncoding::Json);
+    Ok((enc, reply))
+}
+
+// ---------------------------------------------------------------------
+// RemoteSolver — shard_solve_block offload (protocol v2).
+// ---------------------------------------------------------------------
+
+/// Per-worker state of the solve-offload client: one lazily dialed
+/// connection plus reconnect backoff.
+struct SolveLink {
+    conn: Option<Conn>,
+    next_attempt: Option<Instant>,
+    backoff: Duration,
+}
+
+/// Client side of the `shard_solve_block` op: ships per-shard
+/// preconditioner applications to the worker holding the replica —
+/// shard `p` → worker `p % W`, the same primary assignment as
+/// [`TcpTransport`], so the replica is already synced by the MVM links.
+/// Connections are pooled per worker behind a `Mutex` (the whole solver
+/// is `Sync`, which is what lets it ride inside a
+/// [`crate::solvers::Precond`]) and dialed lazily with their own v2
+/// handshake: a worker that only speaks v1 has no `shard_solve_block`,
+/// so the link fails permanently into the local fallback.
+///
+/// Failure semantics mirror the transport's: any connect, frame, or
+/// worker error returns `None` from [`ShardSolveHook::solve_block`] —
+/// the caller ([`crate::solvers::OffloadedPrecond`]) then applies its
+/// own local factor, byte-identically — and the connection is dropped
+/// and re-dialed with exponential backoff.
+pub struct RemoteSolver {
+    cluster: ClusterConfig,
+    links: Vec<Mutex<SolveLink>>,
+    next_job: AtomicU64,
+}
+
+impl RemoteSolver {
+    pub fn new(cluster: ClusterConfig) -> RemoteSolver {
+        let links = cluster
+            .workers
+            .iter()
+            .map(|_| {
+                Mutex::new(SolveLink {
+                    conn: None,
+                    next_attempt: None,
+                    backoff: cluster.backoff,
+                })
+            })
+            .collect();
+        RemoteSolver {
+            cluster,
+            links,
+            next_job: AtomicU64::new(0),
+        }
+    }
+
+    /// Dial worker `wi` and handshake. Requires protocol v2: the solve
+    /// op does not exist below it, so a v1 worker fails the connect
+    /// (and the caller's local fallback serves every request).
+    fn connect(&self, wi: usize) -> Result<Conn> {
+        let addr_str = &self.cluster.workers[wi];
+        let addr = addr_str
+            .to_socket_addrs()
+            .map_err(|e| anyhow!("resolve {addr_str}: {e}"))?
+            .next()
+            .ok_or_else(|| anyhow!("resolve {addr_str}: no addresses"))?;
+        let stream = TcpStream::connect_timeout(&addr, self.cluster.connect_timeout)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(POLL_READ_TIMEOUT))?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = FrameReader::new(stream, self.cluster.max_frame_bytes);
+        let (enc, reply) = negotiate_hello(
+            &mut writer,
+            &mut reader,
+            None,
+            self.cluster.result_timeout,
+            self.cluster.encoding,
+            &[],
+        )?;
+        let version = reply.get("version").and_then(|v| v.as_f64());
+        if !version.is_some_and(|v| v >= 2.0) {
+            bail!("worker speaks protocol {version:?}: no shard_solve_block before v2");
+        }
+        Ok(Conn {
+            writer,
+            reader,
+            enc,
+        })
+    }
+}
+
+fn roundtrip_solve(
+    conn: &mut Conn,
+    shard: usize,
+    job: u64,
+    r: &[f64],
+    nrhs: usize,
+    rank: usize,
+    sigma2: f64,
+    timeout: Duration,
+) -> Result<Vec<f64>> {
+    let mut obj = BTreeMap::new();
+    obj.insert("op".to_string(), Json::Str("shard_solve_block".to_string()));
+    obj.insert("shard".to_string(), Json::Num(shard as f64));
+    obj.insert("job".to_string(), Json::Num(job as f64));
+    obj.insert("b".to_string(), Json::Num(nrhs as f64));
+    obj.insert("rank".to_string(), Json::Num(rank as f64));
+    obj.insert("sigma2".to_string(), Json::Num(sigma2));
+    obj.insert("r".to_string(), Json::num_array(r));
+    write_frame_enc(&mut conn.writer, &Json::Obj(obj), conn.enc, &["r"])?;
+    let deadline = Instant::now() + timeout;
+    let reply = conn
+        .reader
+        .read_frame(None, Some(deadline))?
+        .ok_or_else(|| anyhow!("connection closed"))?;
+    if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+        bail!("worker error: {err}");
+    }
+    if reply.get("job").and_then(|j| j.as_f64()) != Some(job as f64) {
+        bail!("out-of-order solve reply");
+    }
+    let z = reply
+        .get("z")
+        .and_then(|z| z.to_f64_vec())
+        .ok_or_else(|| anyhow!("reply missing z"))?;
+    if z.len() != r.len() {
+        bail!("solve reply {} rows, expected {} (replica stale?)", z.len(), r.len());
+    }
+    Ok(z)
+}
+
+impl ShardSolveHook for RemoteSolver {
+    fn solve_block(
+        &self,
+        shard: usize,
+        r: &[f64],
+        nrhs: usize,
+        rank: usize,
+        sigma2: f64,
+    ) -> Option<Vec<f64>> {
+        if self.cluster.workers.is_empty() {
+            return None;
+        }
+        let wi = shard % self.cluster.workers.len();
+        let mut link = self.links[wi].lock().ok()?;
+        if link.conn.is_none() {
+            if let Some(at) = link.next_attempt {
+                if Instant::now() < at {
+                    return None;
+                }
+            }
+            match self.connect(wi) {
+                Ok(c) => {
+                    link.conn = Some(c);
+                    link.backoff = self.cluster.backoff;
+                    link.next_attempt = None;
+                }
+                Err(_) => {
+                    link.next_attempt = Some(Instant::now() + link.backoff);
+                    link.backoff = (link.backoff * 2).min(self.cluster.backoff_max);
+                    return None;
+                }
+            }
+        }
+        let job = self.next_job.fetch_add(1, Ordering::Relaxed);
+        let res = {
+            let conn = link.conn.as_mut().unwrap();
+            roundtrip_solve(
+                conn,
+                shard,
+                job,
+                r,
+                nrhs,
+                rank,
+                sigma2,
+                self.cluster.result_timeout,
+            )
+        };
+        match res {
+            Ok(z) => Some(z),
+            Err(_) => {
+                // Any failure — including a clean worker error frame —
+                // drops the connection: the next call re-dials (after
+                // backoff) and the caller's local factor serves this
+                // one, byte-identically.
+                link.conn = None;
+                link.next_attempt = Some(Instant::now() + link.backoff);
+                link.backoff = (link.backoff * 2).min(self.cluster.backoff_max);
+                None
+            }
+        }
     }
 }
 
@@ -1086,12 +1380,118 @@ mod tests {
         // Unset keys keep the defaults.
         assert_eq!(cc.connect_timeout, Duration::from_millis(1000));
         assert_eq!(cc.refresh_timeout, Duration::from_secs(60));
+        // v2 defaults: binary payloads requested, shedding off.
+        assert_eq!(cc.encoding, WireEncoding::Bin1);
+        assert!(!cc.shed_shards);
         // hedge_ms = 0 (and absence) means hedging off.
         let off = ClusterConfig::from_config(
             &Config::parse("[cluster]\nhedge_ms = 0\n").unwrap(),
         );
         assert_eq!(off.hedge, None);
         assert_eq!(ClusterConfig::default().hedge, None);
+        // Explicit JSON pinning + shed mode parse.
+        let v1ish = ClusterConfig::from_config(
+            &Config::parse("[cluster]\nencoding = \"json\"\nshed_shards = 1\n").unwrap(),
+        );
+        assert_eq!(v1ish.encoding, WireEncoding::Json);
+        assert!(v1ish.shed_shards);
+        // Unknown spellings fall back to the bin1 default.
+        let odd = ClusterConfig::from_config(
+            &Config::parse("[cluster]\nencoding = \"gzip\"\n").unwrap(),
+        );
+        assert_eq!(odd.encoding, WireEncoding::Bin1);
+    }
+
+    #[test]
+    fn remote_solver_matches_local_factor_and_falls_back() {
+        use crate::coordinator::worker::{ShardWorker, WorkerConfig};
+        use crate::kernels::{ArdKernel, KernelFamily};
+        use crate::solvers::{ExactKernelRows, PivCholPrecond, ShardSolveHook};
+        use crate::util::Pcg64;
+
+        let worker = ShardWorker::start(WorkerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            ..WorkerConfig::default()
+        })
+        .unwrap();
+        // Push shard 0's replica over a raw v2 connection (in
+        // production the TcpTransport links do this).
+        let (d, n, rank, sigma2) = (2usize, 30usize, 8usize, 0.05f64);
+        let mut rng = Pcg64::new(33);
+        let x = rng.normal_vec(n * d);
+        {
+            let stream = TcpStream::connect(worker.local_addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            stream.set_read_timeout(Some(POLL_READ_TIMEOUT)).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = FrameReader::new(stream, DEFAULT_MAX_FRAME_BYTES);
+            let (enc, _) = negotiate_hello(
+                &mut writer,
+                &mut reader,
+                None,
+                Duration::from_secs(10),
+                WireEncoding::Bin1,
+                &[0],
+            )
+            .unwrap();
+            assert_eq!(enc, WireEncoding::Bin1);
+            let mut kern = BTreeMap::new();
+            kern.insert("family".to_string(), Json::Str("rbf".to_string()));
+            kern.insert("outputscale".to_string(), Json::Num(1.0));
+            kern.insert("lengthscales".to_string(), Json::num_array(&vec![0.8; d]));
+            let mut obj = BTreeMap::new();
+            obj.insert("op".to_string(), Json::Str("refresh_shard".to_string()));
+            obj.insert("shard".to_string(), Json::Num(0.0));
+            obj.insert("d".to_string(), Json::Num(d as f64));
+            obj.insert("order".to_string(), Json::Num(1.0));
+            obj.insert("kernel".to_string(), Json::Obj(kern));
+            obj.insert("x".to_string(), Json::num_array(&x));
+            write_frame_enc(&mut writer, &Json::Obj(obj), enc, &["x"]).unwrap();
+            let reply = reader
+                .read_frame(None, Some(Instant::now() + Duration::from_secs(30)))
+                .unwrap()
+                .unwrap();
+            assert_eq!(reply.get("ok").and_then(|v| v.as_f64()), Some(1.0), "{reply}");
+        }
+
+        let cc = ClusterConfig {
+            workers: vec![worker.local_addr.to_string()],
+            ..ClusterConfig::default()
+        };
+        let solver = RemoteSolver::new(cc);
+        let b = 2;
+        let r = rng.normal_vec(n * b);
+        let z = solver
+            .solve_block(0, &r, b, rank, sigma2)
+            .expect("remote solve should succeed");
+        let kernel = ArdKernel {
+            family: KernelFamily::Rbf,
+            outputscale: 1.0,
+            lengthscales: vec![0.8; d],
+        };
+        let local = PivCholPrecond::build(
+            &ExactKernelRows {
+                kernel: &kernel,
+                x: &x,
+                d,
+            },
+            rank,
+            sigma2,
+        );
+        for c in 0..b {
+            let want = local.solve(&r[c * n..(c + 1) * n]);
+            for i in 0..n {
+                assert_eq!(z[c * n + i].to_bits(), want[i].to_bits(), "rhs {c} row {i}");
+            }
+        }
+        assert_eq!(worker.solved(), 1);
+        // A shard the worker does not hold errors remotely → None, the
+        // caller's signal to apply its local factor instead.
+        assert!(solver.solve_block(3, &r[..n], 1, rank, sigma2).is_none());
+        worker.shutdown();
+        // No workers configured → None without any dialing.
+        let empty = RemoteSolver::new(ClusterConfig::default());
+        assert!(empty.solve_block(0, &r[..n], 1, rank, sigma2).is_none());
     }
 
     #[test]

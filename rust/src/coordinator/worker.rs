@@ -3,7 +3,7 @@
 //!
 //! A [`ShardWorker`] holds replicas of one or more shard lattices and
 //! serves the coordinator's [`crate::coordinator::transport::TcpTransport`]
-//! over the length-prefixed JSON frame protocol of
+//! over the length-prefixed frame protocol of
 //! [`crate::coordinator::frame`] (normative spec: `docs/PROTOCOL.md`).
 //! It starts *empty*: the coordinator pushes each assigned shard's
 //! points and kernel with `refresh_shard`, the worker rebuilds the
@@ -12,17 +12,29 @@
 //! then on answers `shard_mvm_block` jobs with its shard's `b × n_p`
 //! rows and absorbs streaming `ingest` deltas in place.
 //!
+//! Each connection negotiates its payload encoding in `hello`
+//! (protocol v2): a v2 coordinator gets [`WireEncoding::Bin1`] raw-bits
+//! float payloads; a v1 peer keeps pure JSON. Hostile payloads inside
+//! intact framing are answered with an error frame and the connection
+//! keeps serving ([`FrameReader::read_frame_lenient`]); only framing
+//! violations drop the connection.
+//!
 //! Shard state is shared across connections, so a coordinator that
 //! bounces (or a network blip that forces a reconnect) finds its
 //! replicas still warm: the `hello` reply lists held shards with
 //! fingerprints and the coordinator skips `refresh_shard` for every
 //! replica that still matches.
 //!
-//! The worker is stateless with respect to the GP itself — it never
-//! sees targets, representer weights, or the preconditioner. It holds
-//! exactly what a `shard_mvm_block` needs: the shard lattice and its
-//! kernel. All aggregation (shard-order reassembly, cross-shard
-//! reductions, solves) stays on the coordinator.
+//! Since protocol v2 the worker also keeps each shard's raw *points*
+//! (it needs them anyway to have built the lattice), which lets it
+//! answer `shard_solve_block`: build the shard's rank-k pivoted-Cholesky
+//! factor from the stored points — `PivCholPrecond::build` is
+//! deterministic from `(x, kernel, rank, σ²)`, so the factor is bitwise
+//! the coordinator's — and apply it to a `b × n_p` residual block. The
+//! factor is cached per `(rank, σ²)` and invalidated by
+//! `refresh_shard`/`ingest`. The worker still never sees targets or
+//! representer weights; all cross-shard aggregation stays on the
+//! coordinator.
 
 use std::collections::BTreeMap;
 use std::io::Write as _;
@@ -33,11 +45,17 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use super::frame::{write_frame, FrameReader, DEFAULT_MAX_FRAME_BYTES, POLL_READ_TIMEOUT};
+use super::frame::{
+    write_frame_enc, FrameReader, WireEncoding, DEFAULT_MAX_FRAME_BYTES, POLL_READ_TIMEOUT,
+};
 use super::transport::{format_fp, PROTOCOL_VERSION};
 use crate::kernels::{ArdKernel, KernelFamily};
 use crate::lattice::PermutohedralLattice;
+use crate::solvers::precond::{ExactKernelRows, PivCholPrecond};
 use crate::util::json::Json;
+
+/// Reply fields shipped as raw blobs on `bin1` connections.
+const REPLY_BIN_FIELDS: &[&str] = &["u", "z"];
 
 /// Shard-worker configuration (CLI flags of the `shard-worker`
 /// subcommand; see also `[cluster] frame_mb`).
@@ -47,10 +65,16 @@ pub struct WorkerConfig {
     /// reported via [`ShardWorker::local_addr`]).
     pub listen: String,
     /// Frame payload cap in bytes (both directions). Must admit the
-    /// largest `refresh_shard` (≈ 25 bytes per coordinate) and
-    /// `shard_mvm_block` (≈ 25 bytes per float, `b × n_p` of them) the
-    /// deployment will see.
+    /// largest `refresh_shard` and `shard_mvm_block` the deployment
+    /// will see (8 bytes per float under `bin1`, ≈ 25 under JSON).
     pub max_frame_bytes: usize,
+    /// Highest protocol version this worker will accept in `hello`
+    /// (default [`PROTOCOL_VERSION`]). Setting 1 makes the worker
+    /// behave exactly like a pre-v2 build — it rejects a v2 `hello`,
+    /// forcing the coordinator down the JSON fallback — which is how
+    /// the mixed-fleet tests exercise negotiation without an old
+    /// binary.
+    pub max_protocol_version: u32,
 }
 
 impl Default for WorkerConfig {
@@ -58,15 +82,24 @@ impl Default for WorkerConfig {
         WorkerConfig {
             listen: "127.0.0.1:7900".to_string(),
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            max_protocol_version: PROTOCOL_VERSION,
         }
     }
 }
 
-/// One shard replica: the lattice plus the kernel it was built with
-/// (needed to absorb `ingest` deltas with identical arithmetic).
+/// One shard replica: the lattice, the kernel it was built with (needed
+/// to absorb `ingest` deltas with identical arithmetic), the raw points
+/// (needed to rebuild the per-shard preconditioner factor for
+/// `shard_solve_block`), and the factor cache.
 struct HeldShard {
     lattice: PermutohedralLattice,
     kernel: ArdKernel,
+    /// Row-major `n_p × d` points this replica was built from, kept in
+    /// coordinator row order (`refresh_shard` sets, `ingest` appends).
+    x: Vec<f64>,
+    /// Cached `(rank, σ².to_bits())`-keyed pivoted-Cholesky factor;
+    /// invalidated whenever the points change.
+    solver: Option<(usize, u64, PivCholPrecond)>,
     /// `shard_mvm_block` jobs answered from THIS replica (reset by
     /// `refresh_shard`). Distinguishes primary from hedged-backup
     /// traffic when a worker holds both roles for different shards —
@@ -74,11 +107,37 @@ struct HeldShard {
     served: u64,
 }
 
+impl HeldShard {
+    /// The shard's pivoted-Cholesky factor for `(rank, σ²)`, built on
+    /// demand from the stored points and cached until the next
+    /// refresh/ingest. Deterministic, so bitwise the factor the
+    /// coordinator would build from the same shard slice.
+    fn solver_for(&mut self, rank: usize, sigma2: f64) -> &PivCholPrecond {
+        let key = (rank, sigma2.to_bits());
+        let stale = match &self.solver {
+            Some((r, s, _)) => (*r, *s) != key,
+            None => true,
+        };
+        if stale {
+            let rows = ExactKernelRows {
+                kernel: &self.kernel,
+                x: &self.x,
+                d: self.lattice.d,
+            };
+            let factor = PivCholPrecond::build(&rows, rank, sigma2);
+            self.solver = Some((rank, sigma2.to_bits(), factor));
+        }
+        &self.solver.as_ref().unwrap().2
+    }
+}
+
 /// State shared by every connection: the held shard replicas and the
-/// served-jobs counter.
+/// served-jobs counters.
 struct WorkerState {
     shards: Mutex<BTreeMap<usize, HeldShard>>,
     served: AtomicU64,
+    solved: AtomicU64,
+    max_version: u32,
 }
 
 /// Running shard-worker handle (test and embedding entry point; the
@@ -103,6 +162,8 @@ impl ShardWorker {
         let state = Arc::new(WorkerState {
             shards: Mutex::new(BTreeMap::new()),
             served: AtomicU64::new(0),
+            solved: AtomicU64::new(0),
+            max_version: cfg.max_protocol_version,
         });
         let accept_stop = stop.clone();
         let accept_state = state.clone();
@@ -138,6 +199,11 @@ impl ShardWorker {
         self.state.served.load(Ordering::Relaxed)
     }
 
+    /// `shard_solve_block` jobs answered so far.
+    pub fn solved(&self) -> u64 {
+        self.state.solved.load(Ordering::Relaxed)
+    }
+
     /// Shard ids currently held (replicas synced by a coordinator).
     pub fn held_shards(&self) -> Vec<usize> {
         self.state.shards.lock().unwrap().keys().copied().collect()
@@ -167,7 +233,10 @@ impl ShardWorker {
 
 /// Serve one coordinator connection: framed request → framed reply,
 /// strictly in order (the transport relies on per-connection FIFO for
-/// ingest/mvm consistency).
+/// ingest/mvm consistency). Replies follow the encoding the connection's
+/// last successful `hello` negotiated (JSON until then). A well-framed
+/// but undecodable payload is answered with an error frame and the
+/// connection keeps serving; a framing violation ends it.
 fn serve_connection(
     stream: TcpStream,
     state: Arc<WorkerState>,
@@ -178,9 +247,32 @@ fn serve_connection(
     stream.set_read_timeout(Some(POLL_READ_TIMEOUT))?;
     let mut writer = stream.try_clone()?;
     let mut reader = FrameReader::new(stream, max_frame);
-    while let Some(req) = reader.read_frame(Some(&stop), None)? {
-        let reply = handle_op(&req, &state);
-        write_frame(&mut writer, &reply)?;
+    let mut enc = WireEncoding::Json;
+    while let Some(frame) = reader.read_frame_lenient(Some(&stop), None)? {
+        let reply = match frame {
+            Ok(req) => {
+                let reply = handle_op(&req, &state);
+                if req.get("op").and_then(|v| v.as_str()) == Some("hello") {
+                    if let Some(negotiated) = reply
+                        .get("encoding")
+                        .and_then(|v| v.as_str())
+                        .and_then(WireEncoding::parse)
+                    {
+                        enc = negotiated;
+                    }
+                }
+                reply
+            }
+            Err(reason) => {
+                let mut obj = BTreeMap::new();
+                obj.insert(
+                    "error".to_string(),
+                    Json::Str(format!("bad frame payload: {reason}")),
+                );
+                Json::Obj(obj)
+            }
+        };
+        write_frame_enc(&mut writer, &reply, enc, REPLY_BIN_FIELDS)?;
     }
     let _ = writer.flush();
     Ok(())
@@ -216,20 +308,40 @@ fn shard_status(p: usize, held: &HeldShard) -> Json {
 fn handle_op(req: &Json, state: &WorkerState) -> Json {
     match req.get("op").and_then(|v| v.as_str()) {
         Some("hello") => {
+            // Accept any version up to this worker's ceiling; the reply
+            // echoes the accepted version, so a v2 coordinator talking
+            // to a v1-era worker gets an error, retries `hello` at
+            // version 1, and the pair settles on JSON payloads
+            // (PROTOCOL.md §Versioning).
             let version = req.get("version").and_then(|v| v.as_f64());
-            if version != Some(PROTOCOL_VERSION as f64) {
+            let accepted = version
+                .filter(|v| v.fract() == 0.0 && *v >= 1.0 && *v <= state.max_version as f64)
+                .map(|v| v as u32);
+            let Some(accepted) = accepted else {
                 return err_reply(
                     req,
                     format!(
                         "protocol version mismatch: coordinator speaks {version:?}, \
-                         worker speaks {PROTOCOL_VERSION}"
+                         worker speaks <= {}",
+                        state.max_version
                     ),
                 );
-            }
+            };
+            // bin1 exists only from v2 on; unknown encodings negotiate
+            // down to JSON rather than failing the handshake.
+            let encoding = if accepted >= 2 {
+                req.get("encoding")
+                    .and_then(|v| v.as_str())
+                    .and_then(WireEncoding::parse)
+                    .unwrap_or(WireEncoding::Json)
+            } else {
+                WireEncoding::Json
+            };
             let shards = state.shards.lock().unwrap();
             let mut obj = BTreeMap::new();
             obj.insert("ok".to_string(), Json::Num(1.0));
-            obj.insert("version".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+            obj.insert("version".to_string(), Json::Num(accepted as f64));
+            obj.insert("encoding".to_string(), Json::Str(encoding.as_str().to_string()));
             obj.insert(
                 "shards".to_string(),
                 Json::Arr(shards.iter().map(|(p, h)| shard_status(*p, h)).collect()),
@@ -244,6 +356,10 @@ fn handle_op(req: &Json, state: &WorkerState) -> Json {
             Ok(reply) => reply,
             Err(e) => err_reply(req, e.to_string()),
         },
+        Some("shard_solve_block") => match shard_solve_block(req, state) {
+            Ok(reply) => reply,
+            Err(e) => err_reply(req, e.to_string()),
+        },
         Some("ingest") => match ingest(req, state) {
             Ok(reply) => reply,
             Err(e) => err_reply(req, e.to_string()),
@@ -252,10 +368,14 @@ fn handle_op(req: &Json, state: &WorkerState) -> Json {
             let shards = state.shards.lock().unwrap();
             let mut obj = BTreeMap::new();
             obj.insert("ok".to_string(), Json::Num(1.0));
-            obj.insert("version".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+            obj.insert("version".to_string(), Json::Num(state.max_version as f64));
             obj.insert(
                 "served".to_string(),
                 Json::Num(state.served.load(Ordering::Relaxed) as f64),
+            );
+            obj.insert(
+                "solved".to_string(),
+                Json::Num(state.solved.load(Ordering::Relaxed) as f64),
             );
             obj.insert(
                 "shards".to_string(),
@@ -265,7 +385,8 @@ fn handle_op(req: &Json, state: &WorkerState) -> Json {
         }
         _ => err_reply(
             req,
-            "unknown op (use hello | refresh_shard | shard_mvm_block | ingest | stats)"
+            "unknown op (use hello | refresh_shard | shard_mvm_block | shard_solve_block \
+             | ingest | stats)"
                 .to_string(),
         ),
     }
@@ -327,6 +448,8 @@ fn refresh_shard(req: &Json, state: &WorkerState) -> Result<Json> {
     let held = HeldShard {
         lattice,
         kernel,
+        x,
+        solver: None,
         served: 0,
     };
     let reply = ok_shard_reply(shard, &held, None);
@@ -385,10 +508,77 @@ fn shard_mvm_block(req: &Json, state: &WorkerState) -> Result<Json> {
     Ok(Json::Obj(obj))
 }
 
+/// Apply the shard's `(rank, σ²)` pivoted-Cholesky preconditioner
+/// factor to a row-major `b × n_p` residual block. The factor is built
+/// from the replica's stored points with exactly the arithmetic of
+/// `ShardedPivCholPrecond::build` on the coordinator's shard slice, so
+/// `z` is bitwise what the coordinator's own per-shard solve would
+/// produce — the offload changes *where* the solve runs, never its
+/// bits. Same strict length rule as `shard_mvm_block`.
+fn shard_solve_block(req: &Json, state: &WorkerState) -> Result<Json> {
+    let shard = req
+        .get("shard")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("shard_solve_block needs shard"))?;
+    let job = req
+        .get("job")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("shard_solve_block needs job"))?;
+    let b = req
+        .get("b")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("shard_solve_block needs b"))?;
+    if b == 0 {
+        return Err(anyhow!("b must be >= 1"));
+    }
+    let rank = req
+        .get("rank")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("shard_solve_block needs rank"))?;
+    if rank == 0 {
+        return Err(anyhow!("rank must be >= 1"));
+    }
+    let sigma2 = req
+        .get("sigma2")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("shard_solve_block needs sigma2"))?;
+    if !sigma2.is_finite() || sigma2 < 0.0 {
+        return Err(anyhow!("sigma2 must be finite and >= 0"));
+    }
+    let r = req
+        .get("r")
+        .and_then(|v| v.to_f64_vec())
+        .ok_or_else(|| anyhow!("shard_solve_block needs r"))?;
+    let mut shards = state.shards.lock().unwrap();
+    let held = shards
+        .get_mut(&shard)
+        .ok_or_else(|| anyhow!("shard {shard} not held (refresh_shard first)"))?;
+    let np = held.lattice.n;
+    if r.len() != b * np {
+        return Err(anyhow!(
+            "block length {} != b × n_p = {b} × {np} (replica stale?)",
+            r.len()
+        ));
+    }
+    let factor = held.solver_for(rank, sigma2);
+    let mut z = Vec::with_capacity(b * np);
+    for c in 0..b {
+        z.extend_from_slice(&factor.solve(&r[c * np..(c + 1) * np]));
+    }
+    state.solved.fetch_add(1, Ordering::Relaxed);
+    let mut obj = BTreeMap::new();
+    obj.insert("job".to_string(), Json::Num(job));
+    obj.insert("shard".to_string(), Json::Num(shard as f64));
+    obj.insert("z".to_string(), Json::num_array(&z));
+    Ok(Json::Obj(obj))
+}
+
 /// Absorb a streaming-ingest delta into the shard replica (same
 /// incremental patch as the coordinator's own
 /// [`PermutohedralLattice::ingest`], hence the same resulting bits —
-/// the reply fingerprint proves it).
+/// the reply fingerprint proves it). Appends the delta to the stored
+/// points and drops the cached solver factor — the shard's kernel
+/// matrix grew, so the old factor is stale by construction.
 fn ingest(req: &Json, state: &WorkerState) -> Result<Json> {
     let shard = req
         .get("shard")
@@ -411,6 +601,8 @@ fn ingest(req: &Json, state: &WorkerState) -> Result<Json> {
     }
     let kernel = held.kernel.clone();
     let new_keys = held.lattice.ingest(&x, &kernel);
+    held.x.extend_from_slice(&x);
+    held.solver = None;
     Ok(ok_shard_reply(shard, held, Some(new_keys)))
 }
 
@@ -433,6 +625,7 @@ fn ok_shard_reply(shard: usize, held: &HeldShard, new_keys: Option<usize>) -> Js
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::frame::{write_frame, write_payload};
     use crate::util::Pcg64;
     use std::time::Instant;
 
@@ -449,6 +642,8 @@ mod tests {
         WorkerState {
             shards: Mutex::new(BTreeMap::new()),
             served: AtomicU64::new(0),
+            solved: AtomicU64::new(0),
+            max_version: PROTOCOL_VERSION,
         }
     }
 
@@ -470,9 +665,18 @@ mod tests {
         ])
     }
 
+    fn test_kernel(d: usize) -> ArdKernel {
+        ArdKernel {
+            family: KernelFamily::Rbf,
+            outputscale: 1.0,
+            lengthscales: vec![0.8; d],
+        }
+    }
+
     #[test]
-    fn hello_checks_version_and_lists_shards() {
+    fn hello_negotiates_version_and_encoding() {
         let state = fresh_state();
+        // Future/garbage versions are rejected.
         let bad = handle_op(
             &req(vec![
                 ("op", Json::Str("hello".to_string())),
@@ -481,15 +685,64 @@ mod tests {
             &state,
         );
         assert!(bad.get("error").is_some());
+        // v2 + bin1 → bin1.
         let ok = handle_op(
             &req(vec![
                 ("op", Json::Str("hello".to_string())),
-                ("version", Json::Num(PROTOCOL_VERSION as f64)),
+                ("version", Json::Num(2.0)),
+                ("encoding", Json::Str("bin1".to_string())),
             ]),
             &state,
         );
         assert_eq!(ok.get("ok").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(ok.get("version").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(ok.get("encoding").and_then(|v| v.as_str()), Some("bin1"));
         assert_eq!(ok.get("shards").and_then(|v| v.as_arr()).unwrap().len(), 0);
+        // v1 peers never get binary, whatever they ask for.
+        let v1 = handle_op(
+            &req(vec![
+                ("op", Json::Str("hello".to_string())),
+                ("version", Json::Num(1.0)),
+                ("encoding", Json::Str("bin1".to_string())),
+            ]),
+            &state,
+        );
+        assert_eq!(v1.get("version").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(v1.get("encoding").and_then(|v| v.as_str()), Some("json"));
+        // Unknown encodings negotiate down to JSON.
+        let odd = handle_op(
+            &req(vec![
+                ("op", Json::Str("hello".to_string())),
+                ("version", Json::Num(2.0)),
+                ("encoding", Json::Str("gzip".to_string())),
+            ]),
+            &state,
+        );
+        assert_eq!(odd.get("encoding").and_then(|v| v.as_str()), Some("json"));
+        // A v1-era worker (max_protocol_version = 1) rejects a v2 hello —
+        // the trigger for the coordinator's JSON fallback.
+        let legacy = WorkerState {
+            max_version: 1,
+            ..fresh_state()
+        };
+        let rejected = handle_op(
+            &req(vec![
+                ("op", Json::Str("hello".to_string())),
+                ("version", Json::Num(2.0)),
+                ("encoding", Json::Str("bin1".to_string())),
+            ]),
+            &legacy,
+        );
+        assert!(rejected.get("error").is_some());
+        let downgraded = handle_op(
+            &req(vec![
+                ("op", Json::Str("hello".to_string())),
+                ("version", Json::Num(1.0)),
+            ]),
+            &legacy,
+        );
+        assert_eq!(downgraded.get("ok").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(downgraded.get("encoding").and_then(|v| v.as_str()), Some("json"));
     }
 
     #[test]
@@ -500,11 +753,7 @@ mod tests {
         let state = fresh_state();
         let reply = handle_op(&refresh_req(2, d, &x), &state);
         assert_eq!(reply.get("ok").and_then(|v| v.as_f64()), Some(1.0), "{reply}");
-        let k = ArdKernel {
-            family: KernelFamily::Rbf,
-            outputscale: 1.0,
-            lengthscales: vec![0.8; d],
-        };
+        let k = test_kernel(d);
         let direct_lat = PermutohedralLattice::build(&x, d, &k, 1);
         assert_eq!(
             reply.get("fingerprint").and_then(|v| v.as_str()),
@@ -532,6 +781,130 @@ mod tests {
     }
 
     #[test]
+    fn solve_block_matches_local_factor_bitwise() {
+        let d = 2;
+        let n = 36;
+        let (rank, sigma2) = (10usize, 0.05);
+        let mut rng = Pcg64::new(21);
+        let x = rng.normal_vec(n * d);
+        let state = fresh_state();
+        handle_op(&refresh_req(0, d, &x), &state);
+        let b = 3;
+        let r = rng.normal_vec(n * b);
+        let solve_req = |r: &[f64]| {
+            req(vec![
+                ("op", Json::Str("shard_solve_block".to_string())),
+                ("shard", Json::Num(0.0)),
+                ("job", Json::Num(5.0)),
+                ("b", Json::Num(b as f64)),
+                ("rank", Json::Num(rank as f64)),
+                ("sigma2", Json::Num(sigma2)),
+                ("r", Json::num_array(r)),
+            ])
+        };
+        let reply = handle_op(&solve_req(&r), &state);
+        let z = reply.get("z").and_then(|z| z.to_f64_vec()).unwrap_or_default();
+        assert_eq!(z.len(), n * b, "{reply}");
+        // The worker's factor must be bitwise the coordinator's build on
+        // the same points — and the per-RHS application too.
+        let k = test_kernel(d);
+        let local = PivCholPrecond::build(
+            &ExactKernelRows { kernel: &k, x: &x, d },
+            rank,
+            sigma2,
+        );
+        for c in 0..b {
+            let want = local.solve(&r[c * n..(c + 1) * n]);
+            for i in 0..n {
+                assert_eq!(z[c * n + i].to_bits(), want[i].to_bits(), "rhs {c} row {i}");
+            }
+        }
+        assert_eq!(state.solved.load(Ordering::Relaxed), 1);
+        // Second call hits the cached factor and stays bit-identical.
+        let again = handle_op(&solve_req(&r), &state);
+        assert_eq!(again.get("z").unwrap().to_f64_vec().unwrap(), z);
+        // Ingest invalidates the cache: the next solve reflects the
+        // grown shard, matching a fresh local factor on all points.
+        let extra = rng.normal_vec(4 * d);
+        handle_op(
+            &req(vec![
+                ("op", Json::Str("ingest".to_string())),
+                ("shard", Json::Num(0.0)),
+                ("x", Json::num_array(&extra)),
+            ]),
+            &state,
+        );
+        let n2 = n + 4;
+        let r2 = rng.normal_vec(n2);
+        let reply2 = handle_op(
+            &req(vec![
+                ("op", Json::Str("shard_solve_block".to_string())),
+                ("shard", Json::Num(0.0)),
+                ("job", Json::Num(6.0)),
+                ("b", Json::Num(1.0)),
+                ("rank", Json::Num(rank as f64)),
+                ("sigma2", Json::Num(sigma2)),
+                ("r", Json::num_array(&r2)),
+            ]),
+            &state,
+        );
+        let z2 = reply2.get("z").and_then(|z| z.to_f64_vec()).unwrap();
+        let mut x_full = x.clone();
+        x_full.extend_from_slice(&extra);
+        let local2 = PivCholPrecond::build(
+            &ExactKernelRows { kernel: &k, x: &x_full, d },
+            rank,
+            sigma2,
+        );
+        let want2 = local2.solve(&r2);
+        for i in 0..n2 {
+            assert_eq!(z2[i].to_bits(), want2[i].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn solve_block_validates_lengths_and_params() {
+        let d = 2;
+        let mut rng = Pcg64::new(23);
+        let x = rng.normal_vec(20 * d);
+        let state = fresh_state();
+        handle_op(&refresh_req(0, d, &x), &state);
+        let base = |over: Vec<(&str, Json)>| {
+            let mut parts = vec![
+                ("op", Json::Str("shard_solve_block".to_string())),
+                ("shard", Json::Num(0.0)),
+                ("job", Json::Num(1.0)),
+                ("b", Json::Num(1.0)),
+                ("rank", Json::Num(8.0)),
+                ("sigma2", Json::Num(0.1)),
+                ("r", Json::num_array(&[0.0; 20])),
+            ];
+            for (k, v) in over {
+                if let Some(slot) = parts.iter_mut().find(|(name, _)| *name == k) {
+                    slot.1 = v;
+                } else {
+                    parts.push((k, v));
+                }
+            }
+            req(parts)
+        };
+        // Wrong block length (stale-replica signature).
+        let bad =
+            handle_op(&base(vec![("r", Json::num_array(&[0.0; 21]))]), &state);
+        assert!(bad.get("error").is_some(), "{bad}");
+        assert_eq!(bad.get("job").and_then(|v| v.as_f64()), Some(1.0));
+        // Unknown shard.
+        let bad = handle_op(&base(vec![("shard", Json::Num(9.0))]), &state);
+        assert!(bad.get("error").is_some());
+        // Bad rank / sigma2.
+        let bad = handle_op(&base(vec![("rank", Json::Num(0.0))]), &state);
+        assert!(bad.get("error").is_some());
+        let bad = handle_op(&base(vec![("sigma2", Json::Num(f64::NAN))]), &state);
+        assert!(bad.get("error").is_some());
+        assert_eq!(state.solved.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
     fn ingest_patches_replica_to_rebuild_fingerprint() {
         let d = 2;
         let mut rng = Pcg64::new(9);
@@ -548,16 +921,16 @@ mod tests {
         );
         assert_eq!(reply.get("ok").and_then(|v| v.as_f64()), Some(1.0), "{reply}");
         assert_eq!(reply.get("n").and_then(|v| v.as_f64()), Some(50.0));
-        let k = ArdKernel {
-            family: KernelFamily::Rbf,
-            outputscale: 1.0,
-            lengthscales: vec![0.8; d],
-        };
+        let k = test_kernel(d);
         let full = PermutohedralLattice::build(&x, d, &k, 1);
         assert_eq!(
             reply.get("fingerprint").and_then(|v| v.as_str()),
             Some(format_fp(full.fingerprint()).as_str())
         );
+        // The stored points track the ingest (what shard_solve_block
+        // builds factors from).
+        let shards = state.shards.lock().unwrap();
+        assert_eq!(shards.get(&0).unwrap().x, x);
     }
 
     #[test]
@@ -611,7 +984,10 @@ mod tests {
 
     #[test]
     fn worker_serves_frames_over_loopback() {
-        // End-to-end over a real socket: hello → refresh → mvm.
+        // End-to-end over a real socket: hello → refresh → mvm, all on
+        // a v2/bin1 connection — requests and replies both carry their
+        // float payloads as raw blobs and the rows stay bit-identical
+        // to a direct local filter.
         let worker = ShardWorker::start(WorkerConfig {
             listen: "127.0.0.1:0".to_string(),
             ..WorkerConfig::default()
@@ -631,22 +1007,30 @@ mod tests {
             &req(vec![
                 ("op", Json::Str("hello".to_string())),
                 ("version", Json::Num(PROTOCOL_VERSION as f64)),
+                ("encoding", Json::Str("bin1".to_string())),
             ]),
         )
         .unwrap();
         let hello = reader.read_frame(None, deadline()).unwrap().unwrap();
         assert_eq!(hello.get("ok").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(hello.get("encoding").and_then(|v| v.as_str()), Some("bin1"));
 
         let d = 2;
         let mut rng = Pcg64::new(13);
         let x = rng.normal_vec(25 * d);
-        write_frame(&mut writer, &refresh_req(1, d, &x)).unwrap();
+        write_frame_enc(
+            &mut writer,
+            &refresh_req(1, d, &x),
+            WireEncoding::Bin1,
+            &["x"],
+        )
+        .unwrap();
         let refreshed = reader.read_frame(None, deadline()).unwrap().unwrap();
         assert_eq!(refreshed.get("ok").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(worker.held_shards(), vec![1]);
 
         let v = rng.normal_vec(25);
-        write_frame(
+        write_frame_enc(
             &mut writer,
             &req(vec![
                 ("op", Json::Str("shard_mvm_block".to_string())),
@@ -655,15 +1039,13 @@ mod tests {
                 ("b", Json::Num(1.0)),
                 ("v", Json::num_array(&v)),
             ]),
+            WireEncoding::Bin1,
+            &["v"],
         )
         .unwrap();
         let reply = reader.read_frame(None, deadline()).unwrap().unwrap();
         let u = reply.get("u").and_then(|u| u.to_f64_vec()).unwrap();
-        let k = ArdKernel {
-            family: KernelFamily::Rbf,
-            outputscale: 1.0,
-            lengthscales: vec![0.8; d],
-        };
+        let k = test_kernel(d);
         let direct = PermutohedralLattice::build(&x, d, &k, 1).filter_block(&v, 1);
         for i in 0..25 {
             assert_eq!(u[i].to_bits(), direct[i].to_bits(), "row {i}");
@@ -671,6 +1053,51 @@ mod tests {
         assert_eq!(worker.served(), 1);
         assert_eq!(worker.served_for(1), 1);
         assert_eq!(worker.served_for(0), 0);
+        worker.shutdown();
+    }
+
+    #[test]
+    fn hostile_payload_gets_error_frame_and_connection_survives() {
+        // A well-framed but undecodable payload (truncated bin1 blob)
+        // must come back as a clean error frame — and the very same
+        // connection must still answer the next request.
+        let worker = ShardWorker::start(WorkerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            ..WorkerConfig::default()
+        })
+        .unwrap();
+        let stream = TcpStream::connect(worker.local_addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream.set_read_timeout(Some(POLL_READ_TIMEOUT)).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = FrameReader::new(stream, DEFAULT_MAX_FRAME_BYTES);
+        let deadline = || Some(Instant::now() + Duration::from_secs(10));
+
+        // Header claims a 2-element blob; only 9 bytes follow.
+        write_payload(
+            &mut writer,
+            b"{\"bin\":{\"v\":2},\"op\":\"shard_mvm_block\"}\n123456789",
+        )
+        .unwrap();
+        let reply = reader.read_frame(None, deadline()).unwrap().unwrap();
+        assert!(
+            reply
+                .get("error")
+                .and_then(|e| e.as_str())
+                .is_some_and(|e| e.contains("bad frame payload")),
+            "{reply}"
+        );
+
+        write_frame(
+            &mut writer,
+            &req(vec![
+                ("op", Json::Str("hello".to_string())),
+                ("version", Json::Num(PROTOCOL_VERSION as f64)),
+            ]),
+        )
+        .unwrap();
+        let hello = reader.read_frame(None, deadline()).unwrap().unwrap();
+        assert_eq!(hello.get("ok").and_then(|v| v.as_f64()), Some(1.0));
         worker.shutdown();
     }
 }

@@ -2,12 +2,15 @@
 //! permutohedral-lattice MVM inside the BBMM machinery (CG for solves,
 //! SLQ for log-determinants).
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use crate::kernels::ArdKernel;
 use crate::mvm::{MvmOperator, Shifted, ShardedMvm};
 use crate::solvers::{
-    cg_block_precond, slq_logdet, CgOptions, Precond, ShardedPivCholPrecond,
+    cg_block_precond, slq_logdet, CgOptions, OffloadedPrecond, Precond, ShardSolveHook,
+    ShardedPivCholPrecond,
 };
 
 /// Inference-time configuration (defaults mirror the paper's Table 5).
@@ -67,6 +70,14 @@ pub struct SimplexGp {
     /// `config.precond_rank == 0`); built once at fit time and reused by
     /// every predictive-variance solve.
     precond: Option<ShardedPivCholPrecond>,
+    /// Optional solve-offload hook (protocol v2): when set — the
+    /// coordinator installs a
+    /// [`crate::coordinator::transport::RemoteSolver`] when remote
+    /// workers are configured — every preconditioner application is
+    /// offered to the hook first (the worker holding the shard replica
+    /// runs it) and falls back to the local factor shard by shard,
+    /// byte-identically either way ([`OffloadedPrecond`]).
+    solve_hook: Option<Arc<dyn ShardSolveHook + Send + Sync>>,
     alpha: Vec<f64>,
     /// Per-shard Blur(Splat(α)) cached at fit time: prediction then only
     /// embeds and slices the test points — O(t·d²) per request instead
@@ -143,8 +154,13 @@ impl SimplexGp {
             }
             None => None,
         };
-        let (alpha, fit_iterations) =
-            Self::solve_alpha(&op, precond.as_ref(), y, noise, &config);
+        let (alpha, fit_iterations) = Self::solve_alpha(
+            &op,
+            precond.as_ref().map(|pc| pc as &dyn Precond),
+            y,
+            noise,
+            &config,
+        );
         let z_pred = op.lattice.splat_blur(&alpha, 1);
         Ok(SimplexGp {
             kernel,
@@ -155,6 +171,7 @@ impl SimplexGp {
             config,
             op,
             precond,
+            solve_hook: None,
             alpha,
             z_pred,
             fit_iterations,
@@ -168,7 +185,7 @@ impl SimplexGp {
     /// `rust/tests/precond_equivalence.rs`).
     fn solve_alpha(
         op: &ShardedMvm,
-        precond: Option<&ShardedPivCholPrecond>,
+        precond: Option<&dyn Precond>,
         y: &[f64],
         noise: f64,
         config: &GpConfig,
@@ -179,14 +196,15 @@ impl SimplexGp {
             max_iters: config.cg_max_iters,
             min_iters: 1,
         };
-        let res = cg_block_precond(
-            &shifted,
-            y,
-            1,
-            opts,
-            precond.map(|pc| pc as &dyn Precond),
-        );
+        let res = cg_block_precond(&shifted, y, 1, opts, precond);
         (res.x, res.iterations)
+    }
+
+    /// Install (or clear) the solve-offload hook consulted by every
+    /// preconditioner application from now on. With `precond_rank = 0`
+    /// there is no preconditioner and the hook is never consulted.
+    pub fn set_solve_hook(&mut self, hook: Option<Arc<dyn ShardSolveHook + Send + Sync>>) {
+        self.solve_hook = hook;
     }
 
     /// Streaming ingest: absorb `(x_new, y_new)` into the fitted model
@@ -238,9 +256,18 @@ impl SimplexGp {
                 bounds,
             );
         }
+        let off;
+        let pc: Option<&dyn Precond> = match (&self.precond, self.solve_hook.as_deref()) {
+            (Some(local), Some(hook)) => {
+                off = OffloadedPrecond::new(local, hook, self.config.precond_rank, self.noise);
+                Some(&off)
+            }
+            (Some(local), None) => Some(local),
+            (None, _) => None,
+        };
         let (alpha, iters) = Self::solve_alpha(
             &self.op,
-            self.precond.as_ref(),
+            pc,
             &self.y_train,
             self.noise,
             &self.config,
@@ -270,10 +297,39 @@ impl SimplexGp {
         self.config.precond_rank
     }
 
+    /// The per-shard preconditioner factors, when preconditioning is on
+    /// (coordinator access: the solve-offload path wraps these in an
+    /// [`OffloadedPrecond`]).
+    pub fn precond(&self) -> Option<&ShardedPivCholPrecond> {
+        self.precond.as_ref()
+    }
+
     /// The underlying (sharded) lattice operator (coordinator and
     /// benchmark access).
     pub fn operator(&self) -> &ShardedMvm {
         &self.op
+    }
+
+    /// Drop shard `p`'s lattice from memory, keeping metadata
+    /// ([`crate::lattice::ShardedLattice::shed_shard`]). Returns the
+    /// bytes freed. The serving coordinator's `shed_shards` mode uses
+    /// this for shards whose MVMs execute on a remote worker.
+    pub fn shed_shard(&mut self, p: usize) -> usize {
+        self.op.lattice.shed_shard(p)
+    }
+
+    /// Rebuild a shed shard's lattice from the model's own training
+    /// points and kernel — fingerprint-verified against the metadata
+    /// retained at shed time, so the result is bitwise the lattice that
+    /// was dropped. No-op for a resident shard.
+    pub fn rebuild_shard(&mut self, p: usize) {
+        if !self.op.lattice.is_shed(p) {
+            return;
+        }
+        let d = self.d;
+        let r = self.op.lattice.shard_range(p);
+        let x_p = self.x_train[r.start * d..r.end * d].to_vec();
+        self.op.lattice.rebuild_shard(p, &x_p, &self.kernel);
     }
 
     /// Representer weights α.
@@ -307,6 +363,29 @@ impl SimplexGp {
     /// Krylov iteration is a single lattice traversal shared by the
     /// whole chunk.
     pub fn predict(&self, x_star: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let off;
+        let pc: Option<&dyn Precond> = match (&self.precond, self.solve_hook.as_deref()) {
+            (Some(local), Some(hook)) => {
+                off = OffloadedPrecond::new(local, hook, self.config.precond_rank, self.noise);
+                Some(&off)
+            }
+            (Some(local), None) => Some(local),
+            (None, _) => None,
+        };
+        self.predict_with_precond(x_star, pc)
+    }
+
+    /// [`SimplexGp::predict`] with an explicit preconditioner for the
+    /// variance-column solves (`None` = unpreconditioned CG). This is
+    /// the entry point the solve-offload path uses — passing an
+    /// [`OffloadedPrecond`] moves the per-shard factor applications to
+    /// the workers holding the replicas without changing a single bit
+    /// of the result.
+    pub fn predict_with_precond(
+        &self,
+        x_star: &[f64],
+        pc: Option<&dyn Precond>,
+    ) -> (Vec<f64>, Vec<f64>) {
         let t = x_star.len() / self.d;
         let mut var = vec![0.0; t];
         let lat = &self.op.lattice;
@@ -341,7 +420,7 @@ impl SimplexGp {
                     max_iters: self.config.cg_max_iters,
                     min_iters: 1,
                 },
-                self.precond.as_ref().map(|pc| pc as &dyn Precond),
+                pc,
             );
             for (c, i) in (c0..c1).enumerate() {
                 // dot over the full rows is Σ_p k*ᵖᵀ(K̃ₚ+σ²I)⁻¹k*ᵖ on

@@ -13,7 +13,7 @@ pub mod filter;
 pub mod hash;
 pub mod shard;
 
-pub use shard::{IngestOutcome, ShardedLattice};
+pub use shard::{IngestOutcome, ShardedLattice, ShedMeta};
 
 use crate::kernels::ArdKernel;
 use crate::stencil::Stencil;

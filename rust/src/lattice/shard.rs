@@ -82,6 +82,25 @@ pub struct IngestOutcome {
     pub new_lattice_keys: usize,
 }
 
+/// Metadata retained for a shard whose lattice has been *shed* (dropped
+/// from memory while a remote worker holds the authoritative replica —
+/// the coordinator's `shed_shards` mode, `docs/DEPLOYMENT.md`). Enough
+/// to answer structural queries ([`ShardedLattice::shard_m`],
+/// [`ShardedLattice::shard_fingerprint`]) and to verify a later
+/// [`ShardedLattice::rebuild_shard`] reproduced the identical lattice.
+#[derive(Clone, Copy, Debug)]
+pub struct ShedMeta {
+    /// Points the shard lattice held.
+    pub n: usize,
+    /// Lattice points the shard lattice held.
+    pub m: usize,
+    /// Structural fingerprint of the dropped lattice
+    /// ([`PermutohedralLattice::fingerprint`]).
+    pub fingerprint: u64,
+    /// Bytes the dropped lattice occupied (what shedding freed).
+    pub freed_bytes: usize,
+}
+
 /// P independent per-shard lattices over a contiguous partition of the
 /// training points, presenting the same MVM surface as a single
 /// [`PermutohedralLattice`] (plus per-shard entry points for the
@@ -102,6 +121,11 @@ pub struct ShardedLattice {
     /// ([`crate::solvers::ShardedPivCholPrecond`]) — partitions against
     /// this same vector.
     pub bounds: Vec<usize>,
+    /// Per-shard shed state: `Some(meta)` when the shard's lattice has
+    /// been dropped ([`ShardedLattice::shed_shard`]) and a placeholder
+    /// sits in `shards[p]`. Local compute on a shed shard is a
+    /// programming error (asserted); the coordinator rebuilds first.
+    shed: Vec<Option<ShedMeta>>,
 }
 
 impl ShardedLattice {
@@ -136,12 +160,126 @@ impl ShardedLattice {
             n,
             shards: lats,
             bounds,
+            shed: vec![None; p],
         }
     }
 
     /// Number of shards P.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Whether shard `p`'s lattice has been shed
+    /// ([`ShardedLattice::shed_shard`]).
+    pub fn is_shed(&self, p: usize) -> bool {
+        self.shed[p].is_some()
+    }
+
+    /// Number of currently-shed shards.
+    pub fn shed_count(&self) -> usize {
+        self.shed.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Points held by shard `p` (from shed metadata when the shard's
+    /// lattice has been dropped).
+    pub fn shard_n(&self, p: usize) -> usize {
+        match &self.shed[p] {
+            Some(meta) => meta.n,
+            None => self.shards[p].n,
+        }
+    }
+
+    /// Lattice points of shard `p` (from shed metadata when shed).
+    pub fn shard_m(&self, p: usize) -> usize {
+        match &self.shed[p] {
+            Some(meta) => meta.m,
+            None => self.shards[p].m,
+        }
+    }
+
+    /// Structural fingerprint of shard `p`'s lattice
+    /// ([`PermutohedralLattice::fingerprint`]) — answered from shed
+    /// metadata when the lattice itself is no longer resident, so the
+    /// shard transport can verify remote replicas without forcing a
+    /// rebuild.
+    pub fn shard_fingerprint(&self, p: usize) -> u64 {
+        match &self.shed[p] {
+            Some(meta) => meta.fingerprint,
+            None => self.shards[p].fingerprint(),
+        }
+    }
+
+    /// Drop shard `p`'s lattice from memory, keeping only [`ShedMeta`]
+    /// (size, fingerprint) and a zero-point placeholder that preserves
+    /// the stencil. Returns the bytes freed (0 if already shed).
+    ///
+    /// Used by the serving coordinator's `shed_shards` mode: a shard
+    /// whose MVMs execute on a remote worker does not need a local
+    /// replica, so the coordinator drops it and rebuilds on demand
+    /// ([`ShardedLattice::rebuild_shard`]) only when the remote link
+    /// fails. Local compute entry points assert against shed shards.
+    pub fn shed_shard(&mut self, p: usize) -> usize {
+        if self.shed[p].is_some() {
+            return 0;
+        }
+        let lat = &self.shards[p];
+        let meta = ShedMeta {
+            n: lat.n,
+            m: lat.m,
+            fingerprint: lat.fingerprint(),
+            freed_bytes: lat.storage_bytes(),
+        };
+        let placeholder = PermutohedralLattice::from_raw_parts(
+            self.d,
+            0,
+            0,
+            lat.stencil.clone(),
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+        );
+        self.shards[p] = placeholder;
+        self.shed[p] = Some(meta);
+        meta.freed_bytes
+    }
+
+    /// Rebuild a shed shard's lattice from its own points (`x_p`,
+    /// row-major `n_p × d` — the shard's slice of the training set).
+    /// The rebuild is [`PermutohedralLattice::build`] on exactly the
+    /// points the original was built/ingested from, which is
+    /// fingerprint-identical to what was dropped — asserted against the
+    /// retained [`ShedMeta`], so a coordinator bug (wrong slice, stale
+    /// hyperparameters) cannot silently serve from a different lattice.
+    pub fn rebuild_shard(&mut self, p: usize, x_p: &[f64], kernel: &ArdKernel) {
+        let meta = match self.shed[p] {
+            Some(meta) => meta,
+            None => return,
+        };
+        assert_eq!(
+            x_p.len(),
+            meta.n * self.d,
+            "rebuild_shard: shard {p} expects {} points",
+            meta.n
+        );
+        let order = self.order();
+        let lat = PermutohedralLattice::build(x_p, self.d, kernel, order);
+        assert_eq!(
+            lat.fingerprint(),
+            meta.fingerprint,
+            "rebuild_shard: shard {p} rebuild fingerprint mismatch \
+             (wrong points or hyperparameters?)"
+        );
+        self.shards[p] = lat;
+        self.shed[p] = None;
+    }
+
+    /// Assert every shard lattice is resident — the precondition for
+    /// whole-operator paths (full MVM, prediction, ingest) that read
+    /// shard lattices directly.
+    fn assert_all_resident(&self, what: &str) {
+        if let Some(p) = (0..self.shed.len()).find(|&p| self.shed[p].is_some()) {
+            panic!("{what}: shard {p} is shed; rebuild it first");
+        }
     }
 
     /// Streaming ingest: append `x` (row-major `k × d`) to exactly one
@@ -167,8 +305,12 @@ impl ShardedLattice {
         assert_eq!(x.len() % self.d, 0, "x length not a multiple of d");
         let rows = x.len() / self.d;
         let shard = (0..self.shards.len())
-            .min_by_key(|&p| self.shards[p].n)
+            .min_by_key(|&p| self.shard_n(p))
             .expect("at least one shard");
+        assert!(
+            !self.is_shed(shard),
+            "ingest: target shard {shard} is shed; rebuild it first"
+        );
         let new_lattice_keys = self.shards[shard].ingest(x, kernel);
         let row_start = self.bounds[shard + 1];
         for b in self.bounds[shard + 1..].iter_mut() {
@@ -189,9 +331,10 @@ impl ShardedLattice {
     }
 
     /// Total lattice points across shards (the sharded analog of a
-    /// single lattice's `m`).
+    /// single lattice's `m`). A logical quantity: shed shards count via
+    /// their retained metadata.
     pub fn m(&self) -> usize {
-        self.shards.iter().map(|l| l.m).sum()
+        (0..self.shards.len()).map(|p| self.shard_m(p)).sum()
     }
 
     /// Blur order r (identical across shards: one stencil).
@@ -204,7 +347,9 @@ impl ShardedLattice {
         self.m() as f64 / (self.n as f64 * (self.d as f64 + 1.0))
     }
 
-    /// Bytes held by all shard lattices.
+    /// Bytes held by all *resident* shard lattices — shed shards
+    /// contribute only their (near-zero) placeholder, which is the
+    /// point of shedding.
     pub fn storage_bytes(&self) -> usize {
         self.shards.iter().map(|l| l.storage_bytes()).sum()
     }
@@ -275,12 +420,17 @@ impl ShardedLattice {
     /// `b × n_p` block. This is the unit of work the serving
     /// coordinator's shard workers execute.
     pub fn shard_mvm_block(&self, p: usize, v: &[f64], b: usize) -> Vec<f64> {
+        assert!(!self.is_shed(p), "shard_mvm_block: shard {p} is shed");
         let local = self.gather_shard_block(p, v, b);
         self.shards[p].filter_block(&local, b)
     }
 
     /// Symmetrized-blur variant of [`ShardedLattice::shard_mvm_block`].
     pub fn shard_mvm_block_symmetric(&self, p: usize, v: &[f64], b: usize) -> Vec<f64> {
+        assert!(
+            !self.is_shed(p),
+            "shard_mvm_block_symmetric: shard {p} is shed"
+        );
         let local = self.gather_shard_block(p, v, b);
         self.shards[p].filter_block_symmetric(&local, b)
     }
@@ -293,6 +443,7 @@ impl ShardedLattice {
     /// on the crate's hottest path).
     pub fn mvm_block(&self, v: &[f64], b: usize) -> Vec<f64> {
         assert_eq!(v.len(), self.n * b);
+        self.assert_all_resident("mvm_block");
         if self.shards.len() == 1 {
             return self.shards[0].filter_block(v, b);
         }
@@ -304,6 +455,7 @@ impl ShardedLattice {
     /// same zero-copy fast path as [`ShardedLattice::mvm_block`]).
     pub fn mvm_block_symmetric(&self, v: &[f64], b: usize) -> Vec<f64> {
         assert_eq!(v.len(), self.n * b);
+        self.assert_all_resident("mvm_block_symmetric");
         if self.shards.len() == 1 {
             return self.shards[0].filter_block_symmetric(v, b);
         }
@@ -326,6 +478,7 @@ impl ShardedLattice {
     /// (plus the cross-shard sum) away.
     pub fn splat_blur(&self, v: &[f64], nc: usize) -> Vec<Vec<f64>> {
         assert_eq!(v.len(), self.n * nc);
+        self.assert_all_resident("splat_blur");
         self.map_shards(|p| {
             let lat = &self.shards[p];
             let (s0, s1) = (self.bounds[p], self.bounds[p + 1]);
@@ -343,6 +496,7 @@ impl ShardedLattice {
     /// identical across shards — so it is computed ONCE and only the
     /// per-shard key-table lookups run per shard (concurrently).
     pub fn embed_only(&self, x: &[f64], kernel: &ArdKernel) -> Vec<(Vec<u32>, Vec<f64>)> {
+        self.assert_all_resident("embed_only");
         let geo = self.shards[0].embed_geometry(x, kernel);
         self.map_shards(|p| self.shards[p].lookup_embedding(&geo))
     }
@@ -364,6 +518,7 @@ impl ShardedLattice {
     ) -> Vec<f64> {
         assert_eq!(embeds.len(), self.shards.len());
         assert_eq!(zs.len(), self.shards.len());
+        self.assert_all_resident("slice_at_sum");
         let parts =
             self.map_shards(|p| self.shards[p].slice_at(&embeds[p].0, &embeds[p].1, &zs[p], nc));
         let p = self.shards.len();
@@ -402,6 +557,7 @@ impl ShardedLattice {
         c1: usize,
     ) -> Vec<f64> {
         assert_eq!(embeds.len(), self.shards.len());
+        self.assert_all_resident("cross_cov_block");
         let nc = c1 - c0;
         let dp1 = self.d + 1;
         let parts = self.map_shards(|p| {
@@ -437,6 +593,7 @@ impl ShardedLattice {
         assert_eq!(g.len(), self.n);
         assert_eq!(v.len(), self.n);
         assert_eq!(x.len(), self.n * d);
+        self.assert_all_resident("grad_lengthscales");
         let parts = self.map_shards(|p| {
             let (s0, s1) = (self.bounds[p], self.bounds[p + 1]);
             self.shards[p].grad_lengthscales(&g[s0..s1], &v[s0..s1], &x[s0 * d..s1 * d], kernel)
@@ -637,6 +794,73 @@ mod tests {
                 assert_eq!(a[i].to_bits(), b[i].to_bits(), "shard {p} row {i}");
             }
         }
+    }
+
+    #[test]
+    fn shed_and_rebuild_roundtrip_is_bitwise() {
+        let d = 3;
+        let n = 96;
+        let x = random_points(n, d, 40);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+        let mut lat = ShardedLattice::build(&x, d, &k, 1, 3);
+        let mut rng = Pcg64::new(41);
+        let v = rng.normal_vec(n);
+        let before = lat.mvm(&v);
+        let (fp, m1, n1) = (lat.shard_fingerprint(1), lat.shard_m(1), lat.shard_n(1));
+        let bytes_before = lat.storage_bytes();
+
+        let freed = lat.shed_shard(1);
+        assert!(freed > 0);
+        assert!(lat.is_shed(1));
+        assert_eq!(lat.shed_count(), 1);
+        // Structural queries still answer from metadata.
+        assert_eq!(lat.shard_fingerprint(1), fp);
+        assert_eq!(lat.shard_m(1), m1);
+        assert_eq!(lat.shard_n(1), n1);
+        assert_eq!(lat.m(), m1 + lat.shard_m(0) + lat.shard_m(2));
+        assert!(lat.storage_bytes() < bytes_before);
+        // Second shed is a no-op.
+        assert_eq!(lat.shed_shard(1), 0);
+        // gather_shard_block stays shed-safe (it reads only bounds).
+        let g = lat.gather_shard_block(1, &v, 1);
+        assert_eq!(g.len(), n1);
+
+        let r = lat.shard_range(1);
+        lat.rebuild_shard(1, &x[r.start * d..r.end * d], &k);
+        assert!(!lat.is_shed(1));
+        assert_eq!(lat.shard_fingerprint(1), fp);
+        let after = lat.mvm(&v);
+        for (a, b) in before.iter().zip(&after) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "is shed")]
+    fn full_mvm_on_shed_shard_panics() {
+        let d = 2;
+        let n = 60;
+        let x = random_points(n, d, 42);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.6);
+        let mut lat = ShardedLattice::build(&x, d, &k, 1, 2);
+        lat.shed_shard(0);
+        let v = vec![1.0; n];
+        let _ = lat.mvm(&v);
+    }
+
+    #[test]
+    #[should_panic(expected = "rebuild_shard")]
+    fn rebuild_with_wrong_points_panics() {
+        let d = 2;
+        let n = 60;
+        let x = random_points(n, d, 43);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.6);
+        let mut lat = ShardedLattice::build(&x, d, &k, 1, 2);
+        lat.shed_shard(0);
+        let r = lat.shard_range(0);
+        let mut wrong = x[r.start * d..r.end * d].to_vec();
+        wrong[0] += 1.0;
+        lat.rebuild_shard(0, &wrong, &k);
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub use cg::{
 };
 pub use lanczos::{lanczos, lanczos_block, slq_logdet, LanczosResult};
 pub use precond::{
-    ExactKernelRows, KernelRows, PivCholPrecond, Precond, ShardedPivCholPrecond,
+    ExactKernelRows, KernelRows, OffloadedPrecond, PivCholPrecond, Precond, ShardSolveHook,
+    ShardedPivCholPrecond,
 };
 pub use rrcg::{rr_cg, RrCgOptions, RrCgResult};

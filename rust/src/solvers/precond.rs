@@ -385,6 +385,109 @@ impl Precond for ShardedPivCholPrecond {
     }
 }
 
+/// Somewhere a per-shard preconditioner application can run *other*
+/// than the local factor — in practice a remote shard worker's
+/// `shard_solve_block` op ([`crate::coordinator::transport::RemoteSolver`]),
+/// but the trait keeps this module transport-agnostic.
+///
+/// Contract: given shard `shard`'s residual segment as a row-major
+/// `nrhs × n_p` block, return the application of that shard's
+/// `(rank, σ²)` pivoted-Cholesky factor — **bitwise** what
+/// [`PivCholPrecond::build`] on the shard's points followed by per-RHS
+/// [`PivCholPrecond::solve`] produces (the build is deterministic, so
+/// any replica of the points yields the same factor). `None` means
+/// "can't right now" (not connected, worker error, replica stale) and
+/// the caller must apply its own local factor — the hook is an
+/// optimization, never a correctness dependency.
+pub trait ShardSolveHook: Sync {
+    /// Apply shard `shard`'s factor to `r` (row-major `nrhs × n_p`).
+    fn solve_block(
+        &self,
+        shard: usize,
+        r: &[f64],
+        nrhs: usize,
+        rank: usize,
+        sigma2: f64,
+    ) -> Option<Vec<f64>>;
+}
+
+/// A [`ShardedPivCholPrecond`] whose per-shard applications are offered
+/// to a [`ShardSolveHook`] first (remote execution on the worker
+/// holding the replica), falling back to the wrapped local factors
+/// shard by shard. Because hook and fallback are bitwise-identical by
+/// the hook's contract, CG sequences — and therefore predictions — do
+/// not depend on where any application ran.
+pub struct OffloadedPrecond<'a> {
+    local: &'a ShardedPivCholPrecond,
+    hook: &'a dyn ShardSolveHook,
+    /// Factor rank the hook must reproduce (the model's
+    /// `precond_rank`).
+    rank: usize,
+    /// Shift σ² the factors embed (the model's noise).
+    sigma2: f64,
+}
+
+impl<'a> OffloadedPrecond<'a> {
+    pub fn new(
+        local: &'a ShardedPivCholPrecond,
+        hook: &'a dyn ShardSolveHook,
+        rank: usize,
+        sigma2: f64,
+    ) -> Self {
+        OffloadedPrecond {
+            local,
+            hook,
+            rank,
+            sigma2,
+        }
+    }
+}
+
+impl Precond for OffloadedPrecond<'_> {
+    fn len(&self) -> usize {
+        self.local.len()
+    }
+
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        self.apply_block(r, 1)
+    }
+
+    fn apply_block(&self, r: &[f64], nrhs: usize) -> Vec<f64> {
+        let n = self.local.len();
+        assert_eq!(r.len(), n * nrhs);
+        let bounds = self.local.bounds();
+        let mut out = vec![0.0; n * nrhs];
+        for (p, part) in self.local.parts.iter().enumerate() {
+            let (s0, s1) = (bounds[p], bounds[p + 1]);
+            let np = s1 - s0;
+            // Gather this shard's segment from every RHS into one
+            // contiguous `nrhs × n_p` block — the shape the wire op
+            // takes and the shape the local fallback consumes.
+            let mut seg = Vec::with_capacity(np * nrhs);
+            for c in 0..nrhs {
+                seg.extend_from_slice(&r[c * n + s0..c * n + s1]);
+            }
+            let z = self
+                .hook
+                .solve_block(p, &seg, nrhs, self.rank, self.sigma2)
+                // A hook result of the wrong length breaks the hook's
+                // contract — treat it as a decline, never scatter it.
+                .filter(|z| z.len() == np * nrhs)
+                .unwrap_or_else(|| {
+                    let mut z = Vec::with_capacity(np * nrhs);
+                    for c in 0..nrhs {
+                        z.extend_from_slice(&part.solve(&seg[c * np..(c + 1) * np]));
+                    }
+                    z
+                });
+            for c in 0..nrhs {
+                out[c * n + s0..c * n + s1].copy_from_slice(&z[c * np..(c + 1) * np]);
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -558,6 +661,88 @@ mod tests {
         let got = pc.apply(&v);
         assert_eq!(got.len(), n + grow);
         assert_eq!(&got[split..], solo.solve(&v[split..]).as_slice());
+    }
+
+    #[test]
+    fn offloaded_precond_is_bitwise_local_with_any_hook_outcome() {
+        // The hook is an optimization, never a correctness dependency:
+        // whether every shard offloads, none does, or the hook returns
+        // garbage-length blocks, the application must be bitwise the
+        // plain sharded preconditioner's.
+        let d = 2;
+        let n = 60;
+        let split = 25;
+        let (rank, sigma2) = (10usize, 0.05);
+        let mut rng = Pcg64::new(8);
+        let x = rng.normal_vec(n * d);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let sharded = ShardedPivCholPrecond::build(&x, d, &k, rank, sigma2, &[0, split, n]);
+        let nrhs = 3;
+        let v = rng.normal_vec(n * nrhs);
+        let base = sharded.apply_block(&v, nrhs);
+
+        // Hook that always declines → pure local fallback.
+        struct Never;
+        impl ShardSolveHook for Never {
+            fn solve_block(&self, _: usize, _: &[f64], _: usize, _: usize, _: f64) -> Option<Vec<f64>> {
+                None
+            }
+        }
+        let off = OffloadedPrecond::new(&sharded, &Never, rank, sigma2);
+        assert_eq!(off.len(), n);
+        assert_eq!(off.apply_block(&v, nrhs), base);
+        assert_eq!(off.apply(&v[..n]), sharded.apply(&v[..n]));
+
+        // Hook that serves every shard from independently built factors
+        // on the same point slices — the worker's situation. Bitwise
+        // equal because the build is deterministic.
+        struct Replica {
+            parts: Vec<PivCholPrecond>,
+        }
+        impl ShardSolveHook for Replica {
+            fn solve_block(
+                &self,
+                shard: usize,
+                r: &[f64],
+                nrhs: usize,
+                _rank: usize,
+                _sigma2: f64,
+            ) -> Option<Vec<f64>> {
+                let np = r.len() / nrhs;
+                let mut z = Vec::with_capacity(r.len());
+                for c in 0..nrhs {
+                    z.extend_from_slice(&self.parts[shard].solve(&r[c * np..(c + 1) * np]));
+                }
+                Some(z)
+            }
+        }
+        let replica = Replica {
+            parts: vec![
+                PivCholPrecond::build(
+                    &ExactKernelRows { kernel: &k, x: &x[..split * d], d },
+                    rank,
+                    sigma2,
+                ),
+                PivCholPrecond::build(
+                    &ExactKernelRows { kernel: &k, x: &x[split * d..], d },
+                    rank,
+                    sigma2,
+                ),
+            ],
+        };
+        let off = OffloadedPrecond::new(&sharded, &replica, rank, sigma2);
+        assert_eq!(off.apply_block(&v, nrhs), base);
+
+        // Hook that violates its length contract → treated as a
+        // decline, never scattered into the output.
+        struct Garbage;
+        impl ShardSolveHook for Garbage {
+            fn solve_block(&self, _: usize, _: &[f64], _: usize, _: usize, _: f64) -> Option<Vec<f64>> {
+                Some(vec![42.0])
+            }
+        }
+        let off = OffloadedPrecond::new(&sharded, &Garbage, rank, sigma2);
+        assert_eq!(off.apply_block(&v, nrhs), base);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
+use simplex_gp::coordinator::frame::WireEncoding;
 use simplex_gp::coordinator::transport::ClusterConfig;
 use simplex_gp::coordinator::worker::{ShardWorker, WorkerConfig};
 use simplex_gp::coordinator::{Client, ServeConfig, Server};
@@ -294,6 +295,136 @@ fn killed_remote_worker_degrades_to_byte_identical_replies() {
     );
     let served = stats.get("served").and_then(|s| s.as_f64()).unwrap();
     assert!(served >= 3.0, "served={served}");
+
+    server.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn json_encoding_and_v1_workers_stay_byte_identical() {
+    // PR 7: the byte-identity contract is encoding-independent. Two
+    // downgrade paths to pure-JSON frames, same pinned replies:
+    //  (a) v2 workers with the coordinator forced onto `json`;
+    //  (b) workers pinned to protocol v1, so the coordinator's v2+bin1
+    //      hello is rejected and it retries at v1 on the same
+    //      connection (PROTOCOL.md §Versioning).
+    let d = 2;
+    let shards = 2;
+    let (x, y) = problem(230, d, 41);
+    let reference = fit(&x, &y, d, shards);
+    let n = reference.n_train();
+    let mut rng = Pcg64::new(400);
+    let v = rng.normal_vec(n);
+    let direct = reference.operator().lattice.mvm(&v);
+
+    let forced_json = |w: &[ShardWorker]| {
+        let mut c = remote_cfg(w);
+        c.encoding = WireEncoding::Json;
+        c
+    };
+    let v1_workers = || -> Vec<ShardWorker> {
+        (0..2)
+            .map(|_| {
+                ShardWorker::start(WorkerConfig {
+                    listen: "127.0.0.1:0".to_string(),
+                    max_protocol_version: 1,
+                    ..WorkerConfig::default()
+                })
+                .unwrap()
+            })
+            .collect()
+    };
+
+    for case in ["forced_json", "v1_workers"] {
+        let workers = if case == "v1_workers" {
+            v1_workers()
+        } else {
+            start_workers(2)
+        };
+        let cluster = if case == "v1_workers" {
+            remote_cfg(&workers) // requests bin1; must negotiate down
+        } else {
+            forced_json(&workers)
+        };
+        let server = Server::start(
+            fit(&x, &y, d, shards),
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                cluster,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        wait_remote_synced(&mut client, 2);
+
+        let u = client.mvm(&v).unwrap();
+        assert_bits_eq(&u, &direct, &format!("{case} vs direct"));
+        let served: u64 = workers.iter().map(|w| w.served()).sum();
+        assert!(
+            served as usize >= shards,
+            "{case}: only {served} remote jobs served"
+        );
+
+        server.shutdown();
+        for w in workers {
+            w.shutdown();
+        }
+    }
+}
+
+#[test]
+fn shed_shards_serve_remotely_and_stay_byte_identical() {
+    // PR 7 shed mode with healthy workers: the coordinator drops its
+    // local shard lattices at pool start, serves MVMs entirely off the
+    // worker replicas (zero on-demand rebuilds), and the replies stay
+    // byte-identical to the resident-lattice reference.
+    let d = 2;
+    let shards = 2;
+    let (x, y) = problem(240, d, 51);
+    let reference = fit(&x, &y, d, shards);
+    let n = reference.n_train();
+    let mut rng = Pcg64::new(500);
+    let v = rng.normal_vec(n);
+    let direct = reference.operator().lattice.mvm(&v);
+
+    let workers = start_workers(2);
+    let mut cluster = remote_cfg(&workers);
+    cluster.shed_shards = true;
+    let server = Server::start(
+        fit(&x, &y, d, shards),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            cluster,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    wait_remote_synced(&mut client, 2);
+
+    let stats = client.stats().unwrap();
+    assert_eq!(
+        stats.get("shed_shards").and_then(|s| s.as_f64()),
+        Some(shards as f64),
+        "all worker-served shards shed at pool start"
+    );
+
+    let u = client.mvm(&v).unwrap();
+    assert_bits_eq(&u, &direct, "shed remote vs direct");
+
+    // The jobs really ran on the workers — no rebuild was needed and
+    // the shards are still shed afterwards.
+    assert_eq!(server.shed_rebuilds(), 0, "healthy workers forced a rebuild");
+    let served: u64 = workers.iter().map(|w| w.served()).sum();
+    assert!(served as usize >= shards, "only {served} remote jobs served");
+    let stats = client.stats().unwrap();
+    assert_eq!(
+        stats.get("shed_shards").and_then(|s| s.as_f64()),
+        Some(shards as f64)
+    );
 
     server.shutdown();
     for w in workers {

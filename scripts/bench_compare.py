@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: compare a bench JSON-lines file against a baseline.
+
+Usage:
+    python3 scripts/bench_compare.py BENCH_BASELINE.json BENCH_PR7.json \
+        [--threshold 0.25] [--metrics ns_per_mvm,p99_us]
+
+Both files are JSON-lines as written by `append_bench_json`
+(rust/src/util/bench.rs) when `SIMPLEX_GP_BENCH_JSON` is set: one
+object per line, mixing rows from every bench target that ran.
+
+Rows are matched across the two files by their *identity* — every field
+that is not a measured output (the `MEASURED` set below). For each
+matched pair, each gated metric present on both sides is compared;
+`current > baseline * (1 + threshold)` is a regression and fails the
+gate (exit 1). Lower is better for every gated metric.
+
+The gate is deliberately tolerant of corpus drift:
+  * rows present in only one file are reported as warnings, not
+    failures — bench sweeps grow and shrink across PRs;
+  * rows whose `bench` name starts with `_` are skipped (reserved for
+    metadata);
+  * metrics outside `--metrics` are ignored, so benches may record
+    freely without widening the gate.
+
+The committed BENCH_BASELINE.json holds conservative upper bounds for
+quick-mode CI runs (shared runners are noisy; the gate exists to catch
+gross regressions, not 5% drift). After a deliberate perf change,
+refresh it from a green run's artifact and commit the new baseline —
+that is the reviewable act that re-arms the gate at the new level.
+"""
+
+import argparse
+import json
+import sys
+
+# Measured outputs — never part of a row's identity.
+MEASURED = {
+    "ns_per_mvm",
+    "ns_per_solve",
+    "ns_ingest",
+    "ns_rebuild",
+    "speedup",
+    "cg_iters",
+    "p50_us",
+    "p90_us",
+    "p99_us",
+    "p999_us",
+    "max_us",
+    "sent",
+    "ok",
+    "errors",
+    "achieved_rps",
+    "hedged",
+    "hedge_wins",
+}
+
+DEFAULT_METRICS = ("ns_per_mvm", "p99_us")
+
+
+def load_rows(path):
+    rows = {}
+    dupes = []
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except OSError as e:
+        print(f"bench_compare: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    for lineno, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError as e:
+            print(f"bench_compare: {path}:{lineno}: bad JSON: {e}", file=sys.stderr)
+            sys.exit(2)
+        if not isinstance(row, dict):
+            print(f"bench_compare: {path}:{lineno}: row is not an object", file=sys.stderr)
+            sys.exit(2)
+        if str(row.get("bench", "")).startswith("_"):
+            continue
+        ident = tuple(sorted((k, v) for k, v in row.items() if k not in MEASURED))
+        if ident in rows:
+            dupes.append(ident)
+        rows[ident] = row  # last write wins, mirroring append semantics
+    for ident in dupes:
+        print(f"warning: {path}: duplicate row identity {dict(ident)} (kept last)")
+    return rows
+
+
+def fmt_ident(ident):
+    return " ".join(f"{k}={v}" for k, v in ident)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="fail when current > baseline * (1 + threshold); default 0.25",
+    )
+    ap.add_argument(
+        "--metrics",
+        default=",".join(DEFAULT_METRICS),
+        help="comma-separated gated metrics (lower is better)",
+    )
+    args = ap.parse_args()
+    metrics = [m for m in args.metrics.split(",") if m]
+
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+
+    for ident in sorted(set(base) - set(cur)):
+        print(f"warning: row only in baseline (bench removed?): {fmt_ident(ident)}")
+    for ident in sorted(set(cur) - set(base)):
+        print(f"warning: row not in baseline (new bench? refresh baseline): {fmt_ident(ident)}")
+
+    compared = 0
+    regressions = []
+    for ident in sorted(set(base) & set(cur)):
+        b, c = base[ident], cur[ident]
+        for m in metrics:
+            if m not in b or m not in c:
+                continue
+            bv, cv = float(b[m]), float(c[m])
+            if bv <= 0.0:
+                print(f"warning: non-positive baseline {m}={bv} for {fmt_ident(ident)}; skipped")
+                continue
+            ratio = cv / bv
+            compared += 1
+            verdict = "ok"
+            if ratio > 1.0 + args.threshold:
+                verdict = "REGRESSION"
+                regressions.append((ident, m, bv, cv, ratio))
+            elif ratio < 1.0 / (1.0 + args.threshold):
+                verdict = "improved"
+            print(
+                f"{verdict:>10}  {m:<10} {bv:>14.1f} -> {cv:>14.1f}"
+                f"  ({ratio:5.2f}x)  {fmt_ident(ident)}"
+            )
+
+    if compared == 0:
+        print(
+            "bench_compare: no comparable rows — baseline and current share no "
+            "row identities carrying a gated metric",
+            file=sys.stderr,
+        )
+        sys.exit(2)
+
+    print(f"\ncompared {compared} metric(s) across {len(set(base) & set(cur))} row(s)")
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) beyond +{args.threshold:.0%}:")
+        for ident, m, bv, cv, ratio in regressions:
+            print(f"  {m}: {bv:.1f} -> {cv:.1f} ({ratio:.2f}x)  {fmt_ident(ident)}")
+        sys.exit(1)
+    print("perf gate: PASS")
+
+
+if __name__ == "__main__":
+    main()

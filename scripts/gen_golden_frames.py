@@ -1,0 +1,211 @@
+#!/usr/bin/env python3
+"""Regenerate the golden wire-protocol frame corpus in rust/tests/golden/.
+
+Each .frame file holds one complete frame exactly as it crosses a
+shard-worker TCP link: `<len>\n<payload>\n` where <len> is the ASCII
+decimal byte length of <payload>.
+
+  *_json.frame  protocol v1 payloads — compact sorted-key JSON only
+  *_bin1.frame  protocol v2 payloads — JSON header (with the reserved
+                "bin" count map), one raw `\n`, then the named f64
+                vectors as little-endian blobs in sorted field-name
+                order
+
+The byte layout mirrors rust/src/coordinator/frame.rs precisely,
+including Rust's JSON number formatting (integral values print as
+integers, -0.0 prints as "-0", other floats print shortest-round-trip).
+All float values in the corpus are short dyadic fractions so Python's
+repr() agrees with Rust's Display byte for byte. The conformance test
+(rust/tests/protocol_conformance.rs) asserts decode -> re-encode is the
+identity on every file, so regenerating this corpus after a codec change
+is an intentional, reviewable act:
+
+    python3 scripts/gen_golden_frames.py
+"""
+
+import math
+import os
+import struct
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "golden")
+
+
+def jnum(x):
+    if isinstance(x, int):
+        return str(x)
+    if x == 0.0 and math.copysign(1.0, x) < 0:
+        return "-0"
+    if float(x).is_integer() and abs(x) < 1e15:
+        return str(int(x))
+    r = repr(float(x))
+    # Rust's Display never uses exponent notation; keep corpus values
+    # in the range where Python agrees.
+    assert "e" not in r and "E" not in r, f"pick a simpler value than {x}"
+    return r
+
+
+def jser(v):
+    if isinstance(v, str):
+        s = v.replace("\\", "\\\\").replace('"', '\\"')
+        s = s.replace("\n", "\\n").replace("\r", "\\r").replace("\t", "\\t")
+        return '"' + s + '"'
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return jnum(v)
+    if isinstance(v, list):
+        return "[" + ",".join(jser(x) for x in v) + "]"
+    if isinstance(v, dict):
+        items = sorted(v.items())
+        return "{" + ",".join(jser(k) + ":" + jser(x) for k, x in items) + "}"
+    raise TypeError(type(v))
+
+
+def frame(payload: bytes) -> bytes:
+    return str(len(payload)).encode() + b"\n" + payload + b"\n"
+
+
+def json_frame(obj) -> bytes:
+    return frame(jser(obj).encode())
+
+
+def bin1_frame(obj, blobs) -> bytes:
+    """obj must not contain the blob names or "bin" (mirrors encode_bin_payload)."""
+    header = dict(obj)
+    assert "bin" not in header
+    for name in blobs:
+        assert name not in header
+    header["bin"] = {name: len(xs) for name, xs in blobs.items()}
+    payload = jser(header).encode() + b"\n"
+    for name in sorted(blobs):
+        payload += struct.pack("<%dd" % len(blobs[name]), *blobs[name])
+    return frame(payload)
+
+
+KERNEL = {"family": "matern32", "lengthscales": [0.5, 0.75, 1.25], "outputscale": 1.5}
+X_REFRESH = [0.5, -0.25, 1.0, 0.125, -2.0, 0.75]  # 2 points, d = 3
+V_MVM = [1.0, -0.5, 0.25, -0.0, 2.5, -1.75, 0.0625, 3.0]
+U_MVM = [0.84375, -1.5, 0.09375, 2.0, -0.625, 0.28125, 1.125, -0.046875]
+R_SOLVE = [0.5, -1.25, 2.75, -0.375]
+Z_SOLVE = [0.1875, -0.8125, 1.625, -0.25]
+X_INGEST = [0.375, -1.5, 2.25]
+
+SHARD_STATUS = {
+    "fingerprint": "00c0ffee00c0ffee",
+    "m": 9,
+    "n": 7,
+    "served": 3,
+    "shard": 0,
+}
+
+FRAMES = {
+    # --- handshake (always pure JSON, both protocol versions) ---
+    "hello_req_v1_json": json_frame({"op": "hello", "shards": [0, 2], "version": 1}),
+    "hello_req_v2_json": json_frame(
+        {"encoding": "bin1", "op": "hello", "shards": [0, 2], "version": 2}
+    ),
+    "hello_reply_v2_json": json_frame(
+        {"encoding": "bin1", "ok": 1, "shards": [SHARD_STATUS], "version": 2}
+    ),
+    "hello_reply_v1_json": json_frame(
+        {"encoding": "json", "ok": 1, "shards": [], "version": 1}
+    ),
+    # --- refresh_shard ---
+    "refresh_shard_req_json": json_frame(
+        {
+            "op": "refresh_shard",
+            "shard": 0,
+            "d": 3,
+            "order": 1,
+            "kernel": KERNEL,
+            "x": X_REFRESH,
+        }
+    ),
+    "refresh_shard_req_bin1": bin1_frame(
+        {"op": "refresh_shard", "shard": 0, "d": 3, "order": 1, "kernel": KERNEL},
+        {"x": X_REFRESH},
+    ),
+    "refresh_shard_reply_json": json_frame(
+        {"fingerprint": "deadbeefdeadbeef", "m": 11, "n": 2, "ok": 1, "shard": 0}
+    ),
+    # --- shard_mvm_block ---
+    "shard_mvm_block_req_json": json_frame(
+        {"op": "shard_mvm_block", "shard": 1, "job": 4, "b": 2, "v": V_MVM}
+    ),
+    "shard_mvm_block_req_bin1": bin1_frame(
+        {"op": "shard_mvm_block", "shard": 1, "job": 4, "b": 2}, {"v": V_MVM}
+    ),
+    "shard_mvm_block_reply_json": json_frame({"job": 4, "shard": 1, "u": U_MVM}),
+    "shard_mvm_block_reply_bin1": bin1_frame({"job": 4, "shard": 1}, {"u": U_MVM}),
+    # --- shard_solve_block (protocol v2 only; JSON form still legal) ---
+    "shard_solve_block_req_json": json_frame(
+        {
+            "op": "shard_solve_block",
+            "shard": 1,
+            "job": 6,
+            "b": 1,
+            "rank": 4,
+            "sigma2": 0.25,
+            "r": R_SOLVE,
+        }
+    ),
+    "shard_solve_block_req_bin1": bin1_frame(
+        {
+            "op": "shard_solve_block",
+            "shard": 1,
+            "job": 6,
+            "b": 1,
+            "rank": 4,
+            "sigma2": 0.25,
+        },
+        {"r": R_SOLVE},
+    ),
+    "shard_solve_block_reply_json": json_frame({"job": 6, "shard": 1, "z": Z_SOLVE}),
+    "shard_solve_block_reply_bin1": bin1_frame({"job": 6, "shard": 1}, {"z": Z_SOLVE}),
+    # --- ingest ---
+    "ingest_req_json": json_frame({"op": "ingest", "shard": 0, "x": X_INGEST}),
+    "ingest_req_bin1": bin1_frame({"op": "ingest", "shard": 0}, {"x": X_INGEST}),
+    "ingest_reply_json": json_frame(
+        {
+            "fingerprint": "0123456789abcdef",
+            "m": 12,
+            "n": 3,
+            "new_keys": 1,
+            "ok": 1,
+            "shard": 0,
+        }
+    ),
+    # --- stats (no float vectors: identical bytes under either encoding) ---
+    "stats_req_json": json_frame({"op": "stats"}),
+    "stats_reply_json": json_frame(
+        {
+            "ok": 1,
+            "served": 17,
+            "shards": [SHARD_STATUS],
+            "solved": 5,
+            "version": 2,
+        }
+    ),
+    # --- error reply (op + routing keys echoed back) ---
+    "error_reply_json": json_frame(
+        {
+            "error": "bad frame payload: bin1 blob section truncated",
+            "job": 4,
+            "op": "shard_mvm_block",
+            "shard": 1,
+        }
+    ),
+}
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    for name, data in sorted(FRAMES.items()):
+        path = os.path.join(OUT, name + ".frame")
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"{len(data):6d}  {name}.frame")
+
+
+if __name__ == "__main__":
+    main()
