@@ -1,6 +1,6 @@
 //! Serving-path tail latency under open-loop load (the PR-6 bench).
 //!
-//! Drives a live coordinator with the [`loadgen`] harness across five
+//! Drives a live coordinator with the [`loadgen`] harness across seven
 //! deployment shapes:
 //!
 //!   inproc           in-process shard pool, serving-shaped mix
@@ -11,6 +11,13 @@
 //!                    roundtrip (injected straggler), hedging OFF
 //!   tcp_slow_hedged  same straggler, hedging ON (`hedge_ms` race to
 //!                    the backup replica)
+//!   tcp_var          2 workers, every predict asks for variance —
+//!                    cross-covariance columns realized per shard
+//!   tcp_var_shed     same variance traffic with `shed_shards` on: the
+//!                    coordinator holds no shard lattices and the
+//!                    columns come back from the worker replicas (the
+//!                    shed-vs-unshed variance serving comparison pair;
+//!                    byte-identity is pinned by rust/tests/shed_mode.rs)
 //!
 //! The straggler rows are the point: an injected straggler wrecks p99
 //! on an unhedged cluster and the hedge race claws it back, while the
@@ -28,7 +35,7 @@
 //! per mode: `{"bench":"serving_load", "mode", "encoding", "workers",
 //! "shards", "hedge_ms", "slow_ms", "rps", "sent", "ok", "errors",
 //! "achieved_rps", "p50_us", "p90_us", "p99_us", "p999_us", "max_us",
-//! "hedged", "hedge_wins"}`.
+//! "hedged", "hedge_wins", "shed", "variance", "shed_rebuilds"}`.
 //!
 //!     cargo bench --bench serving_load [-- --quick]
 
@@ -54,6 +61,8 @@ struct Scenario {
     slow_ms: u64,
     hedge_ms: u64,
     encoding: WireEncoding,
+    /// `[cluster] shed_shards`: fully worker-resident serving.
+    shed: bool,
     spec: LoadSpec,
 }
 
@@ -140,6 +149,14 @@ fn main() {
     let (slow_rps, slow_secs) = if quick { (50.0, 1.0) } else { (80.0, 2.0) };
     let slow_ms: u64 = if quick { 200 } else { 300 };
 
+    // Variance rows: same serving-shaped mix, every predict asks for
+    // the predictive variance as well.
+    let var_spec = |rps: f64, secs: f64| LoadSpec {
+        predict_variance: true,
+        ..serving_spec(rps, secs)
+    };
+    let (var_rps, var_secs) = if quick { (60.0, 1.0) } else { (100.0, 2.0) };
+
     let scenarios = [
         Scenario {
             mode: "inproc",
@@ -147,6 +164,7 @@ fn main() {
             slow_ms: 0,
             hedge_ms: 0,
             encoding: WireEncoding::Bin1,
+            shed: false,
             spec: serving_spec(rps, secs),
         },
         Scenario {
@@ -155,6 +173,7 @@ fn main() {
             slow_ms: 0,
             hedge_ms: 0,
             encoding: WireEncoding::Bin1,
+            shed: false,
             spec: serving_spec(rps, secs),
         },
         Scenario {
@@ -163,6 +182,7 @@ fn main() {
             slow_ms: 0,
             hedge_ms: 0,
             encoding: WireEncoding::Json,
+            shed: false,
             spec: serving_spec(rps, secs),
         },
         Scenario {
@@ -171,6 +191,7 @@ fn main() {
             slow_ms,
             hedge_ms: 0,
             encoding: WireEncoding::Bin1,
+            shed: false,
             spec: slow_spec(slow_rps, slow_secs),
         },
         Scenario {
@@ -179,7 +200,26 @@ fn main() {
             slow_ms,
             hedge_ms: 25,
             encoding: WireEncoding::Bin1,
+            shed: false,
             spec: slow_spec(slow_rps, slow_secs),
+        },
+        Scenario {
+            mode: "tcp_var",
+            workers: 2,
+            slow_ms: 0,
+            hedge_ms: 0,
+            encoding: WireEncoding::Bin1,
+            shed: false,
+            spec: var_spec(var_rps, var_secs),
+        },
+        Scenario {
+            mode: "tcp_var_shed",
+            workers: 2,
+            slow_ms: 0,
+            hedge_ms: 0,
+            encoding: WireEncoding::Bin1,
+            shed: true,
+            spec: var_spec(var_rps, var_secs),
         },
     ];
 
@@ -215,6 +255,7 @@ fn main() {
                 ms => Some(Duration::from_millis(ms)),
             },
             encoding: sc.encoding,
+            shed_shards: sc.shed,
             ..ClusterConfig::default()
         };
         let server = Server::start(
@@ -245,6 +286,7 @@ fn main() {
             .and_then(|v| v.as_f64())
             .unwrap_or(0.0);
         drop(stats_client);
+        let shed_rebuilds = server.shed_rebuilds();
         server.shutdown();
         for w in workers {
             w.shutdown();
@@ -290,6 +332,9 @@ fn main() {
             ("max_us", report.hist.max_us()),
             ("hedged", hedged),
             ("hedge_wins", hedge_wins),
+            ("shed", sc.shed as u8 as f64),
+            ("variance", sc.spec.predict_variance as u8 as f64),
+            ("shed_rebuilds", shed_rebuilds as f64),
         ] {
             obj.insert(k.to_string(), Json::Num(v));
         }

@@ -19,16 +19,22 @@
 //! to a PJRT artifact ([`crate::runtime`]).
 //!
 //! Wire protocol: JSON lines.
-//!   → {"id": 7, "op": "predict", "x": [[...d floats...], ...]}
+//!   → {"id": 7, "op": "predict", "x": [[...d floats...], ...], "variance": 1}
 //!   → {"id": 8, "op": "mvm", "v": [...n floats...]}
 //!   → {"id": 9, "op": "stats"}
 //!   → {"id": 10, "op": "ingest", "x": [[...d floats...], ...], "y": [...]}
-//!   ← {"id": 7, "mean": [...], "elapsed_us": 1234}
+//!   ← {"id": 7, "mean": [...], "var": [...], "elapsed_us": 1234}
 //!   ← {"id": 8, "u": [...], "batched_with": 3}
 //!   ← {"id": 9, "n": ..., "m": ..., "d": ..., "shards": ..., "served": ..., "batches": ...,
 //!      "cg_iters": ..., "precond_rank": ..., "ingested": ..., "rebuilds": ...,
 //!      "cluster_workers": ..., "remote_workers": ...}
 //!   ← {"id": 10, "ingested": 1, "n": ..., "shard": ..., "rebuild": 0}
+//!
+//! `"variance": 1` upgrades a predict to the full posterior: the reply
+//! gains a `var` array (one CG solve per chunk of test columns behind
+//! the scenes — `docs/PROTOCOL.md` §1). Requests without the flag never
+//! pay for it: the batch runs the mean-only slice pass unless at least
+//! one coalesced request asked for variance.
 //!
 //! `cg_iters` is the realized CG iteration count of the model's fitting
 //! solve and `precond_rank` the per-shard pivoted-Cholesky rank it ran
@@ -60,6 +66,21 @@
 //! computed in-thread from the coordinator's own model (the normative
 //! protocol spec is `docs/PROTOCOL.md`; topologies and failure
 //! semantics are in `docs/DEPLOYMENT.md`).
+//!
+//! Shed mode (`[cluster] shed_shards`) is fully worker-resident: the
+//! coordinator keeps points + metadata only and serves the complete op
+//! mix without materializing a shard lattice while its links are up.
+//! Predict-with-variance realizes each shed shard's mean part and
+//! cross-covariance columns on the worker holding the replica
+//! (`shard_variance_block`) and runs the global CG locally on the
+//! routed operator ([`crate::gp::ShardRouter`]); a small ingest patches
+//! the owning worker's replica synchronously
+//! ([`transport::ShardTransport::ingest_sync`]) and updates only local
+//! points + fingerprints; an oversized ingest refits shard-by-shard
+//! ([`SimplexGp::fit_shed`]) so peak coordinator lattice memory stays
+//! O(max_p m_p). Every path falls back to deterministic on-demand
+//! rebuild (counted in `shed_rebuilds`) when a link is down — replies
+//! are byte-identical either way.
 
 pub mod frame;
 pub mod transport;
@@ -70,13 +91,13 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::gp::SimplexGp;
-use crate::lattice::ShardedLattice;
+use crate::gp::{ShardRouter, SimplexGp};
+use crate::lattice::{vector_fingerprint, ShardedLattice};
 use crate::util::json::Json;
 
 use transport::{ClusterConfig, LocalTransport, RemoteSolver, ShardTransport, TcpTransport};
@@ -130,6 +151,10 @@ enum Work {
         id: f64,
         x: Vec<f64>,
         rows: usize,
+        /// Request the predictive variance alongside the mean
+        /// (`"variance": 1`). A batch runs the variance solve only when
+        /// at least one coalesced request set this.
+        variance: bool,
         reply: SyncSender<String>,
         enqueued: Instant,
     },
@@ -408,10 +433,16 @@ fn parse_request(line: &str, reply: &SyncSender<String>) -> Result<Work, String>
                 }
                 rows += 1;
             }
+            let variance = json
+                .get("variance")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+                != 0.0;
             Ok(Work::Predict {
                 id,
                 x,
                 rows,
+                variance,
                 reply: reply.clone(),
                 enqueued: Instant::now(),
             })
@@ -536,7 +567,13 @@ fn json_num_array(xs: &[f64]) -> Json {
 ///   discarded, so a partial failure can never splice old numbers into
 ///   a new reply.
 struct ShardPool {
-    transport: Box<dyn ShardTransport>,
+    /// Behind a `Mutex` so the pool is `Sync` and can serve as the
+    /// [`ShardRouter`] of the model's routed paths
+    /// ([`SimplexGp::predict_routed`],
+    /// [`SimplexGp::resolve_alpha_routed`]) — the CG operator trait
+    /// requires `Sync`. Only the batcher thread ever calls in, so the
+    /// lock is uncontended and never re-entered.
+    transport: Mutex<Box<dyn ShardTransport>>,
     /// How long to wait for one shard's rows before computing that
     /// shard in-thread (`[cluster] result_timeout_ms`; generous for the
     /// local pool, where a shard MVM is milliseconds).
@@ -548,7 +585,7 @@ struct ShardPool {
     /// behavior, bit for bit).
     hedge: Option<Duration>,
     counters: Arc<Counters>,
-    next_job: std::cell::Cell<u64>,
+    next_job: AtomicU64,
 }
 
 impl ShardPool {
@@ -588,11 +625,11 @@ impl ShardPool {
             ))
         };
         ShardPool {
-            transport,
+            transport: Mutex::new(transport),
             result_timeout: cfg.cluster.result_timeout,
             hedge: cfg.cluster.hedge,
             counters: counters.clone(),
-            next_job: std::cell::Cell::new(0),
+            next_job: AtomicU64::new(0),
         }
     }
 
@@ -600,21 +637,44 @@ impl ShardPool {
     /// hook). Subsequent jobs for its shards fail fast and the batcher
     /// computes them in-thread — exactly the degradation a crashed
     /// worker would cause, minus the nondeterminism.
-    fn kill_worker(&mut self, shard: usize) -> bool {
-        self.transport.kill(shard)
+    fn kill_worker(&self, shard: usize) -> bool {
+        self.transport.lock().unwrap().kill(shard)
     }
 
     /// Make the worker serving `shard` artificially slow (debug/test
     /// hook): every later job sleeps `delay` first. The deterministic
     /// straggler behind `rust/tests/hedging.rs`.
-    fn delay_worker(&mut self, shard: usize, delay: Duration) -> bool {
-        self.transport.delay(shard, delay)
+    fn delay_worker(&self, shard: usize, delay: Duration) -> bool {
+        self.transport.lock().unwrap().delay(shard, delay)
     }
 
     /// Propagate a streaming-ingest batch to the remote replica of
     /// `shard` (no-op on the local transport).
     fn propagate_ingest(&self, shard: usize, x: &[f64], expect_fingerprint: u64) {
-        self.transport.ingest(shard, x, expect_fingerprint);
+        self.transport.lock().unwrap().ingest(shard, x, expect_fingerprint);
+    }
+
+    /// Synchronously patch shard `shard`'s *authoritative* remote
+    /// replica with ingest rows `x` and return the patched replica's
+    /// `(n, m, new_keys, fingerprint)` — the shed-aware ingest path
+    /// ([`transport::ShardTransport::ingest_sync`]). `None` means the
+    /// caller must fall back to [`ShardPool::desync`] + local rebuild.
+    fn ingest_sync(&self, shard: usize, x: &[f64]) -> Option<(usize, usize, usize, u64)> {
+        self.transport.lock().unwrap().ingest_sync(shard, x)
+    }
+
+    /// Mark every link holding a replica of `shard` unsynced (the
+    /// fallback half of [`ShardPool::ingest_sync`]: a delta whose fate
+    /// is unknown must never stay half-applied on a replica).
+    fn desync(&self, shard: usize) {
+        self.transport.lock().unwrap().desync(shard);
+    }
+
+    /// Push shard `shard`'s α slice to its worker replicas so they can
+    /// serve `shard_variance_block` against fresh weights (no-op on the
+    /// local transport and on v1 links).
+    fn push_alpha(&self, shard: usize, alpha: &[f64], fp: u64) {
+        self.transport.lock().unwrap().push_alpha(shard, alpha, fp);
     }
 
     /// Route one coalesced `b × n` block through the shard workers and
@@ -633,25 +693,36 @@ impl ShardPool {
         lat: &ShardedLattice,
         v: &Arc<Vec<f64>>,
         b: usize,
+        sym: bool,
     ) -> Option<(Vec<f64>, Vec<usize>)> {
-        let slots = self.transport.slots();
+        let transport = self.transport.lock().unwrap();
+        let slots = transport.slots();
         if slots == 0 {
             return None;
         }
+        // In-thread fallback for a resident shard — `sym` selects the
+        // blur-symmetrized filter, matching what the worker runs, so a
+        // fallback never changes reply bytes.
+        let local_part = |p: usize| -> Vec<f64> {
+            if sym {
+                lat.shard_mvm_block_symmetric(p, v, b)
+            } else {
+                lat.shard_mvm_block(p, v, b)
+            }
+        };
         let mut missing: Vec<usize> = Vec::new();
         // Job ids advance by 2: the even id tags this batch's primary
         // submissions, the odd id (`job + 1`) its hedged backups. Both
         // are accepted below; anything else is stale. Keeping the ids
         // distinct is how `hedge_wins` can tell a backup's reply from a
         // slow primary's without widening the result message.
-        let job = self.next_job.get();
-        self.next_job.set(job + 2);
+        let job = self.next_job.fetch_add(2, Ordering::Relaxed);
         let n = lat.n;
         let mut out = vec![0.0; n * b];
         let mut waiting = vec![false; slots];
         let mut waiting_count = 0usize;
         for p in 0..slots {
-            if self.transport.submit(p, lat, v, b, job) {
+            if transport.submit(p, lat, v, b, job, sym) {
                 waiting[p] = true;
                 waiting_count += 1;
             }
@@ -665,7 +736,7 @@ impl ShardPool {
                     missing.push(p);
                     continue;
                 }
-                let part = lat.shard_mvm_block(p, v, b);
+                let part = local_part(p);
                 lat.scatter_shard_block(&mut out, p, &part, b);
             }
         }
@@ -689,7 +760,7 @@ impl ShardPool {
             let got = if remaining.is_zero() {
                 None
             } else {
-                self.transport.recv_result(remaining)
+                transport.recv_result(remaining)
             };
             match got {
                 Some((jid, p, part)) => {
@@ -723,7 +794,7 @@ impl ShardPool {
                             if lat.is_shed(p) {
                                 missing.push(p);
                             } else {
-                                let part = lat.shard_mvm_block(p, v, b);
+                                let part = local_part(p);
                                 lat.scatter_shard_block(&mut out, p, &part, b);
                             }
                         }
@@ -742,7 +813,7 @@ impl ShardPool {
                                     continue;
                                 }
                                 self.counters.hedged.fetch_add(1, Ordering::Relaxed);
-                                if !self.transport.submit_backup(p, lat, v, b, job + 1) {
+                                if !transport.submit_backup(p, lat, v, b, job + 1, sym) {
                                     // No backup (local pool, or its
                                     // link is down/full): the hedge IS
                                     // the in-thread fallback, now —
@@ -754,7 +825,7 @@ impl ShardPool {
                                     if lat.is_shed(p) {
                                         missing.push(p);
                                     } else {
-                                        let part = lat.shard_mvm_block(p, v, b);
+                                        let part = local_part(p);
                                         lat.scatter_shard_block(&mut out, p, &part, b);
                                     }
                                 }
@@ -774,22 +845,129 @@ impl ShardPool {
                     missing.push(p);
                     continue;
                 }
-                let part = lat.shard_mvm_block(p, v, b);
+                let part = local_part(p);
                 lat.scatter_shard_block(&mut out, p, &part, b);
             }
         }
         Some((out, missing))
     }
 
+    /// Realize the predictive parts of the given **shed** shards on the
+    /// workers holding their replicas: one `shard_variance_block` job
+    /// per shard, each returning the shard's mean-slice part (`t`
+    /// values) and — when `want_cols` — its `t × n_p` cross-covariance
+    /// column block. `None` when any shard goes unanswered (no link,
+    /// job failed, stale α, timeout): the caller rebuilds and computes
+    /// locally, byte-identically.
+    fn variance_parts(
+        &self,
+        lat: &ShardedLattice,
+        shards: &[usize],
+        alpha_fps: &[u64],
+        x: &[f64],
+        t: usize,
+        want_cols: bool,
+    ) -> Option<Vec<(Vec<f64>, Vec<f64>)>> {
+        if shards.is_empty() {
+            return Some(Vec::new());
+        }
+        let transport = self.transport.lock().unwrap();
+        if transport.slots() == 0 {
+            return None;
+        }
+        let x = Arc::new(x.to_vec());
+        // One job id per shard, advancing by 2 like the MVM path so ids
+        // stay globally unique — a stale MVM reply can never alias a
+        // variance job (ids are monotonic, never reused).
+        let mut jobs: Vec<u64> = Vec::with_capacity(shards.len());
+        for (&p, &afp) in shards.iter().zip(alpha_fps) {
+            let job = self.next_job.fetch_add(2, Ordering::Relaxed);
+            if !transport.submit_variance(p, lat, job, t, want_cols, afp, &x) {
+                return None;
+            }
+            jobs.push(job);
+        }
+        let mut parts: Vec<Option<Vec<f64>>> = vec![None; shards.len()];
+        let mut waiting = shards.len();
+        let deadline = Instant::now() + self.result_timeout;
+        while waiting > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (jid, slot, part) = transport.recv_result(deadline - now)?;
+            // Match by job id — a stale result from an abandoned batch
+            // (either op kind) is dropped here, so a partial failure
+            // can never splice old numbers into a new reply.
+            let Some(k) = jobs.iter().position(|&j| j == jid) else {
+                continue;
+            };
+            if shards[k] != slot || parts[k].is_some() {
+                continue;
+            }
+            // A failed job (link died mid-roundtrip, stale replica or
+            // α): the whole routed predict falls back to rebuild.
+            parts[k] = Some(part?);
+            waiting -= 1;
+        }
+        let mut out = Vec::with_capacity(shards.len());
+        for (k, part) in parts.into_iter().enumerate() {
+            let mut ks = part?;
+            let expect = t + if want_cols { t * lat.shard_n(shards[k]) } else { 0 };
+            if ks.len() != expect {
+                return None;
+            }
+            let cols = ks.split_off(t);
+            out.push((ks, cols));
+        }
+        Some(out)
+    }
+
     /// Shards whose primary remote link is currently ready — the set
     /// safe to (re-)shed under `[cluster] shed_shards`. Empty for the
     /// in-process transport.
     fn ready_shards(&self) -> Vec<usize> {
-        self.transport.ready_shards()
+        self.transport.lock().unwrap().ready_shards()
     }
 
     fn shutdown(self) {
-        self.transport.shutdown();
+        self.transport.into_inner().unwrap().shutdown();
+    }
+}
+
+/// The pool *is* the model's shard router: shed-shard MVMs and
+/// predictive parts route to the workers holding the replicas, with the
+/// pool's usual in-thread fallback for resident shards. This is what
+/// lets [`SimplexGp::resolve_alpha_routed`] and
+/// [`SimplexGp::predict_routed`] run their exact local arithmetic while
+/// the per-shard lattice work happens fleet-side.
+impl ShardRouter for ShardPool {
+    fn route_mvm_block(
+        &self,
+        lat: &ShardedLattice,
+        v: &[f64],
+        b: usize,
+        sym: bool,
+    ) -> Option<Vec<f64>> {
+        let v = Arc::new(v.to_vec());
+        let (out, missing) = self.mvm_block(lat, &v, b, sym)?;
+        if missing.is_empty() {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    fn route_variance(
+        &self,
+        lat: &ShardedLattice,
+        shards: &[usize],
+        alpha_fps: &[u64],
+        x: &[f64],
+        t: usize,
+        want_cols: bool,
+    ) -> Option<Vec<(Vec<f64>, Vec<f64>)>> {
+        self.variance_parts(lat, shards, alpha_fps, x, t, want_cols)
     }
 }
 
@@ -798,8 +976,9 @@ impl ShardPool {
 /// plus a coalesced ingest batch.
 #[derive(Default)]
 struct Batch {
-    /// (id, rows, reply, enqueued) per pending predict request.
-    predicts: Vec<(f64, usize, SyncSender<String>, Instant)>,
+    /// (id, rows, variance?, reply, enqueued) per pending predict
+    /// request.
+    predicts: Vec<(f64, usize, bool, SyncSender<String>, Instant)>,
     /// Concatenated prediction inputs (Σ rows × d).
     predict_x: Vec<f64>,
     predict_rows: usize,
@@ -826,50 +1005,102 @@ impl Batch {
     }
 }
 
+/// Rebuild every shed shard in-thread (deterministic, fingerprint-
+/// verified) and count each rebuild — the universal fallback when a
+/// worker-resident path cannot be served remotely. Returns how many
+/// shards were rebuilt.
+fn rebuild_all_shed(guard: &mut SimplexGp, counters: &Counters) -> usize {
+    let shed: Vec<usize> = {
+        let lat = &guard.operator().lattice;
+        (0..lat.shard_count()).filter(|&p| lat.is_shed(p)).collect()
+    };
+    for &p in &shed {
+        guard.rebuild_shard(p);
+        counters.shed_rebuilds.fetch_add(1, Ordering::Relaxed);
+    }
+    shed.len()
+}
+
+/// Push every shard's current α slice to its worker replicas so they
+/// can serve `shard_variance_block` against the fresh weights. No-op
+/// when α is unresolved, on the local transport, and on v1 links.
+fn push_alpha_all(guard: &SimplexGp, pool: &ShardPool) {
+    let lat = &guard.operator().lattice;
+    if guard.alpha().len() != lat.n {
+        return;
+    }
+    for p in 0..lat.shard_count() {
+        let r = lat.shard_range(p);
+        let slice = &guard.alpha()[r.start..r.end];
+        pool.push_alpha(p, slice, vector_fingerprint(slice));
+    }
+}
+
 /// Execute everything queued in `batch` — one slice pass for all
 /// prediction rows, one shard-routed block MVM for all mvm vectors,
 /// one model update for all ingest rows — and reply. Ingest runs LAST
 /// so the batch's predict/mvm work (validated against the pre-ingest n)
 /// executes against the model it was addressed to. Returns `true` when
-/// the model was fully rebuilt (the pool may need restarting).
+/// the model was fully rebuilt and the caller must restart the pool
+/// (the shed-mode refit restarts it internally and returns `false`).
 fn flush_batch(
     batch: &mut Batch,
-    counters: &Counters,
+    counters: &Arc<Counters>,
     model: &Arc<RwLock<SimplexGp>>,
-    pool: &ShardPool,
+    pool: &mut ShardPool,
     cfg: &ServeConfig,
 ) -> bool {
-    // Shed mode: prediction (slice over every shard) and ingest (CG
-    // over the full operator) read every shard lattice directly, so
-    // any shed shard must be rebuilt first. This is the documented
-    // cost of mixing those ops into a shed-mode coordinator — `mvm`
-    // traffic alone never forces a rebuild while its links are up.
-    if !batch.predicts.is_empty() || !batch.ingests.is_empty() {
-        let shed: Vec<usize> = {
-            let guard = model.read().unwrap();
-            let lat = &guard.operator().lattice;
-            (0..lat.shard_count()).filter(|&p| lat.is_shed(p)).collect()
-        };
-        if !shed.is_empty() {
-            let mut guard = model.write().unwrap();
-            for &p in &shed {
-                guard.rebuild_shard(p);
-                counters.shed_rebuilds.fetch_add(1, Ordering::Relaxed);
-            }
-        }
-    }
     if !batch.predicts.is_empty() {
+        let want_var = batch.predicts.iter().any(|(_, _, variance, _, _)| *variance);
         let t0 = Instant::now();
-        let mean = model.read().unwrap().predict_mean(&batch.predict_x);
+        // Worker-resident serving: shed shards contribute their mean
+        // parts (and, for variance, cross-covariance columns) through
+        // the pool; with nothing shed these calls ARE the direct local
+        // predict, bit for bit. `None` (a shed shard unanswered) falls
+        // back to deterministic rebuild + local predict — same bytes.
+        let (mean, var) = {
+            let guard = model.read().unwrap();
+            let routed = if want_var {
+                guard
+                    .predict_routed(&batch.predict_x, pool)
+                    .map(|(m, v)| (m, Some(v)))
+            } else {
+                guard
+                    .predict_mean_routed(&batch.predict_x, pool)
+                    .map(|m| (m, None))
+            };
+            match routed {
+                Some(out) => out,
+                None => {
+                    drop(guard);
+                    let mut guard = model.write().unwrap();
+                    rebuild_all_shed(&mut guard, counters);
+                    if want_var {
+                        let (m, v) = guard.predict(&batch.predict_x);
+                        (m, Some(v))
+                    } else {
+                        (guard.predict_mean(&batch.predict_x), None)
+                    }
+                }
+            }
+        };
         let elapsed_us = t0.elapsed().as_micros() as f64;
         counters.batches.fetch_add(1, Ordering::Relaxed);
         let mut cursor = 0usize;
-        for (id, rows, reply, enqueued) in batch.predicts.drain(..) {
+        for (id, rows, variance, reply, enqueued) in batch.predicts.drain(..) {
             let slice = &mean[cursor..cursor + rows];
-            cursor += rows;
             let mut obj = BTreeMap::new();
             obj.insert("id".to_string(), Json::Num(id));
             obj.insert("mean".to_string(), json_num_array(slice));
+            if variance {
+                if let Some(var) = &var {
+                    obj.insert(
+                        "var".to_string(),
+                        json_num_array(&var[cursor..cursor + rows]),
+                    );
+                }
+            }
+            cursor += rows;
             obj.insert("elapsed_us".to_string(), Json::Num(elapsed_us));
             obj.insert(
                 "queue_us".to_string(),
@@ -896,7 +1127,7 @@ fn flush_batch(
         let u = {
             let guard = model.read().unwrap();
             let lat = &guard.operator().lattice;
-            match pool.mvm_block(lat, &v, b) {
+            match pool.mvm_block(lat, &v, b, false) {
                 None => lat.mvm_block(&v, b),
                 Some((out, missing)) if missing.is_empty() => out,
                 Some((mut out, missing)) => {
@@ -935,11 +1166,9 @@ fn flush_batch(
         let x = std::mem::take(&mut batch.ingest_x);
         let y = std::mem::take(&mut batch.ingest_y);
         let rows = y.len();
+        let shed_mode = cfg.cluster.shed_shards && !cfg.cluster.workers.is_empty();
         let mut guard = model.write().unwrap();
-        // Third element: the post-ingest shard fingerprint, for
-        // propagating the delta to a remote replica (None on rebuild —
-        // the pool restarts and re-syncs replicas wholesale).
-        let result: Result<(usize, bool, Option<u64>)> = if rows > cfg.max_ingest_batch {
+        let result: Result<(usize, bool)> = if rows > cfg.max_ingest_batch {
             // Past the incremental sweet spot: one full refit absorbs
             // the whole coalesced batch (appended at the end — the
             // rebuild repartitions anyway).
@@ -948,39 +1177,137 @@ fn flush_batch(
             xs.extend_from_slice(&x);
             let mut ys = guard.y_train.clone();
             ys.extend_from_slice(&y);
-            SimplexGp::fit(
-                &xs,
-                &ys,
-                d,
-                guard.kernel.clone(),
-                guard.noise,
-                guard.config.clone(),
-            )
-            .map(|fresh| {
-                *guard = fresh;
-                counters.rebuilds.fetch_add(1, Ordering::Relaxed);
-                rebuilt = true;
-                (0usize, true, None)
+            if shed_mode {
+                // Shed-aware refit: build shard-by-shard with every
+                // lattice shed at birth (peak coordinator lattice
+                // memory O(max_p m_p), not O(Σ m_p)). The restarted
+                // pool's links push each shard's *points* to the
+                // workers, which rebuild replicas and verify them
+                // against the retained fingerprints; α is then solved
+                // on the routed operator — bit-identical to a local
+                // `SimplexGp::fit` of the same data.
+                match SimplexGp::fit_shed(
+                    &xs,
+                    &ys,
+                    d,
+                    guard.kernel.clone(),
+                    guard.noise,
+                    guard.config.clone(),
+                ) {
+                    Ok(fresh) => {
+                        *guard = fresh;
+                        // Restart the pool without holding the write
+                        // lock: link re-sync snapshots the model under
+                        // the read lock.
+                        drop(guard);
+                        let old = std::mem::replace(
+                            pool,
+                            ShardPool::start(model, cfg, counters),
+                        );
+                        old.shutdown();
+                        // Bounded wait for the fleet to re-sync every
+                        // shard replica before the routed α solve.
+                        let shard_count = {
+                            let g = model.read().unwrap();
+                            g.operator().lattice.shard_count()
+                        };
+                        let deadline = Instant::now() + cfg.cluster.refresh_timeout;
+                        while pool.ready_shards().len() < shard_count
+                            && Instant::now() < deadline
+                        {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        guard = model.write().unwrap();
+                        if !guard.resolve_alpha_routed(pool) {
+                            // Fleet did not come back in time: rebuild
+                            // in-thread and solve locally — same α
+                            // bytes, worse peak memory, counted.
+                            rebuild_all_shed(&mut guard, counters);
+                            guard.resolve_alpha();
+                        }
+                        counters.rebuilds.fetch_add(1, Ordering::Relaxed);
+                        Ok((0usize, true))
+                    }
+                    Err(e) => Err(e),
+                }
+            } else {
+                SimplexGp::fit(
+                    &xs,
+                    &ys,
+                    d,
+                    guard.kernel.clone(),
+                    guard.noise,
+                    guard.config.clone(),
+                )
+                .map(|fresh| {
+                    *guard = fresh;
+                    counters.rebuilds.fetch_add(1, Ordering::Relaxed);
+                    rebuilt = true;
+                    (0usize, true)
+                })
+            }
+        } else if guard.operator().lattice.shed_count() > 0 {
+            // Worker-resident incremental ingest: the owning shard's
+            // authoritative replica absorbs the rows, the coordinator
+            // updates points + fingerprint metadata, and α re-solves on
+            // the routed operator — no shard lattice is materialized.
+            let target = guard.operator().lattice.ingest_target();
+            let target_shed = guard.operator().lattice.is_shed(target);
+            let patched: Result<crate::lattice::IngestOutcome> = if target_shed {
+                match pool.ingest_sync(target, &x) {
+                    Some((_n_p, new_m, _new_keys, new_fp)) => {
+                        guard.ingest_shed_patch(&x, &y, new_m, new_fp)
+                    }
+                    None => {
+                        // The delta's fate on the replica is unknown:
+                        // desync its links (they re-verify by
+                        // fingerprint on reconnect), rebuild in-thread
+                        // and patch locally.
+                        pool.desync(target);
+                        rebuild_all_shed(&mut guard, counters);
+                        guard.ingest_patch(&x, &y)
+                    }
+                }
+            } else {
+                // Target resident (e.g. rebuilt by an earlier
+                // fallback): patch locally and ship the delta to its
+                // replica BEFORE the routed solve — per-link FIFO means
+                // the solve's jobs see the patched replica.
+                guard.ingest_patch(&x, &y).map(|out| {
+                    let fp = guard.operator().lattice.shard_fingerprint(out.shard);
+                    pool.propagate_ingest(out.shard, &x, fp);
+                    out
+                })
+            };
+            patched.map(|out| {
+                if !guard.resolve_alpha_routed(pool) {
+                    rebuild_all_shed(&mut guard, counters);
+                    guard.resolve_alpha();
+                }
+                (out.shard, false)
             })
         } else {
             guard.ingest(&x, &y).map(|out| {
                 let fp = guard.operator().lattice.shard_fingerprint(out.shard);
-                (out.shard, false, Some(fp))
+                // Keep the remote replica in step (per-link FIFO means
+                // any later job sees the patched replica). No-op for
+                // the local pool, skipped when the link is down — its
+                // reconnect refresh rebuilds from the patched model.
+                pool.propagate_ingest(out.shard, &x, fp);
+                (out.shard, false)
             })
         };
+        // Fresh α slices for the worker replicas (variance serving
+        // checks the slice fingerprint per job, so a stale replica
+        // degrades to the rebuild fallback, never to wrong numbers).
+        if result.is_ok() && !cfg.cluster.workers.is_empty() {
+            push_alpha_all(&guard, pool);
+        }
         let n_now = guard.n_train();
         drop(guard);
-        // Keep a remote replica in step: ship the same rows to the
-        // worker holding the ingested shard (per-link FIFO means any
-        // later mvm job sees the patched replica). No-op for the local
-        // pool, skipped when the link is down — its reconnect refresh
-        // rebuilds from the already patched model.
-        if let Ok((shard, false, Some(fp))) = &result {
-            pool.propagate_ingest(*shard, &x, *fp);
-        }
         counters.batches.fetch_add(1, Ordering::Relaxed);
         match result {
-            Ok((shard, was_rebuild, _)) => {
+            Ok((shard, was_rebuild)) => {
                 counters.ingested.fetch_add(rows as u64, Ordering::Relaxed);
                 for (id, req_rows, reply, enqueued) in batch.ingests.drain(..) {
                     let mut obj = BTreeMap::new();
@@ -1069,6 +1396,7 @@ fn batch_loop(
                 id,
                 x,
                 rows,
+                variance,
                 reply,
                 enqueued,
             } => {
@@ -1080,7 +1408,7 @@ fn batch_loop(
                 }
                 batch.predict_x.extend_from_slice(&x);
                 batch.predict_rows += rows;
-                batch.predicts.push((id, rows, reply, enqueued));
+                batch.predicts.push((id, rows, variance, reply, enqueued));
             }
             Work::Mvm {
                 id,
@@ -1260,7 +1588,7 @@ fn batch_loop(
             }
         }
         if !batch.is_empty() {
-            let rebuilt = flush_batch(&mut batch, &counters, &model, &pool, &cfg);
+            let rebuilt = flush_batch(&mut batch, &counters, &model, &mut pool, &cfg);
             if rebuilt {
                 // A full refit may have changed the shard count (auto
                 // sharding scales with n): restart the worker pool
@@ -1300,7 +1628,7 @@ fn batch_loop(
         }
     }
     if !batch.is_empty() {
-        flush_batch(&mut batch, &counters, &model, &pool, &cfg);
+        flush_batch(&mut batch, &counters, &model, &mut pool, &cfg);
     }
     pool.shutdown();
 }
@@ -1354,6 +1682,38 @@ impl Client {
             .iter()
             .filter_map(|v| v.as_f64())
             .collect())
+    }
+
+    /// Predict means *and variances* for `rows × d` inputs
+    /// (`"variance": 1` on the wire).
+    pub fn predict_var(&mut self, x: &[f64], d: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+        let id = self.next_id;
+        self.next_id += 1.0;
+        let rows: Vec<Json> = x.chunks(d).map(json_num_array).collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("id".to_string(), Json::Num(id));
+        obj.insert("op".to_string(), Json::Str("predict".to_string()));
+        obj.insert("x".to_string(), Json::Arr(rows));
+        obj.insert("variance".to_string(), Json::Num(1.0));
+        let reply = self.roundtrip(Json::Obj(obj).to_string())?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        let mean = reply
+            .get("mean")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| anyhow!("reply missing mean"))?
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect();
+        let var = reply
+            .get("var")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| anyhow!("reply missing var"))?
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect();
+        Ok((mean, var))
     }
 
     /// Raw kernel MVM `u = K v` (unit outputscale) through the server's
@@ -1585,6 +1945,69 @@ mod tests {
     }
 
     #[test]
+    fn serve_predict_variance_roundtrip_bitwise() {
+        let model = sharded_model(2);
+        let xq = [0.5, -0.3, 1.0, 1.0];
+        let direct = model.predict(&xq);
+        let server = Server::start(
+            model,
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let (mean, var) = client.predict_var(&xq, 2).unwrap();
+        assert_eq!(mean.len(), 2);
+        assert_eq!(var.len(), 2);
+        for i in 0..2 {
+            assert_eq!(mean[i].to_bits(), direct.0[i].to_bits(), "mean row {i}");
+            assert_eq!(var[i].to_bits(), direct.1[i].to_bits(), "var row {i}");
+            assert!(var[i] > 0.0);
+        }
+        // Mean-only requests keep working alongside (and their replies
+        // carry no `var` field — Client::predict ignores it anyway).
+        let got = client.predict(&xq, 2).unwrap();
+        for i in 0..2 {
+            assert_eq!(got[i].to_bits(), direct.0[i].to_bits(), "mean-only row {i}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn shard_pool_symmetric_flag_matches_direct_bitwise() {
+        // The `sym` flag must select the blur-symmetrized per-shard
+        // filter end to end (worker side AND in-thread fallback), since
+        // the routed CG of shed-mode ingest runs on the symmetrized
+        // operator whenever the model was fitted with it.
+        let model = Arc::new(RwLock::new(sharded_model(2)));
+        let cfg = ServeConfig::default();
+        let counters = Arc::new(Counters::default());
+        let pool = ShardPool::start(&model, &cfg, &counters);
+        let guard = model.read().unwrap();
+        let n = guard.n_train();
+        let lat = &guard.operator().lattice;
+        let mut rng = Pcg64::new(52);
+        let b = 2;
+        let v = Arc::new(rng.normal_vec(n * b));
+        let mut direct = vec![0.0; n * b];
+        for p in 0..lat.shard_count() {
+            let part = lat.shard_mvm_block_symmetric(p, &v, b);
+            lat.scatter_shard_block(&mut direct, p, &part, b);
+        }
+        let (via_pool, missing) = pool
+            .mvm_block(lat, &v, b, true)
+            .expect("live pool must answer");
+        assert!(missing.is_empty());
+        for i in 0..n * b {
+            assert_eq!(via_pool[i].to_bits(), direct[i].to_bits(), "row {i}");
+        }
+        drop(guard);
+        pool.shutdown();
+    }
+
+    #[test]
     fn ingest_roundtrip_updates_model_and_stats() {
         let model = tiny_model();
         let cfg = ServeConfig {
@@ -1708,7 +2131,7 @@ mod tests {
         let model = Arc::new(RwLock::new(sharded_model(2)));
         let cfg = ServeConfig::default();
         let counters = Arc::new(Counters::default());
-        let mut pool = ShardPool::start(&model, &cfg, &counters);
+        let pool = ShardPool::start(&model, &cfg, &counters);
         let guard = model.read().unwrap();
         let n = guard.n_train();
         let lat = &guard.operator().lattice;
@@ -1716,7 +2139,8 @@ mod tests {
         let b = 3;
         let v = Arc::new(rng.normal_vec(n * b));
         let direct = lat.mvm_block(&v, b);
-        let (via_pool, missing) = pool.mvm_block(lat, &v, b).expect("live pool must answer");
+        let (via_pool, missing) =
+            pool.mvm_block(lat, &v, b, false).expect("live pool must answer");
         assert!(missing.is_empty());
         for i in 0..n * b {
             assert_eq!(via_pool[i].to_bits(), direct[i].to_bits(), "row {i}");
@@ -1727,7 +2151,7 @@ mod tests {
         let guard = model.read().unwrap();
         let lat = &guard.operator().lattice;
         let (degraded, missing) = pool
-            .mvm_block(lat, &v, b)
+            .mvm_block(lat, &v, b, false)
             .expect("a dead worker degrades one shard, never the pool");
         assert!(missing.is_empty(), "no shard is shed here");
         for i in 0..n * b {
@@ -1748,7 +2172,7 @@ mod tests {
         let n = guard.n_train();
         let lat = &guard.operator().lattice;
         let v = Arc::new(vec![1.0; n]);
-        assert!(pool.mvm_block(lat, &v, 1).is_none());
+        assert!(pool.mvm_block(lat, &v, 1, false).is_none());
         drop(guard);
         pool.shutdown();
     }

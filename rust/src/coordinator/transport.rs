@@ -37,7 +37,13 @@
 //! (see [`crate::solvers::precond::ShardSolveHook`]), and the
 //! `[cluster] shed_shards` mode lets the coordinator drop its own copy
 //! of remote-owned shard lattices entirely (docs/DEPLOYMENT.md
-//! §Memory budget).
+//! §Memory budget). Full worker residency rides the same links: each
+//! sync pushes the shard's α slice (`shard_alpha`, fingerprint-
+//! verified), `shard_variance_block` jobs realize predictive mean
+//! slices and cross-covariance columns on the replica, and
+//! [`ShardTransport::ingest_sync`] patches a *shed* shard's replica in
+//! place — the worker's post-ingest fingerprint is authoritative and
+//! the coordinator only updates metadata.
 //!
 //! Failure semantics (both transports): a transport is an optimization,
 //! never a correctness dependency. A slot whose worker is dead,
@@ -63,7 +69,7 @@ use super::frame::{
 };
 use crate::config::Config;
 use crate::gp::SimplexGp;
-use crate::lattice::ShardedLattice;
+use crate::lattice::{vector_fingerprint, ShardedLattice};
 use crate::solvers::ShardSolveHook;
 use crate::util::json::Json;
 
@@ -203,8 +209,9 @@ pub trait ShardTransport: Send {
     fn slots(&self) -> usize;
 
     /// Submit a `shard_mvm_block` job for shard `slot` of the coalesced
-    /// `b × n` block `v`. Returns `false` when the slot's worker cannot
-    /// take the job — the caller must compute that shard itself.
+    /// `b × n` block `v` (`sym` selects the blur-symmetrized filter the
+    /// model's solve path uses). Returns `false` when the slot's worker
+    /// cannot take the job — the caller must compute that shard itself.
     fn submit(
         &self,
         slot: usize,
@@ -212,6 +219,7 @@ pub trait ShardTransport: Send {
         v: &Arc<Vec<f64>>,
         b: usize,
         job: u64,
+        sym: bool,
     ) -> bool;
 
     /// Wait up to `timeout` for the next result message.
@@ -239,9 +247,63 @@ pub trait ShardTransport: Send {
         _v: &Arc<Vec<f64>>,
         _b: usize,
         _job: u64,
+        _sym: bool,
     ) -> bool {
         false
     }
+
+    /// Submit a `shard_variance_block` job for shard `slot`: the worker
+    /// embeds the `t` query points (`x`, row-major `t × d`) into its
+    /// replica and returns its mean-slice part plus (when `want_cols`)
+    /// its `t × n_p` cross-covariance column block, concatenated
+    /// `ks ++ cols` in one [`ShardResultMsg`]. `alpha_fp` names the
+    /// α-slice fingerprint the job was planned against, so a worker
+    /// that missed an α push fails the job instead of serving stale
+    /// predictions. Returns `false` when the slot's worker cannot take
+    /// it — the caller rebuilds the shard and computes in-thread.
+    /// Default: no remote variance (the local pool reads the
+    /// coordinator's own resident shards, which the direct path already
+    /// serves).
+    fn submit_variance(
+        &self,
+        _slot: usize,
+        _lat: &ShardedLattice,
+        _job: u64,
+        _t: usize,
+        _want_cols: bool,
+        _alpha_fp: u64,
+        _x: &Arc<Vec<f64>>,
+    ) -> bool {
+        false
+    }
+
+    /// Push shard `shard`'s slice of the representer weights α (with
+    /// its fingerprint) to every replica holding the shard, making
+    /// subsequent `shard_variance_block` jobs serveable. Best-effort:
+    /// a replica that misses the push self-heals on reconnect (and
+    /// rejects variance jobs by fingerprint until then). Default: no-op
+    /// (the local pool reads the coordinator's own α).
+    fn push_alpha(&self, _shard: usize, _alpha: &[f64], _fp: u64) {}
+
+    /// Synchronously ingest `x` (row-major `k × d`) into shard
+    /// `shard`'s *primary* replica and return the patched replica's
+    /// `(n, m, new_keys, fingerprint)` — the metadata a shed
+    /// coordinator needs to update its own bookkeeping without ever
+    /// materializing the shard. Propagates the delta to the backup
+    /// replica (against the now-authoritative fingerprint) on success.
+    /// `None` means the replica could not be patched; the caller must
+    /// fall back to [`ShardTransport::desync`] + local rebuild +
+    /// classic ingest. Default: unsupported.
+    fn ingest_sync(&self, _shard: usize, _x: &[f64]) -> Option<(usize, usize, usize, u64)> {
+        None
+    }
+
+    /// Mark every link holding a replica of `shard` unsynced: each
+    /// drops its connection and re-syncs replicas by fingerprint
+    /// against the (authoritative) model on reconnect. The fallback
+    /// half of [`ShardTransport::ingest_sync`] — an ingest delta whose
+    /// fate is unknown must never stay half-applied. Default: no-op.
+    fn desync(&self, _shard: usize) {}
 
     /// Deterministically disable the worker serving `slot` (all slots
     /// that worker holds degrade to in-thread compute). Returns whether
@@ -284,6 +346,7 @@ struct LocalJob {
     v: Arc<Vec<f64>>,
     b: usize,
     job: u64,
+    sym: bool,
 }
 
 /// P persistent in-process shard workers fed over channels: worker `p`
@@ -331,10 +394,12 @@ impl LocalTransport {
                         }
                         let part = {
                             let guard = model.read().unwrap();
-                            guard
-                                .operator()
-                                .lattice
-                                .shard_mvm_block(shard, &job.v, job.b)
+                            let lat = &guard.operator().lattice;
+                            if job.sym {
+                                lat.shard_mvm_block_symmetric(shard, &job.v, job.b)
+                            } else {
+                                lat.shard_mvm_block(shard, &job.v, job.b)
+                            }
                         };
                         if res_tx.send((job.job, shard, Some(part))).is_err() {
                             break;
@@ -364,12 +429,14 @@ impl ShardTransport for LocalTransport {
         v: &Arc<Vec<f64>>,
         b: usize,
         job: u64,
+        sym: bool,
     ) -> bool {
         self.jobs[slot]
             .send(LocalJob {
                 v: v.clone(),
                 b,
                 job,
+                sym,
             })
             .is_ok()
     }
@@ -435,12 +502,39 @@ enum LinkMsg {
         shard: usize,
         job: u64,
         b: usize,
+        sym: bool,
         local: Vec<f64>,
+    },
+    /// `shard_variance_block` job; the reply rides the shared result
+    /// channel as one `ks ++ cols` vector of exactly `expect_len`
+    /// floats (`t`, plus `t × n_p` when `want_cols`).
+    Variance {
+        shard: usize,
+        job: u64,
+        t: usize,
+        want_cols: bool,
+        alpha_fp: u64,
+        x: Arc<Vec<f64>>,
+        expect_len: usize,
+    },
+    /// Push shard's α slice (`shard_alpha`); the worker echoes `fp`.
+    Alpha {
+        shard: usize,
+        alpha: Vec<f64>,
+        fp: u64,
     },
     Ingest {
         shard: usize,
         x: Vec<f64>,
-        expect_fp: u64,
+        /// The coordinator's post-ingest shard fingerprint when it has
+        /// one (classic path: coordinator patched its own shard first);
+        /// `None` when the shard is shed and the *worker's* reply is
+        /// authoritative (`ingest_sync`).
+        expect_fp: Option<u64>,
+        /// When present, the patched replica's `(n, m, new_keys,
+        /// fingerprint)` — or `None` on failure — is sent back here
+        /// (the blocking half of `ingest_sync`).
+        ack: Option<SyncSender<Option<(usize, usize, usize, u64)>>>,
     },
 }
 
@@ -476,6 +570,10 @@ pub struct TcpTransport {
     backup: Vec<Option<usize>>,
     results: Receiver<ShardResultMsg>,
     slots: usize,
+    /// Reply deadline for the blocking `ingest_sync` roundtrip (the
+    /// cluster's `refresh_timeout`: the ack has to drain whatever is
+    /// queued ahead of it on the link first).
+    ingest_timeout: Duration,
 }
 
 impl TcpTransport {
@@ -556,6 +654,7 @@ impl TcpTransport {
             backup,
             results: res_rx,
             slots,
+            ingest_timeout: cluster.refresh_timeout,
         }
     }
 
@@ -570,6 +669,7 @@ impl TcpTransport {
         v: &Arc<Vec<f64>>,
         b: usize,
         job: u64,
+        sym: bool,
     ) -> bool {
         let link = &self.links[link_idx];
         if !link.ready.load(Ordering::Acquire) {
@@ -583,6 +683,7 @@ impl TcpTransport {
             shard: slot,
             job,
             b,
+            sym,
             local,
         })
         .is_ok()
@@ -601,11 +702,12 @@ impl ShardTransport for TcpTransport {
         v: &Arc<Vec<f64>>,
         b: usize,
         job: u64,
+        sym: bool,
     ) -> bool {
         // Non-blocking: a queue still full behind a slow worker means
         // "decline" (the caller computes this shard in-thread) — never
         // a stalled batcher.
-        self.enqueue_mvm(self.assignment[slot], slot, lat, v, b, job)
+        self.enqueue_mvm(self.assignment[slot], slot, lat, v, b, job, sym)
     }
 
     /// Hedge `slot` to its backup worker. The backup holds a synced
@@ -619,10 +721,151 @@ impl ShardTransport for TcpTransport {
         v: &Arc<Vec<f64>>,
         b: usize,
         job: u64,
+        sym: bool,
     ) -> bool {
         match self.backup.get(slot).copied().flatten() {
-            Some(bw) => self.enqueue_mvm(bw, slot, lat, v, b, job),
+            Some(bw) => self.enqueue_mvm(bw, slot, lat, v, b, job, sym),
             None => false,
+        }
+    }
+
+    /// Ship a `shard_variance_block` job to `slot`'s primary worker.
+    /// No hedging: a failed or slow variance job falls back to the
+    /// coordinator's deterministic rebuild, which is already the
+    /// correctness path.
+    fn submit_variance(
+        &self,
+        slot: usize,
+        lat: &ShardedLattice,
+        job: u64,
+        t: usize,
+        want_cols: bool,
+        alpha_fp: u64,
+        x: &Arc<Vec<f64>>,
+    ) -> bool {
+        let link = &self.links[self.assignment[slot]];
+        if !link.ready.load(Ordering::Acquire) {
+            return false;
+        }
+        let Some(tx) = link.tx.as_ref() else {
+            return false;
+        };
+        let expect_len = t + if want_cols { t * lat.shard_n(slot) } else { 0 };
+        tx.try_send(LinkMsg::Variance {
+            shard: slot,
+            job,
+            t,
+            want_cols,
+            alpha_fp,
+            x: x.clone(),
+            expect_len,
+        })
+        .is_ok()
+    }
+
+    /// Push shard `shard`'s α slice to every replica link. A ready link
+    /// that cannot take the push (queue full) is marked unsynced — the
+    /// reconnect re-pushes the slice, and until then the fingerprint
+    /// check fails its variance jobs instead of serving stale ones.
+    fn push_alpha(&self, shard: usize, alpha: &[f64], fp: u64) {
+        if shard >= self.assignment.len() {
+            return;
+        }
+        let mut targets = vec![self.assignment[shard]];
+        if let Some(bw) = self.backup.get(shard).copied().flatten() {
+            if bw != self.assignment[shard] {
+                targets.push(bw);
+            }
+        }
+        for li in targets {
+            let link = &self.links[li];
+            if !link.ready.load(Ordering::Acquire) {
+                continue;
+            }
+            if let Some(tx) = link.tx.as_ref() {
+                if tx
+                    .try_send(LinkMsg::Alpha {
+                        shard,
+                        alpha: alpha.to_vec(),
+                        fp,
+                    })
+                    .is_err()
+                {
+                    link.ready.store(false, Ordering::Release);
+                    link.unsync.store(true, Ordering::Release);
+                }
+            }
+        }
+    }
+
+    /// Blocking shed-mode ingest: patch the primary replica, wait for
+    /// its `(n, m, new_keys, fingerprint)` ack, then propagate the
+    /// delta to the backup replica against that now-authoritative
+    /// fingerprint. Per-link FIFO guarantees the ack reflects every job
+    /// enqueued before it.
+    fn ingest_sync(&self, shard: usize, x: &[f64]) -> Option<(usize, usize, usize, u64)> {
+        if shard >= self.assignment.len() {
+            return None;
+        }
+        let link = &self.links[self.assignment[shard]];
+        if !link.ready.load(Ordering::Acquire) {
+            return None;
+        }
+        let tx = link.tx.as_ref()?;
+        let (ack_tx, ack_rx) = sync_channel(1);
+        if tx
+            .try_send(LinkMsg::Ingest {
+                shard,
+                x: x.to_vec(),
+                expect_fp: None,
+                ack: Some(ack_tx),
+            })
+            .is_err()
+        {
+            return None;
+        }
+        let got = ack_rx.recv_timeout(self.ingest_timeout).ok().flatten()?;
+        if let Some(bw) = self.backup.get(shard).copied().flatten() {
+            if bw != self.assignment[shard] {
+                let blink = &self.links[bw];
+                if blink.ready.load(Ordering::Acquire) {
+                    if let Some(btx) = blink.tx.as_ref() {
+                        if btx
+                            .try_send(LinkMsg::Ingest {
+                                shard,
+                                x: x.to_vec(),
+                                expect_fp: Some(got.3),
+                                ack: None,
+                            })
+                            .is_err()
+                        {
+                            blink.ready.store(false, Ordering::Release);
+                            blink.unsync.store(true, Ordering::Release);
+                        }
+                    }
+                }
+            }
+        }
+        Some(got)
+    }
+
+    /// Force every replica link of `shard` to drop its connection and
+    /// re-sync by fingerprint — the recovery hammer for an ingest whose
+    /// fate on the wire is unknown.
+    fn desync(&self, shard: usize) {
+        if shard >= self.assignment.len() {
+            return;
+        }
+        let mut targets = vec![self.assignment[shard]];
+        if let Some(bw) = self.backup.get(shard).copied().flatten() {
+            if bw != self.assignment[shard] {
+                targets.push(bw);
+            }
+        }
+        for li in targets {
+            let link = &self.links[li];
+            link.ready.store(false, Ordering::Release);
+            link.unsync.store(true, Ordering::Release);
         }
     }
 
@@ -667,7 +910,8 @@ impl ShardTransport for TcpTransport {
                     .try_send(LinkMsg::Ingest {
                         shard,
                         x: x.to_vec(),
-                        expect_fp: expect_fingerprint,
+                        expect_fp: Some(expect_fingerprint),
+                        ack: None,
                     })
                     .is_err()
                 {
@@ -816,13 +1060,35 @@ impl LinkIo {
         }
     }
 
-    /// Fail a message we cannot serve: MVM jobs get a `None` result so
-    /// the batcher falls back immediately; ingest deltas are dropped —
-    /// the reconnect refresh rebuilds the replica from the already
-    /// patched model.
+    /// Fail a message we cannot serve: MVM/variance jobs get a `None`
+    /// result so the batcher falls back immediately; a synchronous
+    /// ingest gets a failed ack; fire-and-forget ingest deltas and α
+    /// pushes are dropped — the reconnect refresh rebuilds the replica
+    /// (and re-pushes α) from the already patched model.
     fn fail_msg(&self, msg: &LinkMsg) {
-        if let LinkMsg::Mvm { shard, job, .. } = msg {
-            let _ = self.res_tx.send((*job, *shard, None));
+        match msg {
+            LinkMsg::Mvm { shard, job, .. } | LinkMsg::Variance { shard, job, .. } => {
+                let _ = self.res_tx.send((*job, *shard, None));
+            }
+            LinkMsg::Ingest { ack: Some(ack), .. } => {
+                let _ = ack.try_send(None);
+            }
+            LinkMsg::Ingest { ack: None, .. } | LinkMsg::Alpha { .. } => {}
+        }
+    }
+
+    /// Injected straggle (`debug_delay_worker`): sleep in short slices
+    /// so shutdown stays responsive. Applied before every roundtrip —
+    /// the fault-injection tests delay a worker mid-variance and
+    /// mid-ingest, not just mid-MVM.
+    fn straggle(&self) {
+        let delay = self.delay_us.load(Ordering::Acquire);
+        if delay > 0 {
+            let until = Instant::now() + Duration::from_micros(delay);
+            while Instant::now() < until && !self.stop.load(Ordering::Acquire) {
+                let left = until.saturating_duration_since(Instant::now());
+                std::thread::sleep(left.min(Duration::from_millis(20)));
+            }
         }
     }
 
@@ -835,20 +1101,12 @@ impl LinkIo {
                 shard,
                 job,
                 b,
+                sym,
                 local,
             } => {
-                // Injected straggle (`debug_delay_worker`): sleep in
-                // short slices so shutdown stays responsive.
-                let delay = self.delay_us.load(Ordering::Acquire);
-                if delay > 0 {
-                    let until = Instant::now() + Duration::from_micros(delay);
-                    while Instant::now() < until && !self.stop.load(Ordering::Acquire) {
-                        let left = until.saturating_duration_since(Instant::now());
-                        std::thread::sleep(left.min(Duration::from_millis(20)));
-                    }
-                }
+                self.straggle();
                 let expect_len = local.len();
-                match self.roundtrip_mvm(conn, shard, job, b, &local) {
+                match self.roundtrip_mvm(conn, shard, job, b, sym, &local) {
                     Ok(u) if u.len() == expect_len => {
                         let _ = self.res_tx.send((job, shard, Some(u)));
                         false
@@ -876,21 +1134,82 @@ impl LinkIo {
                     }
                 }
             }
+            LinkMsg::Variance {
+                shard,
+                job,
+                t,
+                want_cols,
+                alpha_fp,
+                x,
+                expect_len,
+            } => {
+                self.straggle();
+                match self.roundtrip_variance(conn, shard, job, t, want_cols, alpha_fp, &x) {
+                    Ok(parts) if parts.len() == expect_len => {
+                        let _ = self.res_tx.send((job, shard, Some(parts)));
+                        false
+                    }
+                    Ok(parts) => {
+                        eprintln!(
+                            "shard-worker {}: shard {shard} variance replied {} \
+                             floats, expected {expect_len} — resyncing",
+                            self.addr,
+                            parts.len()
+                        );
+                        let _ = self.res_tx.send((job, shard, None));
+                        true
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "shard-worker {}: shard {shard} variance failed: {e} — \
+                             falling back locally",
+                            self.addr
+                        );
+                        let _ = self.res_tx.send((job, shard, None));
+                        true
+                    }
+                }
+            }
+            LinkMsg::Alpha { shard, alpha, fp } => {
+                match self.roundtrip_alpha(conn, shard, &alpha, fp) {
+                    Ok(()) => false,
+                    Err(e) => {
+                        eprintln!(
+                            "shard-worker {}: shard {shard} alpha push failed: {e} — \
+                             replica will re-sync on reconnect",
+                            self.addr
+                        );
+                        true
+                    }
+                }
+            }
             LinkMsg::Ingest {
                 shard,
                 x,
                 expect_fp,
-            } => match self.roundtrip_ingest(conn, shard, &x, expect_fp) {
-                Ok(()) => false,
-                Err(e) => {
-                    eprintln!(
-                        "shard-worker {}: shard {shard} ingest propagation \
-                         failed: {e} — replica will refresh on reconnect",
-                        self.addr
-                    );
-                    true
+                ack,
+            } => {
+                self.straggle();
+                match self.roundtrip_ingest(conn, shard, &x, expect_fp) {
+                    Ok(meta) => {
+                        if let Some(ack) = ack {
+                            let _ = ack.try_send(Some(meta));
+                        }
+                        false
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "shard-worker {}: shard {shard} ingest propagation \
+                             failed: {e} — replica will refresh on reconnect",
+                            self.addr
+                        );
+                        if let Some(ack) = ack {
+                            let _ = ack.try_send(None);
+                        }
+                        true
+                    }
                 }
-            },
+            }
         }
     }
 
@@ -900,6 +1219,7 @@ impl LinkIo {
         shard: usize,
         job: u64,
         b: usize,
+        sym: bool,
         local: &[f64],
     ) -> Result<Vec<f64>> {
         let mut obj = BTreeMap::new();
@@ -910,6 +1230,12 @@ impl LinkIo {
         // when the block length happens to divide by its old n_p — a
         // stale replica must fail the job, never return plausible rows.
         obj.insert("b".to_string(), Json::Num(b as f64));
+        // `sym` only travels when set: plain serve-path MVMs keep the
+        // exact v2 frame bytes (golden-frame compatibility), and a
+        // worker that predates the field treats absence as 0.
+        if sym {
+            obj.insert("sym".to_string(), Json::Num(1.0));
+        }
         obj.insert("v".to_string(), Json::num_array(local));
         write_frame_enc(&mut conn.writer, &Json::Obj(obj), conn.enc, &["v"])?;
         let deadline = Instant::now() + self.cluster.result_timeout;
@@ -926,13 +1252,103 @@ impl LinkIo {
             .ok_or_else(|| anyhow!("reply missing u"))
     }
 
+    /// One `shard_variance_block` exchange; returns the concatenated
+    /// `ks ++ cols` floats.
+    fn roundtrip_variance(
+        &self,
+        conn: &mut Conn,
+        shard: usize,
+        job: u64,
+        t: usize,
+        want_cols: bool,
+        alpha_fp: u64,
+        x: &[f64],
+    ) -> Result<Vec<f64>> {
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "op".to_string(),
+            Json::Str("shard_variance_block".to_string()),
+        );
+        obj.insert("shard".to_string(), Json::Num(shard as f64));
+        obj.insert("job".to_string(), Json::Num(job as f64));
+        obj.insert("t".to_string(), Json::Num(t as f64));
+        obj.insert(
+            "cols".to_string(),
+            Json::Num(if want_cols { 1.0 } else { 0.0 }),
+        );
+        obj.insert("alpha_fp".to_string(), Json::Str(format_fp(alpha_fp)));
+        obj.insert("x".to_string(), Json::num_array(x));
+        write_frame_enc(&mut conn.writer, &Json::Obj(obj), conn.enc, &["x"])?;
+        let deadline = Instant::now() + self.cluster.result_timeout;
+        let reply = conn
+            .reader
+            .read_frame(Some(&self.stop), Some(deadline))?
+            .ok_or_else(|| anyhow!("connection closed"))?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            bail!("worker error: {err}");
+        }
+        let mut parts = reply
+            .get("ks")
+            .and_then(|k| k.to_f64_vec())
+            .ok_or_else(|| anyhow!("reply missing ks"))?;
+        if want_cols {
+            let cols = reply
+                .get("cols")
+                .and_then(|c| c.to_f64_vec())
+                .ok_or_else(|| anyhow!("reply missing cols"))?;
+            parts.extend_from_slice(&cols);
+        }
+        Ok(parts)
+    }
+
+    /// One `shard_alpha` push; the worker must echo the slice
+    /// fingerprint we computed, proving the floats survived the wire
+    /// bit-exactly.
+    fn roundtrip_alpha(
+        &self,
+        conn: &mut Conn,
+        shard: usize,
+        alpha: &[f64],
+        fp: u64,
+    ) -> Result<()> {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".to_string(), Json::Str("shard_alpha".to_string()));
+        obj.insert("shard".to_string(), Json::Num(shard as f64));
+        obj.insert("alpha".to_string(), Json::num_array(alpha));
+        write_frame_enc(&mut conn.writer, &Json::Obj(obj), conn.enc, &["alpha"])?;
+        let deadline = Instant::now() + self.cluster.result_timeout;
+        let reply = conn
+            .reader
+            .read_frame(Some(&self.stop), Some(deadline))?
+            .ok_or_else(|| anyhow!("connection closed"))?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            bail!("worker error: {err}");
+        }
+        let echoed = reply
+            .get("alpha_fp")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| anyhow!("alpha reply missing alpha_fp"))?;
+        if echoed != format_fp(fp) {
+            bail!(
+                "alpha fingerprint {echoed} != expected {} after push",
+                format_fp(fp)
+            );
+        }
+        Ok(())
+    }
+
+    /// One `ingest` exchange; returns the patched replica's
+    /// `(n, m, new_keys, fingerprint)`. With `expect_fp` the replica
+    /// must land exactly on the coordinator's post-ingest fingerprint;
+    /// without (shed shard — the coordinator has nothing to compare
+    /// against) the worker's fingerprint is accepted as authoritative.
     fn roundtrip_ingest(
         &self,
         conn: &mut Conn,
         shard: usize,
         x: &[f64],
-        expect_fp: u64,
-    ) -> Result<()> {
+        expect_fp: Option<u64>,
+    ) -> Result<(usize, usize, usize, u64)> {
         let mut obj = BTreeMap::new();
         obj.insert("op".to_string(), Json::Str("ingest".to_string()));
         obj.insert("shard".to_string(), Json::Num(shard as f64));
@@ -946,17 +1362,33 @@ impl LinkIo {
         if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
             bail!("worker error: {err}");
         }
-        let fp = reply
+        let fp_str = reply
             .get("fingerprint")
             .and_then(|f| f.as_str())
             .ok_or_else(|| anyhow!("ingest reply missing fingerprint"))?;
-        if fp != format_fp(expect_fp) {
-            bail!(
-                "replica fingerprint {fp} != expected {} after ingest",
-                format_fp(expect_fp)
-            );
+        if let Some(expect) = expect_fp {
+            if fp_str != format_fp(expect) {
+                bail!(
+                    "replica fingerprint {fp_str} != expected {} after ingest",
+                    format_fp(expect)
+                );
+            }
         }
-        Ok(())
+        let fp = u64::from_str_radix(fp_str, 16)
+            .map_err(|_| anyhow!("unparseable fingerprint {fp_str}"))?;
+        let n = reply
+            .get("n")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("ingest reply missing n"))?;
+        let m = reply
+            .get("m")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("ingest reply missing m"))?;
+        let new_keys = reply
+            .get("new_keys")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("ingest reply missing new_keys"))?;
+        Ok((n, m, new_keys, fp))
     }
 
     /// Dial, handshake, and sync every assigned shard's replica. A
@@ -986,6 +1418,11 @@ impl LinkIo {
             self.cluster.encoding,
             &self.assigned,
         )?;
+        // `shard_alpha` / `shard_variance_block` exist from v2 on: a v1
+        // link serves MVMs only, and variance jobs for its shards fall
+        // back to the coordinator's deterministic rebuild.
+        let version = reply.get("version").and_then(|v| v.as_f64()).unwrap_or(1.0);
+        let push_alpha = version >= 2.0;
         // Fingerprints of shards the worker already holds.
         let mut held: BTreeMap<usize, String> = BTreeMap::new();
         if let Some(list) = reply.get("shards").and_then(|s| s.as_arr()) {
@@ -999,19 +1436,33 @@ impl LinkIo {
             }
         }
 
-        let mut synced: Vec<(usize, u64)> = Vec::with_capacity(self.assigned.len());
+        let mut synced: Vec<(usize, u64, Option<u64>)> =
+            Vec::with_capacity(self.assigned.len());
         for &p in &self.assigned {
             // Snapshot the shard under the read lock, then do the slow
             // network work without holding it.
-            let (msg, expect_fp) = {
+            let (msg, expect_fp, alpha_part) = {
                 let guard = self.model.read().unwrap();
                 let lat = &guard.operator().lattice;
                 if p >= lat.shard_count() {
                     bail!("shard {p} no longer exists (model rebuilt)");
                 }
+                // Snapshot the shard's α slice alongside the lattice:
+                // pushing it during sync is what lets the replica serve
+                // `shard_variance_block` the moment the link goes ready.
+                // Unresolved α (mid-refit) pushes nothing — the resolve
+                // that follows broadcasts fresh slices itself.
+                let alpha_part = if push_alpha && guard.alpha().len() == lat.n {
+                    let (s0, s1) = (lat.bounds[p], lat.bounds[p + 1]);
+                    let slice = guard.alpha()[s0..s1].to_vec();
+                    let afp = vector_fingerprint(&slice);
+                    Some((slice, afp))
+                } else {
+                    None
+                };
                 let fp = lat.shard_fingerprint(p);
                 if held.get(&p) == Some(&format_fp(fp)) {
-                    (None, fp) // replica already matches — skip refresh
+                    (None, fp, alpha_part) // replica already matches — skip refresh
                 } else {
                     let d = lat.d;
                     let (s0, s1) = (lat.bounds[p], lat.bounds[p + 1]);
@@ -1044,43 +1495,81 @@ impl LinkIo {
                         "x".to_string(),
                         Json::num_array(&guard.x_train[s0 * d..s1 * d]),
                     );
-                    (Some(Json::Obj(obj)), fp)
+                    (Some(Json::Obj(obj)), fp, alpha_part)
                 }
             };
-            synced.push((p, expect_fp));
-            let Some(msg) = msg else { continue };
-            write_frame_enc(&mut writer, &msg, enc, &["x"])?;
-            let deadline = Instant::now() + self.cluster.refresh_timeout;
-            let reply = reader
-                .read_frame(Some(&self.stop), Some(deadline))?
-                .ok_or_else(|| anyhow!("connection closed during refresh"))?;
-            if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
-                bail!("refresh_shard {p} rejected: {err}");
+            synced.push((p, expect_fp, alpha_part.as_ref().map(|(_, afp)| *afp)));
+            if let Some(msg) = msg {
+                write_frame_enc(&mut writer, &msg, enc, &["x"])?;
+                let deadline = Instant::now() + self.cluster.refresh_timeout;
+                let reply = reader
+                    .read_frame(Some(&self.stop), Some(deadline))?
+                    .ok_or_else(|| anyhow!("connection closed during refresh"))?;
+                if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+                    bail!("refresh_shard {p} rejected: {err}");
+                }
+                let fp = reply
+                    .get("fingerprint")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("refresh reply missing fingerprint"))?;
+                if fp != format_fp(expect_fp) {
+                    bail!(
+                        "shard {p} replica fingerprint {fp} != {} — \
+                         worker build diverges from coordinator",
+                        format_fp(expect_fp)
+                    );
+                }
             }
-            let fp = reply
-                .get("fingerprint")
-                .and_then(|f| f.as_str())
-                .ok_or_else(|| anyhow!("refresh reply missing fingerprint"))?;
-            if fp != format_fp(expect_fp) {
-                bail!(
-                    "shard {p} replica fingerprint {fp} != {} — \
-                     worker build diverges from coordinator",
-                    format_fp(expect_fp)
-                );
+            if let Some((slice, afp)) = alpha_part {
+                let mut obj = BTreeMap::new();
+                obj.insert("op".to_string(), Json::Str("shard_alpha".to_string()));
+                obj.insert("shard".to_string(), Json::Num(p as f64));
+                obj.insert("alpha".to_string(), Json::num_array(&slice));
+                write_frame_enc(&mut writer, &Json::Obj(obj), enc, &["alpha"])?;
+                let deadline = Instant::now() + self.cluster.result_timeout;
+                let reply = reader
+                    .read_frame(Some(&self.stop), Some(deadline))?
+                    .ok_or_else(|| anyhow!("connection closed during alpha sync"))?;
+                if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+                    bail!("shard_alpha {p} rejected: {err}");
+                }
+                let echoed = reply
+                    .get("alpha_fp")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("alpha reply missing alpha_fp"))?;
+                if echoed != format_fp(afp) {
+                    bail!(
+                        "shard {p} alpha fingerprint {echoed} != {} — \
+                         slice corrupted in flight",
+                        format_fp(afp)
+                    );
+                }
             }
         }
-        // Close the snapshot race: an ingest that landed while the
-        // refresh frames were in flight was NOT propagated to this link
-        // (the batcher skips non-ready links, and we only go ready when
-        // this function returns). Re-verify every assigned shard against
-        // the *current* model — any drift fails the sync, and the
+        // Close the snapshot race: an ingest (or an α re-resolve) that
+        // landed while the sync frames were in flight was NOT propagated
+        // to this link (the batcher skips non-ready links, and we only
+        // go ready when this function returns). Re-verify every assigned
+        // shard — lattice fingerprint AND α-slice fingerprint — against
+        // the *current* model: any drift fails the sync, and the
         // immediate retry snapshots the patched state.
         {
             let guard = self.model.read().unwrap();
             let lat = &guard.operator().lattice;
-            for &(p, fp) in &synced {
+            for &(p, fp, afp) in &synced {
                 if p >= lat.shard_count() || lat.shard_fingerprint(p) != fp {
                     bail!("model changed during replica sync (shard {p}); resyncing");
+                }
+                if push_alpha {
+                    let current = if guard.alpha().len() == lat.n {
+                        let (s0, s1) = (lat.bounds[p], lat.bounds[p + 1]);
+                        Some(vector_fingerprint(&guard.alpha()[s0..s1]))
+                    } else {
+                        None
+                    };
+                    if current != afp {
+                        bail!("alpha changed during replica sync (shard {p}); resyncing");
+                    }
                 }
             }
         }

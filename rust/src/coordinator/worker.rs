@@ -32,9 +32,18 @@
 //! deterministic from `(x, kernel, rank, σ²)`, so the factor is bitwise
 //! the coordinator's — and apply it to a `b × n_p` residual block. The
 //! factor is cached per `(rank, σ²)` and invalidated by
-//! `refresh_shard`/`ingest`. The worker still never sees targets or
-//! representer weights; all cross-shard aggregation stays on the
-//! coordinator.
+//! `refresh_shard`/`ingest`.
+//!
+//! For fully worker-resident serving the coordinator additionally
+//! pushes each shard's slice of the representer weights α
+//! (`shard_alpha`, fingerprint-echoed) and the worker then answers
+//! `shard_variance_block`: embed the query points into its replica and
+//! return the shard's mean-slice part plus (on request) its `t × n_p`
+//! cross-covariance column block — the per-shard pieces of
+//! `SimplexGp::predict`, realized where the replica lives so a shed
+//! shard never has to be rebuilt on the coordinator for prediction.
+//! All cross-shard aggregation (the committee reduction, the variance
+//! CG) stays on the coordinator.
 
 use std::collections::BTreeMap;
 use std::io::Write as _;
@@ -50,12 +59,12 @@ use super::frame::{
 };
 use super::transport::{format_fp, PROTOCOL_VERSION};
 use crate::kernels::{ArdKernel, KernelFamily};
-use crate::lattice::PermutohedralLattice;
+use crate::lattice::{vector_fingerprint, PermutohedralLattice};
 use crate::solvers::precond::{ExactKernelRows, PivCholPrecond};
 use crate::util::json::Json;
 
 /// Reply fields shipped as raw blobs on `bin1` connections.
-const REPLY_BIN_FIELDS: &[&str] = &["u", "z"];
+const REPLY_BIN_FIELDS: &[&str] = &["u", "z", "ks", "cols"];
 
 /// Shard-worker configuration (CLI flags of the `shard-worker`
 /// subcommand; see also `[cluster] frame_mb`).
@@ -100,6 +109,15 @@ struct HeldShard {
     /// Cached `(rank, σ².to_bits())`-keyed pivoted-Cholesky factor;
     /// invalidated whenever the points change.
     solver: Option<(usize, u64, PivCholPrecond)>,
+    /// The shard's slice of the coordinator's representer weights α,
+    /// pushed by `shard_alpha` and keyed by its fingerprint so a
+    /// `shard_variance_block` against a stale slice fails fast instead
+    /// of returning plausible-but-wrong parts. Cleared by
+    /// `refresh_shard`/`ingest` (the slice geometry changed).
+    alpha: Option<(Vec<f64>, u64)>,
+    /// Cached `K_p α_p` blur of the stored α slice (what mean slices
+    /// read); rebuilt lazily, dropped with the α slice.
+    z: Option<Vec<f64>>,
     /// `shard_mvm_block` jobs answered from THIS replica (reset by
     /// `refresh_shard`). Distinguishes primary from hedged-backup
     /// traffic when a worker holds both roles for different shards —
@@ -137,6 +155,7 @@ struct WorkerState {
     shards: Mutex<BTreeMap<usize, HeldShard>>,
     served: AtomicU64,
     solved: AtomicU64,
+    varianced: AtomicU64,
     max_version: u32,
 }
 
@@ -163,6 +182,7 @@ impl ShardWorker {
             shards: Mutex::new(BTreeMap::new()),
             served: AtomicU64::new(0),
             solved: AtomicU64::new(0),
+            varianced: AtomicU64::new(0),
             max_version: cfg.max_protocol_version,
         });
         let accept_stop = stop.clone();
@@ -202,6 +222,12 @@ impl ShardWorker {
     /// `shard_solve_block` jobs answered so far.
     pub fn solved(&self) -> u64 {
         self.state.solved.load(Ordering::Relaxed)
+    }
+
+    /// `shard_variance_block` jobs answered so far (the shed-mode tests
+    /// assert predictive variance was actually served worker-side).
+    pub fn varianced(&self) -> u64 {
+        self.state.varianced.load(Ordering::Relaxed)
     }
 
     /// Shard ids currently held (replicas synced by a coordinator).
@@ -360,6 +386,14 @@ fn handle_op(req: &Json, state: &WorkerState) -> Json {
             Ok(reply) => reply,
             Err(e) => err_reply(req, e.to_string()),
         },
+        Some("shard_alpha") => match shard_alpha(req, state) {
+            Ok(reply) => reply,
+            Err(e) => err_reply(req, e.to_string()),
+        },
+        Some("shard_variance_block") => match shard_variance_block(req, state) {
+            Ok(reply) => reply,
+            Err(e) => err_reply(req, e.to_string()),
+        },
         Some("ingest") => match ingest(req, state) {
             Ok(reply) => reply,
             Err(e) => err_reply(req, e.to_string()),
@@ -378,6 +412,10 @@ fn handle_op(req: &Json, state: &WorkerState) -> Json {
                 Json::Num(state.solved.load(Ordering::Relaxed) as f64),
             );
             obj.insert(
+                "varianced".to_string(),
+                Json::Num(state.varianced.load(Ordering::Relaxed) as f64),
+            );
+            obj.insert(
                 "shards".to_string(),
                 Json::Arr(shards.iter().map(|(p, h)| shard_status(*p, h)).collect()),
             );
@@ -386,7 +424,7 @@ fn handle_op(req: &Json, state: &WorkerState) -> Json {
         _ => err_reply(
             req,
             "unknown op (use hello | refresh_shard | shard_mvm_block | shard_solve_block \
-             | ingest | stats)"
+             | shard_alpha | shard_variance_block | ingest | stats)"
                 .to_string(),
         ),
     }
@@ -450,6 +488,8 @@ fn refresh_shard(req: &Json, state: &WorkerState) -> Result<Json> {
         kernel,
         x,
         solver: None,
+        alpha: None,
+        z: None,
         served: 0,
     };
     let reply = ok_shard_reply(shard, &held, None);
@@ -494,11 +534,18 @@ fn shard_mvm_block(req: &Json, state: &WorkerState) -> Result<Json> {
             v.len()
         ));
     }
-    // Identical arithmetic to `ShardedLattice::shard_mvm_block`, which
-    // gathers the segment and calls the shard lattice's `filter_block`:
-    // here the coordinator already gathered, so this IS that call —
-    // byte-identical rows by construction.
-    let u = held.lattice.filter_block(&v, b);
+    // Identical arithmetic to `ShardedLattice::shard_mvm_block[_symmetric]`,
+    // which gathers the segment and calls the shard lattice's
+    // `filter_block[_symmetric]`: here the coordinator already gathered,
+    // so this IS that call — byte-identical rows by construction. `sym`
+    // is optional (absent = 0) so v2 frames from a pre-variance-offload
+    // coordinator keep their meaning.
+    let sym = req.get("sym").and_then(|v| v.as_f64()).unwrap_or(0.0) != 0.0;
+    let u = if sym {
+        held.lattice.filter_block_symmetric(&v, b)
+    } else {
+        held.lattice.filter_block(&v, b)
+    };
     held.served += 1;
     state.served.fetch_add(1, Ordering::Relaxed);
     let mut obj = BTreeMap::new();
@@ -603,7 +650,124 @@ fn ingest(req: &Json, state: &WorkerState) -> Result<Json> {
     let new_keys = held.lattice.ingest(&x, &kernel);
     held.x.extend_from_slice(&x);
     held.solver = None;
+    // The shard grew, so any stored α slice no longer matches its
+    // geometry — the coordinator re-resolves and re-pushes after every
+    // ingest round anyway.
+    held.alpha = None;
+    held.z = None;
     Ok(ok_shard_reply(shard, held, Some(new_keys)))
+}
+
+/// Store the shard's slice of the representer weights α (length `n_p`).
+/// The reply echoes the slice fingerprint so the coordinator can verify
+/// the push landed intact; `shard_variance_block` requests then name
+/// that fingerprint, which is what keeps a worker that missed an α
+/// update from serving stale predictions.
+fn shard_alpha(req: &Json, state: &WorkerState) -> Result<Json> {
+    let shard = req
+        .get("shard")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("shard_alpha needs shard"))?;
+    let alpha = req
+        .get("alpha")
+        .and_then(|v| v.to_f64_vec())
+        .ok_or_else(|| anyhow!("shard_alpha needs alpha"))?;
+    let mut shards = state.shards.lock().unwrap();
+    let held = shards
+        .get_mut(&shard)
+        .ok_or_else(|| anyhow!("shard {shard} not held (refresh_shard first)"))?;
+    let np = held.lattice.n;
+    if alpha.len() != np {
+        return Err(anyhow!(
+            "alpha length {} != n_p = {np} (replica stale?)",
+            alpha.len()
+        ));
+    }
+    let fp = vector_fingerprint(&alpha);
+    held.alpha = Some((alpha, fp));
+    held.z = None;
+    let mut obj = BTreeMap::new();
+    obj.insert("ok".to_string(), Json::Num(1.0));
+    obj.insert("shard".to_string(), Json::Num(shard as f64));
+    obj.insert("n".to_string(), Json::Num(np as f64));
+    obj.insert("alpha_fp".to_string(), Json::Str(format_fp(fp)));
+    Ok(Json::Obj(obj))
+}
+
+/// Serve one predictive-variance (or mean-only, `cols = 0`) block from
+/// the shard replica: embed the `t` query points into the replica's
+/// lattice and return this shard's mean-slice part `ks` (length `t`)
+/// plus, when asked, its row-major `t × n_p` cross-covariance column
+/// block `cols`. Both come out of
+/// [`PermutohedralLattice::shard_variance_parts`] — exactly the
+/// arithmetic `slice_at_sum`/`cross_cov_block` run per resident shard —
+/// so the coordinator's committee reduction over these parts is bitwise
+/// the all-resident prediction. The request names the α-slice
+/// fingerprint it was planned against; a mismatch (worker missed an α
+/// push) fails the job and the coordinator falls back.
+fn shard_variance_block(req: &Json, state: &WorkerState) -> Result<Json> {
+    let shard = req
+        .get("shard")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("shard_variance_block needs shard"))?;
+    let job = req
+        .get("job")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("shard_variance_block needs job"))?;
+    let t = req
+        .get("t")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("shard_variance_block needs t"))?;
+    if t == 0 {
+        return Err(anyhow!("t must be >= 1"));
+    }
+    let want_cols = req.get("cols").and_then(|v| v.as_f64()).unwrap_or(0.0) != 0.0;
+    let alpha_fp = req
+        .get("alpha_fp")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("shard_variance_block needs alpha_fp"))?
+        .to_string();
+    let x = req
+        .get("x")
+        .and_then(|v| v.to_f64_vec())
+        .ok_or_else(|| anyhow!("shard_variance_block needs x"))?;
+    let mut shards = state.shards.lock().unwrap();
+    let held = shards
+        .get_mut(&shard)
+        .ok_or_else(|| anyhow!("shard {shard} not held (refresh_shard first)"))?;
+    let d = held.lattice.d;
+    if x.len() != t * d {
+        return Err(anyhow!(
+            "query length {} != t × d = {t} × {d} (coordinate mismatch?)",
+            x.len()
+        ));
+    }
+    let Some((alpha, fp)) = &held.alpha else {
+        return Err(anyhow!("shard {shard} has no alpha slice (shard_alpha first)"));
+    };
+    if format_fp(*fp) != alpha_fp {
+        return Err(anyhow!(
+            "alpha fingerprint mismatch: have {}, request expects {alpha_fp} \
+             (alpha slice stale?)",
+            format_fp(*fp)
+        ));
+    }
+    if held.z.is_none() {
+        held.z = Some(held.lattice.splat_blur(alpha, 1));
+    }
+    let z = held.z.as_ref().unwrap();
+    let (ks, cols) = held
+        .lattice
+        .shard_variance_parts(&x, &held.kernel, z, want_cols);
+    state.varianced.fetch_add(1, Ordering::Relaxed);
+    let mut obj = BTreeMap::new();
+    obj.insert("job".to_string(), Json::Num(job));
+    obj.insert("shard".to_string(), Json::Num(shard as f64));
+    obj.insert("ks".to_string(), Json::num_array(&ks));
+    if want_cols {
+        obj.insert("cols".to_string(), Json::num_array(&cols));
+    }
+    Ok(Json::Obj(obj))
 }
 
 fn ok_shard_reply(shard: usize, held: &HeldShard, new_keys: Option<usize>) -> Json {
@@ -643,6 +807,7 @@ mod tests {
             shards: Mutex::new(BTreeMap::new()),
             served: AtomicU64::new(0),
             solved: AtomicU64::new(0),
+            varianced: AtomicU64::new(0),
             max_version: PROTOCOL_VERSION,
         }
     }
@@ -931,6 +1096,120 @@ mod tests {
         // builds factors from).
         let shards = state.shards.lock().unwrap();
         assert_eq!(shards.get(&0).unwrap().x, x);
+    }
+
+    #[test]
+    fn mvm_block_symmetric_flag_matches_direct_filter_bitwise() {
+        let d = 2;
+        let mut rng = Pcg64::new(31);
+        let x = rng.normal_vec(32 * d);
+        let state = fresh_state();
+        handle_op(&refresh_req(0, d, &x), &state);
+        let b = 2;
+        let v = rng.normal_vec(32 * b);
+        let k = test_kernel(d);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let mvm = |sym: f64| {
+            handle_op(
+                &req(vec![
+                    ("op", Json::Str("shard_mvm_block".to_string())),
+                    ("shard", Json::Num(0.0)),
+                    ("job", Json::Num(1.0)),
+                    ("b", Json::Num(b as f64)),
+                    ("sym", Json::Num(sym)),
+                    ("v", Json::num_array(&v)),
+                ]),
+                &state,
+            )
+            .get("u")
+            .and_then(|u| u.to_f64_vec())
+            .unwrap()
+        };
+        let plain = mvm(0.0);
+        let symm = mvm(1.0);
+        let want_plain = lat.filter_block(&v, b);
+        let want_symm = lat.filter_block_symmetric(&v, b);
+        for i in 0..plain.len() {
+            assert_eq!(plain[i].to_bits(), want_plain[i].to_bits(), "row {i}");
+            assert_eq!(symm[i].to_bits(), want_symm[i].to_bits(), "sym row {i}");
+        }
+    }
+
+    #[test]
+    fn variance_block_matches_local_parts_bitwise() {
+        let d = 2;
+        let mut rng = Pcg64::new(29);
+        let x = rng.normal_vec(40 * d);
+        let state = fresh_state();
+        handle_op(&refresh_req(0, d, &x), &state);
+        // Variance before any alpha push fails cleanly.
+        let xs = rng.normal_vec(6 * d);
+        let var_req = |fp: &str, cols: f64| {
+            req(vec![
+                ("op", Json::Str("shard_variance_block".to_string())),
+                ("shard", Json::Num(0.0)),
+                ("job", Json::Num(7.0)),
+                ("t", Json::Num(6.0)),
+                ("cols", Json::Num(cols)),
+                ("alpha_fp", Json::Str(fp.to_string())),
+                ("x", Json::num_array(&xs)),
+            ])
+        };
+        let early = handle_op(&var_req("0000000000000000", 1.0), &state);
+        assert!(
+            early
+                .get("error")
+                .and_then(|e| e.as_str())
+                .is_some_and(|e| e.contains("shard_alpha first")),
+            "{early}"
+        );
+        // Push an alpha slice; the echo carries its fingerprint.
+        let alpha = rng.normal_vec(40);
+        let pushed = handle_op(
+            &req(vec![
+                ("op", Json::Str("shard_alpha".to_string())),
+                ("shard", Json::Num(0.0)),
+                ("alpha", Json::num_array(&alpha)),
+            ]),
+            &state,
+        );
+        assert_eq!(pushed.get("ok").and_then(|v| v.as_f64()), Some(1.0), "{pushed}");
+        let fp = pushed.get("alpha_fp").and_then(|v| v.as_str()).unwrap().to_string();
+        assert_eq!(fp, format_fp(vector_fingerprint(&alpha)));
+        // A stale fingerprint is rejected (worker missed an alpha push).
+        let stale = handle_op(&var_req("ffffffffffffffff", 1.0), &state);
+        assert!(
+            stale
+                .get("error")
+                .and_then(|e| e.as_str())
+                .is_some_and(|e| e.contains("alpha fingerprint mismatch")),
+            "{stale}"
+        );
+        // The matching request returns exactly the parts a resident
+        // shard would contribute, bit for bit.
+        let reply = handle_op(&var_req(&fp, 1.0), &state);
+        let ks = reply.get("ks").and_then(|v| v.to_f64_vec()).unwrap();
+        let cols = reply.get("cols").and_then(|v| v.to_f64_vec()).unwrap();
+        let k = test_kernel(d);
+        let lat = PermutohedralLattice::build(&x, d, &k, 1);
+        let z = lat.splat_blur(&alpha, 1);
+        let (want_ks, want_cols) = lat.shard_variance_parts(&xs, &k, &z, true);
+        assert_eq!(ks.len(), 6);
+        assert_eq!(cols.len(), 6 * 40);
+        for i in 0..ks.len() {
+            assert_eq!(ks[i].to_bits(), want_ks[i].to_bits(), "ks {i}");
+        }
+        for i in 0..cols.len() {
+            assert_eq!(cols[i].to_bits(), want_cols[i].to_bits(), "col {i}");
+        }
+        // Mean-only (`cols = 0`) omits the column block.
+        let mean_only = handle_op(&var_req(&fp, 0.0), &state);
+        assert!(mean_only.get("cols").is_none(), "{mean_only}");
+        assert_eq!(
+            mean_only.get("ks").and_then(|v| v.to_f64_vec()).unwrap(),
+            ks
+        );
+        assert_eq!(state.varianced.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -2,16 +2,130 @@
 //! permutohedral-lattice MVM inside the BBMM machinery (CG for solves,
 //! SLQ for log-determinants).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
 use crate::kernels::ArdKernel;
+use crate::lattice::{vector_fingerprint, ShardedLattice};
 use crate::mvm::{MvmOperator, Shifted, ShardedMvm};
 use crate::solvers::{
     cg_block_precond, slq_logdet, CgOptions, OffloadedPrecond, Precond, ShardSolveHook,
     ShardedPivCholPrecond,
 };
+use crate::util::layout::{block_to_interleaved, interleaved_to_block};
+
+/// Routes per-shard lattice work to whoever holds the authoritative
+/// replica — the serving coordinator's shard pool implements this over
+/// its worker links. Both methods return `None` when some *shed* shard
+/// could not be served remotely (link down, stale replica, timeout);
+/// the caller then falls back to the deterministic local-rebuild path.
+/// Resident shards never fail: implementations compute them in-thread
+/// with the exact local arithmetic when no worker answers.
+pub trait ShardRouter: Sync {
+    /// Full batched kernel MVM (unit outputscale), row-major `b × n` in
+    /// and out, with `sym` selecting the exactly-symmetrized blur —
+    /// assembled from per-shard worker replies plus in-thread fallbacks
+    /// for resident shards. `None` iff a shed shard went unanswered.
+    fn route_mvm_block(
+        &self,
+        lat: &ShardedLattice,
+        v: &[f64],
+        b: usize,
+        sym: bool,
+    ) -> Option<Vec<f64>>;
+
+    /// Per-shard predictive parts for `t` test rows (`x`, row-major
+    /// `t × d`) of the listed **shed** shards: for each shard `p` (in
+    /// list order) the worker returns `(ks, cols)` where `ks` is the
+    /// shard's mean slice `K(X*, X_p)·α_p` (length `t`, unit
+    /// outputscale) and `cols` — only when `want_cols` — the row-major
+    /// `t × n_p` cross-covariance block. `alpha_fps` carries the
+    /// fingerprint of each shard's α segment so a worker holding stale
+    /// weights fails the job instead of serving wrong bits.
+    fn route_variance(
+        &self,
+        lat: &ShardedLattice,
+        shards: &[usize],
+        alpha_fps: &[u64],
+        x: &[f64],
+        t: usize,
+        want_cols: bool,
+    ) -> Option<Vec<(Vec<f64>, Vec<f64>)>>;
+}
+
+/// [`ShardedMvm`] with every shard MVM routed through a
+/// [`ShardRouter`] — the operator the coordinator's CG solves run on
+/// when shard lattices are shed. Arithmetic is exactly
+/// [`ShardedMvm`]'s (same per-shard filter, same scatter, same
+/// outputscale loop), so a CG driven by this operator produces
+/// bit-identical iterates to the local one; only *where* each shard's
+/// filter executes changes. A routing failure latches
+/// [`RoutedMvm::failed`] and returns zeros — the caller must check the
+/// flag and discard the solve.
+pub struct RoutedMvm<'a> {
+    op: &'a ShardedMvm,
+    router: &'a dyn ShardRouter,
+    failed: AtomicBool,
+}
+
+impl<'a> RoutedMvm<'a> {
+    /// Wrap `op` so its per-shard MVMs go through `router`.
+    pub fn new(op: &'a ShardedMvm, router: &'a dyn ShardRouter) -> Self {
+        RoutedMvm {
+            op,
+            router,
+            failed: AtomicBool::new(false),
+        }
+    }
+
+    /// Whether any routed MVM failed (shed shard unanswered). Once set,
+    /// every result produced by this operator is garbage.
+    pub fn failed(&self) -> bool {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    /// Identical arithmetic to `ShardedMvm::scale`.
+    fn scale(&self, mut out: Vec<f64>) -> Vec<f64> {
+        if self.op.outputscale != 1.0 {
+            for o in out.iter_mut() {
+                *o *= self.op.outputscale;
+            }
+        }
+        out
+    }
+}
+
+impl MvmOperator for RoutedMvm<'_> {
+    fn len(&self) -> usize {
+        self.op.len()
+    }
+
+    fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        self.mvm_block(v, 1)
+    }
+
+    fn mvm_multi(&self, v: &[f64], nc: usize) -> Vec<f64> {
+        let n = self.len();
+        assert_eq!(v.len(), n * nc);
+        let block = interleaved_to_block(v, n, nc);
+        block_to_interleaved(&self.mvm_block(&block, nc), n, nc)
+    }
+
+    fn mvm_block(&self, v: &[f64], b: usize) -> Vec<f64> {
+        match self
+            .router
+            .route_mvm_block(&self.op.lattice, v, b, self.op.symmetrize)
+        {
+            Some(out) => self.scale(out),
+            None => {
+                self.failed.store(true, Ordering::Relaxed);
+                vec![0.0; v.len()]
+            }
+        }
+    }
+}
 
 /// Inference-time configuration (defaults mirror the paper's Table 5).
 #[derive(Clone, Debug)]
@@ -178,6 +292,64 @@ impl SimplexGp {
         })
     }
 
+    /// Fit with **every shard lattice shed from birth**: shard lattices
+    /// are built one at a time ([`ShardedLattice::build_sequential`]),
+    /// fingerprinted, and dropped immediately, so peak lattice memory is
+    /// O(max_p m_p) instead of O(Σ m_p) — the oversized-refit path of
+    /// the serving coordinator's `shed_shards` mode. The remote workers
+    /// rebuild their replicas from the pushed *points* and are verified
+    /// against the retained fingerprints.
+    ///
+    /// The returned model has **no representer weights yet**
+    /// (`alpha().is_empty()`): solving α needs the operator, and the
+    /// operator now lives on the workers — the caller must run
+    /// [`SimplexGp::resolve_alpha_routed`] once the worker links are
+    /// synced (or rebuild the shards and
+    /// [`SimplexGp::resolve_alpha`] locally). The partition, the
+    /// preconditioner (built from points, resident as ever) and — after
+    /// the routed solve — α itself are all bit-identical to what
+    /// [`SimplexGp::fit`] on the same data produces.
+    pub fn fit_shed(
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+        kernel: ArdKernel,
+        noise: f64,
+        config: GpConfig,
+    ) -> Result<Self> {
+        ensure!(d >= 1, "d must be positive");
+        ensure!(x.len() % d == 0, "x length not a multiple of d");
+        let n = x.len() / d;
+        ensure!(y.len() == n, "y length {} != n {}", y.len(), n);
+        ensure!(noise > 0.0, "noise must be positive");
+        let lattice =
+            ShardedLattice::build_sequential(x, d, &kernel, config.order, config.shards, |_, _| {
+                true
+            });
+        let op = ShardedMvm {
+            lattice,
+            outputscale: kernel.outputscale,
+            symmetrize: config.symmetrize,
+        };
+        let precond = (config.precond_rank > 0)
+            .then(|| op.build_precond(x, &kernel, config.precond_rank, noise));
+        let shards = op.shard_count();
+        Ok(SimplexGp {
+            kernel,
+            noise,
+            d,
+            x_train: x.to_vec(),
+            y_train: y.to_vec(),
+            config,
+            op,
+            precond,
+            solve_hook: None,
+            alpha: Vec::new(),
+            z_pred: vec![Vec::new(); shards],
+            fit_iterations: 0,
+        })
+    }
+
     /// The representer-weight solve α = (K̂+σ²I)⁻¹y — one entry point
     /// shared by [`SimplexGp::fit_from_operator`] and
     /// [`SimplexGp::ingest`]. With no preconditioner this runs
@@ -226,6 +398,62 @@ impl SimplexGp {
     ///
     /// Returns where the rows landed (shard / global row index).
     pub fn ingest(&mut self, x_new: &[f64], y_new: &[f64]) -> Result<crate::lattice::IngestOutcome> {
+        let outcome = self.ingest_patch(x_new, y_new)?;
+        self.resolve_alpha();
+        Ok(outcome)
+    }
+
+    /// The *patch* half of [`SimplexGp::ingest`]: absorb the batch into
+    /// the owning shard's lattice, splice the training set, refresh that
+    /// shard's preconditioner factor — **without** re-solving α. The
+    /// serving coordinator uses this directly when the solve must run on
+    /// a routed operator ([`SimplexGp::resolve_alpha_routed`]); plain
+    /// [`SimplexGp::ingest`] is exactly this followed by
+    /// [`SimplexGp::resolve_alpha`], bit for bit the former monolith.
+    pub fn ingest_patch(
+        &mut self,
+        x_new: &[f64],
+        y_new: &[f64],
+    ) -> Result<crate::lattice::IngestOutcome> {
+        self.validate_ingest(x_new, y_new)?;
+        let outcome = self.op.ingest(x_new, &self.kernel);
+        self.splice_training(outcome.row_start, x_new, y_new);
+        self.refresh_precond_shard(outcome.shard);
+        Ok(outcome)
+    }
+
+    /// Metadata-only ingest for a **shed** owning shard whose
+    /// authoritative replica was already patched by the remote worker
+    /// (which reported the resulting lattice size `new_m` and
+    /// `new_fingerprint`). Splices the training set and refreshes the
+    /// shard's preconditioner factor exactly like
+    /// [`SimplexGp::ingest_patch`] — the shard lattice itself is never
+    /// materialized, which is the point of shed-aware ingest
+    /// (docs/DEPLOYMENT.md §Memory budget). α must be re-solved
+    /// afterwards ([`SimplexGp::resolve_alpha_routed`]).
+    pub fn ingest_shed_patch(
+        &mut self,
+        x_new: &[f64],
+        y_new: &[f64],
+        new_m: usize,
+        new_fingerprint: u64,
+    ) -> Result<crate::lattice::IngestOutcome> {
+        let rows = self.validate_ingest(x_new, y_new)?;
+        let shard = self.op.lattice.ingest_target();
+        ensure!(
+            self.op.lattice.is_shed(shard),
+            "ingest_shed_patch: owning shard {shard} is resident (use ingest_patch)"
+        );
+        let outcome = self
+            .op
+            .lattice
+            .ingest_shed(shard, rows, new_m, new_fingerprint);
+        self.splice_training(outcome.row_start, x_new, y_new);
+        self.refresh_precond_shard(outcome.shard);
+        Ok(outcome)
+    }
+
+    fn validate_ingest(&self, x_new: &[f64], y_new: &[f64]) -> Result<usize> {
         ensure!(
             x_new.len() % self.d == 0,
             "x_new length not a multiple of d"
@@ -238,16 +466,25 @@ impl SimplexGp {
             y_new.len(),
             rows
         );
-        let outcome = self.op.ingest(x_new, &self.kernel);
-        let at = outcome.row_start;
+        Ok(rows)
+    }
+
+    fn splice_training(&mut self, at: usize, x_new: &[f64], y_new: &[f64]) {
         self.x_train
             .splice(at * self.d..at * self.d, x_new.iter().copied());
         self.y_train.splice(at..at, y_new.iter().copied());
+    }
+
+    /// Rebuild shard `shard`'s pivoted-Cholesky factor from the (just
+    /// spliced) training slice — a no-op when preconditioning is off.
+    /// Works whether or not the shard's *lattice* is resident: the
+    /// factor is built from points only.
+    fn refresh_precond_shard(&mut self, shard: usize) {
         if let Some(pc) = self.precond.as_mut() {
             let bounds = self.op.shard_bounds();
-            let (s0, s1) = (bounds[outcome.shard], bounds[outcome.shard + 1]);
+            let (s0, s1) = (bounds[shard], bounds[shard + 1]);
             pc.refresh_shard(
-                outcome.shard,
+                shard,
                 &self.x_train[s0 * self.d..s1 * self.d],
                 self.d,
                 &self.kernel,
@@ -256,6 +493,12 @@ impl SimplexGp {
                 bounds,
             );
         }
+    }
+
+    /// Re-solve the representer weights α on the local operator and
+    /// refresh the cached prediction state — the *solve* half of
+    /// [`SimplexGp::ingest`]. Requires every shard lattice resident.
+    pub fn resolve_alpha(&mut self) {
         let off;
         let pc: Option<&dyn Precond> = match (&self.precond, self.solve_hook.as_deref()) {
             (Some(local), Some(hook)) => {
@@ -275,7 +518,63 @@ impl SimplexGp {
         self.alpha = alpha;
         self.fit_iterations = iters;
         self.z_pred = self.op.lattice.splat_blur(&self.alpha, 1);
-        Ok(outcome)
+    }
+
+    /// [`SimplexGp::resolve_alpha`] with shed-shard MVMs routed through
+    /// `router` — the same CG on the same operator arithmetic
+    /// ([`RoutedMvm`]), so the resulting α is bit-identical to the local
+    /// solve. Returns `false` (model untouched) when a shed shard went
+    /// unanswered; the caller falls back to rebuild-and-solve-locally.
+    /// With no shed shards this *is* [`SimplexGp::resolve_alpha`].
+    pub fn resolve_alpha_routed(&mut self, router: &dyn ShardRouter) -> bool {
+        if self.op.lattice.shed_count() == 0 {
+            self.resolve_alpha();
+            return true;
+        }
+        let off;
+        let pc: Option<&dyn Precond> = match (&self.precond, self.solve_hook.as_deref()) {
+            (Some(local), Some(hook)) => {
+                off = OffloadedPrecond::new(local, hook, self.config.precond_rank, self.noise);
+                Some(&off)
+            }
+            (Some(local), None) => Some(local),
+            (None, _) => None,
+        };
+        let routed = RoutedMvm::new(&self.op, router);
+        let shifted = Shifted::new(&routed, self.noise);
+        let opts = CgOptions {
+            tol: self.config.cg_tol,
+            max_iters: self.config.cg_max_iters,
+            min_iters: 1,
+        };
+        let res = cg_block_precond(&shifted, &self.y_train, 1, opts, pc);
+        if routed.failed() {
+            return false;
+        }
+        self.alpha = res.x;
+        self.fit_iterations = res.iterations;
+        self.refresh_z_pred();
+        true
+    }
+
+    /// Recompute the cached per-shard prediction state for *resident*
+    /// shards (shed shards keep an empty entry — their worker realizes
+    /// `z` from its own α copy). Per shard this is exactly the
+    /// [`PermutohedralLattice::splat_blur`](crate::lattice::PermutohedralLattice::splat_blur)
+    /// call [`ShardedLattice::splat_blur`] would have made, so resident
+    /// entries are bitwise the all-resident cache.
+    fn refresh_z_pred(&mut self) {
+        let lat = &self.op.lattice;
+        self.z_pred = (0..lat.shard_count())
+            .map(|p| {
+                if lat.is_shed(p) {
+                    Vec::new()
+                } else {
+                    let r = lat.shard_range(p);
+                    lat.shards[p].splat_blur(&self.alpha[r.start..r.end], 1)
+                }
+            })
+            .collect();
     }
 
     pub fn n_train(&self) -> usize {
@@ -315,13 +614,22 @@ impl SimplexGp {
     /// bytes freed. The serving coordinator's `shed_shards` mode uses
     /// this for shards whose MVMs execute on a remote worker.
     pub fn shed_shard(&mut self, p: usize) -> usize {
-        self.op.lattice.shed_shard(p)
+        let freed = self.op.lattice.shed_shard(p);
+        if freed > 0 {
+            // The cached z is O(m_p) — the other half of the shard's
+            // memory footprint. The worker holding the replica realizes
+            // z from its own α copy, so a shed shard keeps nothing.
+            self.z_pred[p] = Vec::new();
+        }
+        freed
     }
 
     /// Rebuild a shed shard's lattice from the model's own training
     /// points and kernel — fingerprint-verified against the metadata
     /// retained at shed time, so the result is bitwise the lattice that
-    /// was dropped. No-op for a resident shard.
+    /// was dropped. The shard's cached prediction state is recomputed
+    /// (deterministic from the rebuilt lattice and α, hence bitwise the
+    /// pre-shed cache). No-op for a resident shard.
     pub fn rebuild_shard(&mut self, p: usize) {
         if !self.op.lattice.is_shed(p) {
             return;
@@ -330,6 +638,10 @@ impl SimplexGp {
         let r = self.op.lattice.shard_range(p);
         let x_p = self.x_train[r.start * d..r.end * d].to_vec();
         self.op.lattice.rebuild_shard(p, &x_p, &self.kernel);
+        if self.alpha.len() == self.n_train() {
+            self.z_pred[p] =
+                self.op.lattice.shards[p].splat_blur(&self.alpha[r.start..r.end], 1);
+        }
     }
 
     /// Representer weights α.
@@ -437,6 +749,178 @@ impl SimplexGp {
             }
         }
         (mean, var)
+    }
+
+    /// Worker-resident predictive mean: like [`SimplexGp::predict_mean`]
+    /// but with shed shards' mean slices realized by the workers holding
+    /// the replicas (`shard_variance_block` with `cols = 0`). Bitwise
+    /// the local mean; `None` when a shed shard went unanswered (the
+    /// caller falls back to rebuild + local predict). With no shed
+    /// shards this *is* [`SimplexGp::predict_mean`].
+    pub fn predict_mean_routed(
+        &self,
+        x_star: &[f64],
+        router: &dyn ShardRouter,
+    ) -> Option<Vec<f64>> {
+        if self.op.lattice.shed_count() == 0 {
+            return Some(self.predict_mean(x_star));
+        }
+        self.predict_routed_parts(x_star, router, false)
+            .map(|(mean, _)| mean)
+    }
+
+    /// Worker-resident predictive mean **and variance**: shed shards'
+    /// mean slices and cross-covariance columns are realized on the
+    /// workers (`shard_variance_block`), the variance-column CG runs on
+    /// the routed operator ([`RoutedMvm`]), and every arithmetic step
+    /// replicates [`SimplexGp::predict`] exactly — so the reply is
+    /// bitwise the all-resident one. `None` when a shed shard went
+    /// unanswered. With no shed shards this *is* [`SimplexGp::predict`].
+    pub fn predict_routed(
+        &self,
+        x_star: &[f64],
+        router: &dyn ShardRouter,
+    ) -> Option<(Vec<f64>, Vec<f64>)> {
+        if self.op.lattice.shed_count() == 0 {
+            return Some(self.predict(x_star));
+        }
+        self.predict_routed_parts(x_star, router, true)
+    }
+
+    fn predict_routed_parts(
+        &self,
+        x_star: &[f64],
+        router: &dyn ShardRouter,
+        want_var: bool,
+    ) -> Option<(Vec<f64>, Vec<f64>)> {
+        let lat = &self.op.lattice;
+        let pn = lat.shard_count();
+        let t = x_star.len() / self.d;
+        if self.alpha.len() != self.n_train() {
+            // α unresolved (mid-refit) — nothing to serve from.
+            return None;
+        }
+        let shed: Vec<usize> = (0..pn).filter(|&p| lat.is_shed(p)).collect();
+        let alpha_fps: Vec<u64> = shed
+            .iter()
+            .map(|&p| {
+                let r = lat.shard_range(p);
+                vector_fingerprint(&self.alpha[r])
+            })
+            .collect();
+        let remote = router.route_variance(lat, &shed, &alpha_fps, x_star, t, want_var)?;
+        if remote.len() != shed.len() {
+            return None;
+        }
+        let mut remote_at: Vec<Option<(Vec<f64>, Vec<f64>)>> = (0..pn).map(|_| None).collect();
+        for (&p, (ks, cols)) in shed.iter().zip(remote) {
+            if ks.len() != t || (want_var && cols.len() != t * lat.shard_n(p)) {
+                return None;
+            }
+            remote_at[p] = Some((ks, cols));
+        }
+        // One geometry pass serves every resident shard's lookup — the
+        // simplex geometry is lattice-independent (shed placeholders
+        // keep the stencil), mirroring `ShardedLattice::embed_only`.
+        let geo = lat.shards[0].embed_geometry(x_star, &self.kernel);
+        let embeds: Vec<Option<(Vec<u32>, Vec<f64>)>> = (0..pn)
+            .map(|p| (!lat.is_shed(p)).then(|| lat.shards[p].lookup_embedding(&geo)))
+            .collect();
+        // Mean: the committee reduction of `ShardedLattice::slice_at_sum`
+        // with shed shards' parts taken from the worker replies — same
+        // shard order, same accumulation, same 1/P and outputscale.
+        let mut acc: Option<Vec<f64>> = None;
+        for p in 0..pn {
+            let part = match &remote_at[p] {
+                Some((ks, _)) => ks.clone(),
+                None => {
+                    let e = embeds[p].as_ref().unwrap();
+                    lat.shards[p].slice_at(&e.0, &e.1, &self.z_pred[p], 1)
+                }
+            };
+            match acc.as_mut() {
+                None => acc = Some(part),
+                Some(a) => {
+                    for (ai, pi) in a.iter_mut().zip(&part) {
+                        *ai += pi;
+                    }
+                }
+            }
+        }
+        let mut mean = acc.unwrap_or_default();
+        if pn > 1 {
+            let scale = 1.0 / pn as f64;
+            for o in mean.iter_mut() {
+                *o *= scale;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m *= self.kernel.outputscale;
+        }
+        if !want_var {
+            return Some((mean, Vec::new()));
+        }
+        // Variance: chunked exactly like `predict_with_precond`, the
+        // column block assembled from resident in-thread slices plus the
+        // workers' `t × n_p` blocks, CG on the routed operator.
+        let off;
+        let pc: Option<&dyn Precond> = match (&self.precond, self.solve_hook.as_deref()) {
+            (Some(local), Some(hook)) => {
+                off = OffloadedPrecond::new(local, hook, self.config.precond_rank, self.noise);
+                Some(&off)
+            }
+            (Some(local), None) => Some(local),
+            (None, _) => None,
+        };
+        let routed = RoutedMvm::new(&self.op, router);
+        let shifted = Shifted::new(&routed, self.noise);
+        let prior = self.kernel.outputscale + self.noise;
+        let chunk = 64usize;
+        let n = self.n_train();
+        let mut var = vec![0.0; t];
+        for c0 in (0..t).step_by(chunk) {
+            let c1 = (c0 + chunk).min(t);
+            let nc = c1 - c0;
+            let mut cols = vec![0.0; nc * n];
+            for p in 0..pn {
+                match &remote_at[p] {
+                    Some((_, rcols)) => {
+                        let np = lat.shard_n(p);
+                        lat.scatter_shard_block(&mut cols, p, &rcols[c0 * np..c1 * np], nc);
+                    }
+                    None => {
+                        let e = embeds[p].as_ref().unwrap();
+                        let part = lat.shards[p].cross_cov_cols(&e.0, &e.1, c0, c1);
+                        lat.scatter_shard_block(&mut cols, p, &part, nc);
+                    }
+                }
+            }
+            for v in cols.iter_mut() {
+                *v *= self.kernel.outputscale;
+            }
+            let sol = cg_block_precond(
+                &shifted,
+                &cols,
+                nc,
+                CgOptions {
+                    tol: self.config.cg_tol,
+                    max_iters: self.config.cg_max_iters,
+                    min_iters: 1,
+                },
+                pc,
+            );
+            if routed.failed() {
+                return None;
+            }
+            for (c, i) in (c0..c1).enumerate() {
+                let quad = crate::util::stats::dot(
+                    &cols[c * n..(c + 1) * n],
+                    &sol.x[c * n..(c + 1) * n],
+                ) / lat.shard_count() as f64;
+                var[i] = (prior - quad).max(1e-8);
+            }
+        }
+        Some((mean, var))
     }
 
     /// Marginal log-likelihood (Eq. 4), with the log-determinant

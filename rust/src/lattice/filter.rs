@@ -190,6 +190,78 @@ impl PermutohedralLattice {
         self.filter_with_taps(v, nc, &taps)
     }
 
+    /// Splat then blur with the lattice's own stencil, *without* the
+    /// final slice: the lattice-space representation `z = B·Wᵀ v` that
+    /// prediction caches per shard (`z_pred`) and slices at arbitrary
+    /// test rows later. ONE home for this arithmetic — the coordinator's
+    /// resident-shard path and the shard worker's `shard_variance_block`
+    /// op both call it, so a worker-realized `z` is bitwise the
+    /// coordinator's.
+    pub fn splat_blur(&self, v: &[f64], nc: usize) -> Vec<f64> {
+        let taps = self.stencil.taps.clone();
+        let mut z = self.splat(v, nc);
+        self.blur(&mut z, nc, &taps);
+        z
+    }
+
+    /// Cross-covariance columns `k(X, x*_i)` for embedded test rows
+    /// `c0..c1` of (`offsets`, `weights`) (rows resolved against THIS
+    /// lattice, e.g. via [`PermutohedralLattice::lookup_embedding`]):
+    /// splat each test row's barycentric mass as its own channel, blur,
+    /// slice at the training inputs. Returns a row-major
+    /// `(c1−c0) × n` block (unit outputscale). Shared by
+    /// [`crate::lattice::ShardedLattice::cross_cov_block`] and the
+    /// shard worker so remote columns are bitwise the local ones.
+    pub fn cross_cov_cols(
+        &self,
+        offsets: &[u32],
+        weights: &[f64],
+        c0: usize,
+        c1: usize,
+    ) -> Vec<f64> {
+        let dp1 = self.d + 1;
+        let nc = c1 - c0;
+        let mut z = vec![0.0; (self.m + 1) * nc];
+        for (c, i) in (c0..c1).enumerate() {
+            for k in 0..dp1 {
+                let id = offsets[i * dp1 + k] as usize;
+                if id != 0 {
+                    z[id * nc + c] += weights[i * dp1 + k];
+                }
+            }
+        }
+        let taps = self.stencil.taps.clone();
+        self.blur(&mut z, nc, &taps);
+        self.slice_block(&z, nc)
+    }
+
+    /// One shard's contribution to a predictive mean + variance chunk:
+    /// embed `t` test rows against this lattice, slice the cached
+    /// lattice values `z` (= [`PermutohedralLattice::splat_blur`] of the
+    /// shard's α segment) for the mean part (`ks`, length t), and — when
+    /// `want_cols` — realize the cross-covariance columns as a row-major
+    /// `t × n` block. This is THE shared kernel of worker-resident
+    /// variance: `SimplexGp::predict_routed`'s resident-shard path and
+    /// the worker's `shard_variance_block` op both run exactly this.
+    pub fn shard_variance_parts(
+        &self,
+        x: &[f64],
+        kernel: &crate::kernels::ArdKernel,
+        z: &[f64],
+        want_cols: bool,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let t = x.len() / self.d;
+        let geo = self.embed_geometry(x, kernel);
+        let (off, w) = self.lookup_embedding(&geo);
+        let ks = self.slice_at(&off, &w, z, 1);
+        let cols = if want_cols {
+            self.cross_cov_cols(&off, &w, 0, t)
+        } else {
+            Vec::new()
+        };
+        (ks, cols)
+    }
+
     /// Filtering with explicit taps (the k′ path of §4.2 reuses the
     /// lattice geometry but blurs with the derivative profile).
     pub fn filter_with_taps(&self, v: &[f64], nc: usize, taps: &[f64]) -> Vec<f64> {

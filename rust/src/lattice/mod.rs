@@ -423,6 +423,32 @@ impl PermutohedralLattice {
     }
 }
 
+/// Deterministic FNV-1a fingerprint over the bit patterns of an `f64`
+/// vector — the α-staleness guard of the worker-resident variance path.
+/// The coordinator stamps each `shard_alpha` push with the fingerprint
+/// of the shard's α segment and every `shard_variance_block` request
+/// carries it; a worker holding a different α answers with an error
+/// instead of silently mixing solve generations (`docs/PROTOCOL.md`).
+/// Same FNV core as [`PermutohedralLattice::fingerprint`], seeded with
+/// the vector length so an empty α never aliases a shard fingerprint.
+pub fn vector_fingerprint(v: &[f64]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    fn mix(h: u64, x: u64) -> u64 {
+        let mut h = h;
+        for shift in [0u32, 8, 16, 24, 32, 40, 48, 56] {
+            h ^= (x >> shift) & 0xff;
+            h = h.wrapping_mul(PRIME);
+        }
+        h
+    }
+    let mut h = mix(OFFSET, v.len() as u64);
+    for &x in v {
+        h = mix(h, x.to_bits());
+    }
+    h
+}
+
 /// Shard-reusable geometric embedding of input rows (the output of
 /// [`PermutohedralLattice::embed_geometry`]): simplex identities and
 /// barycentric weights, independent of any particular key table.

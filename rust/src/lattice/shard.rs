@@ -304,9 +304,7 @@ impl ShardedLattice {
     pub fn ingest(&mut self, x: &[f64], kernel: &ArdKernel) -> IngestOutcome {
         assert_eq!(x.len() % self.d, 0, "x length not a multiple of d");
         let rows = x.len() / self.d;
-        let shard = (0..self.shards.len())
-            .min_by_key(|&p| self.shard_n(p))
-            .expect("at least one shard");
+        let shard = self.ingest_target();
         assert!(
             !self.is_shed(shard),
             "ingest: target shard {shard} is shed; rebuild it first"
@@ -322,6 +320,122 @@ impl ShardedLattice {
             row_start,
             rows,
             new_lattice_keys,
+        }
+    }
+
+    /// The shard an [`ShardedLattice::ingest`] of the next batch would
+    /// target: the lightest shard (fewest points, lowest index on
+    /// ties). Exposed so a shed-mode coordinator can route the batch to
+    /// the owning worker's replica *before* deciding whether the local
+    /// lattice must be materialized.
+    pub fn ingest_target(&self) -> usize {
+        (0..self.shards.len())
+            .min_by_key(|&p| self.shard_n(p))
+            .expect("at least one shard")
+    }
+
+    /// Metadata-only ingest bookkeeping for a *shed* shard whose
+    /// authoritative replica was patched remotely (the worker ran
+    /// [`PermutohedralLattice::ingest`] on its copy and reported the
+    /// resulting size and fingerprint). Updates the partition bounds,
+    /// total point count and the retained [`ShedMeta`] — the shard
+    /// lattice itself is never materialized locally, which is the whole
+    /// point of shed-aware ingest (docs/DEPLOYMENT.md §Memory budget).
+    ///
+    /// The worker-side ingest is deterministic given the same batch and
+    /// hyperparameters, so the reported fingerprint is exactly what a
+    /// local [`PermutohedralLattice::ingest`] would have produced — a
+    /// later [`ShardedLattice::rebuild_shard`] still verifies against
+    /// it bit-for-bit.
+    pub fn ingest_shed(
+        &mut self,
+        shard: usize,
+        rows: usize,
+        new_m: usize,
+        new_fingerprint: u64,
+    ) -> IngestOutcome {
+        let meta = self.shed[shard]
+            .as_mut()
+            .expect("ingest_shed: shard is not shed");
+        let new_lattice_keys = new_m - meta.m;
+        meta.n += rows;
+        meta.m = new_m;
+        meta.fingerprint = new_fingerprint;
+        let row_start = self.bounds[shard + 1];
+        for b in self.bounds[shard + 1..].iter_mut() {
+            *b += rows;
+        }
+        self.n += rows;
+        IngestOutcome {
+            shard,
+            row_start,
+            rows,
+            new_lattice_keys,
+        }
+    }
+
+    /// Build a sharded lattice **one shard at a time**, handing each
+    /// freshly built shard lattice to `visit(p, &lat)` before deciding
+    /// its fate: `visit` returns `true` to *shed* the shard immediately
+    /// (keep only [`ShedMeta`] + a placeholder) or `false` to keep it
+    /// resident. With a visitor that pushes the replica to a remote
+    /// worker and sheds, peak coordinator memory during an
+    /// oversized-batch refit is O(max_p m_p) — one shard lattice at a
+    /// time — instead of the O(Σ m_p) of [`ShardedLattice::build`].
+    /// Each shard's lattice is built by the identical
+    /// [`PermutohedralLattice::build`] call, so shards that stay
+    /// resident (or are later rebuilt) are bitwise what `build` would
+    /// have produced.
+    pub fn build_sequential(
+        x: &[f64],
+        d: usize,
+        kernel: &ArdKernel,
+        order: usize,
+        shards: usize,
+        mut visit: impl FnMut(usize, &PermutohedralLattice) -> bool,
+    ) -> Self {
+        assert!(d >= 1, "d must be >= 1");
+        assert_eq!(x.len() % d, 0, "x length not a multiple of d");
+        let n = x.len() / d;
+        let p = resolve_shard_count(shards, n);
+        let mut bounds = Vec::with_capacity(p + 1);
+        bounds.push(0);
+        for r in parallel::chunk_ranges(n, p) {
+            bounds.push(r.end);
+        }
+        let mut lats = Vec::with_capacity(p);
+        let mut shed = Vec::with_capacity(p);
+        for i in 0..p {
+            let xs = &x[bounds[i] * d..bounds[i + 1] * d];
+            let lat = PermutohedralLattice::build(xs, d, kernel, order);
+            if visit(i, &lat) {
+                let meta = ShedMeta {
+                    n: lat.n,
+                    m: lat.m,
+                    fingerprint: lat.fingerprint(),
+                    freed_bytes: lat.storage_bytes(),
+                };
+                lats.push(PermutohedralLattice::from_raw_parts(
+                    d,
+                    0,
+                    0,
+                    lat.stencil.clone(),
+                    Vec::new(),
+                    Vec::new(),
+                    Vec::new(),
+                ));
+                shed.push(Some(meta));
+            } else {
+                lats.push(lat);
+                shed.push(None);
+            }
+        }
+        ShardedLattice {
+            d,
+            n,
+            shards: lats,
+            bounds,
+            shed,
         }
     }
 
@@ -480,12 +594,8 @@ impl ShardedLattice {
         assert_eq!(v.len(), self.n * nc);
         self.assert_all_resident("splat_blur");
         self.map_shards(|p| {
-            let lat = &self.shards[p];
             let (s0, s1) = (self.bounds[p], self.bounds[p + 1]);
-            let taps = lat.stencil.taps.clone();
-            let mut z = lat.splat(&v[s0 * nc..s1 * nc], nc);
-            lat.blur(&mut z, nc, &taps);
-            z
+            self.shards[p].splat_blur(&v[s0 * nc..s1 * nc], nc)
         })
     }
 
@@ -559,23 +669,8 @@ impl ShardedLattice {
         assert_eq!(embeds.len(), self.shards.len());
         self.assert_all_resident("cross_cov_block");
         let nc = c1 - c0;
-        let dp1 = self.d + 1;
-        let parts = self.map_shards(|p| {
-            let lat = &self.shards[p];
-            let (off, w) = (&embeds[p].0, &embeds[p].1);
-            let mut z = vec![0.0; (lat.m + 1) * nc];
-            for (c, i) in (c0..c1).enumerate() {
-                for k in 0..dp1 {
-                    let id = off[i * dp1 + k] as usize;
-                    if id != 0 {
-                        z[id * nc + c] += w[i * dp1 + k];
-                    }
-                }
-            }
-            let taps = lat.stencil.taps.clone();
-            lat.blur(&mut z, nc, &taps);
-            lat.slice_block(&z, nc)
-        });
+        let parts =
+            self.map_shards(|p| self.shards[p].cross_cov_cols(&embeds[p].0, &embeds[p].1, c0, c1));
         self.scatter_block(parts, nc)
     }
 

@@ -51,6 +51,10 @@ pub struct LoadSpec {
     pub mix: Mix,
     /// Rows per `predict` request.
     pub predict_rows: usize,
+    /// Ask for predictive variance on every `predict` request (the
+    /// serving path then realizes cross-covariance columns per shard —
+    /// remotely, in shed mode). Mean-only when false.
+    pub predict_variance: bool,
     /// Rows per `ingest` request.
     pub ingest_rows: usize,
     /// Seeds both the schedule and the request payloads.
@@ -66,6 +70,7 @@ impl Default for LoadSpec {
             arrival: Arrival::Poisson,
             mix: Mix::serving(),
             predict_rows: 4,
+            predict_variance: false,
             ingest_rows: 4,
             seed: 0x10ad,
         }
@@ -213,7 +218,12 @@ pub fn run(addr: &SocketAddr, spec: &LoadSpec) -> Result<LoadReport> {
                                 let x: Vec<f64> = (0..rows * d)
                                     .map(|_| rng.uniform_in(-2.0, 2.0))
                                     .collect();
-                                (client.predict(&x, d).map(|_| ()), &mut ts.predict)
+                                let res = if spec.predict_variance {
+                                    client.predict_var(&x, d).map(|_| ())
+                                } else {
+                                    client.predict(&x, d).map(|_| ())
+                                };
+                                (res, &mut ts.predict)
                             }
                             OpKind::Mvm => {
                                 let n = current_n.load(Ordering::Acquire);

@@ -296,16 +296,18 @@ fn ingest_stream_bitwise_equals_rebuild_for_batches_1_64_1024() {
     }
 }
 
-#[test]
-fn concurrent_load_bitwise_matches_serial_replay() {
-    // ISSUE-6 leg: mvm traffic raced against streaming ingest through
-    // the serving coordinator must be bitwise explainable by a serial
-    // replay on a twin model. The op sequence and fire times come from
-    // the open-loop load schedule; each segment between two scheduled
-    // ingests holds n fixed, so every concurrent mvm inside it has
-    // exactly one right answer no matter how the batcher coalesces or
-    // interleaves — the ingest then acts as a barrier and mutates the
-    // served model and the twin identically.
+/// Shared body for the concurrent-load determinism legs. With
+/// `shed = false` this is the PR-6 in-process-pool shape; with
+/// `shed = true` the coordinator runs `[cluster] shed_shards` against
+/// two loopback shard workers, so the same race — coalesced mvms
+/// against streaming ingest — rides the fully worker-resident path
+/// (remote replicas, synchronous replica patches, routed α solves) and
+/// must STILL be bitwise explainable by the serial unshed twin replay,
+/// with zero on-demand rebuilds on the healthy fleet.
+fn concurrent_load_case(shed: bool) {
+    use simplex_gp::coordinator::transport::ClusterConfig;
+    use simplex_gp::coordinator::worker::{ShardWorker, WorkerConfig};
+
     let d = 2;
     let shards = 2;
     let n0 = 200;
@@ -323,6 +325,24 @@ fn concurrent_load_bitwise_matches_serial_replay() {
         SimplexGp::fit(x, y, d, kernel, 0.05, cfg).unwrap()
     };
     let mut twin = fit(&x, &y);
+    let workers: Vec<ShardWorker> = if shed {
+        (0..2)
+            .map(|_| {
+                ShardWorker::start(WorkerConfig {
+                    listen: "127.0.0.1:0".to_string(),
+                    ..WorkerConfig::default()
+                })
+                .unwrap()
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let cluster = ClusterConfig {
+        workers: workers.iter().map(|w| w.local_addr.to_string()).collect(),
+        shed_shards: shed,
+        ..ClusterConfig::default()
+    };
     let server = Server::start(
         fit(&x, &y),
         ServeConfig {
@@ -331,10 +351,38 @@ fn concurrent_load_bitwise_matches_serial_replay() {
             // Generous coalescing window: concurrent mvms really do
             // share batches instead of degenerating to serial service.
             max_wait: Duration::from_millis(20),
+            cluster,
             ..ServeConfig::default()
         },
     )
     .unwrap();
+    if shed {
+        // Replicas sync in the background; wait for the fleet before
+        // opening the load (the measurement is about the shed steady
+        // state, not the warmup fallback).
+        let mut probe = Client::connect(&server.local_addr).unwrap();
+        let t0 = Instant::now();
+        loop {
+            let st = probe.stats().unwrap();
+            let up = st
+                .get("remote_workers")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as usize;
+            if up == 2 {
+                assert_eq!(
+                    st.get("shed_shards").and_then(|v| v.as_f64()),
+                    Some(shards as f64),
+                    "shards not shed at pool start"
+                );
+                break;
+            }
+            assert!(
+                t0.elapsed().as_secs() < 30,
+                "loopback shard workers never synced"
+            );
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
 
     // Phases = the schedule's mvm arrivals between consecutive ingest
     // arrivals (predict weight 0: only mvm replies are byte-checkable).
@@ -440,5 +488,41 @@ fn concurrent_load_bitwise_matches_serial_replay() {
     for i in 0..want.len() {
         assert_eq!(got[i].to_bits(), want[i].to_bits(), "final mvm row {i}");
     }
+    if shed {
+        // The whole race was served worker-resident: the healthy fleet
+        // never forced an on-demand rebuild, and every shard is still
+        // shed after the last ingest barrier.
+        assert_eq!(server.shed_rebuilds(), 0, "healthy fleet forced rebuilds");
+        let st = clients[0].stats().unwrap();
+        assert_eq!(
+            st.get("shed_shards").and_then(|v| v.as_f64()),
+            Some(shards as f64),
+            "ingest left shards resident"
+        );
+    }
     server.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn concurrent_load_bitwise_matches_serial_replay() {
+    // ISSUE-6 leg: mvm traffic raced against streaming ingest through
+    // the serving coordinator must be bitwise explainable by a serial
+    // replay on a twin model. The op sequence and fire times come from
+    // the open-loop load schedule; each segment between two scheduled
+    // ingests holds n fixed, so every concurrent mvm inside it has
+    // exactly one right answer no matter how the batcher coalesces or
+    // interleaves — the ingest then acts as a barrier and mutates the
+    // served model and the twin identically.
+    concurrent_load_case(false);
+}
+
+#[test]
+fn concurrent_load_with_shed_shards_bitwise_matches_serial_replay() {
+    // PR-8 leg: the same schedule with the coordinator fully shed
+    // behind two loopback workers — worker-resident serving changes
+    // where the arithmetic runs, never what it produces.
+    concurrent_load_case(true);
 }

@@ -2,7 +2,7 @@
 """Perf-regression gate: compare a bench JSON-lines file against a baseline.
 
 Usage:
-    python3 scripts/bench_compare.py BENCH_BASELINE.json BENCH_PR7.json \
+    python3 scripts/bench_compare.py BENCH_BASELINE.json BENCH_PR8.json \
         [--threshold 0.25] [--metrics ns_per_mvm,p99_us]
 
 Both files are JSON-lines as written by `append_bench_json`
@@ -53,6 +53,7 @@ MEASURED = {
     "achieved_rps",
     "hedged",
     "hedge_wins",
+    "shed_rebuilds",
 }
 
 DEFAULT_METRICS = ("ns_per_mvm", "p99_us")

@@ -9,7 +9,12 @@ docs/PROTOCOL.md against them:
   1. client protocol: poll `stats` until remote_workers == 2, then send
      one `mvm` and assert a well-formed `u` reply of length n;
   2. shard-worker protocol: send a framed `stats` to each worker and
-     assert the replicas are held and actually served the mvm's jobs.
+     assert the replicas are held and actually served the mvm's jobs;
+  3. shed mode: a second coordinator with `--shed-shards` against a
+     fresh worker pair must answer a predict-with-variance request
+     entirely off the worker replicas — `stats` shows every shard shed
+     with `shed_rebuilds == 0`, and the workers' own `varianced`
+     counters prove the variance jobs ran remotely.
 
 This is the docs' executable counterpart: if the wire formats or the
 CLI surface drift from what PROTOCOL.md/DEPLOYMENT.md describe, this
@@ -167,6 +172,76 @@ def main():
         print(
             f"OK: coordinator at {serve_addr} served a {n}-point mvm over "
             f"2 remote shard-workers ({total_served} remote jobs)."
+        )
+
+        # 4. Shed mode: fresh workers (replica state is per-worker, so
+        #    the shed coordinator gets its own pair) + `--shed-shards`.
+        serve.stop()
+        w3 = Proc("worker3", [binary, "shard-worker", "--listen", "127.0.0.1:0"])
+        w4 = Proc("worker4", [binary, "shard-worker", "--listen", "127.0.0.1:0"])
+        procs += [w3, w4]
+        w3_addr = w3.wait_addr(deadline)
+        w4_addr = w4.wait_addr(deadline)
+        shed = Proc(
+            "shed",
+            [
+                binary, "serve",
+                "--dataset", "protein", "--n", "2000", "--epochs", "1",
+                "--shards", "2",
+                "--workers", f"{w3_addr},{w4_addr}",
+                "--shed-shards",
+                "--addr", "127.0.0.1:0",
+            ],
+        )
+        procs.append(shed)
+        shed_addr = shed.wait_addr(deadline)
+
+        stats = {}
+        while time.time() < deadline:
+            stats = jsonl_request(shed_addr, {"id": 10, "op": "stats"})
+            if stats.get("remote_workers") == 2:
+                break
+            time.sleep(0.25)
+        assert stats.get("remote_workers") == 2, f"shed replicas never synced: {stats}"
+        assert stats.get("shed_shards") == 2, f"shards not shed: {stats}"
+        d = int(stats["d"])
+
+        # Predict WITH variance: in shed mode the coordinator has no
+        # local shard lattices, so the mean slices and cross-covariance
+        # columns must come back from the workers.
+        rows = 2
+        xq = [[0.25] * d, [-0.5] * d]
+        reply = jsonl_request(
+            shed_addr, {"id": 11, "op": "predict", "x": xq, "variance": 1}
+        )
+        assert "error" not in reply, reply
+        assert len(reply["mean"]) == rows, reply
+        assert len(reply["var"]) == rows, reply
+        assert all(v > 0 for v in reply["var"]), reply
+
+        # Served remotely: zero on-demand rebuilds, shards still shed,
+        # and the workers' variance counters moved.
+        stats = jsonl_request(shed_addr, {"id": 12, "op": "stats"})
+        assert stats.get("shed_rebuilds") == 0, (
+            f"variance fell back to a local rebuild: {stats}"
+        )
+        assert stats.get("shed_shards") == 2, stats
+        total_varianced, shed_held = 0, set()
+        for addr in (w3_addr, w4_addr):
+            ws = frame_request(addr, {"op": "stats"})
+            assert ws.get("ok") == 1, ws
+            total_varianced += int(ws.get("varianced", 0))
+            for sh in ws.get("shards", []):
+                shed_held.add(int(sh["shard"]))
+        assert shed_held == {0, 1}, f"shed replicas held: {shed_held}"
+        assert total_varianced >= 2, (
+            f"variance not served remotely (varianced={total_varianced})"
+        )
+
+        print(
+            f"OK: shed coordinator at {shed_addr} served predict-with-variance "
+            f"worker-resident ({total_varianced} remote variance jobs, "
+            f"0 rebuilds)."
         )
         return 0
     finally:

@@ -89,6 +89,10 @@ U_MVM = [0.84375, -1.5, 0.09375, 2.0, -0.625, 0.28125, 1.125, -0.046875]
 R_SOLVE = [0.5, -1.25, 2.75, -0.375]
 Z_SOLVE = [0.1875, -0.8125, 1.625, -0.25]
 X_INGEST = [0.375, -1.5, 2.25]
+ALPHA = [0.5, -0.25, 1.75]
+X_VAR = [0.5, -1.25, 0.75, 2.0]  # t = 2 query points, d = 2
+KS_VAR = [0.625, -0.375]  # per-query mean-slice parts (length t)
+COLS_VAR = [0.25, -0.125, 1.5, 0.0625, -2.0, 0.875]  # t x n_p, n_p = 3
 
 SHARD_STATUS = {
     "fingerprint": "00c0ffee00c0ffee",
@@ -162,6 +166,45 @@ FRAMES = {
     ),
     "shard_solve_block_reply_json": json_frame({"job": 6, "shard": 1, "z": Z_SOLVE}),
     "shard_solve_block_reply_bin1": bin1_frame({"job": 6, "shard": 1}, {"z": Z_SOLVE}),
+    # --- shard_alpha (protocol v2 only; JSON form still legal) ---
+    "shard_alpha_req_json": json_frame(
+        {"op": "shard_alpha", "shard": 1, "alpha": ALPHA}
+    ),
+    "shard_alpha_req_bin1": bin1_frame(
+        {"op": "shard_alpha", "shard": 1}, {"alpha": ALPHA}
+    ),
+    "shard_alpha_reply_json": json_frame(
+        {"alpha_fp": "feedfacefeedface", "n": 3, "ok": 1, "shard": 1}
+    ),
+    # --- shard_variance_block (protocol v2 only; JSON form still legal) ---
+    "shard_variance_block_req_json": json_frame(
+        {
+            "op": "shard_variance_block",
+            "shard": 1,
+            "job": 8,
+            "t": 2,
+            "cols": 1,
+            "alpha_fp": "feedfacefeedface",
+            "x": X_VAR,
+        }
+    ),
+    "shard_variance_block_req_bin1": bin1_frame(
+        {
+            "op": "shard_variance_block",
+            "shard": 1,
+            "job": 8,
+            "t": 2,
+            "cols": 1,
+            "alpha_fp": "feedfacefeedface",
+        },
+        {"x": X_VAR},
+    ),
+    "shard_variance_block_reply_json": json_frame(
+        {"job": 8, "shard": 1, "ks": KS_VAR, "cols": COLS_VAR}
+    ),
+    "shard_variance_block_reply_bin1": bin1_frame(
+        {"job": 8, "shard": 1}, {"ks": KS_VAR, "cols": COLS_VAR}
+    ),
     # --- ingest ---
     "ingest_req_json": json_frame({"op": "ingest", "shard": 0, "x": X_INGEST}),
     "ingest_req_bin1": bin1_frame({"op": "ingest", "shard": 0}, {"x": X_INGEST}),
