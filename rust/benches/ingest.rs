@@ -15,13 +15,25 @@
 //! timed separately and reported as a reference column (it never counts
 //! against the ingest).
 //!
+//! A second sweep (PR 9) measures the **warm-started** streaming solve:
+//! [`SimplexGp::ingest`] seeds the post-ingest CG solve with the old α
+//! zero-extended over the spliced rows, against a cold twin that runs
+//! [`SimplexGp::ingest_patch`] + [`SimplexGp::resolve_alpha`] from a
+//! zero guess on the identical model. Both absorb the same batch into
+//! the same lattice — the delta is purely the initial guess, and shows
+//! up as fewer CG iterations (the invariants suite pins the strict
+//! inequality and the ≤ 1e-10 α match; here we report the trajectory).
+//!
 //! With `SIMPLEX_GP_BENCH_JSON=<path>` set (CI bench-smoke), every row
 //! is appended to the perf-trajectory file as
 //! `{"bench": "ingest", "n", "d", "k", "new_keys", "ns_ingest",
-//!   "ns_rebuild", "speedup"}`.
+//!   "ns_rebuild", "speedup"}` and
+//! `{"bench": "ingest_warm", "n", "d", "k", "shards", "warm_iters",
+//!   "cold_iters", "ns_warm", "ns_cold"}`.
 //!
 //!     cargo bench --bench ingest [-- --quick]
 
+use simplex_gp::gp::{GpConfig, SimplexGp};
 use simplex_gp::kernels::{ArdKernel, KernelFamily};
 use simplex_gp::lattice::PermutohedralLattice;
 use simplex_gp::util::bench::{
@@ -140,5 +152,88 @@ fn main() {
         } else {
             "(< 5x: FAIL)"
         }
+    );
+
+    // ---- Warm-started streaming solve vs cold re-solve (PR 9) ----
+    //
+    // Model-level: the GP solve dominates the ingest cost once α must
+    // be refreshed, so this sweep runs at a solve-bound size (n = 4096)
+    // with a tolerance tight enough that the seed's head start is
+    // visible in the iteration count.
+    let n_gp: usize = 4096;
+    let shards = 2usize;
+    let gp_kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+    let gp_cfg = GpConfig {
+        shards,
+        cg_tol: 1e-6,
+        ..GpConfig::default()
+    };
+    let mut grng = Pcg64::new(73);
+    let gx: Vec<f64> = (0..n_gp * d).map(|_| grng.uniform_in(-2.0, 2.0)).collect();
+    let gy: Vec<f64> = (0..n_gp)
+        .map(|i| (gx[i * d]).sin() + 0.05 * grng.normal())
+        .collect();
+    let gp_extra: Vec<f64> = (0..1024 * d).map(|_| grng.uniform_in(-2.0, 2.0)).collect();
+    let gp_extra_y: Vec<f64> = (0..1024)
+        .map(|i| (gp_extra[i * d]).sin() + 0.05 * grng.normal())
+        .collect();
+    let refit = || {
+        SimplexGp::fit(&gx, &gy, d, gp_kernel.clone(), 0.05, gp_cfg.clone()).unwrap()
+    };
+
+    let mut warm_table = Table::new(&["k", "warm", "cold", "warm iters", "cold iters"]);
+    let mut all_fewer = true;
+    for &k in &[1usize, 64, 1024] {
+        let (xb, yb) = (&gp_extra[..k * d], &gp_extra_y[..k]);
+
+        // Warm: plain `ingest` — the spliced α seeds the solve.
+        let mut warm = refit();
+        let t0 = std::time::Instant::now();
+        warm.ingest(xb, yb).unwrap();
+        let warm_s = t0.elapsed().as_secs_f64();
+        let warm_iters = warm.fit_iterations;
+        assert!(warm.last_solve_warm(), "k={k}: ingest solve was not warm");
+
+        // Cold: identical patch, then a zero-seeded re-solve.
+        let mut cold = refit();
+        let t0 = std::time::Instant::now();
+        cold.ingest_patch(xb, yb).unwrap();
+        cold.resolve_alpha();
+        let cold_s = t0.elapsed().as_secs_f64();
+        let cold_iters = cold.fit_iterations;
+        assert!(!cold.last_solve_warm(), "k={k}: cold re-solve was seeded");
+
+        // Same model either way — the guess changes the path, not the
+        // destination (the invariants suite pins the α match).
+        assert_eq!(warm.n_train(), cold.n_train(), "k={k}: n diverged");
+        all_fewer &= warm_iters < cold_iters;
+        warm_table.row(&[
+            k.to_string(),
+            fmt_secs(warm_s),
+            fmt_secs(cold_s),
+            warm_iters.to_string(),
+            cold_iters.to_string(),
+        ]);
+        append_bench_json(&bench_record(
+            "ingest_warm",
+            &[
+                ("n", n_gp as f64),
+                ("d", d as f64),
+                ("k", k as f64),
+                ("shards", shards as f64),
+                ("warm_iters", warm_iters as f64),
+                ("cold_iters", cold_iters as f64),
+                ("ns_warm", warm_s * 1e9),
+                ("ns_cold", cold_s * 1e9),
+            ],
+        ));
+    }
+
+    println!("\nWarm-seeded ingest solve vs cold re-solve at n = {n_gp}, d = {d}, P = {shards}\n");
+    warm_table.print();
+    warm_table.write_csv("ingest_warm");
+    println!(
+        "\nwarm restarts: warm iterations strictly fewer at every k: {}",
+        if all_fewer { "PASS" } else { "FAIL (see invariants suite)" }
     );
 }

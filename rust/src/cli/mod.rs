@@ -92,6 +92,7 @@ COMMANDS
   serve      --dataset <name> [--n N] [--addr HOST:PORT] [--shards P]
              [--precond-rank K] [--ingest] [--workers A:P1,B:P2]
              [--hedge-ms H] [--encoding json|bin1] [--shed-shards]
+             [--rebalance-skew S]
              — train quickly, then serve predictions over the JSON-lines
              protocol (docs/PROTOCOL.md). --ingest enables the streaming
              `ingest` op (live training-point updates, coalesced and
@@ -104,7 +105,10 @@ COMMANDS
              binary, ~3x fewer wire bytes; v1 workers negotiate back to
              json). --shed-shards drops the coordinator's local copies
              of worker-served shard lattices, rebuilding on demand
-             (docs/DEPLOYMENT.md §Memory budget).
+             (docs/DEPLOYMENT.md §Memory budget). --rebalance-skew S
+             rebuilds the (heaviest, lightest) shard pair in the
+             background whenever max/min lattice-size skew exceeds S
+             (0 = off; docs/DEPLOYMENT.md §Shard rebalancing).
   shard-worker  [--listen HOST:PORT] [--frame-mb N] [--max-protocol V]
              — hold shard replicas for a remote coordinator and serve
              shard_mvm_block/shard_solve_block/ingest jobs over the
@@ -474,6 +478,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // worker-served shard lattices (rebuild on demand).
     if args.get_flag("shed-shards") {
         cluster.shed_shards = true;
+    }
+    // `--rebalance-skew S` overrides `[cluster] rebalance_skew`: when
+    // max_p m_p / min_p m_p exceeds S, the (heaviest, lightest) shard
+    // pair is rebuilt on a background thread and swapped in atomically.
+    // 0 (the default) disables rebalancing.
+    if args.get("rebalance-skew").is_some() {
+        cluster.rebalance_skew = args.get_f64("rebalance-skew", 0.0)?;
     }
     let mut cfg = crate::coordinator::ServeConfig {
         allow_ingest,

@@ -201,6 +201,12 @@ encoding = "bin1"
 # on demand when a link fails or a predict/ingest batch arrives. Best
 # for mvm-serving deployments; see docs/DEPLOYMENT.md §Memory budget.
 shed_shards = 0
+# Background shard rebalancing: when the per-shard lattice-size skew
+# max_p m_p / min_p m_p exceeds this, the (heaviest, lightest) pair is
+# rebuilt on a background thread and swapped in atomically (requests
+# keep being served from the old model until the swap). 0 = off;
+# meaningful values are > 1. See docs/DEPLOYMENT.md.
+rebalance_skew = 0
 "#;
 
 #[cfg(test)]
@@ -229,6 +235,7 @@ mod tests {
         assert_eq!(cfg.get_usize("cluster", "hedge_ms", 7), 0);
         assert_eq!(cfg.get_str("cluster", "encoding", "x"), "bin1");
         assert_eq!(cfg.get_usize("cluster", "shed_shards", 7), 0);
+        assert_eq!(cfg.get_f64("cluster", "rebalance_skew", 7.0), 0.0);
     }
 
     #[test]

@@ -96,7 +96,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::gp::{ShardRouter, SimplexGp};
+use crate::gp::{RebalancePlan, ShardRouter, SimplexGp};
 use crate::lattice::{vector_fingerprint, ShardedLattice};
 use crate::util::json::Json;
 
@@ -224,6 +224,19 @@ struct Counters {
     /// the `stats` op's `p50_us`/`p99_us`. Only the batcher thread
     /// records; the mutex is uncontended on the hot path.
     latency: std::sync::Mutex<crate::loadgen::LatencyHistogram>,
+    /// Background shard rebalances committed (`[cluster]
+    /// rebalance_skew`): skewed shard pairs rebuilt off-thread and
+    /// atomically swapped in.
+    rebalances: AtomicU64,
+    /// CG iterations spent in *warm-started* coordinator-side α solves
+    /// (streaming ingest re-solves seeded with the previous α,
+    /// rebalance re-solves seeded with the permuted α, refits seeded
+    /// with the zero-extended α). Together with `cold_iters` this
+    /// exposes what warm starts save, live.
+    warm_iters: AtomicU64,
+    /// CG iterations spent in cold (zero-seeded) coordinator-side α
+    /// solves.
+    cold_iters: AtomicU64,
 }
 
 impl Counters {
@@ -237,6 +250,18 @@ impl Counters {
         match self.latency.lock() {
             Ok(h) => (h.percentile(50.0), h.percentile(99.0)),
             Err(_) => (0.0, 0.0),
+        }
+    }
+
+    /// Attribute the model's most recent α solve to the warm or cold
+    /// iteration counter (`stats` op: `warm_iters`/`cold_iters`). Call
+    /// while still holding the model lock that ran the solve.
+    fn record_solve(&self, guard: &SimplexGp) {
+        let iters = guard.fit_iterations as u64;
+        if guard.last_solve_warm() {
+            self.warm_iters.fetch_add(iters, Ordering::Relaxed);
+        } else {
+            self.cold_iters.fetch_add(iters, Ordering::Relaxed);
         }
     }
 }
@@ -340,6 +365,23 @@ impl Server {
     /// (a request needed a shard the coordinator had shed).
     pub fn shed_rebuilds(&self) -> u64 {
         self.counters.shed_rebuilds.load(Ordering::Relaxed)
+    }
+
+    /// Background shard rebalances committed (`[cluster]
+    /// rebalance_skew`; 0 with rebalancing off).
+    pub fn rebalances(&self) -> u64 {
+        self.counters.rebalances.load(Ordering::Relaxed)
+    }
+
+    /// CG iterations spent in warm-started coordinator-side α solves.
+    pub fn warm_iters(&self) -> u64 {
+        self.counters.warm_iters.load(Ordering::Relaxed)
+    }
+
+    /// CG iterations spent in cold (zero-seeded) coordinator-side α
+    /// solves.
+    pub fn cold_iters(&self) -> u64 {
+        self.counters.cold_iters.load(Ordering::Relaxed)
     }
 
     /// Stop the accept loop and batcher and join their threads.
@@ -1171,8 +1213,17 @@ fn flush_batch(
         let result: Result<(usize, bool)> = if rows > cfg.max_ingest_batch {
             // Past the incremental sweet spot: one full refit absorbs
             // the whole coalesced batch (appended at the end — the
-            // rebuild repartitions anyway).
+            // rebuild repartitions anyway). The refit solve is still
+            // warm-started: the old α zero-extended over the appended
+            // rows is a near-solution of the grown system (row order is
+            // preserved even when the partition changes — shard bounds
+            // slice the same row sequence).
             let d = guard.d;
+            let refit_seed = (guard.alpha().len() == guard.n_train()).then(|| {
+                let mut s = guard.alpha().to_vec();
+                s.resize(guard.n_train() + rows, 0.0);
+                s
+            });
             let mut xs = guard.x_train.clone();
             xs.extend_from_slice(&x);
             let mut ys = guard.y_train.clone();
@@ -1218,12 +1269,12 @@ fn flush_batch(
                             std::thread::sleep(Duration::from_millis(10));
                         }
                         guard = model.write().unwrap();
-                        if !guard.resolve_alpha_routed(pool) {
+                        if !guard.resolve_alpha_routed_seeded(pool, refit_seed.as_deref()) {
                             // Fleet did not come back in time: rebuild
                             // in-thread and solve locally — same α
                             // bytes, worse peak memory, counted.
                             rebuild_all_shed(&mut guard, counters);
-                            guard.resolve_alpha();
+                            guard.resolve_alpha_seeded(refit_seed.as_deref());
                         }
                         counters.rebuilds.fetch_add(1, Ordering::Relaxed);
                         Ok((0usize, true))
@@ -1231,13 +1282,14 @@ fn flush_batch(
                     Err(e) => Err(e),
                 }
             } else {
-                SimplexGp::fit(
+                SimplexGp::fit_seeded(
                     &xs,
                     &ys,
                     d,
                     guard.kernel.clone(),
                     guard.noise,
                     guard.config.clone(),
+                    refit_seed.as_deref(),
                 )
                 .map(|fresh| {
                     *guard = fresh;
@@ -1280,9 +1332,15 @@ fn flush_batch(
                 })
             };
             patched.map(|out| {
-                if !guard.resolve_alpha_routed(pool) {
+                // Same warm seed the resident path uses inside
+                // `SimplexGp::ingest`: the old α zero-extended over the
+                // splice — shed and unshed coordinators run the exact
+                // same seeded arithmetic, so their replies stay
+                // byte-identical.
+                let seed = guard.warm_seed_spliced(out.row_start, out.rows);
+                if !guard.resolve_alpha_routed_seeded(pool, seed.as_deref()) {
                     rebuild_all_shed(&mut guard, counters);
-                    guard.resolve_alpha();
+                    guard.resolve_alpha_seeded(seed.as_deref());
                 }
                 (out.shard, false)
             })
@@ -1300,8 +1358,11 @@ fn flush_batch(
         // Fresh α slices for the worker replicas (variance serving
         // checks the slice fingerprint per job, so a stale replica
         // degrades to the rebuild fallback, never to wrong numbers).
-        if result.is_ok() && !cfg.cluster.workers.is_empty() {
-            push_alpha_all(&guard, pool);
+        if result.is_ok() {
+            counters.record_solve(&guard);
+            if !cfg.cluster.workers.is_empty() {
+                push_alpha_all(&guard, pool);
+            }
         }
         let n_now = guard.n_train();
         drop(guard);
@@ -1359,6 +1420,127 @@ fn reshed_ready(model: &Arc<RwLock<SimplexGp>>, pool: &ShardPool) {
     }
 }
 
+/// Background shard rebalancing (`[cluster] rebalance_skew`): when
+/// lightest-first ingest routing lets a hot spatial slab skew per-shard
+/// lattice sizes past `threshold` (max_p m_p / min_p m_p), the batcher
+/// snapshots the (heaviest, lightest) pair's authoritative points under
+/// the read lock, builds the replacement lattices on a **background
+/// thread** — every request keeps being served from the old model — and
+/// commits the finished plan under one write lock: the atomic swap
+/// ([`SimplexGp::apply_rebalance`]), both stale preconditioner factor
+/// refreshes, a warm-started α re-solve seeded with the permuted old
+/// weights, and a desync of the pair's worker replicas (their links
+/// re-verify by fingerprint and refresh from the swapped model). A plan
+/// invalidated by an ingest that landed mid-build is discarded by the
+/// fingerprint check and replanned on a later tick. At most one build
+/// is in flight at a time; `threshold ≤ 0` disables the machinery
+/// entirely (the PR 8 serving path, untouched).
+struct Rebalancer {
+    threshold: f64,
+    pending: Option<(
+        std::sync::mpsc::Receiver<RebalancePlan>,
+        std::thread::JoinHandle<()>,
+    )>,
+}
+
+impl Rebalancer {
+    fn new(threshold: f64) -> Rebalancer {
+        Rebalancer {
+            threshold,
+            pending: None,
+        }
+    }
+
+    /// Drive the state machine one step: commit a finished background
+    /// build if one is ready, otherwise check skew and maybe launch
+    /// one. Called by the batcher after each flush and on idle ticks —
+    /// never from a request path, so serving latency only ever pays for
+    /// the commit's write-locked swap, not the build.
+    fn tick(
+        &mut self,
+        model: &Arc<RwLock<SimplexGp>>,
+        pool: &ShardPool,
+        cfg: &ServeConfig,
+        counters: &Counters,
+    ) {
+        if self.threshold <= 0.0 {
+            return;
+        }
+        if let Some((rx, _)) = &self.pending {
+            use std::sync::mpsc::TryRecvError;
+            match rx.try_recv() {
+                Ok(plan) => {
+                    let (_, handle) = self.pending.take().unwrap();
+                    let _ = handle.join();
+                    Rebalancer::commit(plan, model, pool, cfg, counters);
+                    return;
+                }
+                // Build still running: keep serving from the old model.
+                Err(TryRecvError::Empty) => return,
+                Err(TryRecvError::Disconnected) => {
+                    let (_, handle) = self.pending.take().unwrap();
+                    let _ = handle.join();
+                }
+            }
+        }
+        let snap = {
+            let guard = model.read().unwrap();
+            match guard.skew_pair() {
+                Some((heavy, light, skew)) if skew > self.threshold => {
+                    Some(guard.rebalance_snapshot(heavy, light))
+                }
+                _ => None,
+            }
+        };
+        if let Some(snap) = snap {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let handle = std::thread::spawn(move || {
+                let _ = tx.send(snap.build());
+            });
+            self.pending = Some((rx, handle));
+        }
+    }
+
+    fn commit(
+        plan: RebalancePlan,
+        model: &Arc<RwLock<SimplexGp>>,
+        pool: &ShardPool,
+        cfg: &ServeConfig,
+        counters: &Counters,
+    ) {
+        let mut guard = model.write().unwrap();
+        match guard.apply_rebalance(&plan) {
+            Ok(seed) => {
+                // The pair's worker replicas went stale with the swap:
+                // desync their links so they drop the connection and
+                // refresh the replica from the just-swapped model
+                // (fingerprint-verified) on reconnect. Until then the
+                // pool's in-thread fallback serves the pair — the
+                // shards are resident right after a rebalance.
+                pool.desync(plan.heavy);
+                pool.desync(plan.light);
+                if guard.operator().lattice.shed_count() > 0 {
+                    if !guard.resolve_alpha_routed_seeded(pool, seed.as_deref()) {
+                        rebuild_all_shed(&mut guard, counters);
+                        guard.resolve_alpha_seeded(seed.as_deref());
+                    }
+                } else {
+                    guard.resolve_alpha_seeded(seed.as_deref());
+                }
+                counters.record_solve(&guard);
+                if !cfg.cluster.workers.is_empty() {
+                    push_alpha_all(&guard, pool);
+                }
+                counters.rebalances.fetch_add(1, Ordering::Relaxed);
+            }
+            // Stale plan — an ingest landed in the pair while the build
+            // ran. Drop it; a later tick re-measures the skew and
+            // replans from the fresh fingerprints.
+            Err(_) => {}
+        }
+    }
+}
+
 /// The batcher: coalesce predictions, MVMs and ingests, route to the
 /// shard workers, reply. The only thread that ever takes the model's
 /// write lock (ingest / rebuild), so reads can never deadlock with it.
@@ -1372,6 +1554,7 @@ fn batch_loop(
     let d = model.read().unwrap().d;
     let mut pool = ShardPool::start(&model, &cfg, &counters);
     let mut batch = Batch::default();
+    let mut rebalancer = Rebalancer::new(cfg.cluster.rebalance_skew);
     // Debug fault-injection requests (kill / delay) drain after the
     // flush so in-flight batches complete on the live pool first
     // (deterministic ordering for the failure-path tests).
@@ -1503,6 +1686,21 @@ fn batch_loop(
                     "rebuilds".to_string(),
                     Json::Num(counters.rebuilds.load(Ordering::Relaxed) as f64),
                 );
+                // Streaming-solve economics: background rebalances
+                // committed and realized CG iterations split by
+                // warm-started vs cold α solves.
+                obj.insert(
+                    "rebalances".to_string(),
+                    Json::Num(counters.rebalances.load(Ordering::Relaxed) as f64),
+                );
+                obj.insert(
+                    "warm_iters".to_string(),
+                    Json::Num(counters.warm_iters.load(Ordering::Relaxed) as f64),
+                );
+                obj.insert(
+                    "cold_iters".to_string(),
+                    Json::Num(counters.cold_iters.load(Ordering::Relaxed) as f64),
+                );
                 // Multi-node visibility: how many remote shard workers
                 // are configured vs currently connected-and-synced
                 // (0/0 under the in-process transport).
@@ -1564,7 +1762,13 @@ fn batch_loop(
         // Wait for the first item of a batch.
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
             Ok(w) => w,
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                // Idle tick: advance the background rebalancer (skew
+                // check / build launch / atomic swap of a finished
+                // plan) while no requests are waiting.
+                rebalancer.tick(&model, &pool, &cfg, &counters);
+                continue;
+            }
             Err(_) => break,
         };
         let deadline = Instant::now() + cfg.max_wait;
@@ -1602,6 +1806,7 @@ fn batch_loop(
             } else if cfg.cluster.shed_shards {
                 reshed_ready(&model, &pool);
             }
+            rebalancer.tick(&model, &pool, &cfg, &counters);
         }
         for cmd in debug.drain(..) {
             match cmd {

@@ -123,6 +123,16 @@ pub struct ClusterConfig {
     /// per-shard fallback fires. Serves models bigger than one box's
     /// RAM; see docs/DEPLOYMENT.md §Memory budget.
     pub shed_shards: bool,
+    /// Background rebalancing threshold (config `rebalance_skew`,
+    /// `serve --rebalance-skew`): when the per-shard lattice-size skew
+    /// `max_p m_p / min_p m_p` exceeds this, the coordinator rebuilds
+    /// the (heaviest, lightest) shard pair on a background thread from
+    /// the authoritative points and swaps it in atomically, serving
+    /// every request from the old model until the swap. `0` (the
+    /// default) disables rebalancing — the serving path is untouched,
+    /// bit for bit. Meaningful values are > 1 (the skew of a perfectly
+    /// balanced pair); docs/DEPLOYMENT.md covers tuning.
+    pub rebalance_skew: f64,
 }
 
 impl Default for ClusterConfig {
@@ -138,6 +148,7 @@ impl Default for ClusterConfig {
             hedge: None,
             encoding: WireEncoding::Bin1,
             shed_shards: false,
+            rebalance_skew: 0.0,
         }
     }
 }
@@ -169,6 +180,7 @@ impl ClusterConfig {
             encoding: WireEncoding::parse(cfg.get_str("cluster", "encoding", "bin1"))
                 .unwrap_or(WireEncoding::Bin1),
             shed_shards: cfg.get_usize("cluster", "shed_shards", 0) != 0,
+            rebalance_skew: cfg.get_f64("cluster", "rebalance_skew", 0.0),
         }
     }
 }
@@ -1869,9 +1881,17 @@ mod tests {
         // Unset keys keep the defaults.
         assert_eq!(cc.connect_timeout, Duration::from_millis(1000));
         assert_eq!(cc.refresh_timeout, Duration::from_secs(60));
-        // v2 defaults: binary payloads requested, shedding off.
+        // v2 defaults: binary payloads requested, shedding off,
+        // rebalancing off.
         assert_eq!(cc.encoding, WireEncoding::Bin1);
         assert!(!cc.shed_shards);
+        assert_eq!(cc.rebalance_skew, 0.0);
+        // Rebalance threshold parses as a float.
+        let rb = ClusterConfig::from_config(
+            &Config::parse("[cluster]\nrebalance_skew = 2.5\n").unwrap(),
+        );
+        assert_eq!(rb.rebalance_skew, 2.5);
+        assert_eq!(ClusterConfig::default().rebalance_skew, 0.0);
         // hedge_ms = 0 (and absence) means hedging off.
         let off = ClusterConfig::from_config(
             &Config::parse("[cluster]\nhedge_ms = 0\n").unwrap(),

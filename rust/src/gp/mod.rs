@@ -4,5 +4,5 @@
 pub mod model;
 pub mod trainer;
 
-pub use model::{GpConfig, ShardRouter, SimplexGp};
+pub use model::{GpConfig, RebalancePlan, RebalanceSnapshot, ShardRouter, SimplexGp};
 pub use trainer::{train, EpochRecord, SolveMode, TrainConfig, TrainOutcome};

@@ -14,7 +14,7 @@ use anyhow::Result;
 use super::model::{GpConfig, SimplexGp};
 use crate::kernels::{ArdKernel, KernelFamily};
 use crate::mvm::{MvmOperator, ShardedMvm, Shifted};
-use crate::solvers::{cg_block_precond, rr_cg, slq_logdet, CgOptions, Precond, RrCgOptions};
+use crate::solvers::{cg_block_precond_x0, rr_cg, slq_logdet, CgOptions, Precond, RrCgOptions};
 use crate::util::stats::{dot, rmse};
 use crate::util::Pcg64;
 
@@ -61,6 +61,15 @@ pub struct TrainConfig {
     /// ignored by [`SolveMode::RrCg`], whose randomized-truncation
     /// estimator is defined on the unpreconditioned recursion.
     pub precond_rank: usize,
+    /// Seed epoch e+1's target solve (RHS 0 of the target+probes
+    /// bundle) with epoch e's α. Adam steps are small, so consecutive
+    /// epochs' systems are near each other and the previous weights are
+    /// a good initial guess; the Hutchinson probe RHS are fresh random
+    /// vectors each epoch and always start from zero. `false` restores
+    /// the pre-warm-start cold path bitwise (epoch 0 is cold either
+    /// way). Ignored by [`SolveMode::RrCg`], whose estimator has no
+    /// initial-guess form.
+    pub warm_start: bool,
 }
 
 impl Default for TrainConfig {
@@ -80,6 +89,7 @@ impl Default for TrainConfig {
             init_noise: 0.1,
             shards: 1,
             precond_rank: 0,
+            warm_start: true,
         }
     }
 }
@@ -172,6 +182,9 @@ pub fn train(
     let mut records = Vec::with_capacity(cfg.epochs);
     let mut best: Option<(f64, Vec<f64>, usize)> = None;
     let mut since_best = 0usize;
+    // Epoch e's α, carried forward as the warm-start seed for epoch
+    // e+1's target solve (see TrainConfig::warm_start).
+    let mut prev_alpha: Option<Vec<f64>> = None;
 
     for epoch in 0..cfg.epochs {
         let t0 = std::time::Instant::now();
@@ -212,7 +225,21 @@ pub fn train(
                 for (k, z) in probes.iter().enumerate() {
                     rhs[(k + 1) * n..(k + 2) * n].copy_from_slice(z);
                 }
-                let res = cg_block_precond(
+                // Warm start: seed the target column with the previous
+                // epoch's α (probe columns stay zero-seeded — their RHS
+                // are fresh random vectors with no relation to last
+                // epoch's solves). Zero seed columns contribute A·0 = 0
+                // to the seeded residual, so each column behaves exactly
+                // per-column (solvers::cg docs).
+                let x0 = match (&prev_alpha, cfg.warm_start) {
+                    (Some(prev), true) if prev.len() == n => {
+                        let mut seed = vec![0.0; n * nrhs];
+                        seed[..n].copy_from_slice(prev);
+                        Some(seed)
+                    }
+                    _ => None,
+                };
+                let res = cg_block_precond_x0(
                     &shifted,
                     &rhs,
                     nrhs,
@@ -222,8 +249,10 @@ pub fn train(
                         min_iters: 10,
                     },
                     precond.as_ref().map(|pc| pc as &dyn Precond),
+                    x0.as_deref(),
                 );
                 let alpha = res.x[..n].to_vec();
+                prev_alpha = Some(alpha.clone());
                 let psol: Vec<Vec<f64>> = (0..p)
                     .map(|k| res.x[(k + 1) * n..(k + 2) * n].to_vec())
                     .collect();
@@ -517,6 +546,36 @@ mod tests {
         for r in &out.records {
             assert!(r.val_rmse.is_finite());
             assert!(r.solve_iters <= 500);
+        }
+    }
+
+    #[test]
+    fn warm_start_off_is_cold_and_epoch0_matches() {
+        // Epoch 0 has no previous α, so the first epoch is bitwise the
+        // same with warm starts on or off; disabling them must restore
+        // the pre-warm-start trainer (cold every epoch) and still
+        // converge.
+        let d = 2;
+        let (x, y) = ard_problem(300, d, 20);
+        let (xv, yv) = ard_problem(80, d, 21);
+        let mk = |warm| TrainConfig {
+            epochs: 6,
+            probes: 3,
+            seed: 22,
+            warm_start: warm,
+            ..TrainConfig::default()
+        };
+        let warm = train(&x, &y, &xv, &yv, d, KernelFamily::Rbf, mk(true)).unwrap();
+        let cold = train(&x, &y, &xv, &yv, d, KernelFamily::Rbf, mk(false)).unwrap();
+        assert_eq!(
+            warm.records[0].val_rmse.to_bits(),
+            cold.records[0].val_rmse.to_bits(),
+            "epoch 0 must be identical — no seed exists yet"
+        );
+        assert_eq!(warm.records[0].solve_iters, cold.records[0].solve_iters);
+        let base = rmse(&vec![0.0; yv.len()], &yv);
+        for out in [&warm, &cold] {
+            assert!(out.records[out.best_epoch].val_rmse < base);
         }
     }
 

@@ -209,6 +209,46 @@ impl ShardedLattice {
         }
     }
 
+    /// Atomically swap shards `heavy` and `light` for replacement
+    /// lattices built elsewhere — the commit half of a background
+    /// rebalance. Only the two named shards change: their lattices are
+    /// replaced (and marked resident — a rebuilt shard is materialized
+    /// by construction), the partition `bounds` between them shift to
+    /// the replacements' point counts, and every other shard keeps its
+    /// lattice, its rows, and its shed state untouched. The caller owns
+    /// row-aligned vectors (training set, α) and must reorder the two
+    /// shards' segments with the same permutation that built the
+    /// replacements ([`crate::gp::RebalancePlan`]).
+    ///
+    /// The total point count is conserved (asserted): rebalancing moves
+    /// rows between the pair, it never creates or drops any.
+    pub fn apply_rebalance(
+        &mut self,
+        heavy: usize,
+        light: usize,
+        lat_heavy: PermutohedralLattice,
+        lat_light: PermutohedralLattice,
+    ) {
+        assert!(heavy != light, "rebalance needs two distinct shards");
+        assert!(heavy < self.shards.len() && light < self.shards.len());
+        assert_eq!(
+            lat_heavy.n + lat_light.n,
+            self.shard_n(heavy) + self.shard_n(light),
+            "rebalance must conserve the pair's point count"
+        );
+        self.shards[heavy] = lat_heavy;
+        self.shards[light] = lat_light;
+        self.shed[heavy] = None;
+        self.shed[light] = None;
+        let mut bound = 0;
+        for p in 0..self.shards.len() {
+            self.bounds[p] = bound;
+            bound += self.shard_n(p);
+        }
+        *self.bounds.last_mut().unwrap() = bound;
+        debug_assert_eq!(bound, self.n);
+    }
+
     /// Drop shard `p`'s lattice from memory, keeping only [`ShedMeta`]
     /// (size, fingerprint) and a zero-point placeholder that preserves
     /// the stencil. Returns the bytes freed (0 if already shed).
@@ -328,10 +368,22 @@ impl ShardedLattice {
     /// ties). Exposed so a shed-mode coordinator can route the batch to
     /// the owning worker's replica *before* deciding whether the local
     /// lattice must be materialized.
+    /// The tie-break is part of the contract, not an iterator accident:
+    /// when several shards are equally light the *lowest-indexed* one
+    /// wins, deterministically, regardless of how the partition was
+    /// built or rebalanced. Twin-model equivalence tests (and the shed
+    /// coordinator's route-before-materialize dance) replay ingest
+    /// streams against independently constructed models and rely on
+    /// both picking the same owner for every batch.
     pub fn ingest_target(&self) -> usize {
-        (0..self.shards.len())
-            .min_by_key(|&p| self.shard_n(p))
-            .expect("at least one shard")
+        let mut best = 0;
+        for p in 1..self.shards.len() {
+            // Strict `<`: an equal count never displaces a lower index.
+            if self.shard_n(p) < self.shard_n(best) {
+                best = p;
+            }
+        }
+        best
     }
 
     /// Metadata-only ingest bookkeeping for a *shed* shard whose
@@ -856,6 +908,28 @@ mod tests {
         assert_eq!(total, n + 4);
         for p in 0..3 {
             assert_eq!(lat.shards[p].n, lat.shard_range(p).len());
+        }
+    }
+
+    #[test]
+    fn ingest_tie_break_is_lowest_index() {
+        // An even partition makes every shard equally light: the
+        // deterministic tie-break must pick shard 0, and after batches
+        // of equal size re-level the counts, the cycle must repeat in
+        // strict index order — the rule twin-model replays depend on.
+        let d = 2;
+        let n = 90; // 3 shards × 30 points
+        let x = random_points(n, d, 30);
+        let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let mut lat = ShardedLattice::build(&x, d, &k, 1, 3);
+        assert_eq!(lat.shard_n(0), lat.shard_n(1));
+        assert_eq!(lat.shard_n(1), lat.shard_n(2));
+        assert_eq!(lat.ingest_target(), 0);
+        for (i, expect) in [0usize, 1, 2, 0, 1, 2].iter().enumerate() {
+            assert_eq!(lat.ingest_target(), *expect, "batch {i}");
+            let batch = random_points(5, d, 31 + i as u64);
+            let out = lat.ingest(&batch, &k);
+            assert_eq!(out.shard, *expect, "batch {i}");
         }
     }
 

@@ -178,6 +178,38 @@ pub fn cg_block_precond(
     opts: CgOptions,
     precond: Option<&dyn Precond>,
 ) -> BlockCgResult {
+    cg_block_precond_x0(a, b, nrhs, opts, precond, None)
+}
+
+/// Warm-started preconditioned block CG: like [`cg_block_precond`], but
+/// the iteration starts from an initial guess `x0` instead of zero.
+///
+/// Semantics, exactly:
+///
+/// - **`x0 = None` is [`cg_block_precond`] bit for bit**: the no-guess
+///   branch initializes `x = 0`, `r = b` with the identical
+///   floating-point sequence (it IS the old code — same delegation
+///   trick as the `precond = None` branch), so every existing caller
+///   keeps its exact bytes.
+/// - **`x0 = Some`**: `x` starts at the guess and the initial residual
+///   is the true `r = b − A·x0` (one extra operator application). From
+///   there the loop is shared with the cold path unchanged: per-RHS
+///   freeze still judges the *true* RMS residual, `min_iters` still
+///   floors the iteration count, and a column whose residual is already
+///   exactly zero never activates (so seeding with the exact solution
+///   converges in ≤ 1 iteration under `min_iters = 1`).
+/// - **Per-column independence**: a zero column of `x0` contributes
+///   `A·0 = 0` to the block MVM, so its residual equals `b_c` and its
+///   recurrence matches a cold solve of that column — mixed warm/cold
+///   blocks (warm target + fresh probes) behave per column.
+pub fn cg_block_precond_x0(
+    a: &dyn MvmOperator,
+    b: &[f64],
+    nrhs: usize,
+    opts: CgOptions,
+    precond: Option<&dyn Precond>,
+    x0: Option<&[f64]>,
+) -> BlockCgResult {
     let n = a.len();
     assert!(nrhs >= 1, "need at least one right-hand side");
     assert_eq!(b.len(), n * nrhs);
@@ -185,8 +217,18 @@ pub fn cg_block_precond(
         assert_eq!(pc.len(), n, "preconditioner dimension mismatch");
     }
     let sqrt_n = (n as f64).sqrt().max(1e-300);
-    let mut x = vec![0.0; n * nrhs];
-    let mut r = b.to_vec();
+    let (mut x, mut r) = match x0 {
+        None => (vec![0.0; n * nrhs], b.to_vec()),
+        Some(x0) => {
+            assert_eq!(x0.len(), n * nrhs, "initial guess dimension mismatch");
+            let ax0 = a.mvm_block(x0, nrhs);
+            let mut r = b.to_vec();
+            for (ri, ai) in r.iter_mut().zip(&ax0) {
+                *ri -= ai;
+            }
+            (x0.to_vec(), r)
+        }
+    };
     // rr[c] = ‖r_c‖² drives convergence and freezing; rz[c] = r_cᵀ z_c
     // drives the step sizes. Without a preconditioner z ≡ r, so rz
     // aliases rr and the arithmetic is exactly cg_block's.
@@ -464,6 +506,78 @@ mod tests {
         assert_eq!(plain.iterations, via_precond.iterations);
         assert_eq!(plain.rhs_iterations, via_precond.rhs_iterations);
         assert_eq!(plain.rms_residual, via_precond.rms_residual);
+    }
+
+    #[test]
+    fn x0_none_is_cg_block_precond_bitwise() {
+        // The None-guess branch of cg_block_precond_x0 runs the
+        // identical FP sequence as cg_block_precond (which delegates to
+        // it) — pin with exact equality.
+        let n = 50;
+        let op = spd_op(n, 31);
+        let mut rng = Pcg64::new(32);
+        let nrhs = 3;
+        let b = rng.normal_vec(n * nrhs);
+        let opts = CgOptions {
+            tol: 1e-9,
+            max_iters: 300,
+            min_iters: 1,
+        };
+        let cold = cg_block_precond(&op, &b, nrhs, opts, None);
+        let via_x0 = cg_block_precond_x0(&op, &b, nrhs, opts, None, None);
+        assert_eq!(cold.x, via_x0.x);
+        assert_eq!(cold.iterations, via_x0.iterations);
+        assert_eq!(cold.rhs_iterations, via_x0.rhs_iterations);
+        assert_eq!(cold.rms_residual, via_x0.rms_residual);
+    }
+
+    #[test]
+    fn exact_seed_converges_in_at_most_one_iteration() {
+        let n = 40;
+        let op = spd_op(n, 41);
+        let mut rng = Pcg64::new(42);
+        let nrhs = 2;
+        let b = rng.normal_vec(n * nrhs);
+        let opts = CgOptions {
+            tol: 1e-9,
+            max_iters: 500,
+            min_iters: 1,
+        };
+        let cold = cg_block_precond(&op, &b, nrhs, opts, None);
+        assert!(cold.converged.iter().all(|&c| c));
+        let warm = cg_block_precond_x0(&op, &b, nrhs, opts, None, Some(&cold.x));
+        assert!(warm.iterations <= 1, "warm from exact: {}", warm.iterations);
+        assert!(warm.converged.iter().all(|&c| c));
+        for (w, c) in warm.x.iter().zip(&cold.x) {
+            assert!((w - c).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn warm_seed_cuts_iterations_and_matches() {
+        let n = 60;
+        let op = spd_op(n, 51);
+        let mut rng = Pcg64::new(52);
+        let b = rng.normal_vec(n);
+        let opts = CgOptions {
+            tol: 1e-10,
+            max_iters: 500,
+            min_iters: 1,
+        };
+        let cold = cg_block_precond(&op, &b, 1, opts, None);
+        // Seed with a slightly perturbed solution: the warm solve must
+        // reach the same answer in strictly fewer iterations.
+        let x0: Vec<f64> = cold.x.iter().map(|v| v + 1e-6 * rng.normal()).collect();
+        let warm = cg_block_precond_x0(&op, &b, 1, opts, None, Some(&x0));
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        for (w, c) in warm.x.iter().zip(&cold.x) {
+            assert!((w - c).abs() < 1e-8);
+        }
     }
 
     #[test]

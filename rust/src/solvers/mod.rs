@@ -21,7 +21,8 @@ pub mod precond;
 pub mod rrcg;
 
 pub use cg::{
-    cg, cg_block, cg_block_precond, cg_multi, cg_precond, BlockCgResult, CgOptions, CgResult,
+    cg, cg_block, cg_block_precond, cg_block_precond_x0, cg_multi, cg_precond, BlockCgResult,
+    CgOptions, CgResult,
 };
 pub use lanczos::{lanczos, lanczos_block, slq_logdet, LanczosResult};
 pub use precond::{

@@ -18,6 +18,12 @@
 //!   against streaming ingest through the serving coordinator, fired
 //!   per an open-loop load schedule, is bitwise explainable by a
 //!   serial replay on a twin model.
+//! - **Warm-start equivalence** (ISSUE 9): `x0 = None` through the
+//!   warm-started CG entry point is the cold path bit for bit; an
+//!   exact-solution seed converges in ≤ 1 iteration; a warm-seeded
+//!   ingest re-solve matches the cold re-solve of the same patched
+//!   operator to ≤ 1e-10 in strictly fewer iterations; and the block
+//!   solver's per-RHS freeze contract survives a nonzero guess.
 //!
 //! All randomness flows through the crate's own seeded [`Pcg64`]
 //! (no external dependencies); every case prints its parameters in the
@@ -31,8 +37,8 @@ use simplex_gp::kernels::{ArdKernel, KernelFamily};
 use simplex_gp::lattice::{PermutohedralLattice, ShardedLattice};
 use simplex_gp::linalg::eigh_tridiag;
 use simplex_gp::loadgen::{schedule, Arrival, Mix, OpKind};
-use simplex_gp::mvm::{MvmOperator, ShardedMvm};
-use simplex_gp::solvers::lanczos;
+use simplex_gp::mvm::{MvmOperator, ShardedMvm, Shifted};
+use simplex_gp::solvers::{cg_block_precond, cg_block_precond_x0, lanczos, CgOptions};
 use simplex_gp::util::stats::dot;
 use simplex_gp::util::Pcg64;
 
@@ -525,4 +531,251 @@ fn concurrent_load_with_shed_shards_bitwise_matches_serial_replay() {
     // behind two loopback workers — worker-resident serving changes
     // where the arithmetic runs, never what it produces.
     concurrent_load_case(true);
+}
+
+// ---------------------------------------------------------------------
+// Warm-start invariants (ISSUE 9). The unit-level pins live next to the
+// solver (solvers/cg.rs); these legs run the SAME contracts on the real
+// sharded lattice operator across the sweep, where the block MVM is a
+// genuine splat→blur→slice pass.
+// ---------------------------------------------------------------------
+
+#[test]
+fn warm_x0_none_bitwise_equals_cold_path_across_the_sweep() {
+    // `cg_block_precond_x0(.., None)` must reproduce `cg_block_precond`
+    // exactly — the None branch IS the old code (delegation), so every
+    // pre-warm-start caller keeps its bytes. Pinned on the lattice
+    // operator so a future "optimization" of the shared loop that
+    // perturbs the cold FP sequence fails loudly here.
+    for c in cases() {
+        if c.b != 1 {
+            continue; // nrhs is swept explicitly below
+        }
+        let n = 140;
+        let x = random_points(n, c.d, c.seed.wrapping_add(4));
+        let k = ArdKernel::with_lengthscale(c.family, c.d, 1.0);
+        let op = ShardedMvm::build(&x, c.d, &k, 1, c.p).with_symmetrize(true);
+        let shifted = Shifted::new(&op, 0.5);
+        let mut rng = Pcg64::with_stream(0x9a12, c.seed);
+        for nrhs in [1usize, 3] {
+            let b = rng.normal_vec(n * nrhs);
+            let opts = CgOptions {
+                tol: 1e-8,
+                max_iters: 200,
+                min_iters: 1,
+            };
+            let cold = cg_block_precond(&shifted, &b, nrhs, opts, None);
+            let via_x0 = cg_block_precond_x0(&shifted, &b, nrhs, opts, None, None);
+            assert_eq!(
+                cold.x, via_x0.x,
+                "case (d={} P={} {:?}) nrhs={nrhs}: x0=None drifted",
+                c.d, c.p, c.family
+            );
+            assert_eq!(cold.iterations, via_x0.iterations);
+            assert_eq!(cold.rhs_iterations, via_x0.rhs_iterations);
+            assert_eq!(cold.rms_residual, via_x0.rms_residual);
+        }
+    }
+}
+
+#[test]
+fn exact_seed_converges_in_at_most_one_iteration_across_the_sweep() {
+    // Seeding with the (tightly solved) solution leaves a residual an
+    // order of magnitude under the warm tolerance, so the warm solve
+    // freezes at the first convergence check: ≤ 1 iteration.
+    for c in cases() {
+        if c.b != 1 {
+            continue;
+        }
+        let n = 140;
+        let x = random_points(n, c.d, c.seed.wrapping_add(5));
+        let k = ArdKernel::with_lengthscale(c.family, c.d, 1.0);
+        let op = ShardedMvm::build(&x, c.d, &k, 1, c.p).with_symmetrize(true);
+        let shifted = Shifted::new(&op, 0.5);
+        let mut rng = Pcg64::with_stream(0x9a13, c.seed);
+        let b = rng.normal_vec(n);
+        let tight = CgOptions {
+            tol: 1e-11,
+            max_iters: 500,
+            min_iters: 1,
+        };
+        let cold = cg_block_precond(&shifted, &b, 1, tight, None);
+        assert!(
+            cold.converged.iter().all(|&ok| ok),
+            "case (d={} P={} {:?}): cold solve did not converge",
+            c.d,
+            c.p,
+            c.family
+        );
+        let warm_opts = CgOptions {
+            tol: 1e-10,
+            max_iters: 500,
+            min_iters: 1,
+        };
+        let warm = cg_block_precond_x0(&shifted, &b, 1, warm_opts, None, Some(&cold.x));
+        assert!(
+            warm.iterations <= 1,
+            "case (d={} P={} {:?}): exact seed took {} iterations",
+            c.d,
+            c.p,
+            c.family,
+            warm.iterations
+        );
+        assert!(warm.converged.iter().all(|&ok| ok));
+        for (w, s) in warm.x.iter().zip(&cold.x) {
+            assert!(
+                (w - s).abs() <= 1e-8,
+                "case (d={} P={} {:?}): exact-seed solve moved",
+                c.d,
+                c.p,
+                c.family
+            );
+        }
+    }
+}
+
+#[test]
+fn warm_ingest_matches_cold_resolve_with_fewer_iterations() {
+    // The streaming contract (ISSUE 9 acceptance): after an ingest, the
+    // warm re-solve — seeded with the previous α, zeros spliced over
+    // the new rows — must land on the cold re-solve of the SAME patched
+    // operator to ≤ 1e-10, in strictly fewer CG iterations. The cold
+    // comparator is a bitwise-identical twin (same deterministic fit,
+    // same patch) whose α is re-solved unseeded, so the two solves
+    // differ in nothing but the initial guess.
+    for &d in &[2usize, 5] {
+        for &p in &[1usize, 3] {
+            for &family in &FAMILIES {
+                let n0 = 160;
+                let rows = 6;
+                let seed = 0x9a14 + (d * 10 + p) as u64;
+                let x = random_points(n0 + rows, d, seed);
+                let mut yrng = Pcg64::with_stream(0x9a15, seed);
+                let y: Vec<f64> = (0..n0 + rows)
+                    .map(|i| x[i * d].sin() + 0.1 * yrng.normal())
+                    .collect();
+                let kernel = ArdKernel::with_lengthscale(family, d, 0.8);
+                let cfg = GpConfig {
+                    shards: p,
+                    precond_rank: 16,
+                    cg_tol: 1e-12,
+                    ..GpConfig::default()
+                };
+                // λ_min(K̃+σ²I) ≥ σ² = 0.5 turns the 1e-12 residual
+                // tolerance into a guaranteed ≤ ~5e-11 bound on |Δα|.
+                let noise = 0.5;
+                let fit = || {
+                    SimplexGp::fit(&x[..n0 * d], &y[..n0], d, kernel.clone(), noise, cfg.clone())
+                        .unwrap()
+                };
+                let mut warm = fit();
+                let mut cold = fit();
+                assert_eq!(warm.alpha(), cold.alpha(), "twin fits diverged");
+
+                let (xb, yb) = (&x[n0 * d..], &y[n0..]);
+                warm.ingest(xb, yb).unwrap();
+                cold.ingest_patch(xb, yb).unwrap();
+                cold.resolve_alpha();
+
+                let tag = format!("d={d} P={p} {family:?}");
+                assert!(warm.last_solve_warm(), "{tag}: ingest solve not warm");
+                assert!(!cold.last_solve_warm(), "{tag}: comparator not cold");
+                assert!(
+                    warm.fit_iterations < cold.fit_iterations,
+                    "{tag}: warm {} vs cold {} iterations",
+                    warm.fit_iterations,
+                    cold.fit_iterations
+                );
+                assert_eq!(warm.alpha().len(), cold.alpha().len(), "{tag}");
+                for (i, (a, b)) in warm.alpha().iter().zip(cold.alpha()).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-10,
+                        "{tag} α row {i}: warm {a} vs cold {b}"
+                    );
+                }
+                let xq = random_points(5, d, seed ^ 0xdead_beef);
+                let (mw, vw) = warm.predict(&xq);
+                let (mc, vc) = cold.predict(&xq);
+                for i in 0..mw.len() {
+                    assert!((mw[i] - mc[i]).abs() <= 1e-10, "{tag} mean {i}");
+                    assert!((vw[i] - vc[i]).abs() <= 1e-8, "{tag} var {i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn per_rhs_freeze_preserved_under_nonzero_guess() {
+    // Mixed warm/cold blocks: an exactly-seeded column freezes at the
+    // first check and stays frozen while its neighbors keep iterating;
+    // a zero-seeded column behaves like a cold solve of that column.
+    let (d, p, n) = (3usize, 2usize, 140usize);
+    let x = random_points(n, d, 0x9a16);
+    let k = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+    let op = ShardedMvm::build(&x, d, &k, 1, p).with_symmetrize(true);
+    let shifted = Shifted::new(&op, 0.5);
+    let mut rng = Pcg64::with_stream(0x9a17, 1);
+    let nrhs = 3;
+    let b = rng.normal_vec(n * nrhs);
+
+    // Column 0's exact solution, solved an order tighter than the
+    // block tolerance below.
+    let tight = CgOptions {
+        tol: 1e-11,
+        max_iters: 500,
+        min_iters: 1,
+    };
+    let x0_exact = cg_block_precond(&shifted, &b[..n], 1, tight, None);
+    assert!(x0_exact.converged[0]);
+
+    let opts = CgOptions {
+        tol: 1e-10,
+        max_iters: 500,
+        min_iters: 1,
+    };
+    // Seed block: col 0 = exact solution, col 1 = zeros (cold), col 2 =
+    // a nonzero perturbation of nothing in particular.
+    let mut seed = vec![0.0; n * nrhs];
+    seed[..n].copy_from_slice(&x0_exact.x);
+    for v in seed[2 * n..].iter_mut() {
+        *v = 0.01 * rng.normal();
+    }
+    let mixed = cg_block_precond_x0(&shifted, &b, nrhs, opts, None, Some(&seed));
+
+    // Col 0 froze immediately and its iterate never moved materially.
+    assert!(
+        mixed.rhs_iterations[0] <= 1,
+        "exact-seeded column ran {} iterations",
+        mixed.rhs_iterations[0]
+    );
+    for i in 0..n {
+        assert!(
+            (mixed.x[i] - x0_exact.x[i]).abs() <= 1e-8,
+            "frozen column drifted at row {i}"
+        );
+    }
+    // Its neighbors kept iterating to convergence — the freeze is per
+    // RHS, not global.
+    assert!(mixed.converged.iter().all(|&ok| ok));
+    assert!(
+        mixed.rhs_iterations[1] > mixed.rhs_iterations[0],
+        "cold column {} vs frozen column {}",
+        mixed.rhs_iterations[1],
+        mixed.rhs_iterations[0]
+    );
+    assert_eq!(
+        mixed.iterations,
+        *mixed.rhs_iterations.iter().max().unwrap(),
+        "shared loop length is the slowest RHS"
+    );
+    // The zero-seeded column matches a cold single-RHS solve of the
+    // same column (per-column independence under a mixed guess).
+    let cold1 = cg_block_precond(&shifted, &b[n..2 * n], 1, opts, None);
+    for i in 0..n {
+        assert!(
+            (mixed.x[n + i] - cold1.x[i]).abs() <= 1e-8,
+            "zero-seeded column diverged from cold at row {i}"
+        );
+    }
 }

@@ -1,0 +1,431 @@
+//! Background shard-rebalancing suite (PR 9).
+//!
+//! Pins the `[cluster] rebalance_skew` contract: when lightest-first
+//! ingest routing lets per-shard lattice sizes skew past the threshold,
+//! the coordinator rebuilds the (heaviest, lightest) pair on a
+//! background thread and swaps it in atomically — and until that swap,
+//! every reply is byte-identical to a never-rebalancing twin. After the
+//! swap, every reply is byte-identical to a twin that ran the same
+//! deterministic rebalance ([`SimplexGp::rebalance_pair`]) — there is
+//! no in-between state a client can observe.
+//!
+//! The fault leg kills the heavy shard's worker link first
+//! (`debug_kill_worker`) and drives the same skew: the rebalance must
+//! go through against the degraded pool (byte-identical throughout),
+//! after which the surviving link re-syncs its swapped replica and
+//! serves it remotely again.
+//!
+//! The stats legs pin `rebalances` / `warm_iters` / `cold_iters`
+//! coherence, including the rebalance-off default (`rebalance_skew =
+//! 0`), which must never count a rebalance.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use simplex_gp::coordinator::transport::ClusterConfig;
+use simplex_gp::coordinator::worker::{ShardWorker, WorkerConfig};
+use simplex_gp::coordinator::{Client, ServeConfig, Server};
+use simplex_gp::gp::{GpConfig, SimplexGp};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::util::Pcg64;
+
+const D: usize = 2;
+
+/// Deterministic base problem: uniform points, so the two shards start
+/// with comparable lattice sizes (skew ≈ 1).
+fn problem(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::new(seed);
+    let x: Vec<f64> = (0..n * D).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| (x[i * D]).sin() + 0.05 * rng.normal())
+        .collect();
+    (x, y)
+}
+
+fn fit(x: &[f64], y: &[f64]) -> SimplexGp {
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, D, 0.5);
+    let cfg = GpConfig {
+        shards: 2,
+        ..GpConfig::default()
+    };
+    SimplexGp::fit(x, y, D, kernel, 0.05, cfg).unwrap()
+}
+
+/// One skew-driving ingest batch. Even steps are spread far out
+/// (uniform in ±8 — mostly fresh lattice keys, so the receiving
+/// shard's m jumps); odd steps are a tight cluster (±0.1 — few fresh
+/// keys). Lightest-first routing with the lowest-index tie-break
+/// alternates equal-sized batches between the two shards, so the
+/// spread batches keep landing on shard 0 and its lattice outgrows
+/// shard 1's.
+fn skew_batch(step: usize, rows: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::with_stream(0x5e1f, step as u64);
+    let scale = if step % 2 == 0 { 8.0 } else { 0.1 };
+    let x: Vec<f64> = (0..rows * D)
+        .map(|_| rng.uniform_in(-scale, scale))
+        .collect();
+    let y: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+    (x, y)
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(
+            a[i].to_bits(),
+            b[i].to_bits(),
+            "{what}: row {i} ({} vs {})",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+fn stat_f64(client: &mut Client, key: &str) -> f64 {
+    client
+        .stats()
+        .unwrap()
+        .get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("stats op missing '{key}'"))
+}
+
+/// Fire one raw debug op at the coordinator and return the reply line.
+fn debug_op(addr: &std::net::SocketAddr, line: &str) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer.write_all(line.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply
+}
+
+/// Drive skewed ingests through `client` and `twin` in lockstep until
+/// the twin's skew crosses `threshold` (checked after EVERY batch, so
+/// the server cannot cross — and launch a background build — anywhere
+/// but at the final state). Returns the recorded batches for replay.
+fn drive_skew(
+    client: &mut Client,
+    twin: &mut SimplexGp,
+    threshold: f64,
+) -> Vec<(Vec<f64>, Vec<f64>)> {
+    let mut batches = Vec::new();
+    for step in 0..80 {
+        let (xb, yb) = skew_batch(step, 5);
+        let n_live = client.ingest(&xb, &yb, D).unwrap();
+        twin.ingest(&xb, &yb).unwrap();
+        assert_eq!(n_live, twin.n_train(), "step {step}: ingest diverged");
+        batches.push((xb, yb));
+        let (_, _, skew) = twin.skew_pair().expect("P=2 always has a pair");
+        if skew > threshold {
+            return batches;
+        }
+        // Still below the threshold, so no build can have launched (the
+        // server ticks on the same skew the twin reports) and no swap
+        // can race this reply: it positively pins pre-swap identity.
+        if step % 4 == 3 {
+            let v = Pcg64::with_stream(0x5e1f_aaaa, step as u64).normal_vec(twin.n_train());
+            assert_bits_eq(
+                &client.mvm(&v).unwrap(),
+                &twin.operator().lattice.mvm(&v),
+                "pre-swap mvm during skew drive",
+            );
+        }
+    }
+    panic!("80 skewed batches never crossed the threshold {threshold}");
+}
+
+/// Replay `batches` into a fresh fit of `(x, y)` — the deterministic
+/// twin of the served model just before the rebalance.
+fn replay(x: &[f64], y: &[f64], batches: &[(Vec<f64>, Vec<f64>)]) -> SimplexGp {
+    let mut gp = fit(x, y);
+    for (xb, yb) in batches {
+        gp.ingest(xb, yb).unwrap();
+    }
+    gp
+}
+
+/// The headline pin: skewed streaming ingest triggers exactly one
+/// background rebalance; every reply before the swap is byte-identical
+/// to the never-rebalanced twin, every reply after it to the
+/// `rebalance_pair` twin, and the transition is atomic (no reply
+/// matches neither).
+#[test]
+fn rebalance_swaps_atomically_and_replies_stay_byte_identical() {
+    let (x, y) = problem(240, 0x9b01);
+    let mut twin = fit(&x, &y);
+    let initial_skew = twin.skew_pair().unwrap().2;
+    let threshold = (initial_skew * 1.1).max(1.3);
+
+    let server = Server::start(
+        fit(&x, &y),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_ingest: true,
+            cluster: ClusterConfig {
+                rebalance_skew: threshold,
+                ..ClusterConfig::default()
+            },
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+
+    let batches = drive_skew(&mut client, &mut twin, threshold);
+    let (heavy, light, skew) = twin.skew_pair().unwrap();
+    assert!(skew > threshold);
+
+    // The post-swap twin: same history, then the same deterministic
+    // pair rebuild the coordinator's background thread runs.
+    let mut post = replay(&x, &y, &batches);
+    assert_eq!(post.alpha(), twin.alpha(), "replay twin diverged");
+    post.rebalance_pair(heavy, light).unwrap();
+    assert!(post.last_solve_warm(), "rebalance re-solve must be warm");
+    let post_skew = post.skew_pair().unwrap().2;
+    assert!(
+        post_skew <= threshold,
+        "rebalance left skew {post_skew} above threshold {threshold} — \
+         a second rebalance would fire and break the single-swap pin"
+    );
+
+    let n = twin.n_train();
+    let mut rng = Pcg64::new(0x9b02);
+    let v = rng.normal_vec(n);
+    let pre_mvm = twin.operator().lattice.mvm(&v);
+    let post_mvm = post.operator().lattice.mvm(&v);
+    let xq: Vec<f64> = (0..3 * D).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let (pre_mean, pre_var) = twin.predict(&xq);
+    let (post_mean, post_var) = post.predict(&xq);
+    assert!(
+        !bits_eq(&pre_mvm, &post_mvm),
+        "pre/post lattices agree bitwise — the swap would be unobservable"
+    );
+
+    // Poll through the swap: every reply matches exactly one twin, and
+    // once a reply matches the post twin, no later reply may match the
+    // pre twin again.
+    let t0 = Instant::now();
+    let mut swapped = false;
+    loop {
+        let got = client.mvm(&v).unwrap();
+        if bits_eq(&got, &pre_mvm) {
+            assert!(
+                !swapped,
+                "reply reverted to the pre-rebalance model after the swap"
+            );
+        } else {
+            assert_bits_eq(&got, &post_mvm, "post-swap mvm");
+            swapped = true;
+        }
+        // The swap may land between the two requests, so this check is
+        // two-sided as well: pre bits (only before the swap) or post
+        // bits (which mark the swap) — never a third value.
+        let (gm, gv) = client.predict_var(&xq, D).unwrap();
+        if bits_eq(&gm, &pre_mean) && bits_eq(&gv, &pre_var) {
+            assert!(!swapped, "predict reverted to the pre-rebalance model");
+        } else {
+            assert_bits_eq(&gm, &post_mean, "post-swap mean");
+            assert_bits_eq(&gv, &post_var, "post-swap var");
+            swapped = true;
+        }
+        if swapped && server.rebalances() >= 1 {
+            break;
+        }
+        assert!(
+            t0.elapsed().as_secs() < 30,
+            "background rebalance never committed (skew {skew} > {threshold})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Exactly one swap, and the counters are coherent with it.
+    assert_eq!(server.rebalances(), 1, "a second rebalance fired");
+    assert_eq!(stat_f64(&mut client, "rebalances"), 1.0);
+    assert_eq!(stat_f64(&mut client, "n"), twin.n_train() as f64);
+    assert!(
+        stat_f64(&mut client, "warm_iters") > 0.0,
+        "warm ingest solves and the rebalance re-solve must count as warm"
+    );
+    assert_eq!(server.warm_iters(), stat_f64(&mut client, "warm_iters") as u64);
+
+    // Steady state after the swap: still the post twin, bit for bit.
+    for _ in 0..3 {
+        assert_bits_eq(&client.mvm(&v).unwrap(), &post_mvm, "steady-state mvm");
+    }
+    let (gm, gv) = client.predict_var(&xq, D).unwrap();
+    assert_bits_eq(&gm, &post_mean, "steady-state mean");
+    assert_bits_eq(&gv, &post_var, "steady-state var");
+
+    server.shutdown();
+}
+
+/// Fault leg: kill the heavy shard's worker link, then drive the same
+/// skew. The rebalance must commit against the degraded pool with
+/// every reply still byte-identical (the dead link's shard computes
+/// in-thread), and afterwards the SURVIVING link re-syncs its swapped
+/// replica — `remote_workers` comes back and post-rebalance jobs run
+/// remotely again.
+#[test]
+fn killed_owning_worker_mid_rebalance_degrades_byte_identical_then_resyncs() {
+    let (x, y) = problem(240, 0x9b11);
+    let mut twin = fit(&x, &y);
+    let initial_skew = twin.skew_pair().unwrap().2;
+    let threshold = (initial_skew * 1.1).max(1.3);
+
+    let workers: Vec<ShardWorker> = (0..2)
+        .map(|_| {
+            ShardWorker::start(WorkerConfig {
+                listen: "127.0.0.1:0".to_string(),
+                ..WorkerConfig::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    let server = Server::start(
+        fit(&x, &y),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_ingest: true,
+            debug_ops: true,
+            cluster: ClusterConfig {
+                workers: workers.iter().map(|w| w.local_addr.to_string()).collect(),
+                rebalance_skew: threshold,
+                ..ClusterConfig::default()
+            },
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let t0 = Instant::now();
+    while stat_f64(&mut client, "remote_workers") < 2.0 {
+        assert!(t0.elapsed().as_secs() < 30, "workers never synced");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // Kill the link serving shard 0 — the shard the spread batches
+    // will fatten into the heavy half of the rebalanced pair. Its jobs
+    // degrade to in-thread compute from here on.
+    let reply = debug_op(
+        &server.local_addr,
+        "{\"id\":70,\"op\":\"debug_kill_worker\",\"shard\":0}",
+    );
+    assert!(reply.contains("\"killed\":1"), "got: {reply}");
+
+    let batches = drive_skew(&mut client, &mut twin, threshold);
+    let (heavy, light, _) = twin.skew_pair().unwrap();
+    assert_eq!(heavy, 0, "spread batches were meant to fatten shard 0");
+    let mut post = replay(&x, &y, &batches);
+    post.rebalance_pair(heavy, light).unwrap();
+
+    let n = twin.n_train();
+    let mut rng = Pcg64::new(0x9b12);
+    let v = rng.normal_vec(n);
+    let pre_mvm = twin.operator().lattice.mvm(&v);
+    let post_mvm = post.operator().lattice.mvm(&v);
+
+    // Degraded but byte-identical through the swap.
+    let t1 = Instant::now();
+    let mut swapped = false;
+    loop {
+        let got = client.mvm(&v).unwrap();
+        if bits_eq(&got, &pre_mvm) {
+            assert!(!swapped, "reply reverted after the swap");
+        } else {
+            assert_bits_eq(&got, &post_mvm, "post-swap degraded mvm");
+            swapped = true;
+        }
+        if swapped && server.rebalances() >= 1 {
+            break;
+        }
+        assert!(
+            t1.elapsed().as_secs() < 30,
+            "rebalance never committed on the degraded pool"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(server.rebalances(), 1);
+    assert!(server.warm_iters() > 0);
+
+    // Eventual resync: the commit desynced both pair replicas; the
+    // dead link stays dead (shard 0 keeps computing in-thread), but
+    // the surviving link must reconnect, refresh its replica from the
+    // swapped model, and serve shard 1 remotely again — all while the
+    // replies stay byte-identical to the post twin.
+    let t2 = Instant::now();
+    loop {
+        let before: u64 = workers.iter().map(|w| w.served()).sum();
+        assert_bits_eq(&client.mvm(&v).unwrap(), &post_mvm, "post-recovery mvm");
+        let after: u64 = workers.iter().map(|w| w.served()).sum();
+        if stat_f64(&mut client, "remote_workers") >= 1.0 && after > before {
+            break;
+        }
+        assert!(
+            t2.elapsed().as_secs() < 30,
+            "surviving worker never re-synced its swapped replica"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    server.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+/// The rebalance-off default: `rebalance_skew = 0` must never count a
+/// rebalance no matter the skew, while the warm/cold iteration split
+/// still tracks the streaming solves.
+#[test]
+fn rebalance_off_counts_nothing_and_warm_iters_track_ingest() {
+    let (x, y) = problem(200, 0x9b21);
+    let mut twin = fit(&x, &y);
+    let server = Server::start(
+        fit(&x, &y),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_ingest: true,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    assert_eq!(stat_f64(&mut client, "rebalances"), 0.0);
+    assert_eq!(stat_f64(&mut client, "warm_iters"), 0.0);
+    assert_eq!(stat_f64(&mut client, "cold_iters"), 0.0);
+
+    // Drive well past any reasonable threshold: with rebalancing off
+    // the skew is free to grow and the model must never swap.
+    for step in 0..12 {
+        let (xb, yb) = skew_batch(step, 5);
+        client.ingest(&xb, &yb, D).unwrap();
+        twin.ingest(&xb, &yb).unwrap();
+    }
+    // Give any (buggy) background machinery time to fire, then pin.
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(server.rebalances(), 0, "rebalance fired with skew = 0");
+    assert_eq!(stat_f64(&mut client, "rebalances"), 0.0);
+    assert!(
+        stat_f64(&mut client, "warm_iters") > 0.0,
+        "incremental ingest solves must count as warm"
+    );
+    assert_eq!(stat_f64(&mut client, "cold_iters"), 0.0);
+
+    // And the served model is still the plain streaming twin.
+    let v = Pcg64::new(0x9b22).normal_vec(twin.n_train());
+    assert_bits_eq(
+        &client.mvm(&v).unwrap(),
+        &twin.operator().lattice.mvm(&v),
+        "rebalance-off mvm",
+    );
+
+    server.shutdown();
+}

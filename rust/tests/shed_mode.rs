@@ -211,7 +211,9 @@ fn full_op_mix_shed_equals_unshed_and_direct_byte_identical() {
         // rebuilds shard-by-shard with every lattice shed at birth and
         // re-solves α on the routed operator; the refit appends the
         // batch at the end of the training set, so the twin mirror is a
-        // from-scratch fit of the concatenated data.
+        // fit of the concatenated data — warm-seeded with the pre-refit
+        // α zero-extended over the appended rows, exactly as the
+        // coordinator seeds its refit (PR 9 warm restarts).
         let rows = max_ingest_batch + 8;
         let (xi, yi) = problem(rows, d, 1100 + shards as u64);
         let n_unshed = unshed.ingest(&xi, &yi, d).unwrap();
@@ -220,7 +222,14 @@ fn full_op_mix_shed_equals_unshed_and_direct_byte_identical() {
         xs.extend_from_slice(&xi);
         let mut ys = twin.y_train.clone();
         ys.extend_from_slice(&yi);
-        twin = fit(&xs, &ys, d, shards);
+        let mut seed = twin.alpha().to_vec();
+        seed.resize(ys.len(), 0.0);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.5);
+        let cfg = GpConfig {
+            shards,
+            ..GpConfig::default()
+        };
+        twin = SimplexGp::fit_seeded(&xs, &ys, d, kernel, 0.05, cfg, Some(&seed)).unwrap();
         assert_eq!(n_unshed, twin.n_train(), "P={shards}: unshed refit n");
         assert_eq!(n_shed, twin.n_train(), "P={shards}: shed refit n");
         assert_eq!(

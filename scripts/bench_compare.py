@@ -2,7 +2,7 @@
 """Perf-regression gate: compare a bench JSON-lines file against a baseline.
 
 Usage:
-    python3 scripts/bench_compare.py BENCH_BASELINE.json BENCH_PR8.json \
+    python3 scripts/bench_compare.py BENCH_BASELINE.json BENCH_PR9.json \
         [--threshold 0.25] [--metrics ns_per_mvm,p99_us]
 
 Both files are JSON-lines as written by `append_bench_json`
@@ -54,6 +54,10 @@ MEASURED = {
     "hedged",
     "hedge_wins",
     "shed_rebuilds",
+    "warm_iters",
+    "cold_iters",
+    "ns_warm",
+    "ns_cold",
 }
 
 DEFAULT_METRICS = ("ns_per_mvm", "p99_us")

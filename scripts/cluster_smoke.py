@@ -14,7 +14,14 @@ docs/PROTOCOL.md against them:
      fresh worker pair must answer a predict-with-variance request
      entirely off the worker replicas — `stats` shows every shard shed
      with `shed_rebuilds == 0`, and the workers' own `varianced`
-     counters prove the variance jobs ran remotely.
+     counters prove the variance jobs ran remotely;
+  4. rebalancing: a third coordinator with `--shed-shards --ingest
+     --rebalance-skew` takes deliberately skewed streaming ingest
+     (far-flung batches fatten one shard's lattice, tight clusters
+     starve the other) until `stats` shows `rebalances >= 1`, then a
+     post-rebalance predict must still succeed, the pair must re-shed
+     onto the refreshed worker replicas, and `shed_rebuilds` must stay
+     0 — the background rebuild never falls back to a local rebuild.
 
 This is the docs' executable counterpart: if the wire formats or the
 CLI surface drift from what PROTOCOL.md/DEPLOYMENT.md describe, this
@@ -26,6 +33,7 @@ Usage: python3 scripts/cluster_smoke.py [path/to/simplex-gp]
 
 import json
 import os
+import random
 import re
 import socket
 import subprocess
@@ -33,7 +41,7 @@ import sys
 import threading
 import time
 
-DEADLINE_S = 300  # whole-script budget (includes the coordinator's fit)
+DEADLINE_S = 420  # whole-script budget (includes three coordinator fits)
 ADDR_RE = re.compile(r"(?:listening|serving) on (\S+:\d+)")
 
 
@@ -242,6 +250,95 @@ def main():
             f"OK: shed coordinator at {shed_addr} served predict-with-variance "
             f"worker-resident ({total_varianced} remote variance jobs, "
             f"0 rebuilds)."
+        )
+
+        # 5. Background rebalancing under skewed streaming ingest
+        #    (--rebalance-skew; PR 9). Fresh workers again so replica
+        #    state starts clean.
+        shed.stop()
+        w5 = Proc("worker5", [binary, "shard-worker", "--listen", "127.0.0.1:0"])
+        w6 = Proc("worker6", [binary, "shard-worker", "--listen", "127.0.0.1:0"])
+        procs += [w5, w6]
+        w5_addr = w5.wait_addr(deadline)
+        w6_addr = w6.wait_addr(deadline)
+        reb = Proc(
+            "rebalance",
+            [
+                binary, "serve",
+                "--dataset", "protein", "--n", "2000", "--epochs", "1",
+                "--shards", "2",
+                "--workers", f"{w5_addr},{w6_addr}",
+                "--shed-shards", "--ingest",
+                "--rebalance-skew", "1.05",
+                "--addr", "127.0.0.1:0",
+            ],
+        )
+        procs.append(reb)
+        reb_addr = reb.wait_addr(deadline)
+
+        stats = {}
+        while time.time() < deadline:
+            stats = jsonl_request(reb_addr, {"id": 20, "op": "stats"})
+            if stats.get("remote_workers") == 2:
+                break
+            time.sleep(0.25)
+        assert stats.get("remote_workers") == 2, f"replicas never synced: {stats}"
+        d = int(stats["d"])
+
+        # Skewed ingest: lightest-shard routing alternates equal-sized
+        # batches between the two shards, so the far-flung batches keep
+        # fattening one shard's lattice (every point mints fresh keys)
+        # while the tight clusters barely grow the other — per-shard
+        # lattice-size skew climbs until the rebalancer trips.
+        rng = random.Random(99)
+        rebalances = 0
+        step = 0
+        while time.time() < deadline:
+            spread = step % 2 == 0
+            scale = 8.0 if spread else 0.05
+            rows = 50
+            xb = [[rng.uniform(-scale, scale) for _ in range(d)] for _ in range(rows)]
+            yb = [rng.uniform(-1.0, 1.0) for _ in range(rows)]
+            reply = jsonl_request(
+                reb_addr, {"id": 21, "op": "ingest", "x": xb, "y": yb}
+            )
+            assert "error" not in reply, reply
+            step += 1
+            stats = jsonl_request(reb_addr, {"id": 22, "op": "stats"})
+            rebalances = int(stats.get("rebalances", 0))
+            if rebalances >= 1:
+                break
+        assert rebalances >= 1, f"skewed ingest never tripped the rebalancer: {stats}"
+        assert int(stats.get("warm_iters", 0)) > 0, (
+            f"streaming solves should be warm-started: {stats}"
+        )
+
+        # Post-rebalance predict still answers.
+        reply = jsonl_request(
+            reb_addr, {"id": 23, "op": "predict", "x": [[0.0] * d], "variance": 1}
+        )
+        assert "error" not in reply, reply
+        assert len(reply["mean"]) == 1 and len(reply["var"]) == 1, reply
+        assert reply["var"][0] > 0, reply
+
+        # The swapped pair re-sheds onto the refreshed worker replicas
+        # (links desync at the commit, resync in the background), and
+        # the whole episode never needed a local shed rebuild.
+        while time.time() < deadline:
+            stats = jsonl_request(reb_addr, {"id": 24, "op": "stats"})
+            if stats.get("shed_shards") == 2 and stats.get("remote_workers") == 2:
+                break
+            time.sleep(0.25)
+        assert stats.get("shed_shards") == 2, f"pair never re-shed: {stats}"
+        assert stats.get("remote_workers") == 2, f"links never resynced: {stats}"
+        assert stats.get("shed_rebuilds") == 0, (
+            f"rebalance forced a local shed rebuild: {stats}"
+        )
+
+        print(
+            f"OK: coordinator at {reb_addr} rebalanced under skewed ingest "
+            f"({rebalances} swap(s) after {step} batches, warm_iters="
+            f"{int(stats.get('warm_iters', 0))}, 0 shed rebuilds)."
         )
         return 0
     finally:
