@@ -1,6 +1,6 @@
 //! Serving-path tail latency under open-loop load (the PR-6 bench).
 //!
-//! Drives a live coordinator with the [`loadgen`] harness across seven
+//! Drives a live coordinator with the [`loadgen`] harness across eight
 //! deployment shapes:
 //!
 //!   inproc           in-process shard pool, serving-shaped mix
@@ -18,6 +18,13 @@
 //!                    columns come back from the worker replicas (the
 //!                    shed-vs-unshed variance serving comparison pair;
 //!                    byte-identity is pinned by rust/tests/shed_mode.rs)
+//!   tcp_rebalance    serving mix measured while a dedicated driver
+//!                    streams skewed ingest until the background shard
+//!                    rebalance commits mid-window — the row's p99 is
+//!                    the tail with the write-locked swap inside it,
+//!                    and `rebalances` records that it actually fired
+//!                    (byte-identity across the swap is pinned by
+//!                    rust/tests/rebalance.rs)
 //!
 //! The straggler rows are the point: an injected straggler wrecks p99
 //! on an unhedged cluster and the hedge race claws it back, while the
@@ -35,7 +42,8 @@
 //! per mode: `{"bench":"serving_load", "mode", "encoding", "workers",
 //! "shards", "hedge_ms", "slow_ms", "rps", "sent", "ok", "errors",
 //! "achieved_rps", "p50_us", "p90_us", "p99_us", "p999_us", "max_us",
-//! "hedged", "hedge_wins", "shed", "variance", "shed_rebuilds"}`.
+//! "hedged", "hedge_wins", "shed", "variance", "shed_rebuilds",
+//! "rebalances"}`.
 //!
 //!     cargo bench --bench serving_load [-- --quick]
 
@@ -63,7 +71,45 @@ struct Scenario {
     encoding: WireEncoding,
     /// `[cluster] shed_shards`: fully worker-resident serving.
     shed: bool,
+    /// Arm `[cluster] rebalance_skew` and stream skewed ingest from a
+    /// side driver so a background shard rebalance commits mid-window.
+    rebalance: bool,
     spec: LoadSpec,
+}
+
+/// Stream deliberately skewed ingest batches (far-spread / tight
+/// clusters alternating, as in rust/tests/rebalance.rs) until the
+/// coordinator reports a committed rebalance or the window closes.
+fn drive_rebalance_skew(
+    addr: std::net::SocketAddr,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    use std::sync::atomic::Ordering;
+    std::thread::spawn(move || {
+        let mut client = Client::connect(&addr).unwrap();
+        let mut rng = Pcg64::new(0xbe6d);
+        for step in 0..600 {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let scale = if step % 2 == 0 { 10.0 } else { 0.1 };
+            let rows = 6;
+            let x: Vec<f64> = (0..rows * 2).map(|_| rng.uniform_in(-scale, scale)).collect();
+            let y: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+            if client.ingest(&x, &y, 2).is_err() {
+                return;
+            }
+            let rebalanced = client
+                .stats()
+                .ok()
+                .and_then(|s| s.get("rebalances").and_then(|v| v.as_f64()))
+                .unwrap_or(0.0);
+            if rebalanced >= 1.0 {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    })
 }
 
 fn fit_model(n: usize, d: usize, shards: usize, seed: u64) -> SimplexGp {
@@ -165,6 +211,7 @@ fn main() {
             hedge_ms: 0,
             encoding: WireEncoding::Bin1,
             shed: false,
+            rebalance: false,
             spec: serving_spec(rps, secs),
         },
         Scenario {
@@ -174,6 +221,7 @@ fn main() {
             hedge_ms: 0,
             encoding: WireEncoding::Bin1,
             shed: false,
+            rebalance: false,
             spec: serving_spec(rps, secs),
         },
         Scenario {
@@ -183,6 +231,7 @@ fn main() {
             hedge_ms: 0,
             encoding: WireEncoding::Json,
             shed: false,
+            rebalance: false,
             spec: serving_spec(rps, secs),
         },
         Scenario {
@@ -192,6 +241,7 @@ fn main() {
             hedge_ms: 0,
             encoding: WireEncoding::Bin1,
             shed: false,
+            rebalance: false,
             spec: slow_spec(slow_rps, slow_secs),
         },
         Scenario {
@@ -201,6 +251,7 @@ fn main() {
             hedge_ms: 25,
             encoding: WireEncoding::Bin1,
             shed: false,
+            rebalance: false,
             spec: slow_spec(slow_rps, slow_secs),
         },
         Scenario {
@@ -210,6 +261,7 @@ fn main() {
             hedge_ms: 0,
             encoding: WireEncoding::Bin1,
             shed: false,
+            rebalance: false,
             spec: var_spec(var_rps, var_secs),
         },
         Scenario {
@@ -219,7 +271,18 @@ fn main() {
             hedge_ms: 0,
             encoding: WireEncoding::Bin1,
             shed: true,
+            rebalance: false,
             spec: var_spec(var_rps, var_secs),
+        },
+        Scenario {
+            mode: "tcp_rebalance",
+            workers: 2,
+            slow_ms: 0,
+            hedge_ms: 0,
+            encoding: WireEncoding::Bin1,
+            shed: false,
+            rebalance: true,
+            spec: serving_spec(rps, secs),
         },
     ];
 
@@ -248,6 +311,18 @@ fn main() {
                 .unwrap()
             })
             .collect();
+        // The rebalance row arms the skew threshold just above the
+        // fitted model's initial skew, so the driver's spread batches
+        // cross it quickly and the swap lands inside the window.
+        let rebalance_skew = if sc.rebalance {
+            let skew = fit_model(n, d, shards, 0xbe6c)
+                .skew_pair()
+                .map(|(_, _, s)| s)
+                .unwrap_or(1.0);
+            (skew * 1.1).max(1.3)
+        } else {
+            0.0
+        };
         let cluster = ClusterConfig {
             workers: workers.iter().map(|w| w.local_addr.to_string()).collect(),
             hedge: match sc.hedge_ms {
@@ -256,6 +331,7 @@ fn main() {
             },
             encoding: sc.encoding,
             shed_shards: sc.shed,
+            rebalance_skew,
             ..ClusterConfig::default()
         };
         let server = Server::start(
@@ -276,7 +352,27 @@ fn main() {
             inject_straggler(&server.local_addr, 0, sc.slow_ms);
         }
 
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let driver = sc
+            .rebalance
+            .then(|| drive_rebalance_skew(server.local_addr, stop.clone()));
+
         let report = loadgen::run(&server.local_addr, &sc.spec).unwrap();
+
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(handle) = driver {
+            let _ = handle.join();
+        }
+        if sc.rebalance {
+            // Grace poll: the commit is asynchronous, so give a build
+            // that crossed the threshold late in the window a moment to
+            // land before recording the row.
+            let t0 = Instant::now();
+            while server.rebalances() == 0 && t0.elapsed().as_secs() < 10 {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+        let rebalances = server.rebalances();
 
         let mut stats_client = Client::connect(&server.local_addr).unwrap();
         let stats = stats_client.stats().unwrap();
@@ -335,6 +431,7 @@ fn main() {
             ("shed", sc.shed as u8 as f64),
             ("variance", sc.spec.predict_variance as u8 as f64),
             ("shed_rebuilds", shed_rebuilds as f64),
+            ("rebalances", rebalances as f64),
         ] {
             obj.insert(k.to_string(), Json::Num(v));
         }

@@ -6,20 +6,117 @@
 //! Substitution note: synthetic analogs ⇒ absolute values differ from
 //! the paper; the claims under test are the *orderings* (Simplex-GP
 //! beats SKIP, approaches Exact, is competitive with SGPR).
+//!
+//! PR 10 adds the backend head-to-head: on the low-d (d ≤ 3) datasets,
+//! the permutohedral lattice vs the rectangular-grid SKI backend at a
+//! matched Adam budget, one JSON row per (dataset, backend) when
+//! `SIMPLEX_GP_BENCH_JSON` is set: `{"bench":"table2_uci", "dataset",
+//! "backend", "d", "n", "rmse", "nll", "fit_s"}`. Pass `--backend-only`
+//! to skip the (slow) baseline tables and run just the head-to-head —
+//! the bench-smoke CI path.
+
+use std::time::Instant;
 
 use simplex_gp::baselines::{ExactGp, Sgpr, SgprConfig, SkipGp};
 use simplex_gp::datasets::{generate, split_standardize, PAPER_DATASETS};
 use simplex_gp::gp::{train, TrainConfig};
+use simplex_gp::grid::train_grid;
 use simplex_gp::kernels::KernelFamily;
-use simplex_gp::util::bench::Table;
+use simplex_gp::util::bench::{append_bench_json, Table};
+use simplex_gp::util::json::Json;
 use simplex_gp::util::stats::{gaussian_nll, mean, rmse, std};
 
 fn two_sigma(vals: &[f64]) -> String {
     format!("{:.3}±{:.3}", mean(vals), 2.0 * std(vals))
 }
 
+fn emit_backend_row(dataset: &str, backend: &str, d: usize, n: usize, r: f64, l: f64, s: f64) {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("table2_uci".to_string()));
+    obj.insert("dataset".to_string(), Json::Str(dataset.to_string()));
+    obj.insert("backend".to_string(), Json::Str(backend.to_string()));
+    for (k, v) in [
+        ("d", d as f64),
+        ("n", n as f64),
+        ("rmse", r),
+        ("nll", l),
+        ("fit_s", s),
+    ] {
+        obj.insert(k.to_string(), Json::Num(v));
+    }
+    append_bench_json(&Json::Obj(obj));
+}
+
+/// Lattice vs grid at a matched training budget on the low-d datasets.
+/// Both learn outputscale + noise by Adam on the MLL; the lattice also
+/// learns lengthscales (the grid trainer holds them at init — part of
+/// the trade the table quantifies, not an unfair budget).
+fn backend_head_to_head(quick: bool) {
+    let n_cap = if quick { 1200 } else { 4000 };
+    let nll_points = 128;
+    let mut table = Table::new(&["dataset", "backend", "rmse", "nll", "fit_s"]);
+    for spec in PAPER_DATASETS {
+        if spec.d > 3 {
+            continue; // 2^d interp corners: the grid targets low-d
+        }
+        let n = n_cap.min(spec.n_default);
+        let ds = generate(spec.name, n, 0);
+        let sp = split_standardize(&ds, 10);
+        let d = spec.d;
+        let (xtr, ytr) = (&sp.train.x, &sp.train.y);
+        let (xv, yv) = (&sp.val.x, &sp.val.y);
+        let (xte, yte) = (&sp.test.x, &sp.test.y);
+        let t_nll = nll_points.min(yte.len());
+        let cfg = TrainConfig {
+            epochs: if quick { 6 } else { 20 },
+            probes: 6,
+            seed: 0,
+            ..TrainConfig::default()
+        };
+
+        let t0 = Instant::now();
+        let lat = train(xtr, ytr, xv, yv, d, KernelFamily::Matern32, cfg.clone()).unwrap();
+        let lat_s = t0.elapsed().as_secs_f64();
+        let lat_rmse = rmse(&lat.model.predict_mean(xte), yte);
+        let (ms, vs) = lat.model.predict(&xte[..t_nll * d]);
+        let lat_nll = gaussian_nll(&ms, &vs, &yte[..t_nll]);
+        table.row(&[
+            spec.name.to_string(),
+            "lattice".to_string(),
+            format!("{lat_rmse:.3}"),
+            format!("{lat_nll:.3}"),
+            format!("{lat_s:.2}"),
+        ]);
+        emit_backend_row(spec.name, "lattice", d, n, lat_rmse, lat_nll, lat_s);
+
+        let t0 = Instant::now();
+        let grid = train_grid(xtr, ytr, xv, yv, d, KernelFamily::Matern32, &cfg).unwrap();
+        let grid_s = t0.elapsed().as_secs_f64();
+        let grid_rmse = rmse(&grid.model.predict_mean(xte), yte);
+        let (ms, vs) = grid.model.predict(&xte[..t_nll * d]);
+        let grid_nll = gaussian_nll(&ms, &vs, &yte[..t_nll]);
+        table.row(&[
+            spec.name.to_string(),
+            "grid".to_string(),
+            format!("{grid_rmse:.3}"),
+            format!("{grid_nll:.3}"),
+            format!("{grid_s:.2}"),
+        ]);
+        emit_backend_row(spec.name, "grid", d, n, grid_rmse, grid_nll, grid_s);
+        println!("[table2] backend head-to-head finished {}", spec.name);
+    }
+    println!("\nTable 2c — lattice vs rectangular-grid SKI backend (matched Adam budget)\n");
+    table.print();
+    table.write_csv("table2_backends");
+}
+
 fn main() {
     let quick = simplex_gp::util::bench::quick_mode();
+    let backend_only = std::env::args().any(|a| a == "--backend-only");
+    if backend_only {
+        backend_head_to_head(quick);
+        return;
+    }
     let trials: u64 = if quick { 1 } else { 3 };
     let n_cap = if quick { 1500 } else { 4000 };
     let exact_cap = 2000; // exact-GP O(n²d) solves dominate beyond this
@@ -126,4 +223,6 @@ fn main() {
     nll_table.print();
     nll_table.write_csv("table2_nll");
     println!("\nShape check (paper): Simplex-GP < SKIP on RMSE everywhere, close to\nExact GP, competitive with SGPR.\n");
+
+    backend_head_to_head(quick);
 }

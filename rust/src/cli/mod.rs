@@ -78,21 +78,28 @@ USAGE: simplex-gp <command> [--flags]
 COMMANDS
   train      --dataset <name> [--n N] [--epochs E] [--kernel rbf|matern32]
              [--solver cg|rrcg] [--tol T] [--order R] [--seed S] [--track-mll]
-             [--shards P] [--precond-rank K]
+             [--shards P] [--precond-rank K] [--backend lattice|grid]
+             [--grid-axis-points G]
              Train on a synthetic UCI analog; prints per-epoch metrics and
-             final test RMSE/NLL.
-  mvm        --dataset <name> [--n N] [--order R] [--backend native|pjrt]
+             final test RMSE/NLL. --backend grid swaps the permutohedral
+             lattice for the rectangular SKI grid (low-d smooth data;
+             learns outputscale/noise, lengthscales stay at init — see
+             ARCHITECTURE.md §Pluggable backends). Default: the config's
+             [train] backend (lattice).
+  mvm        --dataset <name> [--n N] [--order R]
+             [--backend native|grid|pjrt] [--grid-axis-points G]
              [--shards P] [--precond-rank K] [--noise S2]
              Time lattice MVMs, report cosine error vs the exact MVM, and
              (K > 0) compare CG iterations with/without the rank-K
-             per-shard pivoted-Cholesky preconditioner.
+             per-shard pivoted-Cholesky preconditioner. --backend grid
+             times the rectangular SKI grid operator instead.
   sparsity   [--n N] — print the Table-3 sparsity rows for all datasets.
   stencil    --kernel <fam> [--order R] — print the coverage-optimal
              spacing and taps (the §4.1 discretization).
   serve      --dataset <name> [--n N] [--addr HOST:PORT] [--shards P]
              [--precond-rank K] [--ingest] [--workers A:P1,B:P2]
              [--hedge-ms H] [--encoding json|bin1] [--shed-shards]
-             [--rebalance-skew S]
+             [--rebalance-skew S] [--backend lattice|grid]
              — train quickly, then serve predictions over the JSON-lines
              protocol (docs/PROTOCOL.md). --ingest enables the streaming
              `ingest` op (live training-point updates, coalesced and
@@ -109,6 +116,11 @@ COMMANDS
              rebuilds the (heaviest, lightest) shard pair in the
              background whenever max/min lattice-size skew exceeds S
              (0 = off; docs/DEPLOYMENT.md §Shard rebalancing).
+             --backend sets the default interpolation backend for
+             requests that carry no per-request \"backend\" field
+             (lattice = today's engine, bit for bit; grid serves
+             predict/mvm from a rectangular-SKI twin of the same
+             training set — low-d smooth workloads).
   shard-worker  [--listen HOST:PORT] [--frame-mb N] [--max-protocol V]
              — hold shard replicas for a remote coordinator and serve
              shard_mvm_block/shard_solve_block/ingest jobs over the
@@ -121,7 +133,7 @@ COMMANDS
              [--workers W] [--rps R] [--duration-s S] [--clients C]
              [--arrival poisson|bursty] [--mix mvm|serving]
              [--hedge-ms H] [--slow-shard P --slow-ms MS] [--seed S]
-             [--encoding json|bin1] [--shed-shards]
+             [--encoding json|bin1] [--shed-shards] [--rebalance-skew S]
              — fit a model, start an ephemeral server (plus W loopback
              shard workers under --mode tcp), fire a deterministic
              open-loop schedule at it, and print latency percentiles
@@ -129,7 +141,9 @@ COMMANDS
              straggler via debug_delay_worker; --hedge-ms races slow
              shards against their backup replicas (docs/DEPLOYMENT.md
              §Hedged redundancy); --encoding compares json vs bin1
-             frame payloads on the worker links.
+             frame payloads on the worker links; --rebalance-skew S
+             enables background shard rebalancing during the run and
+             prints the swap count (tail latency under rebalance).
   goldens    [--artifacts DIR] — compile AOT artifacts on PJRT and replay
              the python-generated goldens (cross-layer parity check).
   datasets   — list the benchmark dataset analogs.
@@ -220,6 +234,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         },
         other => bail!("unknown solver '{other}'"),
     };
+    // `--backend lattice|grid`, defaulting to the config's
+    // `[train] backend` (lattice — the pre-backend engine, bit for bit).
+    let backend = crate::grid::parse_backend(
+        args.get("backend")
+            .unwrap_or_else(|| cfg_file.get_str("train", "backend", "lattice")),
+    )?;
+    let grid_axis_points = args.get_usize(
+        "grid-axis-points",
+        cfg_file.get_usize("train", "grid_axis_points", 32),
+    )?;
     let cfg = TrainConfig {
         epochs: args
             .get_usize("epochs", cfg_file.get_usize("train", "max_epochs", 30).min(30))?,
@@ -232,16 +256,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         solve,
         shards: shards_arg(args, &cfg_file)?,
         precond_rank: precond_rank_arg(args, &cfg_file)?,
+        backend,
+        grid_axis_points,
         ..TrainConfig::default()
     };
 
     println!(
-        "training on {} (n_train={}, d={d}, kernel={})",
+        "training on {} (n_train={}, d={d}, kernel={}, backend={})",
         split.train.name,
         split.train.n(),
-        family.name()
+        family.name(),
+        backend.name()
     );
     let t0 = std::time::Instant::now();
+    if backend == crate::gp::Backend::Grid {
+        return train_grid_summary(&split, d, family, &cfg, t0);
+    }
     let out = train(
         &split.train.x,
         &split.train.y,
@@ -288,6 +318,47 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Grid-backend leg of `train`: run [`crate::grid::train_grid`] and
+/// print the same summary shape as the lattice path (RMSE/NLL on the
+/// held-out test split, learned outputscale/noise, operator size).
+fn train_grid_summary(
+    split: &crate::datasets::Split,
+    d: usize,
+    family: KernelFamily,
+    cfg: &TrainConfig,
+    t0: std::time::Instant,
+) -> Result<()> {
+    let out = crate::grid::train_grid(
+        &split.train.x,
+        &split.train.y,
+        &split.val.x,
+        &split.val.y,
+        d,
+        family,
+        cfg,
+    )?;
+    let train_secs = t0.elapsed().as_secs_f64();
+    let pred = out.model.predict_mean(&split.test.x);
+    let rmse = crate::util::stats::rmse(&pred, &split.test.y);
+    let nll_points = 256.min(split.test.n());
+    let (mean_s, var_s) = out.model.predict(&split.test.x[..nll_points * d]);
+    let nll = crate::util::stats::gaussian_nll(&mean_s, &var_s, &split.test.y[..nll_points]);
+    println!(
+        "done in {train_secs:.1}s (best epoch {}): test RMSE {rmse:.4}, test NLL {nll:.4}",
+        out.best_epoch
+    );
+    println!(
+        "outputscale {:.3}, noise {:.4}, grid points m = {} ({} per axis, d = {}), \
+         lengthscales fixed at init",
+        out.model.kernel.outputscale,
+        out.model.noise,
+        out.model.operator().grid_size(),
+        out.model.operator().axes()[0].points,
+        d
+    );
+    Ok(())
+}
+
 fn cmd_mvm(args: &Args) -> Result<()> {
     let (split, d) = load_split(args)?;
     let family = parse_kernel(args)?;
@@ -313,9 +384,25 @@ fn cmd_mvm(args: &Args) -> Result<()> {
     let v = rng.normal_vec(n);
     let backend = args.get("backend").unwrap_or("native");
     let (approx, mvm_s) = match backend {
-        "native" => {
+        "native" | "lattice" => {
             let t = std::time::Instant::now();
             let u = lat.mvm(&v);
+            (u, t.elapsed().as_secs_f64())
+        }
+        "grid" => {
+            let gx = args.get_usize(
+                "grid-axis-points",
+                cfg_file.get_usize("train", "grid_axis_points", 32),
+            )?;
+            let op = crate::grid::GridMvm::build(x, d, &kernel, gx)?;
+            println!(
+                "grid backend: m={} ({} per axis), {} interp corners/row",
+                op.grid_size(),
+                op.axes()[0].points,
+                op.interp_nnz()
+            );
+            let t = std::time::Instant::now();
+            let u = op.mvm(&v);
             (u, t.elapsed().as_secs_f64())
         }
         "pjrt" => {
@@ -332,7 +419,7 @@ fn cmd_mvm(args: &Args) -> Result<()> {
             let u = px.mvm(&v)?;
             (u, t.elapsed().as_secs_f64())
         }
-        other => bail!("unknown backend '{other}'"),
+        other => bail!("unknown backend '{other}' (use native | grid | pjrt)"),
     };
     println!("one MVM: {:.3} ms", mvm_s * 1e3);
     if n <= 20_000 {
@@ -486,9 +573,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.get("rebalance-skew").is_some() {
         cluster.rebalance_skew = args.get_f64("rebalance-skew", 0.0)?;
     }
+    // `--backend lattice|grid` sets the default interpolation backend
+    // for requests without a per-request "backend" field (the config's
+    // `[train] backend` otherwise; lattice = pre-backend engine,
+    // bit for bit). Grid requests are served from a rectangular-SKI
+    // twin built lazily from the same training set.
+    let backend = crate::grid::parse_backend(
+        args.get("backend")
+            .unwrap_or_else(|| cfg_file.get_str("train", "backend", "lattice")),
+    )?;
     let mut cfg = crate::coordinator::ServeConfig {
         allow_ingest,
         max_ingest_batch: cfg_file.get_usize("serve", "max_ingest_batch", 1024),
+        backend,
         cluster,
         ..crate::coordinator::ServeConfig::default()
     };
@@ -646,6 +743,13 @@ fn cmd_loadbench(args: &Args) -> Result<()> {
     if args.get_flag("shed-shards") {
         cluster.shed_shards = true;
     }
+    // `--rebalance-skew S` turns on background shard rebalancing for
+    // the run — the load report then reflects tail latency with swaps
+    // happening underneath (the `tcp_rebalance` bench scenario's knob).
+    if args.get("rebalance-skew").is_some() {
+        cluster.rebalance_skew = args.get_f64("rebalance-skew", 0.0)?;
+    }
+    let rebalance_on = cluster.rebalance_skew > 0.0;
 
     let server = Server::start(
         model,
@@ -720,6 +824,9 @@ fn cmd_loadbench(args: &Args) -> Result<()> {
         server.hedged(),
         server.hedge_wins()
     );
+    if rebalance_on {
+        println!("rebalances {}", server.rebalances());
+    }
     server.shutdown();
     for w in workers {
         w.shutdown();

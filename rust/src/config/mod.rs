@@ -165,6 +165,11 @@ min_noise = 1e-4
 probes = 8
 patience = 15
 shards = 1                # data-parallel lattice shards (0 = auto from cores)
+# Interpolation backend: "lattice" (permutohedral, the default — bitwise
+# the pre-backend engine) or "grid" (rectangular SKI grid, low-d smooth
+# workloads; lengthscales stay at init under the grid trainer).
+backend = "lattice"       # { lattice, grid }
+grid_axis_points = 32     # per-axis grid nodes for backend = "grid"
 
 [serve]
 addr = "127.0.0.1:7788"
@@ -223,6 +228,8 @@ mod tests {
         assert_eq!(cfg.get_f64("train", "min_noise", 0.0), 1e-4);
         assert_eq!(cfg.get_usize("train", "shards", 0), 1);
         assert_eq!(cfg.get_usize("train", "precond_rank", 0), 100);
+        assert_eq!(cfg.get_str("train", "backend", "x"), "lattice");
+        assert_eq!(cfg.get_usize("train", "grid_axis_points", 0), 32);
         assert_eq!(cfg.get_usize("serve", "max_ingest_batch", 0), 1024);
         // [cluster] defaults: in-process pool, documented timeouts.
         assert_eq!(cfg.get_str("cluster", "workers", "x"), "");

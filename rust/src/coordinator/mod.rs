@@ -124,6 +124,14 @@ pub struct ServeConfig {
     /// Accept debug ops (`debug_kill_worker`). Test-only: lets the
     /// deterministic failure-path tests kill a shard worker on demand.
     pub debug_ops: bool,
+    /// Default interpolation backend for requests that carry no
+    /// per-request `"backend"` field. `Lattice` (the default) is the
+    /// pre-backend serving path, bit for bit; `Grid` routes unlabeled
+    /// predict/mvm to a rectangular-SKI twin built lazily from the same
+    /// training set (low-d smooth workloads — ARCHITECTURE.md
+    /// §Pluggable backends). Either way a request may override per-op
+    /// with `"backend": "lattice" | "grid"`.
+    pub backend: crate::mvm::Backend,
     /// Multi-node shard transport (`[cluster]`): with a non-empty
     /// `workers` list the shard pool runs over TCP to remote
     /// `shard-worker` processes instead of in-process threads.
@@ -140,6 +148,7 @@ impl Default for ServeConfig {
             allow_ingest: false,
             max_ingest_batch: 1024,
             debug_ops: false,
+            backend: crate::mvm::Backend::Lattice,
             cluster: ClusterConfig::default(),
         }
     }
@@ -155,12 +164,17 @@ enum Work {
         /// (`"variance": 1`). A batch runs the variance solve only when
         /// at least one coalesced request set this.
         variance: bool,
+        /// Per-request backend override (`"backend": "lattice" |
+        /// "grid"`); `None` falls back to [`ServeConfig::backend`].
+        backend: Option<crate::mvm::Backend>,
         reply: SyncSender<String>,
         enqueued: Instant,
     },
     Mvm {
         id: f64,
         v: Vec<f64>,
+        /// Per-request backend override; `None` = the server default.
+        backend: Option<crate::mvm::Backend>,
         reply: SyncSender<String>,
         enqueued: Instant,
     },
@@ -237,6 +251,10 @@ struct Counters {
     /// CG iterations spent in cold (zero-seeded) coordinator-side α
     /// solves.
     cold_iters: AtomicU64,
+    /// Requests served by the grid backend (per-request `"backend":
+    /// "grid"` or a grid-default server). Always ≤ served; 0 on a
+    /// lattice-only deployment.
+    grid_served: AtomicU64,
 }
 
 impl Counters {
@@ -457,6 +475,18 @@ fn connection_loop(
     Ok(())
 }
 
+/// Optional per-request `"backend"` field (predict/mvm): `None` when
+/// absent (the server default applies), an error string on an unknown
+/// name.
+fn parse_backend_field(json: &Json) -> Result<Option<crate::mvm::Backend>, String> {
+    match json.get("backend").and_then(|v| v.as_str()) {
+        None => Ok(None),
+        Some(s) => crate::mvm::Backend::parse(s)
+            .map(Some)
+            .ok_or_else(|| format!("unknown backend '{s}' (use lattice | grid)")),
+    }
+}
+
 fn parse_request(line: &str, reply: &SyncSender<String>) -> Result<Work, String> {
     let json = Json::parse(line)?;
     let id = json.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0);
@@ -485,6 +515,7 @@ fn parse_request(line: &str, reply: &SyncSender<String>) -> Result<Work, String>
                 x,
                 rows,
                 variance,
+                backend: parse_backend_field(&json)?,
                 reply: reply.clone(),
                 enqueued: Instant::now(),
             })
@@ -500,6 +531,7 @@ fn parse_request(line: &str, reply: &SyncSender<String>) -> Result<Work, String>
             Ok(Work::Mvm {
                 id,
                 v,
+                backend: parse_backend_field(&json)?,
                 reply: reply.clone(),
                 enqueued: Instant::now(),
             })
@@ -1034,16 +1066,72 @@ struct Batch {
     /// Concatenated ingest inputs/targets awaiting one model update.
     ingest_x: Vec<f64>,
     ingest_y: Vec<f64>,
+    /// (id, x, rows, variance?, reply, enqueued) per pending
+    /// grid-backend predict request (served from the grid twin, not the
+    /// lattice pool — the inputs stay per-request).
+    grid_predicts: Vec<(f64, Vec<f64>, usize, bool, SyncSender<String>, Instant)>,
+    /// (id, v, reply, enqueued) per pending grid-backend mvm request.
+    grid_mvms: Vec<(f64, Vec<f64>, SyncSender<String>, Instant)>,
 }
 
 impl Batch {
     /// Total coalesced work units (caps the fill loop).
     fn units(&self) -> usize {
-        self.predict_rows + self.mvms.len() + self.ingest_y.len()
+        self.predict_rows
+            + self.mvms.len()
+            + self.ingest_y.len()
+            + self.grid_rows()
+            + self.grid_mvms.len()
+    }
+
+    fn grid_rows(&self) -> usize {
+        self.grid_predicts.iter().map(|(_, _, r, ..)| *r).sum()
     }
 
     fn is_empty(&self) -> bool {
-        self.predicts.is_empty() && self.mvms.is_empty() && self.ingests.is_empty()
+        self.predicts.is_empty()
+            && self.mvms.is_empty()
+            && self.ingests.is_empty()
+            && self.grid_predicts.is_empty()
+            && self.grid_mvms.is_empty()
+    }
+}
+
+/// Lazily built grid-backend twin of the serving model: a
+/// [`crate::grid::GridGp`] fit on the *same* training set,
+/// hyperparameters and solver settings, serving predict/mvm requests
+/// routed to the grid (`"backend": "grid"` or a grid-default server).
+///
+/// Keyed on `n_train`: streaming ingest grows the training set, so the
+/// next grid request after an ingest refits the twin from the updated
+/// points. Shard rebalancing preserves the training-row sequence
+/// (`SimplexGp::apply_rebalance` — shard bounds slice the same row
+/// order), so a swap never stales the twin. Nothing is built until the
+/// first grid request arrives — a lattice-only deployment pays zero.
+#[derive(Default)]
+struct GridTwin {
+    cached: Option<(usize, crate::grid::GridGp)>,
+}
+
+impl GridTwin {
+    fn get(&mut self, guard: &SimplexGp) -> Result<&crate::grid::GridGp> {
+        let n = guard.n_train();
+        let stale = match &self.cached {
+            Some((cached_n, _)) => *cached_n != n,
+            None => true,
+        };
+        if stale {
+            let gp = crate::grid::GridGp::fit(
+                &guard.x_train,
+                &guard.y_train,
+                guard.d,
+                guard.kernel.clone(),
+                guard.noise,
+                guard.config.clone(),
+            )?;
+            self.cached = Some((n, gp));
+        }
+        Ok(&self.cached.as_ref().unwrap().1)
     }
 }
 
@@ -1091,6 +1179,7 @@ fn flush_batch(
     model: &Arc<RwLock<SimplexGp>>,
     pool: &mut ShardPool,
     cfg: &ServeConfig,
+    twin: &mut GridTwin,
 ) -> bool {
     if !batch.predicts.is_empty() {
         let want_var = batch.predicts.iter().any(|(_, _, variance, _, _)| *variance);
@@ -1202,6 +1291,77 @@ fn flush_batch(
             counters.record_latency(enqueued);
             let _ = reply.send(Json::Obj(obj).to_string());
         }
+    }
+    // Grid-backend requests: served from the lazily (re)built twin
+    // under the read lock — the lattice path above is untouched, bit
+    // for bit, whether or not grid traffic is interleaved with it.
+    if !batch.grid_predicts.is_empty() {
+        let guard = model.read().unwrap();
+        let t0 = Instant::now();
+        match twin.get(&guard) {
+            Ok(gp) => {
+                for (id, x, _rows, variance, reply, enqueued) in batch.grid_predicts.drain(..) {
+                    let mut obj = BTreeMap::new();
+                    obj.insert("id".to_string(), Json::Num(id));
+                    if variance {
+                        let (mean, var) = gp.predict(&x);
+                        obj.insert("mean".to_string(), json_num_array(&mean));
+                        obj.insert("var".to_string(), json_num_array(&var));
+                    } else {
+                        obj.insert("mean".to_string(), json_num_array(&gp.predict_mean(&x)));
+                    }
+                    obj.insert("backend".to_string(), Json::Str("grid".to_string()));
+                    obj.insert(
+                        "elapsed_us".to_string(),
+                        Json::Num(t0.elapsed().as_micros() as f64),
+                    );
+                    obj.insert(
+                        "queue_us".to_string(),
+                        Json::Num(enqueued.elapsed().as_micros() as f64),
+                    );
+                    counters.served.fetch_add(1, Ordering::Relaxed);
+                    counters.grid_served.fetch_add(1, Ordering::Relaxed);
+                    counters.record_latency(enqueued);
+                    let _ = reply.send(Json::Obj(obj).to_string());
+                }
+            }
+            Err(e) => {
+                let msg = Json::Str(format!("grid backend unavailable: {e}"));
+                for (id, _, _, _, reply, _) in batch.grid_predicts.drain(..) {
+                    let _ = reply.send(format!("{{\"id\":{id},\"error\":{msg}}}"));
+                }
+            }
+        }
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+    }
+    if !batch.grid_mvms.is_empty() {
+        let guard = model.read().unwrap();
+        let b = batch.grid_mvms.len();
+        match twin.get(&guard) {
+            Ok(gp) => {
+                for (id, v, reply, enqueued) in batch.grid_mvms.drain(..) {
+                    // Unit outputscale — the same convention as the
+                    // lattice mvm op (`pool.mvm_block(.., false)`).
+                    let u = gp.operator().mvm_unit(&v);
+                    let mut obj = BTreeMap::new();
+                    obj.insert("id".to_string(), Json::Num(id));
+                    obj.insert("u".to_string(), json_num_array(&u));
+                    obj.insert("batched_with".to_string(), Json::Num(b as f64));
+                    obj.insert("backend".to_string(), Json::Str("grid".to_string()));
+                    counters.served.fetch_add(1, Ordering::Relaxed);
+                    counters.grid_served.fetch_add(1, Ordering::Relaxed);
+                    counters.record_latency(enqueued);
+                    let _ = reply.send(Json::Obj(obj).to_string());
+                }
+            }
+            Err(e) => {
+                let msg = Json::Str(format!("grid backend unavailable: {e}"));
+                for (id, _, reply, _) in batch.grid_mvms.drain(..) {
+                    let _ = reply.send(format!("{{\"id\":{id},\"error\":{msg}}}"));
+                }
+            }
+        }
+        counters.batches.fetch_add(1, Ordering::Relaxed);
     }
     let mut rebuilt = false;
     if !batch.ingests.is_empty() {
@@ -1555,6 +1715,7 @@ fn batch_loop(
     let mut pool = ShardPool::start(&model, &cfg, &counters);
     let mut batch = Batch::default();
     let mut rebalancer = Rebalancer::new(cfg.cluster.rebalance_skew);
+    let mut twin = GridTwin::default();
     // Debug fault-injection requests (kill / delay) drain after the
     // flush so in-flight batches complete on the live pool first
     // (deterministic ordering for the failure-path tests).
@@ -1580,6 +1741,7 @@ fn batch_loop(
                 x,
                 rows,
                 variance,
+                backend,
                 reply,
                 enqueued,
             } => {
@@ -1589,13 +1751,21 @@ fn batch_loop(
                     ));
                     return;
                 }
-                batch.predict_x.extend_from_slice(&x);
-                batch.predict_rows += rows;
-                batch.predicts.push((id, rows, variance, reply, enqueued));
+                match backend.unwrap_or(cfg.backend) {
+                    crate::mvm::Backend::Lattice => {
+                        batch.predict_x.extend_from_slice(&x);
+                        batch.predict_rows += rows;
+                        batch.predicts.push((id, rows, variance, reply, enqueued));
+                    }
+                    crate::mvm::Backend::Grid => {
+                        batch.grid_predicts.push((id, x, rows, variance, reply, enqueued));
+                    }
+                }
             }
             Work::Mvm {
                 id,
                 v,
+                backend,
                 reply,
                 enqueued,
             } => {
@@ -1606,8 +1776,15 @@ fn batch_loop(
                     ));
                     return;
                 }
-                batch.mvm_v.extend_from_slice(&v);
-                batch.mvms.push((id, reply, enqueued));
+                match backend.unwrap_or(cfg.backend) {
+                    crate::mvm::Backend::Lattice => {
+                        batch.mvm_v.extend_from_slice(&v);
+                        batch.mvms.push((id, reply, enqueued));
+                    }
+                    crate::mvm::Backend::Grid => {
+                        batch.grid_mvms.push((id, v, reply, enqueued));
+                    }
+                }
             }
             Work::Ingest {
                 id,
@@ -1701,6 +1878,17 @@ fn batch_loop(
                     "cold_iters".to_string(),
                     Json::Num(counters.cold_iters.load(Ordering::Relaxed) as f64),
                 );
+                // Pluggable-backend visibility: how much of the served
+                // traffic went to the grid twin (0 = lattice only), and
+                // which backend unlabeled requests default to.
+                obj.insert(
+                    "grid_served".to_string(),
+                    Json::Num(counters.grid_served.load(Ordering::Relaxed) as f64),
+                );
+                obj.insert(
+                    "backend".to_string(),
+                    Json::Str(cfg.backend.name().to_string()),
+                );
                 // Multi-node visibility: how many remote shard workers
                 // are configured vs currently connected-and-synced
                 // (0/0 under the in-process transport).
@@ -1792,7 +1980,7 @@ fn batch_loop(
             }
         }
         if !batch.is_empty() {
-            let rebuilt = flush_batch(&mut batch, &counters, &model, &mut pool, &cfg);
+            let rebuilt = flush_batch(&mut batch, &counters, &model, &mut pool, &cfg, &mut twin);
             if rebuilt {
                 // A full refit may have changed the shard count (auto
                 // sharding scales with n): restart the worker pool
@@ -1833,7 +2021,7 @@ fn batch_loop(
         }
     }
     if !batch.is_empty() {
-        flush_batch(&mut batch, &counters, &model, &mut pool, &cfg);
+        flush_batch(&mut batch, &counters, &model, &mut pool, &cfg, &mut twin);
     }
     pool.shutdown();
 }
@@ -1930,6 +2118,60 @@ impl Client {
         obj.insert("id".to_string(), Json::Num(id));
         obj.insert("op".to_string(), Json::Str("mvm".to_string()));
         obj.insert("v".to_string(), json_num_array(v));
+        let reply = self.roundtrip(Json::Obj(obj).to_string())?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(reply
+            .get("u")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| anyhow!("reply missing u"))?
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect())
+    }
+
+    /// [`Client::predict`] with an explicit per-request backend label
+    /// (`"backend": "lattice" | "grid"`). Returns the means plus the
+    /// raw reply (tests inspect the reply's own `backend` tag and
+    /// compare reply bytes across labels).
+    pub fn predict_backend(
+        &mut self,
+        x: &[f64],
+        d: usize,
+        backend: &str,
+    ) -> Result<(Vec<f64>, Json)> {
+        let id = self.next_id;
+        self.next_id += 1.0;
+        let rows: Vec<Json> = x.chunks(d).map(json_num_array).collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("id".to_string(), Json::Num(id));
+        obj.insert("op".to_string(), Json::Str("predict".to_string()));
+        obj.insert("x".to_string(), Json::Arr(rows));
+        obj.insert("backend".to_string(), Json::Str(backend.to_string()));
+        let reply = self.roundtrip(Json::Obj(obj).to_string())?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        let mean = reply
+            .get("mean")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| anyhow!("reply missing mean"))?
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect();
+        Ok((mean, reply))
+    }
+
+    /// [`Client::mvm`] with an explicit per-request backend label.
+    pub fn mvm_backend(&mut self, v: &[f64], backend: &str) -> Result<Vec<f64>> {
+        let id = self.next_id;
+        self.next_id += 1.0;
+        let mut obj = BTreeMap::new();
+        obj.insert("id".to_string(), Json::Num(id));
+        obj.insert("op".to_string(), Json::Str("mvm".to_string()));
+        obj.insert("v".to_string(), json_num_array(v));
+        obj.insert("backend".to_string(), Json::Str(backend.to_string()));
         let reply = self.roundtrip(Json::Obj(obj).to_string())?;
         if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
             return Err(anyhow!("server error: {err}"));

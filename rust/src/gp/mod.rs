@@ -4,5 +4,6 @@
 pub mod model;
 pub mod trainer;
 
+pub use crate::mvm::Backend;
 pub use model::{GpConfig, RebalancePlan, RebalanceSnapshot, ShardRouter, SimplexGp};
 pub use trainer::{train, EpochRecord, SolveMode, TrainConfig, TrainOutcome};

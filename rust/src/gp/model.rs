@@ -152,6 +152,16 @@ pub struct GpConfig {
     /// solve (fit + predictive-variance columns). 0 = off (bit-identical
     /// to the unpreconditioned path); the paper's Table 5 uses 100.
     pub precond_rank: usize,
+    /// Interpolation backend this config routes to. `SimplexGp` itself
+    /// is always the lattice backend and ignores the field; the
+    /// dispatch layers ([`crate::grid::fit_backend`], the CLI, the
+    /// serving coordinator) consume it, and `Backend::Lattice` (the
+    /// default) is bitwise the pre-backend engine at every surface.
+    pub backend: crate::mvm::Backend,
+    /// Per-axis node count for the grid backend's rectangular grid
+    /// ([`crate::grid::GridMvm`]; clamped so the total grid size stays
+    /// under `grid::MAX_GRID_POINTS`). Ignored by the lattice backend.
+    pub grid_axis_points: usize,
 }
 
 impl Default for GpConfig {
@@ -166,6 +176,8 @@ impl Default for GpConfig {
             seed: 0,
             shards: 1,
             precond_rank: 0,
+            backend: crate::mvm::Backend::Lattice,
+            grid_axis_points: 32,
         }
     }
 }

@@ -70,6 +70,17 @@ pub struct TrainConfig {
     /// way). Ignored by [`SolveMode::RrCg`], whose estimator has no
     /// initial-guess form.
     pub warm_start: bool,
+    /// Interpolation backend the training run targets. [`train`] is
+    /// the lattice trainer (the §4.2 lengthscale-gradient filtering is
+    /// lattice-specific) and rejects `Backend::Grid`; the CLI
+    /// dispatches grid runs to [`crate::grid::train_grid`], which
+    /// learns outputscale/noise with the backend-generic gradients.
+    /// `Backend::Lattice` (the default) leaves this function bitwise
+    /// unchanged.
+    pub backend: crate::mvm::Backend,
+    /// Per-axis node count for the grid backend (ignored by the
+    /// lattice trainer; see `GpConfig::grid_axis_points`).
+    pub grid_axis_points: usize,
 }
 
 impl Default for TrainConfig {
@@ -90,6 +101,8 @@ impl Default for TrainConfig {
             shards: 1,
             precond_rank: 0,
             warm_start: true,
+            backend: crate::mvm::Backend::Lattice,
+            grid_axis_points: 32,
         }
     }
 }
@@ -169,6 +182,10 @@ pub fn train(
     family: KernelFamily,
     cfg: TrainConfig,
 ) -> Result<TrainOutcome> {
+    anyhow::ensure!(
+        cfg.backend == crate::mvm::Backend::Lattice,
+        "train() is the lattice trainer; use grid::train_grid for the grid backend"
+    );
     let n = y.len();
     assert_eq!(x.len(), n * d);
     let mut rng = Pcg64::new(cfg.seed);

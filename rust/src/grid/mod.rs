@@ -1,0 +1,1009 @@
+//! Sparse rectangular-grid SKI backend — the classic KISS-GP structure
+//! ("Kernel Interpolation with Sparse Grids", Yadav, Sheldon, Musco)
+//! behind the same pluggable operator contracts the lattice engine
+//! implements (ARCHITECTURE.md §Pluggable backends).
+//!
+//! Structure: inducing points live on a dense per-axis rectangular grid
+//! built from the data bounds, interpolation is multilinear (2^d sparse
+//! splat/slice weights per point), and the grid kernel `K_UU` is a
+//! Kronecker product of per-axis symmetric Toeplitz matrices
+//! ([`crate::linalg::SymToeplitz`], FFT circulant embedding via
+//! `linalg/fft.rs`), so one MVM costs `O(n·2^d + m log m)` instead of
+//! the lattice's `O(n·d²)`:
+//!
+//! ```text
+//! K ≈ Wᵀ (T_1 ⊗ … ⊗ T_d) W · s²
+//! ```
+//!
+//! The Kronecker factorization is *exact* for the RBF family —
+//! `exp(-½ Σ_j r_j²) = Π_j exp(-½ r_j²)` — and a separable
+//! product-of-1-D-profiles approximation for the Matérn families (each
+//! 1-D factor is a valid PSD kernel, so the product stays PSD; it is a
+//! different, axis-separable member of the Matérn-like class rather
+//! than the radial one). Either way every factor is PSD, so the whole
+//! operator is PSD and the BBMM machinery runs unchanged.
+//!
+//! [`GridMvm`] implements both [`MvmOperator`] (including `mvm_block`'s
+//! row-major `b × n` layout and composition with
+//! [`crate::mvm::Shifted`]) and [`KernelRows`] (exact kernel rows for
+//! the pivoted-Cholesky preconditioner — the same contract
+//! [`crate::mvm::ExactMvm`] satisfies), so the block-CG/SLQ solvers and
+//! the preconditioner consume it through the identical surfaces they
+//! consume the lattice through. [`GridGp`] mirrors
+//! [`crate::gp::SimplexGp`]'s solve sequence exactly (same
+//! `CgOptions`, same SKI variance identity, same SLQ seeding), and
+//! [`fit_backend`] is the dispatch point: `Backend::Lattice` calls
+//! straight into `SimplexGp::fit`, so the default path is bitwise the
+//! pre-backend engine.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::gp::{GpConfig, SimplexGp, TrainConfig};
+use crate::kernels::{ArdKernel, KernelFamily};
+use crate::linalg::{kron_toeplitz_matvec, SymToeplitz};
+use crate::mvm::{Backend, MvmOperator, Shifted};
+use crate::solvers::{
+    cg_block_precond, cg_block_precond_x0, slq_logdet, CgOptions, KernelRows, PivCholPrecond,
+    Precond,
+};
+use crate::util::stats::dot;
+use crate::util::Pcg64;
+
+/// Hard cap on the total grid size m = Π_j points_j: per-axis
+/// resolution is reduced (never below [`MIN_AXIS_POINTS`]) until the
+/// product fits. Keeps a careless `--backend grid` on a high-d dataset
+/// from allocating the curse of dimensionality.
+pub const MAX_GRID_POINTS: usize = 1 << 22;
+
+/// Minimum per-axis resolution: one interior cell plus the two padding
+/// nodes multilinear interpolation needs around the data range.
+pub const MIN_AXIS_POINTS: usize = 4;
+
+/// One axis of the rectangular grid: `points` nodes at
+/// `origin + i·step`, covering the data range with one padding node on
+/// each side so every training/test coordinate falls inside a complete
+/// cell.
+#[derive(Clone, Debug)]
+pub struct AxisGrid {
+    /// Coordinate of node 0.
+    pub origin: f64,
+    /// Node spacing h (> 0).
+    pub step: f64,
+    /// Node count along this axis (≥ [`MIN_AXIS_POINTS`]).
+    pub points: usize,
+}
+
+impl AxisGrid {
+    /// Build from the data range `[lo, hi]` of one axis. A degenerate
+    /// axis (all points equal) gets a unit-width span so the grid stays
+    /// well-formed.
+    fn from_bounds(lo: f64, hi: f64, points: usize) -> AxisGrid {
+        let points = points.max(MIN_AXIS_POINTS);
+        let (lo, hi) = if hi > lo {
+            (lo, hi)
+        } else {
+            (lo - 0.5, lo + 0.5)
+        };
+        // One padding node each side: span (points-1)·step covers
+        // [lo - step, hi + step], i.e. step = (hi - lo)/(points - 3).
+        let step = (hi - lo) / (points - 3) as f64;
+        AxisGrid {
+            origin: lo - step,
+            step,
+            points,
+        }
+    }
+
+    /// Lower cell index and in-cell fraction for coordinate `u`,
+    /// clamped into the grid (test points outside the padded training
+    /// range snap to the boundary cell).
+    fn locate(&self, u: f64) -> (usize, f64) {
+        let t = (u - self.origin) / self.step;
+        let max_cell = (self.points - 2) as f64;
+        let tc = t.clamp(0.0, max_cell + 1.0);
+        let mut i0 = tc.floor() as usize;
+        if i0 > self.points - 2 {
+            i0 = self.points - 2;
+        }
+        let frac = (tc - i0 as f64).clamp(0.0, 1.0);
+        (i0, frac)
+    }
+}
+
+/// Choose a per-axis resolution that honors the request but keeps
+/// `points^d ≤ MAX_GRID_POINTS`.
+fn clamp_axis_points(requested: usize, d: usize) -> usize {
+    let mut p = requested.max(MIN_AXIS_POINTS);
+    while p > MIN_AXIS_POINTS && (p as f64).powi(d as i32) > MAX_GRID_POINTS as f64 {
+        p -= 1;
+    }
+    p
+}
+
+/// The sparse-grid SKI operator `v ↦ Wᵀ (⊗_j T_j) W v · s²`.
+///
+/// `W` holds the multilinear interpolation weights (2^d nonzeros per
+/// training row), each `T_j` is the 1-D kernel profile on axis `j`'s
+/// uniform nodes as a symmetric Toeplitz matrix (FFT matvec), and `s²`
+/// is the kernel outputscale. Implements [`MvmOperator`] (batch rows
+/// are bitwise the single-vector path — each RHS runs the identical
+/// splat → Kronecker → slice arithmetic) and [`KernelRows`] (exact
+/// kernel rows via [`ArdKernel::cov_row`], outputscale included — the
+/// preconditioner contract).
+pub struct GridMvm {
+    /// Kernel the grid approximates (rows/diag are exact evaluations).
+    pub kernel: ArdKernel,
+    x: Vec<f64>,
+    d: usize,
+    n: usize,
+    axes: Vec<AxisGrid>,
+    factors: Vec<SymToeplitz>,
+    /// Flattened grid indices of each row's 2^d interpolation corners.
+    corner_idx: Vec<usize>,
+    /// Matching multilinear weights.
+    corner_w: Vec<f64>,
+    m: usize,
+    /// Outputscale s² applied after the unit-scale grid pass (same
+    /// convention as `ShardedMvm`).
+    pub outputscale: f64,
+}
+
+impl GridMvm {
+    /// Build the grid operator for `n × d` row-major points: per-axis
+    /// grids from the data bounds (one padding cell each side),
+    /// Toeplitz factors from the kernel's 1-D profile, and the sparse
+    /// multilinear splat rows. Deterministic: identical inputs yield
+    /// bitwise-identical operators.
+    pub fn build(x: &[f64], d: usize, kernel: &ArdKernel, axis_points: usize) -> Result<GridMvm> {
+        ensure!(d >= 1, "d must be >= 1");
+        ensure!(x.len() % d == 0, "x length must be a multiple of d");
+        let n = x.len() / d;
+        ensure!(n >= 1, "need at least one point");
+        ensure!(kernel.dim() == d, "kernel dimensionality mismatch");
+        ensure!(
+            d <= 20,
+            "grid backend is dense per axis (2^d interpolation corners); \
+             d = {d} is lattice territory"
+        );
+        let points = clamp_axis_points(axis_points, d);
+
+        let mut axes = Vec::with_capacity(d);
+        for j in 0..d {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for i in 0..n {
+                let u = x[i * d + j];
+                ensure!(u.is_finite(), "non-finite coordinate at row {i}, axis {j}");
+                lo = lo.min(u);
+                hi = hi.max(u);
+            }
+            axes.push(AxisGrid::from_bounds(lo, hi, points));
+        }
+
+        // 1-D Toeplitz factor per axis: first column is the kernel
+        // profile at node separations k·h_j, scaled by that axis'
+        // lengthscale. Product over axes is exact for RBF
+        // (profile(Σr²) = Π profile(r²)) and a separable PSD
+        // approximation for the Matérn families (module docs).
+        let mut factors = Vec::with_capacity(d);
+        for (j, ax) in axes.iter().enumerate() {
+            let ell = kernel.lengthscales[j];
+            let col: Vec<f64> = (0..ax.points)
+                .map(|k| {
+                    let r = k as f64 * ax.step / ell;
+                    kernel.family.profile(r * r)
+                })
+                .collect();
+            factors.push(SymToeplitz::new(col));
+        }
+        let mut m = 1usize;
+        for ax in &axes {
+            m = m.saturating_mul(ax.points);
+        }
+        ensure!(m <= MAX_GRID_POINTS, "grid size {m} exceeds the cap");
+
+        let (corner_idx, corner_w) = splat_rows(x, n, d, &axes);
+        Ok(GridMvm {
+            kernel: kernel.clone(),
+            x: x.to_vec(),
+            d,
+            n,
+            axes,
+            factors,
+            corner_idx,
+            corner_w,
+            m,
+            outputscale: kernel.outputscale,
+        })
+    }
+
+    /// Total grid size m = Π_j points_j.
+    pub fn grid_size(&self) -> usize {
+        self.m
+    }
+
+    /// Per-axis grids.
+    pub fn axes(&self) -> &[AxisGrid] {
+        &self.axes
+    }
+
+    /// Interpolation nonzeros per row (2^d).
+    pub fn interp_nnz(&self) -> usize {
+        1 << self.d
+    }
+
+    /// Input dimensionality.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// `Wᵀ v` — accumulate each row's weighted value onto its grid
+    /// corners.
+    fn splat(&self, v: &[f64]) -> Vec<f64> {
+        let nnz = self.interp_nnz();
+        let mut g = vec![0.0; self.m];
+        for i in 0..self.n {
+            let vi = v[i];
+            let base = i * nnz;
+            for c in 0..nnz {
+                g[self.corner_idx[base + c]] += self.corner_w[base + c] * vi;
+            }
+        }
+        g
+    }
+
+    /// `W g` — gather each row's weighted grid values.
+    fn slice(&self, g: &[f64]) -> Vec<f64> {
+        let nnz = self.interp_nnz();
+        let mut out = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let base = i * nnz;
+            let mut acc = 0.0;
+            for c in 0..nnz {
+                acc += self.corner_w[base + c] * g[self.corner_idx[base + c]];
+            }
+            out.push(acc);
+        }
+        out
+    }
+
+    /// `(⊗_j T_j) g` on the grid.
+    pub fn grid_kernel_mvm(&self, g: &[f64]) -> Vec<f64> {
+        kron_toeplitz_matvec(&self.factors, g)
+    }
+
+    /// Unit-outputscale kernel MVM `Wᵀ K_UU W v` — the raw structure the
+    /// coordinator's `mvm` op serves (its lattice counterpart is also
+    /// unit-scale).
+    pub fn mvm_unit(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n);
+        let g = self.splat(v);
+        let kg = self.grid_kernel_mvm(&g);
+        self.slice(&kg)
+    }
+
+    /// Multilinear splat/slice weights of `t` arbitrary (test) rows on
+    /// this grid, in the same `(indices, weights)` layout as the
+    /// training rows. Coordinates outside the padded range clamp to the
+    /// boundary cell.
+    pub fn cross_weights(&self, xs: &[f64]) -> (Vec<usize>, Vec<f64>) {
+        let t = xs.len() / self.d;
+        splat_rows(xs, t, self.d, &self.axes)
+    }
+}
+
+/// Multilinear interpolation rows for `n` row-major `n × d` points on
+/// `axes`: per row, 2^d corner indices into the row-major-flattened
+/// grid (axis 0 slowest-varying — the [`kron_toeplitz_matvec`]
+/// convention) and the matching product weights.
+fn splat_rows(x: &[f64], n: usize, d: usize, axes: &[AxisGrid]) -> (Vec<usize>, Vec<f64>) {
+    // stride_j = Π_{k>j} points_k (axis 0 slowest-varying).
+    let mut strides = vec![1usize; d];
+    for j in (0..d.saturating_sub(1)).rev() {
+        strides[j] = strides[j + 1] * axes[j + 1].points;
+    }
+    let nnz = 1usize << d;
+    let mut idx = Vec::with_capacity(n * nnz);
+    let mut w = Vec::with_capacity(n * nnz);
+    let mut cell = vec![(0usize, 0.0f64); d];
+    for i in 0..n {
+        for (j, c) in cell.iter_mut().enumerate() {
+            *c = axes[j].locate(x[i * d + j]);
+        }
+        for mask in 0..nnz {
+            let mut flat = 0usize;
+            let mut weight = 1.0f64;
+            for (j, &(i0, frac)) in cell.iter().enumerate() {
+                let hi = (mask >> j) & 1 == 1;
+                flat += (i0 + hi as usize) * strides[j];
+                weight *= if hi { frac } else { 1.0 - frac };
+            }
+            idx.push(flat);
+            w.push(weight);
+        }
+    }
+    (idx, w)
+}
+
+impl MvmOperator for GridMvm {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn mvm(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = self.mvm_unit(v);
+        if self.outputscale != 1.0 {
+            for o in out.iter_mut() {
+                *o *= self.outputscale;
+            }
+        }
+        out
+    }
+
+    // `mvm_multi` / `mvm_block` use the trait defaults: each RHS runs
+    // the identical single-vector arithmetic, so batch rows are bitwise
+    // the single path (the conformance suite pins this at == 0, far
+    // inside the ≤ 1e-12 contract).
+}
+
+impl KernelRows for GridMvm {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn row(&self, i: usize) -> Vec<f64> {
+        // Exact kernel rows (outputscale included) — the preconditioner
+        // approximates the exact kernel even though the solve operator
+        // is the grid approximation, same contract as the lattice path.
+        self.kernel.cov_row(&self.x, self.d, i)
+    }
+    fn diag(&self) -> Vec<f64> {
+        vec![self.kernel.outputscale; self.n]
+    }
+}
+
+/// A GP regression model on the grid backend — the [`SimplexGp`]
+/// sibling. Same BBMM inference: preconditioned block-CG for the
+/// representer weights, the SKI identity for predictive variance, SLQ
+/// for the log-determinant. The solver call sequence (tolerances,
+/// `min_iters = 1`, chunked variance columns, variance floor, SLQ seed
+/// offset) mirrors `SimplexGp` line for line so backend comparisons
+/// isolate the *structure*, not solver settings.
+pub struct GridGp {
+    pub kernel: ArdKernel,
+    /// Observation noise σ².
+    pub noise: f64,
+    pub d: usize,
+    pub config: GpConfig,
+    op: GridMvm,
+    precond: Option<PivCholPrecond>,
+    alpha: Vec<f64>,
+    /// `K_UU (Wᵀ α)` cached on the grid at fit time: prediction then
+    /// only interpolates test rows — the grid analog of `SimplexGp`'s
+    /// per-shard `Blur(Splat(α))` cache.
+    z_grid: Vec<f64>,
+    /// Iterations the fitting solve took (diagnostics).
+    pub fit_iterations: usize,
+}
+
+impl GridGp {
+    /// Fit with fixed hyperparameters: builds the grid operator and
+    /// solves `(K + σ²I) α = y`.
+    pub fn fit(
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+        kernel: ArdKernel,
+        noise: f64,
+        config: GpConfig,
+    ) -> Result<GridGp> {
+        ensure!(noise > 0.0, "noise must be positive");
+        ensure!(!y.is_empty(), "need at least one training point");
+        ensure!(x.len() == y.len() * d, "x/y shape mismatch");
+        let op = GridMvm::build(x, d, &kernel, config.grid_axis_points)?;
+        let precond = if config.precond_rank > 0 {
+            Some(PivCholPrecond::build(&op, config.precond_rank, noise))
+        } else {
+            None
+        };
+        let shifted = Shifted::new(&op, noise);
+        let opts = CgOptions {
+            tol: config.cg_tol,
+            max_iters: config.cg_max_iters,
+            min_iters: 1,
+        };
+        let res = cg_block_precond(
+            &shifted,
+            y,
+            1,
+            opts,
+            precond.as_ref().map(|pc| pc as &dyn Precond),
+        );
+        let alpha = res.x;
+        let z_grid = op.grid_kernel_mvm(&op.splat(&alpha));
+        Ok(GridGp {
+            kernel,
+            noise,
+            d,
+            config,
+            op,
+            precond,
+            alpha,
+            z_grid,
+            fit_iterations: res.iterations,
+        })
+    }
+
+    /// Training-set size n.
+    pub fn n_train(&self) -> usize {
+        MvmOperator::len(&self.op)
+    }
+
+    /// Representer weights α.
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// The grid operator (for conformance/diagnostics).
+    pub fn operator(&self) -> &GridMvm {
+        &self.op
+    }
+
+    /// Posterior mean at `t` row-major test rows: interpolate the
+    /// cached grid mean — `μ* = s² · W* z_grid`.
+    pub fn predict_mean(&self, x_star: &[f64]) -> Vec<f64> {
+        assert_eq!(x_star.len() % self.d, 0);
+        let t = x_star.len() / self.d;
+        let (idx, w) = self.op.cross_weights(x_star);
+        let nnz = self.op.interp_nnz();
+        let mut out = Vec::with_capacity(t);
+        for i in 0..t {
+            let base = i * nnz;
+            let mut acc = 0.0;
+            for c in 0..nnz {
+                acc += w[base + c] * self.z_grid[idx[base + c]];
+            }
+            out.push(acc * self.op.outputscale);
+        }
+        out
+    }
+
+    /// Posterior mean and variance — the SKI identity on the grid:
+    /// `k* ≈ s² · W K_UU w*`, `var = k(x*,x*) + σ² − k*ᵀ(K+σ²I)⁻¹k*`,
+    /// with the same 64-column chunking, CG options and `1e-8` variance
+    /// floor as `SimplexGp::predict`.
+    pub fn predict(&self, x_star: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let mean = self.predict_mean(x_star);
+        let t = x_star.len() / self.d;
+        let n = self.n_train();
+        let prior = self.kernel.outputscale + self.noise;
+        let shifted = Shifted::new(&self.op, self.noise);
+        let opts = CgOptions {
+            tol: self.config.cg_tol,
+            max_iters: self.config.cg_max_iters,
+            min_iters: 1,
+        };
+        let (idx, w) = self.op.cross_weights(x_star);
+        let nnz = self.op.interp_nnz();
+        let mut var = Vec::with_capacity(t);
+        for chunk in (0..t).collect::<Vec<_>>().chunks(64) {
+            let nc = chunk.len();
+            // Cross-covariance columns through the grid structure: for
+            // each test row, scatter its multilinear weights, apply the
+            // Kronecker kernel, gather at every training row.
+            let mut cols = vec![0.0; nc * n];
+            for (c, &ti) in chunk.iter().enumerate() {
+                let mut g = vec![0.0; self.op.grid_size()];
+                let base = ti * nnz;
+                for k in 0..nnz {
+                    g[idx[base + k]] += w[base + k];
+                }
+                let kg = self.op.grid_kernel_mvm(&g);
+                let col = self.op.slice(&kg);
+                for (j, v) in col.into_iter().enumerate() {
+                    cols[c * n + j] = v * self.op.outputscale;
+                }
+            }
+            let sol = cg_block_precond(
+                &shifted,
+                &cols,
+                nc,
+                opts,
+                self.precond.as_ref().map(|pc| pc as &dyn Precond),
+            );
+            for c in 0..nc {
+                let quad = dot(&cols[c * n..(c + 1) * n], &sol.x[c * n..(c + 1) * n]);
+                var.push((prior - quad).max(1e-8));
+            }
+        }
+        (mean, var)
+    }
+
+    /// Marginal log-likelihood via SLQ — same estimator shape and seed
+    /// offset as `SimplexGp::mll`.
+    pub fn mll(&self, y: &[f64]) -> f64 {
+        let n = self.n_train();
+        assert_eq!(y.len(), n);
+        let shifted = Shifted::new(&self.op, self.noise);
+        let ld = slq_logdet(
+            &shifted,
+            self.config.slq_steps,
+            self.config.slq_probes,
+            self.config.seed + 17,
+        );
+        -0.5 * dot(y, &self.alpha) - 0.5 * ld - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+    }
+}
+
+/// A fitted model of either backend — what the dispatch surfaces
+/// (CLI train/serve, the coordinator's per-request routing) hold when
+/// the backend is not statically known.
+pub enum AnyGp {
+    Lattice(SimplexGp),
+    Grid(GridGp),
+}
+
+impl AnyGp {
+    /// Which backend this model runs on.
+    pub fn backend(&self) -> Backend {
+        match self {
+            AnyGp::Lattice(_) => Backend::Lattice,
+            AnyGp::Grid(_) => Backend::Grid,
+        }
+    }
+
+    /// Training-set size n.
+    pub fn n_train(&self) -> usize {
+        match self {
+            AnyGp::Lattice(gp) => gp.n_train(),
+            AnyGp::Grid(gp) => gp.n_train(),
+        }
+    }
+
+    /// Posterior mean at row-major test rows.
+    pub fn predict_mean(&self, x_star: &[f64]) -> Vec<f64> {
+        match self {
+            AnyGp::Lattice(gp) => gp.predict_mean(x_star),
+            AnyGp::Grid(gp) => gp.predict_mean(x_star),
+        }
+    }
+
+    /// Posterior mean and variance at row-major test rows.
+    pub fn predict(&self, x_star: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        match self {
+            AnyGp::Lattice(gp) => gp.predict(x_star),
+            AnyGp::Grid(gp) => gp.predict(x_star),
+        }
+    }
+
+    /// Iterations the fitting solve took.
+    pub fn fit_iterations(&self) -> usize {
+        match self {
+            AnyGp::Lattice(gp) => gp.fit_iterations,
+            AnyGp::Grid(gp) => gp.fit_iterations,
+        }
+    }
+}
+
+/// Backend dispatch for fixed-hyperparameter fits. `Backend::Lattice`
+/// calls [`SimplexGp::fit`] with the caller's config untouched — the
+/// default path is the pre-backend engine, bit for bit (pinned by
+/// `rust/tests/backend_conformance.rs`).
+pub fn fit_backend(
+    backend: Backend,
+    x: &[f64],
+    y: &[f64],
+    d: usize,
+    kernel: ArdKernel,
+    noise: f64,
+    config: GpConfig,
+) -> Result<AnyGp> {
+    match backend {
+        Backend::Lattice => Ok(AnyGp::Lattice(SimplexGp::fit(x, y, d, kernel, noise, config)?)),
+        Backend::Grid => Ok(AnyGp::Grid(GridGp::fit(x, y, d, kernel, noise, config)?)),
+    }
+}
+
+/// Result of a grid-backend training run ([`train_grid`]).
+pub struct GridTrainOutcome {
+    pub model: GridGp,
+    pub records: Vec<crate::gp::EpochRecord>,
+    pub best_epoch: usize,
+}
+
+/// Adam ascent state (mirrors the lattice trainer's update rule).
+struct Adam {
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+    lr: f64,
+}
+
+impl Adam {
+    fn new(len: usize, lr: f64) -> Self {
+        Adam {
+            m: vec![0.0; len],
+            v: vec![0.0; len],
+            t: 0,
+            lr,
+        }
+    }
+    fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        const B1: f64 = 0.9;
+        const B2: f64 = 0.999;
+        const EPS: f64 = 1e-8;
+        self.t += 1;
+        let t = self.t as i32;
+        for i in 0..params.len() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * grad[i];
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * grad[i] * grad[i];
+            let mhat = self.m[i] / (1.0 - B1.powi(t));
+            let vhat = self.v[i] / (1.0 - B2.powi(t));
+            params[i] += self.lr * mhat / (vhat.sqrt() + EPS);
+        }
+    }
+}
+
+fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().max(1);
+    (a.iter()
+        .zip(b)
+        .map(|(p, q)| (p - q) * (p - q))
+        .sum::<f64>()
+        / n as f64)
+        .sqrt()
+}
+
+/// Train a grid-backend GP on (x, y), early-stopping on (x_val, y_val).
+///
+/// Scope relative to the lattice trainer: outputscale and noise are
+/// learned with the *backend-generic* MLL gradients (they need only
+/// operator MVMs and probe solves — `∂MLL/∂σ² = ½αᵀα − ½tr(K̂⁻¹)`,
+/// `∂MLL/∂s² = ½αᵀBα − ½tr(K̂⁻¹B)` with `B` the unit-scale operator,
+/// traces Hutchinson-estimated), while the lengthscales stay at their
+/// init (= 1, standardized data): the Eq.(12)/(13) lengthscale-gradient
+/// filtering is lattice-specific and has no grid analog in-repo yet
+/// (ARCHITECTURE.md §Pluggable backends).
+pub fn train_grid(
+    x: &[f64],
+    y: &[f64],
+    x_val: &[f64],
+    y_val: &[f64],
+    d: usize,
+    family: KernelFamily,
+    cfg: &TrainConfig,
+) -> Result<GridTrainOutcome> {
+    let n = y.len();
+    ensure!(x.len() == n * d, "x/y shape mismatch");
+    ensure!(n >= 1, "need at least one training point");
+    let mut rng = Pcg64::new(cfg.seed);
+
+    // θ = [log s², log σ²-raw]; lengthscales fixed at 1.
+    let mut params = vec![0.0; 2];
+    params[1] = (cfg.init_noise - cfg.min_noise).max(1e-6).ln();
+    let mut adam = Adam::new(params.len(), cfg.lr);
+
+    let tol = match cfg.solve {
+        crate::gp::SolveMode::Cg { tol } => tol,
+        // RR-CG has no grid-path integration; fall back to plain CG at
+        // the training tolerance rather than failing the run.
+        crate::gp::SolveMode::RrCg { .. } => 1.0,
+    };
+
+    let mut records = Vec::with_capacity(cfg.epochs);
+    let mut best: Option<(f64, Vec<f64>, usize)> = None;
+    let mut since_best = 0usize;
+    let mut prev_alpha: Option<Vec<f64>> = None;
+
+    for epoch in 0..cfg.epochs {
+        let t0 = std::time::Instant::now();
+        let outputscale = params[0].exp().clamp(1e-6, 1e6);
+        let noise = cfg.min_noise + params[1].exp().clamp(0.0, 1e4);
+        let mut kernel = ArdKernel::new(family, d);
+        kernel.outputscale = outputscale;
+
+        let op = GridMvm::build(x, d, &kernel, cfg.grid_axis_points)?;
+        let shifted = Shifted::new(&op, noise);
+        let precond = if cfg.precond_rank > 0 {
+            Some(PivCholPrecond::build(&op, cfg.precond_rank, noise))
+        } else {
+            None
+        };
+
+        // Target + Hutchinson probes in one block solve, warm-seeding
+        // the target column from the previous epoch's α.
+        let p = cfg.probes;
+        let probes: Vec<Vec<f64>> = (0..p).map(|_| rng.rademacher_vec(n)).collect();
+        let nrhs = p + 1;
+        let mut rhs = vec![0.0; n * nrhs];
+        rhs[..n].copy_from_slice(y);
+        for (k, z) in probes.iter().enumerate() {
+            rhs[(k + 1) * n..(k + 2) * n].copy_from_slice(z);
+        }
+        let x0 = match (&prev_alpha, cfg.warm_start) {
+            (Some(prev), true) if prev.len() == n => {
+                let mut seed = vec![0.0; n * nrhs];
+                seed[..n].copy_from_slice(prev);
+                Some(seed)
+            }
+            _ => None,
+        };
+        let res = cg_block_precond_x0(
+            &shifted,
+            &rhs,
+            nrhs,
+            CgOptions {
+                tol,
+                max_iters: cfg.max_cg_iters,
+                min_iters: 10,
+            },
+            precond.as_ref().map(|pc| pc as &dyn Precond),
+            x0.as_deref(),
+        );
+        let alpha = res.x[..n].to_vec();
+        prev_alpha = Some(alpha.clone());
+        let probe_solves: Vec<&[f64]> = (0..p).map(|k| &res.x[(k + 1) * n..(k + 2) * n]).collect();
+        let solve_iters = res.iterations;
+
+        // Backend-generic gradients (trainer formulas verbatim).
+        let mut tr_noise = 0.0;
+        for (z, sz) in probes.iter().zip(&probe_solves) {
+            tr_noise += dot(z, sz);
+        }
+        tr_noise /= p.max(1) as f64;
+        let g_noise = 0.5 * dot(&alpha, &alpha) - 0.5 * tr_noise;
+
+        let k_alpha = op.mvm(&alpha);
+        let mut tr_scale = 0.0;
+        if p > 0 {
+            for (z, sz) in probes.iter().zip(&probe_solves) {
+                let kz = op.mvm(z);
+                tr_scale += dot(sz, &kz) / outputscale;
+            }
+            tr_scale /= p as f64;
+        }
+        let g_scale = 0.5 * dot(&alpha, &k_alpha) / outputscale - 0.5 * tr_scale;
+
+        let mut grad = vec![g_scale * outputscale, g_noise * (noise - cfg.min_noise)];
+        for g in grad.iter_mut() {
+            if !g.is_finite() {
+                *g = 0.0;
+            }
+        }
+        adam.step(&mut params, &grad);
+
+        // Validation RMSE at evaluation tolerance.
+        let eval_cfg = GpConfig {
+            order: cfg.order,
+            seed: cfg.seed,
+            precond_rank: cfg.precond_rank,
+            grid_axis_points: cfg.grid_axis_points,
+            backend: Backend::Grid,
+            ..GpConfig::default()
+        };
+        let eval_model = GridGp::fit(x, y, d, kernel.clone(), noise, eval_cfg)?;
+        let val_pred = eval_model.predict_mean(x_val);
+        let val_rmse = rmse(&val_pred, y_val);
+
+        let mll = if cfg.track_mll {
+            Some(eval_model.mll(y))
+        } else {
+            None
+        };
+        let rec = crate::gp::EpochRecord {
+            epoch,
+            mll,
+            val_rmse,
+            noise,
+            outputscale,
+            lengthscales: kernel.lengthscales.clone(),
+            epoch_secs: t0.elapsed().as_secs_f64(),
+            solve_iters,
+        };
+        if cfg.verbose {
+            println!(
+                "epoch {:3}  val_rmse {:.4}  noise {:.4}  s2 {:.3}  [{:.2}s, {} iters, grid]",
+                epoch, val_rmse, noise, outputscale, rec.epoch_secs, solve_iters
+            );
+        }
+        records.push(rec);
+
+        let improved = best.as_ref().map_or(true, |(b, _, _)| val_rmse < *b);
+        if improved {
+            best = Some((
+                val_rmse,
+                vec![outputscale.ln(), (noise - cfg.min_noise).max(1e-12).ln()],
+                epoch,
+            ));
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if since_best >= cfg.patience {
+                break;
+            }
+        }
+    }
+
+    let (_, best_params, best_epoch) = best.expect("at least one epoch must run");
+    let outputscale = best_params[0].exp().clamp(1e-6, 1e6);
+    let noise = cfg.min_noise + best_params[1].exp().clamp(0.0, 1e4);
+    let mut kernel = ArdKernel::new(family, d);
+    kernel.outputscale = outputscale;
+    let final_cfg = GpConfig {
+        order: cfg.order,
+        seed: cfg.seed,
+        precond_rank: cfg.precond_rank,
+        grid_axis_points: cfg.grid_axis_points,
+        backend: Backend::Grid,
+        ..GpConfig::default()
+    };
+    let model = GridGp::fit(x, y, d, kernel, noise, final_cfg)?;
+    Ok(GridTrainOutcome {
+        model,
+        records,
+        best_epoch,
+    })
+}
+
+/// Parse a backend or fail with the canonical error message shared by
+/// the CLI and the coordinator's per-request field.
+pub fn parse_backend(s: &str) -> Result<Backend> {
+    match Backend::parse(s) {
+        Some(b) => Ok(b),
+        None => bail!("unknown backend '{s}' (use lattice | grid)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mvm::ExactMvm;
+
+    fn points(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        Pcg64::with_stream(0x9d1d_0001, seed).normal_vec(n * d)
+    }
+
+    #[test]
+    fn axis_grid_covers_data_with_padding() {
+        let ax = AxisGrid::from_bounds(-1.0, 3.0, 10);
+        assert_eq!(ax.points, 10);
+        // Data range strictly inside [origin, origin + (points-1)*step].
+        assert!(ax.origin < -1.0);
+        assert!(ax.origin + (ax.points - 1) as f64 * ax.step > 3.0);
+        // Interpolation weights at a node are exact.
+        let (i0, frac) = ax.locate(ax.origin + 4.0 * ax.step);
+        assert_eq!(i0, 4);
+        assert!(frac.abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_axis_gets_unit_span() {
+        let ax = AxisGrid::from_bounds(2.0, 2.0, 8);
+        assert!(ax.step > 0.0);
+        let (i0, frac) = ax.locate(2.0);
+        assert!(i0 < ax.points - 1);
+        assert!((0.0..=1.0).contains(&frac));
+    }
+
+    #[test]
+    fn splat_weights_are_a_partition_of_unity() {
+        let d = 3;
+        let x = points(40, d, 1);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.7);
+        let op = GridMvm::build(&x, d, &kernel, 8).unwrap();
+        let nnz = op.interp_nnz();
+        for i in 0..40 {
+            let s: f64 = op.corner_w[i * nnz..(i + 1) * nnz].iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "row {i}: weights sum to {s}");
+            assert!(op.corner_w[i * nnz..(i + 1) * nnz]
+                .iter()
+                .all(|&w| (0.0..=1.0).contains(&w)));
+        }
+    }
+
+    #[test]
+    fn grid_mvm_approximates_exact_kernel_and_refines() {
+        // Interpolation error must shrink as the grid refines — the
+        // in-module version of the conformance suite's decay pin.
+        let d = 2;
+        let n = 60;
+        let x = points(n, d, 2);
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+        let exact = ExactMvm::new(&kernel, &x, d);
+        let v = Pcg64::with_stream(0x9d1d_0002, 0).normal_vec(n);
+        let kv = exact.mvm(&v);
+        let norm: f64 = kv.iter().map(|a| a * a).sum::<f64>().sqrt();
+        let mut errs = Vec::new();
+        for &pts in &[8usize, 16, 32] {
+            let op = GridMvm::build(&x, d, &kernel, pts).unwrap();
+            let gv = op.mvm(&v);
+            let err: f64 = gv
+                .iter()
+                .zip(&kv)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt()
+                / norm;
+            errs.push(err);
+        }
+        assert!(errs[2] < errs[0], "refinement did not reduce error: {errs:?}");
+        assert!(errs[2] < 0.05, "finest grid too inaccurate: {errs:?}");
+    }
+
+    #[test]
+    fn grid_cap_clamps_axis_points() {
+        assert_eq!(clamp_axis_points(64, 2), 64);
+        let p = clamp_axis_points(64, 9);
+        assert!(p >= MIN_AXIS_POINTS);
+        assert!((p as f64).powi(9) <= MAX_GRID_POINTS as f64);
+    }
+
+    #[test]
+    fn grid_gp_fits_and_predicts_sanely() {
+        let d = 2;
+        let n = 120;
+        let mut rng = Pcg64::new(7);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| (x[i * d]).sin() + 0.01 * rng.normal())
+            .collect();
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.8);
+        let cfg = GpConfig {
+            grid_axis_points: 32,
+            precond_rank: 20,
+            ..GpConfig::default()
+        };
+        let gp = GridGp::fit(&x, &y, d, kernel, 0.01, cfg).unwrap();
+        let pred = gp.predict_mean(&x);
+        let train_rmse = rmse(&pred, &y);
+        assert!(train_rmse < 0.2, "train rmse {train_rmse}");
+        let (mean, var) = gp.predict(&x[..10 * d]);
+        assert_eq!(mean.len(), 10);
+        assert_eq!(var.len(), 10);
+        assert!(var.iter().all(|&v| v > 0.0 && v.is_finite()));
+        // Variance at training points must be small relative to prior.
+        let prior = gp.kernel.outputscale + gp.noise;
+        assert!(var.iter().all(|&v| v < prior));
+        assert!(gp.mll(&y).is_finite());
+    }
+
+    #[test]
+    fn backend_parse_round_trips() {
+        assert_eq!(Backend::parse("lattice"), Some(Backend::Lattice));
+        assert_eq!(Backend::parse("grid"), Some(Backend::Grid));
+        assert_eq!(Backend::parse("GRID"), Some(Backend::Grid));
+        assert_eq!(Backend::parse("nope"), None);
+        assert_eq!(Backend::parse(Backend::Lattice.name()), Some(Backend::Lattice));
+        assert_eq!(Backend::parse(Backend::Grid.name()), Some(Backend::Grid));
+        assert!(parse_backend("nope").is_err());
+        assert_eq!(Backend::default(), Backend::Lattice);
+    }
+
+    #[test]
+    fn fit_backend_lattice_is_simplexgp_bitwise() {
+        let d = 2;
+        let n = 80;
+        let mut rng = Pcg64::new(9);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..n).map(|i| (x[i * d]).cos()).collect();
+        let kernel = ArdKernel::with_lengthscale(KernelFamily::Matern32, d, 0.6);
+        let twin = SimplexGp::fit(&x, &y, d, kernel.clone(), 0.05, GpConfig::default()).unwrap();
+        let via = fit_backend(
+            Backend::Lattice,
+            &x,
+            &y,
+            d,
+            kernel,
+            0.05,
+            GpConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(via.backend(), Backend::Lattice);
+        let xq = &x[..7 * d];
+        let (m_twin, v_twin) = twin.predict(xq);
+        let (m_via, v_via) = via.predict(xq);
+        for i in 0..7 {
+            assert_eq!(m_twin[i].to_bits(), m_via[i].to_bits());
+            assert_eq!(v_twin[i].to_bits(), v_via[i].to_bits());
+        }
+    }
+}

@@ -55,6 +55,7 @@ pub mod config;
 pub mod coordinator;
 pub mod datasets;
 pub mod gp;
+pub mod grid;
 pub mod kernels;
 pub mod lattice;
 pub mod linalg;

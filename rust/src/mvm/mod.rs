@@ -17,6 +17,57 @@ pub mod sharded;
 pub use sharded::ShardedMvm;
 
 use crate::kernels::ArdKernel;
+
+/// Which interpolation structure backs the SKI operator — the routing
+/// key of the pluggable operator layer (ARCHITECTURE.md §Pluggable
+/// backends).
+///
+/// - [`Backend::Lattice`] (the default): the permutohedral-lattice
+///   engine ([`SimplexMvm`] / [`ShardedMvm`] behind
+///   [`crate::gp::SimplexGp`]) — O(n·d²) per MVM, the paper's
+///   contribution, and the only backend with sharding, streaming
+///   ingest, and remote-worker offload. Selecting it is bitwise
+///   identical to the pre-backend engine at every surface.
+/// - [`Backend::Grid`]: the classic SKI rectangular grid
+///   ([`crate::grid::GridMvm`]) — Kronecker-of-Toeplitz grid kernel
+///   with multilinear splat/slice rows, O(n·2^d + m log m) per MVM.
+///   Wins on low-d smooth workloads where a dense per-axis grid is
+///   affordable; loses the lattice's d-scaling.
+///
+/// Every backend implements the same two contracts —
+/// [`MvmOperator`] (including `mvm_block`'s row-major `b × n` layout
+/// and composition with [`Shifted`]) and
+/// [`crate::solvers::KernelRows`] (exact kernel rows for the
+/// pivoted-Cholesky preconditioner) — so the solvers, the trainer's
+/// solve loop, and the coordinator drive either through the same code.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// Permutohedral-lattice interpolation (Simplex-GP; the default).
+    #[default]
+    Lattice,
+    /// Dense rectangular-grid interpolation (classic SKI / KISS-GP).
+    Grid,
+}
+
+impl Backend {
+    /// Parse a backend name as it appears in config files, CLI flags
+    /// and per-request `"backend"` fields. `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "lattice" | "simplex" | "permutohedral" => Some(Backend::Lattice),
+            "grid" | "ski" | "rect" => Some(Backend::Grid),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (round-trips through [`Backend::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Lattice => "lattice",
+            Backend::Grid => "grid",
+        }
+    }
+}
 use crate::lattice::PermutohedralLattice;
 use crate::util::layout::{block_to_interleaved, interleaved_to_block};
 use crate::util::parallel;

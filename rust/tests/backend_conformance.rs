@@ -1,0 +1,420 @@
+//! Backend-generic conformance suite (PR 10): ONE harness asserting the
+//! operator invariants every interpolation backend must satisfy —
+//! exercised over `&dyn MvmOperator`, so it knows nothing about
+//! lattices or grids — plus the backend-specific pins:
+//!
+//! - **Operator conformance** (both backends): MVM symmetry, PSD-ness
+//!   via Lanczos Ritz values, batch/single equivalence ≤ 1e-12,
+//!   `Shifted` wrapper consistency, and build determinism (two
+//!   identical builds produce bitwise-identical MVMs). These are the
+//!   `invariants.rs` properties lifted out of their lattice-specific
+//!   sweep into a harness any future backend plugs into.
+//! - **Grid refinement** (grid only): on a smooth RBF problem the
+//!   grid's MVM error against the exact O(n²d) operator decays as the
+//!   per-axis resolution grows — the SKI approximation argument.
+//! - **Default-path identity** (lattice): with `backend = lattice` —
+//!   by default, by explicit `ServeConfig`, or by per-request label —
+//!   fit, predict and coordinator replies are byte-identical to the
+//!   pre-backend engine (a directly-fit `SimplexGp` twin).
+//! - **Grid serving**: `"backend": "grid"` requests are served from
+//!   the grid twin (tagged replies, `grid_served` counter) and match a
+//!   direct `GridGp` fit of the same training set bitwise, while
+//!   interleaved lattice traffic keeps its bytes.
+
+use simplex_gp::coordinator::{Client, ServeConfig, Server};
+use simplex_gp::gp::{Backend, GpConfig, SimplexGp};
+use simplex_gp::grid::{fit_backend, AnyGp, GridGp, GridMvm};
+use simplex_gp::kernels::{ArdKernel, KernelFamily};
+use simplex_gp::linalg::eigh_tridiag;
+use simplex_gp::mvm::{ExactMvm, MvmOperator, ShardedMvm, Shifted};
+use simplex_gp::solvers::lanczos;
+use simplex_gp::util::stats::dot;
+use simplex_gp::util::Pcg64;
+
+fn random_points(n: usize, d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::with_stream(0xc09f_0001, seed);
+    rng.normal_vec(n * d)
+}
+
+/// The backend-generic operator contract. `build` must produce the
+/// same operator on every call (the determinism leg builds twice);
+/// everything else runs through `&dyn MvmOperator`, so any backend —
+/// lattice, grid, or a future one — is checked by the same code.
+fn assert_operator_conformance(build: &dyn Fn() -> Box<dyn MvmOperator>, seed: u64, tag: &str) {
+    let op = build();
+    let n = MvmOperator::len(op.as_ref());
+    let mut rng = Pcg64::with_stream(0xc09f_0002, seed);
+
+    // Symmetry: ⟨u, Kv⟩ = ⟨Ku, v⟩.
+    let u = rng.normal_vec(n);
+    let v = rng.normal_vec(n);
+    let a = dot(&u, &op.mvm(&v));
+    let b = dot(&v, &op.mvm(&u));
+    assert!(
+        (a - b).abs() <= 1e-10 * (1.0 + a.abs().max(b.abs())),
+        "{tag}: asymmetry {a} vs {b}"
+    );
+
+    // PSD-ness: Lanczos Ritz values stay ≥ −1e-8 relative to the top —
+    // the Krylov solvers' working assumption about every backend.
+    let q0 = rng.normal_vec(n);
+    let lr = lanczos(op.as_ref(), &q0, 30, false);
+    let (ritz, _) = eigh_tridiag(&lr.alpha, &lr.beta);
+    let top = ritz.last().copied().unwrap_or(0.0).max(1.0);
+    let bottom = ritz.first().copied().unwrap_or(0.0);
+    assert!(
+        bottom >= -1e-8 * top,
+        "{tag}: min Ritz {bottom:.3e} (top {top:.3e})"
+    );
+
+    // Batch/single equivalence: mvm_block row c equals mvm on RHS c.
+    for bsz in [1usize, 7] {
+        let vb = rng.normal_vec(n * bsz);
+        let block = op.mvm_block(&vb, bsz);
+        for col in 0..bsz {
+            let single = op.mvm(&vb[col * n..(col + 1) * n]);
+            for i in 0..n {
+                let (got, want) = (block[col * n + i], single[i]);
+                assert!(
+                    (got - want).abs() <= 1e-12,
+                    "{tag}: B={bsz} rhs {col} row {i}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    // Shifted wrapper: (K + σ²I)v row i is exactly Kv[i] + σ²·v[i].
+    let shifted = Shifted::new(op.as_ref(), 0.7);
+    let plain = op.mvm(&v);
+    let shifted_out = shifted.mvm(&v);
+    for i in 0..n {
+        assert_eq!(
+            shifted_out[i].to_bits(),
+            (plain[i] + 0.7 * v[i]).to_bits(),
+            "{tag}: Shifted row {i}"
+        );
+    }
+
+    // Determinism: a second identical build yields bitwise-equal MVMs.
+    let op2 = build();
+    let (u1, u2) = (op.mvm(&v), op2.mvm(&v));
+    for i in 0..n {
+        assert_eq!(
+            u1[i].to_bits(),
+            u2[i].to_bits(),
+            "{tag}: rebuild drifted at row {i}"
+        );
+    }
+}
+
+#[test]
+fn lattice_backend_operator_conformance() {
+    for &d in &[2usize, 3] {
+        for &p in &[1usize, 3] {
+            for &family in &[KernelFamily::Rbf, KernelFamily::Matern32] {
+                let n = 150;
+                let seed = 0xc0_0000 + (d * 100 + p * 10) as u64;
+                let x = random_points(n, d, seed);
+                let k = ArdKernel::with_lengthscale(family, d, 1.0);
+                let build = || -> Box<dyn MvmOperator> {
+                    Box::new(ShardedMvm::build(&x, d, &k, 1, p).with_symmetrize(true))
+                };
+                let tag = format!("lattice d={d} P={p} {family:?}");
+                assert_operator_conformance(&build, seed, &tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_backend_operator_conformance() {
+    for &d in &[2usize, 3] {
+        for &family in &[KernelFamily::Rbf, KernelFamily::Matern32] {
+            let n = 150;
+            let seed = 0xc1_0000 + d as u64;
+            let x = random_points(n, d, seed);
+            let k = ArdKernel::with_lengthscale(family, d, 1.0);
+            let build = || -> Box<dyn MvmOperator> {
+                Box::new(GridMvm::build(&x, d, &k, 16).unwrap())
+            };
+            let tag = format!("grid d={d} {family:?}");
+            assert_operator_conformance(&build, seed, &tag);
+        }
+    }
+}
+
+#[test]
+fn grid_interpolation_error_decays_with_resolution() {
+    // The SKI pin: on a smooth RBF kernel the grid MVM converges to the
+    // exact O(n²d) MVM as the per-axis resolution grows.
+    let (n, d) = (220usize, 2usize);
+    let x = random_points(n, d, 0xc2_0001);
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 1.0);
+    let exact_op = ExactMvm::new(&kernel, &x, d);
+    let v = Pcg64::with_stream(0xc2_0002, 1).normal_vec(n);
+    let exact = MvmOperator::mvm(&exact_op, &v);
+    let norm = dot(&exact, &exact).sqrt().max(1e-12);
+    let mut errs = Vec::new();
+    for &points in &[12usize, 24, 48] {
+        let grid = GridMvm::build(&x, d, &kernel, points).unwrap();
+        let approx = MvmOperator::mvm(&grid, &v);
+        let err = exact
+            .iter()
+            .zip(&approx)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+            / norm;
+        errs.push(err);
+    }
+    assert!(
+        errs[2] < 0.5 * errs[0],
+        "refinement did not reduce error: {errs:?}"
+    );
+    assert!(
+        errs[2] < 0.05,
+        "finest grid still {:.3e} relative error",
+        errs[2]
+    );
+}
+
+/// Deterministic 2-D regression problem shared by the serving legs.
+fn problem(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, usize) {
+    let d = 2;
+    let mut rng = Pcg64::with_stream(0xc3_0000, seed);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| (x[i * d] + 0.5 * x[i * d + 1]).sin() + 0.05 * rng.normal())
+        .collect();
+    (x, y, d)
+}
+
+#[test]
+fn fit_backend_lattice_is_the_pre_backend_engine_bitwise() {
+    // `fit_backend(Lattice, ..)` — the default dispatch path — must be
+    // `SimplexGp::fit` bit for bit: same α, same predictions.
+    let (x, y, d) = problem(180, 1);
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.6);
+    let cfg = GpConfig {
+        shards: 2,
+        ..GpConfig::default()
+    };
+    let direct = SimplexGp::fit(&x, &y, d, kernel.clone(), 0.05, cfg.clone()).unwrap();
+    let via = fit_backend(Backend::Lattice, &x, &y, d, kernel, 0.05, cfg).unwrap();
+    assert_eq!(via.backend(), Backend::Lattice);
+    let xq = random_points(7, d, 0xc3_1000);
+    let (md, vd) = direct.predict(&xq);
+    let (mv, vv) = via.predict(&xq);
+    for i in 0..md.len() {
+        assert_eq!(md[i].to_bits(), mv[i].to_bits(), "mean row {i}");
+        assert_eq!(vd[i].to_bits(), vv[i].to_bits(), "var row {i}");
+    }
+    match via {
+        AnyGp::Lattice(gp) => assert_eq!(gp.alpha(), direct.alpha(), "α diverged"),
+        AnyGp::Grid(_) => panic!("lattice dispatch produced a grid model"),
+    }
+}
+
+fn fit_serving_model(x: &[f64], y: &[f64], d: usize) -> SimplexGp {
+    let kernel = ArdKernel::with_lengthscale(KernelFamily::Rbf, d, 0.6);
+    let cfg = GpConfig {
+        shards: 2,
+        ..GpConfig::default()
+    };
+    SimplexGp::fit(x, y, d, kernel, 0.05, cfg).unwrap()
+}
+
+#[test]
+fn lattice_serving_replies_are_byte_identical_across_backend_surfaces() {
+    // The refactor acceptance pin: a default server (no backend set),
+    // an explicit `backend: Lattice` server, and per-request
+    // `"backend": "lattice"` labels all produce replies byte-identical
+    // to the direct twin — the dispatch layer costs the default path
+    // nothing, not even an FP rounding.
+    let (x, y, d) = problem(200, 2);
+    let twin = fit_serving_model(&x, &y, d);
+    let default_server = Server::start(
+        fit_serving_model(&x, &y, d),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let explicit_server = Server::start(
+        fit_serving_model(&x, &y, d),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            backend: Backend::Lattice,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut c_default = Client::connect(&default_server.local_addr).unwrap();
+    let mut c_explicit = Client::connect(&explicit_server.local_addr).unwrap();
+
+    let xq = random_points(9, d, 0xc3_2000);
+    let want_mean = twin.predict_mean(&xq);
+    let unlabeled = c_default.predict(&xq, d).unwrap();
+    let labeled = c_default.predict_backend(&xq, d, "lattice").unwrap().0;
+    let explicit = c_explicit.predict(&xq, d).unwrap();
+    for i in 0..want_mean.len() {
+        let w = want_mean[i].to_bits();
+        assert_eq!(unlabeled[i].to_bits(), w, "unlabeled mean row {i}");
+        assert_eq!(labeled[i].to_bits(), w, "labeled mean row {i}");
+        assert_eq!(explicit[i].to_bits(), w, "explicit-server mean row {i}");
+    }
+    // A lattice reply carries no backend tag — the wire bytes are the
+    // pre-backend protocol.
+    let (_, reply) = c_default.predict_backend(&xq, d, "lattice").unwrap();
+    assert!(reply.get("backend").is_none(), "lattice reply grew a tag");
+
+    // mvm surface: unit-outputscale lattice MVM, bit for bit.
+    let v = Pcg64::with_stream(0xc3_2001, 3).normal_vec(twin.n_train());
+    let want_u = twin.operator().lattice.mvm(&v);
+    let u_unlabeled = c_default.mvm(&v).unwrap();
+    let u_labeled = c_default.mvm_backend(&v, "lattice").unwrap();
+    for i in 0..want_u.len() {
+        assert_eq!(u_unlabeled[i].to_bits(), want_u[i].to_bits(), "mvm row {i}");
+        assert_eq!(u_labeled[i].to_bits(), want_u[i].to_bits(), "labeled mvm row {i}");
+    }
+
+    // Unknown labels are rejected at parse time with a usable message.
+    let err = c_default.predict_backend(&xq, d, "tesseract").unwrap_err();
+    assert!(
+        err.to_string().contains("unknown backend"),
+        "unexpected error: {err}"
+    );
+
+    let st = c_default.stats().unwrap();
+    assert_eq!(
+        st.get("grid_served").and_then(|v| v.as_f64()),
+        Some(0.0),
+        "lattice-only traffic touched the grid twin"
+    );
+    assert_eq!(
+        st.get("backend").and_then(|v| v.as_str()),
+        Some("lattice"),
+        "stats backend tag"
+    );
+    default_server.shutdown();
+    explicit_server.shutdown();
+}
+
+#[test]
+fn grid_requests_served_from_grid_twin_and_lattice_bytes_survive() {
+    // Per-request routing: `"backend": "grid"` predict/mvm replies must
+    // match a direct GridGp fit of the same training set bitwise, be
+    // tagged, and count in `grid_served` — while interleaved lattice
+    // requests keep their exact pre-backend bytes.
+    let (x, y, d) = problem(200, 4);
+    let lattice_twin = fit_serving_model(&x, &y, d);
+    let grid_twin = GridGp::fit(
+        &x,
+        &y,
+        d,
+        lattice_twin.kernel.clone(),
+        lattice_twin.noise,
+        lattice_twin.config.clone(),
+    )
+    .unwrap();
+    let server = Server::start(
+        fit_serving_model(&x, &y, d),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+
+    let xq = random_points(6, d, 0xc3_3000);
+    let want_lat = lattice_twin.predict_mean(&xq);
+    let want_grid = grid_twin.predict_mean(&xq);
+    for round in 0..3 {
+        let lat = client.predict(&xq, d).unwrap();
+        let (grid, reply) = client.predict_backend(&xq, d, "grid").unwrap();
+        assert_eq!(
+            reply.get("backend").and_then(|v| v.as_str()),
+            Some("grid"),
+            "round {round}: grid reply untagged"
+        );
+        for i in 0..want_lat.len() {
+            assert_eq!(
+                lat[i].to_bits(),
+                want_lat[i].to_bits(),
+                "round {round} lattice mean row {i}"
+            );
+            assert_eq!(
+                grid[i].to_bits(),
+                want_grid[i].to_bits(),
+                "round {round} grid mean row {i}"
+            );
+        }
+    }
+    // Grid mvm: unit-outputscale, matching the direct grid operator.
+    let v = Pcg64::with_stream(0xc3_3001, 5).normal_vec(grid_twin.n_train());
+    let want_u = grid_twin.operator().mvm_unit(&v);
+    let got_u = client.mvm_backend(&v, "grid").unwrap();
+    for i in 0..want_u.len() {
+        assert_eq!(got_u[i].to_bits(), want_u[i].to_bits(), "grid mvm row {i}");
+    }
+
+    let st = client.stats().unwrap();
+    let grid_served = st.get("grid_served").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(grid_served, 4.0, "3 grid predicts + 1 grid mvm");
+    server.shutdown();
+}
+
+#[test]
+fn grid_default_server_routes_unlabeled_requests_to_the_grid() {
+    // A `backend: Grid` server serves unlabeled predicts from the grid
+    // twin; per-request "lattice" labels still reach the lattice.
+    let (x, y, d) = problem(160, 5);
+    let lattice_twin = fit_serving_model(&x, &y, d);
+    let grid_twin = GridGp::fit(
+        &x,
+        &y,
+        d,
+        lattice_twin.kernel.clone(),
+        lattice_twin.noise,
+        lattice_twin.config.clone(),
+    )
+    .unwrap();
+    let server = Server::start(
+        fit_serving_model(&x, &y, d),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            backend: Backend::Grid,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let xq = random_points(5, d, 0xc3_4000);
+    let unlabeled = client.predict(&xq, d).unwrap();
+    let want_grid = grid_twin.predict_mean(&xq);
+    for i in 0..want_grid.len() {
+        assert_eq!(
+            unlabeled[i].to_bits(),
+            want_grid[i].to_bits(),
+            "grid-default mean row {i}"
+        );
+    }
+    let labeled = client.predict_backend(&xq, d, "lattice").unwrap().0;
+    let want_lat = lattice_twin.predict_mean(&xq);
+    for i in 0..want_lat.len() {
+        assert_eq!(
+            labeled[i].to_bits(),
+            want_lat[i].to_bits(),
+            "lattice-labeled mean row {i}"
+        );
+    }
+    let st = client.stats().unwrap();
+    assert_eq!(
+        st.get("backend").and_then(|v| v.as_str()),
+        Some("grid"),
+        "stats backend tag"
+    );
+    server.shutdown();
+}

@@ -381,6 +381,195 @@ fn killed_owning_worker_mid_rebalance_degrades_byte_identical_then_resyncs() {
     }
 }
 
+/// PR 10's named follow-on leg: tail latency *during* the swap under a
+/// sustained (paced, open-loop-style) ingest stream that keeps running
+/// while the background build is in flight. Ingests that land mid-build
+/// invalidate the plan (fingerprint check) and force a replan, so the
+/// commit can land after ANY prefix of the extra batches — the test
+/// therefore checks every reply against the full family of legal
+/// states: the streaming twin (pre-swap), or "rebalance committed
+/// after extra batch j, remaining batches ingested into the swapped
+/// model" for some j. A reply matching none of those is a torn swap.
+/// Every request is counted against its reply (none lost), every
+/// latency is recorded, and the p99 across the swap window is printed
+/// (the `serving_load` bench's `tcp_rebalance` mode measures the same
+/// window under a true open-loop arrival process).
+#[test]
+fn tail_latency_and_byte_identity_under_sustained_ingest_through_swap() {
+    let (x, y) = problem(240, 0x9b31);
+    let mut twin = fit(&x, &y);
+    let initial_skew = twin.skew_pair().unwrap().2;
+    let threshold = (initial_skew * 1.1).max(1.3);
+
+    let server = Server::start(
+        fit(&x, &y),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_ingest: true,
+            cluster: ClusterConfig {
+                rebalance_skew: threshold,
+                ..ClusterConfig::default()
+            },
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+
+    // Phase 1: the skew-driving ingest stream (lockstep twin). The
+    // final batch crosses the threshold, so the background build
+    // launches while the stream is still running.
+    let batches = drive_skew(&mut client, &mut twin, threshold);
+
+    let xq: Vec<f64> = {
+        let mut rng = Pcg64::new(0x9b32);
+        (0..3 * D).map(|_| rng.uniform_in(-2.0, 2.0)).collect()
+    };
+    let mut latencies_us: Vec<f64> = Vec::new();
+    let (mut sent, mut answered) = (0usize, 0usize);
+    let mut extras: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+    // Some(post-twin) once the swap has been observed and its commit
+    // point identified; the twin then ingests the remaining extras in
+    // lockstep like the server does.
+    let mut post: Option<SimplexGp> = None;
+    let mut swap_probe: Option<usize> = None;
+
+    // One predict probe: latency-timed, byte-checked against the legal
+    // state family. Returns whether the reply came from the swapped
+    // model.
+    let mut probe = |client: &mut Client,
+                     twin: &SimplexGp,
+                     extras: &[(Vec<f64>, Vec<f64>)],
+                     post: &mut Option<SimplexGp>,
+                     latencies_us: &mut Vec<f64>,
+                     sent: &mut usize,
+                     answered: &mut usize|
+     -> bool {
+        *sent += 1;
+        let t = Instant::now();
+        let (gm, gv) = client.predict_var(&xq, D).unwrap();
+        latencies_us.push(t.elapsed().as_secs_f64() * 1e6);
+        *answered += 1;
+        if let Some(p) = post {
+            let (pm, pv) = p.predict(&xq);
+            if bits_eq(&gm, &pm) && bits_eq(&gv, &pv) {
+                return true;
+            }
+            panic!("reply matches neither the pre- nor the committed post-swap state");
+        }
+        let (tm, tv) = twin.predict(&xq);
+        if bits_eq(&gm, &tm) && bits_eq(&gv, &tv) {
+            return false;
+        }
+        // First reply off the streaming twin: the swap committed after
+        // some prefix of the extra batches. Identify it — rebuild each
+        // candidate "commit after extra j" state and match bitwise.
+        for j in 0..=extras.len() {
+            let mut cand = replay(&x, &y, &batches);
+            for (xb, yb) in &extras[..j] {
+                cand.ingest(xb, yb).unwrap();
+            }
+            let (h, l, _) = cand.skew_pair().unwrap();
+            cand.rebalance_pair(h, l).unwrap();
+            for (xb, yb) in &extras[j..] {
+                cand.ingest(xb, yb).unwrap();
+            }
+            let (cm, cv) = cand.predict(&xq);
+            if bits_eq(&gm, &cm) && bits_eq(&gv, &cv) {
+                *post = Some(cand);
+                return true;
+            }
+        }
+        panic!("swapped reply matches no legal commit point (torn swap)");
+    };
+
+    // Phase 2: keep the ingest stream going at a fixed pace while the
+    // build runs, probing between sends. Tight clusters (odd skew_batch
+    // steps) barely move the skew — they invalidate in-flight plans
+    // without re-arming a second rebalance.
+    for step in 0..6 {
+        let (xb, yb) = skew_batch(1001 + 2 * step, 4);
+        sent += 1;
+        let t = Instant::now();
+        let n_live = client.ingest(&xb, &yb, D).unwrap();
+        latencies_us.push(t.elapsed().as_secs_f64() * 1e6);
+        answered += 1;
+        twin.ingest(&xb, &yb).unwrap();
+        if let Some(p) = post.as_mut() {
+            p.ingest(&xb, &yb).unwrap();
+        }
+        assert_eq!(n_live, twin.n_train(), "extra batch {step}: ingest diverged");
+        extras.push((xb, yb));
+        if probe(
+            &mut client,
+            &twin,
+            &extras,
+            &mut post,
+            &mut latencies_us,
+            &mut sent,
+            &mut answered,
+        ) && swap_probe.is_none()
+        {
+            swap_probe = Some(sent);
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Phase 3: the stream has drained; probe until the swap commits
+    // (the final plan can no longer be invalidated).
+    let t0 = Instant::now();
+    loop {
+        if probe(
+            &mut client,
+            &twin,
+            &extras,
+            &mut post,
+            &mut latencies_us,
+            &mut sent,
+            &mut answered,
+        ) && swap_probe.is_none()
+        {
+            swap_probe = Some(sent);
+        }
+        if post.is_some() && server.rebalances() >= 1 {
+            break;
+        }
+        assert!(
+            t0.elapsed().as_secs() < 60,
+            "rebalance never committed under the sustained stream"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Steady state: still the committed post twin, and exactly one swap.
+    for _ in 0..3 {
+        assert!(probe(
+            &mut client,
+            &twin,
+            &extras,
+            &mut post,
+            &mut latencies_us,
+            &mut sent,
+            &mut answered,
+        ));
+    }
+    assert_eq!(server.rebalances(), 1, "a second rebalance fired");
+    assert_eq!(sent, answered, "a request went unanswered across the swap");
+
+    let mut sorted = latencies_us.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = sorted[((sorted.len() as f64 * 0.99) as usize).min(sorted.len() - 1)];
+    println!(
+        "tcp_rebalance leg: {} requests through the swap window, p99 {:.1} µs, \
+         swap first observed at request {}",
+        sent,
+        p99,
+        swap_probe.unwrap()
+    );
+
+    server.shutdown();
+}
+
 /// The rebalance-off default: `rebalance_skew = 0` must never count a
 /// rebalance no matter the skew, while the warm/cold iteration split
 /// still tracks the streaming solves.

@@ -58,6 +58,10 @@ MEASURED = {
     "cold_iters",
     "ns_warm",
     "ns_cold",
+    "rebalances",
+    "rmse",
+    "nll",
+    "fit_s",
 }
 
 DEFAULT_METRICS = ("ns_per_mvm", "p99_us")
